@@ -1,0 +1,61 @@
+//! The paper's attacker/victim methodology (§IV-B) on one configurable
+//! cell: periodic long-prompt attackers load the tokenizer while a short
+//! victim request is measured.
+//!
+//!     cargo run --release --example attacker_victim -- \
+//!         [--system blackwell] [--gpus 4] [--cores 5,8,16,32] \
+//!         [--sl 114000] [--rps 8]
+
+use cpuslow::config::{ModelSpec, RunConfig, SystemSpec};
+use cpuslow::report::{sparkline, Table};
+use cpuslow::util::cli::Args;
+use cpuslow::workload::{run_attacker_victim, run_baseline, AvSpec};
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let system = SystemSpec::by_name(args.str_or("system", "blackwell")).expect("system");
+    let model = ModelSpec::by_name(args.str_or("model", "llama8b")).expect("model");
+    let n_gpus = args.usize_or("gpus", 4);
+    let cores: Vec<usize> = args
+        .u64_list("cores")
+        .map(|v| v.into_iter().map(|c| c as usize).collect())
+        .unwrap_or_else(|| RunConfig::paper_core_levels(n_gpus));
+    let spec = AvSpec {
+        attacker_sl: args.u64_or("sl", 114_000),
+        rps: args.f64_or("rps", 8.0),
+        attack_secs: args.f64_or("attack-secs", 60.0),
+        victim_start_secs: 10.0,
+        n_victims: args.usize_or("victims", 3),
+        timeout_secs: args.f64_or("timeout", 120.0),
+        ..AvSpec::default()
+    };
+
+    println!(
+        "attacker/victim on {} ({}×GPU, {}): {} tok attackers at {} rps; victim {} tok\n",
+        system.name, n_gpus, model.name, spec.attacker_sl, spec.rps, spec.victim_sl
+    );
+
+    let mut t = Table::new(&["cores", "baseline (s)", "victim TTFTs (s)", "timeouts"]);
+    for &c in &cores {
+        let cfg = RunConfig::new(system.clone(), model.clone(), n_gpus, c);
+        let baseline = run_baseline(cfg.clone(), &spec);
+        let r = run_attacker_victim(cfg, &spec);
+        let ttfts: Vec<String> = r
+            .victim_ttft_s
+            .iter()
+            .map(|v| v.map(|s| format!("{s:.2}")).unwrap_or("✗".into()))
+            .collect();
+        let timeouts = r.victim_ttft_s.iter().filter(|v| v.is_none()).count();
+        t.row(vec![
+            c.to_string(),
+            baseline.map(|s| format!("{s:.2}")).unwrap_or("-".into()),
+            ttfts.join(", "),
+            timeouts.to_string(),
+        ]);
+        println!("cores {c:>2}: CPU {}", sparkline(&r.cpu_util));
+        println!("cores {c:>2}: GPU {}", sparkline(&r.gpu_util));
+    }
+    println!();
+    print!("{}", t.render());
+    println!("\nSequential victims grow with attacker backlog (Fig. 8); scarce-CPU cells time out (✗).");
+}

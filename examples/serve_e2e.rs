@@ -1,0 +1,87 @@
+//! End-to-end real serving (Track R): load the AOT-compiled ~100M
+//! JAX/Pallas transformer via PJRT-CPU and serve batched requests with a
+//! real BPE tokenizer — no Python anywhere on the request path.
+//!
+//!     make artifacts                       # once
+//!     cargo run --release --example serve_e2e -- [--requests N] [--cores N]
+//!
+//! With `--cores N` the process restricts itself to N cores first
+//! (sched_setaffinity), demonstrating the paper's CPU-contention effect
+//! at laptop scale: tokenizer threads and the PJRT compute pool fight
+//! for the same cores.
+
+use cpuslow::realserve::{affinity, RealEngine, RealEngineConfig};
+use cpuslow::report::Table;
+use cpuslow::tokenizer::{corpus, Lexicon};
+use cpuslow::util::cli::Args;
+use cpuslow::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let artifacts = args.str_or("artifacts", "artifacts").to_string();
+    let n_requests = args.usize_or("requests", 8);
+    let max_new = args.usize_or("max-new", 12);
+
+    if let Some(cores) = args.get("cores") {
+        let n: usize = cores.parse().expect("--cores N");
+        affinity::restrict_to_cores(n)?;
+        println!("restricted to {n} cores (allowed now: {})", affinity::allowed_cores());
+    }
+
+    println!("training BPE vocab (4k merges, synthetic corpus)...");
+    let vocab = corpus::standard_vocab();
+    println!("loading + compiling AOT artifacts from {artifacts}/ ...");
+    let engine = RealEngine::new(
+        &artifacts,
+        vocab,
+        RealEngineConfig {
+            max_new_tokens: max_new,
+            tokenizer_threads: 4,
+        },
+    )?;
+    println!("{}", engine.manifest_summary());
+
+    // realistic prompts from the same lexicon family the vocab was
+    // trained on (so BPE compression is representative)
+    let lex = Lexicon::generate(0xE2E, 1_500);
+    let mut rng = Rng::new(42);
+    let prompts: Vec<String> = (0..n_requests)
+        .map(|i| {
+            let chars = 400 + (i % 4) * 300; // mixed prompt lengths
+            lex.sample_text(&mut rng, chars)
+        })
+        .collect();
+
+    println!("serving {n_requests} requests (batched, continuous batching over 4 lanes)...");
+    let start = std::time::Instant::now();
+    let outcomes = engine.serve(prompts)?;
+    let wall = start.elapsed().as_secs_f64();
+
+    let mut t = Table::new(&[
+        "req", "prompt chars", "prompt tokens", "TTFT (s)", "TPOT (ms)", "tokens", "output (truncated)",
+    ]);
+    for o in &outcomes {
+        let mut text = o.text.replace('\n', " ");
+        text.truncate(28);
+        t.row(vec![
+            o.id.to_string(),
+            o.prompt_chars.to_string(),
+            o.prompt_tokens.to_string(),
+            format!("{:.3}", o.ttft_s),
+            format!("{:.1}", o.tpot_s * 1e3),
+            o.generated.to_string(),
+            text,
+        ]);
+    }
+    print!("{}", t.render());
+    let (mean_ttft, tput, makespan) = RealEngine::summarize(&outcomes);
+    println!(
+        "mean TTFT {:.3} s | {:.1} output tokens/s | makespan {:.2} s | wall {:.2} s | cores {}",
+        mean_ttft,
+        tput,
+        makespan,
+        wall,
+        affinity::allowed_cores()
+    );
+    Ok(())
+}

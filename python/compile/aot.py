@@ -1,0 +1,135 @@
+"""AOT lowering: JAX → HLO text artifacts + parameter blob.
+
+Emits (under artifacts/):
+  model_prefill_<S>.hlo.txt  — prefill entry for each prefill bucket S
+  model_decode_b<B>.hlo.txt  — batched decode entry
+  params.bin                 — flat f32 parameter arrays (spec order)
+  manifest.json              — shapes/dtypes contract for the Rust runtime
+
+Lowered with return_tuple=False: the entry computation has multiple
+root outputs, which PJRT returns as separate buffers — the Rust runtime
+feeds the KV-cache output buffers of step N directly into step N+1
+without host copies.
+
+Interchange is **HLO text**, not serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids that the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage: python -m compile.aot [--out-dir ../artifacts]
+"""
+
+import argparse
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+PREFILL_BUCKETS = [128, 256, 512]
+DECODE_BATCH = 4
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def lower_prefill(seq_len, cfg=M.TinyConfig):
+    spec = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in M.param_spec(cfg)]
+    tokens = jax.ShapeDtypeStruct((1, seq_len), jnp.int32)
+    fn = M.prefill_fn(seq_len, cfg)
+    return jax.jit(fn).lower(*spec, tokens)
+
+
+def lower_decode(batch, cfg=M.TinyConfig):
+    spec = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in M.param_spec(cfg)]
+    token = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    caches = jax.ShapeDtypeStruct(
+        (batch, cfg.n_layers, cfg.max_seq, cfg.n_heads, cfg.d_head), jnp.float32
+    )
+    lengths = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    fn = M.decode_fn(batch, cfg.max_seq, cfg)
+    return jax.jit(fn).lower(*spec, token, caches, caches, lengths)
+
+
+def write_params(path, seed=0, cfg=M.TinyConfig):
+    """params.bin: [u32 n_arrays] then per array [u32 rank, u32 dims...,
+    f32 data...] — little-endian, matching rust/src/runtime/params.rs."""
+    params = M.init_params(seed, cfg)
+    with open(path, "wb") as f:
+        f.write(struct.pack("<I", len(params)))
+        for arr in params:
+            import numpy as np
+
+            a = np.asarray(arr, dtype="<f4")
+            f.write(struct.pack("<I", a.ndim))
+            for d in a.shape:
+                f.write(struct.pack("<I", d))
+            f.write(a.tobytes())
+    return sum(int(jnp.size(p)) for p in params)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--skip-params", action="store_true")
+    args = ap.parse_args()
+    out = os.path.abspath(args.out_dir)
+    os.makedirs(out, exist_ok=True)
+    cfg = M.TinyConfig
+
+    manifest = {
+        "model": "tiny-100M",
+        "config": cfg.dims(),
+        "n_param_arrays": len(M.param_spec(cfg)),
+        "n_params": M.n_params(cfg),
+        "prefill_buckets": PREFILL_BUCKETS,
+        "decode_batch": DECODE_BATCH,
+        "entries": {},
+    }
+
+    for s in PREFILL_BUCKETS:
+        name = f"model_prefill_{s}.hlo.txt"
+        text = to_hlo_text(lower_prefill(s, cfg))
+        with open(os.path.join(out, name), "w") as f:
+            f.write(text)
+        manifest["entries"][f"prefill_{s}"] = {
+            "file": name,
+            "tokens_shape": [1, s],
+            "outputs": ["logits[1,vocab]", f"k[{cfg.n_layers},{s},{cfg.n_heads},{cfg.d_head}]",
+                        f"v[{cfg.n_layers},{s},{cfg.n_heads},{cfg.d_head}]"],
+        }
+        print(f"wrote {name} ({len(text)/1e6:.1f} MB)")
+
+    name = f"model_decode_b{DECODE_BATCH}.hlo.txt"
+    text = to_hlo_text(lower_decode(DECODE_BATCH, cfg))
+    with open(os.path.join(out, name), "w") as f:
+        f.write(text)
+    manifest["entries"]["decode"] = {
+        "file": name,
+        "batch": DECODE_BATCH,
+        "max_seq": cfg.max_seq,
+    }
+    print(f"wrote {name} ({len(text)/1e6:.1f} MB)")
+
+    if not args.skip_params:
+        n = write_params(os.path.join(out, "params.bin"), args.seed, cfg)
+        print(f"wrote params.bin ({n} params)")
+
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print("wrote manifest.json")
+
+
+if __name__ == "__main__":
+    main()

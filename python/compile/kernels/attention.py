@@ -1,0 +1,151 @@
+"""L1: FlashAttention-style causal attention as a Pallas kernel.
+
+HARDWARE ADAPTATION (DESIGN.md §Hardware-Adaptation): the paper's
+serving stack runs FlashAttention on NVIDIA GPUs, where the kernel tiles
+Q/K/V into *shared memory* per threadblock and drives tensor cores. On
+the TPU-flavored Pallas model the same insight maps to:
+
+  * BlockSpec moves (block_q × d) Q tiles and the full K/V rows
+    HBM→VMEM per grid step — VMEM plays the role of shared memory
+    (software-managed scratchpad, ~16 MB/core, so tiles can be far
+    larger than a GPU's 48–228 KB SMEM).
+  * The QKᵀ and PV matmuls are MXU-shaped (128×128 systolic array):
+    block_q and d_head are kept multiples of 128/64 so each tile maps
+    onto full MXU passes instead of WMMA fragments.
+  * The online-softmax running max/denominator live in VMEM scratch
+    (f32), matching FlashAttention's register accumulators.
+
+The grid iterates (head, q_block); each step scans K/V blocks with an
+online-softmax accumulator, skipping fully-masked KV blocks (causal).
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so real-TPU lowering is compile-only (see DESIGN.md §Perf
+for the VMEM/MXU estimates).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, block_q, block_k, seq_len):
+    """One (head, q_block) grid step: online-softmax scan over KV blocks."""
+    qi = pl.program_id(1)
+    q = q_ref[...] * scale  # [block_q, d]
+    q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q)  # [block_q]
+
+    d = q_ref.shape[-1]
+    # Online-softmax state: running max m, denominator l, accumulator acc.
+    m0 = jnp.full((block_q,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((block_q,), dtype=jnp.float32)
+    acc0 = jnp.zeros((block_q, d), dtype=jnp.float32)
+
+    # Causal: KV blocks strictly after this Q block contribute nothing.
+    n_kv_blocks = (qi + 1) * (block_q // block_k)
+
+    def body(kv_i, carry):
+        m, l, acc = carry
+        k = pl.load(k_ref, (pl.dslice(kv_i * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (pl.dslice(kv_i * block_k, block_k), slice(None)))
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # MXU
+        k_pos = kv_i * block_k + jax.lax.iota(jnp.int32, block_k)
+        causal = q_pos[:, None] >= k_pos[None, :]
+        s = jnp.where(causal, s, NEG_INF)
+
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        # rescale previous accumulator
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[:, None] + jnp.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32
+        )
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, n_kv_blocks, body, (m0, l0, acc0))
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k"))
+def flash_attention_causal(q, k, v, block_q=DEFAULT_BLOCK_Q, block_k=DEFAULT_BLOCK_K):
+    """Causal multi-head attention via the Pallas kernel.
+
+    Args:
+      q, k, v: [heads, seq, d_head]; seq must be a multiple of block_q
+        and block_q a multiple of block_k.
+
+    Returns:
+      [heads, seq, d_head]
+    """
+    h, s, d = q.shape
+    if s % block_q != 0:
+        # fall back to the largest divisor of s that fits the budget
+        block_q = next(b for b in range(min(block_q, s), 0, -1) if s % b == 0)
+    if block_q % block_k != 0:
+        block_k = next(b for b in range(min(block_k, block_q), 0, -1) if block_q % b == 0)
+    assert s % block_q == 0, f"seq {s} % block_q {block_q} != 0"
+    assert block_q % block_k == 0
+    scale = 1.0 / (d ** 0.5)
+
+    grid = (h, s // block_q)
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, block_q=block_q, block_k=block_k, seq_len=s
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # Q: one [block_q, d] tile per grid step → VMEM
+            pl.BlockSpec((None, block_q, d), lambda hi, qi: (hi, qi, 0)),
+            # K/V: full rows for the head (scanned block-wise inside)
+            pl.BlockSpec((None, s, d), lambda hi, qi: (hi, 0, 0)),
+            pl.BlockSpec((None, s, d), lambda hi, qi: (hi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda hi, qi: (hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, s, d), q.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(q, k, v)
+
+
+def vmem_footprint_bytes(block_q, block_k, seq, d, dtype_bytes=4):
+    """Estimated VMEM bytes resident per grid step (for DESIGN.md §Perf).
+
+    Q tile + full K/V rows + accumulator + output tile. On a real TPU the
+    K/V scan would stream block_k-sized tiles instead of holding full
+    rows; both variants are reported by `python -m compile.kernels.attention`.
+    """
+    q_tile = block_q * d * dtype_bytes
+    kv_full = 2 * seq * d * dtype_bytes
+    kv_stream = 2 * block_k * d * dtype_bytes
+    acc = block_q * d * 4 + 2 * block_q * 4
+    out = block_q * d * dtype_bytes
+    return {
+        "resident_full_kv": q_tile + kv_full + acc + out,
+        "resident_streamed_kv": q_tile + kv_stream + acc + out,
+    }
+
+
+def mxu_utilization_estimate(block_q, block_k, d):
+    """Fraction of MXU-pass capacity used by each QKᵀ/PV tile matmul.
+
+    The MXU processes 128×128×128 passes; utilization is the product of
+    per-dimension fill ratios.
+    """
+    fill = lambda n: min(n, 128) / 128.0
+    return fill(block_q) * fill(block_k) * fill(d)
+
+
+if __name__ == "__main__":
+    for bq, bk, s, d in [(128, 128, 1024, 64), (256, 128, 2048, 64), (128, 64, 512, 64)]:
+        fp = vmem_footprint_bytes(bq, bk, s, d)
+        print(
+            f"block_q={bq} block_k={bk} seq={s} d={d}: "
+            f"VMEM full-kv={fp['resident_full_kv']/1e6:.2f} MB "
+            f"streamed={fp['resident_streamed_kv']/1e3:.1f} KB "
+            f"MXU util={mxu_utilization_estimate(bq, bk, d):.2f}"
+        )

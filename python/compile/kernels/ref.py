@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the L1 attention kernel.
+
+The reference implements exact causal softmax attention with the same
+numerics contract as the Pallas kernel (f32 accumulation, max-subtracted
+softmax). Every kernel test asserts allclose against this.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def causal_attention_ref(q, k, v, scale=None):
+    """Exact causal attention.
+
+    Args:
+      q, k, v: [seq, d_head] (single head).
+      scale: softmax scale; defaults to 1/sqrt(d_head).
+
+    Returns:
+      [seq, d_head] attention output.
+    """
+    s, d = q.shape
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=q.dtype))
+    scores = (q @ k.T) * scale  # [s, s]
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    scores = jnp.where(mask, scores, -jnp.inf)
+    weights = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    weights = weights / weights.sum(axis=-1, keepdims=True)
+    return weights @ v
+
+
+def mha_causal_ref(q, k, v, scale=None):
+    """Multi-head causal attention over [heads, seq, d_head]."""
+    return jax.vmap(lambda qq, kk, vv: causal_attention_ref(qq, kk, vv, scale))(q, k, v)

@@ -1,0 +1,231 @@
+"""L2: the tiny-100M decoder-only transformer (JAX), calling the L1
+Pallas attention kernel on the prefill path.
+
+Architecture (must match `ModelSpec::tiny_100m()` on the Rust side):
+  vocab 8192, d_model 768, 8 layers, 12 heads (d_head 64), d_ff 3072,
+  pre-LN (RMSNorm), GELU MLP, learned absolute position embeddings,
+  untied LM head. f32 throughout (CPU PJRT backend).
+
+Two entry points are AOT-lowered by `aot.py`:
+
+  * `prefill(params, tokens[1, S])` → (logits_last[1, V], k_cache, v_cache)
+    Full-prompt prefill via the Pallas flash-attention kernel; returns
+    the KV cache for subsequent decoding.
+  * `decode(params, token[B], k_caches, v_caches, lengths[B])` →
+    (logits[B, V], new_k, new_v)
+    One decode step per batch lane against per-lane KV caches with
+    per-lane lengths (continuous batching on the Rust side maps active
+    requests onto lanes).
+
+Python never runs at serving time: these functions exist to be lowered
+to HLO text once (`make artifacts`).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import flash_attention_causal
+
+
+class TinyConfig:
+    vocab = 8192
+    d_model = 768
+    n_layers = 12
+    n_heads = 12
+    d_head = 64
+    d_ff = 3072
+    max_seq = 512
+
+    @classmethod
+    def dims(cls):
+        return dict(
+            vocab=cls.vocab,
+            d_model=cls.d_model,
+            n_layers=cls.n_layers,
+            n_heads=cls.n_heads,
+            d_head=cls.d_head,
+            d_ff=cls.d_ff,
+            max_seq=cls.max_seq,
+        )
+
+
+def param_spec(cfg=TinyConfig):
+    """Ordered (name, shape) list — the flattening contract shared with
+    the Rust runtime (params.bin is written in exactly this order)."""
+    spec = [
+        ("tok_embed", (cfg.vocab, cfg.d_model)),
+        ("pos_embed", (cfg.max_seq, cfg.d_model)),
+    ]
+    for i in range(cfg.n_layers):
+        spec += [
+            (f"l{i}.ln1", (cfg.d_model,)),
+            (f"l{i}.wq", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.wk", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.wv", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.wo", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.ln2", (cfg.d_model,)),
+            (f"l{i}.w_up", (cfg.d_model, cfg.d_ff)),
+            (f"l{i}.w_down", (cfg.d_ff, cfg.d_model)),
+        ]
+    spec += [
+        ("ln_f", (cfg.d_model,)),
+        ("lm_head", (cfg.d_model, cfg.vocab)),
+    ]
+    return spec
+
+
+def init_params(seed=0, cfg=TinyConfig):
+    """Deterministic init; returns a flat list of arrays in spec order."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith((".ln1", ".ln2")) or name == "ln_f":
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            std = 0.02 if "embed" in name else (2.0 / (fan_in + shape[-1])) ** 0.5
+            params.append(jax.random.normal(sub, shape, jnp.float32) * std)
+    return params
+
+
+def n_params(cfg=TinyConfig):
+    return sum(int(jnp.prod(jnp.array(s))) for _, s in param_spec(cfg))
+
+
+def _unflatten(params, cfg=TinyConfig):
+    spec = param_spec(cfg)
+    assert len(params) == len(spec), f"{len(params)} vs {len(spec)}"
+    return {name: p for (name, _), p in zip(spec, params)}
+
+
+def rmsnorm(x, w, eps=1e-5):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps) * w
+
+
+def _layer_prefill(p, i, x, cfg):
+    """One transformer layer over [S, D] with causal Pallas attention.
+    Returns (x, k[S,H,Dh], v[S,H,Dh])."""
+    s = x.shape[0]
+    h, dh = cfg.n_heads, cfg.d_head
+    xn = rmsnorm(x, p[f"l{i}.ln1"])
+    q = (xn @ p[f"l{i}.wq"]).reshape(s, h, dh)
+    k = (xn @ p[f"l{i}.wk"]).reshape(s, h, dh)
+    v = (xn @ p[f"l{i}.wv"]).reshape(s, h, dh)
+    # [H, S, Dh] for the kernel
+    attn = flash_attention_causal(
+        q.transpose(1, 0, 2), k.transpose(1, 0, 2), v.transpose(1, 0, 2)
+    )
+    attn = attn.transpose(1, 0, 2).reshape(s, cfg.d_model)
+    x = x + attn @ p[f"l{i}.wo"]
+    xn = rmsnorm(x, p[f"l{i}.ln2"])
+    x = x + jax.nn.gelu(xn @ p[f"l{i}.w_up"]) @ p[f"l{i}.w_down"]
+    return x, k, v
+
+
+def prefill(params, tokens, cfg=TinyConfig):
+    """Full-prompt prefill.
+
+    Args:
+      params: flat param list (spec order).
+      tokens: [1, S] int32, S ≤ cfg.max_seq (padded with zeros past the
+        true length is fine — caller uses logits at its true last
+        position; here we return the full last-position logits for S).
+
+    Returns:
+      (logits[1, vocab] at position S-1,
+       k_cache [n_layers, S, heads, d_head],
+       v_cache [n_layers, S, heads, d_head])
+    """
+    p = _unflatten(params, cfg)
+    s = tokens.shape[1]
+    x = p["tok_embed"][tokens[0]] + p["pos_embed"][:s]
+    ks, vs = [], []
+    for i in range(cfg.n_layers):
+        x, k, v = _layer_prefill(p, i, x, cfg)
+        ks.append(k)
+        vs.append(v)
+    x = rmsnorm(x, p["ln_f"])
+    logits = x[-1:] @ p["lm_head"]
+    return logits, jnp.stack(ks), jnp.stack(vs)
+
+
+def _layer_decode(p, i, x, k_cache, v_cache, length, pos, cfg):
+    """One layer, one token, one batch lane.
+
+    x: [D]; k_cache/v_cache: [maxS, H, Dh]; length: scalar int32 =
+    number of valid cached positions (this token attends to cache[0..length]
+    plus itself, written at index `pos` = length).
+    """
+    h, dh = cfg.n_heads, cfg.d_head
+    max_s = k_cache.shape[0]
+    xn = rmsnorm(x, p[f"l{i}.ln1"])
+    q = (xn @ p[f"l{i}.wq"]).reshape(h, dh)
+    k_new = (xn @ p[f"l{i}.wk"]).reshape(h, dh)
+    v_new = (xn @ p[f"l{i}.wv"]).reshape(h, dh)
+    k_cache = jax.lax.dynamic_update_index_in_dim(k_cache, k_new, pos, axis=0)
+    v_cache = jax.lax.dynamic_update_index_in_dim(v_cache, v_new, pos, axis=0)
+    # attention over cache[0..=pos]
+    scale = 1.0 / (dh ** 0.5)
+    scores = jnp.einsum("hd,shd->hs", q, k_cache) * scale  # [H, maxS]
+    valid = jax.lax.iota(jnp.int32, max_s) <= pos
+    scores = jnp.where(valid[None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    attn = jnp.einsum("hs,shd->hd", w, v_cache).reshape(cfg.d_model)
+    x = x + attn @ p[f"l{i}.wo"]
+    xn = rmsnorm(x, p[f"l{i}.ln2"])
+    x = x + jax.nn.gelu(xn @ p[f"l{i}.w_up"]) @ p[f"l{i}.w_down"]
+    _ = length
+    return x, k_cache, v_cache
+
+
+def decode(params, token, k_caches, v_caches, lengths, cfg=TinyConfig):
+    """One decode step for a batch of lanes.
+
+    Args:
+      token: [B] int32 — the token just sampled per lane.
+      k_caches/v_caches: [B, n_layers, maxS, H, Dh].
+      lengths: [B] int32 — valid cache length per lane; the new token is
+        written at index `lengths[b]` and attends to [0..lengths[b]].
+
+    Returns:
+      (logits [B, vocab], new k_caches, new v_caches)
+    """
+    p = _unflatten(params, cfg)
+
+    def lane(tok, kc, vc, length):
+        x = p["tok_embed"][tok] + p["pos_embed"][length]
+        new_k, new_v = [], []
+        for i in range(cfg.n_layers):
+            x, k_i, v_i = _layer_decode(p, i, x, kc[i], vc[i], length, length, cfg)
+            new_k.append(k_i)
+            new_v.append(v_i)
+        x = rmsnorm(x, p["ln_f"])
+        return x @ p["lm_head"], jnp.stack(new_k), jnp.stack(new_v)
+
+    return jax.vmap(lane)(token, k_caches, v_caches, lengths)
+
+
+def prefill_fn(seq_len, cfg=TinyConfig):
+    """Concrete-shape prefill callable for AOT lowering."""
+    def fn(*args):
+        params = list(args[:-1])
+        tokens = args[-1]
+        logits, k, v = prefill(params, tokens, cfg)
+        return (logits, k, v)
+
+    return fn
+
+
+def decode_fn(batch, max_seq, cfg=TinyConfig):
+    """Concrete-shape decode callable for AOT lowering."""
+    def fn(*args):
+        n = len(param_spec(cfg))
+        params = list(args[:n])
+        token, k_caches, v_caches, lengths = args[n:]
+        logits, k, v = decode(params, token, k_caches, v_caches, lengths, cfg)
+        return (logits, k, v)
+
+    return fn

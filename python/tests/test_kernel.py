@@ -1,0 +1,127 @@
+"""L1 correctness: Pallas flash-attention kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and dtypes per the repro contract; the kernel
+must match `ref.py` to tight f32 tolerances on every draw.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import (
+    flash_attention_causal,
+    mxu_utilization_estimate,
+    vmem_footprint_bytes,
+)
+from compile.kernels.ref import causal_attention_ref, mha_causal_ref
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype) * scale
+
+
+class TestKernelBasics:
+    def test_matches_ref_single_head(self):
+        q, k, v = (rand(i, (1, 256, 64)) for i in range(3))
+        out = flash_attention_causal(q, k, v)
+        ref = mha_causal_ref(q, k, v)
+        np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+    def test_matches_ref_multi_head(self):
+        q, k, v = (rand(i + 10, (12, 128, 64)) for i in range(3))
+        out = flash_attention_causal(q, k, v)
+        ref = mha_causal_ref(q, k, v)
+        np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+    def test_causality(self):
+        """Changing future K/V must not change past outputs."""
+        q, k, v = (rand(i + 20, (2, 128, 64)) for i in range(3))
+        out1 = flash_attention_causal(q, k, v)
+        k2 = k.at[:, 100:, :].set(99.0)
+        v2 = v.at[:, 100:, :].set(-99.0)
+        out2 = flash_attention_causal(q, k2, v2)
+        np.testing.assert_allclose(out1[:, :100], out2[:, :100], rtol=1e-5, atol=1e-5)
+        assert not np.allclose(out1[:, 100:], out2[:, 100:])
+
+    def test_first_position_is_v0(self):
+        """Position 0 attends only to itself → output = v[0]."""
+        q, k, v = (rand(i + 30, (1, 128, 64)) for i in range(3))
+        out = flash_attention_causal(q, k, v)
+        np.testing.assert_allclose(out[0, 0], v[0, 0], rtol=1e-5, atol=1e-5)
+
+    def test_uniform_values(self):
+        """With identical V rows the output equals that row everywhere."""
+        q = rand(40, (1, 128, 64))
+        k = rand(41, (1, 128, 64))
+        v = jnp.ones((1, 128, 64)) * 0.5
+        out = flash_attention_causal(q, k, v)
+        np.testing.assert_allclose(out, v, rtol=1e-5, atol=1e-5)
+
+    def test_large_magnitude_stability(self):
+        """Online softmax must not overflow on large scores."""
+        q, k, v = (rand(i + 50, (1, 128, 64), scale=30.0) for i in range(3))
+        out = flash_attention_causal(q, k, v)
+        assert np.isfinite(np.asarray(out)).all()
+        ref = mha_causal_ref(q, k, v)
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+    def test_custom_blocks(self):
+        q, k, v = (rand(i + 60, (2, 256, 64)) for i in range(3))
+        out_default = flash_attention_causal(q, k, v)
+        out_small = flash_attention_causal(q, k, v, block_q=64, block_k=32)
+        np.testing.assert_allclose(out_default, out_small, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    heads=st.sampled_from([1, 2, 4]),
+    seq=st.sampled_from([64, 128, 192, 256]),
+    d=st.sampled_from([32, 64, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_kernel_matches_ref_hypothesis(heads, seq, d, seed):
+    q = rand(seed, (heads, seq, d))
+    k = rand(seed + 1, (heads, seq, d))
+    v = rand(seed + 2, (heads, seq, d))
+    out = flash_attention_causal(q, k, v)
+    ref = mha_causal_ref(q, k, v)
+    np.testing.assert_allclose(out, ref, rtol=5e-5, atol=5e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    scale=st.sampled_from([0.01, 1.0, 10.0]),
+    seed=st.integers(0, 2**16),
+)
+def test_kernel_value_scale_sweep(scale, seed):
+    q = rand(seed, (2, 128, 64), scale=scale)
+    k = rand(seed + 1, (2, 128, 64), scale=scale)
+    v = rand(seed + 2, (2, 128, 64), scale=scale)
+    out = flash_attention_causal(q, k, v)
+    ref = mha_causal_ref(q, k, v)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4 * max(scale, 1.0))
+
+
+class TestRoofline:
+    def test_vmem_footprint_within_budget(self):
+        """Default tiling must fit a TPU core's ~16 MB VMEM."""
+        fp = vmem_footprint_bytes(128, 128, 2048, 64)
+        assert fp["resident_full_kv"] < 16e6
+        assert fp["resident_streamed_kv"] < 1e6
+
+    def test_mxu_utilization(self):
+        assert mxu_utilization_estimate(128, 128, 128) == 1.0
+        assert mxu_utilization_estimate(128, 128, 64) == 0.5
+        assert mxu_utilization_estimate(64, 64, 64) == 0.125
+
+
+def test_ref_self_consistency():
+    """Oracle sanity: softmax rows sum to 1 (implicitly) — a uniform-V
+    input returns V."""
+    q = rand(70, (64, 32))
+    k = rand(71, (64, 32))
+    v = jnp.ones((64, 32)) * 2.0
+    out = causal_attention_ref(q, k, v)
+    np.testing.assert_allclose(out, v, rtol=1e-5, atol=1e-5)

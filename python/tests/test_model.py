@@ -1,0 +1,170 @@
+"""L2 correctness: transformer shapes, decode/prefill agreement, and the
+AOT lowering contract."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+class SmallCfg(M.TinyConfig):
+    """A shrunk config so model tests run in seconds."""
+
+    vocab = 512
+    d_model = 64
+    n_layers = 2
+    n_heads = 2
+    d_head = 32
+    d_ff = 128
+    max_seq = 128
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(0, SmallCfg)
+
+
+def toks(n, seed=3):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.randint(1, SmallCfg.vocab, size=(1, n)), jnp.int32)
+
+
+class TestShapes:
+    def test_param_spec_count_matches_init(self, params):
+        assert len(params) == len(M.param_spec(SmallCfg))
+        for p, (_, shape) in zip(params, M.param_spec(SmallCfg)):
+            assert tuple(p.shape) == tuple(shape)
+
+    def test_n_params_consistent(self, params):
+        total = sum(int(np.prod(p.shape)) for p in params)
+        assert total == M.n_params(SmallCfg)
+
+    def test_tiny_config_is_about_100m(self):
+        assert 0.6e8 <= M.n_params(M.TinyConfig) <= 1.5e8
+
+    def test_prefill_shapes(self, params):
+        logits, k, v = M.prefill(params, toks(64), SmallCfg)
+        assert logits.shape == (1, SmallCfg.vocab)
+        assert k.shape == (SmallCfg.n_layers, 64, SmallCfg.n_heads, SmallCfg.d_head)
+        assert v.shape == k.shape
+
+    def test_decode_shapes(self, params):
+        b = 3
+        caches = jnp.zeros(
+            (b, SmallCfg.n_layers, SmallCfg.max_seq, SmallCfg.n_heads, SmallCfg.d_head)
+        )
+        logits, k, v = M.decode(
+            params,
+            jnp.array([1, 2, 3], jnp.int32),
+            caches,
+            caches,
+            jnp.array([0, 5, 10], jnp.int32),
+            SmallCfg,
+        )
+        assert logits.shape == (b, SmallCfg.vocab)
+        assert k.shape == caches.shape
+
+
+class TestNumerics:
+    def test_decode_matches_prefill(self, params):
+        """Autoregressive consistency: prefill[0..n] ≡ prefill[0..n-1]
+        then decode(t_n)."""
+        t = toks(33)
+        l_full, _, _ = M.prefill(params, t, SmallCfg)
+        l_short, ks, vs = M.prefill(params, t[:, :32], SmallCfg)
+        maxS = SmallCfg.max_seq
+        kc = jnp.zeros((1, SmallCfg.n_layers, maxS, SmallCfg.n_heads, SmallCfg.d_head))
+        vc = jnp.zeros_like(kc)
+        kc = kc.at[0, :, :32].set(ks)
+        vc = vc.at[0, :, :32].set(vs)
+        l_dec, _, _ = M.decode(
+            params, t[:, 32], kc, vc, jnp.array([32], jnp.int32), SmallCfg
+        )
+        np.testing.assert_allclose(
+            np.asarray(l_dec[0]), np.asarray(l_full[0]), rtol=2e-4, atol=2e-4
+        )
+
+    def test_multi_step_decode_consistency(self, params):
+        """Three decode steps replay the prefill logits trajectory."""
+        t = toks(20, seed=11)
+        l_base, ks, vs = M.prefill(params, t[:, :16], SmallCfg)
+        maxS = SmallCfg.max_seq
+        kc = jnp.zeros((1, SmallCfg.n_layers, maxS, SmallCfg.n_heads, SmallCfg.d_head))
+        vc = jnp.zeros_like(kc)
+        kc = kc.at[0, :, :16].set(ks)
+        vc = vc.at[0, :, :16].set(vs)
+        for step in range(3):
+            pos = 16 + step
+            l_dec, kc, vc = M.decode(
+                params, t[:, pos], kc, vc, jnp.array([pos], jnp.int32), SmallCfg
+            )
+            l_ref, _, _ = M.prefill(params, t[:, : pos + 1], SmallCfg)
+            np.testing.assert_allclose(
+                np.asarray(l_dec[0]), np.asarray(l_ref[0]), rtol=5e-4, atol=5e-4
+            )
+
+    def test_decode_lanes_independent(self, params):
+        """Batch lanes must not leak into each other."""
+        b = 2
+        maxS = SmallCfg.max_seq
+        caches = jnp.zeros((b, SmallCfg.n_layers, maxS, SmallCfg.n_heads, SmallCfg.d_head))
+        lengths = jnp.array([4, 4], jnp.int32)
+        tok = jnp.array([7, 9], jnp.int32)
+        l_both, _, _ = M.decode(params, tok, caches, caches, lengths, SmallCfg)
+        # lane 0 alone (batch of identical lane)
+        l_alone, _, _ = M.decode(
+            params,
+            jnp.array([7, 7], jnp.int32),
+            caches,
+            caches,
+            lengths,
+            SmallCfg,
+        )
+        np.testing.assert_allclose(
+            np.asarray(l_both[0]), np.asarray(l_alone[0]), rtol=1e-5, atol=1e-5
+        )
+
+    def test_determinism(self, params):
+        t = toks(16)
+        a, _, _ = M.prefill(params, t, SmallCfg)
+        b, _, _ = M.prefill(params, t, SmallCfg)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestAot:
+    def test_hlo_text_well_formed(self):
+        lowered = aot.lower_prefill(128, SmallCfg)
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+
+    def test_decode_lowering_well_formed(self):
+        lowered = aot.lower_decode(2, SmallCfg)
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule")
+
+    def test_params_bin_roundtrip(self, tmp_path):
+        import struct
+
+        path = tmp_path / "params.bin"
+        n = aot.write_params(str(path), seed=0, cfg=SmallCfg)
+        assert n == M.n_params(SmallCfg)
+        data = path.read_bytes()
+        (count,) = struct.unpack_from("<I", data, 0)
+        assert count == len(M.param_spec(SmallCfg))
+        # walk the file and verify total element count
+        off = 4
+        total = 0
+        for _ in range(count):
+            (rank,) = struct.unpack_from("<I", data, off)
+            off += 4
+            dims = struct.unpack_from(f"<{rank}I", data, off)
+            off += 4 * rank
+            size = int(np.prod(dims)) if rank else 1
+            total += size
+            off += 4 * size
+        assert off == len(data)
+        assert total == n

@@ -1,0 +1,67 @@
+//! End-to-end figure benches: one scaled-down cell per paper
+//! table/figure, timing the full harness path (workload → engine →
+//! metrics). These are the `cargo bench` entries promised in DESIGN.md;
+//! the full-resolution sweeps run via `cpuslow experiment <id>`.
+
+use cpuslow::cluster::{analyze, generate_instructional};
+use cpuslow::config::{ModelSpec, RunConfig, SystemSpec};
+use cpuslow::experiments::fig12::run_microbench;
+use cpuslow::experiments::fig13::run_dequeue_bench;
+use cpuslow::util::bench::{bench_n, black_box};
+use cpuslow::workload::{run_attacker_victim, run_batch, AvSpec};
+
+fn main() {
+    println!("== figure-cell benches (scaled-down) ==");
+
+    // Fig 3/4 cell: 100k records generate + analyze
+    let r = bench_n("fig3 cell: 100k salloc records", 5, || {
+        let records = generate_instructional(1, 100_000);
+        black_box(analyze(&records));
+    });
+    r.report();
+
+    // Fig 5 cell: one batch×SL point
+    let r = bench_n("fig5 cell: batch 8 × 16k tokens", 3, || {
+        let cfg = RunConfig::new(SystemSpec::h200(), ModelSpec::llama31_8b(), 4, 16);
+        black_box(run_batch(cfg, 8, 16_000, 1, 600.0));
+    });
+    r.report();
+
+    // Fig 7 cell: one attacker/victim point (short attack)
+    let spec = AvSpec {
+        attacker_sl: 57_000,
+        rps: 8.0,
+        attack_secs: 15.0,
+        victim_start_secs: 5.0,
+        n_victims: 1,
+        max_new_tokens: 8,
+        timeout_secs: 60.0,
+        ..AvSpec::default()
+    };
+    let r = bench_n("fig7 cell: 57k attack @8rps, 5 cores", 3, || {
+        let cfg = RunConfig::new(SystemSpec::blackwell(), ModelSpec::llama31_8b(), 4, 5);
+        black_box(run_attacker_victim(cfg, &spec));
+    });
+    r.report();
+
+    // Fig 12 cell: collective microbench
+    let r = bench_n("fig12 cell: 4 ranks × 100 iters", 5, || {
+        black_box(run_microbench(&SystemSpec::h100(), 4, 2, 100, 1.0, 0.3));
+    });
+    r.report();
+
+    // Fig 13 cell: dequeue contention point
+    let r = bench_n("fig13 cell: TP=4 dequeue, 20s virtual", 3, || {
+        black_box(run_dequeue_bench(
+            &SystemSpec::h100(),
+            6,
+            4,
+            100,
+            44.0,
+            5.0,
+            100_000,
+            20.0,
+        ));
+    });
+    r.report();
+}

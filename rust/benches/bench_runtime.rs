@@ -1,0 +1,63 @@
+//! Real PJRT runtime benches (Track R hot path): prefill and decode
+//! step latency of the AOT-compiled tiny-100M model on this host.
+//! Skips gracefully when `make artifacts` hasn't run.
+
+use cpuslow::runtime::ModelRuntime;
+use cpuslow::util::bench::{bench_n, black_box};
+
+fn main() {
+    println!("== PJRT runtime benches (tiny-100M, CPU) ==");
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return;
+    }
+    let t0 = std::time::Instant::now();
+    let rt = match ModelRuntime::load(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("SKIP: runtime load failed: {e}");
+            return;
+        }
+    };
+    println!("load+compile+param-upload: {:.2} s", t0.elapsed().as_secs_f64());
+
+    let prompt: Vec<u32> = (1..=100).collect();
+    let r = bench_n("prefill 100 tokens (bucket 128)", 5, || {
+        black_box(rt.prefill(&prompt).unwrap());
+    });
+    r.report();
+    let toks_per_s = 100.0 / (r.mean_ns / 1e9);
+    println!("    → {toks_per_s:.0} prefill tokens/s");
+
+    let prompt256: Vec<u32> = (1..=250).collect();
+    let r = bench_n("prefill 250 tokens (bucket 256)", 3, || {
+        black_box(rt.prefill(&prompt256).unwrap());
+    });
+    r.report();
+
+    // decode step (batch 4)
+    let out = rt.prefill(&prompt).unwrap();
+    let mut state = rt.new_decode_state().unwrap();
+    for lane in 0..rt.manifest().decode_batch {
+        rt.insert_lane(&mut state, lane, &out, prompt.len() - 1).unwrap();
+    }
+    let tokens = vec![42i32; rt.manifest().decode_batch];
+    let active = vec![true; rt.manifest().decode_batch];
+    let r = bench_n("decode step (batch 4)", 10, || {
+        black_box(rt.decode_step(&mut state, &tokens, &active).unwrap());
+    });
+    r.report();
+    println!(
+        "    → {:.1} output tokens/s at full batch",
+        4.0 / (r.mean_ns / 1e9)
+    );
+
+    // attribution: cache upload alone (the host round-trip half)
+    let r = bench_n("cache state upload (2×75 MB)", 5, || {
+        black_box(rt.new_decode_state().unwrap());
+    });
+    r.report();
+}
+// appended: attribution micro-bench — how much of a decode step is the
+// KV-cache host round-trip vs XLA compute? (perf pass, EXPERIMENTS §Perf)

@@ -1,0 +1,66 @@
+//! Real shm-broadcast ring benches (Figure 13's data structure, actual
+//! atomics on this host): uncontended latency and 1-writer-N-reader
+//! throughput as TP degree grows.
+
+use cpuslow::ipc::ShmBroadcast;
+use cpuslow::util::bench::{bench, black_box};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    println!("== shm broadcast (real atomics) ==");
+
+    // single-threaded enqueue+dequeue round trip
+    let q: Arc<ShmBroadcast<u64>> = ShmBroadcast::new(64, 1);
+    let r = bench("enqueue+dequeue roundtrip (1 reader)", Duration::from_secs(1), || {
+        q.try_enqueue(42);
+        black_box(q.try_dequeue(0));
+    });
+    r.report();
+
+    // cross-thread broadcast throughput per TP degree
+    for readers in [1usize, 2, 4, 8] {
+        let q: Arc<ShmBroadcast<u64>> = ShmBroadcast::new(256, readers);
+        let stop = Arc::new(AtomicBool::new(false));
+        let handles: Vec<_> = (0..readers)
+            .map(|r| {
+                let q = Arc::clone(&q);
+                let stop = Arc::clone(&stop);
+                std::thread::spawn(move || {
+                    let mut consumed = 0u64;
+                    while !stop.load(Ordering::Relaxed) {
+                        if q.try_dequeue(r).is_some() {
+                            consumed += 1;
+                        } else {
+                            std::hint::spin_loop();
+                        }
+                    }
+                    // drain
+                    while q.try_dequeue(r).is_some() {
+                        consumed += 1;
+                    }
+                    consumed
+                })
+            })
+            .collect();
+        const N: u64 = 300_000;
+        let t0 = std::time::Instant::now();
+        for i in 0..N {
+            q.enqueue_spinning(i);
+        }
+        // wait for all readers to consume everything
+        while q.min_read_seq() < N {
+            std::hint::spin_loop();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        stop.store(true, Ordering::Relaxed);
+        let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(total, N * readers as u64);
+        println!(
+            "broadcast 300k msgs to {readers} readers: {:>8.2} ms  ({:.2} M msg/s writer)",
+            dt * 1e3,
+            N as f64 / dt / 1e6
+        );
+    }
+}

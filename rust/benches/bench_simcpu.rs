@@ -1,0 +1,75 @@
+//! DES scheduler benches — the simulator's event-loop throughput bounds
+//! every Track-S experiment's wall time (§Perf L3 target).
+
+use cpuslow::simcpu::script::Script;
+use cpuslow::simcpu::{Op, Sim, SimParams, TaskCtx};
+use cpuslow::util::bench::{bench_n, black_box};
+
+fn params(cores: usize) -> SimParams {
+    SimParams {
+        cores,
+        context_switch_ns: 3_000,
+        timeslice_ns: 1_000_000,
+        poll_quantum_ns: 1_000,
+        trace_bucket_ns: None,
+    }
+}
+
+fn main() {
+    println!("== simcpu benches ==");
+
+    // Pure compute churn: 64 tasks × 100 ms on 8 cores → ~800k slice events.
+    let r = bench_n("64 hogs × 100ms on 8 cores", 5, || {
+        let mut sim = Sim::new(params(8));
+        for _ in 0..64 {
+            sim.spawn("hog", Script::new().compute(100_000_000));
+        }
+        black_box(sim.run());
+    });
+    r.report();
+    let events = 64.0 * 100.0 * 8.0; // ≈ slices
+    println!(
+        "    → ~{:.2} M slice-events/s",
+        r.per_sec(events) / 1e6
+    );
+
+    // Gate signal/wake storm.
+    let r = bench_n("10k block/signal pairs", 10, || {
+        let mut sim = Sim::new(params(4));
+        let gate = sim.new_gate();
+        for i in 0..100u64 {
+            let mut state = 0u64;
+            sim.spawn("waiter", move |_ctx: &mut TaskCtx| {
+                state += 1;
+                if state > 100 {
+                    Op::Done
+                } else {
+                    Op::Block {
+                        gate,
+                        target: i * 100 + state,
+                    }
+                }
+            });
+        }
+        for t in 0..10_000u64 {
+            sim.call_at(t * 1_000, move |sim| sim.signal(gate, 1));
+        }
+        black_box(sim.run());
+    });
+    r.report();
+
+    // Busy-poll contention: 8 pollers + 8 hogs on 4 cores for 100 ms.
+    let r = bench_n("8 pollers + 8 hogs, 100ms virtual", 5, || {
+        let mut sim = Sim::new(params(4));
+        let gate = sim.new_gate();
+        for _ in 0..8 {
+            sim.spawn("poller", Script::new().busy_poll(gate, 1));
+        }
+        for _ in 0..8 {
+            sim.spawn("hog", Script::new().compute(100_000_000));
+        }
+        sim.call_at(100_000_000, move |sim| sim.signal(gate, 1));
+        black_box(sim.run());
+    });
+    r.report();
+}

@@ -1,0 +1,77 @@
+//! Tokenizer benches — the L3 hot path behind Figure 5's CPU cost and
+//! the calibration source for `tokenize_s_per_token`.
+
+use cpuslow::tokenizer::{corpus::Lexicon, encode_uncached, train, BatchTokenizer, Encoder};
+use cpuslow::util::bench::{bench, black_box};
+use cpuslow::util::rng::Rng;
+use std::time::Duration;
+
+fn main() {
+    println!("== tokenizer benches ==");
+    let lex = Lexicon::generate(0xB, 1_000);
+    let mut rng = Rng::new(0xC);
+    let train_corpus = lex.sample_corpus(&mut rng, 32, 4_096);
+    let vocab = train(&train_corpus, 2_000);
+
+    let text_4k = lex.sample_text(&mut rng, 4_096);
+    let text_64k = lex.sample_text(&mut rng, 65_536);
+
+    let n_tok_4k = encode_uncached(&vocab, &text_4k).len() as f64;
+    let r = bench("encode_uncached 4 KB", Duration::from_secs(2), || {
+        black_box(encode_uncached(&vocab, &text_4k));
+    });
+    r.report();
+    println!(
+        "    → {:.2} M tokens/s single-core ({:.0} ns/token)",
+        r.per_sec(n_tok_4k) / 1e6,
+        r.mean_ns / n_tok_4k
+    );
+
+    let n_tok_64k = encode_uncached(&vocab, &text_64k).len() as f64;
+    let r = bench("encode_uncached 64 KB", Duration::from_secs(2), || {
+        black_box(encode_uncached(&vocab, &text_64k));
+    });
+    r.report();
+    println!(
+        "    → {:.2} M tokens/s single-core",
+        r.per_sec(n_tok_64k) / 1e6
+    );
+
+    // cached encoder (word cache warm)
+    let mut enc = Encoder::new(&vocab);
+    enc.encode(&text_4k);
+    let r = bench("encoder cached 4 KB", Duration::from_secs(2), || {
+        black_box(enc.encode(&text_4k));
+    });
+    r.report();
+
+    // parallel batch (pool of 4)
+    let tok = BatchTokenizer::new(vocab.clone(), 4);
+    let batch: Vec<String> = (0..8).map(|_| lex.sample_text(&mut rng, 8_192)).collect();
+    let total_tokens: f64 = batch
+        .iter()
+        .map(|t| encode_uncached(&vocab, t).len() as f64)
+        .sum();
+    let r = bench("batch encode 8×8 KB (4 threads)", Duration::from_secs(2), || {
+        black_box(tok.encode_batch(batch.clone()));
+    });
+    r.report();
+    println!(
+        "    → {:.2} M tokens/s across pool",
+        r.per_sec(total_tokens) / 1e6
+    );
+
+    // decode
+    let ids = encode_uncached(&vocab, &text_4k);
+    let enc2 = Encoder::new(&vocab);
+    let r = bench("decode 4 KB", Duration::from_secs(1), || {
+        black_box(enc2.decode(&ids));
+    });
+    r.report();
+
+    // training
+    let r = bench("train 500 merges (128 KB corpus)", Duration::from_secs(3), || {
+        black_box(train(&train_corpus, 500));
+    });
+    r.report();
+}

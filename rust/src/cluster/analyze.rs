@@ -1,0 +1,143 @@
+//! Weighted-CDF analysis of salloc records — the computation behind
+//! Figures 3 and 4 (CPU-to-GPU ratio CDFs weighted by GPU hours, with
+//! percentile markers per device type).
+
+use super::synth::SallocRecord;
+use crate::util::stats::WeightedCdf;
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct DeviceCdf {
+    pub device: String,
+    pub n_jobs: usize,
+    pub total_gpu_hours: f64,
+    cdf: WeightedCdf,
+}
+
+impl DeviceCdf {
+    pub fn pct(&self, q: f64) -> f64 {
+        self.cdf.pct(q)
+    }
+
+    pub fn cdf_at(&self, ratio: f64) -> f64 {
+        self.cdf.cdf_at(ratio)
+    }
+
+    /// (ratio, cumulative fraction) series for plotting.
+    pub fn curve(&self, points: usize) -> Vec<(f64, f64)> {
+        self.cdf.curve(points)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ClusterAnalysis {
+    pub devices: BTreeMap<String, DeviceCdf>,
+    pub total_gpu_hours: f64,
+    pub n_records: usize,
+}
+
+impl ClusterAnalysis {
+    pub fn device(&self, name: &str) -> Option<&DeviceCdf> {
+        self.devices.get(name)
+    }
+
+    /// Fraction of all GPU hours spent at ratios below `x`.
+    pub fn overall_below(&self, x: f64) -> f64 {
+        let mut below = 0.0;
+        for d in self.devices.values() {
+            below += d.cdf_at(x - 1e-12) * d.total_gpu_hours;
+        }
+        below / self.total_gpu_hours
+    }
+}
+
+/// Run the Fig-3/4 analysis: per-device GPU-hour-weighted CDF of the
+/// CPU:GPU allocation ratio.
+pub fn analyze(records: &[SallocRecord]) -> ClusterAnalysis {
+    let mut per_device: BTreeMap<String, (WeightedCdf, usize, f64)> = BTreeMap::new();
+    let mut total_hours = 0.0;
+    for r in records {
+        let entry = per_device
+            .entry(r.gpu_type.to_string())
+            .or_insert_with(|| (WeightedCdf::new(), 0, 0.0));
+        let hours = r.gpu_hours();
+        entry.0.add(r.cpu_gpu_ratio(), hours);
+        entry.1 += 1;
+        entry.2 += hours;
+        total_hours += hours;
+    }
+    let devices = per_device
+        .into_iter()
+        .map(|(device, (cdf, n_jobs, hours))| {
+            (
+                device.clone(),
+                DeviceCdf {
+                    device,
+                    n_jobs,
+                    total_gpu_hours: hours,
+                    cdf,
+                },
+            )
+        })
+        .collect();
+    ClusterAnalysis {
+        devices,
+        total_gpu_hours: total_hours,
+        n_records: records.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(gpu_type: &'static str, gpus: u32, cpus: u32, hours: f64) -> SallocRecord {
+        SallocRecord {
+            user: 0,
+            gpu_type,
+            n_gpus: gpus,
+            n_cpus: cpus,
+            duration_h: hours / gpus as f64,
+        }
+    }
+
+    #[test]
+    fn weighted_percentiles() {
+        // 90 gpu-hours at ratio 1, 10 at ratio 8
+        let records = vec![rec("X", 1, 1, 90.0), rec("X", 1, 8, 10.0)];
+        let a = analyze(&records);
+        let x = a.device("X").unwrap();
+        assert_eq!(x.pct(50.0), 1.0);
+        assert_eq!(x.pct(95.0), 8.0);
+        assert!((x.cdf_at(1.0) - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn devices_separated() {
+        let records = vec![rec("A", 4, 4, 10.0), rec("B", 4, 32, 10.0)];
+        let a = analyze(&records);
+        assert_eq!(a.device("A").unwrap().pct(50.0), 1.0);
+        assert_eq!(a.device("B").unwrap().pct(50.0), 8.0);
+        assert_eq!(a.n_records, 2);
+    }
+
+    #[test]
+    fn overall_below_combines_devices() {
+        let records = vec![rec("A", 1, 1, 50.0), rec("B", 1, 16, 50.0)];
+        let a = analyze(&records);
+        let frac = a.overall_below(8.0);
+        assert!((frac - 0.5).abs() < 1e-9, "frac={frac}");
+    }
+
+    #[test]
+    fn curve_is_monotone_cdf() {
+        let records: Vec<SallocRecord> = (1..=20)
+            .map(|i| rec("X", 1, i, 1.0))
+            .collect();
+        let a = analyze(&records);
+        let curve = a.device("X").unwrap().curve(10);
+        for w in curve.windows(2) {
+            assert!(w[1].0 >= w[0].0 && w[1].1 >= w[0].1);
+        }
+    }
+}

@@ -1,0 +1,226 @@
+//! Typed configuration system.
+//!
+//! Presets encode the paper's Table I machines and the evaluated models;
+//! a TOML-subset parser (`toml.rs`) lets users define their own systems
+//! and serving configs in files, as a real framework would.
+
+pub mod model;
+pub mod serve;
+pub mod system;
+pub mod toml;
+
+pub use model::ModelSpec;
+pub use serve::ServeConfig;
+pub use system::{Interconnect, SystemSpec};
+
+use anyhow::{bail, Result};
+
+/// A fully-resolved experiment configuration: which machine, which model,
+/// how many GPUs, how many CPU cores, and the serving parameters.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub system: SystemSpec,
+    pub model: ModelSpec,
+    pub n_gpus: usize,
+    pub cpu_cores: usize,
+    pub serve: ServeConfig,
+    pub seed: u64,
+}
+
+impl RunConfig {
+    pub fn new(system: SystemSpec, model: ModelSpec, n_gpus: usize, cpu_cores: usize) -> Self {
+        Self {
+            system,
+            model,
+            n_gpus,
+            cpu_cores,
+            serve: ServeConfig::default(),
+            seed: 0,
+        }
+    }
+
+    /// Validate physical consistency before a run.
+    pub fn validate(&self) -> Result<()> {
+        if self.n_gpus == 0 {
+            bail!("n_gpus must be ≥ 1");
+        }
+        if self.n_gpus > self.system.gpus_per_node {
+            bail!(
+                "requested {} GPUs but {} has {} per node",
+                self.n_gpus,
+                self.system.name,
+                self.system.gpus_per_node
+            );
+        }
+        if self.cpu_cores == 0 {
+            bail!("cpu_cores must be ≥ 1");
+        }
+        if self.cpu_cores > self.system.cpu_cores {
+            bail!(
+                "requested {} cores but {} has {}",
+                self.cpu_cores,
+                self.system.name,
+                self.system.cpu_cores
+            );
+        }
+        if self.model.n_layers == 0 || self.model.d_model == 0 {
+            bail!("degenerate model spec");
+        }
+        if self.model.n_heads % self.n_gpus != 0 {
+            bail!(
+                "tensor parallelism requires n_heads ({}) divisible by n_gpus ({})",
+                self.model.n_heads,
+                self.n_gpus
+            );
+        }
+        self.serve.validate()?;
+        Ok(())
+    }
+
+    /// The paper's four CPU provisioning levels for a given GPU count:
+    /// (#GPUs + 1), 2×, 4×, 8× #GPUs (§IV-B "Experimental setup").
+    pub fn paper_core_levels(n_gpus: usize) -> Vec<usize> {
+        vec![n_gpus + 1, 2 * n_gpus, 4 * n_gpus, 8 * n_gpus]
+    }
+
+    /// Load a run configuration from a TOML file. Recognized keys:
+    ///
+    /// ```toml
+    /// seed = 42
+    /// [system]            # preset + overrides
+    /// name = "blackwell"
+    /// tokenize_us_per_token = 15.0
+    /// gpu_efficiency = 0.4
+    /// [run]
+    /// model = "llama8b"
+    /// gpus = 4
+    /// cores = 16
+    /// [serve]
+    /// max_batch_size = 256
+    /// prefill_chunk_tokens = 2048
+    /// prefix_caching = true
+    /// cuda_graphs = true
+    /// tokenizer_threads = 0
+    /// timeout_s = 200.0
+    /// max_output_tokens = 32
+    /// control_plane_weight = 1
+    /// ```
+    pub fn from_toml_str(text: &str) -> Result<RunConfig> {
+        let doc = toml::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let sys_name = doc.str_or("system", "name", "h100");
+        let mut system = SystemSpec::by_name(&sys_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown system '{sys_name}'"))?;
+        if let Some(v) = doc.get("system", "tokenize_us_per_token").and_then(|v| v.as_float()) {
+            system.tokenize_s_per_token = v * 1e-6;
+        }
+        if let Some(v) = doc.get("system", "gpu_efficiency").and_then(|v| v.as_float()) {
+            system.gpu_efficiency = v;
+        }
+        let model_name = doc.str_or("run", "model", "llama8b");
+        let model = ModelSpec::by_name(&model_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown model '{model_name}'"))?;
+        let n_gpus = doc.int_or("run", "gpus", 4) as usize;
+        let cores = doc.int_or("run", "cores", (n_gpus + 1) as i64) as usize;
+        let mut cfg = RunConfig::new(system, model, n_gpus, cores);
+        cfg.seed = doc.int_or("", "seed", 0) as u64;
+        let s = &mut cfg.serve;
+        s.max_batch_size = doc.int_or("serve", "max_batch_size", s.max_batch_size as i64) as usize;
+        s.prefill_chunk_tokens =
+            doc.int_or("serve", "prefill_chunk_tokens", s.prefill_chunk_tokens as i64) as usize;
+        s.prefix_caching = doc.bool_or("serve", "prefix_caching", s.prefix_caching);
+        s.cuda_graphs = doc.bool_or("serve", "cuda_graphs", s.cuda_graphs);
+        s.tokenizer_threads =
+            doc.int_or("serve", "tokenizer_threads", s.tokenizer_threads as i64) as usize;
+        s.timeout_s = doc.float_or("serve", "timeout_s", s.timeout_s);
+        s.max_output_tokens =
+            doc.int_or("serve", "max_output_tokens", s.max_output_tokens as i64) as usize;
+        s.control_plane_weight =
+            doc.int_or("serve", "control_plane_weight", s.control_plane_weight as i64) as u32;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_toml_file(path: &std::path::Path) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+        Self::from_toml_str(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preset_roundtrip_validates() {
+        let cfg = RunConfig::new(
+            SystemSpec::blackwell(),
+            ModelSpec::llama31_8b(),
+            4,
+            16,
+        );
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_too_many_gpus() {
+        let cfg = RunConfig::new(SystemSpec::h100(), ModelSpec::llama31_8b(), 16, 8);
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_zero_cores() {
+        let cfg = RunConfig::new(SystemSpec::h100(), ModelSpec::llama31_8b(), 4, 0);
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_indivisible_tp() {
+        // 32 heads / 5 GPUs does not divide
+        let mut cfg = RunConfig::new(SystemSpec::h100(), ModelSpec::llama31_8b(), 4, 8);
+        cfg.n_gpus = 5;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let cfg = RunConfig::from_toml_str(
+            r#"
+seed = 7
+[system]
+name = "blackwell"
+tokenize_us_per_token = 20.0
+[run]
+model = "qwen14b"
+gpus = 8
+cores = 16
+[serve]
+prefill_chunk_tokens = 4096
+prefix_caching = false
+control_plane_weight = 4
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.system.name, "RTX Pro 6000");
+        assert!((cfg.system.tokenize_s_per_token - 20e-6).abs() < 1e-12);
+        assert_eq!(cfg.model.name, "Qwen-2.5-14B");
+        assert_eq!(cfg.n_gpus, 8);
+        assert_eq!(cfg.cpu_cores, 16);
+        assert_eq!(cfg.serve.prefill_chunk_tokens, 4096);
+        assert!(!cfg.serve.prefix_caching);
+        assert_eq!(cfg.serve.control_plane_weight, 4);
+        assert_eq!(cfg.seed, 7);
+    }
+
+    #[test]
+    fn toml_rejects_invalid() {
+        assert!(RunConfig::from_toml_str("[system]\nname = \"tpu\"\n").is_err());
+        assert!(RunConfig::from_toml_str("[run]\ngpus = 99\n").is_err());
+    }
+
+    #[test]
+    fn paper_levels() {
+        assert_eq!(RunConfig::paper_core_levels(4), vec![5, 8, 16, 32]);
+        assert_eq!(RunConfig::paper_core_levels(8), vec![9, 16, 32, 64]);
+    }
+}

@@ -1,0 +1,200 @@
+//! Model architecture specifications.
+//!
+//! The paper evaluates Llama 3.1 8B and Qwen 2.5 14B; the real-execution
+//! track uses `tiny_100m`, the transformer actually compiled by the
+//! JAX/Pallas layer. Parameter counts and FLOP estimates feed the GPU
+//! roofline model.
+
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    /// KV heads (grouped-query attention).
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub vocab_size: usize,
+    /// Bytes per parameter/activation element (2 = bf16).
+    pub dtype_bytes: usize,
+    pub max_seq_len: usize,
+}
+
+impl ModelSpec {
+    pub fn llama31_8b() -> ModelSpec {
+        ModelSpec {
+            name: "Llama-3.1-8B".into(),
+            n_layers: 32,
+            d_model: 4096,
+            n_heads: 32,
+            n_kv_heads: 8,
+            d_ff: 14336,
+            vocab_size: 128_256,
+            dtype_bytes: 2,
+            max_seq_len: 131_072,
+        }
+    }
+
+    pub fn qwen25_14b() -> ModelSpec {
+        ModelSpec {
+            name: "Qwen-2.5-14B".into(),
+            n_layers: 48,
+            d_model: 5120,
+            n_heads: 40,
+            n_kv_heads: 8,
+            d_ff: 13_824,
+            vocab_size: 152_064,
+            dtype_bytes: 2,
+            max_seq_len: 131_072,
+        }
+    }
+
+    /// The real model compiled by python/compile and served in Track R.
+    /// ~100 M parameters — large enough to be a genuine workload on a CPU
+    /// PJRT backend, small enough to compile and run everywhere.
+    pub fn tiny_100m() -> ModelSpec {
+        ModelSpec {
+            name: "tiny-100M".into(),
+            n_layers: 12,
+            d_model: 768,
+            n_heads: 12,
+            n_kv_heads: 12,
+            d_ff: 3072,
+            vocab_size: 8192,
+            dtype_bytes: 4, // f32 on the CPU PJRT backend
+            max_seq_len: 2048,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<ModelSpec> {
+        match name
+            .to_ascii_lowercase()
+            .replace(['-', '_', '.', ' '], "")
+            .as_str()
+        {
+            "llama318b" | "llama8b" | "llama" => Some(Self::llama31_8b()),
+            "qwen2514b" | "qwen14b" | "qwen" => Some(Self::qwen25_14b()),
+            "tiny100m" | "tiny" => Some(Self::tiny_100m()),
+            _ => None,
+        }
+    }
+
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Total parameter count (embeddings + per-layer attention/MLP +
+    /// final norm + LM head, assuming untied embeddings).
+    pub fn param_count(&self) -> u64 {
+        let d = self.d_model as u64;
+        let dff = self.d_ff as u64;
+        let v = self.vocab_size as u64;
+        let kv_frac = self.n_kv_heads as u64 * self.d_head() as u64;
+        // attention: Wq (d×d), Wk/Wv (d×kv), Wo (d×d)
+        let attn = d * d + 2 * d * kv_frac + d * d;
+        // SwiGLU MLP: gate + up (d×dff each) + down (dff×d)
+        let mlp = 3 * d * dff;
+        let per_layer = attn + mlp + 2 * d; // + 2 norms
+        self.n_layers as u64 * per_layer + 2 * v * d + d
+    }
+
+    /// FLOPs for one forward pass over `n_tokens` new tokens given
+    /// `ctx_len` total context (prefill: n_tokens = ctx; decode: 1).
+    /// 2·params·tokens for the dense part plus attention score FLOPs.
+    pub fn forward_flops(&self, n_tokens: u64, ctx_len: u64) -> f64 {
+        let dense = 2.0 * self.param_count() as f64 * n_tokens as f64;
+        // attention: 2 matmuls of [n_tokens × ctx] × d per layer, ×2 FLOPs
+        let attn = 4.0
+            * self.n_layers as f64
+            * n_tokens as f64
+            * ctx_len as f64
+            * self.d_model as f64;
+        dense + attn
+    }
+
+    /// Bytes of weights read for one decode step (the memory-bound side
+    /// of the roofline) — all parameters once, plus the KV cache.
+    pub fn decode_bytes(&self, ctx_len: u64, batch: u64) -> f64 {
+        let weights = self.param_count() as f64 * self.dtype_bytes as f64;
+        let kv = self.kv_bytes_per_token() as f64 * ctx_len as f64 * batch as f64;
+        weights + kv
+    }
+
+    /// KV-cache bytes per token (all layers, K+V).
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        (2 * self.n_layers * self.n_kv_heads * self.d_head() * self.dtype_bytes) as u64
+    }
+
+    /// Kernel launches per transformer layer per step. Roughly: qkv proj,
+    /// rope, attention, out proj, 2 norms, 3 mlp matmuls, activation,
+    /// residual adds ≈ 12 compute kernels + 1 collective per layer under
+    /// tensor parallelism (2 allreduces per layer halved by fusing).
+    pub fn kernels_per_layer(&self) -> usize {
+        12
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama_param_count_close_to_8b() {
+        let p = ModelSpec::llama31_8b().param_count();
+        assert!(
+            (7.5e9..9.0e9).contains(&(p as f64)),
+            "Llama-3.1-8B params = {p}"
+        );
+    }
+
+    #[test]
+    fn qwen_param_count_close_to_14b() {
+        let p = ModelSpec::qwen25_14b().param_count();
+        assert!(
+            (13.0e9..16.0e9).contains(&(p as f64)),
+            "Qwen-2.5-14B params = {p}"
+        );
+    }
+
+    #[test]
+    fn tiny_is_about_100m() {
+        let p = ModelSpec::tiny_100m().param_count();
+        assert!(
+            (6.0e7..1.5e8).contains(&(p as f64)),
+            "tiny params = {p}"
+        );
+    }
+
+    #[test]
+    fn lookups() {
+        assert_eq!(ModelSpec::by_name("llama-3.1-8b").unwrap().name, "Llama-3.1-8B");
+        assert_eq!(ModelSpec::by_name("qwen14b").unwrap().name, "Qwen-2.5-14B");
+        assert_eq!(ModelSpec::by_name("tiny").unwrap().name, "tiny-100M");
+        assert!(ModelSpec::by_name("gpt-5").is_none());
+    }
+
+    #[test]
+    fn prefill_flops_scale_superlinearly() {
+        let m = ModelSpec::llama31_8b();
+        let f1 = m.forward_flops(1_000, 1_000);
+        let f2 = m.forward_flops(2_000, 2_000);
+        assert!(f2 > 2.0 * f1); // quadratic attention term present
+        assert!(f2 < 4.0 * f1); // but dense-dominated at these lengths
+    }
+
+    #[test]
+    fn decode_is_memory_bound_shape() {
+        let m = ModelSpec::llama31_8b();
+        // decode bytes grow with context (KV reads)
+        assert!(m.decode_bytes(100_000, 1) > m.decode_bytes(1_000, 1));
+        // one decode step FLOPs are tiny relative to prefill
+        assert!(m.forward_flops(1, 4096) < m.forward_flops(4096, 4096) / 1000.0);
+    }
+
+    #[test]
+    fn kv_bytes_gqa() {
+        let m = ModelSpec::llama31_8b();
+        // 2 × 32 layers × 8 kv heads × 128 dhead × 2 bytes = 131072
+        assert_eq!(m.kv_bytes_per_token(), 131_072);
+    }
+}

@@ -1,0 +1,125 @@
+//! Serving-engine configuration (the knobs vLLM V1 exposes that matter
+//! for the paper's experiments).
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Max requests resident in a decode batch (continuous batching cap).
+    pub max_batch_size: usize,
+    /// Chunked-prefill token budget per engine step (vLLM's
+    /// `max_num_batched_tokens`). Prefill longer than this is split into
+    /// chunks interleaved with decode — this is what makes prefill time
+    /// near-linear in sequence length (§IV-A).
+    pub prefill_chunk_tokens: usize,
+    /// KV-cache page size in tokens.
+    pub kv_page_tokens: usize,
+    /// Total KV pages per GPU (sized from HBM capacity in practice; fixed
+    /// here so experiments are deterministic).
+    pub kv_pages_per_gpu: usize,
+    /// Enable prefix caching (vLLM default on).
+    pub prefix_caching: bool,
+    /// Enable CUDA-Graph-style launch amortization for decode steps
+    /// ("full-and-piecewise" in vLLM v0.11): captured segments cost one
+    /// launch, dynamic segments still launch per-kernel.
+    pub cuda_graphs: bool,
+    /// Fraction of decode kernels that remain dynamic (not capturable) —
+    /// EOS checks, sampling, stop conditions (§II-A ③).
+    pub graph_dynamic_fraction: f64,
+    /// Tokenizer worker threads in the API-server process. HF tokenizers
+    /// spawns a Rayon pool sized to the visible cores
+    /// (TOKENIZERS_PARALLELISM=true, §II-A ①); 0 = auto (one thread per
+    /// allocated core), matching that default.
+    pub tokenizer_threads: usize,
+    /// Request timeout (seconds). Paper uses 200 s (§IV-B).
+    pub timeout_s: f64,
+    /// Max output tokens generated per request.
+    pub max_output_tokens: usize,
+    /// CFS weight for the latency-critical control-plane tasks
+    /// (EngineCore + GPU workers). 1 = default OS behavior (the paper's
+    /// measured setup: "the default OS scheduler treats all processes
+    /// equally", §VI-A); >1 models the nice/cgroup prioritization the
+    /// paper proposes evaluating as future work.
+    pub control_plane_weight: u32,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            max_batch_size: 256,
+            prefill_chunk_tokens: 2048, // vLLM V1 default max_num_batched_tokens
+            kv_page_tokens: 16,
+            kv_pages_per_gpu: 32_768,
+            prefix_caching: true,
+            cuda_graphs: true,
+            graph_dynamic_fraction: 0.25,
+            tokenizer_threads: 0, // auto: one per allocated core
+            timeout_s: 200.0,
+            max_output_tokens: 32,
+            control_plane_weight: 1,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.max_batch_size == 0 {
+            bail!("max_batch_size must be ≥ 1");
+        }
+        if self.prefill_chunk_tokens == 0 {
+            bail!("prefill_chunk_tokens must be ≥ 1");
+        }
+        if self.kv_page_tokens == 0 || self.kv_pages_per_gpu == 0 {
+            bail!("KV cache must have nonzero pages");
+        }
+        if !(0.0..=1.0).contains(&self.graph_dynamic_fraction) {
+            bail!("graph_dynamic_fraction must be in [0,1]");
+        }
+        if self.timeout_s <= 0.0 {
+            bail!("timeout must be positive");
+        }
+        if self.control_plane_weight == 0 {
+            bail!("control_plane_weight must be ≥ 1");
+        }
+        Ok(())
+    }
+
+    /// KV capacity in tokens per GPU.
+    pub fn kv_capacity_tokens(&self) -> usize {
+        self.kv_page_tokens * self.kv_pages_per_gpu
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        ServeConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_fraction() {
+        let cfg = ServeConfig {
+            graph_dynamic_fraction: 1.5,
+            ..Default::default()
+        };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_zero_batch() {
+        let cfg = ServeConfig {
+            max_batch_size: 0,
+            ..Default::default()
+        };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn kv_capacity() {
+        let cfg = ServeConfig::default();
+        assert_eq!(cfg.kv_capacity_tokens(), 16 * 32_768);
+    }
+}

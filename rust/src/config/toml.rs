@@ -1,0 +1,292 @@
+//! TOML-subset parser for user-supplied config files.
+//!
+//! Supports: `[section]` and `[section.sub]` headers, `key = value` with
+//! string / integer / float / bool / array-of-scalar values, `#`
+//! comments. That covers everything a `cpuslow.toml` needs; nested tables
+//! beyond two levels, dates, and multi-line strings are rejected loudly.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: section path ("" for root, "a.b" for nested) → keys.
+#[derive(Debug, Clone, Default)]
+pub struct TomlDoc {
+    pub sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn int_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(|v| v.as_int()).unwrap_or(default)
+    }
+
+    pub fn float_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key)
+            .and_then(|v| v.as_float())
+            .unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key)
+            .and_then(|v| v.as_bool())
+            .unwrap_or(default)
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error on line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+pub fn parse(input: &str) -> Result<TomlDoc, TomlError> {
+    let mut doc = TomlDoc::default();
+    doc.sections.insert(String::new(), BTreeMap::new());
+    let mut current = String::new();
+
+    for (lineno, raw) in input.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |msg: &str| TomlError {
+            line: lineno + 1,
+            msg: msg.to_string(),
+        };
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| err("unterminated section header"))?
+                .trim();
+            if name.is_empty() {
+                return Err(err("empty section name"));
+            }
+            if name.starts_with('[') {
+                return Err(err("array-of-tables not supported"));
+            }
+            current = name.to_string();
+            doc.sections.entry(current.clone()).or_default();
+        } else {
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| err("expected key = value"))?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(err("empty key"));
+            }
+            let value = parse_value(value.trim()).map_err(|m| err(&m))?;
+            doc.sections
+                .get_mut(&current)
+                .unwrap()
+                .insert(key.to_string(), value);
+        }
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect '#' inside quoted strings
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".to_string());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        let mut out = String::new();
+        let mut chars = inner.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    other => return Err(format!("bad escape: \\{other:?}")),
+                }
+            } else if c == '"' {
+                return Err("unescaped quote inside string".to_string());
+            } else {
+                out.push(c);
+            }
+        }
+        return Ok(TomlValue::Str(out));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?
+            .trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(Vec::new()));
+        }
+        let items: Result<Vec<TomlValue>, String> = split_array_items(inner)
+            .into_iter()
+            .map(|item| parse_value(item.trim()))
+            .collect();
+        return Ok(TomlValue::Array(items?));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    let cleaned = s.replace('_', "");
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value: {s}"))
+}
+
+fn split_array_items(inner: &str) -> Vec<&str> {
+    // split on top-level commas (no nested arrays of arrays supported,
+    // but strings with commas are respected)
+    let mut items = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in inner.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                items.push(&inner[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    items.push(&inner[start..]);
+    items
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_document() {
+        let doc = parse(
+            r#"
+# experiment config
+seed = 42
+
+[system]
+name = "blackwell"   # Table I row 3
+cpu_cores = 16
+gpu_efficiency = 0.4
+
+[serve]
+cuda_graphs = true
+core_levels = [5, 8, 16, 32]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.int_or("", "seed", 0), 42);
+        assert_eq!(doc.str_or("system", "name", ""), "blackwell");
+        assert_eq!(doc.int_or("system", "cpu_cores", 0), 16);
+        assert!((doc.float_or("system", "gpu_efficiency", 0.0) - 0.4).abs() < 1e-12);
+        assert!(doc.bool_or("serve", "cuda_graphs", false));
+        let arr = doc.get("serve", "core_levels").unwrap();
+        if let TomlValue::Array(items) = arr {
+            let ints: Vec<i64> = items.iter().map(|v| v.as_int().unwrap()).collect();
+            assert_eq!(ints, vec![5, 8, 16, 32]);
+        } else {
+            panic!("not an array");
+        }
+    }
+
+    #[test]
+    fn nested_section_names() {
+        let doc = parse("[a.b]\nx = 1\n").unwrap();
+        assert_eq!(doc.int_or("a.b", "x", 0), 1);
+    }
+
+    #[test]
+    fn string_escapes_and_hash_in_string() {
+        let doc = parse("s = \"a#b\\nc\"\n").unwrap();
+        assert_eq!(doc.str_or("", "s", ""), "a#b\nc");
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let doc = parse("n = 114_000\n").unwrap();
+        assert_eq!(doc.int_or("", "n", 0), 114_000);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("ok = 1\nbroken\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        assert!(parse("[unterminated\n").is_err());
+        assert!(parse("x = \"open\n").is_err());
+    }
+
+    #[test]
+    fn float_parsing() {
+        let doc = parse("x = 1.5e-6\ny = 3\n").unwrap();
+        assert!((doc.float_or("", "x", 0.0) - 1.5e-6).abs() < 1e-18);
+        // ints coerce to float on demand
+        assert_eq!(doc.float_or("", "y", 0.0), 3.0);
+    }
+}

@@ -1,0 +1,142 @@
+//! Cloud cost model (§VI-A).
+//!
+//! Encodes the paper's pricing survey: GPU instances from $3.06/h
+//! (p3.2xlarge, 1×V100) to $55.04/h (p5.48xlarge, 8×H100), vCPUs at
+//! $0.03–0.06/h — GPU compute 100–1,600× more expensive per unit — and
+//! the headline arithmetic that adding 16 vCPUs to a p5.48xlarge costs
+//! ~1.5% while (per §IV) recovering multiples of throughput.
+
+/// One cloud instance offering.
+#[derive(Debug, Clone)]
+pub struct Instance {
+    pub name: &'static str,
+    pub gpus: u32,
+    pub gpu_model: &'static str,
+    pub vcpus: u32,
+    pub hourly_usd: f64,
+}
+
+/// AWS EC2 GPU instances cited by the paper (on-demand, us-east-1 class
+/// pricing as of the paper's survey).
+pub fn aws_gpu_instances() -> Vec<Instance> {
+    vec![
+        Instance {
+            name: "p3.2xlarge",
+            gpus: 1,
+            gpu_model: "V100",
+            vcpus: 8,
+            hourly_usd: 3.06,
+        },
+        Instance {
+            name: "p3.8xlarge",
+            gpus: 4,
+            gpu_model: "V100",
+            vcpus: 32,
+            hourly_usd: 12.24,
+        },
+        Instance {
+            name: "p4d.24xlarge",
+            gpus: 8,
+            gpu_model: "A100",
+            vcpus: 96,
+            hourly_usd: 32.77,
+        },
+        Instance {
+            name: "p5.48xlarge",
+            gpus: 8,
+            gpu_model: "H100",
+            vcpus: 192,
+            hourly_usd: 55.04,
+        },
+    ]
+}
+
+/// Paper's vCPU price band: $21.73–45.86 per core-month.
+pub const VCPU_USD_PER_HOUR_LOW: f64 = 21.73 / 730.0; // ≈ $0.0298
+pub const VCPU_USD_PER_HOUR_HIGH: f64 = 45.86 / 730.0; // ≈ $0.0628
+
+/// Mid-band vCPU price used for the headline arithmetic ($0.05/h).
+pub const VCPU_USD_PER_HOUR_MID: f64 = 0.05;
+
+/// Effective per-GPU hourly price of an instance (CPU share removed at
+/// the mid-band vCPU price).
+pub fn per_gpu_usd(inst: &Instance) -> f64 {
+    (inst.hourly_usd - inst.vcpus as f64 * VCPU_USD_PER_HOUR_MID) / inst.gpus as f64
+}
+
+/// GPU-to-CPU unit cost ratio for an instance (how many vCPU-hours one
+/// GPU-hour buys). The paper reports 100–1,600× across generations.
+pub fn gpu_cpu_cost_ratio(inst: &Instance, vcpu_usd_per_hour: f64) -> f64 {
+    per_gpu_usd(inst) / vcpu_usd_per_hour
+}
+
+/// Marginal cost fraction of adding `extra_vcpus` to an instance (the
+/// paper's example: +16 vCPU on p5.48xlarge ≈ 1.5%).
+pub fn marginal_cpu_cost_fraction(inst: &Instance, extra_vcpus: u32) -> f64 {
+    extra_vcpus as f64 * VCPU_USD_PER_HOUR_MID / inst.hourly_usd
+}
+
+/// Throughput-per-dollar change from adding CPUs: given a measured
+/// speedup (from the Fig-7 grid), compute the ratio of
+/// (new throughput / new cost) to (old throughput / old cost).
+pub fn throughput_per_dollar_gain(inst: &Instance, extra_vcpus: u32, speedup: f64) -> f64 {
+    assert!(speedup > 0.0);
+    let cost_factor = 1.0 + marginal_cpu_cost_fraction(inst, extra_vcpus);
+    speedup / cost_factor
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p5() -> Instance {
+        aws_gpu_instances()
+            .into_iter()
+            .find(|i| i.name == "p5.48xlarge")
+            .unwrap()
+    }
+
+    #[test]
+    fn paper_price_points_present() {
+        let instances = aws_gpu_instances();
+        let p3 = instances.iter().find(|i| i.name == "p3.2xlarge").unwrap();
+        assert_eq!(p3.hourly_usd, 3.06);
+        assert_eq!(p5().hourly_usd, 55.04);
+    }
+
+    #[test]
+    fn vcpu_band_matches_paper() {
+        assert!((VCPU_USD_PER_HOUR_LOW - 0.0298).abs() < 0.002);
+        assert!((VCPU_USD_PER_HOUR_HIGH - 0.0628).abs() < 0.002);
+    }
+
+    #[test]
+    fn gpu_cpu_ratio_in_paper_band() {
+        // Paper: GPU compute roughly 100–1,600× more expensive.
+        for inst in aws_gpu_instances() {
+            let lo = gpu_cpu_cost_ratio(&inst, VCPU_USD_PER_HOUR_HIGH);
+            let hi = gpu_cpu_cost_ratio(&inst, VCPU_USD_PER_HOUR_LOW);
+            assert!(lo >= 40.0, "{}: {lo:.0}", inst.name);
+            assert!(hi <= 1_700.0, "{}: {hi:.0}", inst.name);
+        }
+        // newest generation approaches the upper end
+        let h100_hi = gpu_cpu_cost_ratio(&p5(), VCPU_USD_PER_HOUR_LOW);
+        assert!(h100_hi > 150.0);
+    }
+
+    #[test]
+    fn headline_marginal_cost() {
+        // +16 vCPU at $0.05/h on $55.04/h ≈ 1.45%.
+        let frac = marginal_cpu_cost_fraction(&p5(), 16);
+        assert!((frac - 0.0145).abs() < 0.002, "frac={frac:.4}");
+    }
+
+    #[test]
+    fn speedup_dwarfs_cost() {
+        // Even the paper's floor speedup (1.36×) nets a big gain.
+        let gain = throughput_per_dollar_gain(&p5(), 16, 1.36);
+        assert!(gain > 1.3);
+        let gain = throughput_per_dollar_gain(&p5(), 16, 5.40);
+        assert!(gain > 5.0);
+    }
+}

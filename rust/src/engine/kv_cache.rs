@@ -1,0 +1,154 @@
+//! Paged KV-cache block allocator (PagedAttention-style).
+//!
+//! Tracks page occupancy per request so the scheduler can gate admission
+//! on memory availability; under attacker floods the cache fills up and
+//! the waiting queue grows — part of the paper's pathological feedback
+//! loop (§IV-B "LLM engine starvation").
+
+use super::request::RequestId;
+use std::collections::HashMap;
+
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    page_tokens: usize,
+    total_pages: usize,
+    free_pages: usize,
+    per_request: HashMap<RequestId, usize>,
+}
+
+impl KvCache {
+    pub fn new(page_tokens: usize, total_pages: usize) -> KvCache {
+        assert!(page_tokens > 0 && total_pages > 0);
+        KvCache {
+            page_tokens,
+            total_pages,
+            free_pages: total_pages,
+            per_request: HashMap::new(),
+        }
+    }
+
+    pub fn pages_for_tokens(&self, tokens: u64) -> usize {
+        ((tokens as usize) + self.page_tokens - 1) / self.page_tokens
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free_pages
+    }
+
+    pub fn used_pages(&self) -> usize {
+        self.total_pages - self.free_pages
+    }
+
+    pub fn total_pages(&self) -> usize {
+        self.total_pages
+    }
+
+    pub fn utilization(&self) -> f64 {
+        self.used_pages() as f64 / self.total_pages as f64
+    }
+
+    /// Can a request with `tokens` total length be admitted right now?
+    pub fn can_fit(&self, tokens: u64) -> bool {
+        self.pages_for_tokens(tokens) <= self.free_pages
+    }
+
+    /// Reserve pages so the request can hold `tokens` tokens. Grows the
+    /// existing reservation; no-op if already large enough. Returns false
+    /// (and changes nothing) on insufficient memory.
+    pub fn grow_to(&mut self, id: RequestId, tokens: u64) -> bool {
+        let needed = self.pages_for_tokens(tokens);
+        let have = *self.per_request.get(&id).unwrap_or(&0);
+        if needed <= have {
+            return true;
+        }
+        let extra = needed - have;
+        if extra > self.free_pages {
+            return false;
+        }
+        self.free_pages -= extra;
+        self.per_request.insert(id, needed);
+        true
+    }
+
+    /// Release all pages of a request.
+    pub fn release(&mut self, id: RequestId) {
+        if let Some(pages) = self.per_request.remove(&id) {
+            self.free_pages += pages;
+            debug_assert!(self.free_pages <= self.total_pages);
+        }
+    }
+
+    pub fn pages_of(&self, id: RequestId) -> usize {
+        *self.per_request.get(&id).unwrap_or(&0)
+    }
+
+    /// Invariant check for property tests: free + Σ per-request = total.
+    pub fn check_conservation(&self) -> bool {
+        let held: usize = self.per_request.values().sum();
+        held + self.free_pages == self.total_pages
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_and_release_conserve_pages() {
+        let mut kv = KvCache::new(16, 100);
+        assert!(kv.grow_to(1, 100)); // 7 pages
+        assert_eq!(kv.pages_of(1), 7);
+        assert_eq!(kv.free_pages(), 93);
+        assert!(!kv.grow_to(2, 1600)); // 100 pages > 93 free
+        assert!(kv.check_conservation());
+        kv.release(1);
+        assert!(kv.check_conservation());
+    }
+
+    #[test]
+    fn grow_is_idempotent_when_smaller() {
+        let mut kv = KvCache::new(16, 10);
+        assert!(kv.grow_to(1, 64)); // 4 pages
+        assert!(kv.grow_to(1, 32)); // already covered
+        assert_eq!(kv.pages_of(1), 4);
+        assert!(kv.grow_to(1, 80)); // 5 pages → +1
+        assert_eq!(kv.pages_of(1), 5);
+        assert_eq!(kv.free_pages(), 5);
+    }
+
+    #[test]
+    fn rejects_when_full_without_side_effects() {
+        let mut kv = KvCache::new(16, 4);
+        assert!(kv.grow_to(1, 48)); // 3 pages
+        assert!(!kv.grow_to(2, 48)); // needs 3, only 1 free
+        assert_eq!(kv.pages_of(2), 0);
+        assert_eq!(kv.free_pages(), 1);
+        assert!(kv.check_conservation());
+    }
+
+    #[test]
+    fn can_fit_matches_grow() {
+        let mut kv = KvCache::new(16, 8);
+        assert!(kv.can_fit(128));
+        assert!(!kv.can_fit(129 + 16));
+        kv.grow_to(1, 64);
+        assert!(kv.can_fit(64));
+        assert!(!kv.can_fit(65 + 16));
+    }
+
+    #[test]
+    fn release_unknown_is_noop() {
+        let mut kv = KvCache::new(16, 8);
+        kv.release(42);
+        assert_eq!(kv.free_pages(), 8);
+    }
+
+    #[test]
+    fn page_rounding() {
+        let kv = KvCache::new(16, 8);
+        assert_eq!(kv.pages_for_tokens(0), 0);
+        assert_eq!(kv.pages_for_tokens(1), 1);
+        assert_eq!(kv.pages_for_tokens(16), 1);
+        assert_eq!(kv.pages_for_tokens(17), 2);
+    }
+}

@@ -1,0 +1,614 @@
+//! vLLM-V1-like serving engine on the simulator (Track S).
+//!
+//! Process topology (§III): the **API server** ingests requests and runs
+//! the tokenizer pool ([`tokenizer_pool`]); tokenized requests flow over
+//! a ZMQ-like channel to the **EngineCore**, which runs continuous
+//! batching with chunked prefill ([`scheduler`]) and broadcasts each
+//! step's plan over the 1-writer-N-reader shm ring
+//! ([`crate::ipc::sim_shm`]); one **GPU worker** task per rank
+//! busy-polls the ring, pays kernel-launch CPU cost, and drives its
+//! device stream ([`crate::gpu::device`]) whose per-step collective has
+//! barrier semantics. Every one of those tasks contends for the same
+//! simulated cores — reproducing the paper's compounded contention.
+
+pub mod kv_cache;
+pub mod prefix_cache;
+pub mod request;
+pub mod scheduler;
+pub mod tokenizer_pool;
+
+pub use kv_cache::KvCache;
+pub use prefix_cache::PrefixCache;
+pub use request::{Outcome, ReqClass, ReqPhase, Request, RequestId};
+pub use scheduler::{complete_step, schedule, SchedState, StepPlan};
+pub use tokenizer_pool::{chunk_costs, TokJob, TokenizerPool};
+
+use crate::config::RunConfig;
+use crate::gpu::{self, timing, FleetRef, Kernel, KernelKind};
+use crate::ipc::{SimChannel, SimShmBroadcast};
+use crate::simcpu::script::{Instr, Script};
+use crate::simcpu::{GateId, Sim, SimParams};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// Host-side CPU cost constants for the engine control plane.
+#[derive(Debug, Clone)]
+pub struct EngineCosts {
+    /// EngineCore scheduling pass: base + per-batch-entry (vLLM V1's
+    /// schedule() is ~0.1–1 ms depending on batch).
+    pub schedule_base_ns: u64,
+    pub schedule_per_req_ns: u64,
+    /// Sampling + output processing per step: base + per-request.
+    pub sample_base_ns: u64,
+    pub sample_per_req_ns: u64,
+    /// HTTP parse/handling per request on the API server (§II-A ②:
+    /// small relative to tokenization).
+    pub http_ns: u64,
+}
+
+impl Default for EngineCosts {
+    fn default() -> Self {
+        EngineCosts {
+            schedule_base_ns: 100_000,
+            schedule_per_req_ns: 2_000,
+            sample_base_ns: 30_000,
+            sample_per_req_ns: 3_000,
+            http_ns: 100_000,
+        }
+    }
+}
+
+/// Mutable state shared between the EngineCore and workers (in a real
+/// deployment this is process-separated; the scheduling *decisions*
+/// travel through the shm ring, which is what we model with gates —
+/// the Rust-side Rc is just plumbing).
+pub struct EngineShared {
+    pub sched: SchedState,
+    pub kv: KvCache,
+    pub prefix: Option<PrefixCache>,
+    /// step seq → broadcast plan payload.
+    pub plans: HashMap<u64, StepPlan>,
+    pub steps_completed: u64,
+    /// ns of GPU-step wall time accumulated (for reporting).
+    pub gpu_step_ns: u64,
+}
+
+pub type SharedRef = Rc<RefCell<EngineShared>>;
+
+#[derive(Clone)]
+struct Env {
+    cfg: Rc<RunConfig>,
+    costs: Rc<EngineCosts>,
+    shared: SharedRef,
+    channel: SimChannel<Request>,
+    shm: SimShmBroadcast,
+    fleet: FleetRef,
+    /// Signaled once per worker per completed step.
+    step_done: GateId,
+}
+
+/// A full serving-stack simulation instance.
+pub struct ServingSim {
+    pub sim: Sim,
+    env: Env,
+    pool: TokenizerPool,
+    next_id: RequestId,
+    /// Requests submitted but not yet visible to the scheduler (still in
+    /// the tokenizer pool or the channel); lets `outcome()` answer for
+    /// any submitted id.
+    pending: Rc<RefCell<HashMap<RequestId, Request>>>,
+}
+
+impl ServingSim {
+    pub fn new(cfg: RunConfig) -> ServingSim {
+        Self::with_costs(cfg, EngineCosts::default())
+    }
+
+    pub fn with_costs(cfg: RunConfig, costs: EngineCosts) -> ServingSim {
+        cfg.validate().expect("invalid RunConfig");
+        let params = SimParams {
+            cores: cfg.cpu_cores,
+            context_switch_ns: (cfg.system.context_switch_s * 1e9) as u64,
+            timeslice_ns: (cfg.system.timeslice_s * 1e9) as u64,
+            poll_quantum_ns: 1_000,
+            trace_bucket_ns: Some(100_000_000), // 100 ms utilization buckets
+        };
+        let mut sim = Sim::new(params);
+        let fleet = gpu::Fleet::new(cfg.n_gpus, Some(0.1));
+        let channel = SimChannel::new(&mut sim);
+        let shm = SimShmBroadcast::new(&mut sim, 8, cfg.n_gpus);
+        let step_done = sim.new_gate();
+        let shared: SharedRef = Rc::new(RefCell::new(EngineShared {
+            sched: SchedState::new(),
+            kv: KvCache::new(
+                cfg.serve.kv_page_tokens,
+                cfg.serve.kv_pages_per_gpu, // per-GPU pages; TP shards heads, not pages
+            ),
+            prefix: cfg
+                .serve
+                .prefix_caching
+                .then(|| PrefixCache::new(cfg.serve.kv_page_tokens as u64, 262_144)),
+            plans: HashMap::new(),
+            steps_completed: 0,
+            gpu_step_ns: 0,
+        }));
+        let env = Env {
+            cfg: Rc::new(cfg),
+            costs: Rc::new(costs),
+            shared,
+            channel,
+            shm,
+            fleet,
+            step_done,
+        };
+        // API-server tokenizer executor: vLLM's AsyncLLM hands each
+        // request's encode to a ThreadPoolExecutor with
+        // max_workers = min(32, cores + 4) (CPython default). Jobs are
+        // FIFO: under a tokenization flood, a new request's encode waits
+        // behind *every* queued encode — the victim-timeout mechanism.
+        let tok_workers = if env.cfg.serve.tokenizer_threads == 0 {
+            (env.cfg.cpu_cores + 4).min(32)
+        } else {
+            env.cfg.serve.tokenizer_threads
+        };
+        let pool = TokenizerPool::spawn(&mut sim, tok_workers);
+
+        // EngineCore task. With control_plane_weight > 1 the engine and
+        // workers run at CFS priority (the §VI mitigation).
+        let cp_weight = env.cfg.serve.control_plane_weight;
+        {
+            let env = env.clone();
+            let script = Script::new().then(move |_| vec![engine_iter(env, 0, 0)]);
+            sim.spawn_weighted("engine_core", cp_weight, script);
+        }
+        // GPU worker tasks (one per rank)
+        for rank in 0..env.cfg.n_gpus {
+            let env = env.clone();
+            let script = Script::new().then(move |_| vec![worker_iter(env, rank, 0)]);
+            sim.spawn_weighted("gpu_worker", cp_weight, script);
+        }
+
+        ServingSim {
+            sim,
+            env,
+            pool,
+            next_id: 0,
+            pending: Rc::new(RefCell::new(HashMap::new())),
+        }
+    }
+
+    pub fn config(&self) -> &RunConfig {
+        &self.env.cfg
+    }
+
+    /// Submit a request arriving at `at_ns` with the given prompt length.
+    ///
+    /// Mirrors the vLLM V1 API server: asyncio hands each request's
+    /// encode to a FIFO ThreadPoolExecutor (the HF fast tokenizer
+    /// processes one string single-threaded). When requests arrive
+    /// faster than the allocated cores can tokenize, the executor queue
+    /// grows without bound and every later request — victim included —
+    /// waits behind it. That is the paper's positive-feedback loop
+    /// (§IV-B "LLM engine starvation"): contention slows every encode,
+    /// requests stay resident longer, more arrive, CPU pressure
+    /// compounds until the engine starves and victims time out.
+    pub fn submit_at(
+        &mut self,
+        at_ns: u64,
+        class: ReqClass,
+        prompt_tokens: u64,
+        max_new_tokens: u64,
+    ) -> RequestId {
+        let seed = 0x5EED_0000_0000 + self.next_id; // unique content
+        self.submit_with_seed(at_ns, class, prompt_tokens, max_new_tokens, seed)
+    }
+
+    /// Like [`Self::submit_at`] but with an explicit prompt-content seed:
+    /// requests sharing a seed share prefix-cache blocks. The paper's
+    /// attacker stream re-sends the same prompt, so all attackers share
+    /// one seed.
+    pub fn submit_with_seed(
+        &mut self,
+        at_ns: u64,
+        class: ReqClass,
+        prompt_tokens: u64,
+        max_new_tokens: u64,
+        content_seed: u64,
+    ) -> RequestId {
+        let id = self.next_id;
+        self.next_id += 1;
+        let env = self.env.clone();
+        let s_per_token =
+            env.cfg.system.tokenize_s_per_token / env.cfg.system.cpu_single_core_scale;
+        let http_ns = env.costs.http_ns;
+        let pending = Rc::clone(&self.pending);
+        // Register immediately so `outcome()` can answer before the
+        // arrival callback fires.
+        let mut reg = Request::new(id, class, at_ns, prompt_tokens, max_new_tokens);
+        reg.content_seed = content_seed;
+        pending.borrow_mut().insert(id, reg);
+        let pool = self.pool.clone();
+        self.sim.call_at(at_ns, move |sim| {
+            let mut request =
+                Request::new(id, class, sim.now_ns(), prompt_tokens, max_new_tokens);
+            request.content_seed = content_seed;
+            let tokenize_ns = (prompt_tokens as f64 * s_per_token * 1e9) as u64;
+            let request = Rc::new(RefCell::new(Some(request)));
+            let send_cost = env.channel.send_cost_ns;
+            // One FIFO executor job per request: HTTP parse + encode +
+            // channel send, then hand off to the EngineCore.
+            pool.submit_external(
+                sim,
+                TokJob {
+                    cost_ns: http_ns + tokenize_ns + send_cost,
+                    on_done: Box::new(move |ctx| {
+                        let mut r = request.borrow_mut().take().expect("once");
+                        r.tokenized_at = Some(ctx.now_ns());
+                        pending.borrow_mut().insert(r.id, r.clone());
+                        env.channel.push_external(r);
+                        ctx.signal(env.channel.sent_gate(), 1);
+                    }),
+                },
+            );
+        });
+        id
+    }
+
+    /// Run the simulation until virtual `secs`.
+    pub fn run_secs(&mut self, secs: f64) -> f64 {
+        self.sim.run_until((secs * 1e9) as u64);
+        self.sim.now_secs()
+    }
+
+    /// Outcome snapshot for one request (pre-scheduler requests report
+    /// from the pending registry).
+    pub fn outcome(&self, id: RequestId) -> Option<Outcome> {
+        if let Some(r) = self.env.shared.borrow().sched.requests.get(&id) {
+            return Some(Outcome::from_request(r));
+        }
+        self.pending.borrow().get(&id).map(Outcome::from_request)
+    }
+
+    /// All request outcomes (submitted requests that never reached the
+    /// scheduler included, with their fields unset).
+    pub fn outcomes(&self) -> Vec<Outcome> {
+        let shared = self.env.shared.borrow();
+        let mut out: Vec<Outcome> = shared
+            .sched
+            .requests
+            .values()
+            .map(Outcome::from_request)
+            .collect();
+        for (id, r) in self.pending.borrow().iter() {
+            if !shared.sched.requests.contains_key(id) {
+                out.push(Outcome::from_request(r));
+            }
+        }
+        out.sort_by_key(|o| o.id);
+        out
+    }
+
+    pub fn steps_completed(&self) -> u64 {
+        self.env.shared.borrow().steps_completed
+    }
+
+    /// CPU utilization trace (fraction of allocated cores busy, 100 ms
+    /// buckets) — Figure 10.
+    pub fn cpu_utilization(&mut self) -> Vec<f64> {
+        self.sim.utilization()
+    }
+
+    /// Mean GPU utilization trace across ranks — Figure 11.
+    pub fn gpu_utilization(&mut self) -> Vec<f64> {
+        self.env.fleet.borrow_mut().flush(self.sim.now_ns());
+        self.env.fleet.borrow().fleet_utilization()
+    }
+
+    pub fn sim_stats(&self) -> &crate::simcpu::SimStats {
+        self.sim.stats()
+    }
+}
+
+fn schedule_cost(costs: &EngineCosts, batch: usize) -> u64 {
+    costs.schedule_base_ns + costs.schedule_per_req_ns * batch as u64
+}
+
+fn sample_cost(costs: &EngineCosts, batch: usize) -> u64 {
+    costs.sample_base_ns + costs.sample_per_req_ns * batch as u64
+}
+
+/// One EngineCore loop iteration.
+fn engine_iter(env: Env, step_seq: u64, msgs_received: u64) -> Instr {
+    Instr::call(move |ctx| {
+        // Drain newly tokenized requests from the API-server channel.
+        let mut received = msgs_received;
+        while let Some(req) = env.channel.try_recv() {
+            env.shared.borrow_mut().sched.enqueue(req);
+            received += 1;
+        }
+        // Build the next step.
+        let plan = {
+            let shared = &mut *env.shared.borrow_mut();
+            scheduler::schedule(
+                &mut shared.sched,
+                &mut shared.kv,
+                shared.prefix.as_mut(),
+                &env.cfg.serve,
+                ctx.now_ns(),
+            )
+        };
+        match plan {
+            None => {
+                // Idle: sleep until another request arrives.
+                vec![
+                    Instr::block(env.channel.sent_gate(), received + 1),
+                    engine_iter(env.clone(), step_seq, received),
+                ]
+            }
+            Some(mut plan) => {
+                plan.seq = step_seq;
+                plan.collective_id = env.fleet.borrow_mut().new_collective();
+                let batch = plan.batch_size();
+                env.shared.borrow_mut().plans.insert(step_seq, plan.clone());
+
+                let mut instrs = vec![Instr::compute(schedule_cost(&env.costs, batch))];
+                // Broadcast the plan over the shm ring (busy-polls reader
+                // flags when the ring is full).
+                instrs.extend(env.shm.enqueue_instrs(step_seq));
+                // Wait until every rank reports step completion.
+                instrs.push(Instr::block(
+                    env.step_done,
+                    (step_seq + 1) * env.cfg.n_gpus as u64,
+                ));
+                // Sample + postprocess on the engine thread.
+                instrs.push(Instr::compute(sample_cost(&env.costs, batch)));
+                {
+                    let env = env.clone();
+                    instrs.push(Instr::effect(move |ctx| {
+                        let now = ctx.now_ns();
+                        let shared = &mut *env.shared.borrow_mut();
+                        let plan = shared.plans.remove(&step_seq).expect("plan");
+                        let (_firsts, _finished) = scheduler::complete_step(
+                            &mut shared.sched,
+                            &mut shared.kv,
+                            &plan,
+                            now,
+                        );
+                        shared.steps_completed += 1;
+                    }));
+                }
+                instrs.push(engine_iter(env.clone(), step_seq + 1, received));
+                instrs
+            }
+        }
+    })
+}
+
+/// One GPU-worker loop iteration for `rank`.
+fn worker_iter(env: Env, rank: usize, step_seq: u64) -> Instr {
+    Instr::call(move |_ctx| {
+        // Busy-poll the shm ring for this step's plan (the §V-B dequeue).
+        let mut instrs = env.shm.dequeue_instrs(rank, step_seq);
+        {
+            let env = env.clone();
+            instrs.push(Instr::call(move |ctx| {
+                let (launch_cpu, comp_dur, comm_dur, collective_id) = {
+                    let shared = env.shared.borrow();
+                    let plan = shared
+                        .plans
+                        .get(&step_seq)
+                        .expect("plan present while workers run");
+                    step_durations(&env.cfg, plan)
+                };
+                let kdone = ctx.new_gate();
+                let fleet = Rc::clone(&env.fleet);
+                let n_gpus = env.cfg.n_gpus;
+                let step_done = env.step_done;
+                vec![
+                    // CPU: issue the kernel launches (delayed under
+                    // contention → GPU idles → §V-A).
+                    Instr::compute(launch_cpu),
+                    Instr::effect(move |ctx| {
+                        let t = ctx.now_ns();
+                        ctx.call_at(t, move |sim| {
+                            gpu::enqueue(
+                                &fleet,
+                                sim,
+                                rank,
+                                Kernel {
+                                    kind: KernelKind::Compute,
+                                    dur_ns: comp_dur,
+                                    done_gate: None,
+                                },
+                            );
+                            if n_gpus > 1 {
+                                gpu::enqueue(
+                                    &fleet,
+                                    sim,
+                                    rank,
+                                    Kernel {
+                                        kind: KernelKind::Collective { id: collective_id },
+                                        dur_ns: comm_dur,
+                                        done_gate: Some(kdone),
+                                    },
+                                );
+                            } else {
+                                // single GPU: completion rides the compute
+                                // kernel; enqueue a zero-length marker
+                                gpu::enqueue(
+                                    &fleet,
+                                    sim,
+                                    rank,
+                                    Kernel {
+                                        kind: KernelKind::Compute,
+                                        dur_ns: 0,
+                                        done_gate: Some(kdone),
+                                    },
+                                );
+                            }
+                        });
+                    }),
+                    // Wait for the device to finish the step.
+                    Instr::block(kdone, 1),
+                    Instr::effect(move |ctx| ctx.signal(step_done, 1)),
+                ]
+            }));
+        }
+        instrs.push(worker_iter(env.clone(), rank, step_seq + 1));
+        instrs
+    })
+}
+
+/// Compute (launch CPU ns, compute kernel ns, collective kernel ns,
+/// collective id) for a step on one rank.
+fn step_durations(cfg: &RunConfig, plan: &StepPlan) -> (u64, u64, u64, u64) {
+    let model = &cfg.model;
+    let sys = &cfg.system;
+    let n = cfg.n_gpus;
+
+    let mut comp = 0u64;
+    let mut launches = 0usize;
+    for &(_, chunk, ctx_end) in &plan.prefill {
+        comp += timing::prefill_chunk_ns(model, sys, n, chunk, ctx_end);
+    }
+    if !plan.prefill.is_empty() {
+        launches += timing::prefill_launches(model);
+    }
+    if !plan.decode.is_empty() {
+        comp += timing::decode_step_ns(
+            model,
+            sys,
+            n,
+            plan.decode.len() as u64,
+            plan.decode_mean_ctx,
+        );
+        launches += timing::decode_launches(
+            model,
+            cfg.serve.cuda_graphs,
+            cfg.serve.graph_dynamic_fraction,
+        );
+    }
+    // Tensor-parallel allreduces: 2 per layer over the step's new tokens.
+    let new_tokens = plan.prefill_tokens() + plan.decode.len() as u64;
+    let per_layer_bytes = timing::allreduce_bytes(model, new_tokens);
+    let comm = 2 * model.n_layers as u64 * timing::allreduce_ns(sys, n, per_layer_bytes);
+    let launch_cpu =
+        (timing::launch_cpu_ns(sys, launches) as f64 / sys.cpu_single_core_scale) as u64;
+    (launch_cpu, comp, comm, plan.collective_id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelSpec, SystemSpec};
+
+    fn small_cfg(n_gpus: usize, cores: usize) -> RunConfig {
+        let mut cfg = RunConfig::new(
+            SystemSpec::h100(),
+            ModelSpec::llama31_8b(),
+            n_gpus,
+            cores,
+        );
+        cfg.serve.max_output_tokens = 8;
+        cfg
+    }
+
+    #[test]
+    fn single_request_completes_end_to_end() {
+        let mut s = ServingSim::new(small_cfg(4, 32));
+        let id = s.submit_at(0, ReqClass::Normal, 2_000, 8);
+        s.run_secs(30.0);
+        let o = s.outcome(id).unwrap();
+        assert!(o.ttft_ns.is_some(), "first token produced");
+        assert!(o.e2e_ns.is_some(), "finished");
+        assert_eq!(o.generated_tokens, 8);
+        assert!(o.tokenize_latency_ns.unwrap() > 0);
+        let ttft = o.ttft_secs().unwrap();
+        assert!(ttft > 0.0 && ttft < 10.0, "ttft={ttft}");
+    }
+
+    #[test]
+    fn ttft_grows_with_prompt_length() {
+        let ttft_of = |tokens: u64| {
+            let mut s = ServingSim::new(small_cfg(4, 32));
+            let id = s.submit_at(0, ReqClass::Normal, tokens, 4);
+            s.run_secs(120.0);
+            s.outcome(id).unwrap().ttft_secs().expect("finished")
+        };
+        let short = ttft_of(2_000);
+        let long = ttft_of(40_000);
+        assert!(long > 3.0 * short, "short={short:.3} long={long:.3}");
+    }
+
+    #[test]
+    fn concurrent_requests_batch_and_finish() {
+        let mut s = ServingSim::new(small_cfg(4, 32));
+        let ids: Vec<_> = (0..6)
+            .map(|i| s.submit_at(i * 1_000_000, ReqClass::Normal, 1_000, 4))
+            .collect();
+        s.run_secs(60.0);
+        for id in ids {
+            let o = s.outcome(id).unwrap();
+            assert!(o.e2e_ns.is_some(), "req {} unfinished", o.id);
+        }
+        assert!(s.steps_completed() > 0);
+    }
+
+    #[test]
+    fn fewer_cores_inflate_ttft_under_load() {
+        // The paper's core claim, end to end: same workload, scarce
+        // cores → much worse victim TTFT.
+        let run = |cores: usize| {
+            let mut s = ServingSim::new(small_cfg(4, cores));
+            // attackers at 8 rps, 50k-token identical prompts: demand =
+            // 8 × 50k × 15 µs = 6 core-s/s of tokenization
+            for i in 0..64u64 {
+                s.submit_with_seed(i * 125_000_000, ReqClass::Attacker, 50_000, 4, 0xA77AC);
+            }
+            let victim = s.submit_at(5_000_000_000, ReqClass::Victim, 2_800, 4);
+            s.run_secs(400.0);
+            s.outcome(victim)
+                .unwrap()
+                .ttft_secs()
+                .unwrap_or(f64::INFINITY)
+        };
+        let scarce = run(5);
+        let abundant = run(32);
+        assert!(
+            scarce > 1.3 * abundant,
+            "scarce={scarce:.2}s abundant={abundant:.2}s"
+        );
+    }
+
+    #[test]
+    fn gpu_utilization_present_under_load() {
+        let mut s = ServingSim::new(small_cfg(4, 32));
+        for i in 0..4 {
+            s.submit_at(i * 10_000_000, ReqClass::Normal, 20_000, 4);
+        }
+        s.run_secs(60.0);
+        let gpu = s.gpu_utilization();
+        assert!(!gpu.is_empty());
+        let peak = gpu.iter().cloned().fold(0.0, f64::max);
+        assert!(peak > 0.1, "peak gpu util {peak}");
+        let cpu = s.cpu_utilization();
+        assert!(!cpu.is_empty());
+    }
+
+    #[test]
+    fn deterministic_outcomes() {
+        let run = || {
+            let mut s = ServingSim::new(small_cfg(4, 8));
+            for i in 0..5 {
+                s.submit_at(i * 50_000_000, ReqClass::Normal, 5_000, 4);
+            }
+            s.run_secs(60.0);
+            s.outcomes()
+                .iter()
+                .map(|o| o.ttft_ns)
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+}

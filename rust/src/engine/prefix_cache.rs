@@ -1,0 +1,137 @@
+//! Block-hash prefix cache (vLLM's automatic prefix caching, on by
+//! default in the stack the paper evaluates, §III).
+//!
+//! Prompts are hashed in page-sized chunks; a new request skips prefill
+//! compute for its longest cached prefix. The simulator identifies a
+//! prompt by a content seed: two requests share cache entries iff their
+//! seeds match for a prefix of pages (the workload generator gives
+//! attackers distinct seeds, so — as in the paper — attacker floods get
+//! no relief from prefix caching).
+
+use std::collections::HashMap;
+
+#[derive(Debug, Clone)]
+pub struct PrefixCache {
+    page_tokens: u64,
+    capacity_pages: usize,
+    /// (content_seed, page_index) → LRU tick.
+    entries: HashMap<(u64, u64), u64>,
+    tick: u64,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl PrefixCache {
+    pub fn new(page_tokens: u64, capacity_pages: usize) -> PrefixCache {
+        assert!(page_tokens > 0);
+        PrefixCache {
+            page_tokens,
+            capacity_pages,
+            entries: HashMap::new(),
+            tick: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Longest cached prefix (in tokens) for a prompt of `prompt_tokens`
+    /// identified by `content_seed`, inserting the remaining pages.
+    /// Returns tokens of prefill compute that can be skipped.
+    pub fn lookup_and_insert(&mut self, content_seed: u64, prompt_tokens: u64) -> u64 {
+        let full_pages = prompt_tokens / self.page_tokens; // only full pages cacheable
+        let mut cached_pages = 0;
+        for page in 0..full_pages {
+            self.tick += 1;
+            let key = (content_seed, page);
+            if cached_pages == page {
+                // still extending the contiguous cached prefix
+                if let Some(t) = self.entries.get_mut(&key) {
+                    *t = self.tick;
+                    cached_pages += 1;
+                    self.hits += 1;
+                    continue;
+                }
+                self.misses += 1;
+            }
+            self.entries.insert(key, self.tick);
+        }
+        self.evict_if_needed();
+        cached_pages * self.page_tokens
+    }
+
+    fn evict_if_needed(&mut self) {
+        while self.entries.len() > self.capacity_pages {
+            // evict the least-recently-used entry
+            let oldest = self
+                .entries
+                .iter()
+                .min_by_key(|(_, &t)| t)
+                .map(|(k, _)| *k)
+                .unwrap();
+            self.entries.remove(&oldest);
+        }
+    }
+
+    pub fn len_pages(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        if self.hits + self.misses == 0 {
+            0.0
+        } else {
+            self.hits as f64 / (self.hits + self.misses) as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_request_misses_second_hits() {
+        let mut pc = PrefixCache::new(16, 1_000);
+        let skipped = pc.lookup_and_insert(7, 160);
+        assert_eq!(skipped, 0);
+        let skipped = pc.lookup_and_insert(7, 160);
+        assert_eq!(skipped, 160); // all 10 pages cached
+    }
+
+    #[test]
+    fn different_seeds_do_not_share() {
+        let mut pc = PrefixCache::new(16, 1_000);
+        pc.lookup_and_insert(1, 160);
+        let skipped = pc.lookup_and_insert(2, 160);
+        assert_eq!(skipped, 0);
+    }
+
+    #[test]
+    fn partial_page_not_cached() {
+        let mut pc = PrefixCache::new(16, 1_000);
+        pc.lookup_and_insert(3, 24); // 1 full page + 8 tokens
+        let skipped = pc.lookup_and_insert(3, 24);
+        assert_eq!(skipped, 16);
+    }
+
+    #[test]
+    fn eviction_respects_capacity() {
+        let mut pc = PrefixCache::new(16, 4);
+        pc.lookup_and_insert(1, 64); // 4 pages
+        pc.lookup_and_insert(2, 64); // 4 more → evict down to 4
+        assert!(pc.len_pages() <= 4);
+        // seed 1 was evicted
+        assert_eq!(pc.lookup_and_insert(1, 64), 0);
+    }
+
+    #[test]
+    fn longer_prompt_extends_prefix() {
+        let mut pc = PrefixCache::new(16, 1_000);
+        pc.lookup_and_insert(9, 64);
+        // same seed, longer prompt: first 4 pages hit, rest inserted
+        let skipped = pc.lookup_and_insert(9, 128);
+        assert_eq!(skipped, 64);
+        let skipped = pc.lookup_and_insert(9, 128);
+        assert_eq!(skipped, 128);
+    }
+}

@@ -1,0 +1,193 @@
+//! Request lifecycle: arrival → tokenization → queueing → prefill →
+//! decode → finish, with the timestamps the paper's metrics need (TTFT
+//! is measured from arrival and includes tokenization, §IV-B).
+
+pub type RequestId = u64;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReqClass {
+    /// The measured request in the attacker/victim methodology (§IV-B).
+    Victim,
+    /// Background load request.
+    Attacker,
+    /// Ordinary traffic (Track R, quickstart).
+    Normal,
+}
+
+impl ReqClass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReqClass::Victim => "victim",
+            ReqClass::Attacker => "attacker",
+            ReqClass::Normal => "normal",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReqPhase {
+    /// Waiting for tokenization to finish.
+    Tokenizing,
+    /// Tokenized, waiting for admission into the running batch.
+    Waiting,
+    /// Prefill in progress (chunked).
+    Prefill,
+    /// Autoregressive decoding.
+    Decode,
+    Finished,
+}
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    pub class: ReqClass,
+    pub arrival_ns: u64,
+    /// Prompt length in tokens (known after tokenization; the workload
+    /// generator supplies it up front and the tokenizer stage "discovers"
+    /// it by burning the corresponding CPU time).
+    pub prompt_tokens: u64,
+    pub max_new_tokens: u64,
+    /// Identifies the prompt *content* for prefix caching: requests with
+    /// equal seeds share cached prefix blocks. The paper's attacker
+    /// stream re-sends the same long prompt, so (with vLLM's default
+    /// prefix caching, §III) the GPU prefill cost is paid once while the
+    /// CPU tokenization cost is paid per request — that is what makes it
+    /// a *CPU*-load experiment.
+    pub content_seed: u64,
+
+    pub phase: ReqPhase,
+    /// Prefill progress: prompt tokens processed so far.
+    pub prefilled_tokens: u64,
+    /// Tokens that hit the prefix cache (skip prefill compute).
+    pub cached_tokens: u64,
+    pub generated_tokens: u64,
+
+    // --- timestamps (virtual ns; None = not reached) ---
+    pub tokenized_at: Option<u64>,
+    pub admitted_at: Option<u64>,
+    pub first_token_at: Option<u64>,
+    pub finished_at: Option<u64>,
+}
+
+impl Request {
+    pub fn new(
+        id: RequestId,
+        class: ReqClass,
+        arrival_ns: u64,
+        prompt_tokens: u64,
+        max_new_tokens: u64,
+    ) -> Request {
+        Request {
+            id,
+            class,
+            arrival_ns,
+            prompt_tokens,
+            max_new_tokens,
+            content_seed: id, // unique content by default
+            phase: ReqPhase::Tokenizing,
+            prefilled_tokens: 0,
+            cached_tokens: 0,
+            generated_tokens: 0,
+            tokenized_at: None,
+            admitted_at: None,
+            first_token_at: None,
+            finished_at: None,
+        }
+    }
+
+    /// Total context length right now (prompt processed + generated).
+    pub fn context_len(&self) -> u64 {
+        self.prefilled_tokens + self.generated_tokens
+    }
+
+    /// Prompt tokens still needing prefill compute.
+    pub fn prefill_remaining(&self) -> u64 {
+        self.prompt_tokens - self.prefilled_tokens
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.phase == ReqPhase::Finished
+    }
+}
+
+/// Final outcome for reporting.
+#[derive(Debug, Clone)]
+pub struct Outcome {
+    pub id: RequestId,
+    pub class: ReqClass,
+    pub arrival_ns: u64,
+    pub prompt_tokens: u64,
+    pub tokenize_latency_ns: Option<u64>,
+    /// Time to first token from arrival (the paper's TTFT).
+    pub ttft_ns: Option<u64>,
+    pub e2e_ns: Option<u64>,
+    pub generated_tokens: u64,
+}
+
+impl Outcome {
+    pub fn from_request(r: &Request) -> Outcome {
+        Outcome {
+            id: r.id,
+            class: r.class,
+            arrival_ns: r.arrival_ns,
+            prompt_tokens: r.prompt_tokens,
+            tokenize_latency_ns: r.tokenized_at.map(|t| t - r.arrival_ns),
+            ttft_ns: r.first_token_at.map(|t| t - r.arrival_ns),
+            e2e_ns: r.finished_at.map(|t| t - r.arrival_ns),
+            generated_tokens: r.generated_tokens,
+        }
+    }
+
+    pub fn ttft_secs(&self) -> Option<f64> {
+        self.ttft_ns.map(|ns| ns as f64 / 1e9)
+    }
+
+    /// Did the request fail to produce a first token within `timeout_s`?
+    pub fn timed_out(&self, timeout_s: f64) -> bool {
+        match self.ttft_ns {
+            None => true,
+            Some(ns) => ns as f64 / 1e9 > timeout_s,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_accessors() {
+        let mut r = Request::new(1, ReqClass::Victim, 1_000, 100, 16);
+        assert_eq!(r.prefill_remaining(), 100);
+        r.prefilled_tokens = 60;
+        assert_eq!(r.prefill_remaining(), 40);
+        r.generated_tokens = 5;
+        assert_eq!(r.context_len(), 65);
+        assert!(!r.is_done());
+        r.phase = ReqPhase::Finished;
+        assert!(r.is_done());
+    }
+
+    #[test]
+    fn outcome_latencies() {
+        let mut r = Request::new(2, ReqClass::Victim, 1_000_000_000, 100, 16);
+        r.tokenized_at = Some(1_500_000_000);
+        r.first_token_at = Some(3_000_000_000);
+        r.finished_at = Some(4_000_000_000);
+        r.generated_tokens = 16;
+        let o = Outcome::from_request(&r);
+        assert_eq!(o.tokenize_latency_ns, Some(500_000_000));
+        assert_eq!(o.ttft_ns, Some(2_000_000_000));
+        assert_eq!(o.ttft_secs(), Some(2.0));
+        assert!(!o.timed_out(200.0));
+        assert!(o.timed_out(1.0));
+    }
+
+    #[test]
+    fn unfinished_request_times_out() {
+        let r = Request::new(3, ReqClass::Victim, 0, 100, 16);
+        let o = Outcome::from_request(&r);
+        assert!(o.timed_out(200.0));
+        assert_eq!(o.ttft_ns, None);
+    }
+}

@@ -1,0 +1,338 @@
+//! Continuous-batching scheduler with chunked prefill (vLLM V1
+//! semantics, §III): every engine step builds a batch mixing one decode
+//! token per running request with prefill chunks drawn from a shared
+//! token budget; waiting requests are admitted FCFS when the batch and
+//! the KV cache have room.
+
+use super::kv_cache::KvCache;
+use super::prefix_cache::PrefixCache;
+use super::request::{ReqPhase, Request, RequestId};
+use crate::config::ServeConfig;
+use std::collections::{HashMap, VecDeque};
+
+/// One engine step's worth of GPU work, broadcast to all TP workers.
+#[derive(Debug, Clone, Default)]
+pub struct StepPlan {
+    pub seq: u64,
+    /// (request, new prefill tokens, context length after this chunk).
+    pub prefill: Vec<(RequestId, u64, u64)>,
+    /// Requests decoding one token this step.
+    pub decode: Vec<RequestId>,
+    /// Mean context length of decode requests (for the timing model).
+    pub decode_mean_ctx: u64,
+    /// Fleet collective id for this step's tensor-parallel allreduces.
+    pub collective_id: u64,
+}
+
+impl StepPlan {
+    pub fn is_empty(&self) -> bool {
+        self.prefill.is_empty() && self.decode.is_empty()
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.prefill.len() + self.decode.len()
+    }
+
+    pub fn prefill_tokens(&self) -> u64 {
+        self.prefill.iter().map(|(_, n, _)| n).sum()
+    }
+}
+
+/// Scheduler-owned request state.
+#[derive(Debug, Default)]
+pub struct SchedState {
+    pub requests: HashMap<RequestId, Request>,
+    pub waiting: VecDeque<RequestId>,
+    /// Requests admitted (prefill or decode phases).
+    pub running: Vec<RequestId>,
+}
+
+impl SchedState {
+    pub fn new() -> SchedState {
+        SchedState::default()
+    }
+
+    /// Enqueue a tokenized request (moves phase → Waiting).
+    pub fn enqueue(&mut self, mut request: Request) {
+        request.phase = ReqPhase::Waiting;
+        self.waiting.push_back(request.id);
+        self.requests.insert(request.id, request);
+    }
+
+    pub fn n_waiting(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn n_running(&self) -> usize {
+        self.running.len()
+    }
+
+    pub fn get(&self, id: RequestId) -> Option<&Request> {
+        self.requests.get(&id)
+    }
+}
+
+/// Build the next step plan; mutates request phases and the KV cache
+/// (admission reserves pages; prefix-cache lookups happen at admission,
+/// as in vLLM). Returns None if there is nothing to do.
+pub fn schedule(
+    state: &mut SchedState,
+    kv: &mut KvCache,
+    prefix: Option<&mut PrefixCache>,
+    cfg: &ServeConfig,
+    now_ns: u64,
+) -> Option<StepPlan> {
+    let mut plan = StepPlan::default();
+    let mut budget = cfg.prefill_chunk_tokens as u64;
+
+    // 1. decode: one token per running decode-phase request (each decode
+    //    token counts against the step token budget, vLLM-style).
+    let mut ctx_sum = 0u64;
+    for &id in &state.running {
+        let r = &state.requests[&id];
+        if r.phase == ReqPhase::Decode && budget > 0 {
+            plan.decode.push(id);
+            ctx_sum += r.context_len();
+            budget -= 1;
+        }
+    }
+    if !plan.decode.is_empty() {
+        plan.decode_mean_ctx = ctx_sum / plan.decode.len() as u64;
+    }
+
+    // 2. ongoing prefills: give each a chunk from the remaining budget.
+    for &id in &state.running {
+        if budget == 0 {
+            break;
+        }
+        let r = state.requests.get_mut(&id).unwrap();
+        if r.phase == ReqPhase::Prefill {
+            let chunk = r.prefill_remaining().min(budget);
+            if chunk > 0 {
+                budget -= chunk;
+                plan.prefill.push((id, chunk, r.prefilled_tokens + chunk));
+            }
+        }
+    }
+
+    // 3. admit waiting requests FCFS while there is batch, KV, and
+    //    budget headroom.
+    let mut prefix = prefix;
+    while let Some(&id) = state.waiting.front() {
+        if plan.batch_size() >= cfg.max_batch_size || budget == 0 {
+            break;
+        }
+        let r = state.requests.get_mut(&id).unwrap();
+        // Prefix-cache probe first: cached blocks are shared
+        // (ref-counted in vLLM), so they don't count against this
+        // request's new-page reservation.
+        let cached = match prefix.as_deref_mut() {
+            Some(pc) => {
+                let c = pc.lookup_and_insert(r.content_seed, r.prompt_tokens);
+                // never skip the *entire* prompt (the last token must be
+                // computed to produce logits), mirroring vLLM
+                c.min(r.prompt_tokens.saturating_sub(1))
+            }
+            None => 0,
+        };
+        let new_tokens = r.prompt_tokens - cached + r.max_new_tokens;
+        if !kv.grow_to(id, new_tokens) {
+            break; // KV full: head-of-line blocking, queue grows
+        }
+        state.waiting.pop_front();
+        r.phase = ReqPhase::Prefill;
+        r.admitted_at = Some(now_ns);
+        r.cached_tokens = cached;
+        r.prefilled_tokens = cached;
+        let chunk = r.prefill_remaining().min(budget);
+        debug_assert!(chunk > 0);
+        budget -= chunk;
+        plan.prefill.push((id, chunk, r.prefilled_tokens + chunk));
+        state.running.push(id);
+    }
+
+    if plan.is_empty() {
+        None
+    } else {
+        Some(plan)
+    }
+}
+
+/// Apply step completion: advance prefill progress, emit decode tokens,
+/// transition phases, release finished requests' KV. Returns requests
+/// that produced their first token and requests that finished.
+pub fn complete_step(
+    state: &mut SchedState,
+    kv: &mut KvCache,
+    plan: &StepPlan,
+    now_ns: u64,
+) -> (Vec<RequestId>, Vec<RequestId>) {
+    let mut first_tokens = Vec::new();
+    let mut finished = Vec::new();
+
+    for &(id, chunk, _) in &plan.prefill {
+        let r = state.requests.get_mut(&id).unwrap();
+        r.prefilled_tokens += chunk;
+        debug_assert!(r.prefilled_tokens <= r.prompt_tokens);
+        if r.prefilled_tokens == r.prompt_tokens {
+            // prompt fully processed: this step produced the first token
+            r.generated_tokens = 1;
+            r.first_token_at = Some(now_ns);
+            first_tokens.push(id);
+            if r.generated_tokens >= r.max_new_tokens {
+                r.phase = ReqPhase::Finished;
+                r.finished_at = Some(now_ns);
+                finished.push(id);
+            } else {
+                r.phase = ReqPhase::Decode;
+            }
+        }
+    }
+
+    for &id in &plan.decode {
+        let r = state.requests.get_mut(&id).unwrap();
+        r.generated_tokens += 1;
+        if r.generated_tokens >= r.max_new_tokens {
+            r.phase = ReqPhase::Finished;
+            r.finished_at = Some(now_ns);
+            finished.push(id);
+        }
+    }
+
+    for &id in &finished {
+        kv.release(id);
+        state.running.retain(|&x| x != id);
+    }
+
+    (first_tokens, finished)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::request::ReqClass;
+
+    fn cfg() -> ServeConfig {
+        ServeConfig {
+            prefill_chunk_tokens: 100,
+            max_batch_size: 4,
+            kv_page_tokens: 16,
+            kv_pages_per_gpu: 1_000,
+            prefix_caching: false,
+            ..Default::default()
+        }
+    }
+
+    fn req(id: u64, prompt: u64, out: u64) -> Request {
+        Request::new(id, ReqClass::Normal, 0, prompt, out)
+    }
+
+    fn setup() -> (SchedState, KvCache) {
+        (SchedState::new(), KvCache::new(16, 1_000))
+    }
+
+    #[test]
+    fn admits_and_chunks_prefill() {
+        let (mut state, mut kv) = setup();
+        state.enqueue(req(1, 250, 4));
+        let cfg = cfg();
+        let plan = schedule(&mut state, &mut kv, None, &cfg, 0).unwrap();
+        assert_eq!(plan.prefill, vec![(1, 100, 100)]);
+        complete_step(&mut state, &mut kv, &plan, 10);
+        let plan = schedule(&mut state, &mut kv, None, &cfg, 20).unwrap();
+        assert_eq!(plan.prefill, vec![(1, 100, 200)]);
+        complete_step(&mut state, &mut kv, &plan, 30);
+        let plan = schedule(&mut state, &mut kv, None, &cfg, 40).unwrap();
+        assert_eq!(plan.prefill, vec![(1, 50, 250)]);
+        let (first, _) = complete_step(&mut state, &mut kv, &plan, 50);
+        assert_eq!(first, vec![1]);
+        assert_eq!(state.get(1).unwrap().first_token_at, Some(50));
+        assert_eq!(state.get(1).unwrap().phase, ReqPhase::Decode);
+    }
+
+    #[test]
+    fn decode_until_max_tokens_then_release() {
+        let (mut state, mut kv) = setup();
+        state.enqueue(req(1, 50, 3));
+        let cfg = cfg();
+        // prefill completes in one chunk, first token emitted
+        let plan = schedule(&mut state, &mut kv, None, &cfg, 0).unwrap();
+        complete_step(&mut state, &mut kv, &plan, 1);
+        // two more decode steps
+        for step in 0..2 {
+            let plan = schedule(&mut state, &mut kv, None, &cfg, step).unwrap();
+            assert_eq!(plan.decode, vec![1]);
+            complete_step(&mut state, &mut kv, &plan, step + 1);
+        }
+        assert!(state.get(1).unwrap().is_done());
+        assert_eq!(state.n_running(), 0);
+        assert_eq!(kv.free_pages(), 1_000, "KV released");
+        // nothing left to schedule
+        assert!(schedule(&mut state, &mut kv, None, &cfg, 99).is_none());
+    }
+
+    #[test]
+    fn mixes_decode_and_prefill_within_budget() {
+        let (mut state, mut kv) = setup();
+        let cfg = cfg();
+        state.enqueue(req(1, 50, 8));
+        let plan = schedule(&mut state, &mut kv, None, &cfg, 0).unwrap();
+        complete_step(&mut state, &mut kv, &plan, 1); // r1 → decode
+        state.enqueue(req(2, 500, 4));
+        let plan = schedule(&mut state, &mut kv, None, &cfg, 2).unwrap();
+        assert_eq!(plan.decode, vec![1]);
+        // budget 100 − 1 decode token = 99 for r2's prefill
+        assert_eq!(plan.prefill, vec![(2, 99, 99)]);
+    }
+
+    #[test]
+    fn batch_size_cap_respected() {
+        let (mut state, mut kv) = setup();
+        let cfg = cfg();
+        for id in 1..=8 {
+            state.enqueue(req(id, 10, 4));
+        }
+        let plan = schedule(&mut state, &mut kv, None, &cfg, 0).unwrap();
+        assert_eq!(plan.batch_size(), 4, "max_batch_size=4");
+        assert_eq!(state.n_waiting(), 4);
+    }
+
+    #[test]
+    fn kv_exhaustion_blocks_admission_fcfs() {
+        let mut state = SchedState::new();
+        let mut kv = KvCache::new(16, 10); // 160 tokens total
+        let cfg = cfg();
+        state.enqueue(req(1, 100, 4)); // 104 tokens → 7 pages
+        state.enqueue(req(2, 100, 4)); // would need 7 more → blocked
+        state.enqueue(req(3, 8, 2)); // small, but FCFS: must wait behind 2
+        let plan = schedule(&mut state, &mut kv, None, &cfg, 0).unwrap();
+        assert_eq!(plan.prefill.len(), 1);
+        assert_eq!(state.n_waiting(), 2, "head-of-line blocking");
+    }
+
+    #[test]
+    fn prefix_cache_skips_prefill_compute() {
+        let (mut state, mut kv) = setup();
+        let cfg = cfg();
+        let mut pc = PrefixCache::new(16, 10_000);
+        // Two requests with identical content seed (id is the seed in
+        // lookup; use same-id trick via separate states is awkward — use
+        // two caches' behavior instead):
+        state.enqueue(req(1, 96, 2));
+        let plan = schedule(&mut state, &mut kv, Some(&mut pc), &cfg, 0).unwrap();
+        complete_step(&mut state, &mut kv, &plan, 1);
+        // same "content" → warm cache for seed 1
+        let mut state2 = SchedState::new();
+        state2.enqueue(req(1, 96, 2));
+        let plan2 = schedule(&mut state2, &mut kv, Some(&mut pc), &cfg, 0).unwrap();
+        let (_, chunk, _) = plan2.prefill[0];
+        assert!(chunk < 96, "cached prefix skipped, chunk={chunk}");
+        assert!(chunk >= 1, "last token always computed");
+    }
+
+    #[test]
+    fn empty_state_schedules_nothing() {
+        let (mut state, mut kv) = setup();
+        assert!(schedule(&mut state, &mut kv, None, &cfg(), 0).is_none());
+    }
+}

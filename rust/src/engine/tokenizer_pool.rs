@@ -1,0 +1,258 @@
+//! API-server tokenizer pool on the simulator.
+//!
+//! Models the HF-tokenizers Rayon pool inside the API-server process
+//! (§II-A ①): a fixed set of tokenizer threads pulls chunk-sized jobs
+//! from a shared queue. A long prompt splits into chunks that can run in
+//! parallel; under concurrent requests the pool saturates and *every*
+//! thread competes with the engine's dispatch threads for cores — the
+//! paper's central contention mechanism.
+
+use crate::simcpu::script::{Instr, Script};
+use crate::simcpu::{GateId, Sim, TaskCtx};
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::rc::Rc;
+
+/// A tokenization chunk job.
+pub struct TokJob {
+    /// CPU nanoseconds this chunk costs.
+    pub cost_ns: u64,
+    /// Called (once) when the chunk completes; receives the ctx so it
+    /// can signal gates / send messages.
+    pub on_done: Box<dyn FnOnce(&mut TaskCtx)>,
+}
+
+struct PoolShared {
+    jobs: RefCell<VecDeque<TokJob>>,
+}
+
+/// Handle for submitting tokenization work.
+#[derive(Clone)]
+pub struct TokenizerPool {
+    shared: Rc<PoolShared>,
+    /// Counts jobs ever pushed (block target for workers).
+    job_gate: GateId,
+    pub n_threads: usize,
+}
+
+impl TokenizerPool {
+    /// Spawn `n_threads` tokenizer worker tasks into the sim.
+    pub fn spawn(sim: &mut Sim, n_threads: usize) -> TokenizerPool {
+        assert!(n_threads > 0);
+        let shared = Rc::new(PoolShared {
+            jobs: RefCell::new(VecDeque::new()),
+        });
+        let job_gate = sim.new_gate();
+        let pool = TokenizerPool {
+            shared,
+            job_gate,
+            n_threads,
+        };
+        for _ in 0..n_threads {
+            let pool = pool.clone();
+            let script = Script::new().then(move |_ctx| vec![worker_iter(pool, 0)]);
+            sim.spawn("tokenizer", script);
+        }
+        pool
+    }
+
+    /// Number of jobs queued but not yet picked up.
+    pub fn backlog(&self) -> usize {
+        self.shared.jobs.borrow().len()
+    }
+
+    /// Submit a job from inside a task (API-server intake).
+    pub fn submit(&self, ctx: &mut TaskCtx, job: TokJob) {
+        self.shared.jobs.borrow_mut().push_back(job);
+        ctx.signal(self.job_gate, 1);
+    }
+
+    /// Submit from a timed callback (workload generator).
+    pub fn submit_external(&self, sim: &mut Sim, job: TokJob) {
+        self.shared.jobs.borrow_mut().push_back(job);
+        sim.signal(self.job_gate, 1);
+    }
+}
+
+/// One worker-loop iteration: wait for the (consumed+1)-th job ever,
+/// pop it, burn its cost, run its completion, recurse.
+fn worker_iter(pool: TokenizerPool, consumed: u64) -> Instr {
+    Instr::call(move |_ctx| {
+        let gate = pool.job_gate;
+        let shared = Rc::clone(&pool.shared);
+        vec![
+            Instr::block(gate, consumed + 1),
+            Instr::call(move |_ctx| {
+                // The job might have been taken by a sibling that woke for
+                // a later count; pop whatever is available.
+                let job = shared.jobs.borrow_mut().pop_front();
+                match job {
+                    None => Vec::new(), // spurious; next iter waits further
+                    Some(job) => {
+                        let on_done = RefCell::new(Some(job.on_done));
+                        vec![
+                            Instr::compute(job.cost_ns),
+                            Instr::effect(move |ctx| {
+                                (on_done.take().expect("once"))(ctx)
+                            }),
+                        ]
+                    }
+                }
+            }),
+            worker_iter(pool, consumed + 1),
+        ]
+    })
+}
+
+/// Split a prompt's tokenization into chunk jobs. Returns (n_chunks,
+/// per-chunk cost); the caller wires the `on_done`s.
+pub fn chunk_costs(prompt_tokens: u64, s_per_token: f64, chunk_tokens: u64) -> Vec<u64> {
+    assert!(chunk_tokens > 0);
+    let mut out = Vec::new();
+    let mut left = prompt_tokens;
+    while left > 0 {
+        let n = left.min(chunk_tokens);
+        out.push((n as f64 * s_per_token * 1e9) as u64);
+        left -= n;
+    }
+    if out.is_empty() {
+        out.push(0); // empty prompt still passes through the pool once
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simcpu::SimParams;
+
+    fn sim(cores: usize) -> Sim {
+        Sim::new(SimParams {
+            cores,
+            context_switch_ns: 0,
+            timeslice_ns: 1_000_000,
+            poll_quantum_ns: 1_000,
+            trace_bucket_ns: None,
+        })
+    }
+
+    #[test]
+    fn jobs_run_and_complete() {
+        let mut sim = sim(4);
+        let pool = TokenizerPool::spawn(&mut sim, 2);
+        let done = Rc::new(RefCell::new(Vec::new()));
+        for i in 0..5u32 {
+            let done = Rc::clone(&done);
+            pool.submit_external(
+                &mut sim,
+                TokJob {
+                    cost_ns: 1_000_000,
+                    on_done: Box::new(move |ctx| {
+                        done.borrow_mut().push((i, ctx.now_ns()));
+                    }),
+                },
+            );
+        }
+        sim.run_until(1_000_000_000);
+        assert_eq!(done.borrow().len(), 5);
+        // 5 × 1 ms jobs on 2 threads → makespan ≈ 3 ms
+        let last = done.borrow().iter().map(|&(_, t)| t).max().unwrap();
+        assert!((2_900_000..3_500_000).contains(&last), "makespan {last}");
+    }
+
+    #[test]
+    fn parallelism_bounded_by_threads_not_cores() {
+        let mut sim = sim(8);
+        let pool = TokenizerPool::spawn(&mut sim, 1); // single thread
+        let done = Rc::new(RefCell::new(Vec::new()));
+        for _ in 0..4 {
+            let done = Rc::clone(&done);
+            pool.submit_external(
+                &mut sim,
+                TokJob {
+                    cost_ns: 2_000_000,
+                    on_done: Box::new(move |ctx| done.borrow_mut().push(ctx.now_ns())),
+                },
+            );
+        }
+        sim.run_until(1_000_000_000);
+        let last = *done.borrow().iter().max().unwrap();
+        assert!(last >= 8_000_000, "serialized on one thread: {last}");
+    }
+
+    #[test]
+    fn pool_contends_with_other_tasks_for_cores() {
+        // 2 cores, 4 tokenizer threads with heavy jobs + 1 "engine" task:
+        // the engine's 1 ms of work takes much longer than 1 ms.
+        let mut sim = sim(2);
+        let pool = TokenizerPool::spawn(&mut sim, 4);
+        for _ in 0..4 {
+            pool.submit_external(
+                &mut sim,
+                TokJob {
+                    cost_ns: 50_000_000,
+                    on_done: Box::new(|_| {}),
+                },
+            );
+        }
+        let engine_done = Rc::new(RefCell::new(0u64));
+        {
+            let engine_done = Rc::clone(&engine_done);
+            sim.spawn(
+                "engine",
+                Script::new()
+                    .compute(1_000_000)
+                    .effect(move |ctx| *engine_done.borrow_mut() = ctx.now_ns()),
+            );
+        }
+        sim.run_until(1_000_000_000);
+        let t = *engine_done.borrow();
+        assert!(
+            t > 2_000_000,
+            "engine work delayed by tokenizer contention: {t}"
+        );
+    }
+
+    #[test]
+    fn chunking_math() {
+        let costs = chunk_costs(20_000, 1e-6, 8_192);
+        assert_eq!(costs.len(), 3);
+        assert_eq!(costs[0], 8_192_000); // 8192 tokens × 1 µs
+        assert_eq!(costs[2], (20_000 - 16_384) * 1_000);
+        assert_eq!(chunk_costs(0, 1e-6, 8_192), vec![0]);
+    }
+
+    #[test]
+    fn long_prompt_parallelizes_across_threads() {
+        // one 4-chunk prompt on a 4-thread pool with 4 cores: ~1 chunk
+        // time, not 4.
+        let run = |threads: usize| {
+            let mut sim = sim(4);
+            let pool = TokenizerPool::spawn(&mut sim, threads);
+            let done = Rc::new(RefCell::new(0u64));
+            let remaining = Rc::new(RefCell::new(4u32));
+            for _ in 0..4 {
+                let done = Rc::clone(&done);
+                let remaining = Rc::clone(&remaining);
+                pool.submit_external(
+                    &mut sim,
+                    TokJob {
+                        cost_ns: 5_000_000,
+                        on_done: Box::new(move |ctx| {
+                            *remaining.borrow_mut() -= 1;
+                            if *remaining.borrow() == 0 {
+                                *done.borrow_mut() = ctx.now_ns();
+                            }
+                        }),
+                    },
+                );
+            }
+            sim.run_until(1_000_000_000);
+            let t = *done.borrow();
+            t
+        };
+        let serial = run(1);
+        let parallel = run(4);
+        assert!(parallel * 3 < serial, "serial={serial} parallel={parallel}");
+    }
+}

@@ -1,0 +1,52 @@
+//! §VI-A cost analysis: GPU vs CPU unit pricing, marginal cost of extra
+//! cores, and throughput-per-dollar arithmetic.
+
+use crate::cost::{
+    aws_gpu_instances, gpu_cpu_cost_ratio, marginal_cpu_cost_fraction, per_gpu_usd,
+    throughput_per_dollar_gain, VCPU_USD_PER_HOUR_HIGH, VCPU_USD_PER_HOUR_LOW,
+};
+use crate::report::Table;
+use crate::util::cli::Args;
+
+pub fn run(_args: &Args) {
+    let mut t = Table::new(&[
+        "instance", "GPUs", "model", "vCPUs", "$/hour", "$/GPU-hour", "GPU:CPU cost ratio",
+    ])
+    .with_title("§VI-A: cloud GPU instance pricing (AWS on-demand)");
+    for inst in aws_gpu_instances() {
+        let lo = gpu_cpu_cost_ratio(&inst, VCPU_USD_PER_HOUR_HIGH);
+        let hi = gpu_cpu_cost_ratio(&inst, VCPU_USD_PER_HOUR_LOW);
+        t.row(vec![
+            inst.name.to_string(),
+            inst.gpus.to_string(),
+            inst.gpu_model.to_string(),
+            inst.vcpus.to_string(),
+            format!("{:.2}", inst.hourly_usd),
+            format!("{:.2}", per_gpu_usd(&inst)),
+            format!("{:.0}–{:.0}×", lo, hi),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "vCPU price band: ${:.4}–${:.4}/hour (paper: $21.73–$45.86/core-month)",
+        VCPU_USD_PER_HOUR_LOW, VCPU_USD_PER_HOUR_HIGH
+    );
+    let p5 = aws_gpu_instances()
+        .into_iter()
+        .find(|i| i.name == "p5.48xlarge")
+        .unwrap();
+    let frac = marginal_cpu_cost_fraction(&p5, 16);
+    println!(
+        "adding 16 vCPUs to p5.48xlarge: +{:.1}% cost (paper: ~1.5%)",
+        frac * 100.0
+    );
+    let mut t2 = Table::new(&["measured speedup", "throughput/$ gain"])
+        .with_title("Throughput per dollar from +16 vCPUs, by Fig-7 speedup");
+    for sp in [1.36, 2.0, 3.0, 5.40] {
+        t2.row(vec![
+            format!("{sp:.2}×"),
+            format!("{:.2}×", throughput_per_dollar_gain(&p5, 16, sp)),
+        ]);
+    }
+    print!("{}", t2.render());
+}

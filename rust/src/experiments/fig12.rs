@@ -1,0 +1,216 @@
+//! Figure 12: CPU oversubscription causing busy-waiting GPUs in a
+//! torch.distributed-style collective microbenchmark (§V-A).
+//!
+//! One host process per GPU issues [compute kernel → allreduce] in a
+//! loop. With fewer cores than launch threads, kernel launches execute
+//! sequentially; because the allreduce has barrier semantics, every
+//! rank's GPU busy-waits until the *last* rank's CPU gets scheduled —
+//! a 1 ms OS delay on one core becomes an N-rank stall.
+
+use super::out_dir;
+use crate::config::SystemSpec;
+use crate::gpu::{self, Fleet, Kernel, KernelKind};
+use crate::report::{self, Table};
+use crate::simcpu::script::{Instr, Script};
+use crate::simcpu::{Sim, SimParams};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use std::rc::Rc;
+
+pub struct MicrobenchResult {
+    pub cores: usize,
+    pub n_gpus: usize,
+    pub makespan_s: f64,
+    pub gpu_busy_frac: f64,
+    pub gpu_syncwait_frac: f64,
+    pub ideal_s: f64,
+}
+
+/// Run `iters` iterations of [launch, compute kernel, allreduce] on
+/// `n_gpus` ranks with `cores` CPU cores.
+pub fn run_microbench(
+    sys: &SystemSpec,
+    n_gpus: usize,
+    cores: usize,
+    iters: usize,
+    kernel_ms: f64,
+    comm_ms: f64,
+) -> MicrobenchResult {
+    run_microbench_with_hogs(sys, n_gpus, cores, iters, kernel_ms, comm_ms, 0)
+}
+
+/// Like [`run_microbench`] but with `n_hogs` additional host-side
+/// processes contending for the cores (the paper's Figure-12 setup has
+/// "one process per GPU plus additional host-side processes").
+pub fn run_microbench_with_hogs(
+    sys: &SystemSpec,
+    n_gpus: usize,
+    cores: usize,
+    iters: usize,
+    kernel_ms: f64,
+    comm_ms: f64,
+    n_hogs: usize,
+) -> MicrobenchResult {
+    let mut sim = Sim::new(SimParams {
+        cores,
+        context_switch_ns: (sys.context_switch_s * 1e9) as u64,
+        timeslice_ns: (sys.timeslice_s * 1e9) as u64,
+        poll_quantum_ns: 1_000,
+        trace_bucket_ns: None,
+    });
+    let fleet = Fleet::new(n_gpus, None);
+    // Pre-allocate one collective per iteration.
+    let collectives: Vec<u64> = (0..iters)
+        .map(|_| fleet.borrow_mut().new_collective())
+        .collect();
+    let collectives = Rc::new(collectives);
+    // Launch CPU cost per iteration: a small batch of kernel launches
+    // (e.g. 20 kernels) plus the collective's own launch.
+    let launch_ns = (sys.kernel_launch_cpu_s * 1e9) as u64 * 21;
+    let kernel_ns = (kernel_ms * 1e6) as u64;
+    let comm_ns = (comm_ms * 1e6) as u64;
+
+    for _ in 0..n_hogs {
+        sim.spawn(
+            "host_proc",
+            Script::new().compute((iters as u64) * (kernel_ms * 1e6) as u64),
+        );
+    }
+    let finished_at = Rc::new(std::cell::RefCell::new(0u64));
+    for rank in 0..n_gpus {
+        let fleet = Rc::clone(&fleet);
+        let collectives = Rc::clone(&collectives);
+        let finished_at = Rc::clone(&finished_at);
+        let script = Script::new()
+            .repeat(iters, move |i, ctx| {
+            let fleet = Rc::clone(&fleet);
+            let coll = collectives[i];
+            let done = ctx.new_gate();
+            vec![
+                Instr::compute(launch_ns),
+                Instr::effect(move |ctx| {
+                    let t = ctx.now_ns();
+                    ctx.call_at(t, move |sim| {
+                        gpu::enqueue(
+                            &fleet,
+                            sim,
+                            rank,
+                            Kernel {
+                                kind: KernelKind::Compute,
+                                dur_ns: kernel_ns,
+                                done_gate: None,
+                            },
+                        );
+                        gpu::enqueue(
+                            &fleet,
+                            sim,
+                            rank,
+                            Kernel {
+                                kind: KernelKind::Collective { id: coll },
+                                dur_ns: comm_ns,
+                                done_gate: Some(done),
+                            },
+                        );
+                    });
+                }),
+                Instr::block(done, 1),
+            ]
+            })
+            .effect(move |ctx| {
+                let mut f = finished_at.borrow_mut();
+                *f = (*f).max(ctx.now_ns());
+            });
+        sim.spawn("rank", script);
+    }
+    sim.run_until(600_000_000_000); // hogs may outlive the ranks
+    // makespan = when the last rank finished, not hog runtime
+    let makespan_ns = *finished_at.borrow();
+    let makespan_s = makespan_ns as f64 / 1e9;
+    fleet.borrow_mut().flush(makespan_ns);
+    let f = fleet.borrow();
+    let total: u64 = (0..n_gpus).map(|r| f.busy_ns(r) + f.sync_wait_ns(r)).sum();
+    let busy: u64 = (0..n_gpus).map(|r| f.busy_ns(r)).sum();
+    let syncwait: u64 = (0..n_gpus).map(|r| f.sync_wait_ns(r)).sum();
+    let wall_total = (makespan_s * 1e9) as u64 * n_gpus as u64;
+    let _ = total;
+    MicrobenchResult {
+        cores,
+        n_gpus,
+        makespan_s,
+        gpu_busy_frac: busy as f64 / wall_total as f64,
+        gpu_syncwait_frac: syncwait as f64 / wall_total as f64,
+        ideal_s: iters as f64 * (kernel_ms + comm_ms) / 1e3,
+    }
+}
+
+pub fn run(args: &Args) {
+    let sys = SystemSpec::by_name(args.str_or("system", "h100")).unwrap();
+    let n_gpus = args.usize_or("gpus", 4);
+    let iters = args.usize_or("iters", if args.flag("quick") { 100 } else { 500 });
+    let kernel_ms = args.f64_or("kernel-ms", 1.0);
+    let comm_ms = args.f64_or("comm-ms", 0.3);
+    let core_list: Vec<usize> = args
+        .u64_list("cores")
+        .map(|v| v.into_iter().map(|c| c as usize).collect())
+        .unwrap_or_else(|| vec![1, 2, 4, 8]);
+
+    let mut t = Table::new(&[
+        "cores", "GPUs", "makespan (s)", "ideal (s)", "slowdown", "GPU busy", "GPU sync-wait",
+    ])
+    .with_title("Figure 12: collective microbenchmark under CPU oversubscription");
+    let mut data = Vec::new();
+    let n_hogs = args.usize_or("hogs", 2); // paper: extra host processes
+    for &cores in &core_list {
+        let r = run_microbench_with_hogs(&sys, n_gpus, cores, iters, kernel_ms, comm_ms, n_hogs);
+        t.row(vec![
+            cores.to_string(),
+            n_gpus.to_string(),
+            format!("{:.3}", r.makespan_s),
+            format!("{:.3}", r.ideal_s),
+            format!("{:.2}×", r.makespan_s / r.ideal_s),
+            format!("{:.0}%", r.gpu_busy_frac * 100.0),
+            format!("{:.0}%", r.gpu_syncwait_frac * 100.0),
+        ]);
+        let mut j = Json::obj();
+        j.set("cores", cores)
+            .set("makespan_s", r.makespan_s)
+            .set("ideal_s", r.ideal_s)
+            .set("gpu_busy_frac", r.gpu_busy_frac)
+            .set("gpu_syncwait_frac", r.gpu_syncwait_frac);
+        data.push(j);
+    }
+    print!("{}", t.render());
+    let dir = out_dir(args);
+    let path = report::write_json(&dir, "fig12", &Json::Arr(data)).expect("write fig12");
+    println!("data → {}", path.display());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oversubscription_stalls_collectives() {
+        let sys = SystemSpec::h100();
+        let scarce = run_microbench(&sys, 4, 1, 50, 1.0, 0.3);
+        let ample = run_microbench(&sys, 4, 8, 50, 1.0, 0.3);
+        // With one core for 4 launch threads, launches serialize and the
+        // barrier amplifies the delay.
+        assert!(
+            scarce.makespan_s > 1.1 * ample.makespan_s,
+            "scarce={:.3} ample={:.3}",
+            scarce.makespan_s,
+            ample.makespan_s
+        );
+        // ample case approaches ideal
+        assert!(ample.makespan_s < 1.3 * ample.ideal_s);
+    }
+
+    #[test]
+    fn sync_wait_grows_with_scarcity() {
+        let sys = SystemSpec::h100();
+        let scarce = run_microbench(&sys, 4, 1, 50, 1.0, 0.3);
+        let ample = run_microbench(&sys, 4, 8, 50, 1.0, 0.3);
+        assert!(scarce.gpu_syncwait_frac > ample.gpu_syncwait_frac);
+    }
+}

@@ -1,0 +1,71 @@
+//! Figures 3 & 4: weighted CDFs of CPU-to-GPU allocation ratios from the
+//! (synthesized) cluster salloc logs, with the paper's percentile
+//! markers.
+
+use super::out_dir;
+use crate::cluster::{analyze, generate_instructional, generate_research};
+use crate::report::{self, Table};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+pub fn run_fig3(args: &Args) {
+    let seed = args.u64_or("seed", 0xA110C);
+    let n = args.usize_or("records", if args.flag("quick") { 50_000 } else { 500_000 });
+    let records = generate_instructional(seed, n);
+    render("Figure 3: instructional cluster (no enforced CPU:GPU ratio)", "fig3", &records, args);
+}
+
+pub fn run_fig4(args: &Args) {
+    let seed = args.u64_or("seed", 0xE5EA);
+    let n = args.usize_or("records", if args.flag("quick") { 50_000 } else { 500_000 });
+    let records = generate_research(seed, n);
+    render("Figure 4: research cluster (enforced proportional allocation)", "fig4", &records, args);
+}
+
+fn render(title: &str, name: &str, records: &[crate::cluster::SallocRecord], args: &Args) {
+    let analysis = analyze(records);
+    let mut t = Table::new(&[
+        "GPU type", "jobs", "GPU hours", "P25", "P50", "P75", "frac < 4", "frac < 8",
+    ])
+    .with_title(title.to_string());
+    let mut data = Vec::new();
+    for (name_d, cdf) in &analysis.devices {
+        t.row(vec![
+            name_d.clone(),
+            cdf.n_jobs.to_string(),
+            format!("{:.0}", cdf.total_gpu_hours),
+            format!("{:.2}", cdf.pct(25.0)),
+            format!("{:.2}", cdf.pct(50.0)),
+            format!("{:.2}", cdf.pct(75.0)),
+            format!("{:.2}", cdf.cdf_at(3.99)),
+            format!("{:.2}", cdf.cdf_at(7.99)),
+        ]);
+        let mut j = Json::obj();
+        j.set("device", name_d.as_str())
+            .set("gpu_hours", cdf.total_gpu_hours)
+            .set("p25", cdf.pct(25.0))
+            .set("p50", cdf.pct(50.0))
+            .set("p75", cdf.pct(75.0));
+        let curve: Vec<Json> = cdf
+            .curve(64)
+            .into_iter()
+            .map(|(x, y)| {
+                let mut p = Json::obj();
+                p.set("ratio", x).set("cdf", y);
+                p
+            })
+            .collect();
+        j.set("curve", Json::Arr(curve));
+        data.push(j);
+    }
+    print!("{}", t.render());
+    println!(
+        "total: {} records, {:.0} GPU hours; fraction of GPU hours below ratio 8: {:.2}",
+        crate::util::fmt_count(analysis.n_records as u64),
+        analysis.total_gpu_hours,
+        analysis.overall_below(8.0)
+    );
+    let dir = out_dir(args);
+    let path = report::write_json(&dir, name, &Json::Arr(data)).expect("write json");
+    println!("data → {}", path.display());
+}

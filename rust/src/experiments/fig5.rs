@@ -1,0 +1,79 @@
+//! Figure 5: relative latency breakdown of tokenization vs TTFT across
+//! batch size × sequence length (Llama 3.1 8B on 4×H200, 16 cores).
+//!
+//! The paper's finding: CPU-side tokenization accounts for up to ~half
+//! of TTFT and the fraction does *not* shrink at long sequence lengths,
+//! because chunked prefill keeps prefill near-linear in SL. Also
+//! reproduces the §IV-A side note: at 5–8 cores tokenization latency
+//! rises ~5% and TTFT ~10% vs 16 cores.
+
+use super::out_dir;
+use crate::config::{ModelSpec, RunConfig, SystemSpec};
+use crate::report::{self, Table};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::workload::run_batch;
+
+pub fn run(args: &Args) {
+    let quick = args.flag("quick");
+    let system = SystemSpec::by_name(args.str_or("system", "h200")).unwrap();
+    let model = ModelSpec::by_name(args.str_or("model", "llama8b")).unwrap();
+    let n_gpus = args.usize_or("gpus", 4);
+    let batches: Vec<usize> = if quick { vec![1, 8] } else { vec![1, 4, 8, 16, 32] };
+    let sls: Vec<u64> = if quick {
+        vec![8_000, 64_000]
+    } else {
+        vec![1_000, 4_000, 16_000, 64_000, 128_000]
+    };
+    let core_list: Vec<usize> = args
+        .u64_list("cores")
+        .map(|v| v.into_iter().map(|c| c as usize).collect())
+        .unwrap_or_else(|| vec![16]);
+
+    let mut t = Table::new(&[
+        "cores", "batch", "SL", "tokenize (s)", "TTFT (s)", "tokenize/TTFT",
+    ])
+    .with_title("Figure 5: tokenization share of TTFT (Llama-3.1-8B, 4×H200)");
+    let mut data = Vec::new();
+    for &cores in &core_list {
+        for &batch in &batches {
+            for &sl in &sls {
+                let cfg = RunConfig::new(system.clone(), model.clone(), n_gpus, cores);
+                let outcomes = run_batch(cfg, batch, sl, 1, 3_000.0);
+                let (mut tok_sum, mut ttft_sum, mut n) = (0.0, 0.0, 0);
+                for o in &outcomes {
+                    if let (Some(tok), Some(ttft)) = (o.tokenize_latency_ns, o.ttft_ns) {
+                        tok_sum += tok as f64 / 1e9;
+                        ttft_sum += ttft as f64 / 1e9;
+                        n += 1;
+                    }
+                }
+                if n == 0 {
+                    continue;
+                }
+                let tok = tok_sum / n as f64;
+                let ttft = ttft_sum / n as f64;
+                t.row(vec![
+                    cores.to_string(),
+                    batch.to_string(),
+                    sl.to_string(),
+                    format!("{tok:.3}"),
+                    format!("{ttft:.3}"),
+                    format!("{:.1}%", 100.0 * tok / ttft),
+                ]);
+                let mut j = Json::obj();
+                j.set("cores", cores)
+                    .set("batch", batch)
+                    .set("sl", sl)
+                    .set("tokenize_s", tok)
+                    .set("ttft_s", ttft)
+                    .set("fraction", tok / ttft);
+                data.push(j);
+            }
+        }
+    }
+    print!("{}", t.render());
+    let dir = out_dir(args);
+    let path = report::write_json(&dir, "fig5", &Json::Arr(data)).expect("write fig5");
+    println!("data → {}", path.display());
+}

@@ -1,0 +1,324 @@
+//! Figures 7 & 9 + the headline band.
+//!
+//! Fig 7: victim TTFT with/without attacker load across attacker SL ×
+//! CPU cores × model × GPU count × RPS on the Blackwell system; red ×
+//! marks = timeouts; arrows = least-CPU → best-CPU speedups.
+//!
+//! Fig 9: heatmap of best CPU-abundant speedup vs the least-CPU case
+//! across all three Table I systems (∞ where the least-CPU cell timed
+//! out).
+//!
+//! Headline: the distribution of finite speedups should span roughly
+//! 1.36–5.40× with timeouts eliminated by CPU-abundant configs.
+
+use super::{out_dir, resolve_config};
+use crate::config::{ModelSpec, RunConfig, SystemSpec};
+use crate::report::{self, speedup_label, Table};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::workload::{run_attacker_victim, run_baseline, AvSpec};
+
+/// One grid cell result.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub system: String,
+    pub model: String,
+    pub n_gpus: usize,
+    pub cores: usize,
+    pub rps: f64,
+    pub attacker_sl: u64,
+    /// Mean victim TTFT (None = all victims timed out).
+    pub ttft_s: Option<f64>,
+    pub timeouts: usize,
+    pub baseline_s: Option<f64>,
+}
+
+pub fn paper_sls(quick: bool) -> Vec<u64> {
+    if quick {
+        vec![28_000, 114_000]
+    } else {
+        vec![1_800, 7_000, 28_000, 57_000, 114_000]
+    }
+}
+
+/// Run the Fig-7 grid for one (system, model, gpus, rps).
+pub fn run_grid(
+    system: &SystemSpec,
+    model: &ModelSpec,
+    n_gpus: usize,
+    rps: f64,
+    core_levels: &[usize],
+    sls: &[u64],
+    spec_base: &AvSpec,
+) -> Vec<Cell> {
+    let mut cells = Vec::new();
+    for &sl in sls {
+        for &cores in core_levels {
+            let cfg = RunConfig::new(system.clone(), model.clone(), n_gpus, cores);
+            let spec = AvSpec {
+                attacker_sl: sl,
+                rps,
+                ..spec_base.clone()
+            };
+            let baseline = run_baseline(cfg.clone(), &spec);
+            let r = run_attacker_victim(cfg, &spec);
+            let timeouts = r.victim_ttft_s.iter().filter(|t| t.is_none()).count();
+            cells.push(Cell {
+                system: system.name.clone(),
+                model: model.name.clone(),
+                n_gpus,
+                cores,
+                rps,
+                attacker_sl: sl,
+                ttft_s: r.mean_ttft_s(),
+                timeouts,
+                baseline_s: baseline,
+            });
+        }
+    }
+    cells
+}
+
+fn default_spec(quick: bool) -> AvSpec {
+    AvSpec {
+        attack_secs: if quick { 60.0 } else { 240.0 },
+        victim_start_secs: 10.0,
+        n_victims: if quick { 2 } else { 5 },
+        timeout_secs: if quick { 60.0 } else { 200.0 },
+        max_new_tokens: 16,
+        ..AvSpec::default()
+    }
+}
+
+fn render_cells(title: &str, cells: &[Cell]) -> Table {
+    let mut t = Table::new(&[
+        "system", "model", "GPUs", "RPS", "attacker SL", "cores", "baseline (s)", "TTFT (s)",
+        "timeouts",
+    ])
+    .with_title(title.to_string());
+    for c in cells {
+        t.row(vec![
+            c.system.clone(),
+            c.model.clone(),
+            c.n_gpus.to_string(),
+            format!("{:.0}", c.rps),
+            c.attacker_sl.to_string(),
+            c.cores.to_string(),
+            c.baseline_s.map(|s| format!("{s:.2}")).unwrap_or("-".into()),
+            c.ttft_s.map(|s| format!("{s:.2}")).unwrap_or("✗".into()),
+            c.timeouts.to_string(),
+        ]);
+    }
+    t
+}
+
+fn cells_to_json(cells: &[Cell]) -> Json {
+    Json::Arr(
+        cells
+            .iter()
+            .map(|c| {
+                let mut j = Json::obj();
+                j.set("system", c.system.as_str())
+                    .set("model", c.model.as_str())
+                    .set("gpus", c.n_gpus)
+                    .set("rps", c.rps)
+                    .set("attacker_sl", c.attacker_sl)
+                    .set("cores", c.cores)
+                    .set("ttft_s", c.ttft_s.map(Json::Num).unwrap_or(Json::Null))
+                    .set("timeouts", c.timeouts as u64)
+                    .set(
+                        "baseline_s",
+                        c.baseline_s.map(Json::Num).unwrap_or(Json::Null),
+                    );
+                j
+            })
+            .collect(),
+    )
+}
+
+/// Speedup of the best CPU-abundant level vs the least-CPU level for
+/// each (sl) group. ∞ when least-CPU timed out but an abundant level
+/// completed.
+pub fn speedups(cells: &[Cell], least_cores: usize) -> Vec<(u64, f64)> {
+    let mut out = Vec::new();
+    let mut sls: Vec<u64> = cells.iter().map(|c| c.attacker_sl).collect();
+    sls.sort_unstable();
+    sls.dedup();
+    for sl in sls {
+        let group: Vec<&Cell> = cells.iter().filter(|c| c.attacker_sl == sl).collect();
+        let least = group.iter().find(|c| c.cores == least_cores);
+        let best_abundant = group
+            .iter()
+            .filter(|c| c.cores != least_cores)
+            .filter_map(|c| c.ttft_s)
+            .fold(f64::INFINITY, f64::min);
+        if let Some(least) = least {
+            let speedup = match least.ttft_s {
+                None => {
+                    if best_abundant.is_finite() {
+                        f64::INFINITY
+                    } else {
+                        f64::NAN
+                    }
+                }
+                Some(t) => t / best_abundant,
+            };
+            out.push((sl, speedup));
+        }
+    }
+    out
+}
+
+pub fn run_fig7(args: &Args) {
+    let quick = args.flag("quick");
+    let base = resolve_config(args, "blackwell", 4);
+    let spec = default_spec(quick);
+    let sls = args
+        .u64_list("sls")
+        .unwrap_or_else(|| paper_sls(quick));
+    let gpus_list: Vec<usize> = if quick { vec![4] } else { vec![4, 8] };
+    let rps_list: Vec<f64> = if quick { vec![8.0] } else { vec![8.0, 16.0] };
+    let models: Vec<ModelSpec> = if quick {
+        vec![base.model.clone()]
+    } else {
+        vec![ModelSpec::llama31_8b(), ModelSpec::qwen25_14b()]
+    };
+
+    let mut all = Vec::new();
+    for model in &models {
+        for &n_gpus in &gpus_list {
+            let core_levels: Vec<usize> = args
+                .u64_list("cores")
+                .map(|v| v.into_iter().map(|x| x as usize).collect())
+                .unwrap_or_else(|| RunConfig::paper_core_levels(n_gpus));
+            for &rps in &rps_list {
+                let cells = run_grid(
+                    &base.system,
+                    model,
+                    n_gpus,
+                    rps,
+                    &core_levels,
+                    &sls,
+                    &spec,
+                );
+                all.extend(cells);
+            }
+        }
+    }
+    let t = render_cells(
+        "Figure 7: victim TTFT under CPU load (Blackwell system)",
+        &all,
+    );
+    print!("{}", t.render());
+    // per-SL speedup arrows (the red arrows in the figure)
+    for &n_gpus in &gpus_list {
+        let least = n_gpus + 1;
+        let subset: Vec<Cell> = all
+            .iter()
+            .filter(|c| c.n_gpus == n_gpus)
+            .cloned()
+            .collect();
+        for (sl, sp) in speedups(&subset, least) {
+            println!(
+                "  {} GPUs, SL {:>6}: least-CPU → best-CPU speedup {}",
+                n_gpus,
+                sl,
+                speedup_label(sp)
+            );
+        }
+    }
+    let dir = out_dir(args);
+    let path = report::write_json(&dir, "fig7", &cells_to_json(&all)).expect("write fig7");
+    println!("data → {}", path.display());
+}
+
+pub fn run_fig9(args: &Args) {
+    let quick = args.flag("quick");
+    let spec = default_spec(quick);
+    let sls = args.u64_list("sls").unwrap_or_else(|| paper_sls(quick));
+    let systems = if quick {
+        vec![SystemSpec::blackwell()]
+    } else {
+        SystemSpec::table1()
+    };
+    let models = if quick {
+        vec![ModelSpec::llama31_8b()]
+    } else {
+        vec![ModelSpec::llama31_8b(), ModelSpec::qwen25_14b()]
+    };
+    let gpus_list: Vec<usize> = if quick { vec![4] } else { vec![4, 8] };
+    let rps = args.f64_or("rps", 8.0);
+
+    let mut t = Table::new(&["system", "model", "GPUs", "attacker SL", "best speedup"])
+        .with_title("Figure 9: best CPU-abundant speedup vs least-CPU (∞ = least-CPU timeout)");
+    let mut data = Vec::new();
+    for system in &systems {
+        for model in &models {
+            for &n_gpus in &gpus_list {
+                let core_levels = RunConfig::paper_core_levels(n_gpus);
+                let cells =
+                    run_grid(system, model, n_gpus, rps, &core_levels, &sls, &spec);
+                for (sl, sp) in speedups(&cells, n_gpus + 1) {
+                    t.row(vec![
+                        system.name.clone(),
+                        model.name.clone(),
+                        n_gpus.to_string(),
+                        sl.to_string(),
+                        speedup_label(sp),
+                    ]);
+                    let mut j = Json::obj();
+                    j.set("system", system.name.as_str())
+                        .set("model", model.name.as_str())
+                        .set("gpus", n_gpus)
+                        .set("sl", sl)
+                        .set(
+                            "speedup",
+                            if sp.is_finite() { Json::Num(sp) } else { Json::Str("inf".into()) },
+                        );
+                    data.push(j);
+                }
+            }
+        }
+    }
+    print!("{}", t.render());
+    let dir = out_dir(args);
+    let path = report::write_json(&dir, "fig9", &Json::Arr(data)).expect("write fig9");
+    println!("data → {}", path.display());
+}
+
+pub fn run_headline(args: &Args) {
+    let quick = args.flag("quick");
+    let spec = default_spec(quick);
+    let sls = paper_sls(quick);
+    let systems = if quick {
+        vec![SystemSpec::blackwell()]
+    } else {
+        SystemSpec::table1()
+    };
+    let mut finite = Vec::new();
+    let mut infinities = 0;
+    for system in &systems {
+        let cells = run_grid(
+            system,
+            &ModelSpec::llama31_8b(),
+            4,
+            8.0,
+            &RunConfig::paper_core_levels(4),
+            &sls,
+            &spec,
+        );
+        for (_, sp) in speedups(&cells, 5) {
+            if sp.is_finite() {
+                finite.push(sp);
+            } else if sp.is_infinite() {
+                infinities += 1;
+            }
+        }
+    }
+    finite.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    println!("Headline reproduction (paper: TTFT improves 1.36–5.40×, timeouts eliminated):");
+    if let (Some(lo), Some(hi)) = (finite.first(), finite.last()) {
+        println!("  finite speedup band: {:.2}×–{:.2}× over {} cells", lo, hi, finite.len());
+    }
+    println!("  cells where least-CPU timed out but CPU-abundant completed: {infinities}");
+}

@@ -1,0 +1,73 @@
+//! Figure 8: TTFT of sequential victim requests under sustained attacker
+//! load (8 & 16 RPS, 114k-token attackers, TP=4 Llama on Blackwell).
+//! As attackers accumulate in the engine, each subsequent victim's TTFT
+//! grows; larger CPU allocations flatten the curve; ✗ = timeout.
+
+use super::out_dir;
+use crate::config::{ModelSpec, RunConfig, SystemSpec};
+use crate::report::{self, Table};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::workload::{run_attacker_victim, run_baseline, AvSpec};
+
+pub fn run(args: &Args) {
+    let quick = args.flag("quick");
+    let system = SystemSpec::by_name(args.str_or("system", "blackwell")).unwrap();
+    let model = ModelSpec::by_name(args.str_or("model", "llama8b")).unwrap();
+    let n_gpus = args.usize_or("gpus", 4);
+    let core_levels: Vec<usize> = args
+        .u64_list("cores")
+        .map(|v| v.into_iter().map(|c| c as usize).collect())
+        .unwrap_or_else(|| RunConfig::paper_core_levels(n_gpus));
+    let rps_list: Vec<f64> = if quick { vec![8.0] } else { vec![8.0, 16.0] };
+    let n_victims = if quick { 3 } else { 5 };
+
+    let spec_base = AvSpec {
+        attacker_sl: args.u64_or("sl", 114_000),
+        n_victims,
+        attack_secs: if quick { 20.0 } else { 120.0 },
+        timeout_secs: if quick { 100.0 } else { 200.0 },
+        ..AvSpec::default()
+    };
+
+    let mut header = vec!["RPS".to_string(), "cores".to_string(), "baseline".to_string()];
+    for i in 0..n_victims {
+        header.push(format!("victim {}", i + 1));
+    }
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&header_refs)
+        .with_title("Figure 8: sequential victim TTFT (s) under attack, 114k attackers");
+    let mut data = Vec::new();
+    for &rps in &rps_list {
+        for &cores in &core_levels {
+            let cfg = RunConfig::new(system.clone(), model.clone(), n_gpus, cores);
+            let spec = AvSpec { rps, ..spec_base.clone() };
+            let baseline = run_baseline(cfg.clone(), &spec);
+            let r = run_attacker_victim(cfg, &spec);
+            let mut row = vec![
+                format!("{rps:.0}"),
+                cores.to_string(),
+                baseline.map(|s| format!("{s:.2}")).unwrap_or("-".into()),
+            ];
+            for v in &r.victim_ttft_s {
+                row.push(v.map(|s| format!("{s:.2}")).unwrap_or("✗".into()));
+            }
+            t.row(row);
+            let mut j = Json::obj();
+            j.set("rps", rps).set("cores", cores).set(
+                "victims",
+                Json::Arr(
+                    r.victim_ttft_s
+                        .iter()
+                        .map(|v| v.map(Json::Num).unwrap_or(Json::Null))
+                        .collect(),
+                ),
+            );
+            data.push(j);
+        }
+    }
+    print!("{}", t.render());
+    let dir = out_dir(args);
+    let path = report::write_json(&dir, "fig8", &Json::Arr(data)).expect("write fig8");
+    println!("data → {}", path.display());
+}

@@ -1,0 +1,180 @@
+//! Experiment harnesses: one module per paper figure (DESIGN.md
+//! experiment index). Each prints the figure's rows/series as an ASCII
+//! table and dumps CSV/JSON under `--out` (default `results/`).
+
+pub mod ablations;
+pub mod cost_exp;
+pub mod fig12;
+pub mod fig13;
+pub mod fig34;
+pub mod fig5;
+pub mod fig7;
+pub mod fig8;
+pub mod util_traces;
+
+use crate::config::{ModelSpec, RunConfig, SystemSpec};
+use crate::report::Table;
+use crate::util::cli::Args;
+
+/// Experiment registry: (id, description).
+pub fn registry() -> Vec<(&'static str, &'static str)> {
+    vec![
+        ("fig3", "CDF of CPU:GPU allocation ratios, instructional cluster (weighted by GPU hours)"),
+        ("fig4", "CDF of CPU:GPU allocation ratios, research cluster"),
+        ("fig5", "tokenization vs TTFT latency breakdown across batch × sequence length"),
+        ("fig7", "victim TTFT under attacker load: SL × cores × model × GPUs × RPS"),
+        ("fig8", "sequential victim TTFT growth under sustained attack"),
+        ("fig9", "speedup heatmap: best CPU-abundant vs least-CPU, all systems"),
+        ("fig10", "CPU utilization traces across core allocations"),
+        ("fig11", "CPU vs GPU utilization correlation, 4-GPU setup"),
+        ("fig12", "kernel-launch serialization + NCCL straggler microbenchmark"),
+        ("fig13", "shm-broadcast dequeue latency under load (TP scaling)"),
+        ("cost", "§VI-A cloud pricing analysis"),
+        ("ablations", "design-choice ablations + §VI priority-scheduling mitigation"),
+        ("headline", "TTFT improvement band (1.36–5.40×) + timeout elimination"),
+    ]
+}
+
+pub fn list() {
+    let mut t = Table::new(&["id", "reproduces"]).align(0, crate::report::table::Align::Left)
+        .align(1, crate::report::table::Align::Left);
+    for (id, desc) in registry() {
+        t.row(vec![id.to_string(), desc.to_string()]);
+    }
+    print!("{}", t.render());
+}
+
+pub fn run(which: &str, args: &Args) {
+    match which {
+        "fig3" => fig34::run_fig3(args),
+        "fig4" => fig34::run_fig4(args),
+        "fig5" => fig5::run(args),
+        "fig7" => fig7::run_fig7(args),
+        "fig8" => fig8::run(args),
+        "fig9" => fig7::run_fig9(args),
+        "fig10" => util_traces::run_fig10(args),
+        "fig11" => util_traces::run_fig11(args),
+        "fig12" => fig12::run(args),
+        "fig13" => fig13::run(args),
+        "cost" => cost_exp::run(args),
+        "ablations" => ablations::run(args),
+        "headline" => fig7::run_headline(args),
+        "" => {
+            eprintln!("usage: cpuslow experiment <id>   (see `cpuslow list`)");
+            std::process::exit(2);
+        }
+        other => {
+            eprintln!("unknown experiment '{other}' — see `cpuslow list`");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Resolve the common --system/--model/--gpus/--cores options.
+pub fn resolve_config(args: &Args, default_system: &str, default_gpus: usize) -> RunConfig {
+    let system = SystemSpec::by_name(args.str_or("system", default_system))
+        .unwrap_or_else(|| panic!("unknown system"));
+    let model = ModelSpec::by_name(args.str_or("model", "llama8b"))
+        .unwrap_or_else(|| panic!("unknown model"));
+    let n_gpus = args.usize_or("gpus", default_gpus);
+    let cores = args.usize_or("cores-single", n_gpus + 1);
+    RunConfig::new(system, model, n_gpus, cores)
+}
+
+pub fn out_dir(args: &Args) -> String {
+    args.str_or("out", "results").to_string()
+}
+
+pub fn print_systems() {
+    let mut t = Table::new(&[
+        "System (GPU)",
+        "Architecture",
+        "CPU Model",
+        "#CPU Cores",
+        "#GPUs/Node",
+        "Interconnect",
+    ])
+    .align(0, crate::report::table::Align::Left)
+    .align(1, crate::report::table::Align::Left)
+    .align(2, crate::report::table::Align::Left)
+    .align(5, crate::report::table::Align::Left);
+    for s in SystemSpec::table1() {
+        let interconnect = format!(
+            "{} ({:.0} GB/s)",
+            s.interconnect.name(),
+            s.interconnect.bw_bytes_per_s() / 1e9
+        );
+        t.row(vec![
+            s.name.clone(),
+            s.gpu_arch.clone(),
+            s.cpu_model.clone(),
+            s.cpu_cores.to_string(),
+            s.gpus_per_node.to_string(),
+            interconnect,
+        ]);
+    }
+    println!("Table I: CPU-GPU heterogeneous system setups\n{}", t.render());
+}
+
+/// `cpuslow serve` — one simulated serving run with explicit knobs.
+pub fn serve_once(args: &Args) {
+    use crate::engine::{ReqClass, ServingSim};
+    let n_requests = args.usize_or("requests", 8);
+    let seq_len = args.u64_or("seq-len", 8_000);
+    let rps = args.f64_or("rps", 4.0);
+    let cfg = if let Some(path) = args.get("config") {
+        RunConfig::from_toml_file(std::path::Path::new(path)).expect("config file")
+    } else {
+        let system =
+            SystemSpec::by_name(args.str_or("system", "h100")).expect("unknown system");
+        let model = ModelSpec::by_name(args.str_or("model", "llama8b")).expect("unknown model");
+        let n_gpus = args.usize_or("gpus", 4);
+        let cores = args.usize_or("cores-single", 16);
+        RunConfig::new(system, model, n_gpus, cores)
+    };
+    let mut sim = ServingSim::new(cfg);
+    let interval = (1e9 / rps) as u64;
+    let ids: Vec<_> = (0..n_requests)
+        .map(|i| sim.submit_at(i as u64 * interval, ReqClass::Normal, seq_len, 32))
+        .collect();
+    sim.run_secs(args.f64_or("horizon", 300.0));
+    let mut t = Table::new(&["req", "prompt", "tokenize (s)", "TTFT (s)", "e2e (s)", "tokens"]);
+    for id in ids {
+        let o = sim.outcome(id).unwrap();
+        t.row(vec![
+            o.id.to_string(),
+            o.prompt_tokens.to_string(),
+            o.tokenize_latency_ns
+                .map(|n| format!("{:.3}", n as f64 / 1e9))
+                .unwrap_or_else(|| "-".into()),
+            o.ttft_secs().map(|s| format!("{s:.3}")).unwrap_or_else(|| "-".into()),
+            o.e2e_ns
+                .map(|n| format!("{:.3}", n as f64 / 1e9))
+                .unwrap_or_else(|| "-".into()),
+            o.generated_tokens.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("engine steps: {}", sim.steps_completed());
+}
+
+/// `cpuslow calibrate` — real tokenizer throughput on this host.
+pub fn calibrate_cmd(args: &Args) {
+    use crate::tokenizer::{corpus, parallel};
+    let bytes = args.usize_or("bytes", 2_000_000);
+    println!("training standard vocab (4k merges)...");
+    let vocab = corpus::standard_vocab();
+    let cal = parallel::calibrate(&vocab, bytes);
+    println!(
+        "rust BPE: {:.2} M tokens/s/core ({:.1} ns/token, {:.2} bytes/token, {} tokens)",
+        cal.tokens_per_sec() / 1e6,
+        cal.s_per_token() * 1e9,
+        cal.bytes_per_token(),
+        cal.tokens
+    );
+    println!(
+        "simulator models the vLLM API-server tokenize path at {:.0} µs/token \
+         (see SystemSpec::tokenize_s_per_token docs for the calibration rationale)",
+        SystemSpec::h100().tokenize_s_per_token * 1e6
+    );
+}

@@ -1,0 +1,166 @@
+//! Figures 10 & 11: CPU and GPU utilization traces during the
+//! attacker/victim workload across core allocations.
+//!
+//! Fig 10: with few cores the CPU pins at ~100% for long stretches
+//! (tokenize backlog); larger allocations show only short spikes.
+//! Fig 11: CPU saturation correlates with GPU *under*utilization — the
+//! control plane starves the data plane.
+
+use super::out_dir;
+use crate::config::{ModelSpec, RunConfig, SystemSpec};
+use crate::report::{self, sparkline, Table};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::workload::{run_attacker_victim, AvSpec};
+
+fn spec(quick: bool, rps: f64) -> AvSpec {
+    AvSpec {
+        attacker_sl: 114_000,
+        rps,
+        attack_secs: if quick { 15.0 } else { 60.0 },
+        n_victims: 1,
+        timeout_secs: if quick { 60.0 } else { 200.0 },
+        ..AvSpec::default()
+    }
+}
+
+pub fn run_fig10(args: &Args) {
+    let quick = args.flag("quick");
+    let system = SystemSpec::by_name(args.str_or("system", "blackwell")).unwrap();
+    let model = ModelSpec::by_name(args.str_or("model", "llama8b")).unwrap();
+    let gpus_list: Vec<usize> = if quick { vec![4] } else { vec![4, 8] };
+    let rps = args.f64_or("rps", 8.0);
+
+    let mut t = Table::new(&[
+        "GPUs", "cores", "mean CPU util", "secs ≥95% util", "longest ≥95% stretch (s)",
+    ])
+    .with_title("Figure 10: CPU utilization across core allocations (8 RPS, 114k tokens)");
+    let mut data = Vec::new();
+    for &n_gpus in &gpus_list {
+        for cores in RunConfig::paper_core_levels(n_gpus) {
+            let cfg = RunConfig::new(system.clone(), model.clone(), n_gpus, cores);
+            let r = run_attacker_victim(cfg, &spec(quick, rps));
+            let util = &r.cpu_util;
+            let bucket_s = 0.1;
+            let mean = util.iter().sum::<f64>() / util.len().max(1) as f64;
+            let sat_buckets = util.iter().filter(|&&u| u >= 0.95).count();
+            let longest = longest_run(util, 0.95) as f64 * bucket_s;
+            t.row(vec![
+                n_gpus.to_string(),
+                cores.to_string(),
+                format!("{:.0}%", mean * 100.0),
+                format!("{:.1}", sat_buckets as f64 * bucket_s),
+                format!("{longest:.1}"),
+            ]);
+            println!(
+                "  {n_gpus} GPUs, {cores:>2} cores: {}",
+                sparkline(&downsample(util, 60))
+            );
+            let mut j = Json::obj();
+            j.set("gpus", n_gpus).set("cores", cores).set(
+                "cpu_util",
+                Json::Arr(util.iter().map(|&u| Json::Num(u)).collect()),
+            );
+            data.push(j);
+        }
+    }
+    print!("{}", t.render());
+    let dir = out_dir(args);
+    let path = report::write_json(&dir, "fig10", &Json::Arr(data)).expect("write fig10");
+    println!("data → {}", path.display());
+}
+
+pub fn run_fig11(args: &Args) {
+    let quick = args.flag("quick");
+    let system = SystemSpec::by_name(args.str_or("system", "blackwell")).unwrap();
+    let model = ModelSpec::by_name(args.str_or("model", "llama8b")).unwrap();
+    let n_gpus = args.usize_or("gpus", 4);
+    let rps = args.f64_or("rps", 8.0);
+
+    let mut t = Table::new(&["cores", "mean CPU util", "mean GPU util", "GPU util while CPU ≥95%"])
+        .with_title("Figure 11: CPU saturation vs GPU utilization (4-GPU Llama)");
+    let mut data = Vec::new();
+    for cores in RunConfig::paper_core_levels(n_gpus) {
+        let cfg = RunConfig::new(system.clone(), model.clone(), n_gpus, cores);
+        let r = run_attacker_victim(cfg, &spec(quick, rps));
+        let n = r.cpu_util.len().min(r.gpu_util.len());
+        let cpu = &r.cpu_util[..n];
+        let gpu = &r.gpu_util[..n];
+        let mean_cpu = cpu.iter().sum::<f64>() / n.max(1) as f64;
+        let mean_gpu = gpu.iter().sum::<f64>() / n.max(1) as f64;
+        let (mut sat_gpu_sum, mut sat_n) = (0.0, 0);
+        for i in 0..n {
+            if cpu[i] >= 0.95 {
+                sat_gpu_sum += gpu[i];
+                sat_n += 1;
+            }
+        }
+        t.row(vec![
+            cores.to_string(),
+            format!("{:.0}%", mean_cpu * 100.0),
+            format!("{:.0}%", mean_gpu * 100.0),
+            if sat_n > 0 {
+                format!("{:.0}%", sat_gpu_sum / sat_n as f64 * 100.0)
+            } else {
+                "-".into()
+            },
+        ]);
+        println!("  cores {cores:>2} CPU {}", sparkline(&downsample(cpu, 60)));
+        println!("  cores {cores:>2} GPU {}", sparkline(&downsample(gpu, 60)));
+        let mut j = Json::obj();
+        j.set("cores", cores)
+            .set("cpu_util", Json::Arr(cpu.iter().map(|&u| Json::Num(u)).collect()))
+            .set("gpu_util", Json::Arr(gpu.iter().map(|&u| Json::Num(u)).collect()));
+        data.push(j);
+    }
+    print!("{}", t.render());
+    let dir = out_dir(args);
+    let path = report::write_json(&dir, "fig11", &Json::Arr(data)).expect("write fig11");
+    println!("data → {}", path.display());
+}
+
+fn longest_run(util: &[f64], threshold: f64) -> usize {
+    let mut best = 0;
+    let mut cur = 0;
+    for &u in util {
+        if u >= threshold {
+            cur += 1;
+            best = best.max(cur);
+        } else {
+            cur = 0;
+        }
+    }
+    best
+}
+
+fn downsample(v: &[f64], n: usize) -> Vec<f64> {
+    if v.len() <= n || n == 0 {
+        return v.to_vec();
+    }
+    let chunk = v.len() / n;
+    v.chunks(chunk.max(1))
+        .map(|c| c.iter().sum::<f64>() / c.len() as f64)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn longest_run_counts() {
+        assert_eq!(longest_run(&[1.0, 1.0, 0.5, 1.0], 0.95), 2);
+        assert_eq!(longest_run(&[], 0.95), 0);
+        assert_eq!(longest_run(&[0.1], 0.95), 0);
+    }
+
+    #[test]
+    fn downsample_preserves_mean_roughly() {
+        let v: Vec<f64> = (0..1000).map(|i| (i % 10) as f64).collect();
+        let d = downsample(&v, 50);
+        assert!(d.len() <= 60);
+        let mean_v = v.iter().sum::<f64>() / v.len() as f64;
+        let mean_d = d.iter().sum::<f64>() / d.len() as f64;
+        assert!((mean_v - mean_d).abs() < 0.5);
+    }
+}

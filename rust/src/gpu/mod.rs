@@ -1,0 +1,11 @@
+//! GPU substrate: roofline timing model and device/stream simulation.
+//!
+//! See DESIGN.md §Hardware substitutions — real GPUs are replaced by a
+//! deterministic device model whose kernel *durations* come from the
+//! roofline in [`timing`] and whose stream/collective *semantics* live
+//! in [`device`].
+
+pub mod device;
+pub mod timing;
+
+pub use device::{enqueue, Fleet, FleetRef, Kernel, KernelKind};

@@ -1,0 +1,211 @@
+//! GPU roofline timing model.
+//!
+//! The paper's bottlenecks are host-side; GPU compute only needs faithful
+//! *durations*. We model them with the standard roofline: prefill is
+//! compute-bound (FLOPs / sustained FLOP/s), decode is memory-bound
+//! (bytes touched / HBM bandwidth), both divided across tensor-parallel
+//! ranks. Chunked prefill (vLLM default, §III) processes long prompts in
+//! fixed-token chunks, which is why prefill scales near-linearly with
+//! sequence length (§IV-A) — the property that keeps tokenization a
+//! constant *fraction* of TTFT in Figure 5.
+
+use crate::config::{ModelSpec, SystemSpec};
+
+/// Nanoseconds for a prefill chunk of `chunk_tokens` new tokens whose
+/// attention context ends at `ctx_end` tokens, split over `n_gpus`.
+pub fn prefill_chunk_ns(
+    model: &ModelSpec,
+    sys: &SystemSpec,
+    n_gpus: usize,
+    chunk_tokens: u64,
+    ctx_end: u64,
+) -> u64 {
+    assert!(n_gpus > 0);
+    let flops = model.forward_flops(chunk_tokens, ctx_end);
+    let compute_s = flops / (sys.gpu_sustained_flops() * n_gpus as f64);
+    // weight reads overlap compute in prefill; include a bandwidth floor
+    let bytes = model.param_count() as f64 * model.dtype_bytes as f64 / n_gpus as f64;
+    let mem_s = bytes / sys.gpu_mem_bw;
+    (compute_s.max(mem_s) * 1e9) as u64
+}
+
+/// Total prefill compute time for a full prompt under chunked prefill.
+pub fn prefill_total_ns(
+    model: &ModelSpec,
+    sys: &SystemSpec,
+    n_gpus: usize,
+    prompt_tokens: u64,
+    chunk_tokens: u64,
+) -> u64 {
+    assert!(chunk_tokens > 0);
+    let mut total = 0u64;
+    let mut done = 0u64;
+    while done < prompt_tokens {
+        let chunk = chunk_tokens.min(prompt_tokens - done);
+        total += prefill_chunk_ns(model, sys, n_gpus, chunk, done + chunk);
+        done += chunk;
+    }
+    total
+}
+
+/// Nanoseconds for one decode step of a batch: memory-bound weight +
+/// KV-cache traffic, with a compute floor.
+pub fn decode_step_ns(
+    model: &ModelSpec,
+    sys: &SystemSpec,
+    n_gpus: usize,
+    batch: u64,
+    mean_ctx: u64,
+) -> u64 {
+    assert!(n_gpus > 0);
+    if batch == 0 {
+        return 0;
+    }
+    let bytes = model.decode_bytes(mean_ctx, batch) / n_gpus as f64;
+    let mem_s = bytes / sys.gpu_mem_bw;
+    let flops = model.forward_flops(1, mean_ctx) * batch as f64;
+    let compute_s = flops / (sys.gpu_sustained_flops() * n_gpus as f64);
+    (mem_s.max(compute_s) * 1e9) as u64
+}
+
+/// Per-layer tensor-parallel allreduce payload in bytes for `tokens`
+/// positions (hidden-state rows).
+pub fn allreduce_bytes(model: &ModelSpec, tokens: u64) -> u64 {
+    tokens * model.d_model as u64 * model.dtype_bytes as u64
+}
+
+/// Ring-allreduce duration over `n_gpus` ranks for `bytes` payload.
+/// Standard cost model: 2(N−1)/N · bytes / link_bw + 2(N−1) · hop latency.
+pub fn allreduce_ns(sys: &SystemSpec, n_gpus: usize, bytes: u64) -> u64 {
+    if n_gpus <= 1 {
+        return 0;
+    }
+    let n = n_gpus as f64;
+    let bw = sys.interconnect.bw_bytes_per_s();
+    let transfer_s = 2.0 * (n - 1.0) / n * bytes as f64 / bw;
+    let latency_s = 2.0 * (n - 1.0) * sys.interconnect.hop_latency_s();
+    ((transfer_s + latency_s) * 1e9) as u64
+}
+
+/// Host CPU work to issue the kernel launches for one engine step.
+///
+/// `n_launches` CUDA-runtime calls, each costing
+/// `sys.kernel_launch_cpu_s` on the worker thread (§II-A ③: MMIO
+/// doorbell write through the driver stack).
+pub fn launch_cpu_ns(sys: &SystemSpec, n_launches: usize) -> u64 {
+    (sys.kernel_launch_cpu_s * 1e9) as u64 * n_launches as u64
+}
+
+/// Number of CPU launch operations for one decode step, given CUDA-Graph
+/// capture state. With graphs, the static portion replays as a single
+/// launch; the dynamic fraction (EOS checks, sampling, stop conditions —
+/// §II-A) still launches per kernel.
+pub fn decode_launches(model: &ModelSpec, cuda_graphs: bool, dynamic_fraction: f64) -> usize {
+    let per_layer = model.kernels_per_layer();
+    let total = per_layer * model.n_layers + 4; // + sampler/logits kernels
+    if cuda_graphs {
+        let dynamic = (total as f64 * dynamic_fraction).ceil() as usize;
+        1 + dynamic
+    } else {
+        total
+    }
+}
+
+/// Number of CPU launch operations for one prefill chunk (not captured by
+/// CUDA graphs — shapes vary per chunk).
+pub fn prefill_launches(model: &ModelSpec) -> usize {
+    model.kernels_per_layer() * model.n_layers + 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn llama() -> ModelSpec {
+        ModelSpec::llama31_8b()
+    }
+    fn h100() -> SystemSpec {
+        SystemSpec::h100()
+    }
+
+    #[test]
+    fn prefill_scales_near_linearly_with_chunking() {
+        let m = llama();
+        let s = h100();
+        let t_10k = prefill_total_ns(&m, &s, 4, 10_000, 8_192);
+        let t_100k = prefill_total_ns(&m, &s, 4, 100_000, 8_192);
+        let ratio = t_100k as f64 / t_10k as f64;
+        // 10× tokens → between 10× and ~20× time (mild attention superlinearity)
+        assert!((10.0..25.0).contains(&ratio), "ratio={ratio:.1}");
+    }
+
+    #[test]
+    fn prefill_magnitude_sane() {
+        // Llama-8B, 4×H100, 100k tokens: paper-scale prefills are seconds.
+        let t = prefill_total_ns(&llama(), &h100(), 4, 100_000, 8_192) as f64 / 1e9;
+        assert!((0.3..30.0).contains(&t), "prefill {t:.2}s");
+    }
+
+    #[test]
+    fn more_gpus_speed_up_prefill() {
+        let m = llama();
+        let s = h100();
+        let t4 = prefill_total_ns(&m, &s, 4, 50_000, 8_192);
+        let t8 = prefill_total_ns(&m, &s, 8, 50_000, 8_192);
+        assert!(t8 < t4);
+    }
+
+    #[test]
+    fn decode_step_magnitude() {
+        // Single-batch decode of an 8B model on one H100 ≈ 5–15 ms
+        // (weights / HBM bandwidth).
+        let t = decode_step_ns(&llama(), &h100(), 1, 1, 2_000) as f64 / 1e6;
+        assert!((2.0..20.0).contains(&t), "decode {t:.2} ms");
+    }
+
+    #[test]
+    fn decode_grows_with_context_via_kv() {
+        let m = llama();
+        let s = h100();
+        let short = decode_step_ns(&m, &s, 4, 8, 1_000);
+        let long = decode_step_ns(&m, &s, 4, 8, 100_000);
+        assert!(long > short);
+    }
+
+    #[test]
+    fn zero_batch_costs_nothing() {
+        assert_eq!(decode_step_ns(&llama(), &h100(), 4, 0, 0), 0);
+    }
+
+    #[test]
+    fn allreduce_pcie_much_slower_than_nvlink() {
+        let m = llama();
+        let bytes = allreduce_bytes(&m, 8_192);
+        let nv = allreduce_ns(&SystemSpec::h100(), 4, bytes);
+        let pcie = allreduce_ns(&SystemSpec::blackwell(), 4, bytes);
+        assert!(
+            pcie as f64 > 5.0 * nv as f64,
+            "pcie={pcie} nv={nv}"
+        );
+    }
+
+    #[test]
+    fn allreduce_single_gpu_free() {
+        assert_eq!(allreduce_ns(&h100(), 1, 1_000_000), 0);
+    }
+
+    #[test]
+    fn cuda_graphs_cut_launches() {
+        let m = llama();
+        let without = decode_launches(&m, false, 0.25);
+        let with = decode_launches(&m, true, 0.25);
+        assert!(with < without / 2, "with={with} without={without}");
+        assert!(with > 1, "dynamic kernels remain (paper §II-A)");
+    }
+
+    #[test]
+    fn launch_cpu_cost_microseconds() {
+        let ns = launch_cpu_ns(&h100(), 1);
+        assert!((1_000..20_000).contains(&ns)); // single-digit µs
+    }
+}

@@ -1,0 +1,226 @@
+//! ZMQ-like message channel between the API-server process and the
+//! EngineCore process (vLLM V1 splits them this way, §III).
+//!
+//! Unlike the shm broadcast ring, this path *blocks* (socket semantics):
+//! the consumer sleeps until a message arrives, so it does not burn CPU
+//! while idle — but the paper's point stands: the producer still needs
+//! CPU to serialize and the consumer needs to be scheduled to drain it.
+
+use crate::simcpu::script::Instr;
+use crate::simcpu::{GateId, Sim, TaskCtx};
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::rc::Rc;
+
+pub struct SimChannel<T> {
+    queue: Rc<RefCell<VecDeque<T>>>,
+    /// Counts messages ever sent (block target for receivers).
+    sent_gate: GateId,
+    /// CPU cost to serialize + send.
+    pub send_cost_ns: u64,
+    /// CPU cost to receive + parse.
+    pub recv_cost_ns: u64,
+}
+
+impl<T> Clone for SimChannel<T> {
+    fn clone(&self) -> Self {
+        SimChannel {
+            queue: Rc::clone(&self.queue),
+            sent_gate: self.sent_gate,
+            send_cost_ns: self.send_cost_ns,
+            recv_cost_ns: self.recv_cost_ns,
+        }
+    }
+}
+
+impl<T: 'static> SimChannel<T> {
+    pub fn new(sim: &mut Sim) -> SimChannel<T> {
+        SimChannel {
+            queue: Rc::new(RefCell::new(VecDeque::new())),
+            sent_gate: sim.new_gate(),
+            send_cost_ns: 5_000,
+            recv_cost_ns: 3_000,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.borrow().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.borrow().is_empty()
+    }
+
+    pub fn sent_gate(&self) -> GateId {
+        self.sent_gate
+    }
+
+    /// Producer: pay the send cost, push, signal.
+    pub fn send_instrs(&self, value: T) -> Vec<Instr> {
+        let queue = Rc::clone(&self.queue);
+        let gate = self.sent_gate;
+        let cell = RefCell::new(Some(value));
+        vec![
+            Instr::compute(self.send_cost_ns),
+            Instr::effect(move |ctx: &mut TaskCtx| {
+                queue.borrow_mut().push_back(cell.take().expect("sent once"));
+                ctx.signal(gate, 1);
+            }),
+        ]
+    }
+
+    /// Consumer: block until the `n_received+1`-th message exists, pay
+    /// the recv cost, then hand the message to `consume`.
+    pub fn recv_instrs(
+        &self,
+        already_received: u64,
+        consume: impl FnOnce(T, &mut TaskCtx) + 'static,
+    ) -> Vec<Instr> {
+        let queue = Rc::clone(&self.queue);
+        vec![
+            Instr::block(self.sent_gate, already_received + 1),
+            Instr::compute(self.recv_cost_ns),
+            Instr::effect(move |ctx| {
+                let msg = queue.borrow_mut().pop_front().expect("message present");
+                consume(msg, ctx);
+            }),
+        ]
+    }
+
+    /// Non-blocking pop for engine polling loops.
+    pub fn try_recv(&self) -> Option<T> {
+        self.queue.borrow_mut().pop_front()
+    }
+
+    /// Push without a task context (workload generators injecting from
+    /// timed callbacks). Caller signals via `sim.signal(ch.sent_gate(),1)`.
+    pub fn push_external(&self, value: T) {
+        self.queue.borrow_mut().push_back(value);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simcpu::script::Script;
+    use crate::simcpu::SimParams;
+
+    fn sim() -> Sim {
+        Sim::new(SimParams {
+            cores: 2,
+            context_switch_ns: 0,
+            timeslice_ns: 1_000_000,
+            poll_quantum_ns: 1_000,
+            trace_bucket_ns: None,
+        })
+    }
+
+    #[test]
+    fn send_then_recv() {
+        let mut sim = sim();
+        let ch: SimChannel<u32> = SimChannel::new(&mut sim);
+        let got = Rc::new(RefCell::new(None));
+        {
+            let ch = ch.clone();
+            sim.spawn(
+                "producer",
+                Script::new()
+                    .compute(1_000_000)
+                    .then(move |_| ch.send_instrs(42)),
+            );
+        }
+        {
+            let ch = ch.clone();
+            let got = Rc::clone(&got);
+            sim.spawn(
+                "consumer",
+                Script::new().then(move |_| {
+                    ch.recv_instrs(0, move |v, _| *got.borrow_mut() = Some(v))
+                }),
+            );
+        }
+        sim.run();
+        assert_eq!(*got.borrow(), Some(42));
+    }
+
+    #[test]
+    fn consumer_blocks_without_burning_cpu() {
+        let mut sim = sim();
+        let ch: SimChannel<u32> = SimChannel::new(&mut sim);
+        let consumer = {
+            let ch = ch.clone();
+            sim.spawn(
+                "consumer",
+                Script::new().then(move |_| ch.recv_instrs(0, |_, _| {})),
+            )
+        };
+        {
+            let ch = ch.clone();
+            sim.spawn(
+                "producer",
+                Script::new()
+                    .compute(10_000_000)
+                    .then(move |_| ch.send_instrs(1)),
+            );
+        }
+        sim.run();
+        let stats = sim.task_stats(consumer);
+        // consumer slept; only recv cost burned
+        assert!(stats.cpu_ns < 100_000, "cpu={}", stats.cpu_ns);
+        assert!(stats.finished);
+    }
+
+    #[test]
+    fn external_push_with_signal() {
+        let mut sim = sim();
+        let ch: SimChannel<&'static str> = SimChannel::new(&mut sim);
+        let got = Rc::new(RefCell::new(None));
+        {
+            let ch = ch.clone();
+            let got = Rc::clone(&got);
+            sim.spawn(
+                "consumer",
+                Script::new().then(move |_| {
+                    ch.recv_instrs(0, move |v, _| *got.borrow_mut() = Some(v))
+                }),
+            );
+        }
+        {
+            let ch = ch.clone();
+            let gate = ch.sent_gate();
+            sim.call_at(5_000_000, move |sim| {
+                ch.push_external("hello");
+                sim.signal(gate, 1);
+            });
+        }
+        sim.run();
+        assert_eq!(*got.borrow(), Some("hello"));
+    }
+
+    #[test]
+    fn fifo_across_many_messages() {
+        let mut sim = sim();
+        let ch: SimChannel<u64> = SimChannel::new(&mut sim);
+        let seen = Rc::new(RefCell::new(Vec::new()));
+        {
+            let ch = ch.clone();
+            sim.spawn(
+                "producer",
+                Script::new().repeat(10, move |i, _| ch.send_instrs(i as u64)),
+            );
+        }
+        {
+            let ch = ch.clone();
+            let seen = Rc::clone(&seen);
+            sim.spawn(
+                "consumer",
+                Script::new().repeat(10, move |i, _| {
+                    let seen = Rc::clone(&seen);
+                    ch.recv_instrs(i as u64, move |v, _| seen.borrow_mut().push(v))
+                }),
+            );
+        }
+        sim.run();
+        assert_eq!(*seen.borrow(), (0..10).collect::<Vec<u64>>());
+    }
+}

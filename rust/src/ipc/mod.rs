@@ -1,0 +1,19 @@
+//! Inter-process communication substrates (§III, §V-B).
+//!
+//! vLLM V1's process topology: API server → (ZMQ) → EngineCore →
+//! (shm broadcast) → GPU workers. Both links are modeled:
+//!
+//! * [`shm_broadcast`] — real lock-free 1-writer-N-reader ring
+//!   (Track R + microbenches).
+//! * [`sim_shm`] — the same protocol expressed as busy-poll gates on the
+//!   simulator, so its CPU burn contends with everything else.
+//! * [`channel`] — blocking ZMQ-like channel for the API-server →
+//!   EngineCore hop.
+
+pub mod channel;
+pub mod shm_broadcast;
+pub mod sim_shm;
+
+pub use channel::SimChannel;
+pub use shm_broadcast::ShmBroadcast;
+pub use sim_shm::SimShmBroadcast;

@@ -1,0 +1,37 @@
+//! cpuslow — reproduction of "Characterizing CPU-Induced Slowdowns in
+//! Multi-GPU LLM Inference" (CS.AR 2026).
+//!
+//! The crate is organized as a three-layer system:
+//!
+//! * **L3 (this crate)** — the serving coordinator, the discrete-event
+//!   simulator that reproduces the paper's CPU-contention phenomena, and
+//!   every substrate they need (tokenizer, IPC, collectives, KV cache,
+//!   cluster-log analytics).
+//! * **L2 (python/compile/model.py)** — the JAX transformer compiled
+//!   once, AOT, to HLO text.
+//! * **L1 (python/compile/kernels/)** — the Pallas attention kernel the
+//!   L2 model calls.
+//!
+//! Python never runs on the request path: `runtime/` loads the AOT
+//! artifacts via PJRT and `realserve/` serves them from pure Rust.
+//!
+//! See DESIGN.md for the experiment index mapping every paper figure to
+//! a module, and EXPERIMENTS.md for measured results.
+
+pub mod cluster;
+pub mod config;
+pub mod cost;
+pub mod engine;
+pub mod experiments;
+pub mod gpu;
+pub mod ipc;
+pub mod simcpu;
+pub mod tokenizer;
+pub mod workload;
+pub mod realserve;
+pub mod report;
+pub mod runtime;
+pub mod testkit;
+pub mod util;
+
+pub use config::{ModelSpec, RunConfig, ServeConfig, SystemSpec};

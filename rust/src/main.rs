@@ -1,0 +1,41 @@
+//! `cpuslow` — CLI for the CPU-induced-slowdown characterization suite.
+//!
+//! Subcommands map to DESIGN.md's experiment index; `cpuslow experiment
+//! <figN>` regenerates the corresponding paper figure's rows.
+
+use cpuslow::util::cli::{Args, Usage};
+
+fn main() {
+    let args = Args::from_env();
+    let usage = Usage {
+        program: "cpuslow",
+        about: "reproduction of 'Characterizing CPU-Induced Slowdowns in Multi-GPU LLM Inference'",
+        commands: vec![
+            ("systems", "print the Table I system matrix"),
+            ("experiment <id>", "regenerate a paper figure (fig3 fig4 fig5 fig7 fig8 fig9 fig10 fig11 fig12 fig13 cost ablations headline)"),
+            ("serve", "run the simulated serving stack once and report outcomes"),
+            ("calibrate", "measure real Rust-BPE tokenizer throughput on this host"),
+            ("list", "list available experiments"),
+        ],
+        options: vec![
+            ("--seed N", "random seed (default 0)"),
+            ("--out DIR", "write CSV/JSON figure data here (default results/)"),
+            ("--quick", "reduced sweep for smoke runs"),
+            ("--system S", "system preset: h100 | h200 | blackwell"),
+            ("--model M", "model preset: llama8b | qwen14b | tiny"),
+            ("--gpus N", "number of GPUs"),
+            ("--cores LIST", "CPU core counts, e.g. 5,8,16,32"),
+        ],
+    };
+    match args.subcommand() {
+        Some("systems") => cpuslow::experiments::print_systems(),
+        Some("experiment") => {
+            let which = args.rest().first().cloned().unwrap_or_default();
+            cpuslow::experiments::run(&which, &args);
+        }
+        Some("list") => cpuslow::experiments::list(),
+        Some("serve") => cpuslow::experiments::serve_once(&args),
+        Some("calibrate") => cpuslow::experiments::calibrate_cmd(&args),
+        _ => print!("{}", usage.render()),
+    }
+}

@@ -1,0 +1,69 @@
+//! CPU-affinity restriction (Linux): confine the whole process to N
+//! cores to emulate a constrained cluster allocation — the Track-R
+//! analogue of the paper's "16 CPU cores on a 4×H100 node" setup (§III).
+
+use anyhow::{bail, Result};
+
+/// Restrict the calling process (all threads created *after* this call
+/// inherit the mask) to cores `[0, n)`.
+pub fn restrict_to_cores(n: usize) -> Result<()> {
+    if n == 0 {
+        bail!("cannot restrict to zero cores");
+    }
+    unsafe {
+        let mut set: libc::cpu_set_t = std::mem::zeroed();
+        libc::CPU_ZERO(&mut set);
+        let avail = available_cores();
+        if n > avail {
+            bail!("requested {n} cores but only {avail} online");
+        }
+        for cpu in 0..n {
+            libc::CPU_SET(cpu, &mut set);
+        }
+        let rc = libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set);
+        if rc != 0 {
+            bail!("sched_setaffinity failed: {}", std::io::Error::last_os_error());
+        }
+    }
+    Ok(())
+}
+
+/// Number of cores currently allowed by the process affinity mask.
+pub fn allowed_cores() -> usize {
+    unsafe {
+        let mut set: libc::cpu_set_t = std::mem::zeroed();
+        if libc::sched_getaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &mut set) != 0 {
+            return available_cores();
+        }
+        libc::CPU_COUNT(&set) as usize
+    }
+}
+
+/// Online core count.
+pub fn available_cores() -> usize {
+    unsafe { libc::sysconf(libc::_SC_NPROCESSORS_ONLN) as usize }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reports_cores() {
+        assert!(available_cores() >= 1);
+        assert!(allowed_cores() >= 1);
+        assert!(allowed_cores() <= available_cores());
+    }
+
+    #[test]
+    fn rejects_zero() {
+        assert!(restrict_to_cores(0).is_err());
+    }
+
+    #[test]
+    fn rejects_more_than_available() {
+        assert!(restrict_to_cores(available_cores() + 64).is_err());
+    }
+    // NOTE: actually *applying* a restriction is done only in examples —
+    // tests must not constrain the whole test-runner process.
+}

@@ -1,0 +1,222 @@
+//! Track R: the real mini serving stack.
+//!
+//! Everything on the request path is real and Rust: the BPE tokenizer
+//! ([`crate::tokenizer`]) encodes prompts on a worker pool, the
+//! [`crate::runtime::ModelRuntime`] executes the AOT-compiled JAX/Pallas
+//! transformer via PJRT-CPU with continuous batching over
+//! `decode_batch` lanes, and greedy sampling + detokenization close the
+//! loop. Python never runs.
+//!
+//! This is the end-to-end validation vehicle (examples/serve_e2e.rs):
+//! real tokens in, real logits out, measured TTFT/TPOT/throughput — and
+//! with `affinity::restrict_to_cores(n)` it demonstrates the paper's
+//! CPU-contention effect on this host for real.
+
+pub mod affinity;
+
+use crate::runtime::{DecodeState, ModelRuntime};
+use crate::tokenizer::{BatchTokenizer, TokenId, Vocab};
+use anyhow::{bail, Result};
+use std::time::Instant;
+
+/// Per-request timing and output record.
+#[derive(Debug, Clone)]
+pub struct RealOutcome {
+    pub id: usize,
+    pub prompt_chars: usize,
+    pub prompt_tokens: usize,
+    pub tokenize_s: f64,
+    /// Time from submission to the first generated token.
+    pub ttft_s: f64,
+    /// Mean per-output-token latency after the first.
+    pub tpot_s: f64,
+    pub e2e_s: f64,
+    pub generated: usize,
+    pub text: String,
+}
+
+pub struct RealEngineConfig {
+    pub max_new_tokens: usize,
+    /// Tokenizer pool width (HF-style parallel encodes).
+    pub tokenizer_threads: usize,
+}
+
+impl Default for RealEngineConfig {
+    fn default() -> Self {
+        RealEngineConfig {
+            max_new_tokens: 16,
+            tokenizer_threads: 4,
+        }
+    }
+}
+
+pub struct RealEngine {
+    runtime: ModelRuntime,
+    tokenizer: BatchTokenizer,
+    cfg: RealEngineConfig,
+}
+
+impl RealEngine {
+    pub fn new(artifacts_dir: &str, vocab: Vocab, cfg: RealEngineConfig) -> Result<RealEngine> {
+        let runtime = ModelRuntime::load(artifacts_dir)?;
+        if (vocab.size() as usize) > runtime.manifest().vocab {
+            bail!(
+                "tokenizer vocab {} exceeds model vocab {}",
+                vocab.size(),
+                runtime.manifest().vocab
+            );
+        }
+        let tokenizer = BatchTokenizer::new(vocab, cfg.tokenizer_threads);
+        Ok(RealEngine {
+            runtime,
+            tokenizer,
+            cfg,
+        })
+    }
+
+    pub fn manifest_summary(&self) -> String {
+        let m = self.runtime.manifest();
+        format!(
+            "tiny-100M: {} params, {} layers, vocab {}, decode batch {}, buckets {:?}",
+            m.n_params, m.n_layers, m.vocab, m.decode_batch, m.prefill_buckets
+        )
+    }
+
+    /// Serve a batch of prompts with continuous batching over the decode
+    /// lanes. Returns outcomes in submission order.
+    pub fn serve(&self, prompts: Vec<String>) -> Result<Vec<RealOutcome>> {
+        let t0 = Instant::now();
+        let n = prompts.len();
+        let max_prompt = self
+            .runtime
+            .manifest()
+            .prefill_buckets
+            .iter()
+            .copied()
+            .max()
+            .unwrap_or(0)
+            .min(self.runtime.manifest().max_seq - self.cfg.max_new_tokens - 1);
+
+        // 1. tokenize (real BPE, parallel pool) — timed per request
+        let tok_start = Instant::now();
+        let encoded = self.tokenizer.encode_batch(prompts.clone());
+        let tokenize_wall = tok_start.elapsed().as_secs_f64();
+        let mut token_lists: Vec<Vec<TokenId>> = Vec::with_capacity(n);
+        for ids in encoded {
+            if ids.is_empty() {
+                bail!("empty prompt after tokenization");
+            }
+            let mut ids = ids;
+            ids.truncate(max_prompt);
+            token_lists.push(ids);
+        }
+
+        // 2. continuous batching over decode lanes
+        let batch = self.runtime.manifest().decode_batch;
+        let mut state: DecodeState = self.runtime.new_decode_state()?;
+        #[derive(Clone)]
+        struct Lane {
+            req: usize,
+            next_token: i32,
+            generated: Vec<TokenId>,
+            first_token_at: Option<f64>,
+            started_decode: bool,
+        }
+        let mut lanes: Vec<Option<Lane>> = vec![None; batch];
+        let mut queue: std::collections::VecDeque<usize> = (0..n).collect();
+        let mut outcomes: Vec<Option<RealOutcome>> = (0..n).map(|_| None).collect();
+        let mut done = 0;
+
+        while done < n {
+            // admit waiting requests into free lanes (prefill = real PJRT)
+            for lane_idx in 0..batch {
+                if lanes[lane_idx].is_none() {
+                    let Some(req) = queue.pop_front() else { break };
+                    let toks = &token_lists[req];
+                    // cache positions 0..len-1 via prefill; the last prompt
+                    // token goes through the decode path to produce the
+                    // first new-token logits.
+                    if toks.len() > 1 {
+                        let prefill = self.runtime.prefill(&toks[..toks.len() - 1])?;
+                        self.runtime
+                            .insert_lane(&mut state, lane_idx, &prefill, toks.len() - 1)?;
+                    } else {
+                        state.lengths[lane_idx] = 0;
+                    }
+                    lanes[lane_idx] = Some(Lane {
+                        req,
+                        next_token: *toks.last().unwrap() as i32,
+                        generated: Vec::new(),
+                        first_token_at: None,
+                        started_decode: false,
+                    });
+                }
+            }
+            // batched decode step (real PJRT)
+            let mut tokens = vec![0i32; batch];
+            let mut active = vec![false; batch];
+            for (i, lane) in lanes.iter().enumerate() {
+                if let Some(l) = lane {
+                    tokens[i] = l.next_token;
+                    active[i] = true;
+                }
+            }
+            if !active.iter().any(|&a| a) {
+                bail!("deadlock: no active lanes with {} waiting", queue.len());
+            }
+            let logits = self.runtime.decode_step(&mut state, &tokens, &active)?;
+            let now_s = t0.elapsed().as_secs_f64();
+            // Sample only within the tokenizer's vocabulary (the model's
+            // vocab dim is padded up to a power of two).
+            let vocab_limit = self.tokenizer.vocab().size();
+            for lane_idx in 0..batch {
+                let Some(lane) = &mut lanes[lane_idx] else { continue };
+                let next = ModelRuntime::argmax(&logits[lane_idx][..vocab_limit]) as TokenId;
+                lane.generated.push(next);
+                lane.next_token = next as i32;
+                lane.started_decode = true;
+                if lane.first_token_at.is_none() {
+                    lane.first_token_at = Some(now_s);
+                }
+                if lane.generated.len() >= self.cfg.max_new_tokens {
+                    // finish request
+                    let lane = lanes[lane_idx].take().unwrap();
+                    let req = lane.req;
+                    let e2e = t0.elapsed().as_secs_f64();
+                    let ttft = lane.first_token_at.unwrap();
+                    let tpot = if lane.generated.len() > 1 {
+                        (e2e - ttft) / (lane.generated.len() - 1) as f64
+                    } else {
+                        0.0
+                    };
+                    let enc = crate::tokenizer::Encoder::new(self.tokenizer.vocab());
+                    let text = enc.decode(&lane.generated);
+                    outcomes[req] = Some(RealOutcome {
+                        id: req,
+                        prompt_chars: prompts[req].len(),
+                        prompt_tokens: token_lists[req].len(),
+                        tokenize_s: tokenize_wall, // batch-level wall time
+                        ttft_s: ttft,
+                        tpot_s: tpot,
+                        e2e_s: e2e,
+                        generated: lane.generated.len(),
+                        text,
+                    });
+                    done += 1;
+                    state.lengths[lane_idx] = 0;
+                }
+            }
+        }
+        Ok(outcomes.into_iter().map(|o| o.unwrap()).collect())
+    }
+
+    /// Aggregate throughput stats over a serve() result.
+    pub fn summarize(outcomes: &[RealOutcome]) -> (f64, f64, f64) {
+        let n = outcomes.len().max(1) as f64;
+        let mean_ttft = outcomes.iter().map(|o| o.ttft_s).sum::<f64>() / n;
+        let total_tokens: usize = outcomes.iter().map(|o| o.generated).sum();
+        let makespan = outcomes.iter().map(|o| o.e2e_s).fold(0.0, f64::max);
+        let tput = total_tokens as f64 / makespan.max(1e-9);
+        (mean_ttft, tput, makespan)
+    }
+}

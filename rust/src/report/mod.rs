@@ -1,0 +1,128 @@
+//! Report rendering: ASCII tables, CSV, sparkline-style traces, and
+//! figure data dumps. Every experiment prints via this module so the
+//! tables in EXPERIMENTS.md regenerate byte-identically.
+
+pub mod table;
+
+pub use table::Table;
+
+use crate::util::json::Json;
+use std::io::Write;
+use std::path::Path;
+
+/// Write a JSON figure dump under `out_dir` (created if needed).
+pub fn write_json(out_dir: &str, name: &str, data: &Json) -> std::io::Result<std::path::PathBuf> {
+    std::fs::create_dir_all(out_dir)?;
+    let path = Path::new(out_dir).join(format!("{name}.json"));
+    let mut f = std::fs::File::create(&path)?;
+    f.write_all(data.to_string_pretty().as_bytes())?;
+    f.write_all(b"\n")?;
+    Ok(path)
+}
+
+/// Write CSV rows (first row = header).
+pub fn write_csv(
+    out_dir: &str,
+    name: &str,
+    header: &[&str],
+    rows: &[Vec<String>],
+) -> std::io::Result<std::path::PathBuf> {
+    std::fs::create_dir_all(out_dir)?;
+    let path = Path::new(out_dir).join(format!("{name}.csv"));
+    let mut f = std::fs::File::create(&path)?;
+    writeln!(f, "{}", header.join(","))?;
+    for row in rows {
+        let escaped: Vec<String> = row.iter().map(|c| csv_escape(c)).collect();
+        writeln!(f, "{}", escaped.join(","))?;
+    }
+    Ok(path)
+}
+
+fn csv_escape(field: &str) -> String {
+    if field.contains(',') || field.contains('"') || field.contains('\n') {
+        format!("\"{}\"", field.replace('"', "\"\""))
+    } else {
+        field.to_string()
+    }
+}
+
+/// Render a unicode sparkline of a series (for utilization traces in
+/// terminal output; the real data goes to CSV).
+pub fn sparkline(values: &[f64]) -> String {
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let finite: Vec<f64> = values.iter().copied().filter(|v| v.is_finite()).collect();
+    if finite.is_empty() {
+        return String::new();
+    }
+    let lo = finite.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = finite.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let span = (hi - lo).max(1e-12);
+    values
+        .iter()
+        .map(|v| {
+            if !v.is_finite() {
+                ' '
+            } else {
+                let idx = (((v - lo) / span) * 7.0).round() as usize;
+                BARS[idx.min(7)]
+            }
+        })
+        .collect()
+}
+
+/// Render an ASCII heatmap cell label for speedups: "2.41x" or "inf".
+pub fn speedup_label(speedup: f64) -> String {
+    if speedup.is_infinite() {
+        "∞".to_string()
+    } else if speedup.is_nan() {
+        "-".to_string()
+    } else {
+        format!("{speedup:.2}×")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_escaping() {
+        assert_eq!(csv_escape("plain"), "plain");
+        assert_eq!(csv_escape("a,b"), "\"a,b\"");
+        assert_eq!(csv_escape("say \"hi\""), "\"say \"\"hi\"\"\"");
+    }
+
+    #[test]
+    fn sparkline_shape() {
+        let s = sparkline(&[0.0, 0.5, 1.0]);
+        assert_eq!(s.chars().count(), 3);
+        assert!(s.starts_with('▁'));
+        assert!(s.ends_with('█'));
+    }
+
+    #[test]
+    fn sparkline_handles_nan() {
+        let s = sparkline(&[0.0, f64::NAN, 1.0]);
+        assert_eq!(s.chars().count(), 3);
+    }
+
+    #[test]
+    fn speedup_labels() {
+        assert_eq!(speedup_label(2.41), "2.41×");
+        assert_eq!(speedup_label(f64::INFINITY), "∞");
+        assert_eq!(speedup_label(f64::NAN), "-");
+    }
+
+    #[test]
+    fn write_files() {
+        let dir = std::env::temp_dir().join("cpuslow_report_test");
+        let dir = dir.to_str().unwrap();
+        let mut j = Json::obj();
+        j.set("x", 1.0);
+        let p = write_json(dir, "t", &j).unwrap();
+        assert!(p.exists());
+        let p2 = write_csv(dir, "t", &["a", "b"], &[vec!["1".into(), "2".into()]]).unwrap();
+        let content = std::fs::read_to_string(p2).unwrap();
+        assert_eq!(content, "a,b\n1,2\n");
+    }
+}

@@ -1,0 +1,177 @@
+//! ASCII table renderer with column alignment, used for every experiment
+//! printout (the "rows the paper reports").
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+#[derive(Debug, Clone)]
+pub struct Table {
+    title: Option<String>,
+    header: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table {
+            title: None,
+            header: header.iter().map(|s| s.to_string()).collect(),
+            aligns: header.iter().map(|_| Align::Right).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn with_title(mut self, title: impl Into<String>) -> Table {
+        self.title = Some(title.into());
+        self
+    }
+
+    pub fn align(mut self, col: usize, align: Align) -> Table {
+        self.aligns[col] = align;
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width must match header"
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn rows(&self) -> &[Vec<String>] {
+        &self.rows
+    }
+
+    pub fn header(&self) -> &[String] {
+        &self.header
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.header.iter().map(|h| display_width(h)).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                w[i] = w[i].max(display_width(cell));
+            }
+        }
+        w
+    }
+
+    pub fn render(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str(&format!("## {t}\n"));
+        }
+        let sep: String = {
+            let parts: Vec<String> = w.iter().map(|w| "-".repeat(w + 2)).collect();
+            format!("+{}+\n", parts.join("+"))
+        };
+        out.push_str(&sep);
+        out.push_str(&self.render_row(&self.header, &w));
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&self.render_row(row, &w));
+        }
+        out.push_str(&sep);
+        out
+    }
+
+    fn render_row(&self, cells: &[String], widths: &[usize]) -> String {
+        let mut line = String::from("|");
+        for (i, cell) in cells.iter().enumerate() {
+            let pad = widths[i].saturating_sub(display_width(cell));
+            match self.aligns[i] {
+                Align::Left => line.push_str(&format!(" {}{} |", cell, " ".repeat(pad))),
+                Align::Right => line.push_str(&format!(" {}{} |", " ".repeat(pad), cell)),
+            }
+        }
+        line.push('\n');
+        line
+    }
+
+    /// Markdown rendering (for EXPERIMENTS.md inclusion).
+    pub fn render_markdown(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("| {} |\n", self.header.join(" | ")));
+        out.push_str(&format!(
+            "|{}|\n",
+            self.header.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        ));
+        for row in &self.rows {
+            out.push_str(&format!("| {} |\n", row.join(" | ")));
+        }
+        out
+    }
+}
+
+/// Approximate display width (counts chars; good enough for our tables,
+/// which only use '×', '∞', 'µ' beyond ASCII — all width-1).
+fn display_width(s: &str) -> usize {
+    s.chars().count()
+}
+
+/// Convenience macro for building a row of heterogeneous display types.
+#[macro_export]
+macro_rules! row {
+    ($($cell:expr),* $(,)?) => {
+        vec![$(format!("{}", $cell)),*]
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["name", "value"]).align(0, Align::Left);
+        t.row(vec!["alpha".into(), "1".into()]);
+        t.row(vec!["b".into(), "10000".into()]);
+        let s = t.render();
+        assert!(s.contains("| alpha |     1 |"));
+        assert!(s.contains("| b     | 10000 |"));
+    }
+
+    #[test]
+    fn unicode_width() {
+        let mut t = Table::new(&["speedup"]);
+        t.row(vec!["5.40×".into()]);
+        t.row(vec!["∞".into()]);
+        let s = t.render();
+        for line in s.lines().filter(|l| l.starts_with('|')) {
+            assert_eq!(line.chars().count(), s.lines().next().unwrap().chars().count());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn rejects_wrong_width() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn markdown_output() {
+        let mut t = Table::new(&["x", "y"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let md = t.render_markdown();
+        assert!(md.starts_with("| x | y |\n|---|---|\n| 1 | 2 |"));
+    }
+
+    #[test]
+    fn row_macro() {
+        let r = row!["fig7", 3.25, 16u64];
+        assert_eq!(r, vec!["fig7".to_string(), "3.25".into(), "16".into()]);
+    }
+}

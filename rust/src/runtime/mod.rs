@@ -1,0 +1,343 @@
+//! PJRT runtime: load the AOT artifacts and execute them from Rust.
+//!
+//! The request path is pure Rust: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` once per entry point,
+//! parameters uploaded to device buffers once, per-step inputs uploaded
+//! as needed and KV-cache outputs fed straight back into the next step
+//! (`execute_b` on `PjRtBuffer`s — no host copies on the decode path
+//! except logits and tokens).
+//!
+//! Adapted from /opt/xla-example/load_hlo (see DESIGN.md and the gotchas
+//! in that README: HLO *text* interchange, interpret-mode Pallas).
+
+pub mod params;
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use xla::{PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+pub use params::{load_params, HostArray};
+
+/// The manifest contract written by python/compile/aot.py.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub n_param_arrays: usize,
+    pub n_params: u64,
+    pub prefill_buckets: Vec<usize>,
+    pub decode_batch: usize,
+    pub max_seq: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub vocab: usize,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("read manifest in {}", dir.display()))?;
+        let j = crate::util::json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let num = |j: &crate::util::json::Json, k: &str| -> Result<f64> {
+            j.get(k)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow!("manifest missing {k}"))
+        };
+        let cfg = j
+            .get("config")
+            .ok_or_else(|| anyhow!("manifest missing config"))?;
+        let buckets = j
+            .get("prefill_buckets")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing prefill_buckets"))?
+            .iter()
+            .filter_map(|v| v.as_f64())
+            .map(|x| x as usize)
+            .collect();
+        Ok(Manifest {
+            n_param_arrays: num(&j, "n_param_arrays")? as usize,
+            n_params: num(&j, "n_params")? as u64,
+            prefill_buckets: buckets,
+            decode_batch: num(&j, "decode_batch")? as usize,
+            max_seq: num(cfg, "max_seq")? as usize,
+            n_layers: num(cfg, "n_layers")? as usize,
+            n_heads: num(cfg, "n_heads")? as usize,
+            d_head: num(cfg, "d_head")? as usize,
+            vocab: num(cfg, "vocab")? as usize,
+        })
+    }
+}
+
+/// Result of a prefill call: last-position logits plus the prompt's KV
+/// cache (host-side, for lane insertion into the batched decode cache).
+pub struct PrefillOut {
+    pub logits: Vec<f32>,
+    /// [n_layers, bucket, heads, d_head] flattened.
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub bucket: usize,
+}
+
+/// Batched decode state held as device buffers between steps.
+pub struct DecodeState {
+    k: PjRtBuffer,
+    v: PjRtBuffer,
+    pub lengths: Vec<i32>,
+}
+
+pub struct ModelRuntime {
+    client: PjRtClient,
+    manifest: Manifest,
+    prefill_exes: BTreeMap<usize, PjRtLoadedExecutable>,
+    decode_exe: PjRtLoadedExecutable,
+    param_bufs: Vec<PjRtBuffer>,
+}
+
+fn compile_hlo(client: &PjRtClient, path: &Path) -> Result<PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+    )
+    .with_context(|| format!("parse HLO text {}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    Ok(client.compile(&comp)?)
+}
+
+impl ModelRuntime {
+    /// Load and compile everything under `artifacts_dir`. Parameters are
+    /// uploaded to device buffers once.
+    pub fn load(artifacts_dir: impl Into<PathBuf>) -> Result<ModelRuntime> {
+        let dir: PathBuf = artifacts_dir.into();
+        let manifest = Manifest::load(&dir)?;
+        let client = PjRtClient::cpu()?;
+
+        let mut prefill_exes = BTreeMap::new();
+        for &bucket in &manifest.prefill_buckets {
+            let path = dir.join(format!("model_prefill_{bucket}.hlo.txt"));
+            prefill_exes.insert(bucket, compile_hlo(&client, &path)?);
+        }
+        let decode_exe = compile_hlo(
+            &client,
+            &dir.join(format!("model_decode_b{}.hlo.txt", manifest.decode_batch)),
+        )?;
+
+        let host_params = load_params(&dir.join("params.bin"))?;
+        if host_params.len() != manifest.n_param_arrays {
+            bail!(
+                "params.bin has {} arrays, manifest says {}",
+                host_params.len(),
+                manifest.n_param_arrays
+            );
+        }
+        let devices = client.addressable_devices();
+        let device = &devices[0];
+        let mut param_bufs = Vec::with_capacity(host_params.len());
+        for arr in &host_params {
+            let buf = client.buffer_from_host_buffer(&arr.data, &arr.dims, Some(device))?;
+            param_bufs.push(buf);
+        }
+        Ok(ModelRuntime {
+            client,
+            manifest,
+            prefill_exes,
+            decode_exe,
+            param_bufs,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Smallest prefill bucket that fits `len` tokens.
+    pub fn bucket_for(&self, len: usize) -> Option<usize> {
+        self.manifest
+            .prefill_buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= len)
+    }
+
+    /// Run prefill for a prompt. Prompts shorter than their bucket are
+    /// padded by repeating the last token; the *cache* is only consumed
+    /// up to the true length, and the bucket's last-position logits are
+    /// only used when `tokens.len() == bucket` — for shorter prompts the
+    /// first generated token is obtained via a decode step on the true
+    /// last position, which `realserve` handles.
+    pub fn prefill(&self, tokens: &[u32]) -> Result<PrefillOut> {
+        if tokens.is_empty() {
+            bail!("empty prompt");
+        }
+        let bucket = self
+            .bucket_for(tokens.len())
+            .ok_or_else(|| anyhow!("prompt of {} tokens exceeds buckets", tokens.len()))?;
+        let exe = &self.prefill_exes[&bucket];
+        let mut padded: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        let last = *padded.last().unwrap();
+        padded.resize(bucket, last);
+        let devices = self.client.addressable_devices();
+        let device = &devices[0];
+        let tok_buf = self
+            .client
+            .buffer_from_host_buffer(&padded, &[1, bucket], Some(device))?;
+        let mut args: Vec<&PjRtBuffer> = self.param_bufs.iter().collect();
+        args.push(&tok_buf);
+        let outs = exe.execute_b(&args)?;
+        // jax's MLIR→XlaComputation conversion tuples multi-results, so
+        // PJRT hands back one tuple buffer; decompose on the host.
+        let (logits, k, v) = tuple3_f32(&outs[0])?;
+        Ok(PrefillOut {
+            logits,
+            k,
+            v,
+            bucket,
+        })
+    }
+
+    /// Fresh (zeroed) decode state.
+    pub fn new_decode_state(&self) -> Result<DecodeState> {
+        let m = &self.manifest;
+        let numel = m.decode_batch * m.n_layers * m.max_seq * m.n_heads * m.d_head;
+        let zeros = vec![0f32; numel];
+        let dims = [m.decode_batch, m.n_layers, m.max_seq, m.n_heads, m.d_head];
+        let devices = self.client.addressable_devices();
+        let device = &devices[0];
+        let k = self
+            .client
+            .buffer_from_host_buffer(&zeros, &dims, Some(device))?;
+        let v = self
+            .client
+            .buffer_from_host_buffer(&zeros, &dims, Some(device))?;
+        Ok(DecodeState {
+            k,
+            v,
+            lengths: vec![0; m.decode_batch],
+        })
+    }
+
+    /// Insert a prefilled request's KV into lane `lane` of the decode
+    /// state (host round-trip — once per request admission).
+    pub fn insert_lane(
+        &self,
+        state: &mut DecodeState,
+        lane: usize,
+        prefill: &PrefillOut,
+        true_len: usize,
+    ) -> Result<()> {
+        let m = &self.manifest;
+        assert!(lane < m.decode_batch);
+        assert!(true_len <= prefill.bucket && true_len <= m.max_seq);
+        let mut k_host = buffer_to_f32(&state.k)?;
+        let mut v_host = buffer_to_f32(&state.v)?;
+        let lane_stride = m.n_layers * m.max_seq * m.n_heads * m.d_head;
+        let row = m.n_heads * m.d_head; // per (layer, pos) row
+        for layer in 0..m.n_layers {
+            for pos in 0..true_len {
+                let src = (layer * prefill.bucket + pos) * row;
+                let dst = lane * lane_stride + (layer * m.max_seq + pos) * row;
+                k_host[dst..dst + row].copy_from_slice(&prefill.k[src..src + row]);
+                v_host[dst..dst + row].copy_from_slice(&prefill.v[src..src + row]);
+            }
+        }
+        let dims = [m.decode_batch, m.n_layers, m.max_seq, m.n_heads, m.d_head];
+        let devices = self.client.addressable_devices();
+        let device = &devices[0];
+        state.k = self
+            .client
+            .buffer_from_host_buffer(&k_host, &dims, Some(device))?;
+        state.v = self
+            .client
+            .buffer_from_host_buffer(&v_host, &dims, Some(device))?;
+        state.lengths[lane] = true_len as i32;
+        Ok(())
+    }
+
+    /// One batched decode step. `tokens[lane]` is the input token per
+    /// lane (inactive lanes: token 0). Cache buffers advance device-side;
+    /// lengths advance for `active` lanes. Returns per-lane logits.
+    pub fn decode_step(
+        &self,
+        state: &mut DecodeState,
+        tokens: &[i32],
+        active: &[bool],
+    ) -> Result<Vec<Vec<f32>>> {
+        let m = &self.manifest;
+        assert_eq!(tokens.len(), m.decode_batch);
+        assert_eq!(active.len(), m.decode_batch);
+        let devices = self.client.addressable_devices();
+        let device = &devices[0];
+        let tok_buf = self
+            .client
+            .buffer_from_host_buffer(tokens, &[m.decode_batch], Some(device))?;
+        let len_buf = self.client.buffer_from_host_buffer(
+            &state.lengths,
+            &[m.decode_batch],
+            Some(device),
+        )?;
+        let mut args: Vec<&PjRtBuffer> = self.param_bufs.iter().collect();
+        args.push(&tok_buf);
+        args.push(&state.k);
+        args.push(&state.v);
+        args.push(&len_buf);
+        let outs = self.decode_exe.execute_b(&args)?;
+        let (logits_flat, k_host, v_host) = tuple3_f32(&outs[0])?;
+        // Re-upload the caches (tuple outputs force a host round-trip;
+        // see EXPERIMENTS.md §Perf for the measured cost and mitigation).
+        let dims = [m.decode_batch, m.n_layers, m.max_seq, m.n_heads, m.d_head];
+        state.k = self
+            .client
+            .buffer_from_host_buffer(&k_host, &dims, Some(device))?;
+        state.v = self
+            .client
+            .buffer_from_host_buffer(&v_host, &dims, Some(device))?;
+        for lane in 0..m.decode_batch {
+            if active[lane] {
+                state.lengths[lane] += 1;
+            }
+        }
+        let vocab = m.vocab;
+        Ok((0..m.decode_batch)
+            .map(|b| logits_flat[b * vocab..(b + 1) * vocab].to_vec())
+            .collect())
+    }
+
+    /// Greedy argmax over a logits row.
+    pub fn argmax(logits: &[f32]) -> u32 {
+        let mut best = 0usize;
+        let mut best_v = f32::NEG_INFINITY;
+        for (i, &x) in logits.iter().enumerate() {
+            if x > best_v {
+                best_v = x;
+                best = i;
+            }
+        }
+        best as u32
+    }
+}
+
+fn buffer_to_f32(buf: &PjRtBuffer) -> Result<Vec<f32>> {
+    let lit = buf.to_literal_sync()?;
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Decompose a single tuple output buffer into three f32 vectors.
+fn tuple3_f32(outs: &[PjRtBuffer]) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+    if outs.len() == 3 {
+        return Ok((
+            buffer_to_f32(&outs[0])?,
+            buffer_to_f32(&outs[1])?,
+            buffer_to_f32(&outs[2])?,
+        ));
+    }
+    if outs.len() != 1 {
+        bail!("expected 1 tuple or 3 buffers, got {}", outs.len());
+    }
+    let lit = outs[0].to_literal_sync()?;
+    let (a, b, c) = lit.to_tuple3()?;
+    Ok((a.to_vec::<f32>()?, b.to_vec::<f32>()?, c.to_vec::<f32>()?))
+}
+
+/// True when a CPU PJRT client can be constructed (used by tests to
+/// skip when the extension is unavailable).
+pub fn pjrt_available() -> bool {
+    PjRtClient::cpu().is_ok()
+}

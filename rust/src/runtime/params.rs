@@ -1,0 +1,127 @@
+//! Parameter-blob loader: reads `artifacts/params.bin` written by
+//! `python/compile/aot.py` (little-endian: u32 count, then per array
+//! [u32 rank, u32 dims…, f32 data…]) into host arrays ready for device
+//! upload.
+
+use anyhow::{bail, Context, Result};
+use std::io::Read;
+
+#[derive(Debug, Clone)]
+pub struct HostArray {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostArray {
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+/// Read every parameter array from `path`.
+pub fn load_params(path: &std::path::Path) -> Result<Vec<HostArray>> {
+    let mut file = std::fs::File::open(path)
+        .with_context(|| format!("open params blob {}", path.display()))?;
+    let mut buf = Vec::new();
+    file.read_to_end(&mut buf)?;
+    parse_params(&buf)
+}
+
+pub fn parse_params(buf: &[u8]) -> Result<Vec<HostArray>> {
+    let mut off = 0usize;
+    let read_u32 = |buf: &[u8], off: &mut usize| -> Result<u32> {
+        if *off + 4 > buf.len() {
+            bail!("truncated params blob at byte {off}", off = *off);
+        }
+        let v = u32::from_le_bytes(buf[*off..*off + 4].try_into().unwrap());
+        *off += 4;
+        Ok(v)
+    };
+    let count = read_u32(buf, &mut off)? as usize;
+    if count == 0 || count > 100_000 {
+        bail!("implausible array count {count}");
+    }
+    let mut arrays = Vec::with_capacity(count);
+    for i in 0..count {
+        let rank = read_u32(buf, &mut off)? as usize;
+        if rank > 8 {
+            bail!("array {i}: implausible rank {rank}");
+        }
+        let mut dims = Vec::with_capacity(rank);
+        let mut numel = 1usize;
+        for _ in 0..rank {
+            let d = read_u32(buf, &mut off)? as usize;
+            numel = numel
+                .checked_mul(d)
+                .ok_or_else(|| anyhow::anyhow!("array {i}: dim overflow"))?;
+            dims.push(d);
+        }
+        let bytes = numel * 4;
+        if off + bytes > buf.len() {
+            bail!("array {i}: truncated data ({numel} elems)");
+        }
+        let mut data = vec![0f32; numel];
+        for (j, chunk) in buf[off..off + bytes].chunks_exact(4).enumerate() {
+            data[j] = f32::from_le_bytes(chunk.try_into().unwrap());
+        }
+        off += bytes;
+        arrays.push(HostArray { dims, data });
+    }
+    if off != buf.len() {
+        bail!("trailing bytes in params blob: {} of {}", buf.len() - off, buf.len());
+    }
+    Ok(arrays)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blob(arrays: &[(&[u32], &[f32])]) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend((arrays.len() as u32).to_le_bytes());
+        for (dims, data) in arrays {
+            out.extend((dims.len() as u32).to_le_bytes());
+            for &d in *dims {
+                out.extend(d.to_le_bytes());
+            }
+            for &x in *data {
+                out.extend(x.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn parses_simple_blob() {
+        let b = blob(&[(&[2, 3], &[1., 2., 3., 4., 5., 6.]), (&[4], &[9., 8., 7., 6.])]);
+        let arrays = parse_params(&b).unwrap();
+        assert_eq!(arrays.len(), 2);
+        assert_eq!(arrays[0].dims, vec![2, 3]);
+        assert_eq!(arrays[0].data[5], 6.0);
+        assert_eq!(arrays[1].dims, vec![4]);
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let mut b = blob(&[(&[2, 2], &[1., 2., 3., 4.])]);
+        b.truncate(b.len() - 3);
+        assert!(parse_params(&b).is_err());
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let mut b = blob(&[(&[1], &[1.0])]);
+        b.extend([0u8; 7]);
+        assert!(parse_params(&b).is_err());
+    }
+
+    #[test]
+    fn rejects_implausible_header() {
+        assert!(parse_params(&u32::MAX.to_le_bytes()).is_err());
+        assert!(parse_params(&[]).is_err());
+    }
+}

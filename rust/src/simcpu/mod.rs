@@ -1,0 +1,1349 @@
+//! Discrete-event virtual-time CPU scheduler — the substrate that stands
+//! in for "a node with N physical cores" (DESIGN.md §Hardware
+//! substitutions).
+//!
+//! The paper's phenomena are OS-scheduling effects: with more runnable
+//! threads than allocated cores, kernel-launch threads wait in run
+//! queues, busy-poll loops burn cores without progress, and context
+//! switches add latency. This module reproduces those mechanics
+//! deterministically:
+//!
+//! * N cores execute [`Program`] tasks under a CFS-like policy: global
+//!   min-vruntime run queue, fixed timeslice, per-switch cost.
+//! * Tasks express work as [`Op`]s — `Compute` (preemptible CPU burn),
+//!   `BusyPoll` (burn CPU until a [`Gate`] reaches a value — the
+//!   shm-broadcast / NCCL spin idiom from §V), `Block` (futex-style
+//!   sleep), `Sleep`, `Yield`.
+//! * Gates are monotonic event-counters (like eventcounts); both the
+//!   broadcast queue's writer/reader flags and collective barriers are
+//!   built on them.
+//! * Arbitrary timed callbacks ([`Sim::call_at`]) let the GPU device
+//!   model and workload generators share the same timeline.
+//!
+//! Wakeup latency is bounded by the timeslice when all cores are busy
+//! (no wakeup preemption) — the same "a 1 ms OS delay on one rank stalls
+//! the whole collective" magnitude the paper measures (§V-A).
+
+pub mod script;
+
+use crate::util::stats::TimeSeries;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+pub type TaskId = usize;
+pub type GateId = usize;
+
+/// What a task asks the CPU to do next.
+#[derive(Debug, Clone)]
+pub enum Op {
+    /// Burn CPU for `ns` of virtual time (preemptible at timeslice
+    /// granularity).
+    Compute { ns: u64 },
+    /// Burn CPU while checking `gate >= target` once per poll quantum.
+    /// This is the lock-free spin idiom: it occupies a core (competing
+    /// with useful work) and notices the signal only when scheduled.
+    BusyPoll { gate: GateId, target: u64 },
+    /// Sleep off-CPU until `gate >= target` (futex / condvar idiom).
+    Block { gate: GateId, target: u64 },
+    /// Sleep off-CPU for a fixed duration.
+    Sleep { ns: u64 },
+    /// Voluntarily give up the core, staying runnable.
+    Yield,
+    /// Task is finished.
+    Done,
+}
+
+/// A schedulable thread of execution. `step` is called each time the
+/// previous op completes; state machines (or [`script::Script`]) supply
+/// the next op.
+pub trait Program {
+    fn step(&mut self, ctx: &mut TaskCtx) -> Op;
+}
+
+impl<F: FnMut(&mut TaskCtx) -> Op> Program for F {
+    fn step(&mut self, ctx: &mut TaskCtx) -> Op {
+        self(ctx)
+    }
+}
+
+/// Scheduler parameters (host-side constants from `SystemSpec`).
+#[derive(Debug, Clone)]
+pub struct SimParams {
+    pub cores: usize,
+    pub context_switch_ns: u64,
+    pub timeslice_ns: u64,
+    /// Busy-poll check period: a running poller notices a satisfied gate
+    /// after at most this much additional CPU time.
+    pub poll_quantum_ns: u64,
+    /// Utilization-trace bucket width (None disables tracing).
+    pub trace_bucket_ns: Option<u64>,
+}
+
+impl SimParams {
+    pub fn new(cores: usize) -> SimParams {
+        SimParams {
+            cores,
+            context_switch_ns: 3_000,
+            timeslice_ns: 1_000_000,
+            poll_quantum_ns: 1_000,
+            trace_bucket_ns: None,
+        }
+    }
+
+    pub fn with_tracing(mut self, bucket_ns: u64) -> Self {
+        self.trace_bucket_ns = Some(bucket_ns);
+        self
+    }
+}
+
+/// Deferred effects a program may request during `step` (applied by the
+/// simulator right after the step returns, in order).
+enum Deferred {
+    Spawn { program: Box<dyn Program>, class: &'static str },
+    Signal { gate: GateId, n: u64 },
+    CallAt { t_ns: u64, f: Box<dyn FnOnce(&mut Sim)> },
+}
+
+/// The view of the simulator a program sees during `step`.
+pub struct TaskCtx<'a> {
+    now_ns: u64,
+    task: TaskId,
+    gates: &'a mut Gates,
+    deferred: &'a mut Vec<Deferred>,
+}
+
+impl<'a> TaskCtx<'a> {
+    pub fn now_ns(&self) -> u64 {
+        self.now_ns
+    }
+    pub fn now_secs(&self) -> f64 {
+        self.now_ns as f64 / 1e9
+    }
+    pub fn task_id(&self) -> TaskId {
+        self.task
+    }
+
+    pub fn new_gate(&mut self) -> GateId {
+        self.gates.new_gate()
+    }
+
+    pub fn gate_value(&self, gate: GateId) -> u64 {
+        self.gates.value(gate)
+    }
+
+    /// Increment a gate; wakes blocked waiters and notifies pollers
+    /// (applied after this step returns).
+    pub fn signal(&mut self, gate: GateId, n: u64) {
+        self.deferred.push(Deferred::Signal { gate, n });
+    }
+
+    /// Spawn a new task (runnable immediately).
+    pub fn spawn(&mut self, class: &'static str, program: impl Program + 'static) {
+        self.deferred.push(Deferred::Spawn {
+            program: Box::new(program),
+            class,
+        });
+    }
+
+    /// Schedule a callback on the shared timeline (device-side events).
+    pub fn call_at(&mut self, t_ns: u64, f: impl FnOnce(&mut Sim) + 'static) {
+        self.deferred.push(Deferred::CallAt { t_ns, f: Box::new(f) });
+    }
+}
+
+// ---------------------------------------------------------------------
+// Gates
+// ---------------------------------------------------------------------
+
+pub struct Gates {
+    values: Vec<u64>,
+    /// Tasks blocked (off-CPU) on each gate: (task, target).
+    blocked: Vec<Vec<(TaskId, u64)>>,
+}
+
+impl Gates {
+    fn new() -> Gates {
+        Gates {
+            values: Vec::new(),
+            blocked: Vec::new(),
+        }
+    }
+
+    pub fn new_gate(&mut self) -> GateId {
+        self.values.push(0);
+        self.blocked.push(Vec::new());
+        self.values.len() - 1
+    }
+
+    pub fn value(&self, gate: GateId) -> u64 {
+        self.values[gate]
+    }
+}
+
+// ---------------------------------------------------------------------
+// Tasks and cores
+// ---------------------------------------------------------------------
+
+/// In-flight op with progress bookkeeping.
+#[derive(Debug, Clone)]
+enum CurOp {
+    Compute { remaining: u64 },
+    Poll { gate: GateId, target: u64 },
+    None,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum TaskState {
+    Runnable,
+    Running { core: usize },
+    Blocked,
+    Sleeping,
+    Finished,
+}
+
+struct Task {
+    program: Box<dyn Program>,
+    class: &'static str,
+    /// CFS weight (nice level): vruntime accrues at 1/weight — higher
+    /// weight = more CPU share + earlier scheduling. Default 1. Used to
+    /// model the paper's §VI mitigation (prioritizing latency-critical
+    /// control-plane tasks over throughput-oriented tokenization).
+    weight: u32,
+    state: TaskState,
+    cur: CurOp,
+    vruntime: u64,
+    runnable_since: u64,
+    // --- stats ---
+    cpu_ns: u64,
+    poll_cpu_ns: u64,
+    wait_ns: u64,
+    switches: u64,
+}
+
+/// What the core is executing until its next scheduled event.
+#[derive(Debug, Clone, PartialEq)]
+enum Segment {
+    /// Paying the context-switch cost before the task's op runs.
+    Switch,
+    /// Running a compute chunk of the given length.
+    Compute { run_ns: u64 },
+    /// Spinning on a gate; the scheduled event is the slice end, unless a
+    /// signal arrives first (then a notice event fires after one quantum).
+    Poll { noticed: bool },
+    /// One poll-quantum check that will complete the poll op (gate was
+    /// already satisfied when the op started).
+    PollCheck,
+}
+
+struct Core {
+    current: Option<TaskId>,
+    last: Option<TaskId>,
+    epoch: u64,
+    seg: Segment,
+    seg_start_ns: u64,
+    slice_used_ns: u64,
+    busy_since: Option<u64>,
+}
+
+impl Core {
+    fn new() -> Core {
+        Core {
+            current: None,
+            last: None,
+            epoch: 0,
+            seg: Segment::Switch,
+            seg_start_ns: 0,
+            slice_used_ns: 0,
+            busy_since: None,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Events
+// ---------------------------------------------------------------------
+
+enum Ev {
+    /// The current segment on `core` ends (chunk done / switch done /
+    /// poll slice end). Stale if the epoch doesn't match.
+    CoreSeg { core: usize, epoch: u64 },
+    /// A polling task notices its gate became satisfied.
+    PollNotice { core: usize, epoch: u64 },
+    /// A sleeping task wakes.
+    Timer { task: TaskId },
+    /// Arbitrary callback (GPU completions, workload arrivals).
+    Call(Box<dyn FnOnce(&mut Sim)>),
+}
+
+struct HeapEntry {
+    t_ns: u64,
+    seq: u64,
+    ev: Ev,
+}
+
+impl PartialEq for HeapEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.t_ns == other.t_ns && self.seq == other.seq
+    }
+}
+impl Eq for HeapEntry {}
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.t_ns, self.seq).cmp(&(other.t_ns, other.seq))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Aggregated statistics
+// ---------------------------------------------------------------------
+
+/// Per-task statistics snapshot.
+#[derive(Debug, Clone)]
+pub struct TaskStats {
+    pub class: &'static str,
+    pub cpu_ns: u64,
+    pub poll_cpu_ns: u64,
+    pub wait_ns: u64,
+    pub switches: u64,
+    pub finished: bool,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct SimStats {
+    pub context_switches: u64,
+    /// CPU ns consumed per task class (useful work + polling).
+    pub class_cpu_ns: HashMap<&'static str, u64>,
+    /// CPU ns burned in busy-polling per class.
+    pub class_poll_ns: HashMap<&'static str, u64>,
+    /// Total busy core-ns.
+    pub busy_core_ns: u64,
+}
+
+// ---------------------------------------------------------------------
+// The simulator
+// ---------------------------------------------------------------------
+
+pub struct Sim {
+    params: SimParams,
+    now_ns: u64,
+    seq: u64,
+    heap: BinaryHeap<Reverse<HeapEntry>>,
+    tasks: Vec<Task>,
+    cores: Vec<Core>,
+    run_queue: BinaryHeap<Reverse<(u64, u64, TaskId)>>,
+    rq_seq: u64,
+    gates: Gates,
+    deferred: Vec<Deferred>,
+    stats: SimStats,
+    /// Busy-core utilization trace (core-seconds per bucket).
+    util_trace: Option<TimeSeries>,
+    min_vruntime: u64,
+}
+
+impl Sim {
+    pub fn new(params: SimParams) -> Sim {
+        assert!(params.cores > 0, "need at least one core");
+        assert!(params.timeslice_ns > 0 && params.poll_quantum_ns > 0);
+        let cores = (0..params.cores).map(|_| Core::new()).collect();
+        let util_trace = params
+            .trace_bucket_ns
+            .map(|b| TimeSeries::new(b as f64 / 1e9));
+        Sim {
+            params,
+            now_ns: 0,
+            seq: 0,
+            heap: BinaryHeap::new(),
+            tasks: Vec::new(),
+            cores,
+            run_queue: BinaryHeap::new(),
+            rq_seq: 0,
+            gates: Gates::new(),
+            deferred: Vec::new(),
+            stats: SimStats::default(),
+            util_trace,
+            min_vruntime: 0,
+        }
+    }
+
+    pub fn now_ns(&self) -> u64 {
+        self.now_ns
+    }
+    pub fn now_secs(&self) -> f64 {
+        self.now_ns as f64 / 1e9
+    }
+    pub fn n_cores(&self) -> usize {
+        self.params.cores
+    }
+    pub fn params(&self) -> &SimParams {
+        &self.params
+    }
+
+    pub fn new_gate(&mut self) -> GateId {
+        self.gates.new_gate()
+    }
+
+    pub fn gate_value(&self, gate: GateId) -> u64 {
+        self.gates.value(gate)
+    }
+
+    /// Spawn a task; runnable immediately.
+    pub fn spawn(&mut self, class: &'static str, program: impl Program + 'static) -> TaskId {
+        self.spawn_boxed(class, Box::new(program), 1)
+    }
+
+    /// Spawn with a CFS weight (>1 = latency-critical priority, like a
+    /// negative nice level).
+    pub fn spawn_weighted(
+        &mut self,
+        class: &'static str,
+        weight: u32,
+        program: impl Program + 'static,
+    ) -> TaskId {
+        self.spawn_boxed(class, Box::new(program), weight.max(1))
+    }
+
+    fn spawn_boxed(
+        &mut self,
+        class: &'static str,
+        program: Box<dyn Program>,
+        weight: u32,
+    ) -> TaskId {
+        let id = self.tasks.len();
+        self.tasks.push(Task {
+            program,
+            class,
+            weight,
+            state: TaskState::Runnable,
+            cur: CurOp::None,
+            vruntime: self.min_vruntime,
+            runnable_since: self.now_ns,
+            cpu_ns: 0,
+            poll_cpu_ns: 0,
+            wait_ns: 0,
+            switches: 0,
+        });
+        self.enqueue(id);
+        self.kick_idle_cores();
+        id
+    }
+
+    /// Schedule a callback at an absolute virtual time.
+    pub fn call_at(&mut self, t_ns: u64, f: impl FnOnce(&mut Sim) + 'static) {
+        let t = t_ns.max(self.now_ns);
+        self.push_event(t, Ev::Call(Box::new(f)));
+    }
+
+    /// Increment a gate, waking blocked waiters and notifying pollers.
+    pub fn signal(&mut self, gate: GateId, n: u64) {
+        self.gates.values[gate] += n;
+        let value = self.gates.values[gate];
+        // Wake blocked waiters whose target is reached.
+        let waiters = &mut self.gates.blocked[gate];
+        let mut woken = Vec::new();
+        waiters.retain(|&(task, target)| {
+            if target <= value {
+                woken.push(task);
+                false
+            } else {
+                true
+            }
+        });
+        for task in woken {
+            debug_assert_eq!(self.tasks[task].state, TaskState::Blocked);
+            self.make_runnable(task);
+        }
+        // Notify running pollers: they notice after one poll quantum.
+        for core_id in 0..self.cores.len() {
+            let core = &self.cores[core_id];
+            if let (Some(task), Segment::Poll { noticed: false }) = (core.current, &core.seg) {
+                if let CurOp::Poll { gate: g, target } = &self.tasks[task].cur {
+                    if *g == gate && *target <= value {
+                        let epoch = core.epoch;
+                        let t = self.now_ns + self.params.poll_quantum_ns;
+                        self.cores[core_id].seg = Segment::Poll { noticed: true };
+                        self.push_event(t, Ev::PollNotice { core: core_id, epoch });
+                    }
+                }
+            }
+        }
+        self.kick_idle_cores();
+    }
+
+    // -- event plumbing ------------------------------------------------
+
+    fn push_event(&mut self, t_ns: u64, ev: Ev) {
+        debug_assert!(t_ns >= self.now_ns);
+        self.seq += 1;
+        self.heap.push(Reverse(HeapEntry {
+            t_ns,
+            seq: self.seq,
+            ev,
+        }));
+    }
+
+    fn enqueue(&mut self, task: TaskId) {
+        debug_assert_eq!(self.tasks[task].state, TaskState::Runnable);
+        self.tasks[task].runnable_since = self.now_ns;
+        self.rq_seq += 1;
+        let vr = self.tasks[task].vruntime;
+        self.run_queue.push(Reverse((vr, self.rq_seq, task)));
+    }
+
+    fn make_runnable(&mut self, task: TaskId) {
+        // Newly woken tasks start at the current min vruntime so they are
+        // scheduled promptly but cannot starve others.
+        let t = &mut self.tasks[task];
+        t.state = TaskState::Runnable;
+        t.vruntime = t.vruntime.max(self.min_vruntime);
+        self.enqueue(task);
+    }
+
+    fn pop_runnable(&mut self) -> Option<TaskId> {
+        while let Some(Reverse((_, _, task))) = self.run_queue.pop() {
+            if self.tasks[task].state == TaskState::Runnable {
+                return Some(task);
+            }
+            // stale entry (task state changed while queued) — skip
+        }
+        None
+    }
+
+    fn kick_idle_cores(&mut self) {
+        for core_id in 0..self.cores.len() {
+            if self.cores[core_id].current.is_none() {
+                self.dispatch(core_id);
+            }
+        }
+    }
+
+    // -- core lifecycle -------------------------------------------------
+
+    fn core_set_busy(&mut self, core_id: usize) {
+        if self.cores[core_id].busy_since.is_none() {
+            self.cores[core_id].busy_since = Some(self.now_ns);
+        }
+    }
+
+    fn core_set_idle(&mut self, core_id: usize) {
+        if let Some(since) = self.cores[core_id].busy_since.take() {
+            let span = self.now_ns - since;
+            self.stats.busy_core_ns += span;
+            if let Some(trace) = &mut self.util_trace {
+                trace.add_span(since as f64 / 1e9, self.now_ns as f64 / 1e9, 1.0);
+            }
+        }
+    }
+
+    /// Pick the next task for an idle core.
+    fn dispatch(&mut self, core_id: usize) {
+        debug_assert!(self.cores[core_id].current.is_none());
+        let Some(task) = self.pop_runnable() else {
+            self.core_set_idle(core_id);
+            return;
+        };
+        // account run-queue waiting
+        let waited = self.now_ns - self.tasks[task].runnable_since;
+        self.tasks[task].wait_ns += waited;
+        self.tasks[task].state = TaskState::Running { core: core_id };
+        self.core_set_busy(core_id);
+        let needs_switch =
+            self.cores[core_id].last != Some(task) && self.params.context_switch_ns > 0;
+        let core = &mut self.cores[core_id];
+        core.current = Some(task);
+        core.last = Some(task);
+        core.epoch += 1;
+        core.slice_used_ns = 0;
+        core.seg_start_ns = self.now_ns;
+        if needs_switch {
+            self.stats.context_switches += 1;
+            self.tasks[task].switches += 1;
+            core.seg = Segment::Switch;
+            let t = self.now_ns + self.params.context_switch_ns;
+            let epoch = core.epoch;
+            self.push_event(t, Ev::CoreSeg { core: core_id, epoch });
+        } else {
+            self.begin_op(core_id);
+        }
+    }
+
+    /// Start executing the task's current op on the core (assumes the
+    /// task is current on the core and no segment is scheduled).
+    fn begin_op(&mut self, core_id: usize) {
+        let task_id = self.cores[core_id].current.expect("core has task");
+        loop {
+            // Ensure there is a current op.
+            if matches!(self.tasks[task_id].cur, CurOp::None) {
+                let op = self.step_program(task_id);
+                match op {
+                    Op::Compute { ns } => {
+                        if ns == 0 {
+                            continue; // zero-cost op, get next
+                        }
+                        self.tasks[task_id].cur = CurOp::Compute { remaining: ns };
+                    }
+                    Op::BusyPoll { gate, target } => {
+                        self.tasks[task_id].cur = CurOp::Poll { gate, target };
+                    }
+                    Op::Block { gate, target } => {
+                        if self.gates.value(gate) >= target {
+                            continue; // already satisfied, no cost
+                        }
+                        self.preempt_for_block(core_id, task_id, gate, target);
+                        return;
+                    }
+                    Op::Sleep { ns } => {
+                        self.vacate(core_id, task_id, TaskState::Sleeping);
+                        let t = self.now_ns + ns;
+                        self.push_event(t, Ev::Timer { task: task_id });
+                        self.dispatch(core_id);
+                        return;
+                    }
+                    Op::Yield => {
+                        self.vacate(core_id, task_id, TaskState::Runnable);
+                        self.enqueue(task_id);
+                        self.dispatch(core_id);
+                        return;
+                    }
+                    Op::Done => {
+                        self.vacate(core_id, task_id, TaskState::Finished);
+                        self.dispatch(core_id);
+                        return;
+                    }
+                }
+            }
+            // Execute the current op.
+            let slice_left = self
+                .params
+                .timeslice_ns
+                .saturating_sub(self.cores[core_id].slice_used_ns);
+            if slice_left == 0 {
+                // Slice exhausted: preempt if anyone is waiting, else renew.
+                if self.peek_runnable() {
+                    self.preempt(core_id, task_id);
+                    return;
+                }
+                self.cores[core_id].slice_used_ns = 0;
+                continue;
+            }
+            match self.tasks[task_id].cur.clone() {
+                CurOp::Compute { remaining } => {
+                    let run = remaining.min(slice_left);
+                    let core = &mut self.cores[core_id];
+                    core.seg = Segment::Compute { run_ns: run };
+                    core.seg_start_ns = self.now_ns;
+                    let epoch = core.epoch;
+                    let t = self.now_ns + run;
+                    self.push_event(t, Ev::CoreSeg { core: core_id, epoch });
+                    return;
+                }
+                CurOp::Poll { gate, target } => {
+                    let core_epoch;
+                    if self.gates.value(gate) >= target {
+                        // Satisfied already: one quantum check completes it.
+                        let core = &mut self.cores[core_id];
+                        core.seg = Segment::PollCheck;
+                        core.seg_start_ns = self.now_ns;
+                        core_epoch = core.epoch;
+                        let t = self.now_ns + self.params.poll_quantum_ns.min(slice_left);
+                        self.push_event(
+                            t,
+                            Ev::PollNotice {
+                                core: core_id,
+                                epoch: core_epoch,
+                            },
+                        );
+                    } else {
+                        // Spin until slice end (or a signal's poll notice).
+                        let core = &mut self.cores[core_id];
+                        core.seg = Segment::Poll { noticed: false };
+                        core.seg_start_ns = self.now_ns;
+                        core_epoch = core.epoch;
+                        let t = self.now_ns + slice_left;
+                        self.push_event(
+                            t,
+                            Ev::CoreSeg {
+                                core: core_id,
+                                epoch: core_epoch,
+                            },
+                        );
+                    }
+                    return;
+                }
+                CurOp::None => unreachable!("handled above"),
+            }
+        }
+    }
+
+    /// True if any runnable task is waiting.
+    fn peek_runnable(&mut self) -> bool {
+        while let Some(Reverse((_, _, task))) = self.run_queue.peek().copied() {
+            if self.tasks[task].state == TaskState::Runnable {
+                return true;
+            }
+            self.run_queue.pop();
+        }
+        false
+    }
+
+    /// Remove the task from the core (charging vruntime), leaving the
+    /// core free. Does not dispatch.
+    fn vacate(&mut self, core_id: usize, task_id: TaskId, new_state: TaskState) {
+        let used = self.cores[core_id].slice_used_ns;
+        let weight = self.tasks[task_id].weight as u64;
+        self.tasks[task_id].vruntime += (used / weight).max(1);
+        self.min_vruntime = self.min_vruntime.max(self.tasks[task_id].vruntime);
+        self.tasks[task_id].state = new_state;
+        let core = &mut self.cores[core_id];
+        core.current = None;
+        core.epoch += 1; // invalidate any scheduled segment events
+        core.slice_used_ns = 0;
+    }
+
+    fn preempt(&mut self, core_id: usize, task_id: TaskId) {
+        self.vacate(core_id, task_id, TaskState::Runnable);
+        self.enqueue(task_id);
+        self.dispatch(core_id);
+    }
+
+    fn preempt_for_block(&mut self, core_id: usize, task_id: TaskId, gate: GateId, target: u64) {
+        self.vacate(core_id, task_id, TaskState::Blocked);
+        self.gates.blocked[gate].push((task_id, target));
+        self.dispatch(core_id);
+    }
+
+    /// Charge CPU time for the elapsed part of the current segment.
+    fn charge(&mut self, core_id: usize, task_id: TaskId, polling: bool) {
+        let elapsed = self.now_ns - self.cores[core_id].seg_start_ns;
+        self.cores[core_id].slice_used_ns += elapsed;
+        let t = &mut self.tasks[task_id];
+        t.cpu_ns += elapsed;
+        if polling {
+            t.poll_cpu_ns += elapsed;
+        }
+        *self.stats.class_cpu_ns.entry(t.class).or_insert(0) += elapsed;
+        if polling {
+            *self.stats.class_poll_ns.entry(t.class).or_insert(0) += elapsed;
+        }
+    }
+
+    fn step_program(&mut self, task_id: TaskId) -> Op {
+        // Split-borrow: take the program out, run it, put it back.
+        let mut program = std::mem::replace(
+            &mut self.tasks[task_id].program,
+            Box::new(|_: &mut TaskCtx| Op::Done),
+        );
+        let mut ctx = TaskCtx {
+            now_ns: self.now_ns,
+            task: task_id,
+            gates: &mut self.gates,
+            deferred: &mut self.deferred,
+        };
+        let op = program.step(&mut ctx);
+        self.tasks[task_id].program = program;
+        self.apply_deferred();
+        op
+    }
+
+    fn apply_deferred(&mut self) {
+        while !self.deferred.is_empty() {
+            let batch: Vec<Deferred> = self.deferred.drain(..).collect();
+            for d in batch {
+                match d {
+                    Deferred::Spawn { program, class } => {
+                        self.spawn_boxed(class, program, 1);
+                    }
+                    Deferred::Signal { gate, n } => self.signal(gate, n),
+                    Deferred::CallAt { t_ns, f } => self.call_at(t_ns, f),
+                }
+            }
+        }
+    }
+
+    // -- event handlers --------------------------------------------------
+
+    fn on_core_seg(&mut self, core_id: usize, epoch: u64) {
+        if self.cores[core_id].epoch != epoch {
+            return; // stale
+        }
+        let task_id = self.cores[core_id].current.expect("core busy");
+        match self.cores[core_id].seg.clone() {
+            Segment::Switch => {
+                // switch cost elapsed; it counts as core-busy but not task CPU
+                self.cores[core_id].slice_used_ns +=
+                    self.now_ns - self.cores[core_id].seg_start_ns;
+                self.begin_op(core_id);
+            }
+            Segment::Compute { run_ns } => {
+                self.charge(core_id, task_id, false);
+                if let CurOp::Compute { remaining } = &mut self.tasks[task_id].cur {
+                    *remaining = remaining.saturating_sub(run_ns);
+                    if *remaining == 0 {
+                        self.tasks[task_id].cur = CurOp::None;
+                    }
+                }
+                self.begin_op(core_id);
+            }
+            Segment::Poll { .. } => {
+                // Slice ended while spinning.
+                self.charge(core_id, task_id, true);
+                if self.peek_runnable() {
+                    self.preempt(core_id, task_id);
+                } else {
+                    self.cores[core_id].slice_used_ns = 0;
+                    self.begin_op(core_id);
+                }
+            }
+            Segment::PollCheck => unreachable!("PollCheck ends via PollNotice"),
+        }
+    }
+
+    fn on_poll_notice(&mut self, core_id: usize, epoch: u64) {
+        if self.cores[core_id].epoch != epoch {
+            return;
+        }
+        let task_id = self.cores[core_id].current.expect("core busy");
+        debug_assert!(matches!(
+            self.cores[core_id].seg,
+            Segment::Poll { .. } | Segment::PollCheck
+        ));
+        self.charge(core_id, task_id, true);
+        // Double-check the gate (it cannot regress, but be safe).
+        if let CurOp::Poll { gate, target } = self.tasks[task_id].cur.clone() {
+            if self.gates.value(gate) >= target {
+                self.tasks[task_id].cur = CurOp::None;
+            } else {
+                // Spurious notice: resume spinning.
+            }
+        }
+        self.begin_op(core_id);
+    }
+
+    fn on_timer(&mut self, task_id: TaskId) {
+        if self.tasks[task_id].state == TaskState::Sleeping {
+            self.make_runnable(task_id);
+            self.kick_idle_cores();
+        }
+    }
+
+    // -- main loop --------------------------------------------------------
+
+    /// Run until the event heap empties or virtual time exceeds
+    /// `limit_ns`. Returns the final virtual time.
+    pub fn run_until(&mut self, limit_ns: u64) -> u64 {
+        while let Some(Reverse(entry)) = self.heap.pop() {
+            if entry.t_ns > limit_ns {
+                // put it back and stop
+                self.heap.push(Reverse(entry));
+                self.now_ns = limit_ns;
+                break;
+            }
+            debug_assert!(entry.t_ns >= self.now_ns, "time must not go backwards");
+            self.now_ns = entry.t_ns;
+            match entry.ev {
+                Ev::CoreSeg { core, epoch } => self.on_core_seg(core, epoch),
+                Ev::PollNotice { core, epoch } => self.on_poll_notice(core, epoch),
+                Ev::Timer { task } => self.on_timer(task),
+                Ev::Call(f) => {
+                    f(self);
+                    self.apply_deferred();
+                }
+            }
+        }
+        self.now_ns
+    }
+
+    /// Run to completion (all events drained), with a safety limit.
+    pub fn run(&mut self) -> u64 {
+        self.run_until(u64::MAX / 2)
+    }
+
+    /// Flush utilization accounting up to `now` (call before reading
+    /// traces mid-run or at the end).
+    pub fn flush_traces(&mut self) {
+        for core_id in 0..self.cores.len() {
+            if let Some(since) = self.cores[core_id].busy_since {
+                let span = self.now_ns - since;
+                self.stats.busy_core_ns += span;
+                if let Some(trace) = &mut self.util_trace {
+                    trace.add_span(since as f64 / 1e9, self.now_ns as f64 / 1e9, 1.0);
+                }
+                self.cores[core_id].busy_since = Some(self.now_ns);
+            }
+        }
+    }
+
+    pub fn stats(&self) -> &SimStats {
+        &self.stats
+    }
+
+    pub fn task_stats(&self, task: TaskId) -> TaskStats {
+        let t = &self.tasks[task];
+        TaskStats {
+            class: t.class,
+            cpu_ns: t.cpu_ns,
+            poll_cpu_ns: t.poll_cpu_ns,
+            wait_ns: t.wait_ns,
+            switches: t.switches,
+            finished: t.state == TaskState::Finished,
+        }
+    }
+
+    pub fn task_finished(&self, task: TaskId) -> bool {
+        self.tasks[task].state == TaskState::Finished
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Per-bucket CPU utilization in [0, 1] (busy core-time / capacity).
+    pub fn utilization(&mut self) -> Vec<f64> {
+        self.flush_traces();
+        match &self.util_trace {
+            None => Vec::new(),
+            Some(trace) => trace
+                .sums()
+                .iter()
+                .map(|busy| busy / self.params.cores as f64)
+                .collect(),
+        }
+    }
+
+    pub fn trace_bucket_secs(&self) -> Option<f64> {
+        self.util_trace.as_ref().map(|t| t.bucket_width())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    /// A program that computes for `ns` then records its finish time.
+    struct ComputeOnce {
+        ns: u64,
+        done_at: Rc<RefCell<Option<u64>>>,
+        issued: bool,
+    }
+
+    impl Program for ComputeOnce {
+        fn step(&mut self, ctx: &mut TaskCtx) -> Op {
+            if !self.issued {
+                self.issued = true;
+                Op::Compute { ns: self.ns }
+            } else {
+                *self.done_at.borrow_mut() = Some(ctx.now_ns());
+                Op::Done
+            }
+        }
+    }
+
+    fn params_no_overhead(cores: usize) -> SimParams {
+        SimParams {
+            cores,
+            context_switch_ns: 0,
+            timeslice_ns: 1_000_000,
+            poll_quantum_ns: 1_000,
+            trace_bucket_ns: None,
+        }
+    }
+
+    #[test]
+    fn single_compute_finishes_on_time() {
+        let mut sim = Sim::new(params_no_overhead(1));
+        let done = Rc::new(RefCell::new(None));
+        sim.spawn(
+            "t",
+            ComputeOnce {
+                ns: 5_000_000,
+                done_at: Rc::clone(&done),
+                issued: false,
+            },
+        );
+        sim.run();
+        assert_eq!(done.borrow().unwrap(), 5_000_000);
+    }
+
+    #[test]
+    fn two_tasks_one_core_share_fairly() {
+        let mut sim = Sim::new(params_no_overhead(1));
+        let d1 = Rc::new(RefCell::new(None));
+        let d2 = Rc::new(RefCell::new(None));
+        for d in [&d1, &d2] {
+            sim.spawn(
+                "t",
+                ComputeOnce {
+                    ns: 10_000_000,
+                    done_at: Rc::clone(d),
+                    issued: false,
+                },
+            );
+        }
+        sim.run();
+        let t1 = d1.borrow().unwrap();
+        let t2 = d2.borrow().unwrap();
+        // Combined work is 20 ms on one core; both finish near the end
+        // (round-robin interleaving), within one timeslice of each other.
+        assert!(t1.max(t2) == 20_000_000, "makespan {}", t1.max(t2));
+        assert!(t1.max(t2) - t1.min(t2) <= 1_000_000);
+    }
+
+    #[test]
+    fn two_tasks_two_cores_run_in_parallel() {
+        let mut sim = Sim::new(params_no_overhead(2));
+        let d1 = Rc::new(RefCell::new(None));
+        let d2 = Rc::new(RefCell::new(None));
+        for d in [&d1, &d2] {
+            sim.spawn(
+                "t",
+                ComputeOnce {
+                    ns: 10_000_000,
+                    done_at: Rc::clone(d),
+                    issued: false,
+                },
+            );
+        }
+        sim.run();
+        assert_eq!(d1.borrow().unwrap(), 10_000_000);
+        assert_eq!(d2.borrow().unwrap(), 10_000_000);
+    }
+
+    #[test]
+    fn oversubscription_slows_makespan_proportionally() {
+        // 8 tasks × 10 ms on 2 cores → 40 ms makespan.
+        let mut sim = Sim::new(params_no_overhead(2));
+        let dones: Vec<_> = (0..8).map(|_| Rc::new(RefCell::new(None))).collect();
+        for d in &dones {
+            sim.spawn(
+                "t",
+                ComputeOnce {
+                    ns: 10_000_000,
+                    done_at: Rc::clone(d),
+                    issued: false,
+                },
+            );
+        }
+        sim.run();
+        let max = dones
+            .iter()
+            .map(|d| d.borrow().unwrap())
+            .max()
+            .unwrap();
+        assert_eq!(max, 40_000_000);
+    }
+
+    #[test]
+    fn context_switches_are_charged_and_counted() {
+        let mut params = params_no_overhead(1);
+        params.context_switch_ns = 10_000;
+        let mut sim = Sim::new(params);
+        let d1 = Rc::new(RefCell::new(None));
+        let d2 = Rc::new(RefCell::new(None));
+        for d in [&d1, &d2] {
+            sim.spawn(
+                "t",
+                ComputeOnce {
+                    ns: 3_000_000,
+                    done_at: Rc::clone(d),
+                    issued: false,
+                },
+            );
+        }
+        sim.run();
+        assert!(sim.stats().context_switches >= 6, "round-robin switches");
+        let makespan = d1.borrow().unwrap().max(d2.borrow().unwrap());
+        assert!(makespan > 6_000_000, "switch cost adds latency: {makespan}");
+    }
+
+    #[test]
+    fn block_and_signal_wakeup() {
+        let mut sim = Sim::new(params_no_overhead(2));
+        let gate = sim.new_gate();
+        let woke_at = Rc::new(RefCell::new(None));
+        // Waiter blocks until the gate is signaled.
+        {
+            let woke_at = Rc::clone(&woke_at);
+            let mut state = 0;
+            sim.spawn("waiter", move |ctx: &mut TaskCtx| match state {
+                0 => {
+                    state = 1;
+                    Op::Block { gate, target: 1 }
+                }
+                _ => {
+                    *woke_at.borrow_mut() = Some(ctx.now_ns());
+                    Op::Done
+                }
+            });
+        }
+        // Signaler computes 2 ms then signals.
+        {
+            let mut state = 0;
+            sim.spawn("signaler", move |ctx: &mut TaskCtx| match state {
+                0 => {
+                    state = 1;
+                    Op::Compute { ns: 2_000_000 }
+                }
+                1 => {
+                    state = 2;
+                    ctx.signal(gate, 1);
+                    Op::Done
+                }
+                _ => Op::Done,
+            });
+        }
+        sim.run();
+        // Wakes exactly when signaled (idle core available).
+        assert_eq!(woke_at.borrow().unwrap(), 2_000_000);
+    }
+
+    #[test]
+    fn busy_poll_consumes_cpu_and_delays_others() {
+        // One core: a poller spins on a gate that is signaled at t=5ms by
+        // a timed callback; a compute task of 5 ms shares the core.
+        // Without the poller the compute task would finish at 5 ms; with
+        // it, roughly half the core is stolen until the signal (then the
+        // poller exits), so it finishes around 8–10 ms.
+        let mut sim = Sim::new(params_no_overhead(1));
+        let gate = sim.new_gate();
+        {
+            let mut state = 0;
+            sim.spawn("poller", move |_ctx: &mut TaskCtx| match state {
+                0 => {
+                    state = 1;
+                    Op::BusyPoll { gate, target: 1 }
+                }
+                _ => Op::Done,
+            });
+        }
+        let done = Rc::new(RefCell::new(None));
+        sim.spawn(
+            "worker",
+            ComputeOnce {
+                ns: 5_000_000,
+                done_at: Rc::clone(&done),
+                issued: false,
+            },
+        );
+        sim.call_at(5_000_000, move |sim| sim.signal(gate, 1));
+        sim.run();
+        let finished = done.borrow().unwrap();
+        assert!(
+            (7_500_000..=11_100_000).contains(&finished),
+            "poller should steal ~half the core: finished at {finished}"
+        );
+        let poll_ns = sim.stats().class_poll_ns["poller"];
+        // Alternating 1 ms slices for ~5 ms → the poller burned ≥2.5 ms.
+        assert!(poll_ns >= 2_500_000, "poll cpu = {poll_ns}");
+    }
+
+    #[test]
+    fn poller_notices_quickly_when_uncontended() {
+        let mut sim = Sim::new(params_no_overhead(2));
+        let gate = sim.new_gate();
+        let noticed = Rc::new(RefCell::new(None));
+        {
+            let noticed = Rc::clone(&noticed);
+            let mut state = 0;
+            sim.spawn("poller", move |ctx: &mut TaskCtx| match state {
+                0 => {
+                    state = 1;
+                    Op::BusyPoll { gate, target: 1 }
+                }
+                _ => {
+                    *noticed.borrow_mut() = Some(ctx.now_ns());
+                    Op::Done
+                }
+            });
+        }
+        sim.call_at(3_000_000, move |sim| sim.signal(gate, 1));
+        sim.run();
+        let t = noticed.borrow().unwrap();
+        // Notices within one poll quantum of the signal.
+        assert!(t >= 3_000_000 && t <= 3_000_000 + 2_000, "noticed at {t}");
+    }
+
+    #[test]
+    fn preempted_poller_notices_late_under_contention() {
+        // 1 core; poller + two compute hogs. Gate signaled at 1 ms, but
+        // the poller may be waiting in the run queue behind hogs, so the
+        // notice is delayed well beyond a quantum.
+        let mut sim = Sim::new(params_no_overhead(1));
+        let gate = sim.new_gate();
+        let noticed = Rc::new(RefCell::new(None));
+        {
+            let noticed = Rc::clone(&noticed);
+            let mut state = 0;
+            sim.spawn("poller", move |ctx: &mut TaskCtx| match state {
+                0 => {
+                    state = 1;
+                    Op::BusyPoll { gate, target: 1 }
+                }
+                _ => {
+                    *noticed.borrow_mut() = Some(ctx.now_ns());
+                    Op::Done
+                }
+            });
+        }
+        for _ in 0..2 {
+            sim.spawn(
+                "hog",
+                ComputeOnce {
+                    ns: 10_000_000,
+                    done_at: Rc::new(RefCell::new(None)),
+                    issued: false,
+                },
+            );
+        }
+        sim.call_at(1_000_000, move |sim| sim.signal(gate, 1));
+        sim.run();
+        let t = noticed.borrow().unwrap();
+        assert!(
+            t >= 1_500_000,
+            "contended poller should notice late, noticed at {t}"
+        );
+    }
+
+    #[test]
+    fn sleep_wakes_on_time() {
+        let mut sim = Sim::new(params_no_overhead(1));
+        let woke = Rc::new(RefCell::new(None));
+        {
+            let woke = Rc::clone(&woke);
+            let mut state = 0;
+            sim.spawn("sleeper", move |ctx: &mut TaskCtx| match state {
+                0 => {
+                    state = 1;
+                    Op::Sleep { ns: 7_000_000 }
+                }
+                _ => {
+                    *woke.borrow_mut() = Some(ctx.now_ns());
+                    Op::Done
+                }
+            });
+        }
+        sim.run();
+        assert_eq!(woke.borrow().unwrap(), 7_000_000);
+    }
+
+    #[test]
+    fn utilization_trace_reflects_busy_cores() {
+        let mut params = params_no_overhead(2);
+        params.trace_bucket_ns = Some(1_000_000);
+        let mut sim = Sim::new(params);
+        // one task busy for 10 ms on 2 cores → 50% utilization
+        sim.spawn(
+            "t",
+            ComputeOnce {
+                ns: 10_000_000,
+                done_at: Rc::new(RefCell::new(None)),
+                issued: false,
+            },
+        );
+        sim.run();
+        let util = sim.utilization();
+        assert!(util.len() >= 10);
+        for &u in &util[..10] {
+            assert!((u - 0.5).abs() < 0.01, "u={u}");
+        }
+    }
+
+    #[test]
+    fn determinism() {
+        let run = || {
+            let mut sim = Sim::new(params_no_overhead(3));
+            let gate = sim.new_gate();
+            for i in 0..20 {
+                let ns = 1_000_000 + i * 137_000;
+                sim.spawn(
+                    "t",
+                    ComputeOnce {
+                        ns,
+                        done_at: Rc::new(RefCell::new(None)),
+                        issued: false,
+                    },
+                );
+            }
+            sim.call_at(2_000_000, move |sim| sim.signal(gate, 1));
+            sim.run();
+            (sim.now_ns(), sim.stats().context_switches)
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn spawn_from_program() {
+        let mut sim = Sim::new(params_no_overhead(2));
+        let child_done = Rc::new(RefCell::new(None));
+        {
+            let child_done = Rc::clone(&child_done);
+            let mut state = 0;
+            sim.spawn("parent", move |_ctx: &mut TaskCtx| match state {
+                0 => {
+                    state = 1;
+                    Op::Compute { ns: 1_000_000 }
+                }
+                1 => {
+                    state = 2;
+                    let child_done = Rc::clone(&child_done);
+                    _ctx.spawn(
+                        "child",
+                        ComputeOnce {
+                            ns: 2_000_000,
+                            done_at: child_done,
+                            issued: false,
+                        },
+                    );
+                    Op::Done
+                }
+                _ => Op::Done,
+            });
+        }
+        sim.run();
+        assert_eq!(child_done.borrow().unwrap(), 3_000_000);
+    }
+
+    #[test]
+    fn run_until_stops_at_limit() {
+        let mut sim = Sim::new(params_no_overhead(1));
+        sim.spawn(
+            "t",
+            ComputeOnce {
+                ns: 100_000_000,
+                done_at: Rc::new(RefCell::new(None)),
+                issued: false,
+            },
+        );
+        let t = sim.run_until(5_000_000);
+        assert_eq!(t, 5_000_000);
+        // remaining work continues afterwards
+        let t2 = sim.run();
+        assert_eq!(t2, 100_000_000);
+    }
+
+    #[test]
+    fn wait_time_is_accounted() {
+        let mut sim = Sim::new(params_no_overhead(1));
+        let ids: Vec<TaskId> = (0..4)
+            .map(|_| {
+                sim.spawn(
+                    "t",
+                    ComputeOnce {
+                        ns: 4_000_000,
+                        done_at: Rc::new(RefCell::new(None)),
+                        issued: false,
+                    },
+                )
+            })
+            .collect();
+        sim.run();
+        let total_wait: u64 = ids.iter().map(|&id| sim.task_stats(id).wait_ns).sum();
+        // 4 tasks × 4 ms on one core: substantial queueing delay.
+        assert!(total_wait > 10_000_000, "wait={total_wait}");
+    }
+}

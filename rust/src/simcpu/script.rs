@@ -1,0 +1,237 @@
+//! Ergonomic sequential "scripts" over [`Program`](super::Program).
+//!
+//! Engine components are naturally sequential (tokenize → submit → wait
+//! → launch → …) with occasional dynamic continuations; writing them as
+//! raw `step` state machines is error-prone. A [`Script`] is a queue of
+//! instructions — fixed ops or thunks that run at their point in the
+//! sequence and may splice in more instructions (which is how loops and
+//! branches are expressed).
+
+use super::{GateId, Op, Program, TaskCtx};
+use std::collections::VecDeque;
+
+type Thunk = Box<dyn FnOnce(&mut TaskCtx) -> Vec<Instr>>;
+
+pub enum Instr {
+    Op(Op),
+    Call(Option<Thunk>),
+}
+
+impl Instr {
+    pub fn compute(ns: u64) -> Instr {
+        Instr::Op(Op::Compute { ns })
+    }
+    pub fn busy_poll(gate: GateId, target: u64) -> Instr {
+        Instr::Op(Op::BusyPoll { gate, target })
+    }
+    pub fn block(gate: GateId, target: u64) -> Instr {
+        Instr::Op(Op::Block { gate, target })
+    }
+    pub fn sleep(ns: u64) -> Instr {
+        Instr::Op(Op::Sleep { ns })
+    }
+    pub fn yield_now() -> Instr {
+        Instr::Op(Op::Yield)
+    }
+    /// Run a closure at this point; splice returned instructions next.
+    pub fn call(f: impl FnOnce(&mut TaskCtx) -> Vec<Instr> + 'static) -> Instr {
+        Instr::Call(Some(Box::new(f)))
+    }
+    /// Run a side-effecting closure producing no instructions.
+    pub fn effect(f: impl FnOnce(&mut TaskCtx) + 'static) -> Instr {
+        Instr::call(move |ctx| {
+            f(ctx);
+            Vec::new()
+        })
+    }
+}
+
+#[derive(Default)]
+pub struct Script {
+    queue: VecDeque<Instr>,
+}
+
+impl Script {
+    pub fn new() -> Script {
+        Script::default()
+    }
+
+    pub fn push(&mut self, instr: Instr) -> &mut Self {
+        self.queue.push_back(instr);
+        self
+    }
+
+    pub fn compute(mut self, ns: u64) -> Self {
+        self.queue.push_back(Instr::compute(ns));
+        self
+    }
+
+    pub fn busy_poll(mut self, gate: GateId, target: u64) -> Self {
+        self.queue.push_back(Instr::busy_poll(gate, target));
+        self
+    }
+
+    pub fn block(mut self, gate: GateId, target: u64) -> Self {
+        self.queue.push_back(Instr::block(gate, target));
+        self
+    }
+
+    pub fn sleep(mut self, ns: u64) -> Self {
+        self.queue.push_back(Instr::sleep(ns));
+        self
+    }
+
+    pub fn then(mut self, f: impl FnOnce(&mut TaskCtx) -> Vec<Instr> + 'static) -> Self {
+        self.queue.push_back(Instr::call(f));
+        self
+    }
+
+    pub fn effect(mut self, f: impl FnOnce(&mut TaskCtx) + 'static) -> Self {
+        self.queue.push_back(Instr::effect(f));
+        self
+    }
+
+    /// Repeat: run `body(i, ctx)` to produce instructions for iteration
+    /// i while `i < n`.
+    pub fn repeat(
+        mut self,
+        n: usize,
+        body: impl Fn(usize, &mut TaskCtx) -> Vec<Instr> + 'static,
+    ) -> Self {
+        self.queue.push_back(repeat_instr(0, n, std::rc::Rc::new(body)));
+        self
+    }
+}
+
+fn repeat_instr(
+    i: usize,
+    n: usize,
+    body: std::rc::Rc<dyn Fn(usize, &mut TaskCtx) -> Vec<Instr>>,
+) -> Instr {
+    Instr::call(move |ctx| {
+        if i >= n {
+            return Vec::new();
+        }
+        let mut instrs = body(i, ctx);
+        instrs.push(repeat_instr(i + 1, n, body));
+        instrs
+    })
+}
+
+impl Program for Script {
+    fn step(&mut self, ctx: &mut TaskCtx) -> Op {
+        loop {
+            match self.queue.pop_front() {
+                None => return Op::Done,
+                Some(Instr::Op(op)) => return op,
+                Some(Instr::Call(f)) => {
+                    let f = f.expect("thunk consumed once");
+                    let instrs = f(ctx);
+                    for instr in instrs.into_iter().rev() {
+                        self.queue.push_front(instr);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simcpu::{Sim, SimParams};
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    fn sim1() -> Sim {
+        Sim::new(SimParams {
+            cores: 1,
+            context_switch_ns: 0,
+            timeslice_ns: 1_000_000,
+            poll_quantum_ns: 1_000,
+            trace_bucket_ns: None,
+        })
+    }
+
+    #[test]
+    fn sequential_script_runs_in_order() {
+        let mut sim = sim1();
+        let log = Rc::new(RefCell::new(Vec::new()));
+        let l1 = Rc::clone(&log);
+        let l2 = Rc::clone(&log);
+        let script = Script::new()
+            .compute(1_000_000)
+            .effect(move |ctx| l1.borrow_mut().push(("a", ctx.now_ns())))
+            .compute(2_000_000)
+            .effect(move |ctx| l2.borrow_mut().push(("b", ctx.now_ns())));
+        sim.spawn("s", script);
+        sim.run();
+        let log = log.borrow();
+        assert_eq!(*log, vec![("a", 1_000_000), ("b", 3_000_000)]);
+    }
+
+    #[test]
+    fn dynamic_continuation() {
+        let mut sim = sim1();
+        let done = Rc::new(RefCell::new(0u64));
+        let d = Rc::clone(&done);
+        let script = Script::new().then(move |_ctx| {
+            // decide at runtime to compute then record
+            vec![
+                Instr::compute(4_000_000),
+                Instr::effect(move |ctx| *d.borrow_mut() = ctx.now_ns()),
+            ]
+        });
+        sim.spawn("s", script);
+        sim.run();
+        assert_eq!(*done.borrow(), 4_000_000);
+    }
+
+    #[test]
+    fn repeat_loops_n_times() {
+        let mut sim = sim1();
+        let count = Rc::new(RefCell::new(0));
+        let c = Rc::clone(&count);
+        let script = Script::new().repeat(5, move |_i, _ctx| {
+            let c = Rc::clone(&c);
+            vec![
+                Instr::compute(1_000_000),
+                Instr::effect(move |_| *c.borrow_mut() += 1),
+            ]
+        });
+        sim.spawn("s", script);
+        let end = sim.run();
+        assert_eq!(*count.borrow(), 5);
+        assert_eq!(end, 5_000_000);
+    }
+
+    #[test]
+    fn script_with_gates() {
+        let mut sim = sim1();
+        let gate = sim.new_gate();
+        let woke = Rc::new(RefCell::new(0u64));
+        let w = Rc::clone(&woke);
+        sim.spawn(
+            "waiter",
+            Script::new()
+                .block(gate, 1)
+                .effect(move |ctx| *w.borrow_mut() = ctx.now_ns()),
+        );
+        sim.spawn(
+            "signaler",
+            Script::new()
+                .compute(3_000_000)
+                .effect(move |ctx| ctx.signal(gate, 1)),
+        );
+        sim.run();
+        assert_eq!(*woke.borrow(), 3_000_000);
+    }
+
+    #[test]
+    fn empty_script_finishes_immediately() {
+        let mut sim = sim1();
+        let id = sim.spawn("s", Script::new());
+        sim.run();
+        assert!(sim.task_finished(id));
+    }
+}

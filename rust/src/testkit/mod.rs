@@ -1,0 +1,378 @@
+//! Minimal property-based testing framework (proptest is unavailable
+//! offline).
+//!
+//! Provides value generators driven by the crate's deterministic [`Rng`],
+//! a `check` runner that searches for counterexamples, and greedy
+//! shrinking for the common shapes we test (integers, vectors, strings).
+//! Used throughout the crate for coordinator invariants: scheduler
+//! conservation, queue FIFO-ness, KV-cache accounting, tokenizer
+//! round-trips.
+
+use crate::util::rng::Rng;
+
+/// A generator produces a random value and can propose smaller variants
+/// of a failing value (shrink candidates, largest-step first).
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    fn shrink(&self, value: &Self::Value) -> Vec<Self::Value> {
+        let _ = value;
+        Vec::new()
+    }
+}
+
+/// Configuration for a property run.
+#[derive(Clone)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            cases: 256,
+            seed: 0xC0FFEE,
+            max_shrink_steps: 512,
+        }
+    }
+}
+
+/// Run `prop` on `cases` generated inputs; on failure, shrink and panic
+/// with the minimal counterexample found.
+pub fn check<G, F>(gen: &G, prop: F)
+where
+    G: Gen,
+    F: Fn(&G::Value) -> bool,
+{
+    check_with(Config::default(), gen, prop)
+}
+
+pub fn check_with<G, F>(config: Config, gen: &G, prop: F)
+where
+    G: Gen,
+    F: Fn(&G::Value) -> bool,
+{
+    let mut rng = Rng::new(config.seed);
+    for case in 0..config.cases {
+        let value = gen.generate(&mut rng);
+        if !prop(&value) {
+            let minimal = shrink_loop(gen, value, &prop, config.max_shrink_steps);
+            panic!(
+                "property failed (case {case}/{}; seed {:#x}).\nminimal counterexample: {:?}",
+                config.cases, config.seed, minimal
+            );
+        }
+    }
+}
+
+fn shrink_loop<G, F>(gen: &G, mut failing: G::Value, prop: &F, max_steps: usize) -> G::Value
+where
+    G: Gen,
+    F: Fn(&G::Value) -> bool,
+{
+    let mut steps = 0;
+    'outer: while steps < max_steps {
+        for candidate in gen.shrink(&failing) {
+            steps += 1;
+            if !prop(&candidate) {
+                failing = candidate;
+                continue 'outer;
+            }
+            if steps >= max_steps {
+                break;
+            }
+        }
+        break; // no shrink candidate fails → minimal
+    }
+    failing
+}
+
+// ---------------------------------------------------------------------
+// Generators
+// ---------------------------------------------------------------------
+
+/// Uniform u64 in [lo, hi], shrinking toward lo.
+pub struct U64Range {
+    pub lo: u64,
+    pub hi: u64,
+}
+
+impl Gen for U64Range {
+    type Value = u64;
+    fn generate(&self, rng: &mut Rng) -> u64 {
+        rng.range_u64(self.lo, self.hi)
+    }
+    fn shrink(&self, value: &u64) -> Vec<u64> {
+        let mut out = Vec::new();
+        let v = *value;
+        if v > self.lo {
+            out.push(self.lo);
+            let mid = self.lo + (v - self.lo) / 2;
+            if mid != self.lo && mid != v {
+                out.push(mid);
+            }
+            if v - 1 != self.lo && v - 1 != mid {
+                out.push(v - 1);
+            }
+        }
+        out
+    }
+}
+
+/// Uniform f64 in [lo, hi), shrinking toward lo.
+pub struct F64Range {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Gen for F64Range {
+    type Value = f64;
+    fn generate(&self, rng: &mut Rng) -> f64 {
+        rng.range_f64(self.lo, self.hi)
+    }
+    fn shrink(&self, value: &f64) -> Vec<f64> {
+        let v = *value;
+        if v > self.lo {
+            vec![self.lo, self.lo + (v - self.lo) / 2.0]
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+/// Vector of values from an element generator, with random length in
+/// [min_len, max_len]. Shrinks by halving length, dropping elements, and
+/// shrinking individual elements.
+pub struct VecGen<G> {
+    pub elem: G,
+    pub min_len: usize,
+    pub max_len: usize,
+}
+
+impl<G: Gen> Gen for VecGen<G> {
+    type Value = Vec<G::Value>;
+    fn generate(&self, rng: &mut Rng) -> Vec<G::Value> {
+        let len = rng.range_usize(self.min_len, self.max_len);
+        (0..len).map(|_| self.elem.generate(rng)).collect()
+    }
+    fn shrink(&self, value: &Vec<G::Value>) -> Vec<Vec<G::Value>> {
+        let mut out = Vec::new();
+        let n = value.len();
+        if n > self.min_len {
+            // first half / second half
+            let half = (n / 2).max(self.min_len);
+            out.push(value[..half].to_vec());
+            out.push(value[n - half..].to_vec());
+            // drop one element
+            if n <= 16 {
+                for i in 0..n {
+                    if n - 1 >= self.min_len {
+                        let mut v = value.clone();
+                        v.remove(i);
+                        out.push(v);
+                    }
+                }
+            } else if n - 1 >= self.min_len {
+                let mut v = value.clone();
+                v.pop();
+                out.push(v);
+            }
+        }
+        // shrink each element (bounded)
+        for i in 0..n.min(8) {
+            for cand in self.elem.shrink(&value[i]) {
+                let mut v = value.clone();
+                v[i] = cand;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+/// ASCII-ish strings built from a fixed alphabet, shrinking by halving.
+pub struct StringGen {
+    pub alphabet: &'static [u8],
+    pub min_len: usize,
+    pub max_len: usize,
+}
+
+impl StringGen {
+    pub fn ascii_text(min_len: usize, max_len: usize) -> Self {
+        Self {
+            alphabet: b"abcdefghijklmnopqrstuvwxyz ABCDEFGH.,:;!?0123456789'\"-\n",
+            min_len,
+            max_len,
+        }
+    }
+}
+
+impl Gen for StringGen {
+    type Value = String;
+    fn generate(&self, rng: &mut Rng) -> String {
+        let len = rng.range_usize(self.min_len, self.max_len);
+        (0..len)
+            .map(|_| *rng.choose(self.alphabet) as char)
+            .collect()
+    }
+    fn shrink(&self, value: &String) -> Vec<String> {
+        let n = value.chars().count();
+        if n <= self.min_len {
+            return Vec::new();
+        }
+        let chars: Vec<char> = value.chars().collect();
+        let half = (n / 2).max(self.min_len);
+        vec![
+            chars[..half].iter().collect(),
+            chars[n - half..].iter().collect(),
+        ]
+    }
+}
+
+/// Arbitrary unicode strings (for tokenizer byte-fallback paths).
+pub struct UnicodeGen {
+    pub min_len: usize,
+    pub max_len: usize,
+}
+
+impl Gen for UnicodeGen {
+    type Value = String;
+    fn generate(&self, rng: &mut Rng) -> String {
+        let len = rng.range_usize(self.min_len, self.max_len);
+        (0..len)
+            .map(|_| {
+                // mix ASCII with multi-byte scalars
+                match rng.below(4) {
+                    0 | 1 => (b'a' + rng.below(26) as u8) as char,
+                    2 => char::from_u32(0xA0 + rng.below(0x500) as u32).unwrap_or('é'),
+                    _ => char::from_u32(0x4E00 + rng.below(0x100) as u32).unwrap_or('中'),
+                }
+            })
+            .collect()
+    }
+    fn shrink(&self, value: &String) -> Vec<String> {
+        let chars: Vec<char> = value.chars().collect();
+        let n = chars.len();
+        if n <= self.min_len {
+            return Vec::new();
+        }
+        let half = (n / 2).max(self.min_len);
+        vec![
+            chars[..half].iter().collect(),
+            chars[n - half..].iter().collect(),
+        ]
+    }
+}
+
+/// Pair generator.
+pub struct PairGen<A, B> {
+    pub a: A,
+    pub b: B,
+}
+
+impl<A: Gen, B: Gen> Gen for PairGen<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.a.generate(rng), self.b.generate(rng))
+    }
+    fn shrink(&self, value: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .a
+            .shrink(&value.0)
+            .into_iter()
+            .map(|a| (a, value.1.clone()))
+            .collect();
+        out.extend(
+            self.b
+                .shrink(&value.1)
+                .into_iter()
+                .map(|b| (value.0.clone(), b)),
+        );
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(&U64Range { lo: 0, hi: 1000 }, |&x| x <= 1000);
+    }
+
+    #[test]
+    fn finds_and_shrinks_counterexample() {
+        let result = std::panic::catch_unwind(|| {
+            check(&U64Range { lo: 0, hi: 10_000 }, |&x| x < 500);
+        });
+        let msg = match result {
+            Err(e) => *e.downcast::<String>().expect("panic payload"),
+            Ok(()) => panic!("property should have failed"),
+        };
+        // Shrinking should find a counterexample at or very near 500.
+        let minimal: u64 = msg
+            .rsplit(": ")
+            .next()
+            .unwrap()
+            .trim()
+            .parse()
+            .expect("numeric counterexample");
+        assert!((500..=600).contains(&minimal), "minimal={minimal}");
+    }
+
+    #[test]
+    fn vec_gen_respects_bounds() {
+        let g = VecGen {
+            elem: U64Range { lo: 1, hi: 9 },
+            min_len: 2,
+            max_len: 20,
+        };
+        check(&g, |v| v.len() >= 2 && v.len() <= 20 && v.iter().all(|&x| (1..=9).contains(&x)));
+    }
+
+    #[test]
+    fn vec_shrink_reduces_length() {
+        let result = std::panic::catch_unwind(|| {
+            let g = VecGen {
+                elem: U64Range { lo: 0, hi: 100 },
+                min_len: 0,
+                max_len: 50,
+            };
+            check(&g, |v: &Vec<u64>| v.len() < 3);
+        });
+        let msg = match result {
+            Err(e) => *e.downcast::<String>().unwrap(),
+            Ok(()) => panic!("should fail"),
+        };
+        // minimal counterexample should be a 3-element vector
+        let count = msg.matches(',').count();
+        assert!(count <= 3, "shrunk vector should be small: {msg}");
+    }
+
+    #[test]
+    fn string_gen_in_alphabet() {
+        let g = StringGen::ascii_text(0, 64);
+        check(&g, |s| s.chars().all(|c| c.is_ascii()));
+    }
+
+    #[test]
+    fn unicode_gen_valid() {
+        let g = UnicodeGen {
+            min_len: 0,
+            max_len: 32,
+        };
+        check(&g, |s| s.chars().count() <= 32);
+    }
+
+    #[test]
+    fn pair_gen_works() {
+        let g = PairGen {
+            a: U64Range { lo: 0, hi: 10 },
+            b: F64Range { lo: 0.0, hi: 1.0 },
+        };
+        check(&g, |(x, y)| *x <= 10 && *y < 1.0);
+    }
+}

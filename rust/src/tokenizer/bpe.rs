@@ -1,0 +1,277 @@
+//! Byte-level BPE encoder/decoder.
+//!
+//! The encode path mirrors production tokenizers (HF `tokenizers`):
+//! pre-tokenize into words, look each word up in a cache, and for misses
+//! run the greedy lowest-rank merge loop over the word's byte symbols.
+//! Because base tokens cover all 256 bytes, any input round-trips
+//! exactly (byte fallback), which the property tests verify.
+
+use super::vocab::{TokenId, Vocab};
+use rustc_hash::FxHashMap;
+
+/// Pre-tokenizer: split text into words, each carrying its leading
+/// whitespace (GPT-2-style "Ġword" behavior, expressed directly as
+/// bytes). Contiguous punctuation and digit runs split off on their own,
+/// matching how real BPE pre-tokenizers keep categories separate.
+pub fn pre_tokenize(text: &str) -> Vec<&[u8]> {
+    let bytes = text.as_bytes();
+    let mut words = Vec::new();
+    let mut start = 0;
+    let mut i = 0;
+
+    #[derive(PartialEq, Clone, Copy)]
+    enum Class {
+        Alpha,
+        Digit,
+        Space,
+        Punct,
+    }
+    fn classify(b: u8) -> Class {
+        if b.is_ascii_alphabetic() || b >= 0x80 {
+            Class::Alpha
+        } else if b.is_ascii_digit() {
+            Class::Digit
+        } else if b == b' ' || b == b'\t' || b == b'\n' || b == b'\r' {
+            Class::Space
+        } else {
+            Class::Punct
+        }
+    }
+
+    while i < bytes.len() {
+        // A word = optional single leading space + run of one class.
+        let word_start = i;
+        if bytes[i] == b' ' && i + 1 < bytes.len() && classify(bytes[i + 1]) != Class::Space {
+            i += 1;
+        }
+        if i >= bytes.len() {
+            words.push(&bytes[word_start..]);
+            break;
+        }
+        let class = classify(bytes[i]);
+        i += 1;
+        while i < bytes.len() && classify(bytes[i]) == class && bytes[i] != b' ' {
+            i += 1;
+        }
+        words.push(&bytes[word_start..i]);
+        start = i;
+    }
+    let _ = start;
+    words
+}
+
+/// BPE encoder with a word cache.
+pub struct Encoder<'v> {
+    vocab: &'v Vocab,
+    cache: FxHashMap<Vec<u8>, Vec<TokenId>>,
+    cache_hits: u64,
+    cache_misses: u64,
+}
+
+impl<'v> Encoder<'v> {
+    pub fn new(vocab: &'v Vocab) -> Encoder<'v> {
+        Encoder {
+            vocab,
+            cache: FxHashMap::default(),
+            cache_hits: 0,
+            cache_misses: 0,
+        }
+    }
+
+    pub fn vocab(&self) -> &Vocab {
+        self.vocab
+    }
+
+    pub fn cache_stats(&self) -> (u64, u64) {
+        (self.cache_hits, self.cache_misses)
+    }
+
+    /// Encode a full text.
+    pub fn encode(&mut self, text: &str) -> Vec<TokenId> {
+        let mut out = Vec::with_capacity(text.len() / 3);
+        for word in pre_tokenize(text) {
+            if let Some(ids) = self.cache.get(word) {
+                self.cache_hits += 1;
+                out.extend_from_slice(ids);
+            } else {
+                self.cache_misses += 1;
+                let ids = merge_word(self.vocab, word);
+                out.extend_from_slice(&ids);
+                // bound the cache to avoid unbounded growth on adversarial
+                // input; real tokenizers do the same
+                if self.cache.len() < 65_536 {
+                    self.cache.insert(word.to_vec(), ids);
+                }
+            }
+        }
+        out
+    }
+
+    /// Decode token ids back into text (exact byte round-trip; invalid
+    /// UTF-8 from truncated sequences is replaced, as in production
+    /// detokenizers).
+    pub fn decode(&self, ids: &[TokenId]) -> String {
+        let mut bytes = Vec::with_capacity(ids.len() * 3);
+        for &id in ids {
+            bytes.extend_from_slice(self.vocab.token_bytes(id));
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+/// The greedy BPE merge loop for a single word: repeatedly apply the
+/// lowest-rank applicable merge until none applies.
+pub fn merge_word(vocab: &Vocab, word: &[u8]) -> Vec<TokenId> {
+    let mut symbols: Vec<TokenId> = word.iter().map(|&b| b as TokenId).collect();
+    if symbols.len() < 2 {
+        return symbols;
+    }
+    loop {
+        // find the lowest-rank applicable merge
+        let mut best: Option<(u32, usize, TokenId)> = None; // (rank, index, new_id)
+        for i in 0..symbols.len() - 1 {
+            if let Some((rank, new_id)) = vocab.merge_lookup(symbols[i], symbols[i + 1]) {
+                if best.map(|(r, _, _)| rank < r).unwrap_or(true) {
+                    best = Some((rank, i, new_id));
+                }
+            }
+        }
+        match best {
+            None => break,
+            Some((_, i, new_id)) => {
+                symbols[i] = new_id;
+                symbols.remove(i + 1);
+                if symbols.len() < 2 {
+                    break;
+                }
+            }
+        }
+    }
+    symbols
+}
+
+/// Convenience: one-shot encode without an explicit encoder (no cache).
+pub fn encode_uncached(vocab: &Vocab, text: &str) -> Vec<TokenId> {
+    let mut out = Vec::with_capacity(text.len() / 3);
+    for word in pre_tokenize(text) {
+        out.extend_from_slice(&merge_word(vocab, word));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tokenizer::vocab::Merge;
+
+    fn tiny_vocab() -> Vocab {
+        // learn " t", "th", "the" style merges manually
+        let mut v = Vocab::bytes_only();
+        let th = v.push_merge(Merge {
+            left: b't' as u32,
+            right: b'h' as u32,
+        }); // 256 = "th"
+        v.push_merge(Merge {
+            left: th,
+            right: b'e' as u32,
+        }); // 257 = "the"
+        v.push_merge(Merge {
+            left: b' ' as u32,
+            right: th,
+        }); // 258 = " th"
+        v
+    }
+
+    #[test]
+    fn pre_tokenize_splits_words_with_leading_space() {
+        let words = pre_tokenize("the cat sat");
+        let strs: Vec<&str> = words
+            .iter()
+            .map(|w| std::str::from_utf8(w).unwrap())
+            .collect();
+        assert_eq!(strs, vec!["the", " cat", " sat"]);
+    }
+
+    #[test]
+    fn pre_tokenize_separates_punctuation_and_digits() {
+        let words = pre_tokenize("abc, 123!");
+        let strs: Vec<&str> = words
+            .iter()
+            .map(|w| std::str::from_utf8(w).unwrap())
+            .collect();
+        assert_eq!(strs, vec!["abc", ",", " 123", "!"]);
+    }
+
+    #[test]
+    fn pre_tokenize_covers_all_bytes() {
+        let text = "a  b\n\ncd médio 東京 x";
+        let words = pre_tokenize(text);
+        let total: usize = words.iter().map(|w| w.len()).sum();
+        assert_eq!(total, text.len(), "no bytes lost");
+    }
+
+    #[test]
+    fn merge_word_applies_rank_order() {
+        let v = tiny_vocab();
+        let ids = merge_word(&v, b"the");
+        assert_eq!(ids, vec![257]); // "the" fully merged
+        let ids = merge_word(&v, b" th");
+        assert_eq!(ids, vec![258]);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let v = tiny_vocab();
+        let mut enc = Encoder::new(&v);
+        let text = "the theme that thinks, thé 123 東京!";
+        let ids = enc.encode(text);
+        assert_eq!(enc.decode(&ids), text);
+    }
+
+    #[test]
+    fn bytes_only_roundtrip_any_input() {
+        let v = Vocab::bytes_only();
+        let mut enc = Encoder::new(&v);
+        let text = "ünïcødé ≠ ascii 🚀";
+        let ids = enc.encode(text);
+        assert_eq!(ids.len(), text.len()); // 1 token per byte
+        assert_eq!(enc.decode(&ids), text);
+    }
+
+    #[test]
+    fn merges_compress() {
+        let v = tiny_vocab();
+        let n_with = encode_uncached(&v, "the the the").len();
+        let n_without = encode_uncached(&Vocab::bytes_only(), "the the the").len();
+        assert!(n_with < n_without);
+    }
+
+    #[test]
+    fn cache_hits_on_repeats() {
+        let v = tiny_vocab();
+        let mut enc = Encoder::new(&v);
+        // words: "the", " cat", " the", " cat", " the", " cat"
+        // unique: {"the", " cat", " the"} → 3 misses, 3 hits
+        enc.encode("the cat the cat the cat");
+        let (hits, misses) = enc.cache_stats();
+        assert_eq!((hits, misses), (3, 3));
+    }
+
+    #[test]
+    fn empty_and_single_byte() {
+        let v = tiny_vocab();
+        let mut enc = Encoder::new(&v);
+        assert!(enc.encode("").is_empty());
+        assert_eq!(enc.encode("x"), vec![b'x' as u32]);
+    }
+
+    #[test]
+    fn cached_equals_uncached() {
+        let v = tiny_vocab();
+        let mut enc = Encoder::new(&v);
+        let text = "the theater thesis, the theme.";
+        assert_eq!(enc.encode(text), encode_uncached(&v, text));
+        // second pass (cache warm) still identical
+        assert_eq!(enc.encode(text), encode_uncached(&v, text));
+    }
+}

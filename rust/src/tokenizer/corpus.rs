@@ -1,0 +1,135 @@
+//! Synthetic text corpus generation.
+//!
+//! The paper's workloads are natural-language prompts (1.8k–114k
+//! tokens). We have no proprietary prompt corpus, so we synthesize
+//! Zipf-distributed text over a generated lexicon: realistic word-length
+//! and frequency structure so the BPE trainer and encoder behave like
+//! they do on English (merges learned, 3–4 bytes/token), per the
+//! DESIGN.md substitution table.
+
+use crate::util::rng::Rng;
+
+/// A generated lexicon with Zipf-ranked word frequencies.
+pub struct Lexicon {
+    words: Vec<String>,
+    zipf_s: f64,
+}
+
+impl Lexicon {
+    /// Build a lexicon of `n_words` pseudo-words with natural length
+    /// distribution (2–12 chars, mode around 4–6).
+    pub fn generate(seed: u64, n_words: usize) -> Lexicon {
+        assert!(n_words > 0);
+        let mut rng = Rng::new(seed);
+        const ONSETS: &[&str] = &[
+            "b", "br", "c", "ch", "cl", "d", "dr", "f", "fl", "g", "gr", "h", "j", "k", "l",
+            "m", "n", "p", "pr", "pl", "qu", "r", "s", "st", "str", "sh", "t", "th", "tr", "v",
+            "w", "wh", "z", "",
+        ];
+        const VOWELS: &[&str] = &["a", "e", "i", "o", "u", "ai", "ea", "ee", "io", "ou"];
+        const CODAS: &[&str] = &[
+            "", "b", "ck", "d", "ff", "g", "l", "ll", "m", "n", "nd", "ng", "nt", "p", "r",
+            "rd", "rk", "s", "ss", "st", "t", "tch", "x",
+        ];
+        let mut words = Vec::with_capacity(n_words);
+        let mut seen = std::collections::HashSet::new();
+        while words.len() < n_words {
+            let syllables = 1 + rng.choose_weighted(&[5.0, 3.0, 1.5, 0.5]);
+            let mut w = String::new();
+            for _ in 0..syllables {
+                w.push_str(*rng.choose(ONSETS));
+                w.push_str(*rng.choose(VOWELS));
+                w.push_str(*rng.choose(CODAS));
+            }
+            if w.len() >= 2 && w.len() <= 14 && seen.insert(w.clone()) {
+                words.push(w);
+            }
+        }
+        Lexicon { words, zipf_s: 1.07 }
+    }
+
+    pub fn n_words(&self) -> usize {
+        self.words.len()
+    }
+
+    /// Sample a text of approximately `target_chars` characters.
+    pub fn sample_text(&self, rng: &mut Rng, target_chars: usize) -> String {
+        let mut out = String::with_capacity(target_chars + 16);
+        while out.len() < target_chars {
+            if !out.is_empty() {
+                // occasional sentence structure
+                match rng.below(32) {
+                    0 => out.push_str(". "),
+                    1 => out.push_str(", "),
+                    _ => out.push(' '),
+                }
+            }
+            let idx = rng.zipf(self.words.len(), self.zipf_s);
+            out.push_str(&self.words[idx]);
+        }
+        out
+    }
+
+    /// Sample a corpus for tokenizer training: `n_docs` documents of
+    /// `doc_chars` characters each.
+    pub fn sample_corpus(&self, rng: &mut Rng, n_docs: usize, doc_chars: usize) -> Vec<String> {
+        (0..n_docs)
+            .map(|_| self.sample_text(rng, doc_chars))
+            .collect()
+    }
+}
+
+/// Standard corpus + vocab used across examples/benches: deterministic,
+/// ~300 KB training text, 4k merges.
+pub fn standard_vocab() -> crate::tokenizer::vocab::Vocab {
+    let lex = Lexicon::generate(0xBEEF, 2_000);
+    let mut rng = Rng::new(0xF00D);
+    let corpus = lex.sample_corpus(&mut rng, 64, 4_096);
+    crate::tokenizer::train::train(&corpus, 4_000)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tokenizer::bpe::encode_uncached;
+    use crate::tokenizer::train::train;
+
+    #[test]
+    fn lexicon_is_deterministic() {
+        let a = Lexicon::generate(7, 100);
+        let b = Lexicon::generate(7, 100);
+        assert_eq!(a.words, b.words);
+    }
+
+    #[test]
+    fn words_have_natural_lengths() {
+        let lex = Lexicon::generate(11, 500);
+        let mean: f64 =
+            lex.words.iter().map(|w| w.len() as f64).sum::<f64>() / lex.words.len() as f64;
+        assert!((3.0..9.0).contains(&mean), "mean word length {mean}");
+    }
+
+    #[test]
+    fn sample_text_hits_target_length() {
+        let lex = Lexicon::generate(13, 300);
+        let mut rng = Rng::new(1);
+        let text = lex.sample_text(&mut rng, 10_000);
+        assert!(text.len() >= 10_000 && text.len() < 10_100);
+    }
+
+    #[test]
+    fn zipf_text_is_compressible_by_bpe() {
+        let lex = Lexicon::generate(17, 500);
+        let mut rng = Rng::new(2);
+        let corpus = lex.sample_corpus(&mut rng, 16, 2_048);
+        let vocab = train(&corpus, 500);
+        let test_text = lex.sample_text(&mut rng, 4_096);
+        let n_tokens = encode_uncached(&vocab, &test_text).len();
+        let bytes_per_token = test_text.len() as f64 / n_tokens as f64;
+        // English-like BPE gives ~3–4.5 bytes/token; accept a wide band.
+        assert!(
+            bytes_per_token > 2.0,
+            "bytes/token = {bytes_per_token:.2} (no compression learned)"
+        );
+    }
+}

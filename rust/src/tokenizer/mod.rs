@@ -1,0 +1,91 @@
+//! Byte-level BPE tokenizer substrate.
+//!
+//! The paper's first CPU bottleneck (§II-A ①, §IV-A/B) is tokenization:
+//! a real, CPU-intensive, multithreaded subword tokenizer on the request
+//! critical path. This module is a from-scratch implementation with the
+//! same structure as HuggingFace's Rust tokenizers: byte-level BPE with
+//! learned merges ([`train`]), a cached greedy encoder ([`bpe`]), a
+//! worker-pool batch front-end ([`parallel`]), and a synthetic corpus
+//! generator ([`corpus`]) standing in for natural-language prompts.
+//!
+//! It serves two roles:
+//! * Track R (real execution): actually tokenizes/detokenizes the served
+//!   requests.
+//! * Track S (simulation): its measured per-token cost calibrates the
+//!   `tokenize_s_per_token` constant in [`crate::config::SystemSpec`].
+
+pub mod bpe;
+pub mod corpus;
+pub mod parallel;
+pub mod train;
+pub mod vocab;
+
+pub use bpe::{encode_uncached, Encoder};
+pub use corpus::Lexicon;
+pub use parallel::BatchTokenizer;
+pub use train::train;
+pub use vocab::{Merge, TokenId, Vocab};
+
+#[cfg(test)]
+mod proptests {
+    use super::*;
+    use crate::testkit::{self, StringGen, UnicodeGen};
+
+    fn prop_vocab() -> Vocab {
+        let lex = Lexicon::generate(21, 400);
+        let mut rng = crate::util::rng::Rng::new(22);
+        let corpus = lex.sample_corpus(&mut rng, 8, 2_048);
+        train(&corpus, 400)
+    }
+
+    #[test]
+    fn prop_roundtrip_ascii() {
+        let vocab = prop_vocab();
+        testkit::check(&StringGen::ascii_text(0, 200), |text| {
+            let mut enc = Encoder::new(&vocab);
+            let ids = enc.encode(text);
+            enc.decode(&ids) == *text
+        });
+    }
+
+    #[test]
+    fn prop_roundtrip_unicode() {
+        let vocab = prop_vocab();
+        testkit::check(
+            &UnicodeGen {
+                min_len: 0,
+                max_len: 120,
+            },
+            |text| {
+                let mut enc = Encoder::new(&vocab);
+                let ids = enc.encode(text);
+                enc.decode(&ids) == *text
+            },
+        );
+    }
+
+    #[test]
+    fn prop_token_count_at_most_bytes() {
+        let vocab = prop_vocab();
+        testkit::check(&StringGen::ascii_text(0, 300), |text| {
+            encode_uncached(&vocab, text).len() <= text.len()
+        });
+    }
+
+    #[test]
+    fn prop_concat_of_decodes_equals_decode_of_concat() {
+        let vocab = prop_vocab();
+        let gen = testkit::PairGen {
+            a: StringGen::ascii_text(0, 80),
+            b: StringGen::ascii_text(0, 80),
+        };
+        testkit::check(&gen, |(a, b)| {
+            let mut enc = Encoder::new(&vocab);
+            let ia = enc.encode(a);
+            let ib = enc.encode(b);
+            let mut joined = ia.clone();
+            joined.extend(&ib);
+            enc.decode(&joined) == format!("{}{}", enc.decode(&ia), enc.decode(&ib))
+        });
+    }
+}

@@ -1,0 +1,198 @@
+//! Multithreaded batch tokenization — the stand-in for HuggingFace
+//! Tokenizers' Rayon pool (`TOKENIZERS_PARALLELISM=true`), which the
+//! paper identifies as the main CPU-contention source in the API-server
+//! process (§IV-B ①).
+//!
+//! Also provides the *calibration* hook: measuring real wall-clock
+//! throughput of this encoder gives the `tokenize_s_per_token` constant
+//! the simulator uses.
+
+use super::bpe::encode_uncached;
+use super::vocab::{TokenId, Vocab};
+use crate::util::pool::ThreadPool;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Thread-safe batch tokenizer. The vocab is shared read-only across
+/// workers (merge lookups are pure), exactly like HF's Rust tokenizer.
+pub struct BatchTokenizer {
+    vocab: Arc<Vocab>,
+    pool: ThreadPool,
+}
+
+impl BatchTokenizer {
+    pub fn new(vocab: Vocab, threads: usize) -> BatchTokenizer {
+        BatchTokenizer {
+            vocab: Arc::new(vocab),
+            pool: ThreadPool::new(threads),
+        }
+    }
+
+    pub fn vocab(&self) -> &Vocab {
+        &self.vocab
+    }
+
+    pub fn n_threads(&self) -> usize {
+        self.pool.size()
+    }
+
+    /// Encode one text on the calling thread.
+    pub fn encode_one(&self, text: &str) -> Vec<TokenId> {
+        encode_uncached(&self.vocab, text)
+    }
+
+    /// Encode a batch across the pool, preserving order. For long inputs
+    /// each text additionally splits into chunks so a single huge prompt
+    /// parallelizes (mirroring how serving stacks shard tokenization).
+    pub fn encode_batch(&self, texts: Vec<String>) -> Vec<Vec<TokenId>> {
+        let vocab = Arc::clone(&self.vocab);
+        self.pool.parallel_map(texts, move |text| {
+            encode_uncached(&vocab, &text)
+        })
+    }
+
+    /// Encode one very long text by splitting at word boundaries into
+    /// ~`chunk_bytes` chunks processed in parallel. Chunk boundaries are
+    /// placed at spaces so merges never straddle a split (identical
+    /// output to single-threaded encoding).
+    pub fn encode_long(&self, text: &str, chunk_bytes: usize) -> Vec<TokenId> {
+        assert!(chunk_bytes > 0);
+        if text.len() <= chunk_bytes {
+            return self.encode_one(text);
+        }
+        let chunks = split_at_spaces(text, chunk_bytes);
+        let vocab = Arc::clone(&self.vocab);
+        let owned: Vec<String> = chunks.into_iter().map(|s| s.to_string()).collect();
+        let parts = self
+            .pool
+            .parallel_map(owned, move |chunk| encode_uncached(&vocab, &chunk));
+        parts.into_iter().flatten().collect()
+    }
+}
+
+/// Split text into chunks of roughly `chunk_bytes`, only at space
+/// boundaries (the space stays with the following chunk, matching the
+/// pre-tokenizer's leading-space convention).
+pub fn split_at_spaces(text: &str, chunk_bytes: usize) -> Vec<&str> {
+    let bytes = text.as_bytes();
+    let mut out = Vec::new();
+    let mut start = 0;
+    while start < bytes.len() {
+        let tentative_end = (start + chunk_bytes).min(bytes.len());
+        if tentative_end == bytes.len() {
+            out.push(&text[start..]);
+            break;
+        }
+        // scan forward to the next space; split *before* it
+        let mut end = tentative_end;
+        while end < bytes.len() && bytes[end] != b' ' {
+            end += 1;
+        }
+        out.push(&text[start..end]);
+        start = end;
+    }
+    out
+}
+
+/// Measured tokenizer throughput (for simulator calibration).
+#[derive(Debug, Clone)]
+pub struct Calibration {
+    pub tokens: u64,
+    pub bytes: u64,
+    pub wall_s: f64,
+}
+
+impl Calibration {
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.tokens as f64 / self.wall_s
+    }
+    pub fn s_per_token(&self) -> f64 {
+        self.wall_s / self.tokens as f64
+    }
+    pub fn bytes_per_token(&self) -> f64 {
+        self.bytes as f64 / self.tokens as f64
+    }
+}
+
+/// Measure single-core encode throughput of this machine's real BPE
+/// implementation on a synthetic corpus.
+pub fn calibrate(vocab: &Vocab, total_bytes: usize) -> Calibration {
+    let lex = super::corpus::Lexicon::generate(0xCAFE, 1_000);
+    let mut rng = crate::util::rng::Rng::new(0xD00D);
+    let text = lex.sample_text(&mut rng, total_bytes);
+    let start = Instant::now();
+    let ids = encode_uncached(vocab, &text);
+    let wall_s = start.elapsed().as_secs_f64().max(1e-9);
+    Calibration {
+        tokens: ids.len() as u64,
+        bytes: text.len() as u64,
+        wall_s,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tokenizer::corpus::Lexicon;
+    use crate::tokenizer::train::train;
+    use crate::util::rng::Rng;
+
+    fn test_vocab() -> Vocab {
+        let lex = Lexicon::generate(3, 300);
+        let mut rng = Rng::new(4);
+        let corpus = lex.sample_corpus(&mut rng, 8, 2_048);
+        train(&corpus, 300)
+    }
+
+    #[test]
+    fn batch_matches_sequential() {
+        let vocab = test_vocab();
+        let tok = BatchTokenizer::new(vocab, 4);
+        let lex = Lexicon::generate(5, 200);
+        let mut rng = Rng::new(6);
+        let texts: Vec<String> = (0..16).map(|_| lex.sample_text(&mut rng, 512)).collect();
+        let batch = tok.encode_batch(texts.clone());
+        for (text, ids) in texts.iter().zip(&batch) {
+            assert_eq!(ids, &tok.encode_one(text));
+        }
+    }
+
+    #[test]
+    fn long_text_chunked_equals_whole() {
+        let vocab = test_vocab();
+        let tok = BatchTokenizer::new(vocab, 4);
+        let lex = Lexicon::generate(7, 200);
+        let mut rng = Rng::new(8);
+        let text = lex.sample_text(&mut rng, 20_000);
+        let whole = tok.encode_one(&text);
+        let chunked = tok.encode_long(&text, 1_024);
+        assert_eq!(whole, chunked);
+    }
+
+    #[test]
+    fn split_at_spaces_preserves_bytes() {
+        let text = "aaa bbb ccc ddd eee fff";
+        let chunks = split_at_spaces(text, 7);
+        assert_eq!(chunks.concat(), text);
+        for c in &chunks[..chunks.len() - 1] {
+            assert!(!c.is_empty());
+        }
+    }
+
+    #[test]
+    fn split_handles_no_spaces() {
+        let text = "x".repeat(100);
+        let chunks = split_at_spaces(&text, 10);
+        assert_eq!(chunks.len(), 1); // cannot split without a space
+        assert_eq!(chunks[0], text);
+    }
+
+    #[test]
+    fn calibration_produces_sane_numbers() {
+        let vocab = test_vocab();
+        let cal = calibrate(&vocab, 100_000);
+        assert!(cal.tokens > 10_000);
+        assert!(cal.tokens_per_sec() > 10_000.0, "throughput {lps}", lps = cal.tokens_per_sec());
+        assert!(cal.bytes_per_token() > 1.0);
+    }
+}

@@ -1,0 +1,200 @@
+//! BPE trainer: learn merge rules from a corpus.
+//!
+//! Classic incremental algorithm: maintain pair frequencies over the
+//! word-frequency table and an inverted index from pair → words, so each
+//! merge only touches affected words. Deterministic: ties broken by
+//! smallest pair ids.
+
+use super::bpe::pre_tokenize;
+use super::vocab::{Merge, TokenId, Vocab};
+use rustc_hash::{FxHashMap, FxHashSet};
+
+/// Train a vocabulary with up to `n_merges` merges from corpus texts.
+/// Stops early when no pair occurs at least `min_count` (=2) times.
+pub fn train<S: AsRef<str>>(corpus: &[S], n_merges: usize) -> Vocab {
+    // 1. word frequency table
+    let mut word_freq: FxHashMap<Vec<u8>, u64> = FxHashMap::default();
+    for text in corpus {
+        for word in pre_tokenize(text.as_ref()) {
+            *word_freq.entry(word.to_vec()).or_insert(0) += 1;
+        }
+    }
+    // Deterministic word order (HashMap iteration varies between runs).
+    let mut entries: Vec<(Vec<u8>, u64)> = word_freq.into_iter().collect();
+    entries.sort_unstable();
+    let mut words: Vec<(Vec<TokenId>, u64)> = entries
+        .into_iter()
+        .map(|(bytes, freq)| (bytes.iter().map(|&b| b as TokenId).collect(), freq))
+        .collect();
+
+    // 2. initial pair statistics
+    let mut pair_counts: FxHashMap<(TokenId, TokenId), i64> = FxHashMap::default();
+    let mut pair_words: FxHashMap<(TokenId, TokenId), FxHashSet<usize>> = FxHashMap::default();
+    for (wi, (symbols, freq)) in words.iter().enumerate() {
+        for pair in pairs_of(symbols) {
+            *pair_counts.entry(pair).or_insert(0) += *freq as i64;
+            pair_words.entry(pair).or_default().insert(wi);
+        }
+    }
+
+    let mut vocab = Vocab::bytes_only();
+    for _ in 0..n_merges {
+        // 3. pick the most frequent pair (deterministic tie-break)
+        let best = pair_counts
+            .iter()
+            .filter(|(_, &c)| c >= 2)
+            .max_by_key(|(&pair, &count)| (count, std::cmp::Reverse(pair)));
+        let Some((&pair, _)) = best else { break };
+
+        let new_id = vocab.push_merge(Merge {
+            left: pair.0,
+            right: pair.1,
+        });
+
+        // 4. rewrite affected words, updating stats incrementally
+        let affected: Vec<usize> = pair_words
+            .remove(&pair)
+            .map(|s| {
+                let mut v: Vec<usize> = s.into_iter().collect();
+                v.sort_unstable();
+                v
+            })
+            .unwrap_or_default();
+        pair_counts.remove(&pair);
+
+        for wi in affected {
+            let freq = words[wi].1;
+            let old_symbols = words[wi].0.clone();
+            let new_symbols = apply_merge(&old_symbols, pair, new_id);
+            if new_symbols == old_symbols {
+                continue;
+            }
+            // remove old contributions
+            for p in pairs_of(&old_symbols) {
+                if p == pair {
+                    continue; // already removed wholesale
+                }
+                if let Some(c) = pair_counts.get_mut(&p) {
+                    *c -= freq as i64;
+                    if *c <= 0 {
+                        pair_counts.remove(&p);
+                        pair_words.remove(&p);
+                        continue;
+                    }
+                }
+                if let Some(ws) = pair_words.get_mut(&p) {
+                    ws.remove(&wi);
+                }
+            }
+            // add new contributions
+            for p in pairs_of(&new_symbols) {
+                *pair_counts.entry(p).or_insert(0) += freq as i64;
+                pair_words.entry(p).or_default().insert(wi);
+            }
+            words[wi].0 = new_symbols;
+        }
+    }
+    vocab
+}
+
+fn pairs_of(symbols: &[TokenId]) -> Vec<(TokenId, TokenId)> {
+    symbols.windows(2).map(|w| (w[0], w[1])).collect()
+}
+
+fn apply_merge(symbols: &[TokenId], pair: (TokenId, TokenId), new_id: TokenId) -> Vec<TokenId> {
+    let mut out = Vec::with_capacity(symbols.len());
+    let mut i = 0;
+    while i < symbols.len() {
+        if i + 1 < symbols.len() && symbols[i] == pair.0 && symbols[i + 1] == pair.1 {
+            out.push(new_id);
+            i += 2;
+        } else {
+            out.push(symbols[i]);
+            i += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tokenizer::bpe::{encode_uncached, Encoder};
+
+    const CORPUS: &[&str] = &[
+        "the cat sat on the mat",
+        "the dog sat on the log",
+        "the theme of the thesis is the thing",
+        "cats and dogs and cats and dogs",
+    ];
+
+    #[test]
+    fn training_learns_frequent_pairs() {
+        let vocab = train(CORPUS, 50);
+        assert!(vocab.n_merges() > 0);
+        // "the" should compress to fewer tokens than its bytes
+        let ids = encode_uncached(&vocab, "the");
+        assert!(ids.len() < 3, "'the' → {} tokens", ids.len());
+    }
+
+    #[test]
+    fn training_is_deterministic() {
+        let a = train(CORPUS, 40).save_text();
+        let b = train(CORPUS, 40).save_text();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn trained_vocab_roundtrips() {
+        let vocab = train(CORPUS, 60);
+        let mut enc = Encoder::new(&vocab);
+        for text in CORPUS {
+            let ids = enc.encode(text);
+            assert_eq!(&enc.decode(&ids), text);
+        }
+        // and on out-of-corpus text with unseen bytes
+        let novel = "un+seen wörds 🐈 42!";
+        let ids = enc.encode(novel);
+        assert_eq!(enc.decode(&ids), novel);
+    }
+
+    #[test]
+    fn more_merges_compress_more() {
+        let v_small = train(CORPUS, 5);
+        let v_big = train(CORPUS, 80);
+        let text = CORPUS.join(" ");
+        let n_small = encode_uncached(&v_small, &text).len();
+        let n_big = encode_uncached(&v_big, &text).len();
+        assert!(n_big <= n_small);
+        assert!(n_big < text.len());
+    }
+
+    #[test]
+    fn stops_early_without_repeats() {
+        // all-unique bytes: no pair occurs twice
+        let vocab = train(&["abcdefg"], 100);
+        assert_eq!(vocab.n_merges(), 0);
+    }
+
+    #[test]
+    fn apply_merge_handles_overlaps() {
+        // "aaa" with merge (a,a): greedy left-to-right → [aa, a]
+        let out = apply_merge(&[97, 97, 97], (97, 97), 256);
+        assert_eq!(out, vec![256, 97]);
+        let out = apply_merge(&[97, 97, 97, 97], (97, 97), 256);
+        assert_eq!(out, vec![256, 256]);
+    }
+
+    #[test]
+    fn incremental_counts_match_recount() {
+        // Train, then verify compression is consistent when re-encoding
+        // the corpus with the final vocab (sanity check that the
+        // incremental bookkeeping didn't corrupt merge order).
+        let vocab = train(CORPUS, 30);
+        let text = CORPUS.join(" ");
+        let ids = encode_uncached(&vocab, &text);
+        let enc = Encoder::new(&vocab);
+        assert_eq!(enc.decode(&ids), text);
+        assert!(ids.len() < text.len());
+    }
+}

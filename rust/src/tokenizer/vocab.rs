@@ -1,0 +1,180 @@
+//! Byte-level BPE vocabulary: 256 base byte tokens plus learned merges.
+
+use rustc_hash::FxHashMap;
+
+pub type TokenId = u32;
+
+/// A merge rule: (left, right) token ids combine into a new token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Merge {
+    pub left: TokenId,
+    pub right: TokenId,
+}
+
+#[derive(Debug, Clone)]
+pub struct Vocab {
+    /// Token id → byte sequence. Ids 0..256 are the single bytes.
+    tokens: Vec<Vec<u8>>,
+    /// Merge rule → (rank, produced token id). Lower rank = applied first.
+    merge_ranks: FxHashMap<Merge, (u32, TokenId)>,
+}
+
+impl Vocab {
+    /// Byte-only vocabulary (no merges).
+    pub fn bytes_only() -> Vocab {
+        let tokens = (0u16..256).map(|b| vec![b as u8]).collect();
+        Vocab {
+            tokens,
+            merge_ranks: FxHashMap::default(),
+        }
+    }
+
+    /// Construct from an ordered merge list (training output order defines
+    /// ranks).
+    pub fn from_merges(merges: &[Merge]) -> Vocab {
+        let mut v = Vocab::bytes_only();
+        for &m in merges {
+            v.push_merge(m);
+        }
+        v
+    }
+
+    pub fn push_merge(&mut self, merge: Merge) -> TokenId {
+        assert!((merge.left as usize) < self.tokens.len());
+        assert!((merge.right as usize) < self.tokens.len());
+        let mut bytes = self.tokens[merge.left as usize].clone();
+        bytes.extend_from_slice(&self.tokens[merge.right as usize]);
+        let id = self.tokens.len() as TokenId;
+        self.tokens.push(bytes);
+        let rank = self.merge_ranks.len() as u32;
+        self.merge_ranks.insert(merge, (rank, id));
+        id
+    }
+
+    pub fn size(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn n_merges(&self) -> usize {
+        self.merge_ranks.len()
+    }
+
+    pub fn token_bytes(&self, id: TokenId) -> &[u8] {
+        &self.tokens[id as usize]
+    }
+
+    /// Rank and produced id for a candidate merge, if it exists.
+    pub fn merge_lookup(&self, left: TokenId, right: TokenId) -> Option<(u32, TokenId)> {
+        self.merge_ranks.get(&Merge { left, right }).copied()
+    }
+
+    /// Ordered merge list (rank order) — the serializable model.
+    pub fn merges(&self) -> Vec<Merge> {
+        let mut out: Vec<(u32, Merge)> = self
+            .merge_ranks
+            .iter()
+            .map(|(m, (rank, _))| (*rank, *m))
+            .collect();
+        out.sort_unstable_by_key(|(rank, _)| *rank);
+        out.into_iter().map(|(_, m)| m).collect()
+    }
+
+    /// Serialize merges to a simple text format (one "left right" per
+    /// line) for artifact reuse between runs.
+    pub fn save_text(&self) -> String {
+        let mut s = String::new();
+        for m in self.merges() {
+            s.push_str(&format!("{} {}\n", m.left, m.right));
+        }
+        s
+    }
+
+    pub fn load_text(text: &str) -> anyhow::Result<Vocab> {
+        let mut merges = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (l, r) = line
+                .split_once(' ')
+                .ok_or_else(|| anyhow::anyhow!("line {}: expected 'left right'", i + 1))?;
+            merges.push(Merge {
+                left: l.parse()?,
+                right: r.parse()?,
+            });
+        }
+        // Validate ids reference existing tokens as we rebuild.
+        let mut v = Vocab::bytes_only();
+        for m in merges {
+            if (m.left as usize) >= v.size() || (m.right as usize) >= v.size() {
+                anyhow::bail!("merge references unknown token: {m:?}");
+            }
+            v.push_merge(m);
+        }
+        Ok(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base_vocab_covers_all_bytes() {
+        let v = Vocab::bytes_only();
+        assert_eq!(v.size(), 256);
+        for b in 0..=255u8 {
+            assert_eq!(v.token_bytes(b as TokenId), &[b]);
+        }
+    }
+
+    #[test]
+    fn merge_concatenates_bytes() {
+        let mut v = Vocab::bytes_only();
+        let th = v.push_merge(Merge {
+            left: b't' as TokenId,
+            right: b'h' as TokenId,
+        });
+        assert_eq!(v.token_bytes(th), b"th");
+        let the = v.push_merge(Merge {
+            left: th,
+            right: b'e' as TokenId,
+        });
+        assert_eq!(v.token_bytes(the), b"the");
+    }
+
+    #[test]
+    fn merge_lookup_returns_rank_order() {
+        let mut v = Vocab::bytes_only();
+        v.push_merge(Merge { left: 1, right: 2 });
+        v.push_merge(Merge { left: 3, right: 4 });
+        let (r0, _) = v.merge_lookup(1, 2).unwrap();
+        let (r1, _) = v.merge_lookup(3, 4).unwrap();
+        assert!(r0 < r1);
+        assert!(v.merge_lookup(5, 6).is_none());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut v = Vocab::bytes_only();
+        v.push_merge(Merge {
+            left: b'a' as u32,
+            right: b'b' as u32,
+        });
+        v.push_merge(Merge {
+            left: 256,
+            right: b'c' as u32,
+        });
+        let text = v.save_text();
+        let v2 = Vocab::load_text(&text).unwrap();
+        assert_eq!(v2.size(), v.size());
+        assert_eq!(v2.token_bytes(257), b"abc");
+    }
+
+    #[test]
+    fn load_rejects_bad_references() {
+        assert!(Vocab::load_text("999 1000\n").is_err());
+        assert!(Vocab::load_text("garbage\n").is_err());
+    }
+}

@@ -1,0 +1,121 @@
+//! Minimal benchmarking harness (criterion is unavailable offline).
+//!
+//! Provides warmup, adaptive iteration counts, trimmed statistics, and
+//! uniform reporting. Used by every target in `rust/benches/` (declared
+//! with `harness = false`).
+
+use crate::util::stats::Percentiles;
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "{:<44} {:>12}/iter  median {:>12}  p95 {:>12}  ({} iters)",
+            self.name,
+            crate::util::fmt_ns(self.mean_ns as u64),
+            crate::util::fmt_ns(self.median_ns as u64),
+            crate::util::fmt_ns(self.p95_ns as u64),
+            self.iters
+        );
+    }
+
+    /// Throughput given units of work per iteration.
+    pub fn per_sec(&self, units_per_iter: f64) -> f64 {
+        units_per_iter / (self.mean_ns / 1e9)
+    }
+}
+
+/// Benchmark a closure: warm up for ~200 ms, then sample batches until
+/// ~`budget` elapses (min 10 samples).
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult {
+    // warmup + calibration
+    let warm_start = Instant::now();
+    let mut calib_iters = 0u64;
+    while warm_start.elapsed() < Duration::from_millis(200) {
+        f();
+        calib_iters += 1;
+    }
+    let per_iter = warm_start.elapsed().as_secs_f64() / calib_iters as f64;
+    // aim for ~30 samples in the budget, batching fast closures
+    let target_sample_s = (budget.as_secs_f64() / 30.0).max(1e-4);
+    let batch = ((target_sample_s / per_iter).round() as u64).max(1);
+
+    let mut samples = Percentiles::new();
+    let mut total_iters = 0u64;
+    let start = Instant::now();
+    while start.elapsed() < budget || samples.len() < 10 {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        let ns = t0.elapsed().as_nanos() as f64 / batch as f64;
+        samples.add(ns);
+        total_iters += batch;
+        if samples.len() >= 500 {
+            break;
+        }
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters: total_iters,
+        mean_ns: samples.mean(),
+        median_ns: samples.median(),
+        p95_ns: samples.pct(95.0),
+        min_ns: samples.pct(0.0),
+    }
+}
+
+/// Time a single (slow) operation N times and report.
+pub fn bench_n<F: FnMut()>(name: &str, n: usize, mut f: F) -> BenchResult {
+    let mut samples = Percentiles::new();
+    for _ in 0..n {
+        let t0 = Instant::now();
+        f();
+        samples.add(t0.elapsed().as_nanos() as f64);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters: n as u64,
+        mean_ns: samples.mean(),
+        median_ns: samples.median(),
+        p95_ns: samples.pct(95.0),
+        min_ns: samples.pct(0.0),
+    }
+}
+
+/// Prevent the optimizer from discarding a value.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let r = bench("spin", Duration::from_millis(100), || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(r.iters > 100);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.median_ns <= r.p95_ns * 1.01);
+    }
+
+    #[test]
+    fn bench_n_counts() {
+        let r = bench_n("sleepless", 12, || {
+            black_box(vec![0u8; 1024]);
+        });
+        assert_eq!(r.iters, 12);
+    }
+}

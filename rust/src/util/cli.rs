@@ -1,0 +1,218 @@
+//! Tiny command-line argument parser (clap is unavailable offline).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`, and
+//! positional arguments, with typed accessors and a generated usage
+//! string. Deliberately minimal — exactly what the `cpuslow` binary and
+//! the bench harnesses need.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// Leading non-flag tokens (subcommand path + positionals).
+    pub positional: Vec<String>,
+    /// `--key value` and `--key=value` pairs; bare `--flag` maps to "true".
+    pub options: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Args {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` unless next token is another flag
+                    let takes_value = it
+                        .peek()
+                        .map(|n| !n.starts_with("--"))
+                        .unwrap_or(false);
+                    if takes_value {
+                        args.options
+                            .insert(stripped.to_string(), it.next().unwrap());
+                    } else {
+                        args.options.insert(stripped.to_string(), "true".into());
+                    }
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    /// Positional arguments after the subcommand.
+    pub fn rest(&self) -> &[String] {
+        if self.positional.is_empty() {
+            &[]
+        } else {
+            &self.positional[1..]
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| {
+                v.parse()
+                    .unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.u64_or(key, default as u64) as usize
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| {
+                v.parse()
+                    .unwrap_or_else(|_| panic!("--{key} expects a number, got '{v}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated list of integers, e.g. `--cores 5,8,16,32`.
+    pub fn u64_list(&self, key: &str) -> Option<Vec<u64>> {
+        self.get(key).map(|v| {
+            v.split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .unwrap_or_else(|_| panic!("--{key}: bad integer '{s}'"))
+                })
+                .collect()
+        })
+    }
+
+    /// Comma-separated list of strings.
+    pub fn str_list(&self, key: &str) -> Option<Vec<String>> {
+        self.get(key).map(|v| {
+            v.split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| s.trim().to_string())
+                .collect()
+        })
+    }
+}
+
+/// Render a uniform usage/help block.
+pub struct Usage {
+    pub program: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<(&'static str, &'static str)>,
+    pub options: Vec<(&'static str, &'static str)>,
+}
+
+impl Usage {
+    pub fn render(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} <command> [options]\n", self.program, self.about, self.program);
+        if !self.commands.is_empty() {
+            s.push_str("\nCOMMANDS:\n");
+            let w = self.commands.iter().map(|c| c.0.len()).max().unwrap_or(0);
+            for (name, help) in &self.commands {
+                s.push_str(&format!("  {name:w$}  {help}\n"));
+            }
+        }
+        if !self.options.is_empty() {
+            s.push_str("\nOPTIONS:\n");
+            let w = self.options.iter().map(|c| c.0.len()).max().unwrap_or(0);
+            for (name, help) in &self.options {
+                s.push_str(&format!("  {name:w$}  {help}\n"));
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse("experiment fig7 extra");
+        assert_eq!(a.subcommand(), Some("experiment"));
+        assert_eq!(a.rest(), &["fig7".to_string(), "extra".to_string()]);
+    }
+
+    #[test]
+    fn key_value_both_styles() {
+        let a = parse("run --cores 16 --rps=8");
+        assert_eq!(a.u64_or("cores", 0), 16);
+        assert_eq!(a.u64_or("rps", 0), 8);
+    }
+
+    #[test]
+    fn bare_flags() {
+        let a = parse("run --verbose --json");
+        assert!(a.flag("verbose"));
+        assert!(a.flag("json"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("x --dry-run --cores 4");
+        assert!(a.flag("dry-run"));
+        assert_eq!(a.u64_or("cores", 0), 4);
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse("x --cores 5,8,16 --models llama8b,qwen14b");
+        assert_eq!(a.u64_list("cores").unwrap(), vec![5, 8, 16]);
+        assert_eq!(
+            a.str_list("models").unwrap(),
+            vec!["llama8b".to_string(), "qwen14b".to_string()]
+        );
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.str_or("out", "default.json"), "default.json");
+        assert_eq!(a.f64_or("timeout", 200.0), 200.0);
+    }
+
+    #[test]
+    fn usage_renders() {
+        let u = Usage {
+            program: "cpuslow",
+            about: "CPU-induced slowdown characterization",
+            commands: vec![("experiment", "run a paper experiment")],
+            options: vec![("--seed N", "random seed")],
+        };
+        let s = u.render();
+        assert!(s.contains("experiment"));
+        assert!(s.contains("--seed"));
+    }
+}

@@ -1,0 +1,251 @@
+//! Fixed-size worker thread pool with a shared injector queue.
+//!
+//! Stands in for Rayon (absent offline). The pool provides `execute` for
+//! fire-and-forget jobs, `parallel_map` for data-parallel batches (the
+//! tokenizer's batch-encode path — mirroring HuggingFace Tokenizers'
+//! Rayon pool that the paper identifies as a contention source), and
+//! exposes queue-depth metrics so the real-execution track can report
+//! host-side backlog.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    available: Condvar,
+    shutdown: AtomicBool,
+    queued: AtomicUsize,
+    active: AtomicUsize,
+}
+
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    pub fn new(size: usize) -> ThreadPool {
+        assert!(size > 0, "pool must have at least one worker");
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            queued: AtomicUsize::new(0),
+            active: AtomicUsize::new(0),
+        });
+        let workers = (0..size)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("pool-{i}"))
+                    .spawn(move || worker_loop(shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool {
+            shared,
+            workers,
+            size,
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Jobs waiting in the queue (not yet picked up).
+    pub fn queued(&self) -> usize {
+        self.shared.queued.load(Ordering::Relaxed)
+    }
+
+    /// Jobs currently executing.
+    pub fn active(&self) -> usize {
+        self.shared.active.load(Ordering::Relaxed)
+    }
+
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, job: F) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.push_back(Box::new(job));
+        }
+        self.shared.queued.fetch_add(1, Ordering::Relaxed);
+        self.shared.available.notify_one();
+    }
+
+    /// Apply `f` to each item, in pool threads, preserving order.
+    /// Blocks until every result is ready.
+    pub fn parallel_map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let f = Arc::new(f);
+        let results: Arc<Mutex<Vec<Option<R>>>> =
+            Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+        let done = Arc::new((Mutex::new(0usize), Condvar::new()));
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let results = Arc::clone(&results);
+            let done = Arc::clone(&done);
+            self.execute(move || {
+                let r = f(item);
+                results.lock().unwrap()[i] = Some(r);
+                let (lock, cv) = &*done;
+                *lock.lock().unwrap() += 1;
+                cv.notify_all();
+            });
+        }
+        let (lock, cv) = &*done;
+        let mut count = lock.lock().unwrap();
+        while *count < n {
+            count = cv.wait(count).unwrap();
+        }
+        drop(count);
+        // NOTE: don't Arc::try_unwrap here — the final worker may still
+        // hold its clone for an instant after signaling completion.
+        let mut guard = results.lock().unwrap();
+        guard
+            .iter_mut()
+            .map(|r| r.take().expect("result present"))
+            .collect()
+    }
+
+    /// Run jobs for each chunk of `items` (chunked variant to reduce
+    /// per-job overhead for large batches).
+    pub fn parallel_chunks<T, R, F>(&self, items: Vec<T>, chunk: usize, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(&T) -> R + Send + Sync + 'static,
+    {
+        assert!(chunk > 0);
+        let chunks: Vec<Vec<T>> = {
+            let mut out = Vec::new();
+            let mut cur = Vec::with_capacity(chunk);
+            for it in items {
+                cur.push(it);
+                if cur.len() == chunk {
+                    out.push(std::mem::take(&mut cur));
+                }
+            }
+            if !cur.is_empty() {
+                out.push(cur);
+            }
+            out
+        };
+        let nested = self.parallel_map(chunks, move |chunk| {
+            chunk.iter().map(|it| f(it)).collect::<Vec<R>>()
+        });
+        nested.into_iter().flatten().collect()
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.pop_front() {
+                    break job;
+                }
+                if shared.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                q = shared.available.wait(q).unwrap();
+            }
+        };
+        shared.queued.fetch_sub(1, Ordering::Relaxed);
+        shared.active.fetch_add(1, Ordering::Relaxed);
+        job();
+        shared.active.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.available.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        let done = Arc::new((Mutex::new(0usize), Condvar::new()));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            let d = Arc::clone(&done);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+                let (l, cv) = &*d;
+                *l.lock().unwrap() += 1;
+                cv.notify_all();
+            });
+        }
+        let (l, cv) = &*done;
+        let mut n = l.lock().unwrap();
+        while *n < 100 {
+            n = cv.wait(n).unwrap();
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let pool = ThreadPool::new(8);
+        let out = pool.parallel_map((0..1000u64).collect(), |x| x * x);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, (i as u64) * (i as u64));
+        }
+    }
+
+    #[test]
+    fn parallel_map_empty() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<u64> = pool.parallel_map(Vec::<u64>::new(), |x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn parallel_chunks_matches_map() {
+        let pool = ThreadPool::new(4);
+        let items: Vec<u64> = (0..257).collect();
+        let a = pool.parallel_chunks(items.clone(), 16, |x| x + 1);
+        let b: Vec<u64> = items.iter().map(|x| x + 1).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| std::thread::sleep(std::time::Duration::from_millis(10)));
+        drop(pool); // must not hang or panic
+    }
+
+    #[test]
+    fn single_worker_is_sequential_but_complete() {
+        let pool = ThreadPool::new(1);
+        let out = pool.parallel_map((0..50u64).collect(), |x| x + 2);
+        assert_eq!(out.len(), 50);
+        assert_eq!(out[49], 51);
+    }
+}

@@ -1,0 +1,519 @@
+//! Summary statistics, percentile digests, histograms and time series.
+//!
+//! Used by `metrics/` for latency recording and by the bench harness
+//! (criterion is unavailable offline, so `benchkit` builds on these).
+
+/// Online mean/variance (Welford) plus min/max.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &Summary) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let delta = other.mean - self.mean;
+        let mean = self.mean + delta * other.n as f64 / n as f64;
+        let m2 = self.m2
+            + other.m2
+            + delta * delta * (self.n as f64 * other.n as f64) / n as f64;
+        self.n = n;
+        self.mean = mean;
+        self.m2 = m2;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Exact percentile estimator that keeps all samples. Our experiment runs
+/// record at most a few hundred thousand points, so exactness is cheap and
+/// avoids digest-approximation arguments in the reproduction.
+#[derive(Debug, Clone, Default)]
+pub struct Percentiles {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Percentiles {
+    pub fn new() -> Self {
+        Self {
+            samples: Vec::new(),
+            sorted: true,
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.samples.push(x);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples
+                .sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+            self.sorted = true;
+        }
+    }
+
+    /// Percentile by linear interpolation; q in [0, 100].
+    pub fn pct(&mut self, q: f64) -> f64 {
+        assert!((0.0..=100.0).contains(&q));
+        self.ensure_sorted();
+        let n = self.samples.len();
+        if n == 0 {
+            return f64::NAN;
+        }
+        if n == 1 {
+            return self.samples[0];
+        }
+        let rank = q / 100.0 * (n - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        self.samples[lo] * (1.0 - frac) + self.samples[hi] * frac
+    }
+
+    pub fn median(&mut self) -> f64 {
+        self.pct(50.0)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            f64::NAN
+        } else {
+            self.samples.iter().sum::<f64>() / self.samples.len() as f64
+        }
+    }
+
+    /// Fraction of samples ≤ x (empirical CDF).
+    pub fn cdf_at(&mut self, x: f64) -> f64 {
+        self.ensure_sorted();
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let idx = self.samples.partition_point(|&s| s <= x);
+        idx as f64 / self.samples.len() as f64
+    }
+
+    pub fn samples(&mut self) -> &[f64] {
+        self.ensure_sorted();
+        &self.samples
+    }
+}
+
+/// Weighted empirical CDF — the cluster-log analysis weights each job's
+/// CPU:GPU ratio by its GPU-hours (Figs 3–4).
+#[derive(Debug, Clone, Default)]
+pub struct WeightedCdf {
+    points: Vec<(f64, f64)>, // (value, weight)
+}
+
+impl WeightedCdf {
+    pub fn new() -> Self {
+        Self { points: Vec::new() }
+    }
+
+    pub fn add(&mut self, value: f64, weight: f64) {
+        assert!(weight >= 0.0);
+        self.points.push((value, weight));
+    }
+
+    pub fn total_weight(&self) -> f64 {
+        self.points.iter().map(|p| p.1).sum()
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    fn sorted(&self) -> Vec<(f64, f64)> {
+        let mut pts = self.points.clone();
+        pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+        pts
+    }
+
+    /// Weighted percentile: smallest value v such that
+    /// weight{x ≤ v} ≥ q% of total weight.
+    pub fn pct(&self, q: f64) -> f64 {
+        assert!((0.0..=100.0).contains(&q));
+        let pts = self.sorted();
+        if pts.is_empty() {
+            return f64::NAN;
+        }
+        let total = self.total_weight();
+        let target = q / 100.0 * total;
+        let mut acc = 0.0;
+        for (v, w) in &pts {
+            acc += w;
+            if acc >= target {
+                return *v;
+            }
+        }
+        pts.last().unwrap().0
+    }
+
+    /// Weighted CDF evaluated at x.
+    pub fn cdf_at(&self, x: f64) -> f64 {
+        let total = self.total_weight();
+        if total == 0.0 {
+            return f64::NAN;
+        }
+        self.points
+            .iter()
+            .filter(|(v, _)| *v <= x)
+            .map(|(_, w)| w)
+            .sum::<f64>()
+            / total
+    }
+
+    /// (value, cumulative fraction) series for plotting/table output.
+    pub fn curve(&self, n_points: usize) -> Vec<(f64, f64)> {
+        let pts = self.sorted();
+        if pts.is_empty() {
+            return Vec::new();
+        }
+        let total = self.total_weight();
+        let mut out = Vec::with_capacity(n_points.min(pts.len()));
+        let mut acc = 0.0;
+        let step = (pts.len().max(1) / n_points.max(1)).max(1);
+        for (i, (v, w)) in pts.iter().enumerate() {
+            acc += w;
+            if i % step == 0 || i + 1 == pts.len() {
+                out.push((*v, acc / total));
+            }
+        }
+        out
+    }
+}
+
+/// Fixed-bucket time series recorder: accumulates (time, value) samples
+/// into per-bucket means. Used for CPU/GPU utilization traces (Figs 10–11).
+#[derive(Debug, Clone)]
+pub struct TimeSeries {
+    bucket_width: f64,
+    sums: Vec<f64>,
+    counts: Vec<u64>,
+}
+
+impl TimeSeries {
+    pub fn new(bucket_width: f64) -> Self {
+        assert!(bucket_width > 0.0);
+        Self {
+            bucket_width,
+            sums: Vec::new(),
+            counts: Vec::new(),
+        }
+    }
+
+    pub fn add(&mut self, t: f64, value: f64) {
+        assert!(t >= 0.0, "negative time");
+        let idx = (t / self.bucket_width) as usize;
+        if idx >= self.sums.len() {
+            self.sums.resize(idx + 1, 0.0);
+            self.counts.resize(idx + 1, 0);
+        }
+        self.sums[idx] += value;
+        self.counts[idx] += 1;
+    }
+
+    /// Add an *interval* [t0, t1) of constant value, distributing it across
+    /// buckets weighted by overlap. This is how busy/idle spans are
+    /// recorded without sampling artifacts.
+    pub fn add_span(&mut self, t0: f64, t1: f64, value: f64) {
+        assert!(t1 >= t0 && t0 >= 0.0);
+        if t1 == t0 {
+            return;
+        }
+        let first = (t0 / self.bucket_width) as usize;
+        let last = (t1 / self.bucket_width) as usize;
+        if last >= self.sums.len() {
+            self.sums.resize(last + 1, 0.0);
+            self.counts.resize(last + 1, 0);
+        }
+        for idx in first..=last {
+            let b0 = idx as f64 * self.bucket_width;
+            let b1 = b0 + self.bucket_width;
+            let overlap = (t1.min(b1) - t0.max(b0)).max(0.0);
+            if overlap > 0.0 {
+                // weight by fractional bucket coverage
+                self.sums[idx] += value * overlap / self.bucket_width;
+                self.counts[idx] += 1;
+            }
+        }
+    }
+
+    pub fn bucket_width(&self) -> f64 {
+        self.bucket_width
+    }
+
+    pub fn len(&self) -> usize {
+        self.sums.len()
+    }
+
+    /// Per-bucket mean of point samples (NaN where empty).
+    pub fn means(&self) -> Vec<f64> {
+        self.sums
+            .iter()
+            .zip(&self.counts)
+            .map(|(s, c)| if *c == 0 { f64::NAN } else { s / *c as f64 })
+            .collect()
+    }
+
+    /// Per-bucket accumulated value (for span-based recording the sum *is*
+    /// the mean utilization of the bucket when value is a rate in [0,1]
+    /// times coverage).
+    pub fn sums(&self) -> &[f64] {
+        &self.sums
+    }
+}
+
+/// Simple log-scaled latency histogram (power-of-2 buckets in nanoseconds).
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    buckets: [u64; 64],
+    count: u64,
+    total_ns: u128,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self {
+            buckets: [0; 64],
+            count: 0,
+            total_ns: 0,
+        }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_ns(&mut self, ns: u64) {
+        let idx = (64 - ns.max(1).leading_zeros() as usize).min(63);
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.total_ns += ns as u128;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.total_ns as f64 / self.count as f64
+        }
+    }
+
+    /// Approximate percentile from bucket boundaries (upper bound of the
+    /// bucket containing the q-th sample).
+    pub fn pct_ns(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (q / 100.0 * self.count as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b;
+            if acc >= target.max(1) {
+                return 1u64 << i;
+            }
+        }
+        u64::MAX
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let mut s = Summary::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.add(x);
+        }
+        assert_eq!(s.count(), 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.variance() - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+    }
+
+    #[test]
+    fn summary_merge_matches_sequential() {
+        let data: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 10.0).collect();
+        let mut whole = Summary::new();
+        for &x in &data {
+            whole.add(x);
+        }
+        let mut a = Summary::new();
+        let mut b = Summary::new();
+        for &x in &data[..37] {
+            a.add(x);
+        }
+        for &x in &data[37..] {
+            b.add(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert!((a.mean() - whole.mean()).abs() < 1e-9);
+        assert!((a.variance() - whole.variance()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let mut p = Percentiles::new();
+        for x in [10.0, 20.0, 30.0, 40.0, 50.0] {
+            p.add(x);
+        }
+        assert_eq!(p.pct(0.0), 10.0);
+        assert_eq!(p.pct(100.0), 50.0);
+        assert_eq!(p.median(), 30.0);
+        assert_eq!(p.pct(25.0), 20.0);
+        assert!((p.pct(10.0) - 14.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles_cdf() {
+        let mut p = Percentiles::new();
+        for x in 1..=10 {
+            p.add(x as f64);
+        }
+        assert!((p.cdf_at(5.0) - 0.5).abs() < 1e-12);
+        assert_eq!(p.cdf_at(0.0), 0.0);
+        assert_eq!(p.cdf_at(10.0), 1.0);
+    }
+
+    #[test]
+    fn weighted_cdf_percentiles() {
+        let mut w = WeightedCdf::new();
+        w.add(1.0, 9.0); // 90% of weight at 1.0
+        w.add(100.0, 1.0);
+        assert_eq!(w.pct(50.0), 1.0);
+        assert_eq!(w.pct(95.0), 100.0);
+        assert!((w.cdf_at(1.0) - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weighted_cdf_curve_monotone() {
+        let mut w = WeightedCdf::new();
+        for i in 0..100 {
+            w.add(i as f64, 1.0 + (i % 7) as f64);
+        }
+        let curve = w.curve(20);
+        for pair in curve.windows(2) {
+            assert!(pair[1].0 >= pair[0].0);
+            assert!(pair[1].1 >= pair[0].1);
+        }
+        assert!((curve.last().unwrap().1 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn timeseries_span_distributes() {
+        let mut ts = TimeSeries::new(1.0);
+        ts.add_span(0.5, 2.5, 1.0); // covers half of b0, all b1, half b2
+        let sums = ts.sums();
+        assert!((sums[0] - 0.5).abs() < 1e-12);
+        assert!((sums[1] - 1.0).abs() < 1e-12);
+        assert!((sums[2] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn timeseries_point_means() {
+        let mut ts = TimeSeries::new(10.0);
+        ts.add(1.0, 2.0);
+        ts.add(2.0, 4.0);
+        ts.add(15.0, 8.0);
+        let m = ts.means();
+        assert!((m[0] - 3.0).abs() < 1e-12);
+        assert!((m[1] - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_histogram_pct() {
+        let mut h = LatencyHistogram::new();
+        for _ in 0..99 {
+            h.record_ns(1_000);
+        }
+        h.record_ns(1_000_000);
+        assert!(h.pct_ns(50.0) <= 2_048);
+        assert!(h.pct_ns(99.9) >= 1_000_000 / 2);
+        assert_eq!(h.count(), 100);
+    }
+}

@@ -1,0 +1,278 @@
+//! Workload generation and the attacker/victim measurement harness
+//! (§IV-B "Evaluation methodology").
+//!
+//! Attackers are periodic background requests at a fixed RPS with long
+//! prompts; the victim is a single measured request (2.8k tokens in the
+//! paper). Victims are issued *sequentially* — victim i+1 is submitted
+//! once victim i produces its first token (or times out) — which is why
+//! Figure 8 shows a growing trend as attacker backlog accumulates.
+
+pub mod poisson;
+
+use crate::config::RunConfig;
+use crate::engine::{Outcome, ReqClass, RequestId, ServingSim};
+
+/// Parameters of one attacker/victim experiment cell.
+#[derive(Debug, Clone)]
+pub struct AvSpec {
+    /// Attacker prompt length (tokens): 1.8k–114k in the paper.
+    pub attacker_sl: u64,
+    /// Victim prompt length (2.8k in the paper).
+    pub victim_sl: u64,
+    /// Attacker arrival rate (8 or 16 in the paper).
+    pub rps: f64,
+    /// Attack duration (attackers keep arriving this long).
+    pub attack_secs: f64,
+    /// Time the first victim is issued after the attack starts.
+    pub victim_start_secs: f64,
+    /// Number of sequential victims (5 in the paper).
+    pub n_victims: usize,
+    /// Output tokens per request.
+    pub max_new_tokens: u64,
+    /// Victim timeout (200 s in the paper).
+    pub timeout_secs: f64,
+}
+
+impl Default for AvSpec {
+    fn default() -> Self {
+        AvSpec {
+            attacker_sl: 114_000,
+            victim_sl: 2_800,
+            rps: 8.0,
+            attack_secs: 180.0,
+            victim_start_secs: 10.0,
+            n_victims: 5,
+            max_new_tokens: 16,
+            timeout_secs: 200.0,
+        }
+    }
+}
+
+/// Result of one attacker/victim run.
+#[derive(Debug, Clone)]
+pub struct AvResult {
+    /// Per-victim TTFT seconds (None = timed out).
+    pub victim_ttft_s: Vec<Option<f64>>,
+    /// Per-victim tokenize latency seconds.
+    pub victim_tokenize_s: Vec<Option<f64>>,
+    /// CPU utilization trace (100 ms buckets).
+    pub cpu_util: Vec<f64>,
+    /// GPU utilization trace (100 ms buckets).
+    pub gpu_util: Vec<f64>,
+    pub steps_completed: u64,
+    pub n_attackers: usize,
+}
+
+impl AvResult {
+    pub fn any_timeout(&self) -> bool {
+        self.victim_ttft_s.iter().any(|t| t.is_none())
+    }
+
+    /// Mean TTFT over completed victims; None if all timed out.
+    pub fn mean_ttft_s(&self) -> Option<f64> {
+        let done: Vec<f64> = self.victim_ttft_s.iter().flatten().copied().collect();
+        if done.is_empty() {
+            None
+        } else {
+            Some(done.iter().sum::<f64>() / done.len() as f64)
+        }
+    }
+
+    /// Mean TTFT counting timeouts as the timeout value (conservative).
+    pub fn mean_ttft_with_timeouts(&self, timeout_s: f64) -> f64 {
+        let vals: Vec<f64> = self
+            .victim_ttft_s
+            .iter()
+            .map(|t| t.unwrap_or(timeout_s))
+            .collect();
+        vals.iter().sum::<f64>() / vals.len() as f64
+    }
+}
+
+/// Run the attacker/victim experiment on a configured system.
+pub fn run_attacker_victim(cfg: RunConfig, spec: &AvSpec) -> AvResult {
+    let mut sim = ServingSim::new(cfg);
+
+    // Schedule the periodic attacker stream. All attackers send the
+    // *same* prompt (shared content seed): with prefix caching on (vLLM
+    // default, §III), the GPU prefill is paid once and the per-request
+    // cost is almost entirely CPU-side tokenization — a controlled CPU
+    // load, exactly as the paper designs it.
+    const ATTACKER_SEED: u64 = 0xA77AC;
+    let interval_ns = (1e9 / spec.rps) as u64;
+    let n_attackers = (spec.attack_secs * spec.rps).floor() as usize;
+    for i in 0..n_attackers {
+        sim.submit_with_seed(
+            i as u64 * interval_ns,
+            ReqClass::Attacker,
+            spec.attacker_sl,
+            spec.max_new_tokens,
+            ATTACKER_SEED,
+        );
+    }
+
+    // Sequential victims: submit the next once the previous produced its
+    // first token (or timed out).
+    let mut victim_ttft = Vec::new();
+    let mut victim_tok = Vec::new();
+    let mut submit_at_ns = (spec.victim_start_secs * 1e9) as u64;
+    for _ in 0..spec.n_victims {
+        let id = sim.submit_at(
+            submit_at_ns,
+            ReqClass::Victim,
+            spec.victim_sl,
+            spec.max_new_tokens,
+        );
+        let (ttft, tok, next_t) = drive_until_first_token(&mut sim, id, submit_at_ns, spec);
+        victim_ttft.push(ttft);
+        victim_tok.push(tok);
+        submit_at_ns = next_t;
+    }
+
+    let cpu_util = sim.cpu_utilization();
+    let gpu_util = sim.gpu_utilization();
+    AvResult {
+        victim_ttft_s: victim_ttft,
+        victim_tokenize_s: victim_tok,
+        cpu_util,
+        gpu_util,
+        steps_completed: sim.steps_completed(),
+        n_attackers,
+    }
+}
+
+/// Advance the sim until the victim's first token or its timeout.
+/// Returns (ttft_s, tokenize_s, time at which the next victim should be
+/// submitted).
+fn drive_until_first_token(
+    sim: &mut ServingSim,
+    id: RequestId,
+    submitted_ns: u64,
+    spec: &AvSpec,
+) -> (Option<f64>, Option<f64>, u64) {
+    let deadline_ns = submitted_ns + (spec.timeout_secs * 1e9) as u64;
+    // advance in 250 ms slices until first token or deadline
+    loop {
+        let now_ns = (sim.run_secs((sim.sim.now_ns() + 250_000_000) as f64 / 1e9) * 1e9) as u64;
+        let outcome = sim.outcome(id).expect("request known");
+        if let Some(ttft_ns) = outcome.ttft_ns {
+            let tok = outcome.tokenize_latency_ns.map(|t| t as f64 / 1e9);
+            return (
+                Some(ttft_ns as f64 / 1e9),
+                tok,
+                submitted_ns + ttft_ns,
+            );
+        }
+        if now_ns >= deadline_ns {
+            let tok = sim
+                .outcome(id)
+                .and_then(|o| o.tokenize_latency_ns)
+                .map(|t| t as f64 / 1e9);
+            return (None, tok, deadline_ns);
+        }
+    }
+}
+
+/// Baseline: the same victim with no attacker load.
+pub fn run_baseline(cfg: RunConfig, spec: &AvSpec) -> Option<f64> {
+    let mut sim = ServingSim::new(cfg);
+    let id = sim.submit_at(0, ReqClass::Victim, spec.victim_sl, spec.max_new_tokens);
+    sim.run_secs(spec.timeout_secs);
+    sim.outcome(id).and_then(|o| o.ttft_secs())
+}
+
+/// All request outcomes from a free-form run (used by Figure 5's
+/// batch×SL sweep).
+pub fn run_batch(
+    cfg: RunConfig,
+    batch: usize,
+    seq_len: u64,
+    max_new: u64,
+    horizon_secs: f64,
+) -> Vec<Outcome> {
+    let mut sim = ServingSim::new(cfg);
+    let ids: Vec<_> = (0..batch)
+        .map(|_| sim.submit_at(0, ReqClass::Normal, seq_len, max_new))
+        .collect();
+    sim.run_secs(horizon_secs);
+    ids.iter().filter_map(|&id| sim.outcome(id)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelSpec, SystemSpec};
+
+    fn cfg(cores: usize) -> RunConfig {
+        RunConfig::new(SystemSpec::blackwell(), ModelSpec::llama31_8b(), 4, cores)
+    }
+
+    fn fast_spec() -> AvSpec {
+        // Sized so tokenize demand (8 rps × 60k × 15 µs = 7.2 core-s/s)
+        // exceeds the least-CPU allocation but not the abundant one.
+        AvSpec {
+            attacker_sl: 60_000,
+            victim_sl: 2_800,
+            rps: 8.0,
+            attack_secs: 12.0,
+            victim_start_secs: 6.0,
+            n_victims: 2,
+            max_new_tokens: 4,
+            timeout_secs: 60.0,
+        }
+    }
+
+    #[test]
+    fn baseline_completes_quickly() {
+        let t = run_baseline(cfg(32), &fast_spec()).expect("no-load victim finishes");
+        assert!(t < 5.0, "baseline ttft {t}");
+    }
+
+    #[test]
+    fn attack_inflates_victim_ttft() {
+        let spec = fast_spec();
+        let baseline = run_baseline(cfg(32), &spec).unwrap();
+        let attacked = run_attacker_victim(cfg(5), &spec);
+        let worst = attacked.mean_ttft_with_timeouts(spec.timeout_secs);
+        assert!(
+            worst > 1.2 * baseline,
+            "attacked={worst:.2}s baseline={baseline:.2}s"
+        );
+        assert_eq!(attacked.victim_ttft_s.len(), 2);
+        assert_eq!(attacked.n_attackers, 96);
+    }
+
+    #[test]
+    fn more_cores_reduce_attacked_ttft() {
+        let spec = fast_spec();
+        let scarce = run_attacker_victim(cfg(5), &spec)
+            .mean_ttft_with_timeouts(spec.timeout_secs);
+        let abundant = run_attacker_victim(cfg(32), &spec)
+            .mean_ttft_with_timeouts(spec.timeout_secs);
+        assert!(
+            scarce > 1.2 * abundant,
+            "scarce={scarce:.2}s abundant={abundant:.2}s"
+        );
+    }
+
+    #[test]
+    fn utilization_traces_recorded() {
+        let r = run_attacker_victim(cfg(8), &fast_spec());
+        assert!(!r.cpu_util.is_empty());
+        assert!(!r.gpu_util.is_empty());
+        let peak_cpu = r.cpu_util.iter().cloned().fold(0.0, f64::max);
+        assert!(peak_cpu > 0.5, "peak cpu {peak_cpu}");
+    }
+
+    #[test]
+    fn sequential_victims_have_monotone_submission() {
+        let r = run_attacker_victim(cfg(8), &fast_spec());
+        assert_eq!(r.victim_ttft_s.len(), 2);
+        // tokenize latency recorded for completed victims
+        for (t, tok) in r.victim_ttft_s.iter().zip(&r.victim_tokenize_s) {
+            if t.is_some() {
+                assert!(tok.is_some());
+            }
+        }
+    }
+}

@@ -1,0 +1,141 @@
+//! Poisson and trace-based arrival processes (the serving examples and
+//! Track R use these; the paper's attacker stream is periodic, which is
+//! a special case).
+
+use crate::util::rng::Rng;
+
+/// Arrival process abstraction: yields monotonically increasing arrival
+/// times in nanoseconds.
+pub trait Arrivals {
+    fn next_arrival_ns(&mut self) -> u64;
+}
+
+/// Fixed-rate periodic arrivals (the paper's attacker stream).
+pub struct Periodic {
+    next_ns: u64,
+    interval_ns: u64,
+}
+
+impl Periodic {
+    pub fn new(rps: f64, start_ns: u64) -> Periodic {
+        assert!(rps > 0.0);
+        Periodic {
+            next_ns: start_ns,
+            interval_ns: (1e9 / rps) as u64,
+        }
+    }
+}
+
+impl Arrivals for Periodic {
+    fn next_arrival_ns(&mut self) -> u64 {
+        let t = self.next_ns;
+        self.next_ns += self.interval_ns;
+        t
+    }
+}
+
+/// Poisson arrivals with exponential inter-arrival times.
+pub struct Poisson {
+    rng: Rng,
+    rate_per_s: f64,
+    now_ns: u64,
+}
+
+impl Poisson {
+    pub fn new(rate_per_s: f64, seed: u64) -> Poisson {
+        assert!(rate_per_s > 0.0);
+        Poisson {
+            rng: Rng::new(seed),
+            rate_per_s,
+            now_ns: 0,
+        }
+    }
+}
+
+impl Arrivals for Poisson {
+    fn next_arrival_ns(&mut self) -> u64 {
+        let gap_s = self.rng.exp(self.rate_per_s);
+        self.now_ns += (gap_s * 1e9) as u64;
+        self.now_ns
+    }
+}
+
+/// Sample request prompt lengths: log-normal-ish mixture matching the
+/// shape of production prompt-length distributions (many short, heavy
+/// tail of long-context requests).
+pub struct PromptLengths {
+    rng: Rng,
+    pub mean_tokens: f64,
+}
+
+impl PromptLengths {
+    pub fn new(mean_tokens: f64, seed: u64) -> PromptLengths {
+        PromptLengths {
+            rng: Rng::new(seed),
+            mean_tokens,
+        }
+    }
+
+    pub fn sample(&mut self) -> u64 {
+        // lognormal with sigma 1.0 scaled to the requested mean
+        let mu = self.mean_tokens.ln() - 0.5;
+        let x = self.rng.lognormal(mu, 1.0);
+        (x.max(8.0)) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn periodic_spacing() {
+        let mut p = Periodic::new(8.0, 1_000);
+        let t0 = p.next_arrival_ns();
+        let t1 = p.next_arrival_ns();
+        assert_eq!(t0, 1_000);
+        assert_eq!(t1 - t0, 125_000_000);
+    }
+
+    #[test]
+    fn poisson_mean_rate() {
+        let mut p = Poisson::new(10.0, 42);
+        let mut last = 0;
+        let n = 10_000;
+        for _ in 0..n {
+            last = p.next_arrival_ns();
+        }
+        let mean_gap_s = last as f64 / 1e9 / n as f64;
+        assert!((mean_gap_s - 0.1).abs() < 0.01, "mean gap {mean_gap_s}");
+    }
+
+    #[test]
+    fn poisson_is_monotone() {
+        let mut p = Poisson::new(100.0, 7);
+        let mut last = 0;
+        for _ in 0..1000 {
+            let t = p.next_arrival_ns();
+            assert!(t >= last);
+            last = t;
+        }
+    }
+
+    #[test]
+    fn prompt_lengths_have_requested_mean() {
+        let mut pl = PromptLengths::new(2_000.0, 3);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| pl.sample() as f64).sum::<f64>() / n as f64;
+        assert!((mean / 2_000.0 - 1.0).abs() < 0.15, "mean {mean}");
+    }
+
+    #[test]
+    fn prompt_lengths_skewed() {
+        let mut pl = PromptLengths::new(2_000.0, 4);
+        let samples: Vec<u64> = (0..10_000).map(|_| pl.sample()).collect();
+        let mut sorted = samples.clone();
+        sorted.sort_unstable();
+        let median = sorted[5_000] as f64;
+        let mean = samples.iter().sum::<u64>() as f64 / samples.len() as f64;
+        assert!(mean > 1.2 * median, "heavy tail: mean {mean} median {median}");
+    }
+}

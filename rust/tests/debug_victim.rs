@@ -1,0 +1,23 @@
+use cpuslow::config::{ModelSpec, RunConfig, SystemSpec};
+use cpuslow::engine::{ReqClass, ServingSim};
+
+#[test]
+#[ignore]
+fn debug_victim_timeline() {
+    let cfg = RunConfig::new(SystemSpec::blackwell(), ModelSpec::llama31_8b(), 4, 32);
+    let mut s = ServingSim::new(cfg);
+    for i in 0..160 {
+        s.submit_at(i * 125_000_000, ReqClass::Attacker, 28_000, 16);
+    }
+    let v = s.submit_at(1_000_000_000, ReqClass::Victim, 2_800, 16);
+    s.run_secs(120.0);
+    let o = s.outcome(v).unwrap();
+    println!("victim: tokenize={:?} ttft={:?}", o.tokenize_latency_ns.map(|n| n as f64/1e9), o.ttft_secs());
+    // dump attacker first-token times for the first 12
+    for id in 0..12u64 {
+        let a = s.outcome(id).unwrap();
+        println!("attacker {id}: arrival={:.2} tokenized=+{:.2?} ttft={:?}", a.arrival_ns as f64/1e9,
+                 a.tokenize_latency_ns.map(|n| n as f64/1e9), a.ttft_secs());
+    }
+    println!("steps={}", s.steps_completed());
+}

@@ -1,0 +1,149 @@
+//! Failure-injection and edge-case tests: overload, exhaustion,
+//! degenerate configs — the system must degrade predictably, not wedge.
+
+use cpuslow::config::{ModelSpec, RunConfig, ServeConfig, SystemSpec};
+use cpuslow::engine::{ReqClass, ServingSim};
+
+fn base_cfg(cores: usize) -> RunConfig {
+    RunConfig::new(SystemSpec::h100(), ModelSpec::llama31_8b(), 4, cores)
+}
+
+#[test]
+fn kv_exhaustion_queues_rather_than_crashing() {
+    // Tiny KV: only ~2 requests fit; the rest must queue and finish later.
+    let mut cfg = base_cfg(16);
+    cfg.serve.kv_pages_per_gpu = 1_500; // 24k tokens
+    cfg.serve.prefix_caching = false;
+    let mut sim = ServingSim::new(cfg);
+    let ids: Vec<_> = (0..6)
+        .map(|i| sim.submit_at(i * 1_000_000, ReqClass::Normal, 10_000, 4))
+        .collect();
+    sim.run_secs(600.0);
+    for id in ids {
+        let o = sim.outcome(id).unwrap();
+        assert!(
+            o.e2e_ns.is_some(),
+            "req {} should finish after queueing",
+            o.id
+        );
+    }
+}
+
+#[test]
+fn request_too_large_for_kv_starves_but_system_survives() {
+    let mut cfg = base_cfg(16);
+    cfg.serve.kv_pages_per_gpu = 100; // 1600 tokens total
+    cfg.serve.prefix_caching = false;
+    let mut sim = ServingSim::new(cfg);
+    let huge = sim.submit_at(0, ReqClass::Normal, 50_000, 4); // can never fit
+    let small = sim.submit_at(1_000_000, ReqClass::Normal, 500, 4);
+    sim.run_secs(120.0);
+    let o_huge = sim.outcome(huge).unwrap();
+    assert!(o_huge.ttft_ns.is_none(), "oversized request cannot start");
+    // FCFS head-of-line blocking: the small request is stuck behind it —
+    // the pathological-but-correct vLLM behavior.
+    let o_small = sim.outcome(small).unwrap();
+    assert!(o_small.tokenize_latency_ns.is_some(), "still tokenized");
+}
+
+#[test]
+fn single_core_single_gpu_minimal_config() {
+    let cfg = RunConfig::new(SystemSpec::h100(), ModelSpec::llama31_8b(), 1, 1);
+    let mut sim = ServingSim::new(cfg);
+    let id = sim.submit_at(0, ReqClass::Normal, 1_000, 2);
+    sim.run_secs(300.0);
+    assert!(sim.outcome(id).unwrap().e2e_ns.is_some());
+}
+
+#[test]
+fn zero_output_token_requests_rejected_by_finish_logic() {
+    // max_new_tokens=1: first token finishes the request immediately.
+    let mut sim = ServingSim::new(base_cfg(8));
+    let id = sim.submit_at(0, ReqClass::Normal, 100, 1);
+    sim.run_secs(60.0);
+    let o = sim.outcome(id).unwrap();
+    assert_eq!(o.generated_tokens, 1);
+    assert_eq!(o.ttft_ns, o.e2e_ns);
+}
+
+#[test]
+fn burst_of_duplicate_prompts_shares_prefix_cache() {
+    let mut sim = ServingSim::new(base_cfg(32));
+    let ids: Vec<_> = (0..8)
+        .map(|i| sim.submit_with_seed(i * 5_000_000, ReqClass::Normal, 20_000, 4, 99))
+        .collect();
+    sim.run_secs(300.0);
+    let ttfts: Vec<f64> = ids
+        .iter()
+        .map(|&id| sim.outcome(id).unwrap().ttft_secs().unwrap())
+        .collect();
+    // the first pays full prefill; later ones must be much cheaper
+    let first = ttfts[0];
+    let later_max = ttfts[2..].iter().cloned().fold(0.0, f64::max);
+    assert!(
+        later_max < first,
+        "cached duplicates faster: first {first:.2}s, later max {later_max:.2}s"
+    );
+}
+
+#[test]
+fn cuda_graphs_off_increases_launch_load() {
+    // With graphs disabled, decode steps need ~10× the launches; under
+    // scarce cores this must visibly slow decode-heavy work.
+    let run = |graphs: bool| {
+        let mut cfg = base_cfg(5);
+        cfg.serve.cuda_graphs = graphs;
+        let mut sim = ServingSim::new(cfg);
+        let id = sim.submit_at(0, ReqClass::Normal, 500, 64); // decode-heavy
+        sim.run_secs(300.0);
+        sim.outcome(id).unwrap().e2e_ns.unwrap()
+    };
+    let with = run(true);
+    let without = run(false);
+    assert!(
+        without > with,
+        "graphs off should be slower: {without} vs {with}"
+    );
+}
+
+#[test]
+fn invalid_configs_rejected() {
+    let cfg = RunConfig::new(SystemSpec::h100(), ModelSpec::llama31_8b(), 4, 8);
+    assert!(cfg.validate().is_ok());
+
+    let mut bad = cfg.clone();
+    bad.serve = ServeConfig {
+        graph_dynamic_fraction: 2.0,
+        ..Default::default()
+    };
+    assert!(bad.validate().is_err());
+
+    let mut bad = cfg.clone();
+    bad.cpu_cores = 1_000;
+    assert!(bad.validate().is_err());
+
+    let mut bad = cfg;
+    bad.n_gpus = 3; // 32 heads % 3 != 0
+    assert!(bad.validate().is_err());
+}
+
+#[test]
+fn timeout_is_a_client_side_concept() {
+    // The engine keeps serving even when a victim would have timed out:
+    // submit an impossible victim load, run past the timeout, engine
+    // still completes attacker work.
+    let mut cfg = base_cfg(5);
+    cfg.serve.kv_pages_per_gpu = 8_000;
+    let mut sim = ServingSim::new(cfg);
+    for i in 0..40u64 {
+        sim.submit_with_seed(i * 125_000_000, ReqClass::Attacker, 114_000, 4, 7);
+    }
+    sim.run_secs(120.0);
+    let finished_attackers = sim
+        .outcomes()
+        .iter()
+        .filter(|o| o.class == ReqClass::Attacker && o.e2e_ns.is_some())
+        .count();
+    assert!(finished_attackers > 0, "engine still makes progress");
+    assert!(sim.steps_completed() > 0);
+}

@@ -1,0 +1,282 @@
+//! Property-based tests on coordinator invariants, using the in-repo
+//! `testkit` framework (routing, batching, state management — the L3
+//! invariants the repro contract calls out).
+
+use cpuslow::config::ServeConfig;
+use cpuslow::engine::{
+    complete_step, schedule, KvCache, PrefixCache, ReqClass, Request, SchedState,
+};
+use cpuslow::simcpu::script::Script;
+use cpuslow::simcpu::{Sim, SimParams};
+use cpuslow::testkit::{self, PairGen, U64Range, VecGen};
+use cpuslow::util::rng::Rng;
+
+fn cfg() -> ServeConfig {
+    ServeConfig {
+        prefill_chunk_tokens: 256,
+        max_batch_size: 8,
+        kv_page_tokens: 16,
+        kv_pages_per_gpu: 256, // small so exhaustion paths exercise
+        prefix_caching: false,
+        ..Default::default()
+    }
+}
+
+/// Drive the scheduler to completion over a generated request mix and
+/// check conservation invariants at every step.
+fn run_schedule_to_completion(reqs: &[(u64, u64)]) -> bool {
+    let mut state = SchedState::new();
+    let mut kv = KvCache::new(16, 256);
+    let cfg = cfg();
+    for (i, &(prompt, out)) in reqs.iter().enumerate() {
+        state.enqueue(Request::new(
+            i as u64,
+            ReqClass::Normal,
+            0,
+            prompt.max(1),
+            out.max(1),
+        ));
+    }
+    let mut now = 0u64;
+    let mut steps = 0;
+    loop {
+        let plan = schedule(&mut state, &mut kv, None, &cfg, now);
+        // invariant: KV pages conserved after scheduling
+        if !kv.check_conservation() {
+            return false;
+        }
+        let Some(plan) = plan else { break };
+        // invariant: step token budget respected
+        if plan.prefill_tokens() + plan.decode.len() as u64 > cfg.prefill_chunk_tokens as u64 {
+            return false;
+        }
+        // invariant: batch bound respected
+        if plan.batch_size() > cfg.max_batch_size {
+            return false;
+        }
+        // invariant: no request appears in both prefill and decode
+        for &(id, _, _) in &plan.prefill {
+            if plan.decode.contains(&id) {
+                return false;
+            }
+        }
+        now += 1_000_000;
+        complete_step(&mut state, &mut kv, &plan, now);
+        if !kv.check_conservation() {
+            return false;
+        }
+        steps += 1;
+        if steps > 200_000 {
+            return false; // livelock
+        }
+    }
+    // all requests that fit KV must have finished; none lost
+    let total = state.requests.len();
+    let finished = state.requests.values().filter(|r| r.is_done()).count();
+    let waiting = state.n_waiting();
+    // every non-finished request must still be waiting (stuck on KV),
+    // and only requests too large for the cache may be stuck forever
+    let stuck_ok = state
+        .requests
+        .values()
+        .filter(|r| !r.is_done())
+        .all(|r| (r.prompt_tokens + r.max_new_tokens) > (256 * 16) as u64 || waiting > 0);
+    finished + waiting == total && stuck_ok && kv.used_pages() == 0 || waiting > 0
+}
+
+#[test]
+fn prop_scheduler_conserves_and_terminates() {
+    let gen = VecGen {
+        elem: PairGen {
+            a: U64Range { lo: 1, hi: 3_000 }, // prompt tokens
+            b: U64Range { lo: 1, hi: 24 },    // output tokens
+        },
+        min_len: 1,
+        max_len: 24,
+    };
+    testkit::check_with(
+        testkit::Config {
+            cases: 60,
+            ..Default::default()
+        },
+        &gen,
+        |reqs| run_schedule_to_completion(reqs),
+    );
+}
+
+#[test]
+fn prop_kv_cache_grow_release_conservation() {
+    // random interleavings of grow/release never lose pages
+    let gen = VecGen {
+        elem: PairGen {
+            a: U64Range { lo: 0, hi: 9 },   // request id
+            b: U64Range { lo: 0, hi: 600 }, // tokens (0 → release)
+        },
+        min_len: 1,
+        max_len: 64,
+    };
+    testkit::check(&gen, |ops| {
+        let mut kv = KvCache::new(16, 128);
+        for &(id, tokens) in ops {
+            if tokens == 0 {
+                kv.release(id);
+            } else {
+                let _ = kv.grow_to(id, tokens);
+            }
+            if !kv.check_conservation() {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_prefix_cache_skip_never_exceeds_prompt() {
+    let gen = VecGen {
+        elem: PairGen {
+            a: U64Range { lo: 0, hi: 5 },     // content seed
+            b: U64Range { lo: 1, hi: 2_000 }, // prompt tokens
+        },
+        min_len: 1,
+        max_len: 40,
+    };
+    testkit::check(&gen, |reqs| {
+        let mut pc = PrefixCache::new(16, 512);
+        for &(seed, prompt) in reqs {
+            let skipped = pc.lookup_and_insert(seed, prompt);
+            if skipped > prompt {
+                return false;
+            }
+            if skipped % 16 != 0 {
+                return false; // only whole pages cacheable
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_sim_work_conservation() {
+    // Total CPU charged to compute-only tasks equals requested work,
+    // regardless of core count and task mix.
+    let gen = PairGen {
+        a: U64Range { lo: 1, hi: 6 }, // cores
+        b: VecGen {
+            elem: U64Range {
+                lo: 100_000,
+                hi: 20_000_000,
+            }, // per-task ns
+            min_len: 1,
+            max_len: 12,
+        },
+    };
+    testkit::check_with(
+        testkit::Config {
+            cases: 40,
+            ..Default::default()
+        },
+        &gen,
+        |(cores, works)| {
+            let mut sim = Sim::new(SimParams {
+                cores: *cores as usize,
+                context_switch_ns: 0,
+                timeslice_ns: 1_000_000,
+                poll_quantum_ns: 1_000,
+                trace_bucket_ns: None,
+            });
+            let ids: Vec<_> = works
+                .iter()
+                .map(|&w| sim.spawn("t", Script::new().compute(w)))
+                .collect();
+            sim.run();
+            let total: u64 = ids.iter().map(|&id| sim.task_stats(id).cpu_ns).sum();
+            let requested: u64 = works.iter().sum();
+            total == requested && ids.iter().all(|&id| sim.task_finished(id))
+        },
+    );
+}
+
+#[test]
+fn prop_sim_makespan_bounds() {
+    // makespan ∈ [total/cores, total] for compute-only workloads
+    let gen = PairGen {
+        a: U64Range { lo: 1, hi: 8 },
+        b: VecGen {
+            elem: U64Range {
+                lo: 500_000,
+                hi: 10_000_000,
+            },
+            min_len: 1,
+            max_len: 16,
+        },
+    };
+    testkit::check_with(
+        testkit::Config {
+            cases: 40,
+            ..Default::default()
+        },
+        &gen,
+        |(cores, works)| {
+            let mut sim = Sim::new(SimParams {
+                cores: *cores as usize,
+                context_switch_ns: 0,
+                timeslice_ns: 1_000_000,
+                poll_quantum_ns: 1_000,
+                trace_bucket_ns: None,
+            });
+            for &w in works {
+                sim.spawn("t", Script::new().compute(w));
+            }
+            let end = sim.run();
+            let total: u64 = works.iter().sum();
+            let lower = total / (*cores).max(1);
+            let upper = total + works.len() as u64; // rounding slack
+            end >= lower && end <= upper && end >= *works.iter().max().unwrap()
+        },
+    );
+}
+
+#[test]
+fn prop_shm_broadcast_fifo_per_reader() {
+    use cpuslow::ipc::ShmBroadcast;
+    // random interleavings of enqueue/dequeue preserve FIFO per reader
+    let gen = VecGen {
+        elem: U64Range { lo: 0, hi: 3 }, // 0..=2 → reader dequeue; 3 → enqueue
+        min_len: 1,
+        max_len: 200,
+    };
+    testkit::check(&gen, |ops| {
+        let q = ShmBroadcast::new(8, 3);
+        let mut sent = 0u64;
+        let mut expected = [0u64; 3];
+        for &op in ops {
+            if op == 3 {
+                if q.try_enqueue(sent) {
+                    sent += 1;
+                }
+            } else {
+                let r = op as usize;
+                if let Some(v) = q.try_dequeue(r) {
+                    if v != expected[r] {
+                        return false;
+                    }
+                    expected[r] += 1;
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_rng_streams_stay_in_bounds() {
+    let gen = PairGen {
+        a: U64Range { lo: 1, hi: u64::MAX / 2 },
+        b: U64Range { lo: 1, hi: 1_000 },
+    };
+    testkit::check(&gen, |(seed, n)| {
+        let mut rng = Rng::new(*seed);
+        (0..64).all(|_| rng.below(*n) < *n)
+    });
+}

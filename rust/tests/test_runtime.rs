@@ -1,0 +1,96 @@
+//! Integration tests over the PJRT runtime + AOT artifacts.
+//!
+//! These require `make artifacts` to have run; they self-skip (with a
+//! loud message) when artifacts/ is missing so `cargo test` stays green
+//! in a fresh checkout.
+
+use cpuslow::runtime::{Manifest, ModelRuntime};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() && dir.join("params.bin").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn manifest_parses_and_matches_tiny_spec() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let spec = cpuslow::config::ModelSpec::tiny_100m();
+    assert_eq!(m.n_layers, spec.n_layers);
+    assert_eq!(m.n_heads, spec.n_heads);
+    assert_eq!(m.vocab, spec.vocab_size);
+    assert!(!m.prefill_buckets.is_empty());
+    assert!(m.n_params > 50_000_000);
+}
+
+#[test]
+fn full_pipeline_prefill_decode() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = ModelRuntime::load(dir).expect("load + compile artifacts");
+
+    // prefill a short prompt
+    let prompt: Vec<u32> = (1..=40).collect();
+    let out = rt.prefill(&prompt).unwrap();
+    assert_eq!(out.logits.len(), rt.manifest().vocab);
+    assert!(out.logits.iter().all(|x| x.is_finite()));
+    assert_eq!(out.bucket, 128);
+
+    // insert into lane 0 and decode three steps
+    let mut state = rt.new_decode_state().unwrap();
+    rt.insert_lane(&mut state, 0, &out, prompt.len() - 1).unwrap();
+    let mut active = vec![false; rt.manifest().decode_batch];
+    active[0] = true;
+    let mut tok = vec![0i32; rt.manifest().decode_batch];
+    tok[0] = *prompt.last().unwrap() as i32;
+    let mut seen = Vec::new();
+    for _ in 0..3 {
+        let logits = rt.decode_step(&mut state, &tok, &active).unwrap();
+        assert!(logits[0].iter().all(|x| x.is_finite()));
+        let next = ModelRuntime::argmax(&logits[0]);
+        seen.push(next);
+        tok[0] = next as i32;
+    }
+    assert_eq!(state.lengths[0] as usize, prompt.len() - 1 + 3);
+    assert_eq!(seen.len(), 3);
+}
+
+#[test]
+fn decode_is_deterministic() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = ModelRuntime::load(dir).expect("load artifacts");
+    let run = || {
+        let prompt: Vec<u32> = (5..25).collect();
+        let out = rt.prefill(&prompt).unwrap();
+        let mut state = rt.new_decode_state().unwrap();
+        rt.insert_lane(&mut state, 0, &out, prompt.len() - 1).unwrap();
+        let mut active = vec![false; rt.manifest().decode_batch];
+        active[0] = true;
+        let mut tok = vec![0i32; rt.manifest().decode_batch];
+        tok[0] = *prompt.last().unwrap() as i32;
+        let mut ids = Vec::new();
+        for _ in 0..4 {
+            let logits = rt.decode_step(&mut state, &tok, &active).unwrap();
+            let next = ModelRuntime::argmax(&logits[0]);
+            ids.push(next);
+            tok[0] = next as i32;
+        }
+        ids
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn bucket_selection() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = ModelRuntime::load(dir).expect("load artifacts");
+    assert_eq!(rt.bucket_for(10), Some(128));
+    assert_eq!(rt.bucket_for(128), Some(128));
+    assert_eq!(rt.bucket_for(129), Some(256));
+    assert_eq!(rt.bucket_for(512), Some(512));
+    assert_eq!(rt.bucket_for(513), None);
+}

@@ -1,0 +1,170 @@
+//! Cross-module integration tests: full simulated serving runs and
+//! experiment harness smoke checks — the "shape" assertions the paper's
+//! figures rest on, executed end-to-end through the public API.
+
+use cpuslow::config::{ModelSpec, RunConfig, SystemSpec};
+use cpuslow::engine::{ReqClass, ServingSim};
+use cpuslow::workload::{run_attacker_victim, run_baseline, AvSpec};
+
+fn blackwell(cores: usize) -> RunConfig {
+    RunConfig::new(SystemSpec::blackwell(), ModelSpec::llama31_8b(), 4, cores)
+}
+
+#[test]
+fn tokenization_fraction_is_substantial_for_long_prompts() {
+    // Fig 5's shape: tokenize/TTFT stays a large, roughly stable
+    // fraction as SL grows (chunked prefill keeps prefill ~linear).
+    let frac_at = |sl: u64| {
+        let cfg = RunConfig::new(SystemSpec::h200(), ModelSpec::llama31_8b(), 4, 16);
+        let mut sim = ServingSim::new(cfg);
+        let id = sim.submit_at(0, ReqClass::Normal, sl, 1);
+        sim.run_secs(600.0);
+        let o = sim.outcome(id).unwrap();
+        let tok = o.tokenize_latency_ns.unwrap() as f64;
+        let ttft = o.ttft_ns.unwrap() as f64;
+        tok / ttft
+    };
+    let f16k = frac_at(16_000);
+    let f96k = frac_at(96_000);
+    assert!(f16k > 0.15, "tokenize fraction at 16k = {f16k:.2}");
+    assert!(f96k > 0.15, "tokenize fraction at 96k = {f96k:.2}");
+    // does not collapse at long SL (the paper's key Fig-5 observation)
+    assert!(f96k > 0.5 * f16k, "fraction must not shrink much: {f16k:.2} → {f96k:.2}");
+}
+
+#[test]
+fn victim_ttft_ordering_across_core_levels() {
+    // Fig 7's shape: TTFT monotone-ish decreasing in cores under load.
+    let spec = AvSpec {
+        attacker_sl: 80_000,
+        rps: 8.0,
+        attack_secs: 20.0,
+        victim_start_secs: 8.0,
+        n_victims: 1,
+        max_new_tokens: 8,
+        timeout_secs: 90.0,
+        ..AvSpec::default()
+    };
+    let ttft = |cores: usize| {
+        run_attacker_victim(blackwell(cores), &spec).mean_ttft_with_timeouts(spec.timeout_secs)
+    };
+    let t5 = ttft(5);
+    let t16 = ttft(16);
+    let t32 = ttft(32);
+    assert!(t5 > t16 * 1.1, "5 cores {t5:.2}s vs 16 cores {t16:.2}s");
+    assert!(t16 >= t32 * 0.8, "16 cores {t16:.2}s vs 32 cores {t32:.2}s");
+}
+
+#[test]
+fn sequential_victims_grow_under_sustained_overload() {
+    // Fig 8's shape: later victims see larger TTFT at scarce cores.
+    let spec = AvSpec {
+        attacker_sl: 114_000,
+        rps: 8.0,
+        attack_secs: 120.0,
+        victim_start_secs: 5.0,
+        n_victims: 3,
+        max_new_tokens: 8,
+        timeout_secs: 60.0,
+        ..AvSpec::default()
+    };
+    let r = run_attacker_victim(blackwell(5), &spec);
+    let vals: Vec<f64> = r
+        .victim_ttft_s
+        .iter()
+        .map(|v| v.unwrap_or(spec.timeout_secs))
+        .collect();
+    assert!(
+        vals.last().unwrap() > vals.first().unwrap(),
+        "victim TTFTs should grow: {vals:?}"
+    );
+}
+
+#[test]
+fn cpu_saturation_correlates_with_gpu_underutilization() {
+    // Fig 11's shape: scarce-CPU runs show higher CPU util and lower
+    // GPU util than abundant-CPU runs of the same workload.
+    let spec = AvSpec {
+        attacker_sl: 80_000,
+        rps: 8.0,
+        attack_secs: 15.0,
+        victim_start_secs: 5.0,
+        n_victims: 1,
+        max_new_tokens: 8,
+        timeout_secs: 60.0,
+        ..AvSpec::default()
+    };
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+    let scarce = run_attacker_victim(blackwell(5), &spec);
+    let abundant = run_attacker_victim(blackwell(32), &spec);
+    assert!(
+        mean(&scarce.cpu_util) > mean(&abundant.cpu_util),
+        "scarce CPU busier: {:.2} vs {:.2}",
+        mean(&scarce.cpu_util),
+        mean(&abundant.cpu_util)
+    );
+}
+
+#[test]
+fn baseline_unaffected_by_core_count() {
+    // Without load, 5 vs 32 cores barely matters (the paper's no-load
+    // baselines are flat) — sanity check that the simulator does not
+    // fabricate contention.
+    let spec = AvSpec::default();
+    let b5 = run_baseline(blackwell(5), &spec).unwrap();
+    let b32 = run_baseline(blackwell(32), &spec).unwrap();
+    assert!(b5 < 2.0 * b32, "no-load: {b5:.2}s vs {b32:.2}s");
+}
+
+#[test]
+fn prefix_cache_absorbs_repeated_prompts() {
+    // The attack is CPU-side *because* prefix caching absorbs the GPU
+    // prefill of identical prompts: steps complete far faster for the
+    // cached stream.
+    let mut with_cache = ServingSim::new(blackwell(32));
+    for i in 0..6u64 {
+        with_cache.submit_with_seed(i * 100_000_000, ReqClass::Attacker, 30_000, 4, 7);
+    }
+    with_cache.run_secs(120.0);
+    let done_cached = with_cache
+        .outcomes()
+        .iter()
+        .filter(|o| o.e2e_ns.is_some())
+        .count();
+
+    let mut cfg = blackwell(32);
+    cfg.serve.prefix_caching = false;
+    let mut without = ServingSim::new(cfg);
+    for i in 0..6u64 {
+        without.submit_with_seed(i * 100_000_000, ReqClass::Attacker, 30_000, 4, 7);
+    }
+    without.run_secs(6.0); // same virtual budget as the cached run needed
+    let done_uncached = without
+        .outcomes()
+        .iter()
+        .filter(|o| o.e2e_ns.is_some())
+        .count();
+    assert_eq!(done_cached, 6);
+    assert!(
+        done_uncached < done_cached,
+        "uncached prefill must be slower: {done_uncached} vs {done_cached}"
+    );
+}
+
+#[test]
+fn eight_gpu_configuration_runs() {
+    let cfg = RunConfig::new(SystemSpec::h100(), ModelSpec::llama31_8b(), 8, 16);
+    let mut sim = ServingSim::new(cfg);
+    let id = sim.submit_at(0, ReqClass::Normal, 10_000, 4);
+    sim.run_secs(120.0);
+    assert!(sim.outcome(id).unwrap().e2e_ns.is_some());
+}
+
+#[test]
+fn qwen_model_runs() {
+    let cfg = RunConfig::new(SystemSpec::h200(), ModelSpec::qwen25_14b(), 8, 32);
+    let mut sim = ServingSim::new(cfg);
+    let id = sim.submit_at(0, ReqClass::Normal, 5_000, 4);
+    sim.run_secs(120.0);
+    assert!(sim.outcome(id).unwrap().e2e_ns.is_some());
+}
