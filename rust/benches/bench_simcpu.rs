@@ -1,9 +1,13 @@
 //! DES scheduler benches — the simulator's event-loop throughput bounds
 //! every Track-S experiment's wall time (§Perf L3 target).
+//!
+//! Besides the human-readable report, writes `BENCH_simcpu.json`
+//! (events/sec per scenario, measured from the simulator's own event
+//! counter) so the perf trajectory is tracked across PRs.
 
 use cpuslow::simcpu::script::Script;
 use cpuslow::simcpu::{Op, Sim, SimParams, TaskCtx};
-use cpuslow::util::bench::{bench_n, black_box};
+use cpuslow::util::bench::{bench_n, black_box, BenchSuite};
 
 fn params(cores: usize) -> SimParams {
     SimParams {
@@ -15,26 +19,42 @@ fn params(cores: usize) -> SimParams {
     }
 }
 
+/// Run a scenario once to count its (deterministic) events, then bench
+/// it and record events/sec.
+fn scenario(suite: &mut BenchSuite, name: &str, n: usize, build: impl Fn() -> Sim) {
+    let events = {
+        let mut sim = build();
+        sim.run();
+        sim.stats().events_processed
+    };
+    let r = bench_n(name, n, || {
+        let mut sim = build();
+        black_box(sim.run());
+    });
+    r.report();
+    println!(
+        "    → {} events/run, ~{:.2} M events/s",
+        events,
+        r.per_sec(events as f64) / 1e6
+    );
+    suite.record(&r, Some((events as f64, "events")));
+}
+
 fn main() {
     println!("== simcpu benches ==");
+    let mut suite = BenchSuite::new("simcpu");
 
     // Pure compute churn: 64 tasks × 100 ms on 8 cores → ~800k slice events.
-    let r = bench_n("64 hogs × 100ms on 8 cores", 5, || {
+    scenario(&mut suite, "64 hogs × 100ms on 8 cores", 5, || {
         let mut sim = Sim::new(params(8));
         for _ in 0..64 {
             sim.spawn("hog", Script::new().compute(100_000_000));
         }
-        black_box(sim.run());
+        sim
     });
-    r.report();
-    let events = 64.0 * 100.0 * 8.0; // ≈ slices
-    println!(
-        "    → ~{:.2} M slice-events/s",
-        r.per_sec(events) / 1e6
-    );
 
     // Gate signal/wake storm.
-    let r = bench_n("10k block/signal pairs", 10, || {
+    scenario(&mut suite, "10k block/signal pairs", 10, || {
         let mut sim = Sim::new(params(4));
         let gate = sim.new_gate();
         for i in 0..100u64 {
@@ -54,12 +74,11 @@ fn main() {
         for t in 0..10_000u64 {
             sim.call_at(t * 1_000, move |sim| sim.signal(gate, 1));
         }
-        black_box(sim.run());
+        sim
     });
-    r.report();
 
     // Busy-poll contention: 8 pollers + 8 hogs on 4 cores for 100 ms.
-    let r = bench_n("8 pollers + 8 hogs, 100ms virtual", 5, || {
+    scenario(&mut suite, "8 pollers + 8 hogs, 100ms virtual", 5, || {
         let mut sim = Sim::new(params(4));
         let gate = sim.new_gate();
         for _ in 0..8 {
@@ -69,7 +88,25 @@ fn main() {
             sim.spawn("hog", Script::new().compute(100_000_000));
         }
         sim.call_at(100_000_000, move |sim| sim.signal(gate, 1));
-        black_box(sim.run());
+        sim
     });
-    r.report();
+
+    // Many-core poll fan-out: the scenario the gate→core index targets —
+    // 32 cores of pollers being signalled at a high rate.
+    scenario(&mut suite, "32 pollers on 32 cores, 20k signals", 5, || {
+        let mut sim = Sim::new(params(32));
+        let gate = sim.new_gate();
+        for _ in 0..32 {
+            sim.spawn("poller", Script::new().busy_poll(gate, 20_000));
+        }
+        for t in 0..20_000u64 {
+            sim.call_at(t * 5_000, move |sim| sim.signal(gate, 1));
+        }
+        sim
+    });
+
+    match suite.write(".") {
+        Ok(path) => println!("bench data → {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_simcpu.json: {e}"),
+    }
 }

@@ -15,6 +15,7 @@
 use super::out_dir;
 use crate::config::{ModelSpec, RunConfig, SystemSpec};
 use crate::report::{self, Table};
+use crate::sweep::Sweep;
 use crate::util::cli::Args;
 use crate::util::json::Json;
 use crate::workload::{run_attacker_victim, AvSpec};
@@ -36,22 +37,91 @@ fn spec(quick: bool) -> AvSpec {
     }
 }
 
+/// One independent ablation cell (each builds its own config + sim).
+#[derive(Debug, Clone, Copy)]
+enum AblCell {
+    /// (cores, CFS weight for the control plane)
+    Priority { cores: usize, weight: u32 },
+    /// (cores, CUDA graphs on/off)
+    Graphs { cores: usize, on: bool },
+    Prefix { caching: bool },
+    Chunk { tokens: usize },
+}
+
+struct AblOutcome {
+    ttft_s: f64,
+    steps: u64,
+}
+
+fn run_abl_cell(cell: AblCell, spec: &AvSpec) -> AblOutcome {
+    let cfg = match cell {
+        AblCell::Priority { cores, weight } => {
+            let mut cfg = base_cfg(cores);
+            cfg.serve.control_plane_weight = weight;
+            cfg
+        }
+        AblCell::Graphs { cores, on } => {
+            let mut cfg = base_cfg(cores);
+            cfg.serve.cuda_graphs = on;
+            cfg
+        }
+        AblCell::Prefix { caching } => {
+            let mut cfg = base_cfg(16);
+            cfg.serve.prefix_caching = caching;
+            cfg
+        }
+        AblCell::Chunk { tokens } => {
+            let mut cfg = base_cfg(16);
+            cfg.serve.prefill_chunk_tokens = tokens;
+            cfg
+        }
+    };
+    let r = run_attacker_victim(cfg, spec);
+    AblOutcome {
+        ttft_s: r.mean_ttft_with_timeouts(spec.timeout_secs),
+        steps: r.steps_completed,
+    }
+}
+
+const PRIORITY_CORES: [usize; 3] = [5, 8, 16];
+const GRAPH_CORES: [usize; 2] = [5, 16];
+const CHUNK_TOKENS: [usize; 3] = [512, 2_048, 8_192];
+
 pub fn run(args: &Args) {
     let quick = args.flag("quick");
     let spec = spec(quick);
     let mut data = Vec::new();
 
+    // Build the full flat cell list (section order == table order), fan
+    // it out, then render each section from its slice of the results.
+    let mut cells = Vec::new();
+    for cores in PRIORITY_CORES {
+        cells.push(AblCell::Priority { cores, weight: 1 });
+        cells.push(AblCell::Priority { cores, weight: 8 });
+    }
+    for cores in GRAPH_CORES {
+        cells.push(AblCell::Graphs { cores, on: true });
+        cells.push(AblCell::Graphs { cores, on: false });
+    }
+    for caching in [true, false] {
+        cells.push(AblCell::Prefix { caching });
+    }
+    for tokens in CHUNK_TOKENS {
+        cells.push(AblCell::Chunk { tokens });
+    }
+    let run_spec = spec.clone();
+    let results =
+        Sweep::from_args("ablations", args).run(cells, move |c| run_abl_cell(c, &run_spec));
+    let (priority, rest) = results.split_at(2 * PRIORITY_CORES.len());
+    let (graphs, rest) = rest.split_at(2 * GRAPH_CORES.len());
+    let (prefix, chunk) = rest.split_at(2);
+
     // --- 1. control-plane prioritization (§VI mitigation) -------------
     let mut t = Table::new(&["cores", "default sched (s)", "prioritized ctrl-plane (s)", "effect"])
         .with_title("Ablation: CFS priority for EngineCore+workers (paper §VI future work)");
-    for cores in [5usize, 8, 16] {
-        let ttft = |weight: u32| {
-            let mut cfg = base_cfg(cores);
-            cfg.serve.control_plane_weight = weight;
-            run_attacker_victim(cfg, &spec).mean_ttft_with_timeouts(spec.timeout_secs)
-        };
-        let default = ttft(1);
-        let pinned = ttft(8);
+    for (i, cores) in PRIORITY_CORES.into_iter().enumerate() {
+        let default = priority[2 * i].ttft_s;
+        let pinned = priority[2 * i + 1].ttft_s;
         let effect = if pinned < default * 0.95 {
             format!("{:.2}× better", default / pinned)
         } else if pinned > default * 1.05 {
@@ -77,14 +147,9 @@ pub fn run(args: &Args) {
     // --- 2. CUDA graphs on/off ----------------------------------------
     let mut t = Table::new(&["cores", "graphs on (s)", "graphs off (s)"])
         .with_title("Ablation: CUDA-Graph launch amortization (decode launches ×~10 when off)");
-    for cores in [5usize, 16] {
-        let ttft = |graphs: bool| {
-            let mut cfg = base_cfg(cores);
-            cfg.serve.cuda_graphs = graphs;
-            run_attacker_victim(cfg, &spec).mean_ttft_with_timeouts(spec.timeout_secs)
-        };
-        let on = ttft(true);
-        let off = ttft(false);
+    for (i, cores) in GRAPH_CORES.into_iter().enumerate() {
+        let on = graphs[2 * i].ttft_s;
+        let off = graphs[2 * i + 1].ttft_s;
         t.row(vec![
             cores.to_string(),
             format!("{on:.2}"),
@@ -104,22 +169,16 @@ pub fn run(args: &Args) {
     // the experiment stops isolating the CPU effect (methodology check).
     let mut t = Table::new(&["prefix caching", "victim TTFT (s)", "engine steps"])
         .with_title("Ablation: prefix caching (what makes the attack CPU-side)");
-    for caching in [true, false] {
-        let mut cfg = base_cfg(16);
-        cfg.serve.prefix_caching = caching;
-        let r = run_attacker_victim(cfg, &spec);
+    for (caching, r) in [true, false].into_iter().zip(prefix) {
         t.row(vec![
             caching.to_string(),
-            format!("{:.2}", r.mean_ttft_with_timeouts(spec.timeout_secs)),
-            r.steps_completed.to_string(),
+            format!("{:.2}", r.ttft_s),
+            r.steps.to_string(),
         ]);
         let mut j = Json::obj();
         j.set("ablation", "prefix_caching")
             .set("caching", caching)
-            .set(
-                "ttft_s",
-                r.mean_ttft_with_timeouts(spec.timeout_secs),
-            );
+            .set("ttft_s", r.ttft_s);
         data.push(j);
     }
     print!("{}", t.render());
@@ -127,18 +186,12 @@ pub fn run(args: &Args) {
     // --- 4. chunked-prefill budget --------------------------------------
     let mut t = Table::new(&["chunk tokens", "victim TTFT (s)"])
         .with_title("Ablation: chunked-prefill budget (vLLM max_num_batched_tokens)");
-    for chunk in [512usize, 2_048, 8_192] {
-        let mut cfg = base_cfg(16);
-        cfg.serve.prefill_chunk_tokens = chunk;
-        let r = run_attacker_victim(cfg, &spec);
-        t.row(vec![
-            chunk.to_string(),
-            format!("{:.2}", r.mean_ttft_with_timeouts(spec.timeout_secs)),
-        ]);
+    for (tokens, r) in CHUNK_TOKENS.into_iter().zip(chunk) {
+        t.row(vec![tokens.to_string(), format!("{:.2}", r.ttft_s)]);
         let mut j = Json::obj();
         j.set("ablation", "prefill_chunk")
-            .set("chunk", chunk)
-            .set("ttft_s", r.mean_ttft_with_timeouts(spec.timeout_secs));
+            .set("chunk", tokens)
+            .set("ttft_s", r.ttft_s);
         data.push(j);
     }
     print!("{}", t.render());

@@ -13,6 +13,7 @@ use crate::gpu::{self, Fleet, Kernel, KernelKind};
 use crate::report::{self, Table};
 use crate::simcpu::script::{Instr, Script};
 use crate::simcpu::{Sim, SimParams};
+use crate::sweep::Sweep;
 use crate::util::cli::Args;
 use crate::util::json::Json;
 use std::rc::Rc;
@@ -160,8 +161,12 @@ pub fn run(args: &Args) {
     .with_title("Figure 12: collective microbenchmark under CPU oversubscription");
     let mut data = Vec::new();
     let n_hogs = args.usize_or("hogs", 2); // paper: extra host processes
-    for &cores in &core_list {
-        let r = run_microbench_with_hogs(&sys, n_gpus, cores, iters, kernel_ms, comm_ms, n_hogs);
+    // Each core level is an independent simulation — fan them out.
+    let results = Sweep::from_args("fig12", args).run(core_list, move |cores| {
+        run_microbench_with_hogs(&sys, n_gpus, cores, iters, kernel_ms, comm_ms, n_hogs)
+    });
+    for r in &results {
+        let cores = r.cores;
         t.row(vec![
             cores.to_string(),
             n_gpus.to_string(),

@@ -13,6 +13,7 @@ use crate::ipc::SimShmBroadcast;
 use crate::report::{self, Table};
 use crate::simcpu::script::{Instr, Script};
 use crate::simcpu::{Sim, SimParams, TaskCtx};
+use crate::sweep::Sweep;
 use crate::util::cli::Args;
 use crate::util::json::Json;
 use std::cell::RefCell;
@@ -29,6 +30,7 @@ pub struct DequeueResult {
 
 /// Run the broadcast loop for `n_msgs` steps at `step_ms` cadence with
 /// `load_rps` background tokenize arrivals of `load_tokens` each.
+#[allow(clippy::too_many_arguments)]
 pub fn run_dequeue_bench(
     sys: &SystemSpec,
     cores: usize,
@@ -130,17 +132,56 @@ pub fn run(args: &Args) {
         "cores", "TP", "load (req/s)", "mean dequeue (ms)", "max dequeue (ms)", "slowdown",
     ])
     .with_title("Figure 13: shm broadcast dequeue() latency (decode step = 44 ms)");
-    // Uncontended reference: ample cores, no load.
-    let base = run_dequeue_bench(&sys, 32, tp, n_msgs, step_ms, 0.0, 0, horizon);
-    let mut data = Vec::new();
     let core_list: Vec<usize> = args
         .u64_list("cores")
         .map(|v| v.into_iter().map(|c| c as usize).collect())
         .unwrap_or_else(|| vec![32, 16, 8, 6, 5]);
+
+    // One independent cell per measurement: the uncontended reference,
+    // each contended core level, and the TP-scaling sweep.
+    #[derive(Clone, Copy)]
+    struct Fig13Cell {
+        cores: usize,
+        tp: usize,
+        load_rps: f64,
+        load_tokens: u64,
+    }
+    let mut cells = vec![Fig13Cell {
+        cores: 32,
+        tp,
+        load_rps: 0.0,
+        load_tokens: 0,
+    }];
     for &cores in &core_list {
-        let r = run_dequeue_bench(&sys, cores, tp, n_msgs, step_ms, 5.0, load_tokens, horizon);
+        cells.push(Fig13Cell {
+            cores,
+            tp,
+            load_rps: 5.0,
+            load_tokens,
+        });
+    }
+    let tp_degrees = [2usize, 4, 8];
+    for &tp_deg in &tp_degrees {
+        cells.push(Fig13Cell {
+            cores: 32,
+            tp: tp_deg,
+            load_rps: 5.0,
+            load_tokens,
+        });
+    }
+    let results = Sweep::from_args("fig13", args).run(cells, move |c| {
+        run_dequeue_bench(
+            &sys, c.cores, c.tp, n_msgs, step_ms, c.load_rps, c.load_tokens, horizon,
+        )
+    });
+    let base = &results[0];
+    let contended = &results[1..1 + core_list.len()];
+    let tp_scaling = &results[1 + core_list.len()..];
+
+    let mut data = Vec::new();
+    for r in contended {
         t.row(vec![
-            cores.to_string(),
+            r.cores.to_string(),
             tp.to_string(),
             "5".into(),
             format!("{:.1}", r.mean_dequeue_ms),
@@ -148,7 +189,7 @@ pub fn run(args: &Args) {
             format!("{:.1}×", r.mean_dequeue_ms / base.mean_dequeue_ms),
         ]);
         let mut j = Json::obj();
-        j.set("cores", cores)
+        j.set("cores", r.cores)
             .set("mean_ms", r.mean_dequeue_ms)
             .set("max_ms", r.max_dequeue_ms)
             .set("baseline_ms", base.mean_dequeue_ms);
@@ -163,8 +204,7 @@ pub fn run(args: &Args) {
     // Structural TP scaling of writer poll cost (§V-B takeaway).
     let mut t2 = Table::new(&["TP", "writer poll CPU (ms)"])
         .with_title("Writer flag-poll cost scales with tensor-parallel degree");
-    for tp_deg in [2usize, 4, 8] {
-        let r = run_dequeue_bench(&sys, 32, tp_deg, n_msgs, step_ms, 5.0, load_tokens, horizon);
+    for (tp_deg, r) in tp_degrees.iter().zip(tp_scaling) {
         t2.row(vec![tp_deg.to_string(), format!("{:.1}", r.writer_poll_ms)]);
     }
     print!("{}", t2.render());

@@ -14,6 +14,7 @@
 use super::{out_dir, resolve_config};
 use crate::config::{ModelSpec, RunConfig, SystemSpec};
 use crate::report::{self, speedup_label, Table};
+use crate::sweep::Sweep;
 use crate::util::cli::Args;
 use crate::util::json::Json;
 use crate::workload::{run_attacker_victim, run_baseline, AvSpec};
@@ -41,7 +42,80 @@ pub fn paper_sls(quick: bool) -> Vec<u64> {
     }
 }
 
-/// Run the Fig-7 grid for one (system, model, gpus, rps).
+/// Inputs of one grid cell. Cells are fully self-contained (they build
+/// their own `ServingSim` from the spec) and therefore safe to fan out
+/// across the sweep executor.
+#[derive(Debug, Clone)]
+pub struct CellSpec {
+    pub system: SystemSpec,
+    pub model: ModelSpec,
+    pub n_gpus: usize,
+    pub cores: usize,
+    pub rps: f64,
+    pub attacker_sl: u64,
+    pub spec: AvSpec,
+}
+
+/// Build the cell list for one (system, model, gpus, rps) in table
+/// order: SL outer, cores inner — the exact order the old serial loop
+/// produced rows in.
+pub fn grid_cells(
+    system: &SystemSpec,
+    model: &ModelSpec,
+    n_gpus: usize,
+    rps: f64,
+    core_levels: &[usize],
+    sls: &[u64],
+    spec_base: &AvSpec,
+) -> Vec<CellSpec> {
+    let mut cells = Vec::new();
+    for &sl in sls {
+        for &cores in core_levels {
+            cells.push(CellSpec {
+                system: system.clone(),
+                model: model.clone(),
+                n_gpus,
+                cores,
+                rps,
+                attacker_sl: sl,
+                spec: AvSpec {
+                    attacker_sl: sl,
+                    rps,
+                    ..spec_base.clone()
+                },
+            });
+        }
+    }
+    cells
+}
+
+/// Run one grid cell: the no-load baseline plus the attacked run.
+pub fn run_cell(cell: CellSpec) -> Cell {
+    let cfg = RunConfig::new(
+        cell.system.clone(),
+        cell.model.clone(),
+        cell.n_gpus,
+        cell.cores,
+    );
+    let baseline = run_baseline(cfg.clone(), &cell.spec);
+    let r = run_attacker_victim(cfg, &cell.spec);
+    let timeouts = r.victim_ttft_s.iter().filter(|t| t.is_none()).count();
+    Cell {
+        system: cell.system.name.clone(),
+        model: cell.model.name.clone(),
+        n_gpus: cell.n_gpus,
+        cores: cell.cores,
+        rps: cell.rps,
+        attacker_sl: cell.attacker_sl,
+        ttft_s: r.mean_ttft_s(),
+        timeouts,
+        baseline_s: baseline,
+    }
+}
+
+/// Run the Fig-7 grid for one (system, model, gpus, rps), serially.
+/// (The figure harnesses below batch cells across *all* their loops and
+/// fan out; this stays as the one-group entry point.)
 pub fn run_grid(
     system: &SystemSpec,
     model: &ModelSpec,
@@ -51,32 +125,10 @@ pub fn run_grid(
     sls: &[u64],
     spec_base: &AvSpec,
 ) -> Vec<Cell> {
-    let mut cells = Vec::new();
-    for &sl in sls {
-        for &cores in core_levels {
-            let cfg = RunConfig::new(system.clone(), model.clone(), n_gpus, cores);
-            let spec = AvSpec {
-                attacker_sl: sl,
-                rps,
-                ..spec_base.clone()
-            };
-            let baseline = run_baseline(cfg.clone(), &spec);
-            let r = run_attacker_victim(cfg, &spec);
-            let timeouts = r.victim_ttft_s.iter().filter(|t| t.is_none()).count();
-            cells.push(Cell {
-                system: system.name.clone(),
-                model: model.name.clone(),
-                n_gpus,
-                cores,
-                rps,
-                attacker_sl: sl,
-                ttft_s: r.mean_ttft_s(),
-                timeouts,
-                baseline_s: baseline,
-            });
-        }
-    }
-    cells
+    grid_cells(system, model, n_gpus, rps, core_levels, sls, spec_base)
+        .into_iter()
+        .map(run_cell)
+        .collect()
 }
 
 fn default_spec(quick: bool) -> AvSpec {
@@ -90,7 +142,7 @@ fn default_spec(quick: bool) -> AvSpec {
     }
 }
 
-fn render_cells(title: &str, cells: &[Cell]) -> Table {
+pub fn render_cells(title: &str, cells: &[Cell]) -> Table {
     let mut t = Table::new(&[
         "system", "model", "GPUs", "RPS", "attacker SL", "cores", "baseline (s)", "TTFT (s)",
         "timeouts",
@@ -112,7 +164,7 @@ fn render_cells(title: &str, cells: &[Cell]) -> Table {
     t
 }
 
-fn cells_to_json(cells: &[Cell]) -> Json {
+pub fn cells_to_json(cells: &[Cell]) -> Json {
     Json::Arr(
         cells
             .iter()
@@ -184,7 +236,9 @@ pub fn run_fig7(args: &Args) {
         vec![ModelSpec::llama31_8b(), ModelSpec::qwen25_14b()]
     };
 
-    let mut all = Vec::new();
+    // Flatten the whole model × GPUs × RPS × SL × cores grid into one
+    // independent cell list and fan it across the sweep executor.
+    let mut specs = Vec::new();
     for model in &models {
         for &n_gpus in &gpus_list {
             let core_levels: Vec<usize> = args
@@ -192,7 +246,7 @@ pub fn run_fig7(args: &Args) {
                 .map(|v| v.into_iter().map(|x| x as usize).collect())
                 .unwrap_or_else(|| RunConfig::paper_core_levels(n_gpus));
             for &rps in &rps_list {
-                let cells = run_grid(
+                specs.extend(grid_cells(
                     &base.system,
                     model,
                     n_gpus,
@@ -200,11 +254,11 @@ pub fn run_fig7(args: &Args) {
                     &core_levels,
                     &sls,
                     &spec,
-                );
-                all.extend(cells);
+                ));
             }
         }
     }
+    let all = Sweep::from_args("fig7", args).run(specs, run_cell);
     let t = render_cells(
         "Figure 7: victim TTFT under CPU load (Blackwell system)",
         &all,
@@ -252,32 +306,43 @@ pub fn run_fig9(args: &Args) {
     let mut t = Table::new(&["system", "model", "GPUs", "attacker SL", "best speedup"])
         .with_title("Figure 9: best CPU-abundant speedup vs least-CPU (∞ = least-CPU timeout)");
     let mut data = Vec::new();
+    // Flatten every (system, model, gpus) group into one cell list,
+    // remembering each group's length so results slice back apart.
+    let mut specs = Vec::new();
+    let mut groups = Vec::new();
     for system in &systems {
         for model in &models {
             for &n_gpus in &gpus_list {
                 let core_levels = RunConfig::paper_core_levels(n_gpus);
-                let cells =
-                    run_grid(system, model, n_gpus, rps, &core_levels, &sls, &spec);
-                for (sl, sp) in speedups(&cells, n_gpus + 1) {
-                    t.row(vec![
-                        system.name.clone(),
-                        model.name.clone(),
-                        n_gpus.to_string(),
-                        sl.to_string(),
-                        speedup_label(sp),
-                    ]);
-                    let mut j = Json::obj();
-                    j.set("system", system.name.as_str())
-                        .set("model", model.name.as_str())
-                        .set("gpus", n_gpus)
-                        .set("sl", sl)
-                        .set(
-                            "speedup",
-                            if sp.is_finite() { Json::Num(sp) } else { Json::Str("inf".into()) },
-                        );
-                    data.push(j);
-                }
+                let group = grid_cells(system, model, n_gpus, rps, &core_levels, &sls, &spec);
+                groups.push((system.name.clone(), model.name.clone(), n_gpus, group.len()));
+                specs.extend(group);
             }
+        }
+    }
+    let results = Sweep::from_args("fig9", args).run(specs, run_cell);
+    let mut offset = 0;
+    for (system_name, model_name, n_gpus, len) in groups {
+        let cells = &results[offset..offset + len];
+        offset += len;
+        for (sl, sp) in speedups(cells, n_gpus + 1) {
+            t.row(vec![
+                system_name.clone(),
+                model_name.clone(),
+                n_gpus.to_string(),
+                sl.to_string(),
+                speedup_label(sp),
+            ]);
+            let mut j = Json::obj();
+            j.set("system", system_name.as_str())
+                .set("model", model_name.as_str())
+                .set("gpus", n_gpus)
+                .set("sl", sl)
+                .set(
+                    "speedup",
+                    if sp.is_finite() { Json::Num(sp) } else { Json::Str("inf".into()) },
+                );
+            data.push(j);
         }
     }
     print!("{}", t.render());
@@ -297,8 +362,10 @@ pub fn run_headline(args: &Args) {
     };
     let mut finite = Vec::new();
     let mut infinities = 0;
+    let mut specs = Vec::new();
+    let mut group_lens = Vec::new();
     for system in &systems {
-        let cells = run_grid(
+        let group = grid_cells(
             system,
             &ModelSpec::llama31_8b(),
             4,
@@ -307,7 +374,15 @@ pub fn run_headline(args: &Args) {
             &sls,
             &spec,
         );
-        for (_, sp) in speedups(&cells, 5) {
+        group_lens.push(group.len());
+        specs.extend(group);
+    }
+    let results = Sweep::from_args("headline", args).run(specs, run_cell);
+    let mut offset = 0;
+    for len in group_lens {
+        let cells = &results[offset..offset + len];
+        offset += len;
+        for (_, sp) in speedups(cells, 5) {
             if sp.is_finite() {
                 finite.push(sp);
             } else if sp.is_infinite() {

@@ -31,6 +31,7 @@ pub mod workload;
 pub mod realserve;
 pub mod report;
 pub mod runtime;
+pub mod sweep;
 pub mod testkit;
 pub mod util;
 

@@ -25,6 +25,8 @@ fn main() {
             ("--model M", "model preset: llama8b | qwen14b | tiny"),
             ("--gpus N", "number of GPUs"),
             ("--cores LIST", "CPU core counts, e.g. 5,8,16,32"),
+            ("--jobs N", "sweep cells run on N threads (default: all cores; 1 = serial)"),
+            ("--no-progress", "suppress the stderr sweep progress line"),
         ],
     };
     match args.subcommand() {

@@ -27,8 +27,9 @@
 pub mod script;
 
 use crate::util::stats::TimeSeries;
+use rustc_hash::FxHashMap;
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::BinaryHeap;
 
 pub type TaskId = usize;
 pub type GateId = usize;
@@ -157,8 +158,17 @@ impl<'a> TaskCtx<'a> {
 
 pub struct Gates {
     values: Vec<u64>,
-    /// Tasks blocked (off-CPU) on each gate: (task, target).
-    blocked: Vec<Vec<(TaskId, u64)>>,
+    /// Blocked (off-CPU) waiters per gate, as a min-heap keyed by
+    /// (target, enqueue seq, task): `signal` pops exactly the satisfied
+    /// waiters instead of scanning every waiter on the gate.
+    blocked: Vec<BinaryHeap<Reverse<(u64, u64, TaskId)>>>,
+    /// Monotonic tie-breaker so equal-target waiters wake FIFO.
+    block_seq: u64,
+    /// Cores with a live busy-poll registration per gate, as
+    /// (core, epoch) pairs: `signal` consults this index instead of
+    /// scanning every core. Entries whose epoch no longer matches the
+    /// core are stale and dropped lazily.
+    pollers: Vec<Vec<(usize, u64)>>,
 }
 
 impl Gates {
@@ -166,12 +176,15 @@ impl Gates {
         Gates {
             values: Vec::new(),
             blocked: Vec::new(),
+            block_seq: 0,
+            pollers: Vec::new(),
         }
     }
 
     pub fn new_gate(&mut self) -> GateId {
         self.values.push(0);
-        self.blocked.push(Vec::new());
+        self.blocked.push(BinaryHeap::new());
+        self.pollers.push(Vec::new());
         self.values.len() - 1
     }
 
@@ -184,8 +197,9 @@ impl Gates {
 // Tasks and cores
 // ---------------------------------------------------------------------
 
-/// In-flight op with progress bookkeeping.
-#[derive(Debug, Clone)]
+/// In-flight op with progress bookkeeping. `Copy` so the event handlers
+/// can match on it without cloning in the hot path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum CurOp {
     Compute { remaining: u64 },
     Poll { gate: GateId, target: u64 },
@@ -220,8 +234,9 @@ struct Task {
     switches: u64,
 }
 
-/// What the core is executing until its next scheduled event.
-#[derive(Debug, Clone, PartialEq)]
+/// What the core is executing until its next scheduled event. `Copy`
+/// for the same reason as [`CurOp`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Segment {
     /// Paying the context-switch cost before the task's op runs.
     Switch,
@@ -243,6 +258,9 @@ struct Core {
     seg_start_ns: u64,
     slice_used_ns: u64,
     busy_since: Option<u64>,
+    /// Gate this core holds a live entry for in `Gates::pollers`
+    /// (prevents duplicate registrations across slice renewals).
+    poll_reg: Option<GateId>,
 }
 
 impl Core {
@@ -255,6 +273,7 @@ impl Core {
             seg_start_ns: 0,
             slice_used_ns: 0,
             busy_since: None,
+            poll_reg: None,
         }
     }
 }
@@ -317,11 +336,14 @@ pub struct TaskStats {
 pub struct SimStats {
     pub context_switches: u64,
     /// CPU ns consumed per task class (useful work + polling).
-    pub class_cpu_ns: HashMap<&'static str, u64>,
+    pub class_cpu_ns: FxHashMap<&'static str, u64>,
     /// CPU ns burned in busy-polling per class.
-    pub class_poll_ns: HashMap<&'static str, u64>,
+    pub class_poll_ns: FxHashMap<&'static str, u64>,
     /// Total busy core-ns.
     pub busy_core_ns: u64,
+    /// Events drained from the heap (the simulator's unit of work;
+    /// benches report events/sec from this).
+    pub events_processed: u64,
 }
 
 // ---------------------------------------------------------------------
@@ -339,6 +361,13 @@ pub struct Sim {
     rq_seq: u64,
     gates: Gates,
     deferred: Vec<Deferred>,
+    /// Reused drain buffer for `apply_deferred` (avoids a fresh Vec per
+    /// batch on the program-step hot path).
+    deferred_scratch: Vec<Deferred>,
+    /// Min-heap of idle core ids — dispatching wakes the lowest-numbered
+    /// idle core first, exactly like the old full scan, without touching
+    /// busy cores.
+    idle_cores: BinaryHeap<Reverse<usize>>,
     stats: SimStats,
     /// Busy-core utilization trace (core-seconds per bucket).
     util_trace: Option<TimeSeries>,
@@ -349,7 +378,8 @@ impl Sim {
     pub fn new(params: SimParams) -> Sim {
         assert!(params.cores > 0, "need at least one core");
         assert!(params.timeslice_ns > 0 && params.poll_quantum_ns > 0);
-        let cores = (0..params.cores).map(|_| Core::new()).collect();
+        let cores: Vec<Core> = (0..params.cores).map(|_| Core::new()).collect();
+        let idle_cores = (0..params.cores).map(Reverse).collect();
         let util_trace = params
             .trace_bucket_ns
             .map(|b| TimeSeries::new(b as f64 / 1e9));
@@ -364,6 +394,8 @@ impl Sim {
             rq_seq: 0,
             gates: Gates::new(),
             deferred: Vec::new(),
+            deferred_scratch: Vec::new(),
+            idle_cores,
             stats: SimStats::default(),
             util_trace,
             min_vruntime: 0,
@@ -442,34 +474,55 @@ impl Sim {
     pub fn signal(&mut self, gate: GateId, n: u64) {
         self.gates.values[gate] += n;
         let value = self.gates.values[gate];
-        // Wake blocked waiters whose target is reached.
-        let waiters = &mut self.gates.blocked[gate];
-        let mut woken = Vec::new();
-        waiters.retain(|&(task, target)| {
-            if target <= value {
-                woken.push(task);
-                false
-            } else {
-                true
+        // Wake blocked waiters whose target is reached: pop exactly the
+        // satisfied prefix of the per-gate (target, seq) min-heap, then
+        // wake in enqueue order (matching the old scan's FIFO order).
+        let mut woken: Vec<(u64, TaskId)> = Vec::new();
+        while let Some(&Reverse((target, seq, task))) = self.gates.blocked[gate].peek() {
+            if target > value {
+                break;
             }
-        });
-        for task in woken {
+            self.gates.blocked[gate].pop();
+            woken.push((seq, task));
+        }
+        woken.sort_unstable();
+        for (_, task) in woken {
             debug_assert_eq!(self.tasks[task].state, TaskState::Blocked);
             self.make_runnable(task);
         }
-        // Notify running pollers: they notice after one poll quantum.
-        for core_id in 0..self.cores.len() {
+        // Notify running pollers via the gate → polling-core index
+        // (instead of scanning every core); they notice after one poll
+        // quantum. Stale registrations are dropped here.
+        let mut entries = std::mem::take(&mut self.gates.pollers[gate]);
+        let mut notify: Vec<usize> = Vec::new();
+        entries.retain(|&(core_id, epoch)| {
             let core = &self.cores[core_id];
-            if let (Some(task), Segment::Poll { noticed: false }) = (core.current, &core.seg) {
-                if let CurOp::Poll { gate: g, target } = &self.tasks[task].cur {
-                    if *g == gate && *target <= value {
-                        let epoch = core.epoch;
-                        let t = self.now_ns + self.params.poll_quantum_ns;
-                        self.cores[core_id].seg = Segment::Poll { noticed: true };
-                        self.push_event(t, Ev::PollNotice { core: core_id, epoch });
+            if core.epoch != epoch || !matches!(core.seg, Segment::Poll { noticed: false }) {
+                return false; // core moved on; registration is stale
+            }
+            let Some(task) = core.current else { return false };
+            match self.tasks[task].cur {
+                CurOp::Poll { gate: g, target } if g == gate => {
+                    if target <= value {
+                        notify.push(core_id);
+                        false // transitions to noticed below
+                    } else {
+                        true
                     }
                 }
+                // same epoch but the task now polls a different gate
+                _ => false,
             }
+        });
+        self.gates.pollers[gate] = entries;
+        // ascending core order, matching the old full scan
+        notify.sort_unstable();
+        for core_id in notify {
+            let epoch = self.cores[core_id].epoch;
+            let t = self.now_ns + self.params.poll_quantum_ns;
+            self.cores[core_id].seg = Segment::Poll { noticed: true };
+            self.cores[core_id].poll_reg = None;
+            self.push_event(t, Ev::PollNotice { core: core_id, epoch });
         }
         self.kick_idle_cores();
     }
@@ -514,10 +567,12 @@ impl Sim {
     }
 
     fn kick_idle_cores(&mut self) {
-        for core_id in 0..self.cores.len() {
-            if self.cores[core_id].current.is_none() {
-                self.dispatch(core_id);
-            }
+        // Hand runnable tasks to idle cores in ascending core-id order
+        // (the free list replaces the old scan over every core).
+        while !self.idle_cores.is_empty() && self.peek_runnable() {
+            let Reverse(core_id) = self.idle_cores.pop().expect("non-empty");
+            debug_assert!(self.cores[core_id].current.is_none());
+            self.dispatch(core_id);
         }
     }
 
@@ -544,6 +599,7 @@ impl Sim {
         debug_assert!(self.cores[core_id].current.is_none());
         let Some(task) = self.pop_runnable() else {
             self.core_set_idle(core_id);
+            self.idle_cores.push(Reverse(core_id));
             return;
         };
         // account run-queue waiting
@@ -630,7 +686,7 @@ impl Sim {
                 self.cores[core_id].slice_used_ns = 0;
                 continue;
             }
-            match self.tasks[task_id].cur.clone() {
+            match self.tasks[task_id].cur {
                 CurOp::Compute { remaining } => {
                     let run = remaining.min(slice_left);
                     let core = &mut self.cores[core_id];
@@ -642,35 +698,40 @@ impl Sim {
                     return;
                 }
                 CurOp::Poll { gate, target } => {
-                    let core_epoch;
                     if self.gates.value(gate) >= target {
                         // Satisfied already: one quantum check completes it.
                         let core = &mut self.cores[core_id];
                         core.seg = Segment::PollCheck;
                         core.seg_start_ns = self.now_ns;
-                        core_epoch = core.epoch;
+                        let epoch = core.epoch;
                         let t = self.now_ns + self.params.poll_quantum_ns.min(slice_left);
-                        self.push_event(
-                            t,
-                            Ev::PollNotice {
-                                core: core_id,
-                                epoch: core_epoch,
-                            },
-                        );
+                        self.push_event(t, Ev::PollNotice { core: core_id, epoch });
                     } else {
                         // Spin until slice end (or a signal's poll notice).
                         let core = &mut self.cores[core_id];
                         core.seg = Segment::Poll { noticed: false };
                         core.seg_start_ns = self.now_ns;
-                        core_epoch = core.epoch;
+                        let epoch = core.epoch;
+                        // Register in the gate → polling-core index so
+                        // `signal` finds this core without a scan. Slice
+                        // renewals keep the same (core, epoch) entry.
+                        if core.poll_reg != Some(gate) {
+                            core.poll_reg = Some(gate);
+                            self.gates.pollers[gate].push((core_id, epoch));
+                            // Stale entries are normally dropped on the
+                            // next signal; compact here too so a rarely
+                            // signalled gate under preemption churn
+                            // cannot accumulate them without bound.
+                            if self.gates.pollers[gate].len() > 2 * self.params.cores {
+                                let cores = &self.cores;
+                                self.gates.pollers[gate].retain(|&(c, e)| {
+                                    cores[c].epoch == e
+                                        && matches!(cores[c].seg, Segment::Poll { noticed: false })
+                                });
+                            }
+                        }
                         let t = self.now_ns + slice_left;
-                        self.push_event(
-                            t,
-                            Ev::CoreSeg {
-                                core: core_id,
-                                epoch: core_epoch,
-                            },
-                        );
+                        self.push_event(t, Ev::CoreSeg { core: core_id, epoch });
                     }
                     return;
                 }
@@ -702,6 +763,7 @@ impl Sim {
         core.current = None;
         core.epoch += 1; // invalidate any scheduled segment events
         core.slice_used_ns = 0;
+        core.poll_reg = None; // any poll registration is now stale
     }
 
     fn preempt(&mut self, core_id: usize, task_id: TaskId) {
@@ -712,7 +774,9 @@ impl Sim {
 
     fn preempt_for_block(&mut self, core_id: usize, task_id: TaskId, gate: GateId, target: u64) {
         self.vacate(core_id, task_id, TaskState::Blocked);
-        self.gates.blocked[gate].push((task_id, target));
+        self.gates.block_seq += 1;
+        let seq = self.gates.block_seq;
+        self.gates.blocked[gate].push(Reverse((target, seq, task_id)));
         self.dispatch(core_id);
     }
 
@@ -751,8 +815,13 @@ impl Sim {
 
     fn apply_deferred(&mut self) {
         while !self.deferred.is_empty() {
-            let batch: Vec<Deferred> = self.deferred.drain(..).collect();
-            for d in batch {
+            // Swap the pending batch into the reusable scratch buffer so
+            // each batch doesn't allocate. (A re-entrant call — a spawned
+            // task stepping during dispatch — finds an empty scratch and
+            // falls back to a fresh Vec; both drains stay disjoint.)
+            let mut batch = std::mem::take(&mut self.deferred_scratch);
+            std::mem::swap(&mut self.deferred, &mut batch);
+            for d in batch.drain(..) {
                 match d {
                     Deferred::Spawn { program, class } => {
                         self.spawn_boxed(class, program, 1);
@@ -761,6 +830,7 @@ impl Sim {
                     Deferred::CallAt { t_ns, f } => self.call_at(t_ns, f),
                 }
             }
+            self.deferred_scratch = batch;
         }
     }
 
@@ -771,7 +841,7 @@ impl Sim {
             return; // stale
         }
         let task_id = self.cores[core_id].current.expect("core busy");
-        match self.cores[core_id].seg.clone() {
+        match self.cores[core_id].seg {
             Segment::Switch => {
                 // switch cost elapsed; it counts as core-busy but not task CPU
                 self.cores[core_id].slice_used_ns +=
@@ -813,7 +883,7 @@ impl Sim {
         ));
         self.charge(core_id, task_id, true);
         // Double-check the gate (it cannot regress, but be safe).
-        if let CurOp::Poll { gate, target } = self.tasks[task_id].cur.clone() {
+        if let CurOp::Poll { gate, target } = self.tasks[task_id].cur {
             if self.gates.value(gate) >= target {
                 self.tasks[task_id].cur = CurOp::None;
             } else {
@@ -844,6 +914,7 @@ impl Sim {
             }
             debug_assert!(entry.t_ns >= self.now_ns, "time must not go backwards");
             self.now_ns = entry.t_ns;
+            self.stats.events_processed += 1;
             match entry.ev {
                 Ev::CoreSeg { core, epoch } => self.on_core_seg(core, epoch),
                 Ev::PollNotice { core, epoch } => self.on_poll_notice(core, epoch),

@@ -1,0 +1,213 @@
+//! Parallel sweep executor.
+//!
+//! Every paper figure is a grid of *independent* simulation cells
+//! (model × GPUs × RPS × SL × cores …) that the experiment harnesses
+//! used to run strictly one after another. This module represents an
+//! experiment as a flat cell list and fans the cells across the
+//! [`ThreadPool`](crate::util::pool::ThreadPool):
+//!
+//! * **Deterministic ordering** — results come back in input order no
+//!   matter which worker finishes first, so tables/CSV/JSON are
+//!   byte-identical between `--jobs 1` and `--jobs N`.
+//! * **Deterministic seeding** — for sweeps that need randomness,
+//!   [`seeded_cells`] derives a per-cell seed from (base seed, cell
+//!   index) via SplitMix64, never from the execution schedule. (The
+//!   current figure grids draw no randomness — every cell is already a
+//!   pure function of its spec — so none of them consume seeds yet.)
+//! * **Progress** — a single `\r`-rewritten progress line on *stderr*
+//!   (stdout is reserved for the figure tables).
+//!
+//! The `--jobs N` CLI flag selects the fan-out width; the default is
+//! the host's available parallelism, and `--jobs 1` reproduces the old
+//! serial runner exactly (same thread, same order).
+
+use crate::util::cli::Args;
+use crate::util::pool::ThreadPool;
+use crate::util::rng::SplitMix64;
+use std::io::Write;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Resolve the `--jobs N` flag; 0 or absent means "all cores".
+pub fn jobs_from_args(args: &Args) -> usize {
+    match args.usize_or("jobs", 0) {
+        0 => std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1),
+        n => n,
+    }
+}
+
+/// One cell of a sweep with its deterministic seed.
+#[derive(Debug, Clone)]
+pub struct SeededCell<I> {
+    /// Position in the experiment's cell list (== result position).
+    pub index: usize,
+    /// Derived from (base seed, index) only — stable across schedules.
+    pub seed: u64,
+    pub input: I,
+}
+
+/// Attach per-cell seeds to a cell list.
+pub fn seeded_cells<I>(base_seed: u64, inputs: Vec<I>) -> Vec<SeededCell<I>> {
+    inputs
+        .into_iter()
+        .enumerate()
+        .map(|(index, input)| {
+            // Two SplitMix64 steps decorrelate adjacent indices fully.
+            let mut sm = SplitMix64::new(base_seed.wrapping_add(index as u64));
+            sm.next_u64();
+            SeededCell {
+                index,
+                seed: sm.next_u64(),
+                input,
+            }
+        })
+        .collect()
+}
+
+/// A configured sweep: label (for the progress line) + fan-out width.
+pub struct Sweep {
+    label: String,
+    jobs: usize,
+    progress: bool,
+}
+
+impl Sweep {
+    pub fn new(label: &str, jobs: usize) -> Sweep {
+        Sweep {
+            label: label.to_string(),
+            jobs: jobs.max(1),
+            progress: true,
+        }
+    }
+
+    /// Standard construction for experiment harnesses: width from
+    /// `--jobs`, progress suppressed by `--no-progress`.
+    pub fn from_args(label: &str, args: &Args) -> Sweep {
+        Sweep::new(label, jobs_from_args(args)).quiet(args.flag("no-progress"))
+    }
+
+    pub fn quiet(mut self, quiet: bool) -> Sweep {
+        self.progress = !quiet;
+        self
+    }
+
+    pub fn jobs(&self) -> usize {
+        self.jobs
+    }
+
+    /// Run every cell and return results in input order. `run_cell` must
+    /// be a pure function of its cell (all the experiment cells are:
+    /// each builds its own `Sim` from the spec).
+    pub fn run<I, R, F>(&self, cells: Vec<I>, run_cell: F) -> Vec<R>
+    where
+        I: Send + 'static,
+        R: Send + 'static,
+        F: Fn(I) -> R + Send + Sync + 'static,
+    {
+        let total = cells.len();
+        if total == 0 {
+            return Vec::new();
+        }
+        let jobs = self.jobs.min(total);
+        let t0 = Instant::now();
+        let done = Arc::new(AtomicUsize::new(0));
+        let progress = self.progress;
+        let label = self.label.clone();
+        let tick = {
+            let done = Arc::clone(&done);
+            move || {
+                let d = done.fetch_add(1, Ordering::Relaxed) + 1;
+                if progress {
+                    let mut err = std::io::stderr().lock();
+                    let _ = write!(err, "\r{label}: {d}/{total} cells (jobs={jobs})");
+                    if d == total {
+                        let _ = writeln!(err, " — {:.1}s", t0.elapsed().as_secs_f64());
+                    }
+                    let _ = err.flush();
+                }
+            }
+        };
+        if jobs <= 1 {
+            // Serial fast path: same thread, same order as the old
+            // per-experiment loops.
+            cells
+                .into_iter()
+                .map(|cell| {
+                    let r = run_cell(cell);
+                    tick();
+                    r
+                })
+                .collect()
+        } else {
+            // parallel_map Arc-wraps the closure itself; `tick` rides
+            // along inside it (all its captures are Sync).
+            let pool = ThreadPool::new(jobs);
+            pool.parallel_map(cells, move |cell| {
+                let r = run_cell(cell);
+                tick();
+                r
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quiet(label: &str, jobs: usize) -> Sweep {
+        Sweep::new(label, jobs).quiet(true)
+    }
+
+    #[test]
+    fn results_preserve_input_order() {
+        let inputs: Vec<u64> = (0..64).collect();
+        let out = quiet("order", 8).run(inputs, |i| {
+            // stagger so later cells tend to finish first
+            std::thread::sleep(std::time::Duration::from_micros(((64 - i) % 7) * 100));
+            i * 3
+        });
+        assert_eq!(out, (0..64).map(|i| i * 3).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn serial_and_parallel_agree() {
+        let f = |i: u64| i * i + 1;
+        let a = quiet("serial", 1).run((0..100).collect(), f);
+        let b = quiet("parallel", 4).run((0..100).collect(), f);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn empty_sweep() {
+        let out: Vec<u64> = quiet("empty", 4).run(Vec::<u64>::new(), |x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn seeds_depend_on_index_not_schedule() {
+        let a = seeded_cells(42, vec!["a", "b", "c"]);
+        let b = seeded_cells(42, vec!["a", "b", "c"]);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.seed, y.seed);
+            assert_eq!(x.index, y.index);
+        }
+        assert_ne!(a[0].seed, a[1].seed);
+        let c = seeded_cells(43, vec!["a"]);
+        assert_ne!(a[0].seed, c[0].seed);
+    }
+
+    #[test]
+    fn jobs_flag_parses() {
+        let parse = |s: &str| crate::util::cli::Args::parse(s.split_whitespace().map(String::from));
+        assert_eq!(jobs_from_args(&parse("x --jobs 3")), 3);
+        let auto = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        assert_eq!(jobs_from_args(&parse("x")), auto);
+        assert_eq!(jobs_from_args(&parse("x --jobs 0")), auto);
+    }
+}

@@ -4,6 +4,7 @@
 //! uniform reporting. Used by every target in `rust/benches/` (declared
 //! with `harness = false`).
 
+use crate::util::json::Json;
 use crate::util::stats::Percentiles;
 use std::time::{Duration, Instant};
 
@@ -97,6 +98,56 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Machine-readable bench recording: collects [`BenchResult`]s and dumps
+/// them as `BENCH_<suite>.json` so the perf trajectory is tracked across
+/// PRs (compare the `per_sec` fields between runs).
+pub struct BenchSuite {
+    suite: String,
+    entries: Vec<Json>,
+}
+
+impl BenchSuite {
+    pub fn new(suite: &str) -> BenchSuite {
+        BenchSuite {
+            suite: suite.to_string(),
+            entries: Vec::new(),
+        }
+    }
+
+    /// Record a result, optionally with a throughput denominator:
+    /// `units_per_iter = (how many <unit>s one iteration performs, unit
+    /// name)` — e.g. `(800_000.0, "events")`.
+    pub fn record(&mut self, r: &BenchResult, units_per_iter: Option<(f64, &str)>) {
+        let mut j = Json::obj();
+        j.set("name", r.name.as_str())
+            .set("iters", r.iters)
+            .set("mean_ns", r.mean_ns)
+            .set("median_ns", r.median_ns)
+            .set("p95_ns", r.p95_ns)
+            .set("min_ns", r.min_ns);
+        if let Some((units, unit)) = units_per_iter {
+            j.set("unit", unit)
+                .set("units_per_iter", units)
+                .set("per_sec", r.per_sec(units));
+        }
+        self.entries.push(j);
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("suite", self.suite.as_str())
+            .set("results", Json::Arr(self.entries.clone()));
+        j
+    }
+
+    /// Write `BENCH_<suite>.json` into `dir` and return the path.
+    pub fn write(&self, dir: &str) -> std::io::Result<std::path::PathBuf> {
+        let path = std::path::Path::new(dir).join(format!("BENCH_{}.json", self.suite));
+        std::fs::write(&path, self.to_json().to_string_pretty() + "\n")?;
+        Ok(path)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -117,5 +168,25 @@ mod tests {
             black_box(vec![0u8; 1024]);
         });
         assert_eq!(r.iters, 12);
+    }
+
+    #[test]
+    fn suite_writes_parseable_json() {
+        let r = bench_n("tiny", 3, || {
+            black_box(1 + 1);
+        });
+        let mut suite = BenchSuite::new("test_suite");
+        suite.record(&r, Some((100.0, "ops")));
+        suite.record(&r, None);
+        let dir = std::env::temp_dir();
+        let path = suite.write(dir.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = crate::util::json::parse(&text).unwrap();
+        assert_eq!(j.get("suite").unwrap().as_str().unwrap(), "test_suite");
+        let results = j.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 2);
+        assert!(results[0].get("per_sec").unwrap().as_f64().unwrap() > 0.0);
+        assert!(results[1].get("per_sec").is_none());
+        let _ = std::fs::remove_file(path);
     }
 }

@@ -43,6 +43,10 @@ impl ThreadPool {
                 let shared = Arc::clone(&shared);
                 std::thread::Builder::new()
                     .name(format!("pool-{i}"))
+                    // Sweep cells run whole discrete-event sims whose
+                    // dispatch chains can recurse deeply; give workers
+                    // the same headroom as the main thread.
+                    .stack_size(8 * 1024 * 1024)
                     .spawn(move || worker_loop(shared))
                     .expect("spawn pool worker")
             })

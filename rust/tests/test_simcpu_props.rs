@@ -1,0 +1,234 @@
+//! Simulator invariants after the event-loop fast-path refactor
+//! (gate→core poll index, per-gate waiter heaps, idle-core free list):
+//!
+//! * conservation — `busy_core_ns ≤ cores × elapsed`, task CPU ≤ busy;
+//! * golden wait accounting — exact, hand-derived `wait_ns` totals for
+//!   fixed round-robin scenarios (unchanged from the pre-refactor
+//!   scheduler semantics);
+//! * wake-order parity — blocked waiters wake in block order (the old
+//!   scan's FIFO), not heap-pop order;
+//! * bitwise determinism of a seeded random workload.
+
+use cpuslow::simcpu::script::Script;
+use cpuslow::simcpu::{Sim, SimParams, TaskId};
+use cpuslow::util::rng::Rng;
+use std::cell::RefCell;
+use std::rc::Rc;
+
+fn params(cores: usize, context_switch_ns: u64) -> SimParams {
+    SimParams {
+        cores,
+        context_switch_ns,
+        timeslice_ns: 1_000_000,
+        poll_quantum_ns: 1_000,
+        trace_bucket_ns: None,
+    }
+}
+
+/// A seeded mixed workload: compute/sleep chains, gate blockers, and
+/// busy-pollers, with enough signals that every waiter is released.
+fn random_workload(seed: u64, cores: usize) -> (Sim, Vec<TaskId>) {
+    let mut rng = Rng::new(seed);
+    let mut sim = Sim::new(params(cores, 2_000));
+    let gate = sim.new_gate();
+    let mut ids = Vec::new();
+    for i in 0..24 {
+        let compute = 500_000 + rng.below(8_000_000);
+        let sleep = 1 + rng.below(3_000_000);
+        let target = 1 + rng.below(50);
+        let script = match i % 3 {
+            0 => Script::new()
+                .compute(compute)
+                .sleep(sleep)
+                .compute(compute / 2),
+            1 => Script::new()
+                .compute(compute / 4)
+                .block(gate, target)
+                .compute(compute),
+            _ => Script::new().busy_poll(gate, target).compute(compute / 3),
+        };
+        ids.push(sim.spawn("mix", script));
+    }
+    // 60 signals cover the max target of 50
+    for t in 0..60u64 {
+        sim.call_at(t * 500_000, move |sim| sim.signal(gate, 1));
+    }
+    (sim, ids)
+}
+
+#[test]
+fn busy_time_bounded_by_capacity() {
+    for seed in [1u64, 7, 42] {
+        for cores in [1usize, 3, 8] {
+            let (mut sim, ids) = random_workload(seed, cores);
+            sim.run();
+            sim.flush_traces();
+            let elapsed = sim.now_ns();
+            let busy = sim.stats().busy_core_ns;
+            assert!(
+                busy <= cores as u64 * elapsed,
+                "seed {seed}, {cores} cores: busy {busy} > {cores} × {elapsed}"
+            );
+            let task_cpu: u64 = ids.iter().map(|&id| sim.task_stats(id).cpu_ns).sum();
+            assert!(
+                task_cpu <= busy,
+                "task cpu {task_cpu} exceeds busy core time {busy}"
+            );
+            for &id in &ids {
+                let st = sim.task_stats(id);
+                assert!(st.finished, "task {id} did not finish (seed {seed})");
+                assert!(st.poll_cpu_ns <= st.cpu_ns);
+            }
+        }
+    }
+}
+
+#[test]
+fn fixed_seed_reproduces_bitwise() {
+    let run = |seed: u64| {
+        let (mut sim, ids) = random_workload(seed, 4);
+        sim.run();
+        let per_task: Vec<(u64, u64, u64, u64)> = ids
+            .iter()
+            .map(|&id| {
+                let s = sim.task_stats(id);
+                (s.cpu_ns, s.poll_cpu_ns, s.wait_ns, s.switches)
+            })
+            .collect();
+        (
+            sim.now_ns(),
+            sim.stats().context_switches,
+            sim.stats().events_processed,
+            per_task,
+        )
+    };
+    assert_eq!(run(9), run(9));
+    assert_eq!(run(1234), run(1234));
+}
+
+/// Two 10 ms tasks round-robining on one core (1 ms slices, free
+/// switches): T0 waits during 9 of T1's slices, T1 during 10 of T0's.
+/// These exact totals are the pre-refactor scheduler's values.
+#[test]
+fn golden_wait_two_tasks_one_core() {
+    let mut sim = Sim::new(params(1, 0));
+    let a = sim.spawn("t", Script::new().compute(10_000_000));
+    let b = sim.spawn("t", Script::new().compute(10_000_000));
+    let end = sim.run();
+    assert_eq!(end, 20_000_000, "makespan");
+    let sa = sim.task_stats(a);
+    let sb = sim.task_stats(b);
+    assert_eq!(sa.cpu_ns, 10_000_000);
+    assert_eq!(sb.cpu_ns, 10_000_000);
+    assert_eq!(sa.wait_ns, 9_000_000, "first task waits 9 slices");
+    assert_eq!(sb.wait_ns, 10_000_000, "second task waits 10 slices");
+    assert_eq!(sa.wait_ns + sb.wait_ns, 19_000_000);
+}
+
+/// Eight 10 ms tasks on two cores: fully busy for 40 ms; the waiting
+/// integral is 6 waiters × 36 ms + (6 + 4 + 2) ms over the final
+/// staggered round = 228 ms total.
+#[test]
+fn golden_wait_eight_tasks_two_cores() {
+    let mut sim = Sim::new(params(2, 0));
+    let ids: Vec<TaskId> = (0..8)
+        .map(|_| sim.spawn("t", Script::new().compute(10_000_000)))
+        .collect();
+    let end = sim.run();
+    assert_eq!(end, 40_000_000, "makespan");
+    sim.flush_traces();
+    assert_eq!(sim.stats().busy_core_ns, 80_000_000, "cores never idle");
+    let total_wait: u64 = ids.iter().map(|&id| sim.task_stats(id).wait_ns).sum();
+    assert_eq!(total_wait, 228_000_000);
+}
+
+#[test]
+fn equal_target_blockers_wake_in_block_order() {
+    let mut sim = Sim::new(params(1, 0));
+    let gate = sim.new_gate();
+    let order: Rc<RefCell<Vec<usize>>> = Rc::new(RefCell::new(Vec::new()));
+    for i in 0..3 {
+        let order = Rc::clone(&order);
+        sim.spawn(
+            "w",
+            Script::new()
+                .block(gate, 1)
+                .compute(1_000_000)
+                .effect(move |_| order.borrow_mut().push(i)),
+        );
+    }
+    sim.call_at(1_000_000, move |sim| sim.signal(gate, 1));
+    sim.run();
+    assert_eq!(*order.borrow(), vec![0, 1, 2], "FIFO wake among equal targets");
+}
+
+#[test]
+fn mixed_target_blockers_released_by_one_signal_wake_in_block_order() {
+    // Targets 3, 1, 2 — one big signal satisfies all three at once; the
+    // pre-refactor scan woke them in block order, so must the heap.
+    let mut sim = Sim::new(params(1, 0));
+    let gate = sim.new_gate();
+    let order: Rc<RefCell<Vec<usize>>> = Rc::new(RefCell::new(Vec::new()));
+    for (i, target) in [3u64, 1, 2].into_iter().enumerate() {
+        let order = Rc::clone(&order);
+        sim.spawn(
+            "w",
+            Script::new()
+                .block(gate, target)
+                .compute(1_000_000)
+                .effect(move |_| order.borrow_mut().push(i)),
+        );
+    }
+    sim.call_at(2_000_000, move |sim| sim.signal(gate, 3));
+    sim.run();
+    assert_eq!(*order.borrow(), vec![0, 1, 2]);
+}
+
+#[test]
+fn staged_signals_release_by_target() {
+    // Targets 3, 1, 2 with +1 signals at 1/2/3 ms: wake times must
+    // follow targets, exercising the partial-pop path of the heap.
+    let mut sim = Sim::new(params(3, 0));
+    let gate = sim.new_gate();
+    let woke: Rc<RefCell<Vec<(usize, u64)>>> = Rc::new(RefCell::new(Vec::new()));
+    for (i, target) in [3u64, 1, 2].into_iter().enumerate() {
+        let woke = Rc::clone(&woke);
+        sim.spawn(
+            "w",
+            Script::new()
+                .block(gate, target)
+                .effect(move |ctx| woke.borrow_mut().push((i, ctx.now_ns()))),
+        );
+    }
+    for t in 1..=3u64 {
+        sim.call_at(t * 1_000_000, move |sim| sim.signal(gate, 1));
+    }
+    sim.run();
+    let woke = woke.borrow();
+    assert_eq!(*woke, vec![(1, 1_000_000), (2, 2_000_000), (0, 3_000_000)]);
+}
+
+#[test]
+fn event_counter_counts_and_poll_index_survives_churn() {
+    // A poller that re-polls across preemption (slice renewals and
+    // vacates) while hogs churn the core: the gate→core registration
+    // must stay correct through stale entries.
+    let mut sim = Sim::new(params(1, 0));
+    let gate = sim.new_gate();
+    let noticed: Rc<RefCell<Option<u64>>> = Rc::new(RefCell::new(None));
+    {
+        let noticed = Rc::clone(&noticed);
+        sim.spawn(
+            "poller",
+            Script::new()
+                .busy_poll(gate, 1)
+                .effect(move |ctx| *noticed.borrow_mut() = Some(ctx.now_ns())),
+        );
+    }
+    sim.spawn("hog", Script::new().compute(10_000_000));
+    sim.call_at(4_000_000, move |sim| sim.signal(gate, 1));
+    sim.run();
+    let t = noticed.borrow().expect("poller completed");
+    assert!(t >= 4_000_000, "cannot notice before the signal: {t}");
+    assert!(sim.stats().events_processed > 0);
+}

@@ -1,0 +1,63 @@
+//! Sweep determinism: running a ported experiment with `--jobs 4` must
+//! produce byte-identical tables/JSON to `--jobs 1` (acceptance
+//! criterion for the parallel sweep executor).
+
+use cpuslow::config::{ModelSpec, SystemSpec};
+use cpuslow::experiments::fig7;
+use cpuslow::sweep::{seeded_cells, Sweep};
+use cpuslow::workload::AvSpec;
+
+fn tiny_spec() -> AvSpec {
+    // Small enough to run in test time, loaded enough that the scarce
+    // cell actually contends (8 rps × 28k tokens × 15 µs ≈ 3.4 core-s/s).
+    AvSpec {
+        attacker_sl: 28_000,
+        victim_sl: 2_800,
+        rps: 8.0,
+        attack_secs: 6.0,
+        victim_start_secs: 2.0,
+        n_victims: 1,
+        max_new_tokens: 4,
+        timeout_secs: 30.0,
+    }
+}
+
+fn fig7_output(jobs: usize) -> String {
+    let sys = SystemSpec::blackwell();
+    let model = ModelSpec::llama31_8b();
+    let cells = fig7::grid_cells(&sys, &model, 4, 8.0, &[5, 16], &[28_000], &tiny_spec());
+    let results = Sweep::new("test", jobs).quiet(true).run(cells, fig7::run_cell);
+    let table = fig7::render_cells("determinism check", &results).render();
+    let json = fig7::cells_to_json(&results).to_string_pretty();
+    table + &json
+}
+
+#[test]
+fn fig7_grid_byte_identical_serial_vs_parallel() {
+    let serial = fig7_output(1);
+    let parallel = fig7_output(4);
+    assert!(!serial.is_empty());
+    assert_eq!(serial, parallel);
+}
+
+#[test]
+fn repeated_parallel_runs_are_stable() {
+    // Not just serial == parallel: parallel must equal parallel, i.e.
+    // nothing in a cell depends on scheduling order.
+    assert_eq!(fig7_output(3), fig7_output(3));
+}
+
+#[test]
+fn seeded_cells_are_schedule_independent() {
+    let a = seeded_cells(7, (0..32).collect::<Vec<u64>>());
+    let seeds: Vec<u64> = a.iter().map(|c| c.seed).collect();
+    // run the seeds through a parallel sweep; outputs must line up with
+    // the per-index seeds regardless of which worker ran which cell
+    let out = Sweep::new("seeds", 4)
+        .quiet(true)
+        .run(a, |cell| (cell.index, cell.seed));
+    for (i, (index, seed)) in out.into_iter().enumerate() {
+        assert_eq!(index, i);
+        assert_eq!(seed, seeds[i]);
+    }
+}

@@ -1,0 +1,58 @@
+//! Minimal offline stand-in for the `crossbeam-utils` crate: just
+//! [`CachePadded`], which the shm broadcast ring uses to keep the
+//! writer's and each reader's sequence counters on separate cache lines
+//! (avoiding false sharing between the spinning sides).
+
+use std::ops::{Deref, DerefMut};
+
+/// Pads and aligns `T` to 128 bytes (two 64-byte lines — adjacent-line
+/// prefetchers pull pairs, so 128 is the conservative choice, matching
+/// what crossbeam does on x86_64).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+#[repr(align(128))]
+pub struct CachePadded<T> {
+    value: T,
+}
+
+impl<T> CachePadded<T> {
+    pub const fn new(value: T) -> CachePadded<T> {
+        CachePadded { value }
+    }
+
+    pub fn into_inner(self) -> T {
+        self.value
+    }
+}
+
+impl<T> Deref for CachePadded<T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.value
+    }
+}
+
+impl<T> DerefMut for CachePadded<T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.value
+    }
+}
+
+impl<T> From<T> for CachePadded<T> {
+    fn from(value: T) -> CachePadded<T> {
+        CachePadded::new(value)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alignment_and_deref() {
+        let x = CachePadded::new(7u64);
+        assert_eq!(*x, 7);
+        assert_eq!(std::mem::align_of::<CachePadded<u64>>(), 128);
+        let boxed = Box::new(CachePadded::new(1u8));
+        assert_eq!((&*boxed as *const _ as usize) % 128, 0);
+    }
+}

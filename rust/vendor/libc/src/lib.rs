@@ -1,0 +1,74 @@
+//! Minimal offline stand-in for the `libc` crate: exactly the Linux
+//! CPU-affinity surface `realserve::affinity` uses. Raw `extern "C"`
+//! declarations against the platform libc; the `cpu_set_t` layout is the
+//! kernel's fixed 1024-bit mask.
+
+#![allow(non_camel_case_types)]
+// The CPU_* mask helpers deliberately keep the real libc crate's
+// (C-macro-derived) uppercase names.
+#![allow(non_snake_case)]
+
+pub type c_int = i32;
+pub type c_long = i64;
+pub type pid_t = i32;
+pub type size_t = usize;
+
+/// glibc `sysconf` name for the number of online processors.
+pub const _SC_NPROCESSORS_ONLN: c_int = 84;
+
+const CPU_SETSIZE_WORDS: usize = 1024 / 64;
+
+/// The kernel's 1024-bit CPU mask (16 × u64 = 128 bytes, matching
+/// glibc's `cpu_set_t`).
+#[repr(C)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct cpu_set_t {
+    bits: [u64; CPU_SETSIZE_WORDS],
+}
+
+pub fn CPU_ZERO(set: &mut cpu_set_t) {
+    set.bits = [0; CPU_SETSIZE_WORDS];
+}
+
+pub fn CPU_SET(cpu: usize, set: &mut cpu_set_t) {
+    if cpu < CPU_SETSIZE_WORDS * 64 {
+        set.bits[cpu / 64] |= 1u64 << (cpu % 64);
+    }
+}
+
+pub fn CPU_ISSET(cpu: usize, set: &cpu_set_t) -> bool {
+    cpu < CPU_SETSIZE_WORDS * 64 && set.bits[cpu / 64] & (1u64 << (cpu % 64)) != 0
+}
+
+pub fn CPU_COUNT(set: &cpu_set_t) -> c_int {
+    set.bits.iter().map(|w| w.count_ones()).sum::<u32>() as c_int
+}
+
+extern "C" {
+    pub fn sched_setaffinity(pid: pid_t, cpusetsize: size_t, mask: *const cpu_set_t) -> c_int;
+    pub fn sched_getaffinity(pid: pid_t, cpusetsize: size_t, mask: *mut cpu_set_t) -> c_int;
+    pub fn sysconf(name: c_int) -> c_long;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mask_ops() {
+        let mut set: cpu_set_t = unsafe { std::mem::zeroed() };
+        CPU_ZERO(&mut set);
+        assert_eq!(CPU_COUNT(&set), 0);
+        CPU_SET(0, &mut set);
+        CPU_SET(65, &mut set);
+        assert!(CPU_ISSET(0, &set) && CPU_ISSET(65, &set) && !CPU_ISSET(1, &set));
+        assert_eq!(CPU_COUNT(&set), 2);
+        assert_eq!(std::mem::size_of::<cpu_set_t>(), 128);
+    }
+
+    #[test]
+    fn sysconf_reports_processors() {
+        let n = unsafe { sysconf(_SC_NPROCESSORS_ONLN) };
+        assert!(n >= 1);
+    }
+}
