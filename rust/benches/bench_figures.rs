@@ -2,16 +2,21 @@
 //! table/figure, timing the full harness path (workload → engine →
 //! metrics). These are the `cargo bench` entries promised in DESIGN.md;
 //! the full-resolution sweeps run via `cpuslow experiment <id>`.
+//!
+//! Writes `BENCH_figures.json` (cells/sec per scenario) so the harness
+//! path's perf trajectory is tracked across PRs alongside the event-loop
+//! and tokenizer suites.
 
 use cpuslow::cluster::{analyze, generate_instructional};
 use cpuslow::config::{ModelSpec, RunConfig, SystemSpec};
 use cpuslow::experiments::fig12::run_microbench;
 use cpuslow::experiments::fig13::run_dequeue_bench;
-use cpuslow::util::bench::{bench_n, black_box};
+use cpuslow::util::bench::{bench_n, black_box, BenchSuite};
 use cpuslow::workload::{run_attacker_victim, run_batch, AvSpec};
 
 fn main() {
     println!("== figure-cell benches (scaled-down) ==");
+    let mut suite = BenchSuite::new("figures");
 
     // Fig 3/4 cell: 100k records generate + analyze
     let r = bench_n("fig3 cell: 100k salloc records", 5, || {
@@ -19,6 +24,7 @@ fn main() {
         black_box(analyze(&records));
     });
     r.report();
+    suite.record(&r, Some((100_000.0, "records")));
 
     // Fig 5 cell: one batch×SL point
     let r = bench_n("fig5 cell: batch 8 × 16k tokens", 3, || {
@@ -26,6 +32,7 @@ fn main() {
         black_box(run_batch(cfg, 8, 16_000, 1, 600.0));
     });
     r.report();
+    suite.record(&r, Some((1.0, "cells")));
 
     // Fig 7 cell: one attacker/victim point (short attack)
     let spec = AvSpec {
@@ -43,12 +50,14 @@ fn main() {
         black_box(run_attacker_victim(cfg, &spec));
     });
     r.report();
+    suite.record(&r, Some((1.0, "cells")));
 
     // Fig 12 cell: collective microbench
     let r = bench_n("fig12 cell: 4 ranks × 100 iters", 5, || {
         black_box(run_microbench(&SystemSpec::h100(), 4, 2, 100, 1.0, 0.3));
     });
     r.report();
+    suite.record(&r, Some((1.0, "cells")));
 
     // Fig 13 cell: dequeue contention point
     let r = bench_n("fig13 cell: TP=4 dequeue, 20s virtual", 3, || {
@@ -64,4 +73,10 @@ fn main() {
         ));
     });
     r.report();
+    suite.record(&r, Some((1.0, "cells")));
+
+    match suite.write(".") {
+        Ok(path) => println!("bench data → {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_figures.json: {e}"),
+    }
 }

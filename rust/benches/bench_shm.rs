@@ -1,66 +1,102 @@
 //! Real shm-broadcast ring benches (Figure 13's data structure, actual
 //! atomics on this host): uncontended latency and 1-writer-N-reader
 //! throughput as TP degree grows.
+//!
+//! Writes `BENCH_shm.json` (roundtrips/sec and writer msgs/sec per TP
+//! degree) so the IPC hot path is tracked across PRs.
 
 use cpuslow::ipc::ShmBroadcast;
-use cpuslow::util::bench::{bench, black_box};
+use cpuslow::util::bench::{bench, black_box, BenchResult, BenchSuite};
+use cpuslow::util::stats::Percentiles;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
+
+/// One full broadcast: spawn `readers` consumer threads, push `n`
+/// messages through the ring, wait until every reader has consumed all
+/// of them, then join. Returns the elapsed ns of the data phase only
+/// (enqueue → all consumed) — thread spawn/join stays outside the
+/// measurement, matching the pre-BenchSuite semantics.
+fn broadcast_round(readers: usize, n: u64) -> f64 {
+    let q: Arc<ShmBroadcast<u64>> = ShmBroadcast::new(256, readers);
+    let stop = Arc::new(AtomicBool::new(false));
+    let handles: Vec<_> = (0..readers)
+        .map(|r| {
+            let q = Arc::clone(&q);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut consumed = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    if q.try_dequeue(r).is_some() {
+                        consumed += 1;
+                    } else {
+                        std::hint::spin_loop();
+                    }
+                }
+                // drain
+                while q.try_dequeue(r).is_some() {
+                    consumed += 1;
+                }
+                consumed
+            })
+        })
+        .collect();
+    let t0 = Instant::now();
+    for i in 0..n {
+        q.enqueue_spinning(i);
+    }
+    // wait for all readers to consume everything
+    while q.min_read_seq() < n {
+        std::hint::spin_loop();
+    }
+    let dt_ns = t0.elapsed().as_nanos() as f64;
+    stop.store(true, Ordering::Relaxed);
+    let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(total, n * readers as u64);
+    dt_ns
+}
 
 fn main() {
     println!("== shm broadcast (real atomics) ==");
+    let mut suite = BenchSuite::new("shm");
 
     // single-threaded enqueue+dequeue round trip
     let q: Arc<ShmBroadcast<u64>> = ShmBroadcast::new(64, 1);
-    let r = bench("enqueue+dequeue roundtrip (1 reader)", Duration::from_secs(1), || {
-        q.try_enqueue(42);
-        black_box(q.try_dequeue(0));
-    });
+    let r = bench(
+        "enqueue+dequeue roundtrip (1 reader)",
+        Duration::from_secs(1),
+        || {
+            q.try_enqueue(42);
+            black_box(q.try_dequeue(0));
+        },
+    );
     r.report();
+    suite.record(&r, Some((1.0, "roundtrips")));
 
-    // cross-thread broadcast throughput per TP degree
+    // cross-thread broadcast throughput per TP degree; each round is
+    // timed internally (data phase only), so spawn/join noise never
+    // pollutes the recorded per_sec
+    const N: u64 = 300_000;
     for readers in [1usize, 2, 4, 8] {
-        let q: Arc<ShmBroadcast<u64>> = ShmBroadcast::new(256, readers);
-        let stop = Arc::new(AtomicBool::new(false));
-        let handles: Vec<_> = (0..readers)
-            .map(|r| {
-                let q = Arc::clone(&q);
-                let stop = Arc::clone(&stop);
-                std::thread::spawn(move || {
-                    let mut consumed = 0u64;
-                    while !stop.load(Ordering::Relaxed) {
-                        if q.try_dequeue(r).is_some() {
-                            consumed += 1;
-                        } else {
-                            std::hint::spin_loop();
-                        }
-                    }
-                    // drain
-                    while q.try_dequeue(r).is_some() {
-                        consumed += 1;
-                    }
-                    consumed
-                })
-            })
-            .collect();
-        const N: u64 = 300_000;
-        let t0 = std::time::Instant::now();
-        for i in 0..N {
-            q.enqueue_spinning(i);
+        let mut samples = Percentiles::new();
+        for _ in 0..3 {
+            samples.add(broadcast_round(readers, N));
         }
-        // wait for all readers to consume everything
-        while q.min_read_seq() < N {
-            std::hint::spin_loop();
-        }
-        let dt = t0.elapsed().as_secs_f64();
-        stop.store(true, Ordering::Relaxed);
-        let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
-        assert_eq!(total, N * readers as u64);
-        println!(
-            "broadcast 300k msgs to {readers} readers: {:>8.2} ms  ({:.2} M msg/s writer)",
-            dt * 1e3,
-            N as f64 / dt / 1e6
-        );
+        let r = BenchResult {
+            name: format!("broadcast 300k msgs to {readers} readers"),
+            iters: samples.len() as u64,
+            mean_ns: samples.mean(),
+            median_ns: samples.median(),
+            p95_ns: samples.pct(95.0),
+            min_ns: samples.pct(0.0),
+        };
+        r.report();
+        println!("    → {:.2} M msg/s writer", r.per_sec(N as f64) / 1e6);
+        suite.record(&r, Some((N as f64, "msgs")));
+    }
+
+    match suite.write(".") {
+        Ok(path) => println!("bench data → {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_shm.json: {e}"),
     }
 }

@@ -91,6 +91,23 @@ fn main() {
         sim
     });
 
+    // Timer storm across wheel levels: 2k sleepers with wake times
+    // spread over 10 s of virtual time (the hierarchical timing wheel's
+    // cascade path), re-sleeping five times each.
+    scenario(&mut suite, "2k sleepers × 5 naps over 10s", 5, || {
+        let mut sim = Sim::new(params(8));
+        for i in 0..2_000u64 {
+            let mut s = Script::new();
+            for nap in 0..5u64 {
+                s = s
+                    .sleep(1_000 + (i * 4_999 + nap * 911_373) % 2_000_000_000)
+                    .compute(10_000);
+            }
+            sim.spawn("sleeper", s);
+        }
+        sim
+    });
+
     // Many-core poll fan-out: the scenario the gate→core index targets —
     // 32 cores of pollers being signalled at a high rate.
     scenario(&mut suite, "32 pollers on 32 cores, 20k signals", 5, || {

@@ -1,13 +1,17 @@
 //! Tokenizer benches — the L3 hot path behind Figure 5's CPU cost and
 //! the calibration source for `tokenize_s_per_token`.
+//!
+//! Writes `BENCH_tokenizer.json` (tokens/sec and merges/sec per
+//! scenario) so the encode/train hot paths are tracked across PRs.
 
 use cpuslow::tokenizer::{corpus::Lexicon, encode_uncached, train, BatchTokenizer, Encoder};
-use cpuslow::util::bench::{bench, black_box};
+use cpuslow::util::bench::{bench, black_box, BenchSuite};
 use cpuslow::util::rng::Rng;
 use std::time::Duration;
 
 fn main() {
     println!("== tokenizer benches ==");
+    let mut suite = BenchSuite::new("tokenizer");
     let lex = Lexicon::generate(0xB, 1_000);
     let mut rng = Rng::new(0xC);
     let train_corpus = lex.sample_corpus(&mut rng, 32, 4_096);
@@ -26,6 +30,7 @@ fn main() {
         r.per_sec(n_tok_4k) / 1e6,
         r.mean_ns / n_tok_4k
     );
+    suite.record(&r, Some((n_tok_4k, "tokens")));
 
     let n_tok_64k = encode_uncached(&vocab, &text_64k).len() as f64;
     let r = bench("encode_uncached 64 KB", Duration::from_secs(2), || {
@@ -36,6 +41,7 @@ fn main() {
         "    → {:.2} M tokens/s single-core",
         r.per_sec(n_tok_64k) / 1e6
     );
+    suite.record(&r, Some((n_tok_64k, "tokens")));
 
     // cached encoder (word cache warm)
     let mut enc = Encoder::new(&vocab);
@@ -44,6 +50,7 @@ fn main() {
         black_box(enc.encode(&text_4k));
     });
     r.report();
+    suite.record(&r, Some((n_tok_4k, "tokens")));
 
     // parallel batch (pool of 4)
     let tok = BatchTokenizer::new(vocab.clone(), 4);
@@ -60,6 +67,7 @@ fn main() {
         "    → {:.2} M tokens/s across pool",
         r.per_sec(total_tokens) / 1e6
     );
+    suite.record(&r, Some((total_tokens, "tokens")));
 
     // decode
     let ids = encode_uncached(&vocab, &text_4k);
@@ -68,10 +76,17 @@ fn main() {
         black_box(enc2.decode(&ids));
     });
     r.report();
+    suite.record(&r, Some((n_tok_4k, "tokens")));
 
     // training
     let r = bench("train 500 merges (128 KB corpus)", Duration::from_secs(3), || {
         black_box(train(&train_corpus, 500));
     });
     r.report();
+    suite.record(&r, Some((500.0, "merges")));
+
+    match suite.write(".") {
+        Ok(path) => println!("bench data → {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_tokenizer.json: {e}"),
+    }
 }

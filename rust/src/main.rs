@@ -15,6 +15,7 @@ fn main() {
             ("experiment <id>", "regenerate a paper figure (fig3 fig4 fig5 fig7 fig8 fig9 fig10 fig11 fig12 fig13 cost ablations headline)"),
             ("serve", "run the simulated serving stack once and report outcomes"),
             ("calibrate", "measure real Rust-BPE tokenizer throughput on this host"),
+            ("bench-check <current.json>", "compare a BENCH_*.json against a committed baseline; exits 1 on regression"),
             ("list", "list available experiments"),
         ],
         options: vec![
@@ -27,6 +28,8 @@ fn main() {
             ("--cores LIST", "CPU core counts, e.g. 5,8,16,32"),
             ("--jobs N", "sweep cells run on N threads (default: all cores; 1 = serial)"),
             ("--no-progress", "suppress the stderr sweep progress line"),
+            ("--baseline PATH", "bench-check: baseline JSON (default: <current>.baseline.json)"),
+            ("--max-regression F", "bench-check: allowed per_sec drop as a fraction (default 0.20)"),
         ],
     };
     match args.subcommand() {
@@ -38,6 +41,62 @@ fn main() {
         Some("list") => cpuslow::experiments::list(),
         Some("serve") => cpuslow::experiments::serve_once(&args),
         Some("calibrate") => cpuslow::experiments::calibrate_cmd(&args),
+        Some("bench-check") => bench_check(&args),
         _ => print!("{}", usage.render()),
+    }
+}
+
+/// CI regression gate: compare a fresh `BENCH_*.json` against the
+/// committed baseline and fail (exit 1) on a >`--max-regression` drop
+/// in any scenario's `per_sec`.
+fn bench_check(args: &Args) {
+    let Some(current_path) = args.rest().first().cloned() else {
+        eprintln!("bench-check: need a current BENCH_*.json path");
+        std::process::exit(2);
+    };
+    let default_baseline = format!(
+        "{}.baseline.json",
+        current_path.trim_end_matches(".json")
+    );
+    let baseline_path = args.str_or("baseline", &default_baseline).to_string();
+    let max_regression = args.f64_or("max-regression", 0.20);
+    let load = |path: &str| -> cpuslow::util::json::Json {
+        match std::fs::read_to_string(path) {
+            Ok(text) => match cpuslow::util::json::parse(&text) {
+                Ok(j) => j,
+                Err(e) => {
+                    eprintln!("bench-check: {path}: parse error: {e}");
+                    std::process::exit(2);
+                }
+            },
+            Err(e) => {
+                eprintln!("bench-check: {path}: {e}");
+                std::process::exit(2);
+            }
+        }
+    };
+    let current = load(&current_path);
+    let baseline = load(&baseline_path);
+    let check = cpuslow::util::bench::compare_to_baseline(&current, &baseline, max_regression);
+    println!("bench-check: {current_path} vs {baseline_path} (max regression {max_regression:.0}%)",
+        max_regression = max_regression * 100.0);
+    for line in &check.lines {
+        println!("  {line}");
+    }
+    if check.passed() {
+        println!("bench-check: OK");
+    } else {
+        eprintln!(
+            "bench-check: FAIL — {} scenario(s) regressed more than {:.0}%:",
+            check.regressions.len(),
+            max_regression * 100.0
+        );
+        for r in &check.regressions {
+            eprintln!("  {r}");
+        }
+        eprintln!(
+            "(if intentional, refresh the baseline: cp {current_path} {baseline_path})"
+        );
+        std::process::exit(1);
     }
 }

@@ -1,0 +1,517 @@
+//! Timed-event queues for the simulator.
+//!
+//! The default is a **hierarchical timing wheel** (Varghese & Lauck):
+//! 11 levels × 64 slots cover the full `u64` nanosecond timeline, every
+//! insert/expire is O(1) amortized, and nodes live in a slab with an
+//! intrusive free list — the steady state allocates nothing, unlike the
+//! `BinaryHeap<Reverse<HeapEntry>>` it replaced (per-push `Vec` growth,
+//! O(log n) sift on the hot path).
+//!
+//! Determinism contract (locked in by `tests/test_event_core.rs`): events
+//! pop in ascending `(t_ns, insertion order)` — bit-identical to the old
+//! heap's `(t_ns, seq)` order. The wheel gets this for free: slot index
+//! is a pure function of the deadline, so same-deadline events always
+//! share one slot's FIFO list, and cascades preserve list order. The
+//! pre-wheel heap is retained here as [`ReferenceHeap`] so differential
+//! tests can replay a workload on both queues and assert equivalence.
+//!
+//! Level mapping follows the Linux/tokio hashed-wheel idiom: an event at
+//! deadline `d` with wheel cursor `c` lives at level
+//! `highbit(d ^ c) / 6`, slot `(d >> 6·level) & 63`. The XOR (rather
+//! than the distance `d - c`) guarantees entries never wrap within a
+//! level, occupied slots are always at-or-after the cursor's slot, and
+//! the lowest occupied level always holds the globally earliest
+//! expiration — so "find next event" is a couple of bitmap scans.
+//!
+//! The cursor never advances past the `limit_ns` given to
+//! [`pop_next`](EventQueue::pop_next), so a caller that stops at a
+//! virtual-time limit can still insert events earlier than the queue's
+//! pending horizon afterwards.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+const NIL: u32 = u32::MAX;
+const LEVEL_BITS: usize = 6;
+const SLOTS: usize = 1 << LEVEL_BITS; // 64
+/// 11 levels × 6 bits = 66 bits ≥ the full u64 range (the top level only
+/// ever uses bits 60–63, i.e. slots 0–15).
+const LEVELS: usize = 11;
+
+/// Outcome of asking a queue for its next event under a time limit.
+pub enum Next<T> {
+    /// No events pending at all.
+    Empty,
+    /// Events are pending, but the earliest lies beyond the limit.
+    Beyond,
+    /// The earliest event, removed from the queue.
+    Ready(u64, T),
+}
+
+struct Node<T> {
+    t_ns: u64,
+    next: u32,
+    /// `Some` while linked; taken on expiry so the slab slot can be
+    /// recycled without requiring `T: Default`.
+    payload: Option<T>,
+}
+
+#[derive(Clone, Copy)]
+struct Slot {
+    head: u32,
+    tail: u32,
+}
+
+const EMPTY_SLOT: Slot = Slot {
+    head: NIL,
+    tail: NIL,
+};
+
+pub struct TimingWheel<T> {
+    /// Last expiration point; every live deadline is ≥ cursor, and every
+    /// occupied slot's base is ≥ the cursor's slot at its level.
+    cursor: u64,
+    len: usize,
+    /// Per-level occupancy bitmaps (bit s ⇔ slot s non-empty).
+    occ: [u64; LEVELS],
+    /// `LEVELS × SLOTS` FIFO lists, flattened.
+    slots: Vec<Slot>,
+    /// Slab of event nodes; `free` chains recycled entries via `next`.
+    nodes: Vec<Node<T>>,
+    free: u32,
+}
+
+impl<T> Default for TimingWheel<T> {
+    fn default() -> Self {
+        TimingWheel::new()
+    }
+}
+
+impl<T> TimingWheel<T> {
+    pub fn new() -> TimingWheel<T> {
+        TimingWheel {
+            cursor: 0,
+            len: 0,
+            occ: [0; LEVELS],
+            slots: vec![EMPTY_SLOT; LEVELS * SLOTS],
+            nodes: Vec::new(),
+            free: NIL,
+        }
+    }
+
+    #[cfg(test)]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn insert(&mut self, t_ns: u64, payload: T) {
+        debug_assert!(
+            t_ns >= self.cursor,
+            "event at {t_ns} scheduled behind the wheel cursor {}",
+            self.cursor
+        );
+        // Defensive for release builds: a deadline behind the cursor
+        // (only possible if a caller rewinds `run_until` limits, which
+        // the Sim contract forbids) fires as soon as possible instead of
+        // landing in a never-scanned slot.
+        let t_ns = t_ns.max(self.cursor);
+        let idx = match self.free {
+            NIL => {
+                self.nodes.push(Node {
+                    t_ns,
+                    next: NIL,
+                    payload: Some(payload),
+                });
+                (self.nodes.len() - 1) as u32
+            }
+            idx => {
+                self.free = self.nodes[idx as usize].next;
+                self.nodes[idx as usize] = Node {
+                    t_ns,
+                    next: NIL,
+                    payload: Some(payload),
+                };
+                idx
+            }
+        };
+        self.link(idx, t_ns);
+        self.len += 1;
+    }
+
+    /// (level, slot) for a deadline, relative to the current cursor.
+    fn level_slot(&self, t_ns: u64) -> (usize, usize) {
+        let masked = t_ns ^ self.cursor;
+        let level = if masked == 0 {
+            0
+        } else {
+            (63 - masked.leading_zeros() as usize) / LEVEL_BITS
+        };
+        let slot = ((t_ns >> (level * LEVEL_BITS)) & (SLOTS as u64 - 1)) as usize;
+        (level, slot)
+    }
+
+    /// Append a node to its slot's FIFO list (preserves seq order for
+    /// equal deadlines, both on insert and on cascade).
+    fn link(&mut self, idx: u32, t_ns: u64) {
+        let (level, slot) = self.level_slot(t_ns);
+        let si = level * SLOTS + slot;
+        let tail = self.slots[si].tail;
+        if tail == NIL {
+            self.slots[si] = Slot {
+                head: idx,
+                tail: idx,
+            };
+        } else {
+            self.nodes[tail as usize].next = idx;
+            self.slots[si].tail = idx;
+        }
+        self.occ[level] |= 1 << slot;
+    }
+
+    /// Pop the earliest event if its deadline is ≤ `limit_ns`, cascading
+    /// coarser levels down as virtual time advances.
+    pub fn pop_next(&mut self, limit_ns: u64) -> Next<T> {
+        loop {
+            let Some(level) = (0..LEVELS).find(|&l| self.occ[l] != 0) else {
+                return Next::Empty;
+            };
+            let shift = level * LEVEL_BITS;
+            let cs = ((self.cursor >> shift) & (SLOTS as u64 - 1)) as u32;
+            // The XOR mapping keeps occupied slots at-or-after the
+            // cursor's slot within each level — no wraparound scan.
+            let mask = self.occ[level] & (!0u64 << cs);
+            debug_assert!(mask != 0, "occupied slot behind the wheel cursor");
+            let slot = mask.trailing_zeros() as u64;
+            let base = if shift + LEVEL_BITS >= 64 {
+                slot << shift
+            } else {
+                (self.cursor >> (shift + LEVEL_BITS) << (shift + LEVEL_BITS)) + (slot << shift)
+            };
+            if base > limit_ns {
+                // Earliest deadline ≥ base > limit. Leave the cursor ≤
+                // limit so later inserts inside (now, base) stay legal.
+                return Next::Beyond;
+            }
+            self.cursor = base;
+            if level == 0 {
+                // Level-0 slots hold exactly one deadline (= base).
+                let head = self.slots[slot as usize].head;
+                debug_assert_ne!(head, NIL);
+                let node = &mut self.nodes[head as usize];
+                debug_assert_eq!(node.t_ns, base);
+                let after = node.next;
+                let payload = node.payload.take().expect("linked node has payload");
+                node.next = self.free;
+                self.free = head;
+                self.slots[slot as usize].head = after;
+                if after == NIL {
+                    self.slots[slot as usize].tail = NIL;
+                    self.occ[0] &= !(1u64 << slot);
+                }
+                self.len -= 1;
+                return Next::Ready(base, payload);
+            }
+            // Cascade: relink the slot's nodes at finer levels, in list
+            // order, relative to the advanced cursor.
+            let si = level * SLOTS + slot as usize;
+            let mut cur = self.slots[si].head;
+            self.slots[si] = EMPTY_SLOT;
+            self.occ[level] &= !(1u64 << slot);
+            while cur != NIL {
+                let nxt = self.nodes[cur as usize].next;
+                self.nodes[cur as usize].next = NIL;
+                let t = self.nodes[cur as usize].t_ns;
+                debug_assert!(self.level_slot(t).0 < level, "cascade must descend");
+                self.link(cur, t);
+                cur = nxt;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Reference heap (the pre-wheel implementation, kept for differential
+// golden-trace testing)
+// ---------------------------------------------------------------------
+
+struct HeapEntry<T> {
+    t_ns: u64,
+    seq: u64,
+    payload: T,
+}
+
+impl<T> PartialEq for HeapEntry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.t_ns == other.t_ns && self.seq == other.seq
+    }
+}
+impl<T> Eq for HeapEntry<T> {}
+impl<T> PartialOrd for HeapEntry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for HeapEntry<T> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.t_ns, self.seq).cmp(&(other.t_ns, other.seq))
+    }
+}
+
+pub struct ReferenceHeap<T> {
+    heap: BinaryHeap<Reverse<HeapEntry<T>>>,
+    seq: u64,
+}
+
+impl<T> Default for ReferenceHeap<T> {
+    fn default() -> Self {
+        ReferenceHeap::new()
+    }
+}
+
+impl<T> ReferenceHeap<T> {
+    pub fn new() -> ReferenceHeap<T> {
+        ReferenceHeap {
+            heap: BinaryHeap::new(),
+            seq: 0,
+        }
+    }
+
+    pub fn insert(&mut self, t_ns: u64, payload: T) {
+        self.seq += 1;
+        self.heap.push(Reverse(HeapEntry {
+            t_ns,
+            seq: self.seq,
+            payload,
+        }));
+    }
+
+    pub fn pop_next(&mut self, limit_ns: u64) -> Next<T> {
+        match self.heap.peek() {
+            None => Next::Empty,
+            Some(Reverse(e)) if e.t_ns > limit_ns => Next::Beyond,
+            Some(_) => {
+                let Reverse(e) = self.heap.pop().expect("peeked");
+                Next::Ready(e.t_ns, e.payload)
+            }
+        }
+    }
+}
+
+/// The simulator's timed-event queue: the timing wheel by default, or
+/// the reference heap when a differential test asks for it.
+pub enum EventQueue<T> {
+    Wheel(TimingWheel<T>),
+    Heap(ReferenceHeap<T>),
+}
+
+impl<T> EventQueue<T> {
+    pub fn wheel() -> EventQueue<T> {
+        EventQueue::Wheel(TimingWheel::new())
+    }
+
+    pub fn reference_heap() -> EventQueue<T> {
+        EventQueue::Heap(ReferenceHeap::new())
+    }
+
+    #[inline]
+    pub fn insert(&mut self, t_ns: u64, payload: T) {
+        match self {
+            EventQueue::Wheel(w) => w.insert(t_ns, payload),
+            EventQueue::Heap(h) => h.insert(t_ns, payload),
+        }
+    }
+
+    #[inline]
+    pub fn pop_next(&mut self, limit_ns: u64) -> Next<T> {
+        match self {
+            EventQueue::Wheel(w) => w.pop_next(limit_ns),
+            EventQueue::Heap(h) => h.pop_next(limit_ns),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn drain<T>(w: &mut TimingWheel<T>) -> Vec<(u64, T)> {
+        let mut out = Vec::new();
+        while let Next::Ready(t, p) = w.pop_next(u64::MAX) {
+            out.push((t, p));
+        }
+        out
+    }
+
+    #[test]
+    fn same_deadline_pops_fifo() {
+        let mut w = TimingWheel::new();
+        for i in 0..10u32 {
+            w.insert(5_000, i);
+        }
+        let out = drain(&mut w);
+        assert_eq!(out, (0..10).map(|i| (5_000, i)).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn ascending_times_across_levels() {
+        // Deadlines straddling every level boundary, inserted shuffled.
+        let mut times: Vec<u64> = vec![
+            0,
+            1,
+            63,
+            64,
+            65,
+            4_095,
+            4_096,
+            4_097,
+            262_143,
+            262_144,
+            1 << 24,
+            (1 << 24) + 1,
+            1 << 30,
+            1 << 36,
+            1 << 42,
+            1 << 48,
+            1 << 54,
+            1 << 60, // top level (slots 0–15)
+            (1 << 60) + 12345,
+            u64::MAX / 2,
+        ];
+        // deterministic shuffle
+        let mut rng = Rng::new(7);
+        for i in (1..times.len()).rev() {
+            let j = rng.below(i as u64 + 1) as usize;
+            times.swap(i, j);
+        }
+        let mut w = TimingWheel::new();
+        for (i, &t) in times.iter().enumerate() {
+            w.insert(t, i);
+        }
+        let out = drain(&mut w);
+        times.sort_unstable();
+        assert_eq!(out.iter().map(|&(t, _)| t).collect::<Vec<_>>(), times);
+    }
+
+    #[test]
+    fn cascade_preserves_insertion_order_for_ties() {
+        // Two events at the same far deadline inserted at different
+        // cursor positions (one before, one after an intermediate pop)
+        // must still pop in insertion order.
+        let mut w = TimingWheel::new();
+        w.insert(10_000, 0u32); // far: lives at a coarse level
+        w.insert(5, 1);
+        match w.pop_next(u64::MAX) {
+            Next::Ready(5, 1) => {}
+            _ => panic!("expected the near event first"),
+        }
+        // cursor is now 5; same deadline again, inserted later
+        w.insert(10_000, 2);
+        w.insert(10_000, 3);
+        let out = drain(&mut w);
+        assert_eq!(out, vec![(10_000, 0), (10_000, 2), (10_000, 3)]);
+    }
+
+    #[test]
+    fn limit_semantics() {
+        let mut w = TimingWheel::new();
+        assert!(matches!(w.pop_next(100), Next::Empty));
+        w.insert(500, 'a');
+        assert!(matches!(w.pop_next(499), Next::Beyond));
+        // After a Beyond at limit L the cursor stays ≤ L: the caller
+        // (whose virtual clock is now L) may still insert events that
+        // precede the pending horizon.
+        w.insert(499, 'b');
+        match w.pop_next(499) {
+            Next::Ready(499, 'b') => {}
+            _ => panic!("expected the earlier event"),
+        }
+        assert!(matches!(w.pop_next(499), Next::Beyond));
+        match w.pop_next(500) {
+            Next::Ready(500, 'a') => {}
+            _ => panic!("expected the deferred event"),
+        }
+        assert!(matches!(w.pop_next(u64::MAX), Next::Empty));
+        assert_eq!(w.len(), 0);
+    }
+
+    #[test]
+    fn interleaved_insert_at_current_time() {
+        let mut w = TimingWheel::new();
+        w.insert(100, 0u32);
+        match w.pop_next(u64::MAX) {
+            Next::Ready(100, 0) => {}
+            _ => panic!(),
+        }
+        // handler schedules more work at the *same* virtual time
+        w.insert(100, 1);
+        w.insert(100, 2);
+        w.insert(101, 3);
+        let out = drain(&mut w);
+        assert_eq!(out, vec![(100, 1), (100, 2), (101, 3)]);
+    }
+
+    #[test]
+    fn slab_recycles_nodes() {
+        let mut w = TimingWheel::new();
+        for round in 0..50u64 {
+            for i in 0..16u64 {
+                w.insert(round * 1_000 + i, i);
+            }
+            assert_eq!(drain(&mut w).len(), 16);
+        }
+        // 16 live nodes at a time → the slab never grows past that.
+        assert!(w.nodes.len() <= 16, "slab grew to {}", w.nodes.len());
+    }
+
+    /// Replay the same randomized insert/pop schedule on both queues and
+    /// assert identical (time, payload) sequences — ties included.
+    fn drive(q: &mut EventQueue<u32>, seed: u64) -> Vec<(u64, u32)> {
+        let mut rng = Rng::new(seed);
+        let mut log = Vec::new();
+        let mut now = 0u64;
+        let mut id = 0u32;
+        for _ in 0..200 {
+            // burst of inserts at/after the current virtual time,
+            // spanning several wheel levels (offsets up to ~2^36)
+            for _ in 0..(1 + rng.below(8)) {
+                let t = now + rng.below(1u64 << (6 + rng.below(30) as u32));
+                q.insert(t, id);
+                id += 1;
+            }
+            // occasionally duplicate the last deadline to force ties
+            if id > 0 && rng.below(3) == 0 {
+                let t = now + rng.below(256);
+                q.insert(t, id);
+                id += 1;
+                q.insert(t, id);
+                id += 1;
+            }
+            for _ in 0..rng.below(6) {
+                match q.pop_next(u64::MAX) {
+                    Next::Ready(t, p) => {
+                        now = t;
+                        log.push((t, p));
+                    }
+                    _ => break,
+                }
+            }
+        }
+        while let Next::Ready(t, p) = q.pop_next(u64::MAX) {
+            log.push((t, p));
+        }
+        log
+    }
+
+    #[test]
+    fn wheel_matches_reference_heap_on_random_workload() {
+        for seed in [3u64, 11, 1234] {
+            let mut w = EventQueue::wheel();
+            let mut h = EventQueue::reference_heap();
+            let log_w = drive(&mut w, seed);
+            let log_h = drive(&mut h, seed);
+            assert!(!log_w.is_empty());
+            assert_eq!(log_w, log_h, "wheel and heap diverged (seed {seed})");
+        }
+    }
+}

@@ -23,10 +23,23 @@
 //! Wakeup latency is bounded by the timeslice when all cores are busy
 //! (no wakeup preemption) — the same "a 1 ms OS delay on one rank stalls
 //! the whole collective" magnitude the paper measures (§V-A).
+//!
+//! **Event core.** Timed events run on a hierarchical timing wheel
+//! ([`eventq`]) instead of a binary heap; the ready queue is an
+//! index-based min-heap over task ids; blocked waiters live in pooled
+//! intrusive per-gate lists; `call_at` callbacks are slab-pooled; and
+//! `signal` reuses scratch buffers — the steady-state event path
+//! allocates nothing. Dispatch order is bit-identical to the heap-based
+//! core (ties break on insertion order everywhere), which
+//! `tests/test_event_core.rs` verifies by differential replay against
+//! the retained reference heap queue.
 
 pub mod script;
 
+mod eventq;
+
 use crate::util::stats::TimeSeries;
+use eventq::{EventQueue, Next};
 use rustc_hash::FxHashMap;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -98,11 +111,13 @@ impl SimParams {
 }
 
 /// Deferred effects a program may request during `step` (applied by the
-/// simulator right after the step returns, in order).
+/// simulator right after the step returns, in order). Callbacks are
+/// parked in the simulator's [`Callbacks`] slab at request time, so the
+/// deferred record itself is a plain index.
 enum Deferred {
     Spawn { program: Box<dyn Program>, class: &'static str },
     Signal { gate: GateId, n: u64 },
-    CallAt { t_ns: u64, f: Box<dyn FnOnce(&mut Sim)> },
+    CallAt { t_ns: u64, cb: u32 },
 }
 
 /// The view of the simulator a program sees during `step`.
@@ -111,6 +126,7 @@ pub struct TaskCtx<'a> {
     task: TaskId,
     gates: &'a mut Gates,
     deferred: &'a mut Vec<Deferred>,
+    cbs: &'a mut Callbacks,
 }
 
 impl<'a> TaskCtx<'a> {
@@ -148,7 +164,45 @@ impl<'a> TaskCtx<'a> {
 
     /// Schedule a callback on the shared timeline (device-side events).
     pub fn call_at(&mut self, t_ns: u64, f: impl FnOnce(&mut Sim) + 'static) {
-        self.deferred.push(Deferred::CallAt { t_ns, f: Box::new(f) });
+        let cb = self.cbs.put(Box::new(f));
+        self.deferred.push(Deferred::CallAt { t_ns, cb });
+    }
+}
+
+// ---------------------------------------------------------------------
+// Pooled deferred-callback slab
+// ---------------------------------------------------------------------
+
+type BoxedCall = Box<dyn FnOnce(&mut Sim)>;
+
+/// Slab of pending `call_at` closures. Timed events carry a `u32` slot
+/// index instead of the boxed closure itself, so wheel nodes stay small
+/// and slots are recycled through the free list.
+#[derive(Default)]
+struct Callbacks {
+    slots: Vec<Option<BoxedCall>>,
+    free: Vec<u32>,
+}
+
+impl Callbacks {
+    fn put(&mut self, f: BoxedCall) -> u32 {
+        match self.free.pop() {
+            Some(i) => {
+                debug_assert!(self.slots[i as usize].is_none());
+                self.slots[i as usize] = Some(f);
+                i
+            }
+            None => {
+                self.slots.push(Some(f));
+                (self.slots.len() - 1) as u32
+            }
+        }
+    }
+
+    fn take(&mut self, id: u32) -> BoxedCall {
+        let f = self.slots[id as usize].take().expect("callback present");
+        self.free.push(id);
+        f
     }
 }
 
@@ -156,13 +210,30 @@ impl<'a> TaskCtx<'a> {
 // Gates
 // ---------------------------------------------------------------------
 
+const NIL_W: u32 = u32::MAX;
+
+/// One blocked waiter, linked into its gate's target-sorted list. Nodes
+/// are pooled in [`Gates::wnodes`] and recycled through `wfree`, so
+/// blocking and waking never allocate after warmup.
+struct WaiterNode {
+    target: u64,
+    /// Monotonic tie-breaker so equal-target waiters wake FIFO.
+    seq: u64,
+    task: u32,
+    prev: u32,
+    next: u32,
+}
+
 pub struct Gates {
     values: Vec<u64>,
-    /// Blocked (off-CPU) waiters per gate, as a min-heap keyed by
-    /// (target, enqueue seq, task): `signal` pops exactly the satisfied
-    /// waiters instead of scanning every waiter on the gate.
-    blocked: Vec<BinaryHeap<Reverse<(u64, u64, TaskId)>>>,
-    /// Monotonic tie-breaker so equal-target waiters wake FIFO.
+    /// Per-gate head/tail of a doubly-linked waiter list kept sorted by
+    /// (target, seq): `signal` pops exactly the satisfied prefix instead
+    /// of scanning every waiter on the gate.
+    heads: Vec<u32>,
+    tails: Vec<u32>,
+    /// Pooled waiter nodes, shared across all gates.
+    wnodes: Vec<WaiterNode>,
+    wfree: u32,
     block_seq: u64,
     /// Cores with a live busy-poll registration per gate, as
     /// (core, epoch) pairs: `signal` consults this index instead of
@@ -175,7 +246,10 @@ impl Gates {
     fn new() -> Gates {
         Gates {
             values: Vec::new(),
-            blocked: Vec::new(),
+            heads: Vec::new(),
+            tails: Vec::new(),
+            wnodes: Vec::new(),
+            wfree: NIL_W,
             block_seq: 0,
             pollers: Vec::new(),
         }
@@ -183,13 +257,92 @@ impl Gates {
 
     pub fn new_gate(&mut self) -> GateId {
         self.values.push(0);
-        self.blocked.push(BinaryHeap::new());
+        self.heads.push(NIL_W);
+        self.tails.push(NIL_W);
         self.pollers.push(Vec::new());
         self.values.len() - 1
     }
 
     pub fn value(&self, gate: GateId) -> u64 {
         self.values[gate]
+    }
+
+    /// Park `task` on `gate` until it reaches `target`. Insertion scans
+    /// from the tail, so the common patterns — equal-target barriers and
+    /// monotonically increasing targets — link in O(1).
+    fn insert_waiter(&mut self, gate: GateId, target: u64, task: TaskId) {
+        self.block_seq += 1;
+        let seq = self.block_seq;
+        let idx = match self.wfree {
+            NIL_W => {
+                self.wnodes.push(WaiterNode {
+                    target,
+                    seq,
+                    task: task as u32,
+                    prev: NIL_W,
+                    next: NIL_W,
+                });
+                (self.wnodes.len() - 1) as u32
+            }
+            idx => {
+                self.wfree = self.wnodes[idx as usize].next;
+                self.wnodes[idx as usize] = WaiterNode {
+                    target,
+                    seq,
+                    task: task as u32,
+                    prev: NIL_W,
+                    next: NIL_W,
+                };
+                idx
+            }
+        };
+        // Find the last node with target ≤ the new target; the new node
+        // (holding the largest seq) goes right after it.
+        let mut after = self.tails[gate];
+        while after != NIL_W && self.wnodes[after as usize].target > target {
+            after = self.wnodes[after as usize].prev;
+        }
+        if after == NIL_W {
+            // new head
+            let old_head = self.heads[gate];
+            self.wnodes[idx as usize].next = old_head;
+            if old_head == NIL_W {
+                self.tails[gate] = idx;
+            } else {
+                self.wnodes[old_head as usize].prev = idx;
+            }
+            self.heads[gate] = idx;
+        } else {
+            let next = self.wnodes[after as usize].next;
+            self.wnodes[idx as usize].prev = after;
+            self.wnodes[idx as usize].next = next;
+            self.wnodes[after as usize].next = idx;
+            if next == NIL_W {
+                self.tails[gate] = idx;
+            } else {
+                self.wnodes[next as usize].prev = idx;
+            }
+        }
+    }
+
+    /// Unlink every waiter whose target is ≤ `value` (the sorted prefix)
+    /// into `out` as (seq, task) pairs, recycling their nodes.
+    fn pop_satisfied(&mut self, gate: GateId, value: u64, out: &mut Vec<(u64, TaskId)>) {
+        let mut cur = self.heads[gate];
+        while cur != NIL_W && self.wnodes[cur as usize].target <= value {
+            let node = &self.wnodes[cur as usize];
+            out.push((node.seq, node.task as TaskId));
+            let next = node.next;
+            self.wnodes[cur as usize].next = self.wfree;
+            self.wfree = cur;
+            cur = next;
+        }
+        self.heads[gate] = cur;
+        if cur == NIL_W {
+            self.tails[gate] = NIL_W;
+        } else {
+            self.wnodes[cur as usize].prev = NIL_W;
+        }
     }
 }
 
@@ -282,6 +435,8 @@ impl Core {
 // Events
 // ---------------------------------------------------------------------
 
+/// A timed event. Small and `Copy`-cheap: callbacks live in the
+/// [`Callbacks`] slab and are referenced by slot index.
 enum Ev {
     /// The current segment on `core` ends (chunk done / switch done /
     /// poll slice end). Stale if the epoch doesn't match.
@@ -290,30 +445,109 @@ enum Ev {
     PollNotice { core: usize, epoch: u64 },
     /// A sleeping task wakes.
     Timer { task: TaskId },
-    /// Arbitrary callback (GPU completions, workload arrivals).
-    Call(Box<dyn FnOnce(&mut Sim)>),
+    /// Arbitrary callback (GPU completions, workload arrivals), by slab
+    /// slot.
+    Call(u32),
 }
 
-struct HeapEntry {
-    t_ns: u64,
+/// One record of the processed-event trace (time, kind, a, b) — see
+/// [`Sim::enable_event_trace`].
+pub type TraceEvent = (u64, u8, u64, u64);
+
+fn trace_record(t_ns: u64, ev: &Ev) -> TraceEvent {
+    match *ev {
+        Ev::CoreSeg { core, epoch } => (t_ns, 0, core as u64, epoch),
+        Ev::PollNotice { core, epoch } => (t_ns, 1, core as u64, epoch),
+        Ev::Timer { task } => (t_ns, 2, task as u64, 0),
+        Ev::Call(cb) => (t_ns, 3, cb as u64, 0),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Ready queue
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Copy)]
+struct RqEntry {
+    vruntime: u64,
     seq: u64,
-    ev: Ev,
+    task: u32,
 }
 
-impl PartialEq for HeapEntry {
-    fn eq(&self, other: &Self) -> bool {
-        self.t_ns == other.t_ns && self.seq == other.seq
+impl RqEntry {
+    #[inline]
+    fn key(&self) -> (u64, u64) {
+        (self.vruntime, self.seq)
     }
 }
-impl Eq for HeapEntry {}
-impl PartialOrd for HeapEntry {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
+
+/// The CFS run queue: an index-based binary min-heap over compact
+/// `(vruntime, seq, task)` entries in one reusable flat array — no
+/// `Reverse` wrappers, no per-entry boxing, and the enqueue seq makes
+/// every key unique, so pop order is the same total (vruntime, FIFO)
+/// order the old `BinaryHeap<Reverse<(u64, u64, TaskId)>>` produced.
+#[derive(Default)]
+struct ReadyQueue {
+    heap: Vec<RqEntry>,
+    seq: u64,
 }
-impl Ord for HeapEntry {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        (self.t_ns, self.seq).cmp(&(other.t_ns, other.seq))
+
+impl ReadyQueue {
+    fn push(&mut self, vruntime: u64, task: TaskId) {
+        self.seq += 1;
+        self.heap.push(RqEntry {
+            vruntime,
+            seq: self.seq,
+            task: task as u32,
+        });
+        self.sift_up(self.heap.len() - 1);
+    }
+
+    fn peek(&self) -> Option<TaskId> {
+        self.heap.first().map(|e| e.task as TaskId)
+    }
+
+    fn pop(&mut self) -> Option<TaskId> {
+        if self.heap.is_empty() {
+            return None;
+        }
+        let last = self.heap.len() - 1;
+        self.heap.swap(0, last);
+        let e = self.heap.pop().expect("non-empty");
+        if !self.heap.is_empty() {
+            self.sift_down(0);
+        }
+        Some(e.task as TaskId)
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if self.heap[parent].key() <= self.heap[i].key() {
+                break;
+            }
+            self.heap.swap(parent, i);
+            i = parent;
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        loop {
+            let left = 2 * i + 1;
+            if left >= self.heap.len() {
+                break;
+            }
+            let right = left + 1;
+            let mut min = left;
+            if right < self.heap.len() && self.heap[right].key() < self.heap[left].key() {
+                min = right;
+            }
+            if self.heap[i].key() <= self.heap[min].key() {
+                break;
+            }
+            self.heap.swap(i, min);
+            i = min;
+        }
     }
 }
 
@@ -332,7 +566,7 @@ pub struct TaskStats {
     pub finished: bool,
 }
 
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct SimStats {
     pub context_switches: u64,
     /// CPU ns consumed per task class (useful work + polling).
@@ -341,8 +575,8 @@ pub struct SimStats {
     pub class_poll_ns: FxHashMap<&'static str, u64>,
     /// Total busy core-ns.
     pub busy_core_ns: u64,
-    /// Events drained from the heap (the simulator's unit of work;
-    /// benches report events/sec from this).
+    /// Events drained from the event queue (the simulator's unit of
+    /// work; benches report events/sec from this).
     pub events_processed: u64,
 }
 
@@ -353,17 +587,23 @@ pub struct SimStats {
 pub struct Sim {
     params: SimParams,
     now_ns: u64,
-    seq: u64,
-    heap: BinaryHeap<Reverse<HeapEntry>>,
+    /// Timed events: hierarchical timing wheel (or the reference heap
+    /// when built via [`Sim::new_with_reference_queue`]).
+    events: EventQueue<Ev>,
     tasks: Vec<Task>,
     cores: Vec<Core>,
-    run_queue: BinaryHeap<Reverse<(u64, u64, TaskId)>>,
-    rq_seq: u64,
+    run_queue: ReadyQueue,
     gates: Gates,
+    /// Pending `call_at` closures, slab-pooled; events carry slot ids.
+    cbs: Callbacks,
     deferred: Vec<Deferred>,
     /// Reused drain buffer for `apply_deferred` (avoids a fresh Vec per
     /// batch on the program-step hot path).
     deferred_scratch: Vec<Deferred>,
+    /// Reused (seq, task) buffer for `signal`'s blocked-waiter wakeups.
+    wake_scratch: Vec<(u64, TaskId)>,
+    /// Reused core-id buffer for `signal`'s poller notifications.
+    notify_scratch: Vec<usize>,
     /// Min-heap of idle core ids — dispatching wakes the lowest-numbered
     /// idle core first, exactly like the old full scan, without touching
     /// busy cores.
@@ -371,11 +611,25 @@ pub struct Sim {
     stats: SimStats,
     /// Busy-core utilization trace (core-seconds per bucket).
     util_trace: Option<TimeSeries>,
+    /// Processed-event log for differential tests (None = disabled).
+    trace: Option<Vec<TraceEvent>>,
     min_vruntime: u64,
 }
 
 impl Sim {
     pub fn new(params: SimParams) -> Sim {
+        Sim::with_queue(params, EventQueue::wheel())
+    }
+
+    /// Build a simulator whose timed events run on the pre-wheel
+    /// reference binary-heap queue. Scheduling semantics are identical;
+    /// this exists so differential tests can replay one workload on both
+    /// event cores and assert bit-equal traces and stats.
+    pub fn new_with_reference_queue(params: SimParams) -> Sim {
+        Sim::with_queue(params, EventQueue::reference_heap())
+    }
+
+    fn with_queue(params: SimParams, events: EventQueue<Ev>) -> Sim {
         assert!(params.cores > 0, "need at least one core");
         assert!(params.timeslice_ns > 0 && params.poll_quantum_ns > 0);
         let cores: Vec<Core> = (0..params.cores).map(|_| Core::new()).collect();
@@ -386,19 +640,37 @@ impl Sim {
         Sim {
             params,
             now_ns: 0,
-            seq: 0,
-            heap: BinaryHeap::new(),
+            events,
             tasks: Vec::new(),
             cores,
-            run_queue: BinaryHeap::new(),
-            rq_seq: 0,
+            run_queue: ReadyQueue::default(),
             gates: Gates::new(),
+            cbs: Callbacks::default(),
             deferred: Vec::new(),
             deferred_scratch: Vec::new(),
+            wake_scratch: Vec::new(),
+            notify_scratch: Vec::new(),
             idle_cores,
             stats: SimStats::default(),
             util_trace,
+            trace: None,
             min_vruntime: 0,
+        }
+    }
+
+    /// Record every processed event as a (time, kind, a, b) tuple. Used
+    /// by the golden-trace equivalence tests; costs one branch per event
+    /// when disabled.
+    pub fn enable_event_trace(&mut self) {
+        self.trace = Some(Vec::new());
+    }
+
+    /// Take the recorded event trace (empty if tracing was never
+    /// enabled); tracing stays enabled with a fresh buffer.
+    pub fn take_event_trace(&mut self) -> Vec<TraceEvent> {
+        match &mut self.trace {
+            Some(t) => std::mem::take(t),
+            None => Vec::new(),
         }
     }
 
@@ -467,34 +739,36 @@ impl Sim {
     /// Schedule a callback at an absolute virtual time.
     pub fn call_at(&mut self, t_ns: u64, f: impl FnOnce(&mut Sim) + 'static) {
         let t = t_ns.max(self.now_ns);
-        self.push_event(t, Ev::Call(Box::new(f)));
+        let cb = self.cbs.put(Box::new(f));
+        self.push_event(t, Ev::Call(cb));
     }
 
     /// Increment a gate, waking blocked waiters and notifying pollers.
     pub fn signal(&mut self, gate: GateId, n: u64) {
         self.gates.values[gate] += n;
         let value = self.gates.values[gate];
-        // Wake blocked waiters whose target is reached: pop exactly the
-        // satisfied prefix of the per-gate (target, seq) min-heap, then
+        // Wake blocked waiters whose target is reached: unlink exactly
+        // the satisfied prefix of the per-gate (target, seq) list, then
         // wake in enqueue order (matching the old scan's FIFO order).
-        let mut woken: Vec<(u64, TaskId)> = Vec::new();
-        while let Some(&Reverse((target, seq, task))) = self.gates.blocked[gate].peek() {
-            if target > value {
-                break;
-            }
-            self.gates.blocked[gate].pop();
-            woken.push((seq, task));
-        }
+        // The buffer is taken (not borrowed) so a re-entrant signal —
+        // reachable via kick_idle_cores → dispatch → program step —
+        // simply starts from a fresh Vec.
+        let mut woken = std::mem::take(&mut self.wake_scratch);
+        debug_assert!(woken.is_empty());
+        self.gates.pop_satisfied(gate, value, &mut woken);
         woken.sort_unstable();
-        for (_, task) in woken {
+        for &(_, task) in &woken {
             debug_assert_eq!(self.tasks[task].state, TaskState::Blocked);
             self.make_runnable(task);
         }
+        woken.clear();
+        self.wake_scratch = woken;
         // Notify running pollers via the gate → polling-core index
         // (instead of scanning every core); they notice after one poll
         // quantum. Stale registrations are dropped here.
         let mut entries = std::mem::take(&mut self.gates.pollers[gate]);
-        let mut notify: Vec<usize> = Vec::new();
+        let mut notify = std::mem::take(&mut self.notify_scratch);
+        debug_assert!(notify.is_empty());
         entries.retain(|&(core_id, epoch)| {
             let core = &self.cores[core_id];
             if core.epoch != epoch || !matches!(core.seg, Segment::Poll { noticed: false }) {
@@ -517,13 +791,15 @@ impl Sim {
         self.gates.pollers[gate] = entries;
         // ascending core order, matching the old full scan
         notify.sort_unstable();
-        for core_id in notify {
+        for &core_id in &notify {
             let epoch = self.cores[core_id].epoch;
             let t = self.now_ns + self.params.poll_quantum_ns;
             self.cores[core_id].seg = Segment::Poll { noticed: true };
             self.cores[core_id].poll_reg = None;
             self.push_event(t, Ev::PollNotice { core: core_id, epoch });
         }
+        notify.clear();
+        self.notify_scratch = notify;
         self.kick_idle_cores();
     }
 
@@ -531,20 +807,14 @@ impl Sim {
 
     fn push_event(&mut self, t_ns: u64, ev: Ev) {
         debug_assert!(t_ns >= self.now_ns);
-        self.seq += 1;
-        self.heap.push(Reverse(HeapEntry {
-            t_ns,
-            seq: self.seq,
-            ev,
-        }));
+        self.events.insert(t_ns, ev);
     }
 
     fn enqueue(&mut self, task: TaskId) {
         debug_assert_eq!(self.tasks[task].state, TaskState::Runnable);
         self.tasks[task].runnable_since = self.now_ns;
-        self.rq_seq += 1;
         let vr = self.tasks[task].vruntime;
-        self.run_queue.push(Reverse((vr, self.rq_seq, task)));
+        self.run_queue.push(vr, task);
     }
 
     fn make_runnable(&mut self, task: TaskId) {
@@ -557,7 +827,7 @@ impl Sim {
     }
 
     fn pop_runnable(&mut self) -> Option<TaskId> {
-        while let Some(Reverse((_, _, task))) = self.run_queue.pop() {
+        while let Some(task) = self.run_queue.pop() {
             if self.tasks[task].state == TaskState::Runnable {
                 return Some(task);
             }
@@ -742,7 +1012,7 @@ impl Sim {
 
     /// True if any runnable task is waiting.
     fn peek_runnable(&mut self) -> bool {
-        while let Some(Reverse((_, _, task))) = self.run_queue.peek().copied() {
+        while let Some(task) = self.run_queue.peek() {
             if self.tasks[task].state == TaskState::Runnable {
                 return true;
             }
@@ -774,9 +1044,7 @@ impl Sim {
 
     fn preempt_for_block(&mut self, core_id: usize, task_id: TaskId, gate: GateId, target: u64) {
         self.vacate(core_id, task_id, TaskState::Blocked);
-        self.gates.block_seq += 1;
-        let seq = self.gates.block_seq;
-        self.gates.blocked[gate].push(Reverse((target, seq, task_id)));
+        self.gates.insert_waiter(gate, target, task_id);
         self.dispatch(core_id);
     }
 
@@ -806,6 +1074,7 @@ impl Sim {
             task: task_id,
             gates: &mut self.gates,
             deferred: &mut self.deferred,
+            cbs: &mut self.cbs,
         };
         let op = program.step(&mut ctx);
         self.tasks[task_id].program = program;
@@ -827,7 +1096,12 @@ impl Sim {
                         self.spawn_boxed(class, program, 1);
                     }
                     Deferred::Signal { gate, n } => self.signal(gate, n),
-                    Deferred::CallAt { t_ns, f } => self.call_at(t_ns, f),
+                    Deferred::CallAt { t_ns, cb } => {
+                        // the closure is already parked in the slab;
+                        // clamp to now like `Sim::call_at` does
+                        let t = t_ns.max(self.now_ns);
+                        self.push_event(t, Ev::Call(cb));
+                    }
                 }
             }
             self.deferred_scratch = batch;
@@ -902,26 +1176,36 @@ impl Sim {
 
     // -- main loop --------------------------------------------------------
 
-    /// Run until the event heap empties or virtual time exceeds
-    /// `limit_ns`. Returns the final virtual time.
+    /// Run until the event queue empties or virtual time exceeds
+    /// `limit_ns`. Returns the final virtual time. Limits must be
+    /// non-decreasing across calls (they always are: each call resumes
+    /// from where the previous one stopped).
     pub fn run_until(&mut self, limit_ns: u64) -> u64 {
-        while let Some(Reverse(entry)) = self.heap.pop() {
-            if entry.t_ns > limit_ns {
-                // put it back and stop
-                self.heap.push(Reverse(entry));
-                self.now_ns = limit_ns;
-                break;
-            }
-            debug_assert!(entry.t_ns >= self.now_ns, "time must not go backwards");
-            self.now_ns = entry.t_ns;
-            self.stats.events_processed += 1;
-            match entry.ev {
-                Ev::CoreSeg { core, epoch } => self.on_core_seg(core, epoch),
-                Ev::PollNotice { core, epoch } => self.on_poll_notice(core, epoch),
-                Ev::Timer { task } => self.on_timer(task),
-                Ev::Call(f) => {
-                    f(self);
-                    self.apply_deferred();
+        loop {
+            match self.events.pop_next(limit_ns) {
+                Next::Empty => break,
+                Next::Beyond => {
+                    // pending events all lie past the limit — stop there
+                    self.now_ns = limit_ns;
+                    break;
+                }
+                Next::Ready(t_ns, ev) => {
+                    debug_assert!(t_ns >= self.now_ns, "time must not go backwards");
+                    self.now_ns = t_ns;
+                    self.stats.events_processed += 1;
+                    if let Some(trace) = &mut self.trace {
+                        trace.push(trace_record(t_ns, &ev));
+                    }
+                    match ev {
+                        Ev::CoreSeg { core, epoch } => self.on_core_seg(core, epoch),
+                        Ev::PollNotice { core, epoch } => self.on_poll_notice(core, epoch),
+                        Ev::Timer { task } => self.on_timer(task),
+                        Ev::Call(cb) => {
+                            let f = self.cbs.take(cb);
+                            f(self);
+                            self.apply_deferred();
+                        }
+                    }
                 }
             }
         }
@@ -1395,6 +1679,107 @@ mod tests {
         // remaining work continues afterwards
         let t2 = sim.run();
         assert_eq!(t2, 100_000_000);
+    }
+
+    #[test]
+    fn ready_queue_orders_by_vruntime_then_fifo() {
+        let mut rq = ReadyQueue::default();
+        // same vruntime → FIFO by seq; lower vruntime jumps the line
+        rq.push(50, 0);
+        rq.push(50, 1);
+        rq.push(10, 2);
+        rq.push(50, 3);
+        rq.push(10, 4);
+        let mut order = Vec::new();
+        while let Some(t) = rq.pop() {
+            order.push(t);
+        }
+        assert_eq!(order, vec![2, 4, 0, 1, 3]);
+        assert!(rq.peek().is_none());
+    }
+
+    #[test]
+    fn waiter_list_sorted_insert_and_satisfied_prefix() {
+        let mut gates = Gates::new();
+        let g = gates.new_gate();
+        // tasks 0..5 block with shuffled targets
+        for (task, target) in [(0, 5u64), (1, 2), (2, 7), (3, 2), (4, 1)] {
+            gates.insert_waiter(g, target, task);
+        }
+        let mut out = Vec::new();
+        gates.pop_satisfied(g, 2, &mut out);
+        // targets 2, 2, 1 satisfied; (seq, task) pairs sort to FIFO order
+        out.sort_unstable();
+        assert_eq!(
+            out.iter().map(|&(_, t)| t).collect::<Vec<_>>(),
+            vec![1, 3, 4]
+        );
+        let mut rest = Vec::new();
+        gates.pop_satisfied(g, 100, &mut rest);
+        rest.sort_unstable();
+        assert_eq!(
+            rest.iter().map(|&(_, t)| t).collect::<Vec<_>>(),
+            vec![0, 2]
+        );
+        // nodes recycled: blocking again reuses the pool
+        let before = gates.wnodes.len();
+        for task in 0..4 {
+            gates.insert_waiter(g, 9, task);
+        }
+        assert_eq!(gates.wnodes.len(), before);
+    }
+
+    #[test]
+    fn callback_slab_recycles_slots() {
+        let mut sim = Sim::new(params_no_overhead(1));
+        for round in 0..10u64 {
+            for i in 0..4u64 {
+                sim.call_at(round * 1_000 + i, |_| {});
+            }
+            sim.run_until(round * 1_000 + 10);
+        }
+        assert!(sim.cbs.slots.len() <= 4, "slab grew to {}", sim.cbs.slots.len());
+    }
+
+    #[test]
+    fn reference_queue_sim_behaves_identically() {
+        let build = |reference: bool| {
+            let mut sim = if reference {
+                Sim::new_with_reference_queue(params_no_overhead(2))
+            } else {
+                Sim::new(params_no_overhead(2))
+            };
+            sim.enable_event_trace();
+            let gate = sim.new_gate();
+            for _ in 0..3 {
+                let mut state = 0;
+                sim.spawn("poller", move |_ctx: &mut TaskCtx| match state {
+                    0 => {
+                        state = 1;
+                        Op::BusyPoll { gate, target: 1 }
+                    }
+                    _ => Op::Done,
+                });
+            }
+            let done = Rc::new(RefCell::new(None));
+            sim.spawn(
+                "worker",
+                ComputeOnce {
+                    ns: 4_000_000,
+                    done_at: Rc::clone(&done),
+                    issued: false,
+                },
+            );
+            sim.call_at(2_000_000, move |sim| sim.signal(gate, 1));
+            sim.run();
+            (sim.take_event_trace(), sim.now_ns(), sim.stats().clone())
+        };
+        let (trace_w, now_w, stats_w) = build(false);
+        let (trace_h, now_h, stats_h) = build(true);
+        assert!(!trace_w.is_empty());
+        assert_eq!(trace_w, trace_h);
+        assert_eq!(now_w, now_h);
+        assert_eq!(stats_w, stats_h);
     }
 
     #[test]

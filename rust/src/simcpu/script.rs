@@ -81,6 +81,11 @@ impl Script {
         self
     }
 
+    pub fn yield_now(mut self) -> Self {
+        self.queue.push_back(Instr::yield_now());
+        self
+    }
+
     pub fn then(mut self, f: impl FnOnce(&mut TaskCtx) -> Vec<Instr> + 'static) -> Self {
         self.queue.push_back(Instr::call(f));
         self

@@ -148,6 +148,77 @@ impl BenchSuite {
     }
 }
 
+/// Outcome of comparing a fresh bench-suite run against a committed
+/// baseline (see `cpuslow bench-check`).
+pub struct BaselineCheck {
+    /// One human-readable line per scenario compared (or skipped).
+    pub lines: Vec<String>,
+    /// Scenarios whose throughput regressed beyond the threshold.
+    pub regressions: Vec<String>,
+}
+
+impl BaselineCheck {
+    pub fn passed(&self) -> bool {
+        self.regressions.is_empty()
+    }
+}
+
+/// Compare two `BenchSuite::to_json` documents. A scenario fails when
+/// its `per_sec` falls more than `max_regression` (a fraction, e.g.
+/// 0.20) below the baseline's. Scenarios present on only one side — new
+/// benches, or a baseline not yet recorded — are reported but never
+/// fail, so the gate can be committed before the first measured run.
+pub fn compare_to_baseline(current: &Json, baseline: &Json, max_regression: f64) -> BaselineCheck {
+    let mut check = BaselineCheck {
+        lines: Vec::new(),
+        regressions: Vec::new(),
+    };
+    let results = |j: &Json| -> Vec<(String, f64)> {
+        j.get("results")
+            .and_then(|r| r.as_arr())
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|e| {
+                let name = e.get("name")?.as_str()?.to_string();
+                let per_sec = e.get("per_sec")?.as_f64()?;
+                Some((name, per_sec))
+            })
+            .collect()
+    };
+    let cur = results(current);
+    let base = results(baseline);
+    if base.is_empty() {
+        check
+            .lines
+            .push("baseline has no per_sec entries — recording run only".to_string());
+    }
+    for (name, cur_ps) in &cur {
+        match base.iter().find(|(n, _)| n == name) {
+            None => check
+                .lines
+                .push(format!("{name}: {cur_ps:.3e}/s (no baseline entry — skipped)")),
+            Some((_, base_ps)) => {
+                let ratio = cur_ps / base_ps;
+                let line = format!(
+                    "{name}: {cur_ps:.3e}/s vs baseline {base_ps:.3e}/s ({ratio:.2}×)"
+                );
+                if ratio < 1.0 - max_regression {
+                    check.regressions.push(line.clone());
+                }
+                check.lines.push(line);
+            }
+        }
+    }
+    for (name, _) in &base {
+        if !cur.iter().any(|(n, _)| n == name) {
+            check
+                .lines
+                .push(format!("{name}: in baseline but missing from current run"));
+        }
+    }
+    check
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -168,6 +239,52 @@ mod tests {
             black_box(vec![0u8; 1024]);
         });
         assert_eq!(r.iters, 12);
+    }
+
+    fn suite_doc(entries: &[(&str, f64)]) -> Json {
+        let mut suite = Json::obj();
+        let results: Vec<Json> = entries
+            .iter()
+            .map(|(name, per_sec)| {
+                let mut e = Json::obj();
+                e.set("name", *name).set("per_sec", *per_sec);
+                e
+            })
+            .collect();
+        suite.set("suite", "x").set("results", Json::Arr(results));
+        suite
+    }
+
+    #[test]
+    fn baseline_check_passes_within_threshold() {
+        let base = suite_doc(&[("a", 100.0), ("b", 50.0)]);
+        let cur = suite_doc(&[("a", 85.0), ("b", 75.0)]); // −15%, +50%
+        let check = compare_to_baseline(&cur, &base, 0.20);
+        assert!(check.passed(), "{:?}", check.regressions);
+        assert_eq!(check.lines.len(), 2);
+    }
+
+    #[test]
+    fn baseline_check_fails_beyond_threshold() {
+        let base = suite_doc(&[("a", 100.0)]);
+        let cur = suite_doc(&[("a", 70.0)]); // −30%
+        let check = compare_to_baseline(&cur, &base, 0.20);
+        assert!(!check.passed());
+        assert_eq!(check.regressions.len(), 1);
+    }
+
+    #[test]
+    fn baseline_check_tolerates_missing_entries() {
+        // empty baseline (first commit) → record-only
+        let base = suite_doc(&[]);
+        let cur = suite_doc(&[("a", 10.0)]);
+        let check = compare_to_baseline(&cur, &base, 0.20);
+        assert!(check.passed());
+        // disjoint names → reported, not failed
+        let base = suite_doc(&[("old", 5.0)]);
+        let check = compare_to_baseline(&cur, &base, 0.20);
+        assert!(check.passed());
+        assert!(check.lines.iter().any(|l| l.contains("missing from current")));
     }
 
     #[test]

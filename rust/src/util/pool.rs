@@ -5,7 +5,9 @@
 //! tokenizer's batch-encode path — mirroring HuggingFace Tokenizers'
 //! Rayon pool that the paper identifies as a contention source), and
 //! exposes queue-depth metrics so the real-execution track can report
-//! host-side backlog.
+//! host-side backlog. `parallel_map` balances skewed batches by having
+//! workers pull small index chunks from a shared atomic cursor while
+//! writing results by input index (output order never changes).
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -83,6 +85,15 @@ impl ThreadPool {
 
     /// Apply `f` to each item, in pool threads, preserving order.
     /// Blocks until every result is ready.
+    ///
+    /// Work is distributed as small chunks pulled from a shared atomic
+    /// cursor rather than one queued job per item: a worker that lands
+    /// on cheap items immediately pulls the next chunk, so batches with
+    /// highly skewed per-item costs (sweeps where scarce-core cells
+    /// dominate) no longer finish ragged behind one overloaded worker.
+    /// Results are written by input index, so output order — and for
+    /// sweeps, the bytes of every table derived from it — is identical
+    /// to the sequential map.
     pub fn parallel_map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
     where
         T: Send + 'static,
@@ -93,34 +104,55 @@ impl ThreadPool {
         if n == 0 {
             return Vec::new();
         }
+        // Small chunks: ≤ 1/16th of a worker's fair share, so stragglers
+        // can be rebalanced; 1 for small batches (every item contended).
+        let chunk = (n / (self.size * 16)).clamp(1, 256);
         let f = Arc::new(f);
-        let results: Arc<Mutex<Vec<Option<R>>>> =
-            Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+        let items: Arc<Vec<Mutex<Option<T>>>> =
+            Arc::new(items.into_iter().map(|t| Mutex::new(Some(t))).collect());
+        let results: Arc<Vec<Mutex<Option<R>>>> =
+            Arc::new((0..n).map(|_| Mutex::new(None)).collect());
+        let cursor = Arc::new(AtomicUsize::new(0));
         let done = Arc::new((Mutex::new(0usize), Condvar::new()));
-        for (i, item) in items.into_iter().enumerate() {
+        let n_jobs = self.size.min(n);
+        for _ in 0..n_jobs {
             let f = Arc::clone(&f);
+            let items = Arc::clone(&items);
             let results = Arc::clone(&results);
+            let cursor = Arc::clone(&cursor);
             let done = Arc::clone(&done);
             self.execute(move || {
-                let r = f(item);
-                results.lock().unwrap()[i] = Some(r);
+                loop {
+                    let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                    if start >= n {
+                        break;
+                    }
+                    let end = (start + chunk).min(n);
+                    for i in start..end {
+                        let item = items[i].lock().unwrap().take().expect("item taken once");
+                        let r = f(item);
+                        *results[i].lock().unwrap() = Some(r);
+                    }
+                }
                 let (lock, cv) = &*done;
                 *lock.lock().unwrap() += 1;
                 cv.notify_all();
             });
         }
+        // Every chunk is claimed by exactly one job, and jobs only exit
+        // once the cursor is exhausted — so all items are done when all
+        // jobs have reported in.
         let (lock, cv) = &*done;
-        let mut count = lock.lock().unwrap();
-        while *count < n {
-            count = cv.wait(count).unwrap();
+        let mut finished = lock.lock().unwrap();
+        while *finished < n_jobs {
+            finished = cv.wait(finished).unwrap();
         }
-        drop(count);
+        drop(finished);
         // NOTE: don't Arc::try_unwrap here — the final worker may still
         // hold its clone for an instant after signaling completion.
-        let mut guard = results.lock().unwrap();
-        guard
-            .iter_mut()
-            .map(|r| r.take().expect("result present"))
+        results
+            .iter()
+            .map(|slot| slot.lock().unwrap().take().expect("result present"))
             .collect()
     }
 
@@ -219,6 +251,30 @@ mod tests {
         let out = pool.parallel_map((0..1000u64).collect(), |x| x * x);
         for (i, v) in out.iter().enumerate() {
             assert_eq!(*v, (i as u64) * (i as u64));
+        }
+    }
+
+    #[test]
+    fn parallel_map_with_skewed_costs_preserves_order() {
+        // A few items are 100× more expensive; the cursor lets idle
+        // workers drain the cheap tail instead of finishing ragged.
+        let pool = ThreadPool::new(4);
+        let out = pool.parallel_map((0..200u64).collect(), |x| {
+            if x % 50 == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            x * 2
+        });
+        assert_eq!(out, (0..200).map(|x| x * 2).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn parallel_map_more_items_than_workers_times_chunk() {
+        // Forces many cursor round-trips per worker.
+        let pool = ThreadPool::new(2);
+        let out = pool.parallel_map((0..10_000u64).collect(), |x| x + 7);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i as u64 + 7);
         }
     }
 

@@ -89,23 +89,28 @@ impl Summary {
 /// Exact percentile estimator that keeps all samples. Our experiment runs
 /// record at most a few hundred thousand points, so exactness is cheap and
 /// avoids digest-approximation arguments in the reproduction.
+///
+/// Sorting is lazy and incremental: the already-sorted prefix is tracked
+/// by length, so each sample is fully sorted exactly once. Queries that
+/// interleave with `add` sort only the new tail and merge it in — the
+/// old boolean `sorted` flag forced a full re-sort of all samples on
+/// every add→query transition.
 #[derive(Debug, Clone, Default)]
 pub struct Percentiles {
     samples: Vec<f64>,
-    sorted: bool,
+    /// `samples[..sorted_len]` is sorted; the rest is the unsorted tail.
+    sorted_len: usize,
+    /// Reusable merge buffer (holds the sorted tail during merges).
+    scratch: Vec<f64>,
 }
 
 impl Percentiles {
     pub fn new() -> Self {
-        Self {
-            samples: Vec::new(),
-            sorted: true,
-        }
+        Self::default()
     }
 
     pub fn add(&mut self, x: f64) {
         self.samples.push(x);
-        self.sorted = false;
     }
 
     pub fn len(&self) -> usize {
@@ -116,11 +121,37 @@ impl Percentiles {
     }
 
     fn ensure_sorted(&mut self) {
-        if !self.sorted {
-            self.samples
-                .sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
-            self.sorted = true;
+        let n = self.samples.len();
+        if self.sorted_len == n {
+            return;
         }
+        let cmp = |a: &f64, b: &f64| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal);
+        if self.sorted_len <= 1 {
+            self.samples.sort_by(cmp);
+        } else {
+            // Sort the tail, then merge the two sorted runs backwards in
+            // place (the tail is parked in the scratch buffer).
+            self.samples[self.sorted_len..].sort_by(cmp);
+            self.scratch.clear();
+            self.scratch.extend_from_slice(&self.samples[self.sorted_len..]);
+            let (samples, scratch) = (&mut self.samples, &self.scratch);
+            let mut i = self.sorted_len; // one past the main run's end
+            let mut j = scratch.len(); // one past the tail run's end
+            let mut k = n;
+            while j > 0 {
+                let take_main =
+                    i > 0 && cmp(&samples[i - 1], &scratch[j - 1]) == std::cmp::Ordering::Greater;
+                if take_main {
+                    samples[k - 1] = samples[i - 1];
+                    i -= 1;
+                } else {
+                    samples[k - 1] = scratch[j - 1];
+                    j -= 1;
+                }
+                k -= 1;
+            }
+        }
+        self.sorted_len = n;
     }
 
     /// Percentile by linear interpolation; q in [0, 100].
@@ -447,6 +478,36 @@ mod tests {
         assert_eq!(p.median(), 30.0);
         assert_eq!(p.pct(25.0), 20.0);
         assert!((p.pct(10.0) - 14.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles_interleaved_add_query() {
+        // The incremental tail-merge path must agree with a full sort no
+        // matter how adds and queries interleave.
+        let data: Vec<f64> = (0..257).map(|i| ((i * 7919) % 997) as f64).collect();
+        let mut p = Percentiles::new();
+        let mut reference: Vec<f64> = Vec::new();
+        for (i, &x) in data.iter().enumerate() {
+            p.add(x);
+            reference.push(x);
+            if i % 13 == 0 || i % 7 == 0 {
+                let mut sorted = reference.clone();
+                sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                assert_eq!(p.median(), {
+                    let n = sorted.len();
+                    if n == 1 {
+                        sorted[0]
+                    } else {
+                        let rank = 0.5 * (n - 1) as f64;
+                        let lo = rank.floor() as usize;
+                        let hi = rank.ceil() as usize;
+                        let frac = rank - lo as f64;
+                        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+                    }
+                });
+                assert_eq!(p.samples(), &sorted[..], "at sample {i}");
+            }
+        }
     }
 
     #[test]

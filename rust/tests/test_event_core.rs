@@ -1,0 +1,255 @@
+//! Golden-trace equivalence for the timing-wheel event core.
+//!
+//! The simulator's dispatch order is part of its contract: golden wait
+//! totals, wake-order parity, and bitwise sweep determinism all depend
+//! on events firing in exact `(time, insertion seq)` order. These tests
+//! replay mixed workloads — spawn / signal / call_at / busy-poll /
+//! block / sleep / yield — on the timing wheel **and** on the retained
+//! pre-wheel reference heap (`Sim::new_with_reference_queue`), then
+//! assert the processed-event traces, final clocks, `SimStats`, and
+//! per-task stats are identical. The heap run *is* the recorded
+//! baseline: it is the exact implementation the wheel replaced.
+
+use cpuslow::simcpu::script::{Instr, Script};
+use cpuslow::simcpu::{Op, Sim, SimParams, TaskCtx, TaskId, TraceEvent};
+use cpuslow::util::rng::Rng;
+
+fn params(cores: usize) -> SimParams {
+    SimParams {
+        cores,
+        context_switch_ns: 2_000,
+        timeslice_ns: 1_000_000,
+        poll_quantum_ns: 1_000,
+        trace_bucket_ns: None,
+    }
+}
+
+/// Everything observable about a finished run.
+struct RunRecord {
+    trace: Vec<TraceEvent>,
+    end_ns: u64,
+    context_switches: u64,
+    events_processed: u64,
+    busy_core_ns: u64,
+    per_task: Vec<(u64, u64, u64, u64, bool)>,
+}
+
+fn record(mut sim: Sim, ids: &[TaskId]) -> RunRecord {
+    let end_ns = sim.run();
+    sim.flush_traces();
+    let per_task = ids
+        .iter()
+        .map(|&id| {
+            let s = sim.task_stats(id);
+            (s.cpu_ns, s.poll_cpu_ns, s.wait_ns, s.switches, s.finished)
+        })
+        .collect();
+    RunRecord {
+        trace: sim.take_event_trace(),
+        end_ns,
+        context_switches: sim.stats().context_switches,
+        events_processed: sim.stats().events_processed,
+        busy_core_ns: sim.stats().busy_core_ns,
+        per_task,
+    }
+}
+
+fn assert_equivalent(wheel: RunRecord, heap: RunRecord, label: &str) {
+    assert!(!wheel.trace.is_empty(), "{label}: empty trace");
+    // Compare the traces event by event so a divergence points at the
+    // first differing (time, kind, a, b) tuple rather than a wall of
+    // output.
+    for (i, (w, h)) in wheel.trace.iter().zip(&heap.trace).enumerate() {
+        assert_eq!(w, h, "{label}: traces diverge at event {i}");
+    }
+    assert_eq!(wheel.trace.len(), heap.trace.len(), "{label}: trace length");
+    assert_eq!(wheel.end_ns, heap.end_ns, "{label}: end time");
+    assert_eq!(
+        wheel.context_switches, heap.context_switches,
+        "{label}: context switches"
+    );
+    assert_eq!(
+        wheel.events_processed, heap.events_processed,
+        "{label}: events processed"
+    );
+    assert_eq!(wheel.busy_core_ns, heap.busy_core_ns, "{label}: busy ns");
+    assert_eq!(wheel.per_task, heap.per_task, "{label}: per-task stats");
+}
+
+/// A seeded workload exercising every op and every deferred effect:
+/// compute/sleep/yield chains, gate blockers with mixed targets,
+/// busy-pollers, program-driven spawns, and program-driven `call_at`
+/// callbacks that signal gates later.
+fn mixed_workload(sim: &mut Sim, seed: u64) -> Vec<TaskId> {
+    sim.enable_event_trace();
+    let mut rng = Rng::new(seed);
+    let gate = sim.new_gate();
+    let late_gate = sim.new_gate();
+    let mut ids = Vec::new();
+    for i in 0..28 {
+        let compute = 200_000 + rng.below(5_000_000);
+        let sleep = 1 + rng.below(2_500_000);
+        let target = 1 + rng.below(40);
+        let script = match i % 5 {
+            0 => Script::new()
+                .compute(compute)
+                .sleep(sleep)
+                .compute(compute / 2),
+            1 => Script::new()
+                .compute(compute / 4)
+                .block(gate, target)
+                .compute(compute),
+            2 => Script::new().busy_poll(gate, target).compute(compute / 3),
+            3 => Script::new()
+                .compute(compute / 8)
+                .then(move |ctx| {
+                    // dynamic continuation: schedule a future signal and
+                    // spawn a child that blocks on it
+                    let t = ctx.now_ns() + 3_000_000;
+                    ctx.call_at(t, move |sim| sim.signal(late_gate, 1));
+                    ctx.spawn(
+                        "child",
+                        Script::new().block(late_gate, 1).compute(100_000),
+                    );
+                    vec![Instr::compute(50_000)]
+                })
+                .sleep(sleep / 2),
+            _ => Script::new()
+                .compute(compute / 6)
+                .yield_now()
+                .block(late_gate, 1)
+                .compute(compute / 5),
+        };
+        ids.push(sim.spawn("mix", script));
+    }
+    // weighted latency-critical task, exercising vruntime divergence
+    ids.push(sim.spawn_weighted(
+        "prio",
+        4,
+        Script::new().compute(2_000_000).sleep(500_000).compute(750_000),
+    ));
+    // enough staggered signals to release every gate waiter
+    for t in 0..50u64 {
+        sim.call_at(t * 400_000, move |sim| sim.signal(gate, 1));
+    }
+    sim.call_at(30_000_000, move |sim| sim.signal(late_gate, 1));
+    ids
+}
+
+#[test]
+fn wheel_trace_matches_heap_baseline() {
+    for seed in [5u64, 77, 4242] {
+        for cores in [1usize, 4] {
+            let mut a = Sim::new(params(cores));
+            let ids_a = mixed_workload(&mut a, seed);
+            let mut b = Sim::new_with_reference_queue(params(cores));
+            let ids_b = mixed_workload(&mut b, seed);
+            assert_eq!(ids_a, ids_b);
+            assert_equivalent(
+                record(a, &ids_a),
+                record(b, &ids_b),
+                &format!("seed {seed}, {cores} cores"),
+            );
+        }
+    }
+}
+
+/// `run_until` boundaries must not perturb the trace: stepping the clock
+/// in small increments (forcing many Beyond-the-limit returns and
+/// cursor parks) yields the same event sequence as one uninterrupted
+/// run, on both queues.
+#[test]
+fn stepped_run_until_is_transparent() {
+    let build = |reference: bool| {
+        let mut sim = if reference {
+            Sim::new_with_reference_queue(params(2))
+        } else {
+            Sim::new(params(2))
+        };
+        let ids = mixed_workload(&mut sim, 99);
+        (sim, ids)
+    };
+    // uninterrupted wheel run as the reference trace
+    let (whole, ids) = build(false);
+    let whole_rec = record(whole, &ids);
+    for reference in [false, true] {
+        let (mut sim, ids) = build(reference);
+        let mut limit = 0u64;
+        while sim.now_ns() < whole_rec.end_ns {
+            limit += 1_700_000; // deliberately not a divisor of anything
+            sim.run_until(limit);
+        }
+        let end = sim.run();
+        sim.flush_traces();
+        assert_eq!(end, whole_rec.end_ns);
+        let rec = RunRecord {
+            trace: sim.take_event_trace(),
+            end_ns: end,
+            context_switches: sim.stats().context_switches,
+            events_processed: sim.stats().events_processed,
+            busy_core_ns: sim.stats().busy_core_ns,
+            per_task: ids
+                .iter()
+                .map(|&id| {
+                    let s = sim.task_stats(id);
+                    (s.cpu_ns, s.poll_cpu_ns, s.wait_ns, s.switches, s.finished)
+                })
+                .collect(),
+        };
+        assert_equivalent(
+            rec,
+            RunRecord {
+                trace: whole_rec.trace.clone(),
+                end_ns: whole_rec.end_ns,
+                context_switches: whole_rec.context_switches,
+                events_processed: whole_rec.events_processed,
+                busy_core_ns: whole_rec.busy_core_ns,
+                per_task: whole_rec.per_task.clone(),
+            },
+            &format!("stepped (reference={reference})"),
+        );
+    }
+}
+
+/// Raw-`Program` (non-Script) state machines driving deferred spawns and
+/// signals mid-dispatch — the re-entrant path through `apply_deferred`.
+#[test]
+fn reentrant_spawn_signal_parity() {
+    let build = |reference: bool| {
+        let mut sim = if reference {
+            Sim::new_with_reference_queue(params(2))
+        } else {
+            Sim::new(params(2))
+        };
+        sim.enable_event_trace();
+        let gate = sim.new_gate();
+        let mut ids = Vec::new();
+        for i in 0..6u64 {
+            let mut state = 0u64;
+            ids.push(sim.spawn("chain", move |ctx: &mut TaskCtx| {
+                state += 1;
+                match state {
+                    1 => Op::Compute { ns: 300_000 + i * 70_000 },
+                    2 => {
+                        // spawn a grandchild and signal from inside step
+                        ctx.spawn("grand", Script::new().compute(90_000));
+                        ctx.signal(gate, 1);
+                        Op::Block { gate, target: 6 }
+                    }
+                    _ => Op::Done,
+                }
+            }));
+        }
+        sim.run();
+        for &id in &ids {
+            assert!(sim.task_finished(id), "task {id} deadlocked");
+        }
+        (sim.take_event_trace(), sim.now_ns(), sim.stats().clone())
+    };
+    let (tw, nw, sw) = build(false);
+    let (th, nh, sh) = build(true);
+    assert!(!tw.is_empty());
+    assert_eq!(tw, th);
+    assert_eq!(nw, nh);
+    assert_eq!(sw, sh);
+}
