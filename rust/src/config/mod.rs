@@ -10,7 +10,7 @@ pub mod system;
 pub mod toml;
 
 pub use model::ModelSpec;
-pub use serve::ServeConfig;
+pub use serve::{ServeConfig, WorkloadConfig};
 pub use system::{Interconnect, SystemSpec};
 
 use anyhow::{bail, Result};
@@ -24,6 +24,7 @@ pub struct RunConfig {
     pub n_gpus: usize,
     pub cpu_cores: usize,
     pub serve: ServeConfig,
+    pub workload: WorkloadConfig,
     pub seed: u64,
 }
 
@@ -35,6 +36,7 @@ impl RunConfig {
             n_gpus,
             cpu_cores,
             serve: ServeConfig::default(),
+            workload: WorkloadConfig::default(),
             seed: 0,
         }
     }
@@ -74,6 +76,7 @@ impl RunConfig {
             );
         }
         self.serve.validate()?;
+        self.workload.validate()?;
         Ok(())
     }
 
@@ -104,6 +107,10 @@ impl RunConfig {
     /// timeout_s = 200.0
     /// max_output_tokens = 32
     /// control_plane_weight = 1
+    /// [workload]
+    /// scenario = "bursty"     # catalog name; see `cpuslow scenarios`
+    /// duration_s = 60.0
+    /// rate_scale = 1.5
     /// ```
     pub fn from_toml_str(text: &str) -> Result<RunConfig> {
         let doc = toml::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
@@ -136,6 +143,12 @@ impl RunConfig {
             doc.int_or("serve", "max_output_tokens", s.max_output_tokens as i64) as usize;
         s.control_plane_weight =
             doc.int_or("serve", "control_plane_weight", s.control_plane_weight as i64) as u32;
+        let w = &mut cfg.workload;
+        w.scenario = doc.str_or("workload", "scenario", "");
+        w.rate_scale = doc.float_or("workload", "rate_scale", w.rate_scale);
+        if let Some(v) = doc.get("workload", "duration_s").and_then(|v| v.as_float()) {
+            w.duration_s = Some(v);
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -216,6 +229,21 @@ control_plane_weight = 4
     fn toml_rejects_invalid() {
         assert!(RunConfig::from_toml_str("[system]\nname = \"tpu\"\n").is_err());
         assert!(RunConfig::from_toml_str("[run]\ngpus = 99\n").is_err());
+        assert!(RunConfig::from_toml_str("[workload]\nrate_scale = -2.0\n").is_err());
+    }
+
+    #[test]
+    fn toml_workload_section() {
+        let cfg = RunConfig::from_toml_str(
+            "[workload]\nscenario = \"bursty\"\nduration_s = 30.0\nrate_scale = 2.0\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.workload.scenario, "bursty");
+        assert_eq!(cfg.workload.duration_s, Some(30.0));
+        assert_eq!(cfg.workload.rate_scale, 2.0);
+        // absent section keeps defaults
+        let cfg = RunConfig::from_toml_str("[run]\ngpus = 4\n").unwrap();
+        assert_eq!(cfg.workload, WorkloadConfig::default());
     }
 
     #[test]

@@ -1,7 +1,49 @@
 //! Serving-engine configuration (the knobs vLLM V1 exposes that matter
-//! for the paper's experiments).
+//! for the paper's experiments), plus the workload-scenario selection
+//! block that run TOML files carry in their `workload` table.
 
 use anyhow::{bail, Result};
+
+/// Scenario-driven workload selection. Carried by
+/// [`RunConfig`](crate::config::RunConfig) and filled from the
+/// `workload` table of a run TOML file; consumed by `cpuslow serve`
+/// and `cpuslow serve-sweep`. The scenario *name* resolves against the
+/// catalog in `crate::workload::scenario` at use time — config stays a
+/// lower layer and never imports the workload module.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadConfig {
+    /// Catalog scenario name; empty string = no scenario selected
+    /// (callers fall back to their plain request stream).
+    pub scenario: String,
+    /// Override the scenario's default generation window (seconds).
+    pub duration_s: Option<f64>,
+    /// Multiplier applied to every class's offered arrival rate.
+    pub rate_scale: f64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        Self {
+            scenario: String::new(),
+            duration_s: None,
+            rate_scale: 1.0,
+        }
+    }
+}
+
+impl WorkloadConfig {
+    pub fn validate(&self) -> Result<()> {
+        if !(self.rate_scale > 0.0 && self.rate_scale.is_finite()) {
+            bail!("workload.rate_scale must be positive and finite");
+        }
+        if let Some(d) = self.duration_s {
+            if !(d > 0.0 && d.is_finite()) {
+                bail!("workload.duration_s must be positive and finite");
+            }
+        }
+        Ok(())
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
@@ -121,5 +163,27 @@ mod tests {
     fn kv_capacity() {
         let cfg = ServeConfig::default();
         assert_eq!(cfg.kv_capacity_tokens(), 16 * 32_768);
+    }
+
+    #[test]
+    fn workload_defaults_valid() {
+        let w = WorkloadConfig::default();
+        w.validate().unwrap();
+        assert!(w.scenario.is_empty());
+        assert_eq!(w.rate_scale, 1.0);
+    }
+
+    #[test]
+    fn workload_rejects_bad_values() {
+        let w = WorkloadConfig {
+            rate_scale: 0.0,
+            ..Default::default()
+        };
+        assert!(w.validate().is_err());
+        let w = WorkloadConfig {
+            duration_s: Some(-1.0),
+            ..Default::default()
+        };
+        assert!(w.validate().is_err());
     }
 }

@@ -10,6 +10,12 @@
 //! device stream ([`crate::gpu::device`]) whose per-step collective has
 //! barrier semantics. Every one of those tasks contends for the same
 //! simulated cores — reproducing the paper's compounded contention.
+//!
+//! Load enters through [`ServingSim::submit_with_seed`]: the
+//! attacker/victim harness and the scenario engine
+//! ([`crate::workload::scenario`]) both drive it, and
+//! [`ServingSim::gpu_idle_share`] summarizes the starvation signal the
+//! serve-sweep grids report per cell.
 
 pub mod kv_cache;
 pub mod prefix_cache;
@@ -303,6 +309,19 @@ impl ServingSim {
     pub fn gpu_utilization(&mut self) -> Vec<f64> {
         self.env.fleet.borrow_mut().flush(self.sim.now_ns());
         self.env.fleet.borrow().fleet_utilization()
+    }
+
+    /// Share of the run the GPU fleet sat idle: 1 − mean utilization
+    /// over the trace buckets. The paper ties this directly to CPU
+    /// starvation (§V-A: launch delays leave the devices waiting), so
+    /// the scenario sweeps report it per grid cell.
+    pub fn gpu_idle_share(&mut self) -> f64 {
+        let util = self.gpu_utilization();
+        if util.is_empty() {
+            return 1.0;
+        }
+        let sum: f64 = util.iter().map(|v| if v.is_finite() { *v } else { 0.0 }).sum();
+        (1.0 - sum / util.len() as f64).clamp(0.0, 1.0)
     }
 
     pub fn sim_stats(&self) -> &crate::simcpu::SimStats {

@@ -6,13 +6,66 @@
 //! because chunked prefill keeps prefill near-linear in SL. Also
 //! reproduces the §IV-A side note: at 5–8 cores tokenization latency
 //! rises ~5% and TTFT ~10% vs 16 cores.
+//!
+//! The cores × batch × SL grid runs as a flat cell list on the sweep
+//! executor (`--jobs`); rows keep the original serial nesting order
+//! (cores outer, then batch, then SL).
 
 use super::out_dir;
 use crate::config::{ModelSpec, RunConfig, SystemSpec};
 use crate::report::{self, Table};
+use crate::sweep::Sweep;
 use crate::util::cli::Args;
 use crate::util::json::Json;
 use crate::workload::run_batch;
+
+/// One grid cell: a self-contained (system, model, gpus, cores, batch,
+/// SL) simulation spec.
+#[derive(Debug, Clone)]
+struct CellSpec {
+    system: SystemSpec,
+    model: ModelSpec,
+    n_gpus: usize,
+    cores: usize,
+    batch: usize,
+    sl: u64,
+}
+
+/// Mean tokenize/TTFT latencies over the cell's completed requests
+/// (`None` when nothing finished inside the horizon).
+#[derive(Debug, Clone)]
+struct CellResult {
+    cores: usize,
+    batch: usize,
+    sl: u64,
+    tokenize_s: Option<f64>,
+    ttft_s: Option<f64>,
+}
+
+fn run_cell(cell: CellSpec) -> CellResult {
+    let cfg = RunConfig::new(cell.system, cell.model, cell.n_gpus, cell.cores);
+    let outcomes = run_batch(cfg, cell.batch, cell.sl, 1, 3_000.0);
+    let (mut tok_sum, mut ttft_sum, mut n) = (0.0, 0.0, 0);
+    for o in &outcomes {
+        if let (Some(tok), Some(ttft)) = (o.tokenize_latency_ns, o.ttft_ns) {
+            tok_sum += tok as f64 / 1e9;
+            ttft_sum += ttft as f64 / 1e9;
+            n += 1;
+        }
+    }
+    let (tokenize_s, ttft_s) = if n == 0 {
+        (None, None)
+    } else {
+        (Some(tok_sum / n as f64), Some(ttft_sum / n as f64))
+    };
+    CellResult {
+        cores: cell.cores,
+        batch: cell.batch,
+        sl: cell.sl,
+        tokenize_s,
+        ttft_s,
+    }
+}
 
 pub fn run(args: &Args) {
     let quick = args.flag("quick");
@@ -30,47 +83,49 @@ pub fn run(args: &Args) {
         .map(|v| v.into_iter().map(|c| c as usize).collect())
         .unwrap_or_else(|| vec![16]);
 
+    // Flatten the cores × batch × SL grid in table order and fan it out.
+    let mut specs = Vec::new();
+    for &cores in &core_list {
+        for &batch in &batches {
+            for &sl in &sls {
+                specs.push(CellSpec {
+                    system: system.clone(),
+                    model: model.clone(),
+                    n_gpus,
+                    cores,
+                    batch,
+                    sl,
+                });
+            }
+        }
+    }
+    let results = Sweep::from_args("fig5", args).run(specs, run_cell);
+
     let mut t = Table::new(&[
         "cores", "batch", "SL", "tokenize (s)", "TTFT (s)", "tokenize/TTFT",
     ])
     .with_title("Figure 5: tokenization share of TTFT (Llama-3.1-8B, 4×H200)");
     let mut data = Vec::new();
-    for &cores in &core_list {
-        for &batch in &batches {
-            for &sl in &sls {
-                let cfg = RunConfig::new(system.clone(), model.clone(), n_gpus, cores);
-                let outcomes = run_batch(cfg, batch, sl, 1, 3_000.0);
-                let (mut tok_sum, mut ttft_sum, mut n) = (0.0, 0.0, 0);
-                for o in &outcomes {
-                    if let (Some(tok), Some(ttft)) = (o.tokenize_latency_ns, o.ttft_ns) {
-                        tok_sum += tok as f64 / 1e9;
-                        ttft_sum += ttft as f64 / 1e9;
-                        n += 1;
-                    }
-                }
-                if n == 0 {
-                    continue;
-                }
-                let tok = tok_sum / n as f64;
-                let ttft = ttft_sum / n as f64;
-                t.row(vec![
-                    cores.to_string(),
-                    batch.to_string(),
-                    sl.to_string(),
-                    format!("{tok:.3}"),
-                    format!("{ttft:.3}"),
-                    format!("{:.1}%", 100.0 * tok / ttft),
-                ]);
-                let mut j = Json::obj();
-                j.set("cores", cores)
-                    .set("batch", batch)
-                    .set("sl", sl)
-                    .set("tokenize_s", tok)
-                    .set("ttft_s", ttft)
-                    .set("fraction", tok / ttft);
-                data.push(j);
-            }
-        }
+    for r in &results {
+        let (Some(tok), Some(ttft)) = (r.tokenize_s, r.ttft_s) else {
+            continue;
+        };
+        t.row(vec![
+            r.cores.to_string(),
+            r.batch.to_string(),
+            r.sl.to_string(),
+            format!("{tok:.3}"),
+            format!("{ttft:.3}"),
+            format!("{:.1}%", 100.0 * tok / ttft),
+        ]);
+        let mut j = Json::obj();
+        j.set("cores", r.cores)
+            .set("batch", r.batch)
+            .set("sl", r.sl)
+            .set("tokenize_s", tok)
+            .set("ttft_s", ttft)
+            .set("fraction", tok / ttft);
+        data.push(j);
     }
     print!("{}", t.render());
     let dir = out_dir(args);

@@ -2,13 +2,48 @@
 //! load (8 & 16 RPS, 114k-token attackers, TP=4 Llama on Blackwell).
 //! As attackers accumulate in the engine, each subsequent victim's TTFT
 //! grows; larger CPU allocations flatten the curve; ✗ = timeout.
+//!
+//! The RPS × cores grid runs as a flat cell list on the sweep executor
+//! (`--jobs`); each cell is self-contained (baseline + attacked run)
+//! and rows keep the original serial order (RPS outer, cores inner).
 
 use super::out_dir;
 use crate::config::{ModelSpec, RunConfig, SystemSpec};
-use crate::report::{self, Table};
+use crate::report::{self, secs_label, Table};
+use crate::sweep::Sweep;
 use crate::util::cli::Args;
 use crate::util::json::Json;
 use crate::workload::{run_attacker_victim, run_baseline, AvSpec};
+
+/// One grid cell: a (system, model, gpus, rps, cores) attack run.
+#[derive(Debug, Clone)]
+struct CellSpec {
+    system: SystemSpec,
+    model: ModelSpec,
+    n_gpus: usize,
+    cores: usize,
+    spec: AvSpec,
+}
+
+#[derive(Debug, Clone)]
+struct CellResult {
+    rps: f64,
+    cores: usize,
+    baseline_s: Option<f64>,
+    victim_ttft_s: Vec<Option<f64>>,
+}
+
+fn run_cell(cell: CellSpec) -> CellResult {
+    let cfg = RunConfig::new(cell.system, cell.model, cell.n_gpus, cell.cores);
+    let baseline = run_baseline(cfg.clone(), &cell.spec);
+    let r = run_attacker_victim(cfg, &cell.spec);
+    CellResult {
+        rps: cell.spec.rps,
+        cores: cell.cores,
+        baseline_s: baseline,
+        victim_ttft_s: r.victim_ttft_s,
+    }
+}
 
 pub fn run(args: &Args) {
     let quick = args.flag("quick");
@@ -30,6 +65,21 @@ pub fn run(args: &Args) {
         ..AvSpec::default()
     };
 
+    // Flatten the RPS × cores grid in table order and fan it out.
+    let mut specs = Vec::new();
+    for &rps in &rps_list {
+        for &cores in &core_levels {
+            specs.push(CellSpec {
+                system: system.clone(),
+                model: model.clone(),
+                n_gpus,
+                cores,
+                spec: AvSpec { rps, ..spec_base.clone() },
+            });
+        }
+    }
+    let results = Sweep::from_args("fig8", args).run(specs, run_cell);
+
     let mut header = vec!["RPS".to_string(), "cores".to_string(), "baseline".to_string()];
     for i in 0..n_victims {
         header.push(format!("victim {}", i + 1));
@@ -38,33 +88,27 @@ pub fn run(args: &Args) {
     let mut t = Table::new(&header_refs)
         .with_title("Figure 8: sequential victim TTFT (s) under attack, 114k attackers");
     let mut data = Vec::new();
-    for &rps in &rps_list {
-        for &cores in &core_levels {
-            let cfg = RunConfig::new(system.clone(), model.clone(), n_gpus, cores);
-            let spec = AvSpec { rps, ..spec_base.clone() };
-            let baseline = run_baseline(cfg.clone(), &spec);
-            let r = run_attacker_victim(cfg, &spec);
-            let mut row = vec![
-                format!("{rps:.0}"),
-                cores.to_string(),
-                baseline.map(|s| format!("{s:.2}")).unwrap_or("-".into()),
-            ];
-            for v in &r.victim_ttft_s {
-                row.push(v.map(|s| format!("{s:.2}")).unwrap_or("✗".into()));
-            }
-            t.row(row);
-            let mut j = Json::obj();
-            j.set("rps", rps).set("cores", cores).set(
-                "victims",
-                Json::Arr(
-                    r.victim_ttft_s
-                        .iter()
-                        .map(|v| v.map(Json::Num).unwrap_or(Json::Null))
-                        .collect(),
-                ),
-            );
-            data.push(j);
+    for r in &results {
+        let mut row = vec![
+            format!("{:.0}", r.rps),
+            r.cores.to_string(),
+            r.baseline_s.map(|s| format!("{s:.2}")).unwrap_or("-".into()),
+        ];
+        for v in &r.victim_ttft_s {
+            row.push(secs_label(*v));
         }
+        t.row(row);
+        let mut j = Json::obj();
+        j.set("rps", r.rps).set("cores", r.cores).set(
+            "victims",
+            Json::Arr(
+                r.victim_ttft_s
+                    .iter()
+                    .map(|v| v.map(Json::Num).unwrap_or(Json::Null))
+                    .collect(),
+            ),
+        );
+        data.push(j);
     }
     print!("{}", t.render());
     let dir = out_dir(args);

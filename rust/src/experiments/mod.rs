@@ -10,6 +10,7 @@ pub mod fig34;
 pub mod fig5;
 pub mod fig7;
 pub mod fig8;
+pub mod serve_sweep;
 pub mod util_traces;
 
 use crate::config::{ModelSpec, RunConfig, SystemSpec};
@@ -117,6 +118,10 @@ pub fn print_systems() {
 }
 
 /// `cpuslow serve` — one simulated serving run with explicit knobs.
+///
+/// With `--scenario NAME` (or a config file whose `workload` table
+/// names one), the request stream comes from the scenario catalog and
+/// the report is per-class; otherwise a plain uniform stream runs.
 pub fn serve_once(args: &Args) {
     use crate::engine::{ReqClass, ServingSim};
     let n_requests = args.usize_or("requests", 8);
@@ -132,6 +137,14 @@ pub fn serve_once(args: &Args) {
         let cores = args.usize_or("cores-single", 16);
         RunConfig::new(system, model, n_gpus, cores)
     };
+    let scenario_name = args
+        .get("scenario")
+        .map(str::to_string)
+        .or_else(|| (!cfg.workload.scenario.is_empty()).then(|| cfg.workload.scenario.clone()));
+    if let Some(name) = scenario_name {
+        serve_scenario(cfg, &name, args);
+        return;
+    }
     let mut sim = ServingSim::new(cfg);
     let interval = (1e9 / rps) as u64;
     let ids: Vec<_> = (0..n_requests)
@@ -156,6 +169,45 @@ pub fn serve_once(args: &Args) {
     }
     print!("{}", t.render());
     println!("engine steps: {}", sim.steps_completed());
+}
+
+/// Scenario-driven `cpuslow serve`: generate the named catalog scenario
+/// (honoring the config's workload overrides) and print the per-class
+/// serving report.
+fn serve_scenario(cfg: RunConfig, name: &str, args: &Args) {
+    use crate::report::{percent_label, secs_label};
+    use crate::workload::scenario::{resolve_cli_scenario, run_scenario};
+    let scenario = resolve_cli_scenario(name, &cfg.workload, args, args.flag("quick"));
+    let seed = args.u64_or("seed", cfg.seed);
+    let report = run_scenario(cfg, &scenario, seed);
+    let mut t = Table::new(&[
+        "class",
+        "SLO (s)",
+        "requests",
+        "timeouts",
+        "TTFT p50 (s)",
+        "TTFT p99 (s)",
+    ])
+    .with_title(format!("Scenario '{}' (seed {seed})", scenario.name))
+    .align(0, crate::report::table::Align::Left);
+    for c in &report.per_class {
+        t.row(vec![
+            c.name.clone(),
+            format!("{:.0}", c.slo_ttft_s),
+            c.issued.to_string(),
+            c.timeouts.to_string(),
+            secs_label(c.ttft_p50_s),
+            secs_label(c.ttft_p99_s),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "total: {} requests, timeout rate {}, GPU idle {}, engine steps {}",
+        report.issued,
+        percent_label(report.timeout_rate()),
+        percent_label(report.gpu_idle_share),
+        report.steps_completed
+    );
 }
 
 /// `cpuslow calibrate` — real tokenizer throughput on this host.

@@ -1,0 +1,270 @@
+//! `cpuslow serve-sweep` — the scenario-diverse serving grid.
+//!
+//! Fans a (scenario × CPU-cores × TP-degree) grid across the sweep
+//! executor and reports, per cell, the serving metrics the paper's
+//! headline table tracks: on-time TTFT p50/p99, the timeout rate, and
+//! the GPU-idle share that signals CPU starvation (§V-A). Cells are
+//! pure functions of their spec plus a per-index seed from
+//! `sweep::seeded_cells`, so output is byte-identical for every
+//! `--jobs` value and every worker schedule.
+
+use super::out_dir;
+use crate::config::{ModelSpec, RunConfig, ServeConfig, SystemSpec, WorkloadConfig};
+use crate::report::{self, percent_label, secs_label, Table};
+use crate::sweep::{seeded_cells, SeededCell, Sweep};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::workload::scenario::{resolve_cli_scenario, run_scenario, timeout_fraction, Scenario};
+
+/// Inputs of one grid cell (self-contained: the cell builds its own
+/// `ServingSim` and trace from this spec plus its sweep seed).
+#[derive(Debug, Clone)]
+pub struct CellSpec {
+    pub scenario: Scenario,
+    pub system: SystemSpec,
+    pub model: ModelSpec,
+    pub serve: ServeConfig,
+    pub n_gpus: usize,
+    pub cores: usize,
+}
+
+/// One grid cell's serving summary.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    pub scenario: String,
+    pub n_gpus: usize,
+    pub cores: usize,
+    pub issued: usize,
+    pub timeouts: usize,
+    pub ttft_p50_s: Option<f64>,
+    pub ttft_p99_s: Option<f64>,
+    pub gpu_idle_share: f64,
+}
+
+impl CellResult {
+    pub fn timeout_rate(&self) -> f64 {
+        timeout_fraction(self.timeouts, self.issued)
+    }
+}
+
+/// Build the flat cell list in render order: scenario outer, then TP
+/// degree, then cores. `cores_override` (from `--cores`) replaces the
+/// per-GPU-count paper levels.
+pub fn grid(
+    scenarios: &[Scenario],
+    system: &SystemSpec,
+    model: &ModelSpec,
+    serve: &ServeConfig,
+    gpus_list: &[usize],
+    cores_override: Option<&[usize]>,
+) -> Vec<CellSpec> {
+    let mut cells = Vec::new();
+    for scenario in scenarios {
+        for &n_gpus in gpus_list {
+            let core_levels: Vec<usize> = match cores_override {
+                Some(cores) => cores.to_vec(),
+                None => RunConfig::paper_core_levels(n_gpus),
+            };
+            for &cores in &core_levels {
+                cells.push(CellSpec {
+                    scenario: scenario.clone(),
+                    system: system.clone(),
+                    model: model.clone(),
+                    serve: serve.clone(),
+                    n_gpus,
+                    cores,
+                });
+            }
+        }
+    }
+    cells
+}
+
+/// Run one seeded grid cell.
+pub fn run_cell(cell: SeededCell<CellSpec>) -> CellResult {
+    let spec = cell.input;
+    let mut cfg = RunConfig::new(spec.system, spec.model, spec.n_gpus, spec.cores);
+    cfg.serve = spec.serve;
+    let report = run_scenario(cfg, &spec.scenario, cell.seed);
+    CellResult {
+        scenario: spec.scenario.name,
+        n_gpus: spec.n_gpus,
+        cores: spec.cores,
+        issued: report.issued,
+        timeouts: report.timeouts,
+        ttft_p50_s: report.ttft_p50_s,
+        ttft_p99_s: report.ttft_p99_s,
+        gpu_idle_share: report.gpu_idle_share,
+    }
+}
+
+pub fn render_cells(title: &str, cells: &[CellResult]) -> Table {
+    let mut t = Table::new(&[
+        "scenario",
+        "GPUs",
+        "cores",
+        "requests",
+        "TTFT p50 (s)",
+        "TTFT p99 (s)",
+        "timeout rate",
+        "GPU idle",
+    ])
+    .with_title(title.to_string())
+    .align(0, crate::report::table::Align::Left);
+    for c in cells {
+        t.row(vec![
+            c.scenario.clone(),
+            c.n_gpus.to_string(),
+            c.cores.to_string(),
+            c.issued.to_string(),
+            secs_label(c.ttft_p50_s),
+            secs_label(c.ttft_p99_s),
+            percent_label(c.timeout_rate()),
+            percent_label(c.gpu_idle_share),
+        ]);
+    }
+    t
+}
+
+pub fn cells_to_json(cells: &[CellResult]) -> Json {
+    Json::Arr(
+        cells
+            .iter()
+            .map(|c| {
+                let mut j = Json::obj();
+                j.set("scenario", c.scenario.as_str())
+                    .set("gpus", c.n_gpus)
+                    .set("cores", c.cores)
+                    .set("issued", c.issued)
+                    .set("timeouts", c.timeouts)
+                    .set("timeout_rate", c.timeout_rate())
+                    .set(
+                        "ttft_p50_s",
+                        c.ttft_p50_s.map(Json::Num).unwrap_or(Json::Null),
+                    )
+                    .set(
+                        "ttft_p99_s",
+                        c.ttft_p99_s.map(Json::Num).unwrap_or(Json::Null),
+                    )
+                    .set("gpu_idle_share", c.gpu_idle_share);
+                j
+            })
+            .collect(),
+    )
+}
+
+/// Resolve the scenario list: `--scenarios a,b,c` wins, then a
+/// non-empty `workload.scenario` from `--config`, then the whole
+/// catalog. Rate-scale and duration apply with CLI-over-config
+/// precedence (`Scenario::with_overrides`); `--quick` shrinks the
+/// window to 10 s only when neither the CLI nor the config sets a
+/// duration explicitly.
+fn resolve_scenarios(args: &Args, workload: &WorkloadConfig, quick: bool) -> Vec<Scenario> {
+    let names = args.str_list("scenarios").unwrap_or_else(|| {
+        if workload.scenario.is_empty() {
+            Scenario::catalog_names()
+        } else {
+            vec![workload.scenario.clone()]
+        }
+    });
+    names
+        .iter()
+        .map(|name| resolve_cli_scenario(name, workload, args, quick))
+        .collect()
+}
+
+/// `cpuslow serve-sweep` entry point. With `--config`, the file's
+/// system, model, serve, workload, and seed settings become the
+/// defaults; explicit flags still win, and the cores axis always
+/// defaults to the paper's per-GPU-count provisioning levels.
+pub fn run(args: &Args) {
+    let quick = args.flag("quick");
+    let config_file = args.get("config").map(|path| {
+        RunConfig::from_toml_file(std::path::Path::new(path)).expect("config file")
+    });
+    let workload = config_file
+        .as_ref()
+        .map(|c| c.workload.clone())
+        .unwrap_or_default();
+    let system = match args.get("system") {
+        Some(name) => SystemSpec::by_name(name).expect("unknown system"),
+        None => config_file
+            .as_ref()
+            .map(|c| c.system.clone())
+            .unwrap_or_else(SystemSpec::blackwell),
+    };
+    let model = match args.get("model") {
+        Some(name) => ModelSpec::by_name(name).expect("unknown model"),
+        None => config_file
+            .as_ref()
+            .map(|c| c.model.clone())
+            .unwrap_or_else(ModelSpec::llama31_8b),
+    };
+    let serve = config_file
+        .as_ref()
+        .map(|c| c.serve.clone())
+        .unwrap_or_default();
+    let scenarios = resolve_scenarios(args, &workload, quick);
+    let gpus_list: Vec<usize> = args
+        .u64_list("gpus")
+        .map(|v| v.into_iter().map(|g| g as usize).collect())
+        .or_else(|| config_file.as_ref().map(|c| vec![c.n_gpus]))
+        .unwrap_or_else(|| if quick { vec![4] } else { vec![4, 8] });
+    let cores_override: Option<Vec<usize>> = args
+        .u64_list("cores")
+        .map(|v| v.into_iter().map(|c| c as usize).collect());
+    let specs = grid(
+        &scenarios,
+        &system,
+        &model,
+        &serve,
+        &gpus_list,
+        cores_override.as_deref(),
+    );
+    let base_seed = args.u64_or("seed", config_file.as_ref().map_or(0, |c| c.seed));
+    let seeded = seeded_cells(base_seed, specs);
+    let results = Sweep::from_args("serve-sweep", args).run(seeded, run_cell);
+
+    let t = render_cells(
+        &format!("Serving sweep: scenario × cores × TP ({})", system.name),
+        &results,
+    );
+    print!("{}", t.render());
+    let dir = out_dir(args);
+    let json_path =
+        report::write_json(&dir, "serve_sweep", &cells_to_json(&results)).expect("write json");
+    let csv_rows: Vec<Vec<String>> = t.rows().to_vec();
+    let header: Vec<&str> = t.header().iter().map(|h| h.as_str()).collect();
+    let csv_path =
+        report::write_csv(&dir, "serve_sweep", &header, &csv_rows).expect("write csv");
+    println!("data → {} / {}", json_path.display(), csv_path.display());
+}
+
+/// `cpuslow scenarios` — print the catalog as a table (the README's
+/// scenario-catalog table regenerates from this).
+pub fn print_catalog() {
+    let mut t = Table::new(&["name", "class", "arrivals", "prompt/output", "SLO (s)", "probes"])
+        .with_title("Workload scenario catalog")
+        .align(0, crate::report::table::Align::Left)
+        .align(1, crate::report::table::Align::Left)
+        .align(2, crate::report::table::Align::Left)
+        .align(3, crate::report::table::Align::Left)
+        .align(5, crate::report::table::Align::Left);
+    for s in Scenario::catalog() {
+        for (i, c) in s.classes.iter().enumerate() {
+            t.row(vec![
+                if i == 0 { s.name.clone() } else { String::new() },
+                c.name.clone(),
+                c.arrivals.label(),
+                c.lengths.label(),
+                format!("{:.0}", c.slo_ttft_s),
+                if i == 0 {
+                    s.paper_section.clone()
+                } else {
+                    String::new()
+                },
+            ]);
+        }
+    }
+    print!("{}", t.render());
+}

@@ -14,6 +14,8 @@ fn main() {
             ("systems", "print the Table I system matrix"),
             ("experiment <id>", "regenerate a paper figure (fig3 fig4 fig5 fig7 fig8 fig9 fig10 fig11 fig12 fig13 cost ablations headline)"),
             ("serve", "run the simulated serving stack once and report outcomes"),
+            ("serve-sweep", "scenario × cores × TP grid: TTFT p50/p99, timeout rate, GPU idle"),
+            ("scenarios", "print the workload scenario catalog"),
             ("calibrate", "measure real Rust-BPE tokenizer throughput on this host"),
             ("bench-check <current.json>", "compare a BENCH_*.json against a committed baseline; exits 1 on regression"),
             ("list", "list available experiments"),
@@ -24,10 +26,15 @@ fn main() {
             ("--quick", "reduced sweep for smoke runs"),
             ("--system S", "system preset: h100 | h200 | blackwell"),
             ("--model M", "model preset: llama8b | qwen14b | tiny"),
-            ("--gpus N", "number of GPUs"),
+            ("--gpus N", "number of GPUs (serve-sweep: comma list of TP degrees)"),
             ("--cores LIST", "CPU core counts, e.g. 5,8,16,32"),
             ("--jobs N", "sweep cells run on N threads (default: all cores; 1 = serial)"),
             ("--no-progress", "suppress the stderr sweep progress line"),
+            ("--config PATH", "serve / serve-sweep: run TOML (system, serve, workload tables)"),
+            ("--scenario NAME", "serve: drive a catalog scenario instead of a uniform stream"),
+            ("--scenarios LIST", "serve-sweep: catalog subset, e.g. steady,bursty"),
+            ("--rate-scale F", "scenario runs: multiply every class arrival rate by F"),
+            ("--duration S", "scenario runs: override the generation window (seconds)"),
             ("--baseline PATH", "bench-check: baseline JSON (default: <current>.baseline.json)"),
             ("--max-regression F", "bench-check: allowed per_sec drop as a fraction (default 0.20)"),
         ],
@@ -40,6 +47,8 @@ fn main() {
         }
         Some("list") => cpuslow::experiments::list(),
         Some("serve") => cpuslow::experiments::serve_once(&args),
+        Some("serve-sweep") => cpuslow::experiments::serve_sweep::run(&args),
+        Some("scenarios") => cpuslow::experiments::serve_sweep::print_catalog(),
         Some("calibrate") => cpuslow::experiments::calibrate_cmd(&args),
         Some("bench-check") => bench_check(&args),
         _ => print!("{}", usage.render()),

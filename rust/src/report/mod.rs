@@ -1,6 +1,13 @@
 //! Report rendering: ASCII tables, CSV, sparkline-style traces, and
-//! figure data dumps. Every experiment prints via this module so the
-//! tables in EXPERIMENTS.md regenerate byte-identically.
+//! figure data dumps.
+//!
+//! Every experiment prints via this module so tables regenerate
+//! byte-identically — which is what lets the sweep determinism tests
+//! compare whole rendered reports across `--jobs` values. Label helpers
+//! ([`speedup_label`], [`percent_label`]) keep formatting uniform
+//! between the figure harnesses and the serve-sweep grid; `write_json`
+//! and `write_csv` are the only paths experiments use to emit data
+//! files.
 
 pub mod table;
 
@@ -81,6 +88,22 @@ pub fn speedup_label(speedup: f64) -> String {
     }
 }
 
+/// Render a fraction in `0..=1` as a percentage label ("12.5%"); NaN
+/// renders as "-". Used for timeout rates and GPU-idle shares.
+pub fn percent_label(fraction: f64) -> String {
+    if fraction.is_nan() {
+        "-".to_string()
+    } else {
+        format!("{:.1}%", 100.0 * fraction)
+    }
+}
+
+/// Render an optional seconds value ("3.25"); `None` renders as the
+/// timeout marker "✗" used across the serving tables.
+pub fn secs_label(secs: Option<f64>) -> String {
+    secs.map(|s| format!("{s:.2}")).unwrap_or_else(|| "✗".into())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -111,6 +134,20 @@ mod tests {
         assert_eq!(speedup_label(2.41), "2.41×");
         assert_eq!(speedup_label(f64::INFINITY), "∞");
         assert_eq!(speedup_label(f64::NAN), "-");
+    }
+
+    #[test]
+    fn percent_labels() {
+        assert_eq!(percent_label(0.125), "12.5%");
+        assert_eq!(percent_label(0.0), "0.0%");
+        assert_eq!(percent_label(1.0), "100.0%");
+        assert_eq!(percent_label(f64::NAN), "-");
+    }
+
+    #[test]
+    fn secs_labels() {
+        assert_eq!(secs_label(Some(3.254)), "3.25");
+        assert_eq!(secs_label(None), "✗");
     }
 
     #[test]

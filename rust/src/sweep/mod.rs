@@ -11,9 +11,11 @@
 //!   byte-identical between `--jobs 1` and `--jobs N`.
 //! * **Deterministic seeding** — for sweeps that need randomness,
 //!   [`seeded_cells`] derives a per-cell seed from (base seed, cell
-//!   index) via SplitMix64, never from the execution schedule. (The
-//!   current figure grids draw no randomness — every cell is already a
-//!   pure function of its spec — so none of them consume seeds yet.)
+//!   index) via SplitMix64, never from the execution schedule. The
+//!   serve-sweep scenario grid consumes these: each cell expands its
+//!   scenario into a trace from its per-index seed, so randomized
+//!   workloads stay byte-identical across `--jobs` values. (The paper
+//!   figure grids remain pure functions of their specs.)
 //! * **Progress** — a single `\r`-rewritten progress line on *stderr*
 //!   (stdout is reserved for the figure tables).
 //!

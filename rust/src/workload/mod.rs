@@ -1,16 +1,49 @@
-//! Workload generation and the attacker/victim measurement harness
-//! (§IV-B "Evaluation methodology").
+//! Workload generation: the attacker/victim measurement harness of the
+//! paper (§IV-B "Evaluation methodology") plus the composable scenario
+//! engine that generalizes it.
 //!
-//! Attackers are periodic background requests at a fixed RPS with long
-//! prompts; the victim is a single measured request (2.8k tokens in the
-//! paper). Victims are issued *sequentially* — victim i+1 is submitted
-//! once victim i produces its first token (or times out) — which is why
-//! Figure 8 shows a growing trend as attacker backlog accumulates.
+//! The module is organized in three layers:
+//!
+//! * **Primitives** (`poisson`) — arrival processes implementing
+//!   [`ArrivalProcess`]: periodic, Poisson, two-state MMPP bursts, and
+//!   explicit trace replay.
+//! * **Scenarios** (`scenario`) — declarative, seedable workload specs:
+//!   per-class arrival process + prompt/output [`LengthMix`] + TTFT SLO,
+//!   a shipped catalog (steady, bursty, heavy-tail, multi-tenant,
+//!   attack), deterministic JSON traces, and the Track-S driver that
+//!   turns a trace into per-class TTFT/timeout/GPU-idle reports.
+//! * **Attacker/victim harness** (this file) — the paper's original
+//!   methodology: periodic attackers with long identical prompts and
+//!   sequentially issued victims. Victim i+1 is submitted once victim i
+//!   produces its first token (or times out), which is why Figure 8
+//!   shows a growing trend as attacker backlog accumulates.
 
 pub mod poisson;
+pub mod scenario;
+
+pub use poisson::{Mmpp, Periodic, Poisson, TraceArrivals};
+pub use scenario::{
+    run_scenario, run_trace, ArrivalSpec, ClassSpec, LenDist, LengthSpec, Scenario,
+    ScenarioReport, Trace,
+};
 
 use crate::config::RunConfig;
 use crate::engine::{Outcome, ReqClass, RequestId, ServingSim};
+
+/// A (possibly finite) stream of monotonically nondecreasing arrival
+/// times in virtual nanoseconds. `None` means the process is exhausted
+/// (only trace replay ever is; the generative processes are unbounded
+/// and callers clip them against a horizon).
+pub trait ArrivalProcess {
+    fn next_arrival_ns(&mut self) -> Option<u64>;
+}
+
+/// Samples per-request (prompt tokens, output tokens) pairs. Seeded
+/// implementations must be deterministic: the same construction yields
+/// the same sequence.
+pub trait LengthMix {
+    fn sample_lengths(&mut self) -> (u64, u64);
+}
 
 /// Parameters of one attacker/victim experiment cell.
 #[derive(Debug, Clone)]

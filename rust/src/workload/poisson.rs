@@ -1,16 +1,18 @@
-//! Poisson and trace-based arrival processes (the serving examples and
-//! Track R use these; the paper's attacker stream is periodic, which is
-//! a special case).
+//! Arrival-process primitives behind the scenario engine.
+//!
+//! Every process implements [`ArrivalProcess`](super::ArrivalProcess)
+//! and is deterministic given its seed. The paper's attacker stream is
+//! the periodic special case; Poisson models steady serving traffic;
+//! the two-state MMPP produces the bursty load shapes that stress the
+//! control plane hardest (related work: large-batch and SLO-constrained
+//! regimes shift the bottleneck picture); trace replay re-issues an
+//! explicit, recorded arrival sequence byte-for-byte.
 
+use super::ArrivalProcess;
 use crate::util::rng::Rng;
 
-/// Arrival process abstraction: yields monotonically increasing arrival
-/// times in nanoseconds.
-pub trait Arrivals {
-    fn next_arrival_ns(&mut self) -> u64;
-}
-
 /// Fixed-rate periodic arrivals (the paper's attacker stream).
+#[derive(Debug, Clone)]
 pub struct Periodic {
     next_ns: u64,
     interval_ns: u64,
@@ -21,20 +23,23 @@ impl Periodic {
         assert!(rps > 0.0);
         Periodic {
             next_ns: start_ns,
-            interval_ns: (1e9 / rps) as u64,
+            // Clamp to ≥ 1 ns so absurd rates can't freeze time (a zero
+            // interval would make horizon-clipped generation loop forever).
+            interval_ns: (1e9 / rps).max(1.0) as u64,
         }
     }
 }
 
-impl Arrivals for Periodic {
-    fn next_arrival_ns(&mut self) -> u64 {
+impl ArrivalProcess for Periodic {
+    fn next_arrival_ns(&mut self) -> Option<u64> {
         let t = self.next_ns;
         self.next_ns += self.interval_ns;
-        t
+        Some(t)
     }
 }
 
 /// Poisson arrivals with exponential inter-arrival times.
+#[derive(Debug, Clone)]
 pub struct Poisson {
     rng: Rng,
     rate_per_s: f64,
@@ -52,35 +57,114 @@ impl Poisson {
     }
 }
 
-impl Arrivals for Poisson {
-    fn next_arrival_ns(&mut self) -> u64 {
+impl ArrivalProcess for Poisson {
+    fn next_arrival_ns(&mut self) -> Option<u64> {
         let gap_s = self.rng.exp(self.rate_per_s);
-        self.now_ns += (gap_s * 1e9) as u64;
-        self.now_ns
+        // ≥ 1 ns: sub-nanosecond gaps must still advance virtual time.
+        self.now_ns += ((gap_s * 1e9) as u64).max(1);
+        Some(self.now_ns)
     }
 }
 
-/// Sample request prompt lengths: log-normal-ish mixture matching the
-/// shape of production prompt-length distributions (many short, heavy
-/// tail of long-context requests).
-pub struct PromptLengths {
+/// Two-state Markov-modulated Poisson process: a quiet state and a
+/// burst state, each with its own arrival rate, with exponentially
+/// distributed dwell times. Because exponential gaps are memoryless,
+/// re-sampling the gap at each state boundary with the new state's rate
+/// is an exact simulation of the MMPP, not an approximation.
+#[derive(Debug, Clone)]
+pub struct Mmpp {
     rng: Rng,
-    pub mean_tokens: f64,
+    now_ns: u64,
+    state_end_ns: u64,
+    in_burst: bool,
+    rps_quiet: f64,
+    rps_burst: f64,
+    mean_quiet_s: f64,
+    mean_burst_s: f64,
 }
 
-impl PromptLengths {
-    pub fn new(mean_tokens: f64, seed: u64) -> PromptLengths {
-        PromptLengths {
-            rng: Rng::new(seed),
-            mean_tokens,
+impl Mmpp {
+    pub fn new(
+        rps_quiet: f64,
+        rps_burst: f64,
+        mean_quiet_s: f64,
+        mean_burst_s: f64,
+        seed: u64,
+    ) -> Mmpp {
+        assert!(rps_quiet > 0.0 && rps_burst > 0.0);
+        assert!(mean_quiet_s > 0.0 && mean_burst_s > 0.0);
+        let mut rng = Rng::new(seed);
+        let dwell_s = rng.exp(1.0 / mean_quiet_s);
+        Mmpp {
+            rng,
+            now_ns: 0,
+            state_end_ns: (dwell_s * 1e9) as u64,
+            in_burst: false,
+            rps_quiet,
+            rps_burst,
+            mean_quiet_s,
+            mean_burst_s,
         }
     }
 
-    pub fn sample(&mut self) -> u64 {
-        // lognormal with sigma 1.0 scaled to the requested mean
-        let mu = self.mean_tokens.ln() - 0.5;
-        let x = self.rng.lognormal(mu, 1.0);
-        (x.max(8.0)) as u64
+    fn rate(&self) -> f64 {
+        if self.in_burst {
+            self.rps_burst
+        } else {
+            self.rps_quiet
+        }
+    }
+
+    /// Long-run mean arrival rate (for catalog labels and sanity checks).
+    pub fn mean_rate(&self) -> f64 {
+        (self.rps_quiet * self.mean_quiet_s + self.rps_burst * self.mean_burst_s)
+            / (self.mean_quiet_s + self.mean_burst_s)
+    }
+}
+
+impl ArrivalProcess for Mmpp {
+    fn next_arrival_ns(&mut self) -> Option<u64> {
+        loop {
+            // ≥ 1 ns, as in `Poisson`: time must advance per arrival.
+            let gap_ns = ((self.rng.exp(self.rate()) * 1e9) as u64).max(1);
+            let t = self.now_ns.saturating_add(gap_ns);
+            if t < self.state_end_ns {
+                self.now_ns = t;
+                return Some(t);
+            }
+            // Memoryless: restart the gap at the boundary in the new state.
+            self.now_ns = self.state_end_ns;
+            self.in_burst = !self.in_burst;
+            let mean = if self.in_burst {
+                self.mean_burst_s
+            } else {
+                self.mean_quiet_s
+            };
+            let dwell_s = self.rng.exp(1.0 / mean);
+            self.state_end_ns = self.now_ns.saturating_add((dwell_s * 1e9) as u64);
+        }
+    }
+}
+
+/// Replays an explicit arrival sequence; exhausts after the last entry.
+#[derive(Debug, Clone)]
+pub struct TraceArrivals {
+    times_ns: Vec<u64>,
+    idx: usize,
+}
+
+impl TraceArrivals {
+    pub fn new(times_ns: Vec<u64>) -> TraceArrivals {
+        debug_assert!(times_ns.windows(2).all(|w| w[0] <= w[1]));
+        TraceArrivals { times_ns, idx: 0 }
+    }
+}
+
+impl ArrivalProcess for TraceArrivals {
+    fn next_arrival_ns(&mut self) -> Option<u64> {
+        let t = self.times_ns.get(self.idx).copied();
+        self.idx += 1;
+        t
     }
 }
 
@@ -91,8 +175,8 @@ mod tests {
     #[test]
     fn periodic_spacing() {
         let mut p = Periodic::new(8.0, 1_000);
-        let t0 = p.next_arrival_ns();
-        let t1 = p.next_arrival_ns();
+        let t0 = p.next_arrival_ns().unwrap();
+        let t1 = p.next_arrival_ns().unwrap();
         assert_eq!(t0, 1_000);
         assert_eq!(t1 - t0, 125_000_000);
     }
@@ -103,7 +187,7 @@ mod tests {
         let mut last = 0;
         let n = 10_000;
         for _ in 0..n {
-            last = p.next_arrival_ns();
+            last = p.next_arrival_ns().unwrap();
         }
         let mean_gap_s = last as f64 / 1e9 / n as f64;
         assert!((mean_gap_s - 0.1).abs() < 0.01, "mean gap {mean_gap_s}");
@@ -114,28 +198,54 @@ mod tests {
         let mut p = Poisson::new(100.0, 7);
         let mut last = 0;
         for _ in 0..1000 {
-            let t = p.next_arrival_ns();
+            let t = p.next_arrival_ns().unwrap();
             assert!(t >= last);
             last = t;
         }
     }
 
     #[test]
-    fn prompt_lengths_have_requested_mean() {
-        let mut pl = PromptLengths::new(2_000.0, 3);
-        let n = 20_000;
-        let mean: f64 = (0..n).map(|_| pl.sample() as f64).sum::<f64>() / n as f64;
-        assert!((mean / 2_000.0 - 1.0).abs() < 0.15, "mean {mean}");
+    fn mmpp_matches_long_run_rate() {
+        let mut m = Mmpp::new(2.0, 20.0, 10.0, 2.0, 3);
+        let expected = m.mean_rate();
+        let n = 50_000;
+        let mut last = 0;
+        for _ in 0..n {
+            last = m.next_arrival_ns().unwrap();
+        }
+        let measured = n as f64 / (last as f64 / 1e9);
+        assert!(
+            (measured / expected - 1.0).abs() < 0.10,
+            "measured {measured:.2}/s expected {expected:.2}/s"
+        );
     }
 
     #[test]
-    fn prompt_lengths_skewed() {
-        let mut pl = PromptLengths::new(2_000.0, 4);
-        let samples: Vec<u64> = (0..10_000).map(|_| pl.sample()).collect();
-        let mut sorted = samples.clone();
-        sorted.sort_unstable();
-        let median = sorted[5_000] as f64;
-        let mean = samples.iter().sum::<u64>() as f64 / samples.len() as f64;
-        assert!(mean > 1.2 * median, "heavy tail: mean {mean} median {median}");
+    fn mmpp_is_monotone_and_bursty() {
+        let mut m = Mmpp::new(1.0, 50.0, 5.0, 1.0, 11);
+        let mut last = 0;
+        let mut gaps = Vec::new();
+        for _ in 0..20_000 {
+            let t = m.next_arrival_ns().unwrap();
+            assert!(t >= last);
+            gaps.push((t - last) as f64);
+            last = t;
+        }
+        // Coefficient of variation of MMPP gaps exceeds the Poisson's 1.0.
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let var = gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / gaps.len() as f64;
+        let cv = var.sqrt() / mean;
+        assert!(cv > 1.2, "cv {cv}");
+    }
+
+    #[test]
+    fn trace_replay_exhausts() {
+        let mut t = TraceArrivals::new(vec![5, 10, 10, 99]);
+        assert_eq!(t.next_arrival_ns(), Some(5));
+        assert_eq!(t.next_arrival_ns(), Some(10));
+        assert_eq!(t.next_arrival_ns(), Some(10));
+        assert_eq!(t.next_arrival_ns(), Some(99));
+        assert_eq!(t.next_arrival_ns(), None);
+        assert_eq!(t.next_arrival_ns(), None);
     }
 }

@@ -1,0 +1,1080 @@
+//! Declarative workload scenarios over the Track-S serving engine.
+//!
+//! A [`Scenario`] is a named, seedable description of offered load: one
+//! or more request classes, each combining an [`ArrivalSpec`] (periodic,
+//! Poisson, two-state MMPP, or explicit trace), a [`LengthSpec`] for
+//! prompt/output token counts (fixed, heavy-tailed lognormal, or
+//! Zipf-weighted buckets), and a per-class TTFT SLO. Scenarios expand
+//! deterministically into a [`Trace`] — a flat, time-sorted request
+//! list — which can be serialized to JSON, replayed byte-identically,
+//! and driven through [`ServingSim`] by [`run_trace`].
+//!
+//! Determinism contract:
+//!
+//! * `Scenario::generate(seed)` derives one independent RNG stream per
+//!   class from `(seed, class index)` only, so adding a class never
+//!   perturbs the others and traces are reproducible across runs,
+//!   platforms, and sweep schedules.
+//! * Every number stored in a trace fits in 53 bits, so the JSON dump
+//!   (f64-backed) round-trips exactly: `generate → to_json → from_json
+//!   → to_json` is byte-identical.
+//!
+//! The shipped catalog (see [`Scenario::catalog`]) covers the paper's
+//! serving section plus the load shapes related work flags as hard on
+//! the CPU control plane: steady Poisson, MMPP bursts, heavy-tailed
+//! length mixes, a multi-tenant chat+batch mix with distinct SLOs, and
+//! the paper's own attacker/victim flood as a trace-driven scenario.
+
+use super::{ArrivalProcess, LengthMix};
+use crate::config::{RunConfig, WorkloadConfig};
+use crate::engine::{ReqClass, RequestId, ServingSim};
+use crate::util::json::Json;
+use crate::util::rng::{Rng, SplitMix64};
+use crate::util::stats::Percentiles;
+use anyhow::{anyhow, bail, Result};
+
+/// All trace-borne integers are masked to 53 bits so they are exactly
+/// representable as JSON f64 numbers (round-trip byte identity).
+pub const TRACE_SEED_MASK: u64 = (1 << 53) - 1;
+
+// ---------------------------------------------------------------------------
+// Arrival specs
+// ---------------------------------------------------------------------------
+
+/// Declarative arrival-process choice; `build` instantiates the seeded
+/// generator from `poisson`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalSpec {
+    /// Fixed-rate arrivals every `1/rps` seconds, starting at t=0.
+    Periodic { rps: f64 },
+    /// Poisson arrivals at `rps` requests per second.
+    Poisson { rps: f64 },
+    /// Two-state Markov-modulated Poisson process: quiet/burst rates
+    /// with exponential dwell times (means in seconds).
+    Mmpp {
+        rps_quiet: f64,
+        rps_burst: f64,
+        mean_quiet_s: f64,
+        mean_burst_s: f64,
+    },
+    /// Explicit arrival times in nanoseconds (deterministic replay).
+    Trace { times_ns: Vec<u64> },
+}
+
+impl ArrivalSpec {
+    pub fn build(&self, seed: u64) -> Box<dyn ArrivalProcess> {
+        match self {
+            ArrivalSpec::Periodic { rps } => Box::new(super::Periodic::new(*rps, 0)),
+            ArrivalSpec::Poisson { rps } => Box::new(super::Poisson::new(*rps, seed)),
+            ArrivalSpec::Mmpp {
+                rps_quiet,
+                rps_burst,
+                mean_quiet_s,
+                mean_burst_s,
+            } => Box::new(super::Mmpp::new(
+                *rps_quiet,
+                *rps_burst,
+                *mean_quiet_s,
+                *mean_burst_s,
+                seed,
+            )),
+            ArrivalSpec::Trace { times_ns } => {
+                Box::new(super::TraceArrivals::new(times_ns.clone()))
+            }
+        }
+    }
+
+    /// Scale the offered rate by `f` (trace times compress by `1/f`).
+    pub fn scaled(&self, f: f64) -> ArrivalSpec {
+        assert!(f > 0.0 && f.is_finite());
+        match self {
+            ArrivalSpec::Periodic { rps } => ArrivalSpec::Periodic { rps: rps * f },
+            ArrivalSpec::Poisson { rps } => ArrivalSpec::Poisson { rps: rps * f },
+            ArrivalSpec::Mmpp {
+                rps_quiet,
+                rps_burst,
+                mean_quiet_s,
+                mean_burst_s,
+            } => ArrivalSpec::Mmpp {
+                rps_quiet: rps_quiet * f,
+                rps_burst: rps_burst * f,
+                mean_quiet_s: *mean_quiet_s,
+                mean_burst_s: *mean_burst_s,
+            },
+            ArrivalSpec::Trace { times_ns } => ArrivalSpec::Trace {
+                times_ns: times_ns.iter().map(|&t| (t as f64 / f) as u64).collect(),
+            },
+        }
+    }
+
+    /// Short human label for catalog tables.
+    pub fn label(&self) -> String {
+        match self {
+            ArrivalSpec::Periodic { rps } => format!("periodic {rps:.1}/s"),
+            ArrivalSpec::Poisson { rps } => format!("poisson {rps:.1}/s"),
+            ArrivalSpec::Mmpp {
+                rps_quiet,
+                rps_burst,
+                ..
+            } => format!("mmpp {rps_quiet:.0}→{rps_burst:.0}/s"),
+            ArrivalSpec::Trace { times_ns } => format!("trace({})", times_ns.len()),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Length mixes
+// ---------------------------------------------------------------------------
+
+/// One token-count distribution (used for prompts and outputs alike).
+#[derive(Debug, Clone, PartialEq)]
+pub enum LenDist {
+    Fixed { tokens: u64 },
+    /// Lognormal scaled so the distribution mean is `mean`, with shape
+    /// `sigma` and a lower clamp — many short requests, a heavy tail of
+    /// long ones (the production prompt-length shape).
+    Lognormal { mean: f64, sigma: f64, min: u64 },
+    /// Zipf-weighted choice over explicit buckets: probability of
+    /// bucket k is proportional to `1/(k+1)^s`, so earlier buckets
+    /// dominate but the tail buckets still appear.
+    Zipf { buckets: Vec<u64>, s: f64 },
+}
+
+impl LenDist {
+    fn sample(&self, rng: &mut Rng) -> u64 {
+        match self {
+            LenDist::Fixed { tokens } => *tokens,
+            LenDist::Lognormal { mean, sigma, min } => {
+                // E[lognormal(mu, sigma)] = exp(mu + sigma^2/2) = mean.
+                let mu = mean.ln() - 0.5 * sigma * sigma;
+                rng.lognormal(mu, *sigma).max(*min as f64) as u64
+            }
+            LenDist::Zipf { buckets, s } => buckets[rng.zipf(buckets.len(), *s)],
+        }
+    }
+
+    /// Short human label for catalog tables.
+    pub fn label(&self) -> String {
+        match self {
+            LenDist::Fixed { tokens } => format!("{tokens}"),
+            LenDist::Lognormal { mean, .. } => format!("lognorm~{mean:.0}"),
+            LenDist::Zipf { buckets, .. } => format!(
+                "zipf[{}..{}]",
+                buckets.first().copied().unwrap_or(0),
+                buckets.last().copied().unwrap_or(0)
+            ),
+        }
+    }
+}
+
+/// Per-request (prompt, output) length distributions for one class.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LengthSpec {
+    pub prompt: LenDist,
+    pub output: LenDist,
+}
+
+impl LengthSpec {
+    pub fn build(&self, seed: u64) -> LengthGen {
+        LengthGen {
+            rng: Rng::new(seed),
+            spec: self.clone(),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        format!("{} / {}", self.prompt.label(), self.output.label())
+    }
+}
+
+/// Seeded sampler for a [`LengthSpec`].
+pub struct LengthGen {
+    rng: Rng,
+    spec: LengthSpec,
+}
+
+impl LengthMix for LengthGen {
+    fn sample_lengths(&mut self) -> (u64, u64) {
+        let prompt = self.spec.prompt.sample(&mut self.rng).max(1);
+        let output = self.spec.output.sample(&mut self.rng).max(1);
+        (prompt, output)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scenarios
+// ---------------------------------------------------------------------------
+
+/// One request class inside a scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClassSpec {
+    pub name: String,
+    pub arrivals: ArrivalSpec,
+    pub lengths: LengthSpec,
+    /// First-token SLO in seconds: a request whose TTFT (from arrival,
+    /// tokenization included, §IV-B) exceeds this counts as a timeout.
+    pub slo_ttft_s: f64,
+    /// All requests of this class send the *same* prompt content, so
+    /// with prefix caching the GPU prefill is paid once and the
+    /// recurring cost is CPU-side tokenization — the paper's attacker
+    /// construction (§IV-B).
+    pub shared_prompt: bool,
+}
+
+/// A named, seedable workload: classes + duration + provenance notes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub name: String,
+    pub description: String,
+    /// Paper section (or related-work pointer) the scenario probes.
+    pub paper_section: String,
+    /// Arrivals are generated for `t in [0, duration_s)`.
+    pub duration_s: f64,
+    pub classes: Vec<ClassSpec>,
+}
+
+/// Derive the deterministic sub-streams of class `idx` from the
+/// scenario seed: (arrival seed, length seed, content-seed base). The
+/// class index is avalanched through SplitMix64 before mixing so
+/// adjacent indices produce fully decorrelated streams.
+pub fn class_streams(seed: u64, idx: usize) -> (u64, u64, u64) {
+    let h = SplitMix64::new(idx as u64).next_u64();
+    let mut sm = SplitMix64::new(seed ^ h);
+    (sm.next_u64(), sm.next_u64(), sm.next_u64())
+}
+
+impl Scenario {
+    /// The shipped scenario catalog. Names are stable: experiment CLIs
+    /// and config files refer to them.
+    pub fn catalog() -> Vec<Scenario> {
+        vec![
+            Scenario {
+                name: "steady".into(),
+                description: "steady Poisson chat traffic, lognormal prompts".into(),
+                paper_section: "§V serving baseline".into(),
+                duration_s: 45.0,
+                classes: vec![ClassSpec {
+                    name: "chat".into(),
+                    arrivals: ArrivalSpec::Poisson { rps: 4.0 },
+                    lengths: LengthSpec {
+                        prompt: LenDist::Lognormal {
+                            mean: 2_000.0,
+                            sigma: 0.8,
+                            min: 64,
+                        },
+                        output: LenDist::Fixed { tokens: 32 },
+                    },
+                    slo_ttft_s: 30.0,
+                    shared_prompt: false,
+                }],
+            },
+            Scenario {
+                name: "bursty".into(),
+                description: "two-state MMPP bursts that spike the control plane".into(),
+                paper_section: "§V under load spikes (cf. arXiv:2503.08311)".into(),
+                duration_s: 45.0,
+                classes: vec![ClassSpec {
+                    name: "burst".into(),
+                    arrivals: ArrivalSpec::Mmpp {
+                        rps_quiet: 2.0,
+                        rps_burst: 24.0,
+                        mean_quiet_s: 20.0,
+                        mean_burst_s: 4.0,
+                    },
+                    lengths: LengthSpec {
+                        prompt: LenDist::Lognormal {
+                            mean: 4_000.0,
+                            sigma: 0.8,
+                            min: 64,
+                        },
+                        output: LenDist::Fixed { tokens: 32 },
+                    },
+                    slo_ttft_s: 30.0,
+                    shared_prompt: false,
+                }],
+            },
+            Scenario {
+                name: "heavy-tail".into(),
+                description: "Zipf prompt buckets up to 114k tokens, lognormal outputs".into(),
+                paper_section: "§IV-A tokenization share of TTFT".into(),
+                duration_s: 45.0,
+                classes: vec![ClassSpec {
+                    name: "tail".into(),
+                    arrivals: ArrivalSpec::Poisson { rps: 4.0 },
+                    lengths: LengthSpec {
+                        prompt: LenDist::Zipf {
+                            buckets: vec![512, 2_048, 8_192, 32_768, 114_688],
+                            s: 1.1,
+                        },
+                        output: LenDist::Lognormal {
+                            mean: 64.0,
+                            sigma: 1.0,
+                            min: 4,
+                        },
+                    },
+                    slo_ttft_s: 60.0,
+                    shared_prompt: false,
+                }],
+            },
+            Scenario {
+                name: "multi-tenant".into(),
+                description: "latency-critical chat + background batch summarization".into(),
+                paper_section: "§V per-class SLOs (cf. arXiv:2603.12831)".into(),
+                duration_s: 45.0,
+                classes: vec![
+                    ClassSpec {
+                        name: "chat".into(),
+                        arrivals: ArrivalSpec::Poisson { rps: 6.0 },
+                        lengths: LengthSpec {
+                            prompt: LenDist::Lognormal {
+                                mean: 1_200.0,
+                                sigma: 0.8,
+                                min: 64,
+                            },
+                            output: LenDist::Fixed { tokens: 48 },
+                        },
+                        slo_ttft_s: 15.0,
+                        shared_prompt: false,
+                    },
+                    ClassSpec {
+                        name: "batch-summarize".into(),
+                        arrivals: ArrivalSpec::Poisson { rps: 1.0 },
+                        lengths: LengthSpec {
+                            prompt: LenDist::Lognormal {
+                                mean: 48_000.0,
+                                sigma: 0.5,
+                                min: 8_000,
+                            },
+                            output: LenDist::Fixed { tokens: 128 },
+                        },
+                        slo_ttft_s: 90.0,
+                        shared_prompt: false,
+                    },
+                ],
+            },
+            Scenario {
+                name: "attack".into(),
+                description: "periodic 114k-token attacker flood + trace-replayed victims".into(),
+                paper_section: "§IV-B attacker/victim methodology".into(),
+                duration_s: 60.0,
+                classes: vec![
+                    ClassSpec {
+                        name: "attacker".into(),
+                        arrivals: ArrivalSpec::Periodic { rps: 8.0 },
+                        lengths: LengthSpec {
+                            prompt: LenDist::Fixed { tokens: 114_000 },
+                            output: LenDist::Fixed { tokens: 16 },
+                        },
+                        slo_ttft_s: 60.0,
+                        shared_prompt: true,
+                    },
+                    ClassSpec {
+                        name: "victim".into(),
+                        arrivals: ArrivalSpec::Trace {
+                            times_ns: vec![
+                                10_000_000_000,
+                                25_000_000_000,
+                                40_000_000_000,
+                                55_000_000_000,
+                            ],
+                        },
+                        lengths: LengthSpec {
+                            prompt: LenDist::Fixed { tokens: 2_800 },
+                            output: LenDist::Fixed { tokens: 16 },
+                        },
+                        slo_ttft_s: 60.0,
+                        shared_prompt: false,
+                    },
+                ],
+            },
+        ]
+    }
+
+    /// Look up a catalog scenario by its stable name.
+    pub fn by_name(name: &str) -> Option<Scenario> {
+        Scenario::catalog().into_iter().find(|s| s.name == name)
+    }
+
+    /// CLI-facing lookup: panics with the catalog listing on an unknown
+    /// name (shared by `cpuslow serve` and `cpuslow serve-sweep`).
+    pub fn by_name_or_panic(name: &str) -> Scenario {
+        Scenario::by_name(name).unwrap_or_else(|| {
+            panic!(
+                "unknown scenario '{name}' — catalog: {}",
+                Scenario::catalog_names().join(", ")
+            )
+        })
+    }
+
+    /// Apply workload-config overrides with CLI-over-config precedence:
+    /// an explicit CLI value wins, then the config's, then the
+    /// scenario's own default.
+    pub fn with_overrides(
+        self,
+        workload: &WorkloadConfig,
+        rate_scale: Option<f64>,
+        duration_s: Option<f64>,
+    ) -> Scenario {
+        let s = self.scaled(rate_scale.unwrap_or(workload.rate_scale));
+        match duration_s.or(workload.duration_s) {
+            Some(d) => s.with_duration(d),
+            None => s,
+        }
+    }
+
+    /// Catalog names, in catalog order.
+    pub fn catalog_names() -> Vec<String> {
+        Scenario::catalog().into_iter().map(|s| s.name).collect()
+    }
+
+    /// Scale every class's offered rate by `f`.
+    pub fn scaled(mut self, f: f64) -> Scenario {
+        if (f - 1.0).abs() > f64::EPSILON {
+            for c in &mut self.classes {
+                c.arrivals = c.arrivals.scaled(f);
+            }
+        }
+        self
+    }
+
+    /// Replace the generation window. Explicit trace arrivals rescale
+    /// proportionally so trace-pinned classes (e.g. the attack
+    /// scenario's victims at 10/25/40/55 s of a 60 s window) keep
+    /// probing the same relative points instead of being clipped out
+    /// of a shortened run.
+    pub fn with_duration(mut self, duration_s: f64) -> Scenario {
+        assert!(duration_s > 0.0);
+        let ratio = duration_s / self.duration_s;
+        if (ratio - 1.0).abs() > f64::EPSILON {
+            for c in &mut self.classes {
+                if let ArrivalSpec::Trace { times_ns } = &mut c.arrivals {
+                    for t in times_ns.iter_mut() {
+                        *t = (*t as f64 * ratio) as u64;
+                    }
+                }
+            }
+        }
+        self.duration_s = duration_s;
+        self
+    }
+
+    /// Expand the scenario into a deterministic, time-sorted [`Trace`].
+    ///
+    /// The seed is masked to 53 bits up front so the value recorded in
+    /// the trace (and its JSON dump) is exactly the value that, fed
+    /// back to `generate`, reproduces the same requests.
+    pub fn generate(&self, seed: u64) -> Trace {
+        let seed = seed & TRACE_SEED_MASK;
+        let dur_ns = (self.duration_s * 1e9) as u64;
+        let mut requests = Vec::new();
+        for (idx, class) in self.classes.iter().enumerate() {
+            let (arrival_seed, length_seed, content_base) = class_streams(seed, idx);
+            let content_base = content_base & TRACE_SEED_MASK;
+            let mut arrivals = class.arrivals.build(arrival_seed);
+            let mut lengths = class.lengths.build(length_seed);
+            let mut k: u64 = 0;
+            while let Some(at_ns) = arrivals.next_arrival_ns() {
+                if at_ns >= dur_ns {
+                    break;
+                }
+                let (prompt_tokens, output_tokens) = lengths.sample_lengths();
+                let content_seed = if class.shared_prompt {
+                    content_base
+                } else {
+                    content_base.wrapping_add(k + 1) & TRACE_SEED_MASK
+                };
+                requests.push(TraceReq {
+                    at_ns,
+                    class_idx: idx,
+                    prompt_tokens,
+                    output_tokens,
+                    content_seed,
+                });
+                k += 1;
+            }
+        }
+        // Stable sort: within a class the generation order is preserved;
+        // cross-class ties break by class index.
+        requests.sort_by_key(|r| (r.at_ns, r.class_idx));
+        Trace {
+            scenario: self.name.clone(),
+            seed,
+            classes: self
+                .classes
+                .iter()
+                .map(|c| TraceClass {
+                    name: c.name.clone(),
+                    slo_ttft_s: c.slo_ttft_s,
+                })
+                .collect(),
+            requests,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Traces
+// ---------------------------------------------------------------------------
+
+/// One generated request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceReq {
+    pub at_ns: u64,
+    pub class_idx: usize,
+    pub prompt_tokens: u64,
+    pub output_tokens: u64,
+    /// Prompt-content identity for prefix caching (53-bit, JSON-exact).
+    pub content_seed: u64,
+}
+
+/// Per-class metadata a trace carries so replay is self-contained.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceClass {
+    pub name: String,
+    pub slo_ttft_s: f64,
+}
+
+/// A fully-expanded workload: what `Scenario::generate` emits and what
+/// [`run_trace`] consumes. JSON round-trips byte-identically.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    pub scenario: String,
+    /// The (53-bit-masked) seed that regenerates this trace via
+    /// `Scenario::generate`. Keep it within `TRACE_SEED_MASK` in
+    /// hand-built traces or the JSON round-trip loses the high bits.
+    pub seed: u64,
+    pub classes: Vec<TraceClass>,
+    pub requests: Vec<TraceReq>,
+}
+
+impl Trace {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("scenario", self.scenario.as_str());
+        j.set("seed", self.seed & TRACE_SEED_MASK);
+        j.set(
+            "classes",
+            Json::Arr(
+                self.classes
+                    .iter()
+                    .map(|c| {
+                        let mut cj = Json::obj();
+                        cj.set("name", c.name.as_str()).set("slo_ttft_s", c.slo_ttft_s);
+                        cj
+                    })
+                    .collect(),
+            ),
+        );
+        j.set(
+            "requests",
+            Json::Arr(
+                self.requests
+                    .iter()
+                    .map(|r| {
+                        let mut rj = Json::obj();
+                        rj.set("at_ns", r.at_ns)
+                            .set("class", r.class_idx)
+                            .set("prompt_tokens", r.prompt_tokens)
+                            .set("output_tokens", r.output_tokens)
+                            .set("content_seed", r.content_seed);
+                        rj
+                    })
+                    .collect(),
+            ),
+        );
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<Trace> {
+        let scenario = j
+            .get("scenario")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("trace: missing 'scenario'"))?
+            .to_string();
+        let seed = j
+            .get("seed")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("trace: missing 'seed'"))? as u64;
+        let classes_j = j
+            .get("classes")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("trace: missing 'classes'"))?;
+        let mut classes = Vec::with_capacity(classes_j.len());
+        for cj in classes_j {
+            classes.push(TraceClass {
+                name: cj
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("trace class: missing 'name'"))?
+                    .to_string(),
+                slo_ttft_s: cj
+                    .get("slo_ttft_s")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| anyhow!("trace class: missing 'slo_ttft_s'"))?,
+            });
+        }
+        let requests_j = j
+            .get("requests")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("trace: missing 'requests'"))?;
+        let mut requests = Vec::with_capacity(requests_j.len());
+        for rj in requests_j {
+            let num = |key: &str| -> Result<u64> {
+                rj.get(key)
+                    .and_then(Json::as_f64)
+                    .map(|v| v as u64)
+                    .ok_or_else(|| anyhow!("trace request: missing '{key}'"))
+            };
+            let class_idx = num("class")? as usize;
+            if class_idx >= classes.len() {
+                bail!("trace request: class index {class_idx} out of range");
+            }
+            requests.push(TraceReq {
+                at_ns: num("at_ns")?,
+                class_idx,
+                prompt_tokens: num("prompt_tokens")?,
+                output_tokens: num("output_tokens")?,
+                content_seed: num("content_seed")?,
+            });
+        }
+        Ok(Trace {
+            scenario,
+            seed,
+            classes,
+            requests,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Track-S driver
+// ---------------------------------------------------------------------------
+
+/// Resolve a named catalog scenario with the shared CLI/config
+/// override rules used by `cpuslow serve` and `cpuslow serve-sweep`:
+/// explicit `--rate-scale`/`--duration` flags win, then the workload
+/// config, then the scenario's own defaults; `quick` shrinks the
+/// window to 10 s only when no explicit duration is set anywhere.
+pub fn resolve_cli_scenario(
+    name: &str,
+    workload: &WorkloadConfig,
+    args: &crate::util::cli::Args,
+    quick: bool,
+) -> Scenario {
+    let rate_scale = args.get("rate-scale").map(|_| args.f64_or("rate-scale", 1.0));
+    let duration = args.get("duration").map(|_| args.f64_or("duration", 0.0));
+    let s = Scenario::by_name_or_panic(name).with_overrides(workload, rate_scale, duration);
+    if quick && duration.is_none() && workload.duration_s.is_none() {
+        s.with_duration(10.0)
+    } else {
+        s
+    }
+}
+
+/// Timeout fraction with the zero-requests convention (0.0, not NaN) —
+/// the single definition every report type delegates to.
+pub fn timeout_fraction(timeouts: usize, issued: usize) -> f64 {
+    if issued == 0 {
+        0.0
+    } else {
+        timeouts as f64 / issued as f64
+    }
+}
+
+/// Per-class serving outcome summary.
+#[derive(Debug, Clone)]
+pub struct ClassReport {
+    pub name: String,
+    pub slo_ttft_s: f64,
+    pub issued: usize,
+    /// Requests whose TTFT missed the class SLO (or never produced a
+    /// first token inside the measurement horizon).
+    pub timeouts: usize,
+    /// TTFT percentiles over on-time requests; None when every request
+    /// of the class timed out (or none were issued).
+    pub ttft_p50_s: Option<f64>,
+    pub ttft_p99_s: Option<f64>,
+}
+
+impl ClassReport {
+    pub fn timeout_rate(&self) -> f64 {
+        timeout_fraction(self.timeouts, self.issued)
+    }
+}
+
+/// Whole-scenario serving outcome: per-class reports plus pooled TTFT
+/// percentiles, timeout rate, and the GPU-idle share the paper ties to
+/// CPU starvation (§V-A).
+#[derive(Debug, Clone)]
+pub struct ScenarioReport {
+    pub scenario: String,
+    pub per_class: Vec<ClassReport>,
+    pub issued: usize,
+    pub timeouts: usize,
+    pub ttft_p50_s: Option<f64>,
+    pub ttft_p99_s: Option<f64>,
+    /// 1 − mean GPU utilization over the run (fleet average).
+    pub gpu_idle_share: f64,
+    pub steps_completed: u64,
+}
+
+impl ScenarioReport {
+    pub fn timeout_rate(&self) -> f64 {
+        timeout_fraction(self.timeouts, self.issued)
+    }
+}
+
+fn percentile_pair(values: &[f64]) -> (Option<f64>, Option<f64>) {
+    if values.is_empty() {
+        return (None, None);
+    }
+    let mut p = Percentiles::new();
+    for &v in values {
+        p.add(v);
+    }
+    (Some(p.pct(50.0)), Some(p.pct(99.0)))
+}
+
+/// Drive a trace through a fresh [`ServingSim`] and summarize outcomes.
+///
+/// The sim runs until the last arrival plus the largest class SLO (plus
+/// one second of slack), so every request gets its full SLO window. A
+/// request counts as timed out when it produces no first token within
+/// its class SLO, measured from arrival (tokenization included, §IV-B).
+pub fn run_trace(cfg: RunConfig, trace: &Trace) -> ScenarioReport {
+    let mut sim = ServingSim::new(cfg);
+    let mut ids: Vec<(RequestId, usize)> = Vec::with_capacity(trace.requests.len());
+    for r in &trace.requests {
+        let id = sim.submit_with_seed(
+            r.at_ns,
+            ReqClass::Normal,
+            r.prompt_tokens,
+            r.output_tokens,
+            r.content_seed,
+        );
+        ids.push((id, r.class_idx));
+    }
+    let max_slo_s = trace
+        .classes
+        .iter()
+        .fold(0.0_f64, |a, c| a.max(c.slo_ttft_s));
+    let last_arrival_s = trace.requests.last().map_or(0.0, |r| r.at_ns as f64 / 1e9);
+    sim.run_secs(last_arrival_s + max_slo_s + 1.0);
+
+    let mut on_time: Vec<Vec<f64>> = vec![Vec::new(); trace.classes.len()];
+    let mut per_class: Vec<ClassReport> = trace
+        .classes
+        .iter()
+        .map(|c| ClassReport {
+            name: c.name.clone(),
+            slo_ttft_s: c.slo_ttft_s,
+            issued: 0,
+            timeouts: 0,
+            ttft_p50_s: None,
+            ttft_p99_s: None,
+        })
+        .collect();
+    for (id, class_idx) in ids {
+        let outcome = sim.outcome(id).expect("submitted request known");
+        let report = &mut per_class[class_idx];
+        report.issued += 1;
+        match outcome.ttft_secs() {
+            Some(t) if t <= report.slo_ttft_s => on_time[class_idx].push(t),
+            _ => report.timeouts += 1,
+        }
+    }
+    let mut pooled = Vec::new();
+    for (report, ttfts) in per_class.iter_mut().zip(&on_time) {
+        let (p50, p99) = percentile_pair(ttfts);
+        report.ttft_p50_s = p50;
+        report.ttft_p99_s = p99;
+        pooled.extend_from_slice(ttfts);
+    }
+    let (ttft_p50_s, ttft_p99_s) = percentile_pair(&pooled);
+    ScenarioReport {
+        scenario: trace.scenario.clone(),
+        issued: per_class.iter().map(|c| c.issued).sum(),
+        timeouts: per_class.iter().map(|c| c.timeouts).sum(),
+        per_class,
+        ttft_p50_s,
+        ttft_p99_s,
+        gpu_idle_share: sim.gpu_idle_share(),
+        steps_completed: sim.steps_completed(),
+    }
+}
+
+/// Generate and drive a scenario in one call.
+pub fn run_scenario(cfg: RunConfig, scenario: &Scenario, seed: u64) -> ScenarioReport {
+    run_trace(cfg, &scenario.generate(seed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one_class(arrivals: ArrivalSpec, prompt: LenDist) -> Scenario {
+        Scenario {
+            name: "test".into(),
+            description: "unit fixture".into(),
+            paper_section: "-".into(),
+            duration_s: 10.0,
+            classes: vec![ClassSpec {
+                name: "only".into(),
+                arrivals,
+                lengths: LengthSpec {
+                    prompt,
+                    output: LenDist::Fixed { tokens: 4 },
+                },
+                slo_ttft_s: 30.0,
+                shared_prompt: false,
+            }],
+        }
+    }
+
+    #[test]
+    fn periodic_generation_is_exact() {
+        let s = one_class(
+            ArrivalSpec::Periodic { rps: 2.0 },
+            LenDist::Fixed { tokens: 100 },
+        );
+        let trace = s.generate(0);
+        let times: Vec<u64> = trace.requests.iter().map(|r| r.at_ns).collect();
+        assert_eq!(
+            times,
+            vec![
+                0,
+                500_000_000,
+                1_000_000_000,
+                1_500_000_000,
+                2_000_000_000,
+                2_500_000_000,
+                3_000_000_000,
+                3_500_000_000,
+                4_000_000_000,
+                4_500_000_000,
+                5_000_000_000,
+                5_500_000_000,
+                6_000_000_000,
+                6_500_000_000,
+                7_000_000_000,
+                7_500_000_000,
+                8_000_000_000,
+                8_500_000_000,
+                9_000_000_000,
+                9_500_000_000,
+            ]
+        );
+        assert!(trace.requests.iter().all(|r| r.prompt_tokens == 100));
+    }
+
+    #[test]
+    fn content_seeds_unique_unless_shared() {
+        let s = one_class(
+            ArrivalSpec::Periodic { rps: 4.0 },
+            LenDist::Fixed { tokens: 10 },
+        );
+        let trace = s.generate(9);
+        let mut seeds: Vec<u64> = trace.requests.iter().map(|r| r.content_seed).collect();
+        let n = seeds.len();
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), n, "unique content per request");
+        assert!(seeds.iter().all(|&s| s <= TRACE_SEED_MASK));
+
+        let mut shared = s;
+        shared.classes[0].shared_prompt = true;
+        let trace = shared.generate(9);
+        let first = trace.requests[0].content_seed;
+        assert!(trace.requests.iter().all(|r| r.content_seed == first));
+    }
+
+    #[test]
+    fn generation_is_seed_deterministic() {
+        let s = Scenario::by_name("heavy-tail").unwrap();
+        let a = s.generate(7);
+        let b = s.generate(7);
+        assert_eq!(a, b);
+        let c = s.generate(8);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn recorded_seed_regenerates_the_trace() {
+        // Full-64-bit seeds (e.g. from sweep::seeded_cells) are masked
+        // at generation time, so the seed stored in the trace — and in
+        // its JSON dump — reproduces the identical request sequence.
+        let s = Scenario::by_name("steady").unwrap().with_duration(5.0);
+        let trace = s.generate(u64::MAX);
+        assert!(trace.seed <= TRACE_SEED_MASK);
+        assert_eq!(s.generate(trace.seed), trace);
+        let back = Trace::from_json(&trace.to_json()).unwrap();
+        assert_eq!(back, trace);
+    }
+
+    #[test]
+    fn overrides_precedence_cli_then_config_then_default() {
+        let workload = WorkloadConfig {
+            scenario: String::new(),
+            duration_s: Some(20.0),
+            rate_scale: 2.0,
+        };
+        let base = Scenario::by_name("steady").unwrap();
+        // CLI wins over config
+        let s = base.clone().with_overrides(&workload, Some(3.0), Some(7.0));
+        assert_eq!(s.duration_s, 7.0);
+        assert_eq!(s.classes[0].arrivals, ArrivalSpec::Poisson { rps: 12.0 });
+        // config wins over the scenario default
+        let s = base.clone().with_overrides(&workload, None, None);
+        assert_eq!(s.duration_s, 20.0);
+        assert_eq!(s.classes[0].arrivals, ArrivalSpec::Poisson { rps: 8.0 });
+        // neither set → scenario defaults
+        let s = base.clone().with_overrides(&WorkloadConfig::default(), None, None);
+        assert_eq!(s, base);
+    }
+
+    #[test]
+    fn class_streams_decorrelate_adjacent_indices() {
+        let (a0, l0, c0) = class_streams(42, 0);
+        let (a1, l1, c1) = class_streams(42, 1);
+        // No element of one class's stream triple appears in the other's
+        // (the naive seed ^ idx*gamma derivation failed this: gamma is
+        // SplitMix's own increment, so adjacent streams overlapped).
+        let s0 = [a0, l0, c0];
+        for v in [a1, l1, c1] {
+            assert!(!s0.contains(&v));
+        }
+    }
+
+    #[test]
+    fn with_duration_rescales_trace_arrivals() {
+        let attack = Scenario::by_name("attack").unwrap();
+        let quick = attack.clone().with_duration(10.0);
+        assert_eq!(
+            quick.classes[1].arrivals,
+            ArrivalSpec::Trace {
+                times_ns: vec![
+                    1_666_666_666,
+                    4_166_666_666,
+                    6_666_666_666,
+                    9_166_666_666,
+                ],
+            }
+        );
+        // Every victim still lands inside the shortened window.
+        let trace = quick.generate(0);
+        let victims = trace.requests.iter().filter(|r| r.class_idx == 1).count();
+        assert_eq!(victims, 4);
+        // Periodic/Poisson rates are untouched (same offered load).
+        assert_eq!(
+            quick.classes[0].arrivals,
+            ArrivalSpec::Periodic { rps: 8.0 }
+        );
+    }
+
+    #[test]
+    fn scaled_rates_and_trace_times() {
+        let p = ArrivalSpec::Poisson { rps: 4.0 }.scaled(2.0);
+        assert_eq!(p, ArrivalSpec::Poisson { rps: 8.0 });
+        let t = ArrivalSpec::Trace {
+            times_ns: vec![1_000_000_000, 3_000_000_000],
+        }
+        .scaled(2.0);
+        assert_eq!(
+            t,
+            ArrivalSpec::Trace {
+                times_ns: vec![500_000_000, 1_500_000_000]
+            }
+        );
+    }
+
+    #[test]
+    fn catalog_is_well_formed() {
+        let catalog = Scenario::catalog();
+        assert!(catalog.len() >= 4, "ship at least 4 scenarios");
+        let mut names: Vec<String> = catalog.iter().map(|s| s.name.clone()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), catalog.len(), "names unique");
+        for s in &catalog {
+            assert!(!s.classes.is_empty());
+            assert!(s.duration_s > 0.0);
+            assert!(!s.paper_section.is_empty());
+            for c in &s.classes {
+                assert!(c.slo_ttft_s > 0.0);
+            }
+            assert_eq!(Scenario::by_name(&s.name).as_ref(), Some(s));
+        }
+    }
+
+    #[test]
+    fn lognormal_mean_and_tail() {
+        let spec = LengthSpec {
+            prompt: LenDist::Lognormal {
+                mean: 2_000.0,
+                sigma: 1.0,
+                min: 8,
+            },
+            output: LenDist::Fixed { tokens: 1 },
+        };
+        let mut generator = spec.build(5);
+        let samples: Vec<u64> = (0..20_000)
+            .map(|_| {
+                let (p, _) = generator.sample_lengths();
+                p
+            })
+            .collect();
+        let mean = samples.iter().sum::<u64>() as f64 / samples.len() as f64;
+        assert!((mean / 2_000.0 - 1.0).abs() < 0.15, "mean {mean}");
+        let mut sorted = samples;
+        sorted.sort_unstable();
+        let median = sorted[sorted.len() / 2] as f64;
+        assert!(mean > 1.2 * median, "heavy tail: mean {mean} median {median}");
+    }
+
+    #[test]
+    fn zipf_buckets_skew_to_front() {
+        let spec = LengthSpec {
+            prompt: LenDist::Zipf {
+                buckets: vec![512, 2_048, 8_192, 32_768, 114_688],
+                s: 1.1,
+            },
+            output: LenDist::Fixed { tokens: 1 },
+        };
+        let mut generator = spec.build(13);
+        let mut count_short = 0;
+        let mut count_long = 0;
+        for _ in 0..10_000 {
+            match generator.sample_lengths().0 {
+                512 => count_short += 1,
+                114_688 => count_long += 1,
+                _ => {}
+            }
+        }
+        assert!(count_short > 3 * count_long, "{count_short} vs {count_long}");
+        assert!(count_long > 0, "tail bucket must still appear");
+    }
+
+    #[test]
+    fn empty_trace_report_is_zeroed() {
+        let trace = Trace {
+            scenario: "empty".into(),
+            seed: 0,
+            classes: vec![TraceClass {
+                name: "none".into(),
+                slo_ttft_s: 1.0,
+            }],
+            requests: Vec::new(),
+        };
+        let cfg = RunConfig::new(
+            crate::config::SystemSpec::h100(),
+            crate::config::ModelSpec::llama31_8b(),
+            4,
+            8,
+        );
+        let report = run_trace(cfg, &trace);
+        assert_eq!(report.issued, 0);
+        assert_eq!(report.timeouts, 0);
+        assert_eq!(report.timeout_rate(), 0.0);
+        assert!(report.ttft_p50_s.is_none());
+    }
+}
