@@ -1,0 +1,69 @@
+//! Serving-engine benches — requests/sec through the full Track-S stack
+//! (tokenizer pool → EngineCore → shm ring → GPU workers) for
+//! representative catalog scenarios at small and large request counts,
+//! plus an allocation profile (counting-allocator bytes as a peak-RSS
+//! proxy). Writes `BENCH_serve.json` via `BenchSuite`; `cpuslow
+//! bench-check` gates the `per_sec` fields against
+//! `BENCH_serve.baseline.json`.
+
+use cpuslow::config::{ModelSpec, RunConfig, SystemSpec};
+use cpuslow::testkit::alloc::{self, CountingAlloc};
+use cpuslow::util::bench::{bench_n, black_box, BenchSuite};
+use cpuslow::workload::scenario::{run_stream, Scenario};
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn cfg() -> RunConfig {
+    RunConfig::new(SystemSpec::blackwell(), ModelSpec::llama31_8b(), 4, 16)
+}
+
+/// Bench one scenario cell end to end through the streaming driver.
+fn cell(suite: &mut BenchSuite, name: &str, rate_scale: f64, duration_s: f64, label: &str) {
+    const RUNS: u64 = 3;
+    let scenario = Scenario::by_name(name)
+        .unwrap()
+        .scaled(rate_scale)
+        .with_duration(duration_s);
+    // One priming run pins the deterministic request count.
+    let issued = run_stream(cfg(), &scenario, 0).issued;
+    alloc::reset_peak_live();
+    let live_floor = alloc::live_bytes();
+    let before = alloc::counters();
+    let r = bench_n(label, RUNS as usize, || {
+        black_box(run_stream(cfg(), &scenario, 0).issued);
+    });
+    let after = alloc::counters();
+    r.report();
+    let allocs_per_run = (after.allocs - before.allocs) / RUNS;
+    let bytes_per_run = (after.alloc_bytes - before.alloc_bytes) / RUNS;
+    let peak_live = alloc::peak_live_bytes() - live_floor;
+    println!(
+        "    → {issued} requests/run, {:.0} req/s; {allocs_per_run} allocs \
+         ({:.0} B/request), peak live {} KiB",
+        r.per_sec(issued as f64),
+        bytes_per_run as f64 / issued.max(1) as f64,
+        peak_live / 1024,
+    );
+    suite.record(&r, Some((issued as f64, "requests")));
+}
+
+fn main() {
+    println!("== serving engine benches ==");
+    let mut suite = BenchSuite::new("serve");
+
+    // Small cells: catalog defaults compressed into an 8 s window.
+    cell(&mut suite, "steady", 1.0, 8.0, "steady 8s (small)");
+    cell(&mut suite, "bursty", 1.0, 8.0, "bursty 8s (small)");
+    cell(&mut suite, "heavy-tail", 1.0, 8.0, "heavy-tail 8s (small)");
+
+    // Large cells: ~10× the offered request volume, same shapes.
+    cell(&mut suite, "steady", 5.0, 16.0, "steady x5 16s (large)");
+    cell(&mut suite, "bursty", 5.0, 16.0, "bursty x5 16s (large)");
+    cell(&mut suite, "heavy-tail", 5.0, 16.0, "heavy-tail x5 16s (large)");
+
+    match suite.write(".") {
+        Ok(path) => println!("bench data → {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_serve.json: {e}"),
+    }
+}

@@ -6,14 +6,14 @@
 //! loop (§IV-B "LLM engine starvation").
 
 use super::request::RequestId;
-use std::collections::HashMap;
+use rustc_hash::FxHashMap;
 
 #[derive(Debug, Clone)]
 pub struct KvCache {
     page_tokens: usize,
     total_pages: usize,
     free_pages: usize,
-    per_request: HashMap<RequestId, usize>,
+    per_request: FxHashMap<RequestId, usize>,
 }
 
 impl KvCache {
@@ -23,7 +23,7 @@ impl KvCache {
             page_tokens,
             total_pages,
             free_pages: total_pages,
-            per_request: HashMap::new(),
+            per_request: FxHashMap::default(),
         }
     }
 

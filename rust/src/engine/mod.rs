@@ -11,8 +11,19 @@
 //! barrier semantics. Every one of those tasks contends for the same
 //! simulated cores — reproducing the paper's compounded contention.
 //!
-//! Load enters through [`ServingSim::submit_with_seed`]: the
-//! attacker/victim harness and the scenario engine
+//! **Hot-path discipline.** The EngineCore and GPU workers are
+//! hand-written [`Program`] state machines (no per-step boxed script
+//! instructions); requests live in a paged [`RequestSlab`]; step plans
+//! recycle through [`EngineShared::plan_pool`] and are evicted from
+//! [`EngineShared::plans`] the moment every rank has acked the step;
+//! kernel launches and completions ride the simulator's shared-callback
+//! slab. After warmup, steady-state stepping performs **zero heap
+//! allocations** (pinned by `tests/test_alloc.rs`).
+//!
+//! Load enters through [`ServingSim::submit_with_seed`] (materialized)
+//! or [`ServingSim::run_streaming`] (lazy arrival iterator + eager
+//! outcome harvest, so million-request runs hold only in-flight state).
+//! The attacker/victim harness and the scenario engine
 //! ([`crate::workload::scenario`]) both drive it, and
 //! [`ServingSim::gpu_idle_share`] summarizes the starvation signal the
 //! serve-sweep grids report per cell.
@@ -21,28 +32,29 @@ pub mod kv_cache;
 pub mod prefix_cache;
 pub mod request;
 pub mod scheduler;
+pub mod slab;
 pub mod tokenizer_pool;
 
 pub use kv_cache::KvCache;
 pub use prefix_cache::PrefixCache;
 pub use request::{Outcome, ReqClass, ReqPhase, Request, RequestId};
-pub use scheduler::{complete_step, schedule, SchedState, StepPlan};
-pub use tokenizer_pool::{chunk_costs, TokJob, TokenizerPool};
+pub use scheduler::{complete_step, schedule, schedule_into, SchedState, StepPlan};
+pub use slab::RequestSlab;
+pub use tokenizer_pool::{chunk_cost_iter, chunk_costs, ChunkCosts, TokJob, TokenizerPool};
 
 use crate::config::RunConfig;
 use crate::gpu::{self, timing, FleetRef, Kernel, KernelKind};
 use crate::ipc::{SimChannel, SimShmBroadcast};
-use crate::simcpu::script::{Instr, Script};
-use crate::simcpu::{GateId, Sim, SimParams};
-use std::cell::RefCell;
-use std::collections::HashMap;
+use crate::simcpu::{GateId, Op, Program, SharedCall, Sim, SimParams, TaskCtx};
+use rustc_hash::FxHashMap;
+use std::cell::{Cell, RefCell};
 use std::rc::Rc;
 
 /// Host-side CPU cost constants for the engine control plane.
 #[derive(Debug, Clone)]
 pub struct EngineCosts {
     /// EngineCore scheduling pass: base + per-batch-entry (vLLM V1's
-    /// schedule() is ~0.1–1 ms depending on batch).
+    /// `schedule()` is ~0.1–1 ms depending on batch).
     pub schedule_base_ns: u64,
     pub schedule_per_req_ns: u64,
     /// Sampling + output processing per step: base + per-request.
@@ -73,11 +85,28 @@ pub struct EngineShared {
     pub sched: SchedState,
     pub kv: KvCache,
     pub prefix: Option<PrefixCache>,
-    /// step seq → broadcast plan payload.
-    pub plans: HashMap<u64, StepPlan>,
+    /// step seq → broadcast plan payload. Bounded: the EngineCore evicts
+    /// each plan into [`Self::plan_pool`] once every rank has acked the
+    /// step, so at most one step is parked here at a time
+    /// ([`ServingSim::plan_backlog`] + a regression test pin this).
+    pub plans: FxHashMap<u64, StepPlan>,
+    /// Recycled [`StepPlan`]s: `schedule_into` reuses their
+    /// `prefill`/`decode` buffers instead of allocating per step.
+    pub plan_pool: Vec<StepPlan>,
     pub steps_completed: u64,
     /// ns of GPU-step wall time accumulated (for reporting).
     pub gpu_step_ns: u64,
+    /// Requests submitted but not yet handed to the scheduler (still in
+    /// the tokenizer pool or the channel); lets `outcome()` answer for
+    /// any submitted id. Entries move to `sched` when the EngineCore
+    /// drains the channel.
+    pub pending: RequestSlab,
+    /// Next request id (dense: both slabs index by it).
+    next_id: RequestId,
+    /// Streaming mode: finished requests are evicted from the slab and
+    /// their Outcomes parked in `outbox` for the driver to drain.
+    harvest: bool,
+    outbox: Vec<Outcome>,
 }
 
 pub type SharedRef = Rc<RefCell<EngineShared>>;
@@ -92,18 +121,34 @@ struct Env {
     fleet: FleetRef,
     /// Signaled once per worker per completed step.
     step_done: GateId,
+    pool: TokenizerPool,
+}
+
+/// One arrival for the submission API and the streaming driver.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StreamArrival {
+    pub at_ns: u64,
+    pub class: ReqClass,
+    pub prompt_tokens: u64,
+    pub max_new_tokens: u64,
+    /// Prompt-content identity for prefix caching.
+    pub content_seed: u64,
+    /// Opaque caller tag carried into the request's [`Outcome`]
+    /// (scenario drivers store the workload class index here).
+    pub tag: u32,
+}
+
+/// Summary of a [`ServingSim::run_streaming`] drive.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StreamStats {
+    pub submitted: u64,
+    pub last_arrival_ns: u64,
 }
 
 /// A full serving-stack simulation instance.
 pub struct ServingSim {
     pub sim: Sim,
     env: Env,
-    pool: TokenizerPool,
-    next_id: RequestId,
-    /// Requests submitted but not yet visible to the scheduler (still in
-    /// the tokenizer pool or the channel); lets `outcome()` answer for
-    /// any submitted id.
-    pending: Rc<RefCell<HashMap<RequestId, Request>>>,
 }
 
 impl ServingSim {
@@ -112,16 +157,24 @@ impl ServingSim {
     }
 
     pub fn with_costs(cfg: RunConfig, costs: EngineCosts) -> ServingSim {
+        Self::with_options(cfg, costs, true)
+    }
+
+    /// Like [`Self::with_costs`], with utilization tracing optional:
+    /// traces grow with *virtual time*, so allocation-count tests and
+    /// very long streaming drives disable them (`tracing = false`, at
+    /// the price of [`Self::gpu_idle_share`] reporting 1.0).
+    pub fn with_options(cfg: RunConfig, costs: EngineCosts, tracing: bool) -> ServingSim {
         cfg.validate().expect("invalid RunConfig");
         let params = SimParams {
             cores: cfg.cpu_cores,
             context_switch_ns: (cfg.system.context_switch_s * 1e9) as u64,
             timeslice_ns: (cfg.system.timeslice_s * 1e9) as u64,
             poll_quantum_ns: 1_000,
-            trace_bucket_ns: Some(100_000_000), // 100 ms utilization buckets
+            trace_bucket_ns: tracing.then_some(100_000_000), // 100 ms buckets
         };
         let mut sim = Sim::new(params);
-        let fleet = gpu::Fleet::new(cfg.n_gpus, Some(0.1));
+        let fleet = gpu::Fleet::new(cfg.n_gpus, tracing.then_some(0.1));
         let channel = SimChannel::new(&mut sim);
         let shm = SimShmBroadcast::new(&mut sim, 8, cfg.n_gpus);
         let step_done = sim.new_gate();
@@ -135,10 +188,26 @@ impl ServingSim {
                 .serve
                 .prefix_caching
                 .then(|| PrefixCache::new(cfg.serve.kv_page_tokens as u64, 262_144)),
-            plans: HashMap::new(),
+            plans: FxHashMap::default(),
+            plan_pool: Vec::new(),
             steps_completed: 0,
             gpu_step_ns: 0,
+            pending: RequestSlab::new(),
+            next_id: 0,
+            harvest: false,
+            outbox: Vec::new(),
         }));
+        // API-server tokenizer executor: vLLM's AsyncLLM hands each
+        // request's encode to a ThreadPoolExecutor with
+        // max_workers = min(32, cores + 4) (CPython default). Jobs are
+        // FIFO: under a tokenization flood, a new request's encode waits
+        // behind *every* queued encode — the victim-timeout mechanism.
+        let tok_workers = if cfg.serve.tokenizer_threads == 0 {
+            (cfg.cpu_cores + 4).min(32)
+        } else {
+            cfg.serve.tokenizer_threads
+        };
+        let pool = TokenizerPool::spawn(&mut sim, tok_workers);
         let env = Env {
             cfg: Rc::new(cfg),
             costs: Rc::new(costs),
@@ -147,41 +216,19 @@ impl ServingSim {
             shm,
             fleet,
             step_done,
+            pool,
         };
-        // API-server tokenizer executor: vLLM's AsyncLLM hands each
-        // request's encode to a ThreadPoolExecutor with
-        // max_workers = min(32, cores + 4) (CPython default). Jobs are
-        // FIFO: under a tokenization flood, a new request's encode waits
-        // behind *every* queued encode — the victim-timeout mechanism.
-        let tok_workers = if env.cfg.serve.tokenizer_threads == 0 {
-            (env.cfg.cpu_cores + 4).min(32)
-        } else {
-            env.cfg.serve.tokenizer_threads
-        };
-        let pool = TokenizerPool::spawn(&mut sim, tok_workers);
-
         // EngineCore task. With control_plane_weight > 1 the engine and
         // workers run at CFS priority (the §VI mitigation).
         let cp_weight = env.cfg.serve.control_plane_weight;
-        {
-            let env = env.clone();
-            let script = Script::new().then(move |_| vec![engine_iter(env, 0, 0)]);
-            sim.spawn_weighted("engine_core", cp_weight, script);
-        }
+        sim.spawn_weighted("engine_core", cp_weight, EngineCore::new(env.clone()));
         // GPU worker tasks (one per rank)
         for rank in 0..env.cfg.n_gpus {
-            let env = env.clone();
-            let script = Script::new().then(move |_| vec![worker_iter(env, rank, 0)]);
-            sim.spawn_weighted("gpu_worker", cp_weight, script);
+            let worker = GpuWorker::new(env.clone(), rank, &mut sim);
+            sim.spawn_weighted("gpu_worker", cp_weight, worker);
         }
 
-        ServingSim {
-            sim,
-            env,
-            pool,
-            next_id: 0,
-            pending: Rc::new(RefCell::new(HashMap::new())),
-        }
+        ServingSim { sim, env }
     }
 
     pub fn config(&self) -> &RunConfig {
@@ -206,7 +253,7 @@ impl ServingSim {
         prompt_tokens: u64,
         max_new_tokens: u64,
     ) -> RequestId {
-        let seed = 0x5EED_0000_0000 + self.next_id; // unique content
+        let seed = 0x5EED_0000_0000 + self.env.shared.borrow().next_id; // unique content
         self.submit_with_seed(at_ns, class, prompt_tokens, max_new_tokens, seed)
     }
 
@@ -222,43 +269,139 @@ impl ServingSim {
         max_new_tokens: u64,
         content_seed: u64,
     ) -> RequestId {
-        let id = self.next_id;
-        self.next_id += 1;
+        self.submit_request(StreamArrival {
+            at_ns,
+            class,
+            prompt_tokens,
+            max_new_tokens,
+            content_seed,
+            tag: 0,
+        })
+    }
+
+    /// Submit one arrival, scheduling its API-server intake at
+    /// `a.at_ns`. Registers the request immediately so [`Self::outcome`]
+    /// can answer before the arrival fires.
+    pub fn submit_request(&mut self, a: StreamArrival) -> RequestId {
         let env = self.env.clone();
-        let s_per_token =
-            env.cfg.system.tokenize_s_per_token / env.cfg.system.cpu_single_core_scale;
-        let http_ns = env.costs.http_ns;
-        let pending = Rc::clone(&self.pending);
-        // Register immediately so `outcome()` can answer before the
-        // arrival callback fires.
-        let mut reg = Request::new(id, class, at_ns, prompt_tokens, max_new_tokens);
-        reg.content_seed = content_seed;
-        pending.borrow_mut().insert(id, reg);
-        let pool = self.pool.clone();
-        self.sim.call_at(at_ns, move |sim| {
-            let mut request =
-                Request::new(id, class, sim.now_ns(), prompt_tokens, max_new_tokens);
-            request.content_seed = content_seed;
-            let tokenize_ns = (prompt_tokens as f64 * s_per_token * 1e9) as u64;
-            let request = Rc::new(RefCell::new(Some(request)));
-            let send_cost = env.channel.send_cost_ns;
-            // One FIFO executor job per request: HTTP parse + encode +
-            // channel send, then hand off to the EngineCore.
-            pool.submit_external(
-                sim,
-                TokJob {
-                    cost_ns: http_ns + tokenize_ns + send_cost,
-                    on_done: Box::new(move |ctx| {
-                        let mut r = request.borrow_mut().take().expect("once");
-                        r.tokenized_at = Some(ctx.now_ns());
-                        pending.borrow_mut().insert(r.id, r.clone());
-                        env.channel.push_external(r);
-                        ctx.signal(env.channel.sent_gate(), 1);
-                    }),
-                },
-            );
-        });
+        let id = {
+            let shared = &mut *env.shared.borrow_mut();
+            let id = shared.next_id;
+            shared.next_id += 1;
+            let mut reg = Request::new(id, a.class, a.at_ns, a.prompt_tokens, a.max_new_tokens);
+            reg.content_seed = a.content_seed;
+            reg.tag = a.tag;
+            shared.pending.insert(reg);
+            id
+        };
+        self.sim
+            .call_at(a.at_ns, move |sim| deliver_arrival(sim, &env, a, id));
         id
+    }
+
+    /// Drive the sim with lazily-pulled arrivals (time-ordered), calling
+    /// `on_outcome` exactly once per submitted request — eagerly when it
+    /// finishes (the request is then evicted from the engine, keeping
+    /// memory proportional to in-flight load, not total volume), or with
+    /// its partial outcome at the horizon. The run ends
+    /// `drain_slack_secs` of virtual time after the last arrival.
+    ///
+    /// The materialized [`crate::workload::scenario::run_trace`] path
+    /// drives this same loop with a `Vec`-backed iterator, which is what
+    /// makes streaming and materialized runs byte-identical.
+    pub fn run_streaming<I, F>(
+        &mut self,
+        arrivals: I,
+        drain_slack_secs: f64,
+        mut on_outcome: F,
+    ) -> StreamStats
+    where
+        I: Iterator<Item = StreamArrival> + 'static,
+        F: FnMut(Outcome),
+    {
+        const SLICE_NS: u64 = 250_000_000;
+        self.env.shared.borrow_mut().harvest = true;
+        let state = Rc::new(RefCell::new(PumpState {
+            src: None::<I>,
+            exhausted: false,
+            submitted: 0,
+            last_at: 0,
+            next_at: None,
+        }));
+        // Kick off the injector chain with the first arrival.
+        {
+            let mut arrivals = arrivals;
+            match arrivals.next() {
+                None => state.borrow_mut().exhausted = true,
+                Some(first) => {
+                    {
+                        let mut s = state.borrow_mut();
+                        s.src = Some(arrivals);
+                        s.next_at = Some(first.at_ns);
+                    }
+                    let env = self.env.clone();
+                    let st = Rc::clone(&state);
+                    self.sim
+                        .call_at(first.at_ns, move |sim| pump(sim, &env, &st, first));
+                }
+            }
+        }
+        let slack_ns = (drain_slack_secs * 1e9) as u64;
+        let mut scratch: Vec<Outcome> = Vec::new();
+        // Phase 1: arrivals remain — advance in slices, draining the
+        // harvest outbox so finished requests leave memory promptly.
+        // Each slice is clamped so the run can never overshoot the
+        // drain horizon of what has been submitted (while still always
+        // reaching the next queued arrival), which keeps the horizon
+        // exact even for drain_slack shorter than one slice.
+        loop {
+            let (exhausted, last_at, next_at) = {
+                let s = state.borrow();
+                (s.exhausted, s.last_at, s.next_at)
+            };
+            if exhausted {
+                break;
+            }
+            let mut target = self.sim.now_ns().saturating_add(SLICE_NS);
+            if let Some(na) = next_at {
+                target = target.min(last_at.saturating_add(slack_ns).max(na));
+            }
+            let reached = self.sim.run_until(target);
+            drain_outbox(&self.env, &mut scratch, &mut on_outcome);
+            if reached < target && !state.borrow().exhausted {
+                break; // event queue drained (defensive; chain keeps one queued)
+            }
+        }
+        // Phase 2: drain window after the last arrival.
+        let end = state.borrow().last_at.saturating_add(slack_ns);
+        while self.sim.now_ns() < end {
+            let target = self.sim.now_ns().saturating_add(SLICE_NS).min(end);
+            let reached = self.sim.run_until(target);
+            drain_outbox(&self.env, &mut scratch, &mut on_outcome);
+            if reached < target {
+                break; // nothing left on the timeline
+            }
+        }
+        drain_outbox(&self.env, &mut scratch, &mut on_outcome);
+        // Requests still unfinished at the horizon: emit their partial
+        // outcomes in id order, and restore conventional (non-evicting)
+        // outcome retention so the sim remains usable afterwards.
+        {
+            let shared = &mut *self.env.shared.borrow_mut();
+            scratch.extend(shared.sched.requests.values().map(Outcome::from_request));
+            scratch.extend(shared.pending.values().map(Outcome::from_request));
+            shared.harvest = false;
+            debug_assert!(shared.outbox.is_empty());
+        }
+        scratch.sort_by_key(|o| o.id);
+        for o in scratch.drain(..) {
+            on_outcome(o);
+        }
+        let s = state.borrow();
+        StreamStats {
+            submitted: s.submitted,
+            last_arrival_ns: s.last_at,
+        }
     }
 
     /// Run the simulation until virtual `secs`.
@@ -270,10 +413,11 @@ impl ServingSim {
     /// Outcome snapshot for one request (pre-scheduler requests report
     /// from the pending registry).
     pub fn outcome(&self, id: RequestId) -> Option<Outcome> {
-        if let Some(r) = self.env.shared.borrow().sched.requests.get(&id) {
+        let shared = self.env.shared.borrow();
+        if let Some(r) = shared.sched.requests.get(id) {
             return Some(Outcome::from_request(r));
         }
-        self.pending.borrow().get(&id).map(Outcome::from_request)
+        shared.pending.get(id).map(Outcome::from_request)
     }
 
     /// All request outcomes (submitted requests that never reached the
@@ -286,17 +430,21 @@ impl ServingSim {
             .values()
             .map(Outcome::from_request)
             .collect();
-        for (id, r) in self.pending.borrow().iter() {
-            if !shared.sched.requests.contains_key(id) {
-                out.push(Outcome::from_request(r));
-            }
-        }
+        out.extend(shared.pending.values().map(Outcome::from_request));
         out.sort_by_key(|o| o.id);
         out
     }
 
     pub fn steps_completed(&self) -> u64 {
         self.env.shared.borrow().steps_completed
+    }
+
+    /// Step plans currently parked for workers. Bounded at 1: the
+    /// EngineCore evicts each plan (into the recycle pool) as soon as
+    /// every rank has acked the step — `tests` pin this so the map can
+    /// never regress into an unbounded-growth leak.
+    pub fn plan_backlog(&self) -> usize {
+        self.env.shared.borrow().plans.len()
     }
 
     /// CPU utilization trace (fraction of allocated cores busy, 100 ms
@@ -329,6 +477,111 @@ impl ServingSim {
     }
 }
 
+// ---------------------------------------------------------------------
+// Arrival delivery + streaming injector
+// ---------------------------------------------------------------------
+
+/// Arrival-time work for one request: register it, then hand one FIFO
+/// executor job (HTTP parse + encode + channel send) to the tokenizer
+/// pool; its completion pushes the tokenized request to the EngineCore.
+fn deliver_arrival(sim: &mut Sim, env: &Env, a: StreamArrival, id: RequestId) {
+    let s_per_token = env.cfg.system.tokenize_s_per_token / env.cfg.system.cpu_single_core_scale;
+    let tokenize_ns = (a.prompt_tokens as f64 * s_per_token * 1e9) as u64;
+    let mut request = Request::new(id, a.class, sim.now_ns(), a.prompt_tokens, a.max_new_tokens);
+    request.content_seed = a.content_seed;
+    request.tag = a.tag;
+    env.shared.borrow_mut().pending.insert(request.clone());
+    let cost_ns = env.costs.http_ns + tokenize_ns + env.channel.send_cost_ns;
+    let envc = env.clone();
+    env.pool.submit_external(
+        sim,
+        TokJob {
+            cost_ns,
+            on_done: Box::new(move |ctx| {
+                let mut r = request;
+                r.tokenized_at = Some(ctx.now_ns());
+                envc.shared.borrow_mut().pending.insert(r.clone());
+                envc.channel.push_external(r);
+                ctx.signal(envc.channel.sent_gate(), 1);
+            }),
+        },
+    );
+}
+
+struct PumpState<I> {
+    /// None only during kick-off (the first arrival is buffered by the
+    /// caller) or after exhaustion.
+    src: Option<I>,
+    exhausted: bool,
+    submitted: u64,
+    last_at: u64,
+    /// Arrival time of the chained (not yet delivered) callback, so the
+    /// driver can clamp its run slices without overshooting the drain
+    /// horizon.
+    next_at: Option<u64>,
+}
+
+/// Self-rescheduling arrival injector: delivers `a` now, then chains a
+/// timed callback for the next arrival (delivering same-instant ones
+/// in-line). Both the materialized and the lazy scenario paths run this
+/// exact chain, so their event sequences — and outcomes — match.
+fn pump<I: Iterator<Item = StreamArrival> + 'static>(
+    sim: &mut Sim,
+    env: &Env,
+    state: &Rc<RefCell<PumpState<I>>>,
+    mut a: StreamArrival,
+) {
+    loop {
+        let id = {
+            let shared = &mut *env.shared.borrow_mut();
+            let id = shared.next_id;
+            shared.next_id += 1;
+            id
+        };
+        deliver_arrival(sim, env, a, id);
+        {
+            let mut s = state.borrow_mut();
+            s.submitted += 1;
+            s.last_at = s.last_at.max(a.at_ns);
+        }
+        let next = {
+            let mut s = state.borrow_mut();
+            s.src.as_mut().and_then(Iterator::next)
+        };
+        match next {
+            None => {
+                let mut s = state.borrow_mut();
+                s.exhausted = true;
+                s.src = None;
+                s.next_at = None;
+                return;
+            }
+            Some(n) if n.at_ns <= sim.now_ns() => a = n,
+            Some(n) => {
+                state.borrow_mut().next_at = Some(n.at_ns);
+                let env = env.clone();
+                let st = Rc::clone(state);
+                sim.call_at(n.at_ns, move |sim| pump(sim, &env, &st, n));
+                return;
+            }
+        }
+    }
+}
+
+fn drain_outbox(env: &Env, scratch: &mut Vec<Outcome>, on_outcome: &mut impl FnMut(Outcome)) {
+    {
+        let shared = &mut *env.shared.borrow_mut();
+        std::mem::swap(&mut shared.outbox, scratch);
+    }
+    for o in scratch.drain(..) {
+        on_outcome(o);
+    }
+}
+
+// ---------------------------------------------------------------------
+// EngineCore / GPU-worker state machines
+// ---------------------------------------------------------------------
+
 fn schedule_cost(costs: &EngineCosts, batch: usize) -> u64 {
     costs.schedule_base_ns + costs.schedule_per_req_ns * batch as u64
 }
@@ -337,146 +590,324 @@ fn sample_cost(costs: &EngineCosts, batch: usize) -> u64 {
     costs.sample_base_ns + costs.sample_per_req_ns * batch as u64
 }
 
-/// One EngineCore loop iteration.
-fn engine_iter(env: Env, step_seq: u64, msgs_received: u64) -> Instr {
-    Instr::call(move |ctx| {
-        // Drain newly tokenized requests from the API-server channel.
-        let mut received = msgs_received;
-        while let Some(req) = env.channel.try_recv() {
-            env.shared.borrow_mut().sched.enqueue(req);
-            received += 1;
-        }
-        // Build the next step.
-        let plan = {
-            let shared = &mut *env.shared.borrow_mut();
-            scheduler::schedule(
-                &mut shared.sched,
-                &mut shared.kv,
-                shared.prefix.as_mut(),
-                &env.cfg.serve,
-                ctx.now_ns(),
-            )
-        };
-        match plan {
-            None => {
-                // Idle: sleep until another request arrives.
-                vec![
-                    Instr::block(env.channel.sent_gate(), received + 1),
-                    engine_iter(env.clone(), step_seq, received),
-                ]
-            }
-            Some(mut plan) => {
-                plan.seq = step_seq;
-                plan.collective_id = env.fleet.borrow_mut().new_collective();
-                let batch = plan.batch_size();
-                env.shared.borrow_mut().plans.insert(step_seq, plan.clone());
+#[derive(Clone, Copy, PartialEq)]
+enum EcState {
+    /// Drain the channel and build the next plan (or idle-block).
+    Schedule,
+    /// Busy-poll reader flags until the ring slot is free.
+    PublishPoll,
+    /// Ring write paid; signal the writer flag, await every rank's ack.
+    Publish,
+    /// All ranks acked; pay the sampling/postprocessing cost.
+    Sample,
+    /// Apply completion effects, recycle the plan, and loop.
+    Complete,
+}
 
-                let mut instrs = vec![Instr::compute(schedule_cost(&env.costs, batch))];
-                // Broadcast the plan over the shm ring (busy-polls reader
-                // flags when the ring is full).
-                instrs.extend(env.shm.enqueue_instrs(step_seq));
-                // Wait until every rank reports step completion.
-                instrs.push(Instr::block(
-                    env.step_done,
-                    (step_seq + 1) * env.cfg.n_gpus as u64,
-                ));
-                // Sample + postprocess on the engine thread.
-                instrs.push(Instr::compute(sample_cost(&env.costs, batch)));
-                {
-                    let env = env.clone();
-                    instrs.push(Instr::effect(move |ctx| {
-                        let now = ctx.now_ns();
-                        let shared = &mut *env.shared.borrow_mut();
-                        let plan = shared.plans.remove(&step_seq).expect("plan");
-                        let (_firsts, _finished) = scheduler::complete_step(
+/// The EngineCore loop as a persistent state machine: one allocation at
+/// spawn, none per step.
+struct EngineCore {
+    env: Env,
+    step_seq: u64,
+    /// Messages drained from the API-server channel so far (block
+    /// target when idle).
+    received: u64,
+    /// Current step's batch size (cost model input).
+    batch: usize,
+    /// Next reader flag to busy-poll while publishing.
+    poll_rank: usize,
+    /// Copy of the finished-id slice for harvest eviction.
+    finish_scratch: Vec<RequestId>,
+    state: EcState,
+}
+
+impl EngineCore {
+    fn new(env: Env) -> EngineCore {
+        EngineCore {
+            env,
+            step_seq: 0,
+            received: 0,
+            batch: 0,
+            poll_rank: 0,
+            finish_scratch: Vec::new(),
+            state: EcState::Schedule,
+        }
+    }
+}
+
+impl Program for EngineCore {
+    fn step(&mut self, ctx: &mut TaskCtx) -> Op {
+        loop {
+            match self.state {
+                EcState::Schedule => {
+                    let has_work = {
+                        let shared = &mut *self.env.shared.borrow_mut();
+                        // Drain newly tokenized requests from the
+                        // API-server channel into the scheduler.
+                        while let Some(req) = self.env.channel.try_recv() {
+                            shared.pending.remove(req.id);
+                            shared.sched.enqueue(req);
+                            self.received += 1;
+                        }
+                        let mut plan = shared.plan_pool.pop().unwrap_or_default();
+                        let has_work = scheduler::schedule_into(
+                            &mut shared.sched,
+                            &mut shared.kv,
+                            shared.prefix.as_mut(),
+                            &self.env.cfg.serve,
+                            ctx.now_ns(),
+                            &mut plan,
+                        );
+                        if has_work {
+                            plan.seq = self.step_seq;
+                            plan.collective_id = self.env.fleet.borrow_mut().new_collective();
+                            self.batch = plan.batch_size();
+                            shared.plans.insert(self.step_seq, plan);
+                        } else {
+                            shared.plan_pool.push(plan);
+                        }
+                        has_work
+                    };
+                    if !has_work {
+                        // Idle: sleep until another request arrives.
+                        return Op::Block {
+                            gate: self.env.channel.sent_gate(),
+                            target: self.received + 1,
+                        };
+                    }
+                    self.poll_rank = 0;
+                    self.state = EcState::PublishPoll;
+                    return Op::Compute {
+                        ns: schedule_cost(&self.env.costs, self.batch),
+                    };
+                }
+                EcState::PublishPoll => {
+                    // Broadcast the plan over the shm ring: when the ring
+                    // may still hold seq − capacity, busy-poll every
+                    // reader's flag until the slot is free (§V-B).
+                    let shm = &self.env.shm;
+                    if self.step_seq >= shm.capacity && self.poll_rank < shm.reader_gates.len() {
+                        let gate = shm.reader_gates[self.poll_rank];
+                        self.poll_rank += 1;
+                        return Op::BusyPoll {
+                            gate,
+                            target: self.step_seq + 1 - shm.capacity,
+                        };
+                    }
+                    self.state = EcState::Publish;
+                    return Op::Compute {
+                        ns: shm.write_cost_ns,
+                    };
+                }
+                EcState::Publish => {
+                    ctx.signal(self.env.shm.writer_gate, 1);
+                    self.state = EcState::Sample;
+                    // Wait until every rank reports step completion.
+                    return Op::Block {
+                        gate: self.env.step_done,
+                        target: (self.step_seq + 1) * self.env.cfg.n_gpus as u64,
+                    };
+                }
+                EcState::Sample => {
+                    self.state = EcState::Complete;
+                    return Op::Compute {
+                        ns: sample_cost(&self.env.costs, self.batch),
+                    };
+                }
+                EcState::Complete => {
+                    let now = ctx.now_ns();
+                    let shared = &mut *self.env.shared.borrow_mut();
+                    // Evict the delivered plan (every rank acked via
+                    // step_done) and recycle it through the pool.
+                    let plan = shared.plans.remove(&self.step_seq).expect("plan");
+                    let harvesting = shared.harvest;
+                    {
+                        let (_firsts, finished) = scheduler::complete_step(
                             &mut shared.sched,
                             &mut shared.kv,
                             &plan,
                             now,
                         );
-                        shared.steps_completed += 1;
-                    }));
+                        if harvesting {
+                            self.finish_scratch.clear();
+                            self.finish_scratch.extend_from_slice(finished);
+                        }
+                    }
+                    if harvesting {
+                        // Streaming: finished requests leave the slab now;
+                        // their outcomes park in the outbox for the driver.
+                        for &id in &self.finish_scratch {
+                            if let Some(r) = shared.sched.requests.remove(id) {
+                                shared.outbox.push(Outcome::from_request(&r));
+                            }
+                        }
+                    }
+                    shared.steps_completed += 1;
+                    shared.plan_pool.push(plan);
+                    self.step_seq += 1;
+                    self.state = EcState::Schedule;
                 }
-                instrs.push(engine_iter(env.clone(), step_seq + 1, received));
-                instrs
             }
         }
-    })
+    }
 }
 
-/// One GPU-worker loop iteration for `rank`.
-fn worker_iter(env: Env, rank: usize, step_seq: u64) -> Instr {
-    Instr::call(move |_ctx| {
-        // Busy-poll the shm ring for this step's plan (the §V-B dequeue).
-        let mut instrs = env.shm.dequeue_instrs(rank, step_seq);
-        {
-            let env = env.clone();
-            instrs.push(Instr::call(move |ctx| {
-                let (launch_cpu, comp_dur, comm_dur, collective_id) = {
-                    let shared = env.shared.borrow();
-                    let plan = shared
-                        .plans
-                        .get(&step_seq)
-                        .expect("plan present while workers run");
-                    step_durations(&env.cfg, plan)
-                };
-                let kdone = ctx.new_gate();
-                let fleet = Rc::clone(&env.fleet);
-                let n_gpus = env.cfg.n_gpus;
-                let step_done = env.step_done;
-                vec![
+/// Per-step kernel-launch parameters handed from the worker's CPU task
+/// to its (shared, reusable) device-launch callback.
+#[derive(Debug, Clone, Copy, Default)]
+struct LaunchParams {
+    comp_ns: u64,
+    comm_ns: u64,
+    collective_id: u64,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum GwState {
+    /// Busy-poll the shm ring for this step's plan (the §V-B dequeue).
+    PollPlan,
+    /// Pay the ring read/deserialize cost.
+    Read,
+    /// Ack the ring slot, read the plan, pay the launch CPU cost.
+    Ack,
+    /// Hand the kernels to the device stream, wait for completion.
+    Launch,
+    /// Device done: ack the step to the EngineCore and loop.
+    AwaitDevice,
+}
+
+/// One GPU worker (rank) as a persistent state machine. The device
+/// launch rides a [`SharedCall`] created once at spawn; per-step launch
+/// parameters travel through a `Cell`, so stepping never allocates.
+struct GpuWorker {
+    env: Env,
+    rank: usize,
+    step_seq: u64,
+    /// Cumulative device-completion gate: the final kernel of step `s`
+    /// signals +1, the worker blocks on target `s + 1`. One gate for the
+    /// worker's lifetime (the old per-step gate grew the gate table
+    /// without bound).
+    kdone: GateId,
+    launch: Rc<Cell<LaunchParams>>,
+    launch_call: SharedCall,
+    state: GwState,
+}
+
+impl GpuWorker {
+    fn new(env: Env, rank: usize, sim: &mut Sim) -> GpuWorker {
+        let kdone = sim.new_gate();
+        let launch = Rc::new(Cell::new(LaunchParams::default()));
+        let launch_call: SharedCall = {
+            let fleet = Rc::clone(&env.fleet);
+            let cell = Rc::clone(&launch);
+            let n_gpus = env.cfg.n_gpus;
+            Rc::new(move |sim: &mut Sim, _arg: u64| {
+                let p = cell.get();
+                gpu::enqueue(
+                    &fleet,
+                    sim,
+                    rank,
+                    Kernel {
+                        kind: KernelKind::Compute,
+                        dur_ns: p.comp_ns,
+                        done_gate: None,
+                    },
+                );
+                if n_gpus > 1 {
+                    gpu::enqueue(
+                        &fleet,
+                        sim,
+                        rank,
+                        Kernel {
+                            kind: KernelKind::Collective {
+                                id: p.collective_id,
+                            },
+                            dur_ns: p.comm_ns,
+                            done_gate: Some(kdone),
+                        },
+                    );
+                } else {
+                    // single GPU: completion rides the compute kernel;
+                    // enqueue a zero-length marker
+                    gpu::enqueue(
+                        &fleet,
+                        sim,
+                        rank,
+                        Kernel {
+                            kind: KernelKind::Compute,
+                            dur_ns: 0,
+                            done_gate: Some(kdone),
+                        },
+                    );
+                }
+            })
+        };
+        GpuWorker {
+            env,
+            rank,
+            step_seq: 0,
+            kdone,
+            launch,
+            launch_call,
+            state: GwState::PollPlan,
+        }
+    }
+}
+
+impl Program for GpuWorker {
+    fn step(&mut self, ctx: &mut TaskCtx) -> Op {
+        loop {
+            match self.state {
+                GwState::PollPlan => {
+                    self.state = GwState::Read;
+                    return Op::BusyPoll {
+                        gate: self.env.shm.writer_gate,
+                        target: self.step_seq + 1,
+                    };
+                }
+                GwState::Read => {
+                    self.state = GwState::Ack;
+                    return Op::Compute {
+                        ns: self.env.shm.read_cost_ns,
+                    };
+                }
+                GwState::Ack => {
+                    ctx.signal(self.env.shm.reader_gates[self.rank], 1);
+                    let (launch_cpu, comp, comm, collective_id) = {
+                        let shared = self.env.shared.borrow();
+                        let plan = shared
+                            .plans
+                            .get(&self.step_seq)
+                            .expect("plan present while workers run");
+                        step_durations(&self.env.cfg, plan)
+                    };
+                    self.launch.set(LaunchParams {
+                        comp_ns: comp,
+                        comm_ns: comm,
+                        collective_id,
+                    });
+                    self.state = GwState::Launch;
                     // CPU: issue the kernel launches (delayed under
                     // contention → GPU idles → §V-A).
-                    Instr::compute(launch_cpu),
-                    Instr::effect(move |ctx| {
-                        let t = ctx.now_ns();
-                        ctx.call_at(t, move |sim| {
-                            gpu::enqueue(
-                                &fleet,
-                                sim,
-                                rank,
-                                Kernel {
-                                    kind: KernelKind::Compute,
-                                    dur_ns: comp_dur,
-                                    done_gate: None,
-                                },
-                            );
-                            if n_gpus > 1 {
-                                gpu::enqueue(
-                                    &fleet,
-                                    sim,
-                                    rank,
-                                    Kernel {
-                                        kind: KernelKind::Collective { id: collective_id },
-                                        dur_ns: comm_dur,
-                                        done_gate: Some(kdone),
-                                    },
-                                );
-                            } else {
-                                // single GPU: completion rides the compute
-                                // kernel; enqueue a zero-length marker
-                                gpu::enqueue(
-                                    &fleet,
-                                    sim,
-                                    rank,
-                                    Kernel {
-                                        kind: KernelKind::Compute,
-                                        dur_ns: 0,
-                                        done_gate: Some(kdone),
-                                    },
-                                );
-                            }
-                        });
-                    }),
+                    return Op::Compute { ns: launch_cpu };
+                }
+                GwState::Launch => {
+                    let t = ctx.now_ns();
+                    ctx.call_at_shared(t, Rc::clone(&self.launch_call), 0);
+                    self.state = GwState::AwaitDevice;
                     // Wait for the device to finish the step.
-                    Instr::block(kdone, 1),
-                    Instr::effect(move |ctx| ctx.signal(step_done, 1)),
-                ]
-            }));
+                    return Op::Block {
+                        gate: self.kdone,
+                        target: self.step_seq + 1,
+                    };
+                }
+                GwState::AwaitDevice => {
+                    ctx.signal(self.env.step_done, 1);
+                    self.step_seq += 1;
+                    self.state = GwState::PollPlan;
+                }
+            }
         }
-        instrs.push(worker_iter(env.clone(), rank, step_seq + 1));
-        instrs
-    })
+    }
 }
 
 /// Compute (launch CPU ns, compute kernel ns, collective kernel ns,
@@ -629,5 +1060,55 @@ mod tests {
                 .collect::<Vec<_>>()
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn plan_map_stays_bounded_over_a_long_run() {
+        // Regression pin for the plans-map lifecycle: every delivered
+        // plan is evicted into the recycle pool on completion, so the
+        // map never holds more than the single in-flight step no matter
+        // how many steps run.
+        let mut s = ServingSim::new(small_cfg(4, 16));
+        for i in 0..24u64 {
+            s.submit_at(i * 100_000_000, ReqClass::Normal, 3_000, 16);
+        }
+        let mut max_backlog = 0;
+        for k in 1..=240 {
+            s.run_secs(k as f64 * 0.25);
+            max_backlog = max_backlog.max(s.plan_backlog());
+        }
+        assert!(s.steps_completed() > 100, "steps {}", s.steps_completed());
+        assert!(max_backlog <= 1, "plan backlog grew to {max_backlog}");
+    }
+
+    #[test]
+    fn streaming_run_harvests_every_outcome_once() {
+        let cfg = small_cfg(4, 16);
+        let arrivals: Vec<StreamArrival> = (0..10u64)
+            .map(|i| StreamArrival {
+                at_ns: i * 200_000_000,
+                class: ReqClass::Normal,
+                prompt_tokens: 2_000,
+                max_new_tokens: 4,
+                content_seed: 1000 + i,
+                tag: (i % 2) as u32,
+            })
+            .collect();
+        let mut sim = ServingSim::new(cfg);
+        let mut seen = Vec::new();
+        let stats = sim.run_streaming(arrivals.into_iter(), 30.0, |o| seen.push(o));
+        assert_eq!(stats.submitted, 10);
+        assert_eq!(stats.last_arrival_ns, 9 * 200_000_000);
+        assert_eq!(seen.len(), 10, "one outcome per request");
+        let mut ids: Vec<_> = seen.iter().map(|o| o.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 10, "no duplicate harvest");
+        assert!(seen.iter().all(|o| o.e2e_ns.is_some()), "all finished");
+        assert_eq!(seen.iter().filter(|o| o.tag == 1).count(), 5);
+        // harvested requests left the engine: the slabs are empty
+        let shared = sim.env.shared.borrow();
+        assert_eq!(shared.sched.requests.len(), 0);
+        assert_eq!(shared.pending.len(), 0);
     }
 }

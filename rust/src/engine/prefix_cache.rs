@@ -8,14 +8,15 @@
 //! attackers distinct seeds, so — as in the paper — attacker floods get
 //! no relief from prefix caching).
 
-use std::collections::HashMap;
+use rustc_hash::FxHashMap;
 
 #[derive(Debug, Clone)]
 pub struct PrefixCache {
     page_tokens: u64,
     capacity_pages: usize,
-    /// (content_seed, page_index) → LRU tick.
-    entries: HashMap<(u64, u64), u64>,
+    /// (content_seed, page_index) → LRU tick. Fx-hashed: admission probes
+    /// one key per prompt page on the engine's scheduling path.
+    entries: FxHashMap<(u64, u64), u64>,
     tick: u64,
     pub hits: u64,
     pub misses: u64,
@@ -27,7 +28,7 @@ impl PrefixCache {
         PrefixCache {
             page_tokens,
             capacity_pages,
-            entries: HashMap::new(),
+            entries: FxHashMap::default(),
             tick: 0,
             hits: 0,
             misses: 0,

@@ -54,6 +54,10 @@ pub struct Request {
     /// CPU tokenization cost is paid per request — that is what makes it
     /// a *CPU*-load experiment.
     pub content_seed: u64,
+    /// Opaque caller tag carried into the [`Outcome`] (the scenario
+    /// drivers store the workload class index here so streaming runs can
+    /// aggregate per class without a side table).
+    pub tag: u32,
 
     pub phase: ReqPhase,
     /// Prefill progress: prompt tokens processed so far.
@@ -84,6 +88,7 @@ impl Request {
             prompt_tokens,
             max_new_tokens,
             content_seed: id, // unique content by default
+            tag: 0,
             phase: ReqPhase::Tokenizing,
             prefilled_tokens: 0,
             cached_tokens: 0,
@@ -110,11 +115,14 @@ impl Request {
     }
 }
 
-/// Final outcome for reporting.
-#[derive(Debug, Clone)]
+/// Final outcome for reporting. `PartialEq`/`Eq` so differential tests
+/// can pin streaming and materialized runs byte-identical.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Outcome {
     pub id: RequestId,
     pub class: ReqClass,
+    /// Caller tag copied from the request (workload class index).
+    pub tag: u32,
     pub arrival_ns: u64,
     pub prompt_tokens: u64,
     pub tokenize_latency_ns: Option<u64>,
@@ -129,6 +137,7 @@ impl Outcome {
         Outcome {
             id: r.id,
             class: r.class,
+            tag: r.tag,
             arrival_ns: r.arrival_ns,
             prompt_tokens: r.prompt_tokens,
             tokenize_latency_ns: r.tokenized_at.map(|t| t - r.arrival_ns),

@@ -3,12 +3,19 @@
 //! token per running request with prefill chunks drawn from a shared
 //! token budget; waiting requests are admitted FCFS when the batch and
 //! the KV cache have room.
+//!
+//! Hot-path discipline: requests live in a paged [`RequestSlab`] (two
+//! array indexings per lookup, no hashing), step plans are recycled
+//! through the engine's plan pool via [`schedule_into`], and
+//! [`complete_step`] reports first-token/finished ids through reusable
+//! scratch buffers — steady-state stepping never touches the allocator.
 
 use super::kv_cache::KvCache;
 use super::prefix_cache::PrefixCache;
 use super::request::{ReqPhase, Request, RequestId};
+use super::slab::RequestSlab;
 use crate::config::ServeConfig;
-use std::collections::{HashMap, VecDeque};
+use std::collections::VecDeque;
 
 /// One engine step's worth of GPU work, broadcast to all TP workers.
 #[derive(Debug, Clone, Default)]
@@ -36,15 +43,28 @@ impl StepPlan {
     pub fn prefill_tokens(&self) -> u64 {
         self.prefill.iter().map(|(_, n, _)| n).sum()
     }
+
+    /// Clear for reuse, keeping the `prefill`/`decode` capacity (the
+    /// plan-pool recycle path).
+    pub fn reset(&mut self) {
+        self.seq = 0;
+        self.prefill.clear();
+        self.decode.clear();
+        self.decode_mean_ctx = 0;
+        self.collective_id = 0;
+    }
 }
 
 /// Scheduler-owned request state.
 #[derive(Debug, Default)]
 pub struct SchedState {
-    pub requests: HashMap<RequestId, Request>,
+    pub requests: RequestSlab,
     pub waiting: VecDeque<RequestId>,
     /// Requests admitted (prefill or decode phases).
     pub running: Vec<RequestId>,
+    /// Reusable buffers [`complete_step`] returns slices of.
+    first_scratch: Vec<RequestId>,
+    finished_scratch: Vec<RequestId>,
 }
 
 impl SchedState {
@@ -56,7 +76,7 @@ impl SchedState {
     pub fn enqueue(&mut self, mut request: Request) {
         request.phase = ReqPhase::Waiting;
         self.waiting.push_back(request.id);
-        self.requests.insert(request.id, request);
+        self.requests.insert(request);
     }
 
     pub fn n_waiting(&self) -> usize {
@@ -68,28 +88,30 @@ impl SchedState {
     }
 
     pub fn get(&self, id: RequestId) -> Option<&Request> {
-        self.requests.get(&id)
+        self.requests.get(id)
     }
 }
 
-/// Build the next step plan; mutates request phases and the KV cache
-/// (admission reserves pages; prefix-cache lookups happen at admission,
-/// as in vLLM). Returns None if there is nothing to do.
-pub fn schedule(
+/// Build the next step plan into a caller-supplied (pooled) `plan`;
+/// mutates request phases and the KV cache (admission reserves pages;
+/// prefix-cache lookups happen at admission, as in vLLM). Returns false
+/// — leaving `plan` empty — if there is nothing to do.
+pub fn schedule_into(
     state: &mut SchedState,
     kv: &mut KvCache,
     prefix: Option<&mut PrefixCache>,
     cfg: &ServeConfig,
     now_ns: u64,
-) -> Option<StepPlan> {
-    let mut plan = StepPlan::default();
+    plan: &mut StepPlan,
+) -> bool {
+    plan.reset();
     let mut budget = cfg.prefill_chunk_tokens as u64;
 
     // 1. decode: one token per running decode-phase request (each decode
     //    token counts against the step token budget, vLLM-style).
     let mut ctx_sum = 0u64;
     for &id in &state.running {
-        let r = &state.requests[&id];
+        let r = state.requests.get(id).expect("running request present");
         if r.phase == ReqPhase::Decode && budget > 0 {
             plan.decode.push(id);
             ctx_sum += r.context_len();
@@ -105,7 +127,7 @@ pub fn schedule(
         if budget == 0 {
             break;
         }
-        let r = state.requests.get_mut(&id).unwrap();
+        let r = state.requests.get_mut(id).expect("running request present");
         if r.phase == ReqPhase::Prefill {
             let chunk = r.prefill_remaining().min(budget);
             if chunk > 0 {
@@ -122,7 +144,7 @@ pub fn schedule(
         if plan.batch_size() >= cfg.max_batch_size || budget == 0 {
             break;
         }
-        let r = state.requests.get_mut(&id).unwrap();
+        let r = state.requests.get_mut(id).expect("waiting request present");
         // Prefix-cache probe first: cached blocks are shared
         // (ref-counted in vLLM), so they don't count against this
         // request's new-page reservation.
@@ -151,27 +173,44 @@ pub fn schedule(
         state.running.push(id);
     }
 
-    if plan.is_empty() {
-        None
-    } else {
+    !plan.is_empty()
+}
+
+/// Allocating convenience wrapper over [`schedule_into`] (tests and
+/// one-off callers; the engine loop recycles plans through its pool).
+pub fn schedule(
+    state: &mut SchedState,
+    kv: &mut KvCache,
+    prefix: Option<&mut PrefixCache>,
+    cfg: &ServeConfig,
+    now_ns: u64,
+) -> Option<StepPlan> {
+    let mut plan = StepPlan::default();
+    if schedule_into(state, kv, prefix, cfg, now_ns, &mut plan) {
         Some(plan)
+    } else {
+        None
     }
 }
 
 /// Apply step completion: advance prefill progress, emit decode tokens,
 /// transition phases, release finished requests' KV. Returns requests
-/// that produced their first token and requests that finished.
-pub fn complete_step(
-    state: &mut SchedState,
+/// that produced their first token and requests that finished, as
+/// slices of scheduler-owned scratch (valid until the next call — no
+/// per-step Vec).
+pub fn complete_step<'a>(
+    state: &'a mut SchedState,
     kv: &mut KvCache,
     plan: &StepPlan,
     now_ns: u64,
-) -> (Vec<RequestId>, Vec<RequestId>) {
-    let mut first_tokens = Vec::new();
-    let mut finished = Vec::new();
+) -> (&'a [RequestId], &'a [RequestId]) {
+    let mut first_tokens = std::mem::take(&mut state.first_scratch);
+    let mut finished = std::mem::take(&mut state.finished_scratch);
+    first_tokens.clear();
+    finished.clear();
 
     for &(id, chunk, _) in &plan.prefill {
-        let r = state.requests.get_mut(&id).unwrap();
+        let r = state.requests.get_mut(id).expect("prefill request present");
         r.prefilled_tokens += chunk;
         debug_assert!(r.prefilled_tokens <= r.prompt_tokens);
         if r.prefilled_tokens == r.prompt_tokens {
@@ -190,7 +229,7 @@ pub fn complete_step(
     }
 
     for &id in &plan.decode {
-        let r = state.requests.get_mut(&id).unwrap();
+        let r = state.requests.get_mut(id).expect("decode request present");
         r.generated_tokens += 1;
         if r.generated_tokens >= r.max_new_tokens {
             r.phase = ReqPhase::Finished;
@@ -204,7 +243,9 @@ pub fn complete_step(
         state.running.retain(|&x| x != id);
     }
 
-    (first_tokens, finished)
+    state.first_scratch = first_tokens;
+    state.finished_scratch = finished;
+    (&state.first_scratch, &state.finished_scratch)
 }
 
 #[cfg(test)]
@@ -245,7 +286,7 @@ mod tests {
         let plan = schedule(&mut state, &mut kv, None, &cfg, 40).unwrap();
         assert_eq!(plan.prefill, vec![(1, 50, 250)]);
         let (first, _) = complete_step(&mut state, &mut kv, &plan, 50);
-        assert_eq!(first, vec![1]);
+        assert_eq!(first.to_vec(), vec![1]);
         assert_eq!(state.get(1).unwrap().first_token_at, Some(50));
         assert_eq!(state.get(1).unwrap().phase, ReqPhase::Decode);
     }
@@ -334,5 +375,26 @@ mod tests {
     fn empty_state_schedules_nothing() {
         let (mut state, mut kv) = setup();
         assert!(schedule(&mut state, &mut kv, None, &cfg(), 0).is_none());
+    }
+
+    #[test]
+    fn schedule_into_recycles_one_plan_to_completion() {
+        let (mut state, mut kv) = setup();
+        let cfg = cfg();
+        for id in 1..=4 {
+            state.enqueue(req(id, 10, 3));
+        }
+        // One plan drives the whole run: reset() + refill per step.
+        let mut plan = StepPlan::default();
+        let mut steps = 0u64;
+        while schedule_into(&mut state, &mut kv, None, &cfg, steps, &mut plan) {
+            complete_step(&mut state, &mut kv, &plan, steps + 1);
+            steps += 1;
+            assert!(steps < 100, "livelock");
+        }
+        assert!(steps >= 3, "prefill + decode steps ran: {steps}");
+        assert!(state.requests.values().all(|r| r.is_done()));
+        assert!(plan.is_empty(), "failed schedule leaves the plan reset");
+        assert!(plan.decode.capacity() >= 4, "capacity retained for reuse");
     }
 }

@@ -1,0 +1,172 @@
+//! Paged, id-indexed request storage for the serving hot path.
+//!
+//! [`RequestId`]s are dense (the engine assigns them sequentially), so a
+//! request lookup is two array indexings — page, then slot — instead of
+//! a hash probe, and the scheduler's per-step walk over the running set
+//! touches contiguous memory. Pages hold [`PAGE`] slots; when the last
+//! live request on a page is removed (streaming runs evict requests as
+//! they finish) the whole page is freed, so a million-request streaming
+//! run holds only the in-flight id span in memory while the page table
+//! itself costs 8 bytes per [`PAGE`] ids ever issued.
+
+use super::request::{Request, RequestId};
+
+const PAGE_BITS: usize = 10;
+/// Requests per page (1024: ~140 KB per page of inline `Request`s).
+pub const PAGE: usize = 1 << PAGE_BITS;
+
+type Page = Box<[Option<Request>]>;
+
+fn new_page() -> Page {
+    (0..PAGE).map(|_| None).collect()
+}
+
+#[derive(Debug, Default)]
+pub struct RequestSlab {
+    pages: Vec<Option<Page>>,
+    page_live: Vec<u32>,
+    len: usize,
+}
+
+impl RequestSlab {
+    pub fn new() -> RequestSlab {
+        RequestSlab::default()
+    }
+
+    #[inline]
+    fn split(id: RequestId) -> (usize, usize) {
+        ((id >> PAGE_BITS) as usize, (id as usize) & (PAGE - 1))
+    }
+
+    /// Live requests currently stored.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Pages currently allocated (drained id ranges release theirs).
+    pub fn live_pages(&self) -> usize {
+        self.pages.iter().filter(|p| p.is_some()).count()
+    }
+
+    pub fn contains(&self, id: RequestId) -> bool {
+        self.get(id).is_some()
+    }
+
+    #[inline]
+    pub fn get(&self, id: RequestId) -> Option<&Request> {
+        let (p, s) = Self::split(id);
+        self.pages.get(p)?.as_ref()?[s].as_ref()
+    }
+
+    #[inline]
+    pub fn get_mut(&mut self, id: RequestId) -> Option<&mut Request> {
+        let (p, s) = Self::split(id);
+        self.pages.get_mut(p)?.as_mut()?[s].as_mut()
+    }
+
+    /// Insert (or overwrite, for registry refreshes of the same id)
+    /// keyed by `req.id`.
+    pub fn insert(&mut self, req: Request) {
+        let (p, s) = Self::split(req.id);
+        if p >= self.pages.len() {
+            self.pages.resize_with(p + 1, || None);
+            self.page_live.resize(p + 1, 0);
+        }
+        let page = self.pages[p].get_or_insert_with(new_page);
+        if page[s].is_none() {
+            self.page_live[p] += 1;
+            self.len += 1;
+        }
+        page[s] = Some(req);
+    }
+
+    /// Remove and return the request, freeing its whole page when it was
+    /// the last live entry there.
+    pub fn remove(&mut self, id: RequestId) -> Option<Request> {
+        let (p, s) = Self::split(id);
+        let req = self.pages.get_mut(p)?.as_mut()?[s].take()?;
+        self.page_live[p] -= 1;
+        self.len -= 1;
+        if self.page_live[p] == 0 {
+            self.pages[p] = None;
+        }
+        Some(req)
+    }
+
+    /// Live requests in ascending id order.
+    pub fn values(&self) -> impl Iterator<Item = &Request> + '_ {
+        self.pages
+            .iter()
+            .flatten()
+            .flat_map(|page| page.iter().filter_map(|slot| slot.as_ref()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::request::ReqClass;
+
+    fn req(id: RequestId) -> Request {
+        Request::new(id, ReqClass::Normal, 0, 100, 4)
+    }
+
+    #[test]
+    fn insert_get_remove_roundtrip() {
+        let mut slab = RequestSlab::new();
+        for id in [0u64, 7, 1023, 1024, 5000] {
+            slab.insert(req(id));
+        }
+        assert_eq!(slab.len(), 5);
+        assert!(slab.contains(1024));
+        assert!(!slab.contains(1));
+        assert_eq!(slab.get(7).unwrap().id, 7);
+        slab.get_mut(7).unwrap().generated_tokens = 3;
+        assert_eq!(slab.get(7).unwrap().generated_tokens, 3);
+        assert_eq!(slab.remove(7).unwrap().id, 7);
+        assert!(slab.remove(7).is_none());
+        assert_eq!(slab.len(), 4);
+    }
+
+    #[test]
+    fn overwrite_does_not_double_count() {
+        let mut slab = RequestSlab::new();
+        slab.insert(req(3));
+        let mut updated = req(3);
+        updated.generated_tokens = 9;
+        slab.insert(updated);
+        assert_eq!(slab.len(), 1);
+        assert_eq!(slab.get(3).unwrap().generated_tokens, 9);
+    }
+
+    #[test]
+    fn drained_pages_are_freed() {
+        let mut slab = RequestSlab::new();
+        for id in 0..(PAGE as u64 * 2) {
+            slab.insert(req(id));
+        }
+        assert_eq!(slab.live_pages(), 2);
+        for id in 0..(PAGE as u64) {
+            slab.remove(id);
+        }
+        assert_eq!(slab.live_pages(), 1, "fully-drained page released");
+        assert_eq!(slab.len(), PAGE);
+        // the freed page can be repopulated
+        slab.insert(req(1));
+        assert_eq!(slab.live_pages(), 2);
+    }
+
+    #[test]
+    fn values_iterate_in_id_order() {
+        let mut slab = RequestSlab::new();
+        for id in [5000u64, 2, 1024, 0, 9] {
+            slab.insert(req(id));
+        }
+        let ids: Vec<RequestId> = slab.values().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 2, 9, 1024, 5000]);
+    }
+}

@@ -6,9 +6,13 @@
 //! parallel; under concurrent requests the pool saturates and *every*
 //! thread competes with the engine's dispatch threads for cores — the
 //! paper's central contention mechanism.
+//!
+//! Workers are hand-written [`Program`] state machines (no per-iteration
+//! boxed script instructions): between jobs a worker holds no heap state
+//! beyond its queue slot, so an idle or steady-state pool never touches
+//! the allocator.
 
-use crate::simcpu::script::{Instr, Script};
-use crate::simcpu::{GateId, Sim, TaskCtx};
+use crate::simcpu::{GateId, Op, Program, Sim, TaskCtx};
 use std::cell::RefCell;
 use std::collections::VecDeque;
 use std::rc::Rc;
@@ -49,9 +53,15 @@ impl TokenizerPool {
             n_threads,
         };
         for _ in 0..n_threads {
-            let pool = pool.clone();
-            let script = Script::new().then(move |_ctx| vec![worker_iter(pool, 0)]);
-            sim.spawn("tokenizer", script);
+            sim.spawn(
+                "tokenizer",
+                TokWorker {
+                    pool: pool.clone(),
+                    consumed: 0,
+                    running: None,
+                    state: TwState::Wait,
+                },
+            );
         }
         pool
     }
@@ -74,51 +84,106 @@ impl TokenizerPool {
     }
 }
 
-/// One worker-loop iteration: wait for the (consumed+1)-th job ever,
-/// pop it, burn its cost, run its completion, recurse.
-fn worker_iter(pool: TokenizerPool, consumed: u64) -> Instr {
-    Instr::call(move |_ctx| {
-        let gate = pool.job_gate;
-        let shared = Rc::clone(&pool.shared);
-        vec![
-            Instr::block(gate, consumed + 1),
-            Instr::call(move |_ctx| {
-                // The job might have been taken by a sibling that woke for
-                // a later count; pop whatever is available.
-                let job = shared.jobs.borrow_mut().pop_front();
-                match job {
-                    None => Vec::new(), // spurious; next iter waits further
-                    Some(job) => {
-                        let on_done = RefCell::new(Some(job.on_done));
-                        vec![
-                            Instr::compute(job.cost_ns),
-                            Instr::effect(move |ctx| {
-                                (on_done.take().expect("once"))(ctx)
-                            }),
-                        ]
-                    }
-                }
-            }),
-            worker_iter(pool, consumed + 1),
-        ]
-    })
+#[derive(Clone, Copy, PartialEq)]
+enum TwState {
+    /// Block until the (consumed+1)-th job ever is pushed.
+    Wait,
+    /// Woken: pop whatever is available (a sibling may have taken it).
+    Pop,
+    /// Job's CPU cost paid: run its completion.
+    Finish,
 }
 
-/// Split a prompt's tokenization into chunk jobs. Returns (n_chunks,
-/// per-chunk cost); the caller wires the `on_done`s.
-pub fn chunk_costs(prompt_tokens: u64, s_per_token: f64, chunk_tokens: u64) -> Vec<u64> {
+/// One tokenizer worker: wait → pop → burn cost → completion → repeat.
+struct TokWorker {
+    pool: TokenizerPool,
+    consumed: u64,
+    running: Option<Box<dyn FnOnce(&mut TaskCtx)>>,
+    state: TwState,
+}
+
+impl Program for TokWorker {
+    fn step(&mut self, ctx: &mut TaskCtx) -> Op {
+        loop {
+            match self.state {
+                TwState::Wait => {
+                    self.state = TwState::Pop;
+                    return Op::Block {
+                        gate: self.pool.job_gate,
+                        target: self.consumed + 1,
+                    };
+                }
+                TwState::Pop => {
+                    self.consumed += 1;
+                    let job = self.pool.shared.jobs.borrow_mut().pop_front();
+                    match job {
+                        // spurious wake (sibling raced us); wait further
+                        None => self.state = TwState::Wait,
+                        Some(job) => {
+                            self.running = Some(job.on_done);
+                            self.state = TwState::Finish;
+                            return Op::Compute { ns: job.cost_ns };
+                        }
+                    }
+                }
+                TwState::Finish => {
+                    let on_done = self.running.take().expect("job running");
+                    on_done(ctx);
+                    self.state = TwState::Wait;
+                }
+            }
+        }
+    }
+}
+
+/// Iterator over a prompt's per-chunk tokenization costs — the
+/// allocation-free form of [`chunk_costs`] for callers that split a
+/// prompt across pool jobs. (The serving engine currently models each
+/// request's encode as one FIFO job and computes its cost directly in
+/// its arrival path; chunked costing is used by harnesses and tests.)
+/// An empty prompt still yields one zero-cost chunk (it passes through
+/// the pool once, like the real executor).
+#[derive(Debug, Clone)]
+pub struct ChunkCosts {
+    left: u64,
+    chunk_tokens: u64,
+    s_per_token: f64,
+    emitted_any: bool,
+}
+
+impl Iterator for ChunkCosts {
+    type Item = u64;
+
+    fn next(&mut self) -> Option<u64> {
+        if self.left == 0 {
+            if self.emitted_any {
+                return None;
+            }
+            self.emitted_any = true;
+            return Some(0);
+        }
+        let n = self.left.min(self.chunk_tokens);
+        self.left -= n;
+        self.emitted_any = true;
+        Some((n as f64 * self.s_per_token * 1e9) as u64)
+    }
+}
+
+/// Per-chunk tokenization costs for a prompt, lazily.
+pub fn chunk_cost_iter(prompt_tokens: u64, s_per_token: f64, chunk_tokens: u64) -> ChunkCosts {
     assert!(chunk_tokens > 0);
-    let mut out = Vec::new();
-    let mut left = prompt_tokens;
-    while left > 0 {
-        let n = left.min(chunk_tokens);
-        out.push((n as f64 * s_per_token * 1e9) as u64);
-        left -= n;
+    ChunkCosts {
+        left: prompt_tokens,
+        chunk_tokens,
+        s_per_token,
+        emitted_any: false,
     }
-    if out.is_empty() {
-        out.push(0); // empty prompt still passes through the pool once
-    }
-    out
+}
+
+/// Split a prompt's tokenization into chunk jobs, materialized (the
+/// `Vec` form of [`chunk_cost_iter`], for callers that index chunks).
+pub fn chunk_costs(prompt_tokens: u64, s_per_token: f64, chunk_tokens: u64) -> Vec<u64> {
+    chunk_cost_iter(prompt_tokens, s_per_token, chunk_tokens).collect()
 }
 
 #[cfg(test)]
@@ -184,6 +249,7 @@ mod tests {
     fn pool_contends_with_other_tasks_for_cores() {
         // 2 cores, 4 tokenizer threads with heavy jobs + 1 "engine" task:
         // the engine's 1 ms of work takes much longer than 1 ms.
+        use crate::simcpu::script::Script;
         let mut sim = sim(2);
         let pool = TokenizerPool::spawn(&mut sim, 4);
         for _ in 0..4 {
@@ -220,6 +286,28 @@ mod tests {
         assert_eq!(costs[0], 8_192_000); // 8192 tokens × 1 µs
         assert_eq!(costs[2], (20_000 - 16_384) * 1_000);
         assert_eq!(chunk_costs(0, 1e-6, 8_192), vec![0]);
+    }
+
+    #[test]
+    fn chunk_iter_matches_vec_and_is_lazy() {
+        let cases = [
+            (0u64, 8_192u64),
+            (1, 8_192),
+            (8_192, 8_192),
+            (20_000, 8_192),
+            (100_001, 4_096),
+        ];
+        for (prompt, chunk) in cases {
+            let from_iter: Vec<u64> = chunk_cost_iter(prompt, 1.5e-6, chunk).collect();
+            assert_eq!(from_iter, chunk_costs(prompt, 1.5e-6, chunk), "prompt={prompt}");
+        }
+        // lazy: pulling one chunk at a time, no buffer behind it
+        let mut it = chunk_cost_iter(3 * 8_192, 1e-6, 8_192);
+        assert_eq!(it.next(), Some(8_192_000));
+        assert_eq!(it.clone().count(), 2);
+        assert_eq!(it.next(), Some(8_192_000));
+        assert_eq!(it.next(), Some(8_192_000));
+        assert_eq!(it.next(), None);
     }
 
     #[test]

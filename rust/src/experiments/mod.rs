@@ -173,13 +173,20 @@ pub fn serve_once(args: &Args) {
 
 /// Scenario-driven `cpuslow serve`: generate the named catalog scenario
 /// (honoring the config's workload overrides) and print the per-class
-/// serving report.
+/// serving report. With `--streaming`, arrivals are generated lazily
+/// and TTFT percentiles come from bounded-memory sketches, so the run's
+/// memory is set by in-flight load, not request count — the mode to use
+/// with large `--rate-scale`/`--duration` values.
 fn serve_scenario(cfg: RunConfig, name: &str, args: &Args) {
     use crate::report::{percent_label, secs_label};
-    use crate::workload::scenario::{resolve_cli_scenario, run_scenario};
+    use crate::workload::scenario::{resolve_cli_scenario, run_scenario, run_stream};
     let scenario = resolve_cli_scenario(name, &cfg.workload, args, args.flag("quick"));
     let seed = args.u64_or("seed", cfg.seed);
-    let report = run_scenario(cfg, &scenario, seed);
+    let report = if args.flag("streaming") {
+        run_stream(cfg, &scenario, seed)
+    } else {
+        run_scenario(cfg, &scenario, seed)
+    };
     let mut t = Table::new(&[
         "class",
         "SLO (s)",

@@ -13,11 +13,12 @@
 //! The fleet records busy/sync-wait/idle spans per device for the GPU
 //! utilization traces of Figures 11–12.
 
-use crate::simcpu::{GateId, Sim};
+use crate::simcpu::{GateId, SharedCall, Sim};
 use crate::util::stats::TimeSeries;
+use rustc_hash::FxHashMap;
 use std::cell::RefCell;
 use std::collections::VecDeque;
-use std::rc::Rc;
+use std::rc::{Rc, Weak};
 
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum KernelKind {
@@ -78,22 +79,36 @@ struct Collective {
     parts: usize,
     started: usize,
     ready_at_ns: u64,
-    waiting_ranks: Vec<usize>,
+    /// Bitmask of ranks parked at this collective's barrier (the fleet
+    /// asserts `n_gpus ≤ 64` at construction). A mask instead of a Vec
+    /// keeps the per-step collective record POD, so the collectives map
+    /// churns without touching the allocator.
+    waiting_ranks: u64,
 }
 
 pub struct Fleet {
     devices: Vec<Device>,
-    collectives: std::collections::HashMap<u64, Collective>,
+    collectives: FxHashMap<u64, Collective>,
     next_collective_id: u64,
     n_gpus: usize,
+    /// Shared completion callback (arg = rank | kind<<32) scheduled for
+    /// every kernel/collective completion via `call_at_shared` — one Rc
+    /// for the fleet's lifetime instead of a boxed closure per kernel.
+    /// Holds the fleet by `Weak` so the Fleet↔handler pair is not an Rc
+    /// cycle (sweeps build thousands of short-lived fleets).
+    complete_call: Option<SharedCall>,
 }
 
 /// Shared handle used by worker programs and sim callbacks.
 pub type FleetRef = Rc<RefCell<Fleet>>;
 
+/// `arg` encoding for the shared completion callback.
+const COMPLETE_HEAD: u64 = 0;
+const COMPLETE_COLLECTIVE: u64 = 1 << 32;
+
 impl Fleet {
     pub fn new(n_gpus: usize, trace_bucket_s: Option<f64>) -> FleetRef {
-        assert!(n_gpus > 0);
+        assert!(n_gpus > 0 && n_gpus <= 64, "rank bitmask holds ≤ 64 GPUs");
         let devices = (0..n_gpus)
             .map(|_| Device {
                 queue: VecDeque::new(),
@@ -104,12 +119,25 @@ impl Fleet {
                 busy_trace: trace_bucket_s.map(TimeSeries::new),
             })
             .collect();
-        Rc::new(RefCell::new(Fleet {
+        let fleet = Rc::new(RefCell::new(Fleet {
             devices,
-            collectives: std::collections::HashMap::new(),
+            collectives: FxHashMap::default(),
             next_collective_id: 0,
             n_gpus,
-        }))
+            complete_call: None,
+        }));
+        let weak: Weak<RefCell<Fleet>> = Rc::downgrade(&fleet);
+        let handler: SharedCall = Rc::new(move |sim: &mut Sim, arg: u64| {
+            let Some(fleet) = weak.upgrade() else { return };
+            let rank = (arg & 0xFFFF_FFFF) as usize;
+            if (arg & COMPLETE_COLLECTIVE) == 0 {
+                complete_head(&fleet, sim, rank);
+            } else {
+                complete_collective(&fleet, sim, rank);
+            }
+        });
+        fleet.borrow_mut().complete_call = Some(handler);
+        fleet
     }
 
     pub fn n_gpus(&self) -> usize {
@@ -126,7 +154,7 @@ impl Fleet {
                 parts: self.n_gpus,
                 started: 0,
                 ready_at_ns: 0,
-                waiting_ranks: Vec::new(),
+                waiting_ranks: 0,
             },
         );
         id
@@ -199,59 +227,65 @@ fn start_next(fleet: &FleetRef, sim: &mut Sim, rank: usize) {
     enum Action {
         None,
         Complete { at_ns: u64 },
-        BarrierRelease { ranks: Vec<usize>, at_ns: u64 },
+        BarrierRelease { ranks: u64, at_ns: u64 },
     }
-    let action = {
+    let (action, handler) = {
         let mut f = fleet.borrow_mut();
-        let dev = &mut f.devices[rank];
-        match dev.queue.front().cloned() {
-            None => {
-                dev.set_state(now, DevState::Idle);
-                Action::None
+        let action = {
+            let dev = &mut f.devices[rank];
+            match dev.queue.front().cloned() {
+                None => {
+                    dev.set_state(now, DevState::Idle);
+                    Action::None
+                }
+                Some(k) => match k.kind {
+                    KernelKind::Compute => {
+                        dev.set_state(now, DevState::Running);
+                        Action::Complete {
+                            at_ns: now + k.dur_ns,
+                        }
+                    }
+                    KernelKind::Collective { id } => {
+                        dev.set_state(now, DevState::SyncWait);
+                        let coll = f
+                            .collectives
+                            .get_mut(&id)
+                            .expect("collective registered before enqueue");
+                        coll.started += 1;
+                        coll.ready_at_ns = coll.ready_at_ns.max(now);
+                        coll.waiting_ranks |= 1u64 << rank;
+                        if coll.started == coll.parts {
+                            let at_ns = coll.ready_at_ns + k.dur_ns;
+                            let ranks = coll.waiting_ranks;
+                            f.collectives.remove(&id);
+                            Action::BarrierRelease { ranks, at_ns }
+                        } else {
+                            Action::None
+                        }
+                    }
+                },
             }
-            Some(k) => match k.kind {
-                KernelKind::Compute => {
-                    dev.set_state(now, DevState::Running);
-                    Action::Complete {
-                        at_ns: now + k.dur_ns,
-                    }
-                }
-                KernelKind::Collective { id } => {
-                    dev.set_state(now, DevState::SyncWait);
-                    let coll = f
-                        .collectives
-                        .get_mut(&id)
-                        .expect("collective registered before enqueue");
-                    coll.started += 1;
-                    coll.ready_at_ns = coll.ready_at_ns.max(now);
-                    coll.waiting_ranks.push(rank);
-                    if coll.started == coll.parts {
-                        let at_ns = coll.ready_at_ns + k.dur_ns;
-                        let ranks = std::mem::take(&mut coll.waiting_ranks);
-                        f.collectives.remove(&id);
-                        Action::BarrierRelease { ranks, at_ns }
-                    } else {
-                        Action::None
-                    }
-                }
-            },
-        }
+        };
+        let handler = match action {
+            Action::None => None,
+            _ => Some(Rc::clone(f.complete_call.as_ref().expect("handler installed"))),
+        };
+        (action, handler)
     };
     match action {
         Action::None => {}
         Action::Complete { at_ns } => {
-            let fleet = Rc::clone(fleet);
-            sim.call_at(at_ns, move |sim| complete_head(&fleet, sim, rank));
+            sim.call_at_shared(at_ns, handler.expect("handler"), rank as u64 | COMPLETE_HEAD);
         }
         Action::BarrierRelease { ranks, at_ns } => {
-            for r in ranks {
-                let fleet = Rc::clone(fleet);
-                sim.call_at(at_ns, move |sim| {
-                    // transition sync-wait → running happened implicitly at
-                    // barrier release minus dur; account the transfer time
-                    // as busy by back-dating via complete_head's state math.
-                    complete_collective(&fleet, sim, r);
-                });
+            // Release in ascending rank order; the transfer time is
+            // reclassified sync-wait → busy inside complete_collective.
+            let handler = handler.expect("handler");
+            let mut mask = ranks;
+            while mask != 0 {
+                let r = mask.trailing_zeros() as u64;
+                mask &= mask - 1;
+                sim.call_at_shared(at_ns, Rc::clone(&handler), r | COMPLETE_COLLECTIVE);
             }
         }
     }

@@ -17,7 +17,7 @@ fn main() {
             ("serve-sweep", "scenario × cores × TP grid: TTFT p50/p99, timeout rate, GPU idle"),
             ("scenarios", "print the workload scenario catalog"),
             ("calibrate", "measure real Rust-BPE tokenizer throughput on this host"),
-            ("bench-check <current.json>", "compare a BENCH_*.json against a committed baseline; exits 1 on regression"),
+            ("bench-check <current.json>...", "compare BENCH_*.json files against committed baselines; exits 1 on regression"),
             ("list", "list available experiments"),
         ],
         options: vec![
@@ -32,6 +32,7 @@ fn main() {
             ("--no-progress", "suppress the stderr sweep progress line"),
             ("--config PATH", "serve / serve-sweep: run TOML (system, serve, workload tables)"),
             ("--scenario NAME", "serve: drive a catalog scenario instead of a uniform stream"),
+            ("--streaming", "serve: lazy arrival generation + bounded-memory TTFT sketches (million-request runs)"),
             ("--scenarios LIST", "serve-sweep: catalog subset, e.g. steady,bursty"),
             ("--rate-scale F", "scenario runs: multiply every class arrival rate by F"),
             ("--duration S", "scenario runs: override the generation window (seconds)"),
@@ -55,19 +56,21 @@ fn main() {
     }
 }
 
-/// CI regression gate: compare a fresh `BENCH_*.json` against the
-/// committed baseline and fail (exit 1) on a >`--max-regression` drop
-/// in any scenario's `per_sec`.
+/// CI regression gate: compare fresh `BENCH_*.json` files against their
+/// committed baselines and fail (exit 1) when any scenario in any suite
+/// drops more than `--max-regression` in `per_sec`. Each file's default
+/// baseline is `<file>.baseline.json`; an explicit `--baseline` applies
+/// only when a single file is checked.
 fn bench_check(args: &Args) {
-    let Some(current_path) = args.rest().first().cloned() else {
-        eprintln!("bench-check: need a current BENCH_*.json path");
+    let current_paths: Vec<String> = args.rest().to_vec();
+    if current_paths.is_empty() {
+        eprintln!("bench-check: need at least one current BENCH_*.json path");
         std::process::exit(2);
-    };
-    let default_baseline = format!(
-        "{}.baseline.json",
-        current_path.trim_end_matches(".json")
-    );
-    let baseline_path = args.str_or("baseline", &default_baseline).to_string();
+    }
+    if current_paths.len() > 1 && args.get("baseline").is_some() {
+        eprintln!("bench-check: --baseline only applies to a single file");
+        std::process::exit(2);
+    }
     let max_regression = args.f64_or("max-regression", 0.20);
     let load = |path: &str| -> cpuslow::util::json::Json {
         match std::fs::read_to_string(path) {
@@ -84,28 +87,42 @@ fn bench_check(args: &Args) {
             }
         }
     };
-    let current = load(&current_path);
-    let baseline = load(&baseline_path);
-    let check = cpuslow::util::bench::compare_to_baseline(&current, &baseline, max_regression);
-    println!("bench-check: {current_path} vs {baseline_path} (max regression {max_regression:.0}%)",
-        max_regression = max_regression * 100.0);
-    for line in &check.lines {
-        println!("  {line}");
-    }
-    if check.passed() {
-        println!("bench-check: OK");
-    } else {
-        eprintln!(
-            "bench-check: FAIL — {} scenario(s) regressed more than {:.0}%:",
-            check.regressions.len(),
-            max_regression * 100.0
+    let mut failed = false;
+    for current_path in &current_paths {
+        let default_baseline = format!(
+            "{}.baseline.json",
+            current_path.trim_end_matches(".json")
         );
-        for r in &check.regressions {
-            eprintln!("  {r}");
+        let baseline_path = args.str_or("baseline", &default_baseline).to_string();
+        let current = load(current_path);
+        let baseline = load(&baseline_path);
+        let check =
+            cpuslow::util::bench::compare_to_baseline(&current, &baseline, max_regression);
+        println!(
+            "bench-check: {current_path} vs {baseline_path} (max regression {max_regression:.0}%)",
+            max_regression = max_regression * 100.0
+        );
+        for line in &check.lines {
+            println!("  {line}");
         }
-        eprintln!(
-            "(if intentional, refresh the baseline: cp {current_path} {baseline_path})"
-        );
+        if check.passed() {
+            println!("bench-check: OK");
+        } else {
+            failed = true;
+            eprintln!(
+                "bench-check: FAIL — {} scenario(s) regressed more than {:.0}%:",
+                check.regressions.len(),
+                max_regression * 100.0
+            );
+            for r in &check.regressions {
+                eprintln!("  {r}");
+            }
+            eprintln!(
+                "(if intentional, refresh the baseline: cp {current_path} {baseline_path})"
+            );
+        }
+    }
+    if failed {
         std::process::exit(1);
     }
 }

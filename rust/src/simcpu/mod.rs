@@ -43,6 +43,7 @@ use eventq::{EventQueue, Next};
 use rustc_hash::FxHashMap;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
+use std::rc::Rc;
 
 pub type TaskId = usize;
 pub type GateId = usize;
@@ -120,6 +121,14 @@ enum Deferred {
     CallAt { t_ns: u64, cb: u32 },
 }
 
+/// A reusable timed callback: create the `Rc` once, then schedule it any
+/// number of times via [`Sim::call_at_shared`] / [`TaskCtx::call_at_shared`]
+/// without boxing a fresh closure per call. The `u64` argument carries
+/// per-call context (a rank, a sequence number, …). This is what keeps
+/// recurring device-side events — kernel completions, per-step launch
+/// hops — allocation-free in steady state.
+pub type SharedCall = Rc<dyn Fn(&mut Sim, u64)>;
+
 /// The view of the simulator a program sees during `step`.
 pub struct TaskCtx<'a> {
     now_ns: u64,
@@ -164,7 +173,15 @@ impl<'a> TaskCtx<'a> {
 
     /// Schedule a callback on the shared timeline (device-side events).
     pub fn call_at(&mut self, t_ns: u64, f: impl FnOnce(&mut Sim) + 'static) {
-        let cb = self.cbs.put(Box::new(f));
+        let cb = self.cbs.put(CallSlot::Once(Box::new(f)));
+        self.deferred.push(Deferred::CallAt { t_ns, cb });
+    }
+
+    /// Schedule a pre-built [`SharedCall`] with a `u64` argument. Unlike
+    /// [`Self::call_at`] this performs no heap allocation: the `Rc`
+    /// clone and the slab slot are both recycled.
+    pub fn call_at_shared(&mut self, t_ns: u64, f: SharedCall, arg: u64) {
+        let cb = self.cbs.put(CallSlot::Shared(f, arg));
         self.deferred.push(Deferred::CallAt { t_ns, cb });
     }
 }
@@ -175,17 +192,34 @@ impl<'a> TaskCtx<'a> {
 
 type BoxedCall = Box<dyn FnOnce(&mut Sim)>;
 
+/// A parked timed callback: either a one-shot boxed closure (the
+/// general [`Sim::call_at`] path) or a recycled [`SharedCall`] plus its
+/// argument (the allocation-free [`Sim::call_at_shared`] path).
+enum CallSlot {
+    Once(BoxedCall),
+    Shared(SharedCall, u64),
+}
+
+impl CallSlot {
+    fn run(self, sim: &mut Sim) {
+        match self {
+            CallSlot::Once(f) => f(sim),
+            CallSlot::Shared(f, arg) => f(sim, arg),
+        }
+    }
+}
+
 /// Slab of pending `call_at` closures. Timed events carry a `u32` slot
 /// index instead of the boxed closure itself, so wheel nodes stay small
 /// and slots are recycled through the free list.
 #[derive(Default)]
 struct Callbacks {
-    slots: Vec<Option<BoxedCall>>,
+    slots: Vec<Option<CallSlot>>,
     free: Vec<u32>,
 }
 
 impl Callbacks {
-    fn put(&mut self, f: BoxedCall) -> u32 {
+    fn put(&mut self, f: CallSlot) -> u32 {
         match self.free.pop() {
             Some(i) => {
                 debug_assert!(self.slots[i as usize].is_none());
@@ -199,7 +233,7 @@ impl Callbacks {
         }
     }
 
-    fn take(&mut self, id: u32) -> BoxedCall {
+    fn take(&mut self, id: u32) -> CallSlot {
         let f = self.slots[id as usize].take().expect("callback present");
         self.free.push(id);
         f
@@ -739,7 +773,18 @@ impl Sim {
     /// Schedule a callback at an absolute virtual time.
     pub fn call_at(&mut self, t_ns: u64, f: impl FnOnce(&mut Sim) + 'static) {
         let t = t_ns.max(self.now_ns);
-        let cb = self.cbs.put(Box::new(f));
+        let cb = self.cbs.put(CallSlot::Once(Box::new(f)));
+        self.push_event(t, Ev::Call(cb));
+    }
+
+    /// Schedule a pre-built [`SharedCall`] at an absolute virtual time
+    /// with a `u64` argument, without boxing a closure: the `Rc` clone
+    /// and the recycled slab slot are the only state. Recurring device
+    /// events (kernel completions, launch hops) use this so steady-state
+    /// stepping never touches the allocator.
+    pub fn call_at_shared(&mut self, t_ns: u64, f: SharedCall, arg: u64) {
+        let t = t_ns.max(self.now_ns);
+        let cb = self.cbs.put(CallSlot::Shared(f, arg));
         self.push_event(t, Ev::Call(cb));
     }
 
@@ -1202,7 +1247,7 @@ impl Sim {
                         Ev::Timer { task } => self.on_timer(task),
                         Ev::Call(cb) => {
                             let f = self.cbs.take(cb);
-                            f(self);
+                            f.run(self);
                             self.apply_deferred();
                         }
                     }
@@ -1739,6 +1784,29 @@ mod tests {
             sim.run_until(round * 1_000 + 10);
         }
         assert!(sim.cbs.slots.len() <= 4, "slab grew to {}", sim.cbs.slots.len());
+    }
+
+    #[test]
+    fn shared_callbacks_fire_with_args_and_recycle_slots() {
+        let mut sim = Sim::new(params_no_overhead(1));
+        let seen = Rc::new(RefCell::new(Vec::new()));
+        let handler: SharedCall = {
+            let seen = Rc::clone(&seen);
+            Rc::new(move |sim: &mut Sim, arg: u64| {
+                seen.borrow_mut().push((sim.now_ns(), arg));
+            })
+        };
+        for round in 0..8u64 {
+            for i in 0..3u64 {
+                sim.call_at_shared(round * 1_000 + i, Rc::clone(&handler), round * 10 + i);
+            }
+            sim.run_until(round * 1_000 + 10);
+        }
+        assert_eq!(seen.borrow().len(), 24);
+        assert_eq!(seen.borrow()[0], (0, 0));
+        assert_eq!(seen.borrow()[23], (7_002, 72));
+        // slots recycled across rounds, same as the boxed path
+        assert!(sim.cbs.slots.len() <= 3, "slab grew to {}", sim.cbs.slots.len());
     }
 
     #[test]

@@ -1,0 +1,129 @@
+//! Counting global allocator for allocation-behavior tests and benches.
+//!
+//! Install it in a test or bench **binary** (never in the library):
+//!
+//! ```ignore
+//! use cpuslow::testkit::alloc::{self, CountingAlloc};
+//! #[global_allocator]
+//! static ALLOC: CountingAlloc = CountingAlloc;
+//! ```
+//!
+//! Counters are per-thread (const-initialized thread-locals, so the
+//! allocator never recurses into itself), which keeps measurements
+//! stable even when the libtest harness runs other tests concurrently:
+//! a test measures only its own thread's allocations. `live`/`peak`
+//! tracking is the RSS proxy the serving benches report — requested
+//! bytes outstanding, unaffected by allocator-internal reuse.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+/// Zero-overhead-when-unused wrapper around [`System`] that counts this
+/// thread's allocation traffic.
+pub struct CountingAlloc;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+    static ALLOC_BYTES: Cell<u64> = const { Cell::new(0) };
+    static FREED_BYTES: Cell<u64> = const { Cell::new(0) };
+    static PEAK_LIVE: Cell<i64> = const { Cell::new(0) };
+}
+
+/// Snapshot of this thread's allocation counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AllocCounters {
+    /// Number of allocation calls (reallocs count as one).
+    pub allocs: u64,
+    /// Total bytes ever requested.
+    pub alloc_bytes: u64,
+    /// Total bytes ever freed.
+    pub freed_bytes: u64,
+}
+
+pub fn counters() -> AllocCounters {
+    AllocCounters {
+        allocs: ALLOCS.with(Cell::get),
+        alloc_bytes: ALLOC_BYTES.with(Cell::get),
+        freed_bytes: FREED_BYTES.with(Cell::get),
+    }
+}
+
+/// Requested bytes currently outstanding on this thread (negative if
+/// this thread frees memory another thread allocated).
+pub fn live_bytes() -> i64 {
+    ALLOC_BYTES.with(Cell::get) as i64 - FREED_BYTES.with(Cell::get) as i64
+}
+
+/// High-water mark of [`live_bytes`] since the last
+/// [`reset_peak_live`].
+pub fn peak_live_bytes() -> i64 {
+    PEAK_LIVE.with(Cell::get)
+}
+
+/// Restart peak tracking from the current live level.
+pub fn reset_peak_live() {
+    let live = live_bytes();
+    PEAK_LIVE.with(|c| c.set(live));
+}
+
+fn on_alloc(size: usize) {
+    ALLOCS.with(|c| c.set(c.get() + 1));
+    ALLOC_BYTES.with(|c| c.set(c.get() + size as u64));
+    let live = live_bytes();
+    PEAK_LIVE.with(|c| {
+        if live > c.get() {
+            c.set(live);
+        }
+    });
+}
+
+fn on_free(size: usize) {
+    FREED_BYTES.with(|c| c.set(c.get() + size as u64));
+}
+
+// SAFETY: delegates all allocation to `System`; the bookkeeping touches
+// only const-initialized thread-locals of `Cell<u64>`/`Cell<i64>` (no
+// drop glue, no lazy init), so it cannot recurse into the allocator.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            on_alloc(layout.size());
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout);
+        on_free(layout.size());
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let p = System.realloc(ptr, layout, new_size);
+        if !p.is_null() {
+            on_free(layout.size());
+            on_alloc(new_size);
+        }
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The allocator is not installed in the library's test binary, so
+    // counters stay wherever other code left them — only the arithmetic
+    // is checked here; behavior under load is pinned by
+    // `tests/test_alloc.rs` (which installs the allocator).
+    #[test]
+    fn counter_arithmetic_is_consistent() {
+        let c = counters();
+        assert_eq!(
+            live_bytes(),
+            c.alloc_bytes as i64 - c.freed_bytes as i64
+        );
+        reset_peak_live();
+        assert_eq!(peak_live_bytes(), live_bytes());
+    }
+}

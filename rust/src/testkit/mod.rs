@@ -8,6 +8,8 @@
 //! conservation, queue FIFO-ness, KV-cache accounting, tokenizer
 //! round-trips.
 
+pub mod alloc;
+
 use crate::util::rng::Rng;
 
 /// A generator produces a random value and can propose smaller variants

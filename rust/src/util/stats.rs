@@ -369,6 +369,123 @@ impl TimeSeries {
     }
 }
 
+/// Bounded-memory quantile estimator for streaming runs: a fixed-bin
+/// log₂ histogram (64 bins per octave over 2⁻³⁰‥2³⁴, ~32 KB) with an
+/// exact small-sample fallback.
+///
+/// * With ≤ [`QuantileSketch::EXACT_CAP`] samples, quantiles are
+///   computed exactly with the same interpolation as [`Percentiles`] —
+///   small runs report identical numbers either way.
+/// * Beyond that, a quantile resolves to the geometric midpoint of its
+///   bin, so the relative error is bounded by
+///   [`QuantileSketch::relative_error_bound`] (≈ 0.55%) for values
+///   inside the bin range; out-of-range values clamp to the edge bins.
+///
+/// Memory is constant in the sample count — the property that lets a
+/// million-request serving run report TTFT p50/p99 without retaining
+/// every sample (`util/stats` tests pin the bound against
+/// [`Percentiles`]).
+#[derive(Debug, Clone)]
+pub struct QuantileSketch {
+    bins: Vec<u64>,
+    count: u64,
+    /// First `EXACT_CAP` samples, kept for the exact fallback.
+    exact: Vec<f64>,
+}
+
+impl Default for QuantileSketch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl QuantileSketch {
+    /// Bins per factor-of-two (finer → tighter error bound).
+    const BINS_PER_OCTAVE: usize = 64;
+    /// log₂ of the smallest distinguishable value.
+    const MIN_EXP: i32 = -30;
+    /// Octaves covered (2⁻³⁰ ‥ 2³⁴ — for TTFT seconds: ~1 ns to ~540 y).
+    const OCTAVES: usize = 64;
+    const NUM_BINS: usize = Self::BINS_PER_OCTAVE * Self::OCTAVES;
+    /// Sample count up to which quantiles are exact.
+    pub const EXACT_CAP: usize = 512;
+
+    pub fn new() -> QuantileSketch {
+        QuantileSketch {
+            bins: vec![0; Self::NUM_BINS],
+            count: 0,
+            exact: Vec::new(),
+        }
+    }
+
+    /// Worst-case relative error of a quantile once the exact fallback
+    /// is exceeded (half a bin width, geometrically).
+    pub fn relative_error_bound() -> f64 {
+        2f64.powf(0.5 / Self::BINS_PER_OCTAVE as f64) - 1.0
+    }
+
+    pub fn len(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    fn bin_index(v: f64) -> usize {
+        if v.is_nan() || v <= 0.0 {
+            return 0; // non-positive / NaN clamp to the smallest bin
+        }
+        let idx = ((v.log2() - Self::MIN_EXP as f64) * Self::BINS_PER_OCTAVE as f64).floor();
+        if idx < 0.0 {
+            0
+        } else {
+            // saturating float→int cast: +∞ lands in the top bin
+            (idx as usize).min(Self::NUM_BINS - 1)
+        }
+    }
+
+    fn bin_value(idx: usize) -> f64 {
+        2f64.powf(Self::MIN_EXP as f64 + (idx as f64 + 0.5) / Self::BINS_PER_OCTAVE as f64)
+    }
+
+    pub fn add(&mut self, v: f64) {
+        self.count += 1;
+        if self.exact.len() < Self::EXACT_CAP {
+            self.exact.push(v);
+        }
+        self.bins[Self::bin_index(v)] += 1;
+    }
+
+    /// Quantile estimate; `q` in [0, 100]. NaN when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        assert!((0.0..=100.0).contains(&q));
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        if self.count as usize <= Self::EXACT_CAP {
+            // Exact fallback: delegate to `Percentiles` so the two
+            // estimators stay bit-identical by construction in this
+            // regime (the streaming-vs-materialized report equality
+            // tests rely on that).
+            let mut exact = Percentiles::new();
+            for &v in &self.exact {
+                exact.add(v);
+            }
+            return exact.pct(q);
+        }
+        let rank = q / 100.0 * (self.count - 1) as f64;
+        let mut acc = 0u64;
+        for (idx, &b) in self.bins.iter().enumerate() {
+            acc += b;
+            if acc as f64 > rank {
+                return Self::bin_value(idx);
+            }
+        }
+        Self::bin_value(Self::NUM_BINS - 1)
+    }
+}
+
 /// Simple log-scaled latency histogram (power-of-2 buckets in nanoseconds).
 #[derive(Debug, Clone)]
 pub struct LatencyHistogram {
@@ -564,6 +681,74 @@ mod tests {
         let m = ts.means();
         assert!((m[0] - 3.0).abs() < 1e-12);
         assert!((m[1] - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sketch_is_exact_below_the_fallback_cap() {
+        // ≤ EXACT_CAP samples: sketch quantiles must equal Percentiles
+        // bit-for-bit (same interpolation on the same samples).
+        let mut sketch = QuantileSketch::new();
+        let mut exact = Percentiles::new();
+        let mut x = 1u64;
+        for _ in 0..QuantileSketch::EXACT_CAP {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let v = 1e-4 + (x >> 40) as f64 * 1e-9;
+            sketch.add(v);
+            exact.add(v);
+        }
+        for q in [0.0, 10.0, 50.0, 90.0, 99.0, 100.0] {
+            assert_eq!(sketch.quantile(q), exact.pct(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn sketch_error_bounded_on_large_samples() {
+        // Heavy-tailed positive data spanning several octaves: every
+        // quantile stays within the advertised relative error bound of
+        // the exact estimator.
+        let bound = QuantileSketch::relative_error_bound();
+        assert!(bound < 0.006, "bound {bound}");
+        let mut sketch = QuantileSketch::new();
+        let mut exact = Percentiles::new();
+        let mut x = 9u64;
+        for _ in 0..50_000 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let u = (x >> 11) as f64 / (1u64 << 53) as f64; // uniform [0,1)
+            // exp-of-gaussian-ish: spread over ~4 decades
+            let v = 1e-3 * (10f64).powf(4.0 * u);
+            sketch.add(v);
+            exact.add(v);
+        }
+        for q in [1.0, 25.0, 50.0, 75.0, 90.0, 99.0, 99.9] {
+            let s = sketch.quantile(q);
+            let e = exact.pct(q);
+            let rel = (s / e - 1.0).abs();
+            // bin-midpoint error plus one-sample rank slack at the tails
+            assert!(rel <= bound * 1.5 + 1e-9, "q={q}: sketch {s} vs exact {e} (rel {rel})");
+        }
+    }
+
+    #[test]
+    fn sketch_edge_cases() {
+        let empty = QuantileSketch::new();
+        assert!(empty.quantile(50.0).is_nan());
+        assert!(empty.is_empty());
+
+        let mut one = QuantileSketch::new();
+        one.add(3.25);
+        assert_eq!(one.quantile(0.0), 3.25);
+        assert_eq!(one.quantile(100.0), 3.25);
+        assert_eq!(one.len(), 1);
+
+        // out-of-range and non-positive values clamp without panicking
+        let mut clamped = QuantileSketch::new();
+        for _ in 0..(QuantileSketch::EXACT_CAP + 1) {
+            clamped.add(1.0);
+        }
+        clamped.add(0.0);
+        clamped.add(1e300);
+        let p50 = clamped.quantile(50.0);
+        assert!((p50 / 1.0 - 1.0).abs() <= QuantileSketch::relative_error_bound());
     }
 
     #[test]

@@ -23,8 +23,8 @@ pub mod scenario;
 
 pub use poisson::{Mmpp, Periodic, Poisson, TraceArrivals};
 pub use scenario::{
-    run_scenario, run_trace, ArrivalSpec, ClassSpec, LenDist, LengthSpec, Scenario,
-    ScenarioReport, Trace,
+    run_scenario, run_stream, run_trace, ArrivalSpec, ClassSpec, LenDist, LengthSpec, Scenario,
+    ScenarioReport, ScenarioStream, Trace,
 };
 
 use crate::config::RunConfig;

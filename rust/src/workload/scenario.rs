@@ -7,7 +7,12 @@
 //! Zipf-weighted buckets), and a per-class TTFT SLO. Scenarios expand
 //! deterministically into a [`Trace`] — a flat, time-sorted request
 //! list — which can be serialized to JSON, replayed byte-identically,
-//! and driven through [`ServingSim`] by [`run_trace`].
+//! and driven through [`ServingSim`] by [`run_trace`]. For load far
+//! beyond what fits in memory, [`Scenario::stream`] yields the same
+//! requests lazily (k-way merge over the per-class streams) and
+//! [`run_stream`] drives them with eager outcome harvesting and
+//! bounded-memory TTFT sketches — byte-identical per-request outcomes,
+//! roughly constant memory in request count.
 //!
 //! Determinism contract:
 //!
@@ -27,10 +32,10 @@
 
 use super::{ArrivalProcess, LengthMix};
 use crate::config::{RunConfig, WorkloadConfig};
-use crate::engine::{ReqClass, RequestId, ServingSim};
+use crate::engine::{Outcome, ReqClass, ServingSim, StreamArrival};
 use crate::util::json::Json;
 use crate::util::rng::{Rng, SplitMix64};
-use crate::util::stats::Percentiles;
+use crate::util::stats::{Percentiles, QuantileSketch};
 use anyhow::{anyhow, bail, Result};
 
 /// All trace-borne integers are masked to 53 bits so they are exactly
@@ -458,42 +463,54 @@ impl Scenario {
         self
     }
 
-    /// Expand the scenario into a deterministic, time-sorted [`Trace`].
+    /// Lazily yield the scenario's requests in exactly the order
+    /// [`Self::generate`] materializes them: a k-way merge on
+    /// `(at_ns, class idx)` over the per-class arrival/length streams,
+    /// holding O(#classes) state instead of the whole trace. This is
+    /// what lets [`run_stream`] push millions of requests at roughly
+    /// constant memory.
+    ///
+    /// Relies on the [`ArrivalProcess`] contract (nondecreasing times
+    /// within a class); `generate` additionally sorts, so a
+    /// contract-violating custom process diverges only there.
+    pub fn stream(&self, seed: u64) -> ScenarioStream {
+        let seed = seed & TRACE_SEED_MASK;
+        let dur_ns = (self.duration_s * 1e9) as u64;
+        let classes = self
+            .classes
+            .iter()
+            .enumerate()
+            .map(|(idx, class)| {
+                let (arrival_seed, length_seed, content_base) = class_streams(seed, idx);
+                let mut arrivals = class.arrivals.build(arrival_seed);
+                // Clip like `generate`: stop a class at its first
+                // arrival past the window (never pull further).
+                let next_at = arrivals.next_arrival_ns().filter(|&t| t < dur_ns);
+                ClassStream {
+                    arrivals,
+                    lengths: class.lengths.build(length_seed),
+                    content_base: content_base & TRACE_SEED_MASK,
+                    shared_prompt: class.shared_prompt,
+                    k: 0,
+                    next_at,
+                }
+            })
+            .collect();
+        ScenarioStream { classes, dur_ns }
+    }
+
+    /// Expand the scenario into a deterministic, time-sorted [`Trace`]
+    /// (materializing [`Self::stream`]).
     ///
     /// The seed is masked to 53 bits up front so the value recorded in
     /// the trace (and its JSON dump) is exactly the value that, fed
     /// back to `generate`, reproduces the same requests.
     pub fn generate(&self, seed: u64) -> Trace {
         let seed = seed & TRACE_SEED_MASK;
-        let dur_ns = (self.duration_s * 1e9) as u64;
-        let mut requests = Vec::new();
-        for (idx, class) in self.classes.iter().enumerate() {
-            let (arrival_seed, length_seed, content_base) = class_streams(seed, idx);
-            let content_base = content_base & TRACE_SEED_MASK;
-            let mut arrivals = class.arrivals.build(arrival_seed);
-            let mut lengths = class.lengths.build(length_seed);
-            let mut k: u64 = 0;
-            while let Some(at_ns) = arrivals.next_arrival_ns() {
-                if at_ns >= dur_ns {
-                    break;
-                }
-                let (prompt_tokens, output_tokens) = lengths.sample_lengths();
-                let content_seed = if class.shared_prompt {
-                    content_base
-                } else {
-                    content_base.wrapping_add(k + 1) & TRACE_SEED_MASK
-                };
-                requests.push(TraceReq {
-                    at_ns,
-                    class_idx: idx,
-                    prompt_tokens,
-                    output_tokens,
-                    content_seed,
-                });
-                k += 1;
-            }
-        }
-        // Stable sort: within a class the generation order is preserved;
+        let mut requests: Vec<TraceReq> = self.stream(seed).collect();
+        // Stable sort: a no-op for the merge's output, kept as a safety
+        // net for arrival processes that violate the nondecreasing
+        // contract. Within a class the generation order is preserved;
         // cross-class ties break by class index.
         requests.sort_by_key(|r| (r.at_ns, r.class_idx));
         Trace {
@@ -509,6 +526,57 @@ impl Scenario {
                 .collect(),
             requests,
         }
+    }
+}
+
+/// One class's live generator state inside a [`ScenarioStream`].
+struct ClassStream {
+    arrivals: Box<dyn ArrivalProcess>,
+    lengths: LengthGen,
+    content_base: u64,
+    shared_prompt: bool,
+    /// Requests emitted so far (content-seed counter).
+    k: u64,
+    /// Buffered next arrival, already clipped against the window; None
+    /// once the class is exhausted.
+    next_at: Option<u64>,
+}
+
+/// Lazy, time-ordered request stream for a [`Scenario`] — see
+/// [`Scenario::stream`].
+pub struct ScenarioStream {
+    classes: Vec<ClassStream>,
+    dur_ns: u64,
+}
+
+impl Iterator for ScenarioStream {
+    type Item = TraceReq;
+
+    fn next(&mut self) -> Option<TraceReq> {
+        // The class holding the globally-smallest (at_ns, class idx).
+        let (idx, at_ns) = self
+            .classes
+            .iter()
+            .enumerate()
+            .filter_map(|(i, c)| c.next_at.map(|t| (i, t)))
+            .min_by_key(|&(i, t)| (t, i))?;
+        let c = &mut self.classes[idx];
+        let (prompt_tokens, output_tokens) = c.lengths.sample_lengths();
+        let content_seed = if c.shared_prompt {
+            c.content_base
+        } else {
+            c.content_base.wrapping_add(c.k + 1) & TRACE_SEED_MASK
+        };
+        c.k += 1;
+        let dur_ns = self.dur_ns;
+        c.next_at = c.arrivals.next_arrival_ns().filter(|&t| t < dur_ns);
+        Some(TraceReq {
+            at_ns,
+            class_idx: idx,
+            prompt_tokens,
+            output_tokens,
+            content_seed,
+        })
     }
 }
 
@@ -735,66 +803,98 @@ fn percentile_pair(values: &[f64]) -> (Option<f64>, Option<f64>) {
     (Some(p.pct(50.0)), Some(p.pct(99.0)))
 }
 
-/// Drive a trace through a fresh [`ServingSim`] and summarize outcomes.
+/// How the shared Track-S driver aggregates on-time TTFTs.
+enum TtftAgg {
+    /// All samples retained (materialized runs — exact percentiles).
+    Exact { per_class: Vec<Vec<f64>> },
+    /// Bounded-memory log-histogram sketches (streaming runs): memory
+    /// constant in request count, relative error ≤
+    /// [`QuantileSketch::relative_error_bound`].
+    Sketch { per_class: Vec<QuantileSketch>, pooled: QuantileSketch },
+}
+
+/// Drive time-ordered arrivals through a fresh [`ServingSim`] via its
+/// streaming loop and summarize outcomes per class. Both the
+/// materialized ([`run_trace`]) and the lazy ([`run_stream`]) paths run
+/// *this exact* driver — the only difference is where arrivals come
+/// from and how on-time TTFTs are aggregated — which is what makes
+/// their per-request outcomes byte-identical.
 ///
 /// The sim runs until the last arrival plus the largest class SLO (plus
 /// one second of slack), so every request gets its full SLO window. A
 /// request counts as timed out when it produces no first token within
 /// its class SLO, measured from arrival (tokenization included, §IV-B).
-pub fn run_trace(cfg: RunConfig, trace: &Trace) -> ScenarioReport {
+fn drive_report<I>(
+    cfg: RunConfig,
+    scenario: &str,
+    classes: &[TraceClass],
+    arrivals: I,
+    mut agg: TtftAgg,
+) -> ScenarioReport
+where
+    I: Iterator<Item = StreamArrival> + 'static,
+{
+    let max_slo_s = classes.iter().fold(0.0_f64, |a, c| a.max(c.slo_ttft_s));
+    let slos: Vec<f64> = classes.iter().map(|c| c.slo_ttft_s).collect();
+    let mut issued = vec![0usize; classes.len()];
+    let mut timeouts = vec![0usize; classes.len()];
     let mut sim = ServingSim::new(cfg);
-    let mut ids: Vec<(RequestId, usize)> = Vec::with_capacity(trace.requests.len());
-    for r in &trace.requests {
-        let id = sim.submit_with_seed(
-            r.at_ns,
-            ReqClass::Normal,
-            r.prompt_tokens,
-            r.output_tokens,
-            r.content_seed,
-        );
-        ids.push((id, r.class_idx));
-    }
-    let max_slo_s = trace
-        .classes
-        .iter()
-        .fold(0.0_f64, |a, c| a.max(c.slo_ttft_s));
-    let last_arrival_s = trace.requests.last().map_or(0.0, |r| r.at_ns as f64 / 1e9);
-    sim.run_secs(last_arrival_s + max_slo_s + 1.0);
+    sim.run_streaming(arrivals, max_slo_s + 1.0, |o: Outcome| {
+        let k = o.tag as usize;
+        issued[k] += 1;
+        match o.ttft_secs() {
+            Some(t) if t <= slos[k] => match &mut agg {
+                TtftAgg::Exact { per_class } => per_class[k].push(t),
+                TtftAgg::Sketch { per_class, pooled } => {
+                    per_class[k].add(t);
+                    pooled.add(t);
+                }
+            },
+            _ => timeouts[k] += 1,
+        }
+    });
 
-    let mut on_time: Vec<Vec<f64>> = vec![Vec::new(); trace.classes.len()];
-    let mut per_class: Vec<ClassReport> = trace
-        .classes
+    let mut per_class: Vec<ClassReport> = classes
         .iter()
-        .map(|c| ClassReport {
+        .enumerate()
+        .map(|(k, c)| ClassReport {
             name: c.name.clone(),
             slo_ttft_s: c.slo_ttft_s,
-            issued: 0,
-            timeouts: 0,
+            issued: issued[k],
+            timeouts: timeouts[k],
             ttft_p50_s: None,
             ttft_p99_s: None,
         })
         .collect();
-    for (id, class_idx) in ids {
-        let outcome = sim.outcome(id).expect("submitted request known");
-        let report = &mut per_class[class_idx];
-        report.issued += 1;
-        match outcome.ttft_secs() {
-            Some(t) if t <= report.slo_ttft_s => on_time[class_idx].push(t),
-            _ => report.timeouts += 1,
+    let (ttft_p50_s, ttft_p99_s) = match &agg {
+        TtftAgg::Exact { per_class: ttfts } => {
+            let mut pooled = Vec::new();
+            for (report, class_ttfts) in per_class.iter_mut().zip(ttfts) {
+                let (p50, p99) = percentile_pair(class_ttfts);
+                report.ttft_p50_s = p50;
+                report.ttft_p99_s = p99;
+                pooled.extend_from_slice(class_ttfts);
+            }
+            percentile_pair(&pooled)
         }
-    }
-    let mut pooled = Vec::new();
-    for (report, ttfts) in per_class.iter_mut().zip(&on_time) {
-        let (p50, p99) = percentile_pair(ttfts);
-        report.ttft_p50_s = p50;
-        report.ttft_p99_s = p99;
-        pooled.extend_from_slice(ttfts);
-    }
-    let (ttft_p50_s, ttft_p99_s) = percentile_pair(&pooled);
+        TtftAgg::Sketch { per_class: sketches, pooled } => {
+            for (report, sketch) in per_class.iter_mut().zip(sketches) {
+                if !sketch.is_empty() {
+                    report.ttft_p50_s = Some(sketch.quantile(50.0));
+                    report.ttft_p99_s = Some(sketch.quantile(99.0));
+                }
+            }
+            if pooled.is_empty() {
+                (None, None)
+            } else {
+                (Some(pooled.quantile(50.0)), Some(pooled.quantile(99.0)))
+            }
+        }
+    };
     ScenarioReport {
-        scenario: trace.scenario.clone(),
-        issued: per_class.iter().map(|c| c.issued).sum(),
-        timeouts: per_class.iter().map(|c| c.timeouts).sum(),
+        scenario: scenario.to_string(),
+        issued: issued.iter().sum(),
+        timeouts: timeouts.iter().sum(),
         per_class,
         ttft_p50_s,
         ttft_p99_s,
@@ -803,9 +903,71 @@ pub fn run_trace(cfg: RunConfig, trace: &Trace) -> ScenarioReport {
     }
 }
 
-/// Generate and drive a scenario in one call.
+fn trace_req_arrival(r: &TraceReq) -> StreamArrival {
+    StreamArrival {
+        at_ns: r.at_ns,
+        class: ReqClass::Normal,
+        prompt_tokens: r.prompt_tokens,
+        max_new_tokens: r.output_tokens,
+        content_seed: r.content_seed,
+        tag: r.class_idx as u32,
+    }
+}
+
+/// Drive a materialized trace through a fresh [`ServingSim`] and
+/// summarize outcomes with exact percentiles.
+pub fn run_trace(cfg: RunConfig, trace: &Trace) -> ScenarioReport {
+    let arrivals: Vec<StreamArrival> = trace.requests.iter().map(trace_req_arrival).collect();
+    drive_report(
+        cfg,
+        &trace.scenario,
+        &trace.classes,
+        arrivals.into_iter(),
+        TtftAgg::Exact {
+            per_class: vec![Vec::new(); trace.classes.len()],
+        },
+    )
+}
+
+/// Generate and drive a scenario in one call (materialized trace).
 pub fn run_scenario(cfg: RunConfig, scenario: &Scenario, seed: u64) -> ScenarioReport {
     run_trace(cfg, &scenario.generate(seed))
+}
+
+/// Generate-and-drive a scenario **lazily**: arrivals are pulled from
+/// the k-way class merge ([`Scenario::stream`]) as virtual time
+/// advances, finished requests are evicted eagerly, and TTFT
+/// percentiles come from bounded-memory [`QuantileSketch`]es — so a
+/// single run can push millions of requests at roughly constant memory.
+///
+/// Per-request outcomes are byte-identical to
+/// `run_trace(cfg, &scenario.generate(seed))`; the report differs only
+/// in the p50/p99 estimator (exact vs. sketch). A sketch agrees
+/// exactly while it holds ≤ [`QuantileSketch::EXACT_CAP`] on-time
+/// samples — per class for the class rows, across *all* classes for
+/// the pooled row — and stays within
+/// [`QuantileSketch::relative_error_bound`] beyond.
+pub fn run_stream(cfg: RunConfig, scenario: &Scenario, seed: u64) -> ScenarioReport {
+    let classes: Vec<TraceClass> = scenario
+        .classes
+        .iter()
+        .map(|c| TraceClass {
+            name: c.name.clone(),
+            slo_ttft_s: c.slo_ttft_s,
+        })
+        .collect();
+    let n = classes.len();
+    let arrivals = scenario.stream(seed).map(|r| trace_req_arrival(&r));
+    drive_report(
+        cfg,
+        &scenario.name,
+        &classes,
+        arrivals,
+        TtftAgg::Sketch {
+            per_class: (0..n).map(|_| QuantileSketch::new()).collect(),
+            pooled: QuantileSketch::new(),
+        },
+    )
 }
 
 #[cfg(test)]
@@ -886,6 +1048,63 @@ mod tests {
         let trace = shared.generate(9);
         let first = trace.requests[0].content_seed;
         assert!(trace.requests.iter().all(|r| r.content_seed == first));
+    }
+
+    #[test]
+    fn stream_matches_generate_across_the_catalog() {
+        // The lazy k-way merge must reproduce the materialized trace
+        // exactly — same requests, same order — for every shipped
+        // scenario and several seeds (incl. a full-64-bit one that
+        // exercises the mask).
+        for scenario in Scenario::catalog() {
+            for seed in [0u64, 7, u64::MAX] {
+                let trace = scenario.generate(seed);
+                let streamed: Vec<TraceReq> = scenario.stream(seed).collect();
+                assert_eq!(streamed, trace.requests, "{} seed {seed}", scenario.name);
+                assert!(!streamed.is_empty(), "{}", scenario.name);
+            }
+        }
+    }
+
+    #[test]
+    fn stream_merge_matches_per_class_stable_sort() {
+        // Pin the merge against an independent reference: generate each
+        // class separately (the pre-streaming algorithm) and stable-sort
+        // by (at_ns, class_idx).
+        let scenario = Scenario::by_name("multi-tenant").unwrap().with_duration(20.0);
+        let seed = 99u64;
+        let dur_ns = (scenario.duration_s * 1e9) as u64;
+        let mut reference = Vec::new();
+        for (idx, class) in scenario.classes.iter().enumerate() {
+            let (arrival_seed, length_seed, content_base) = class_streams(seed, idx);
+            let content_base = content_base & TRACE_SEED_MASK;
+            let mut arrivals = class.arrivals.build(arrival_seed);
+            let mut lengths = class.lengths.build(length_seed);
+            let mut k = 0u64;
+            while let Some(at_ns) = arrivals.next_arrival_ns() {
+                if at_ns >= dur_ns {
+                    break;
+                }
+                let (prompt_tokens, output_tokens) = lengths.sample_lengths();
+                let content_seed = if class.shared_prompt {
+                    content_base
+                } else {
+                    content_base.wrapping_add(k + 1) & TRACE_SEED_MASK
+                };
+                reference.push(TraceReq {
+                    at_ns,
+                    class_idx: idx,
+                    prompt_tokens,
+                    output_tokens,
+                    content_seed,
+                });
+                k += 1;
+            }
+        }
+        reference.sort_by_key(|r| (r.at_ns, r.class_idx));
+        let streamed: Vec<TraceReq> = scenario.stream(seed).collect();
+        assert_eq!(streamed, reference);
+        assert!(streamed.len() > 50, "both classes contribute: {}", streamed.len());
     }
 
     #[test]

@@ -1,0 +1,86 @@
+//! Allocation-behavior acceptance tests for the serving hot path,
+//! measured with the counting global allocator from `testkit::alloc`.
+//! Counters are per-thread, so these tests are immune to the libtest
+//! harness running other tests concurrently.
+//!
+//! Utilization tracing is disabled (`ServingSim::with_options(.., false)`)
+//! because traces grow with *virtual time* by design; everything else is
+//! the production engine.
+
+use cpuslow::config::{ModelSpec, RunConfig, SystemSpec};
+use cpuslow::engine::{EngineCosts, ReqClass, ServingSim, StreamArrival};
+use cpuslow::testkit::alloc::{self, CountingAlloc};
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn cfg(n_gpus: usize, cores: usize) -> RunConfig {
+    RunConfig::new(SystemSpec::h100(), ModelSpec::llama31_8b(), n_gpus, cores)
+}
+
+#[test]
+fn steady_state_engine_stepping_allocates_nothing() {
+    // A fixed resident batch decoding for the whole measurement window:
+    // no arrivals, no admissions, no finishes, no tokenizer activity —
+    // pure engine/worker/device stepping. After warmup, the step path
+    // (scheduler slab walk, pooled plan, shm ring gates, shared launch
+    // and completion callbacks, collective churn) must not allocate.
+    let mut sim = ServingSim::with_options(cfg(2, 8), EngineCosts::default(), false);
+    for i in 0..4u64 {
+        // (512 + 100k) tokens ≈ 6.3k KV pages each — all four fit; the
+        // 100k-token outputs keep them decoding far past the window.
+        sim.submit_at(i * 1_000_000, ReqClass::Normal, 512, 100_000);
+    }
+    // Warmup: tokenize, admit, finish prefill, settle every pool and
+    // capacity on the step path.
+    sim.run_secs(5.0);
+    let steps_before = sim.steps_completed();
+    let before = alloc::counters();
+    sim.run_secs(13.0);
+    let after = alloc::counters();
+    let steps = sim.steps_completed() - steps_before;
+    assert!(steps > 100, "decode steps in the window: {steps}");
+    assert_eq!(
+        after.allocs - before.allocs,
+        0,
+        "steady-state stepping allocated ({} allocs / {} bytes over {steps} steps)",
+        after.allocs - before.allocs,
+        after.alloc_bytes - before.alloc_bytes,
+    );
+}
+
+#[test]
+fn streaming_memory_roughly_constant_in_request_count() {
+    // 10× the request volume through the streaming driver must not grow
+    // peak live memory proportionally: finished requests are harvested
+    // and evicted, slab pages are freed, and TTFT aggregation is
+    // sketch-bounded. (Prefix caching off: its LRU grows toward a fixed
+    // capacity with distinct prompts, which is bounded but would blur
+    // this comparison.)
+    let run = |n_requests: u64| -> i64 {
+        let mut config = cfg(2, 16);
+        config.serve.prefix_caching = false;
+        let mut sim = ServingSim::with_options(config, EngineCosts::default(), false);
+        let arrivals = (0..n_requests).map(|i| StreamArrival {
+            at_ns: i * 50_000_000, // 20 rps
+            class: ReqClass::Normal,
+            prompt_tokens: 600,
+            max_new_tokens: 4,
+            content_seed: i,
+            tag: 0,
+        });
+        alloc::reset_peak_live();
+        let base = alloc::live_bytes();
+        let mut harvested = 0u64;
+        let stats = sim.run_streaming(arrivals, 30.0, |_o| harvested += 1);
+        assert_eq!(stats.submitted, n_requests);
+        assert_eq!(harvested, n_requests, "every request reported exactly once");
+        alloc::peak_live_bytes() - base
+    };
+    let small = run(300);
+    let large = run(3_000);
+    assert!(
+        large < small * 2 + (256 << 10),
+        "peak live grew with request count: {small} → {large} bytes"
+    );
+}

@@ -1,0 +1,138 @@
+//! Streaming-vs-materialized differential acceptance: the lazy scenario
+//! path (`Scenario::stream` + `ServingSim::run_streaming` +
+//! `run_stream`) must reproduce the materialized path
+//! (`Scenario::generate` + `run_trace`) byte-for-byte at the
+//! per-request Outcome level, and within the quantile sketch's
+//! advertised error bound at the report level once runs outgrow the
+//! sketch's exact fallback.
+
+use cpuslow::config::{ModelSpec, RunConfig, SystemSpec};
+use cpuslow::engine::{Outcome, ReqClass, ServingSim, StreamArrival};
+use cpuslow::util::stats::QuantileSketch;
+use cpuslow::workload::scenario::{run_stream, run_trace, Scenario, TraceReq};
+
+fn cfg(cores: usize) -> RunConfig {
+    RunConfig::new(SystemSpec::blackwell(), ModelSpec::llama31_8b(), 4, cores)
+}
+
+fn arrival_of(r: &TraceReq) -> StreamArrival {
+    StreamArrival {
+        at_ns: r.at_ns,
+        class: ReqClass::Normal,
+        prompt_tokens: r.prompt_tokens,
+        max_new_tokens: r.output_tokens,
+        content_seed: r.content_seed,
+        tag: r.class_idx as u32,
+    }
+}
+
+fn outcomes_via<I>(cfg: RunConfig, arrivals: I, slack_s: f64) -> Vec<Outcome>
+where
+    I: Iterator<Item = StreamArrival> + 'static,
+{
+    let mut sim = ServingSim::new(cfg);
+    let mut out = Vec::new();
+    sim.run_streaming(arrivals, slack_s, |o| out.push(o));
+    out.sort_by_key(|o| o.id);
+    out
+}
+
+#[test]
+fn streaming_outcomes_byte_identical_across_catalog() {
+    // Every catalog scenario: drive once from the materialized trace and
+    // once from the lazy k-way merge; every per-request outcome —
+    // timestamps included — must be identical.
+    for scenario in Scenario::catalog() {
+        let scenario = scenario.with_duration(6.0);
+        let seed = 11u64;
+        let trace = scenario.generate(seed);
+        let slack = trace.classes.iter().fold(0.0_f64, |a, c| a.max(c.slo_ttft_s)) + 1.0;
+        let materialized: Vec<StreamArrival> = trace.requests.iter().map(arrival_of).collect();
+        let a = outcomes_via(cfg(16), materialized.into_iter(), slack);
+        let b = outcomes_via(cfg(16), scenario.stream(seed).map(|r| arrival_of(&r)), slack);
+        assert!(!a.is_empty(), "{}", scenario.name);
+        assert_eq!(a, b, "outcomes diverged for '{}'", scenario.name);
+    }
+}
+
+#[test]
+fn run_stream_report_matches_run_trace_for_small_runs() {
+    // Below the sketch's exact-fallback cap the whole report — counts,
+    // percentiles, GPU-idle share, step count — matches field-for-field.
+    for name in ["steady", "multi-tenant", "attack"] {
+        let scenario = Scenario::by_name(name).unwrap().with_duration(6.0);
+        let a = run_trace(cfg(16), &scenario.generate(3));
+        let b = run_stream(cfg(16), &scenario, 3);
+        assert_eq!(a.issued, b.issued, "{name}");
+        assert!(a.issued > 0, "{name}");
+        assert!(
+            (a.issued as u64) < QuantileSketch::EXACT_CAP as u64,
+            "{name}: keep this run inside the exact fallback"
+        );
+        assert_eq!(a.timeouts, b.timeouts, "{name}");
+        assert_eq!(a.steps_completed, b.steps_completed, "{name}");
+        assert_eq!(a.gpu_idle_share, b.gpu_idle_share, "{name}");
+        assert_eq!(a.ttft_p50_s, b.ttft_p50_s, "{name}");
+        assert_eq!(a.ttft_p99_s, b.ttft_p99_s, "{name}");
+        assert_eq!(a.per_class.len(), b.per_class.len(), "{name}");
+        for (ca, cb) in a.per_class.iter().zip(&b.per_class) {
+            assert_eq!(ca.issued, cb.issued, "{name}/{}", ca.name);
+            assert_eq!(ca.timeouts, cb.timeouts, "{name}/{}", ca.name);
+            assert_eq!(ca.ttft_p50_s, cb.ttft_p50_s, "{name}/{}", ca.name);
+            assert_eq!(ca.ttft_p99_s, cb.ttft_p99_s, "{name}/{}", ca.name);
+        }
+    }
+}
+
+#[test]
+fn sketch_percentiles_within_bound_beyond_exact_cap() {
+    // Scale the steady scenario past the sketch's exact fallback: counts
+    // still match exactly, percentiles within the documented bound.
+    let scenario = Scenario::by_name("steady")
+        .unwrap()
+        .scaled(6.0)
+        .with_duration(30.0);
+    let a = run_trace(cfg(32), &scenario.generate(1));
+    let b = run_stream(cfg(32), &scenario, 1);
+    assert_eq!(a.issued, b.issued);
+    assert!(
+        a.issued > QuantileSketch::EXACT_CAP,
+        "run must outgrow the exact fallback: {}",
+        a.issued
+    );
+    assert_eq!(a.timeouts, b.timeouts);
+    assert_eq!(a.steps_completed, b.steps_completed);
+    let bound = QuantileSketch::relative_error_bound() * 1.5 + 1e-9;
+    for (exact, sketch) in [
+        (a.ttft_p50_s, b.ttft_p50_s),
+        (a.ttft_p99_s, b.ttft_p99_s),
+    ] {
+        let (e, s) = (exact.expect("on-time requests"), sketch.expect("on-time requests"));
+        let rel = (s / e - 1.0).abs();
+        assert!(rel <= bound, "sketch {s} vs exact {e} (rel {rel})");
+    }
+}
+
+#[test]
+fn streaming_plan_backlog_stays_bounded() {
+    // The plans-map eviction regression pin, exercised through the
+    // streaming driver: sample the backlog while a scenario drains.
+    let scenario = Scenario::by_name("steady").unwrap().with_duration(10.0);
+    let mut sim = ServingSim::new(cfg(16));
+    let arrivals: Vec<StreamArrival> = scenario
+        .generate(5)
+        .requests
+        .iter()
+        .map(arrival_of)
+        .collect();
+    for a in arrivals {
+        sim.submit_request(a);
+    }
+    let mut max_backlog = 0;
+    for k in 1..=80 {
+        sim.run_secs(k as f64 * 0.25);
+        max_backlog = max_backlog.max(sim.plan_backlog());
+    }
+    assert!(sim.steps_completed() > 50);
+    assert!(max_backlog <= 1, "plan backlog {max_backlog}");
+}
