@@ -2,9 +2,14 @@
 //! the calibration source for `tokenize_s_per_token`.
 //!
 //! Writes `BENCH_tokenizer.json` (tokens/sec and merges/sec per
-//! scenario) so the encode/train hot paths are tracked across PRs.
+//! scenario) so the encode/train hot paths are tracked across PRs;
+//! `cpuslow bench-check` gates it against
+//! `rust/BENCH_tokenizer.baseline.json` in CI alongside the simcpu and
+//! serve suites.
 
-use cpuslow::tokenizer::{corpus::Lexicon, encode_uncached, train, BatchTokenizer, Encoder};
+use cpuslow::tokenizer::{
+    corpus::Lexicon, encode_uncached, encode_uncached_into, train, BatchTokenizer, Encoder,
+};
 use cpuslow::util::bench::{bench, black_box, BenchSuite};
 use cpuslow::util::rng::Rng;
 use std::time::Duration;
@@ -19,6 +24,7 @@ fn main() {
 
     let text_4k = lex.sample_text(&mut rng, 4_096);
     let text_64k = lex.sample_text(&mut rng, 65_536);
+    let text_1m = lex.sample_text(&mut rng, 1 << 20);
 
     let n_tok_4k = encode_uncached(&vocab, &text_4k).len() as f64;
     let r = bench("encode_uncached 4 KB", Duration::from_secs(2), || {
@@ -43,6 +49,20 @@ fn main() {
     );
     suite.record(&r, Some((n_tok_64k, "tokens")));
 
+    // allocation-free variant: reused output buffer + warm merge scratch
+    let mut reused = Vec::with_capacity(n_tok_64k as usize + 16);
+    let r = bench("encode_into 64 KB (reused buffer)", Duration::from_secs(2), || {
+        reused.clear();
+        encode_uncached_into(&vocab, &text_64k, &mut reused);
+        black_box(reused.len());
+    });
+    r.report();
+    println!(
+        "    → {:.2} M tokens/s single-core, zero allocs/iter",
+        r.per_sec(n_tok_64k) / 1e6
+    );
+    suite.record(&r, Some((n_tok_64k, "tokens")));
+
     // cached encoder (word cache warm)
     let mut enc = Encoder::new(&vocab);
     enc.encode(&text_4k);
@@ -60,7 +80,7 @@ fn main() {
         .map(|t| encode_uncached(&vocab, t).len() as f64)
         .sum();
     let r = bench("batch encode 8×8 KB (4 threads)", Duration::from_secs(2), || {
-        black_box(tok.encode_batch(batch.clone()));
+        black_box(tok.encode_batch_refs(&batch));
     });
     r.report();
     println!(
@@ -68,6 +88,20 @@ fn main() {
         r.per_sec(total_tokens) / 1e6
     );
     suite.record(&r, Some((total_tokens, "tokens")));
+
+    // long single document: borrowed chunks fanned across the pool
+    // (the encode_long path — pre-fix this copied every chunk into an
+    // owned String before dispatch)
+    let n_tok_1m = encode_uncached(&vocab, &text_1m).len() as f64;
+    let r = bench("encode_long 1 MB (64 KB chunks, 4 threads)", Duration::from_secs(3), || {
+        black_box(tok.encode_long(&text_1m, 64 * 1024));
+    });
+    r.report();
+    println!(
+        "    → {:.2} M tokens/s across pool (long doc)",
+        r.per_sec(n_tok_1m) / 1e6
+    );
+    suite.record(&r, Some((n_tok_1m, "tokens")));
 
     // decode
     let ids = encode_uncached(&vocab, &text_4k);
@@ -84,6 +118,12 @@ fn main() {
     });
     r.report();
     suite.record(&r, Some((500.0, "merges")));
+
+    let r = bench("train 2000 merges (128 KB corpus)", Duration::from_secs(4), || {
+        black_box(train(&train_corpus, 2_000));
+    });
+    r.report();
+    suite.record(&r, Some((2_000.0, "merges")));
 
     match suite.write(".") {
         Ok(path) => println!("bench data → {}", path.display()),

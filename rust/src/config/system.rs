@@ -80,9 +80,12 @@ pub struct SystemSpec {
     /// paper shows tokenization ≈ 30–50% of TTFT while chunked prefill
     /// of the same prompt takes seconds on 4×H200 — back-solving gives
     /// ~40k tokens/s/core (≈25 µs/token). Our own Rust BPE encoder runs
-    /// >20× faster (see `cpuslow calibrate`), consistent with the gap
-    /// being Python-side; the simulator models the stack the paper
-    /// measured.
+    /// >20× faster (see `cpuslow calibrate`) — more still since the
+    /// heap-merge fast path replaced the naive quadratic loop; rerun
+    /// `cpuslow calibrate` after encoder changes before comparing
+    /// simulated tokenization costs across versions. The gap is
+    /// consistent with being Python-side; the simulator models the
+    /// stack the paper measured.
     pub tokenize_s_per_token: f64,
 }
 

@@ -11,6 +11,14 @@
 //! boxed script instructions): between jobs a worker holds no heap state
 //! beyond its queue slot, so an idle or steady-state pool never touches
 //! the allocator.
+//!
+//! Cost accounting: every job's `cost_ns` ultimately derives from
+//! `SystemSpec::tokenize_s_per_token` via [`chunk_cost_iter`] /
+//! [`chunk_costs`]. That constant is calibrated against the *real*
+//! encoder in [`crate::tokenizer`] (`cpuslow calibrate`), which now runs
+//! the allocation-free heap-merge fast path — after recalibrating,
+//! simulated tokenization costs shift accordingly (the modeled
+//! Python-stack overhead factor in `SystemSpec` is documented there).
 
 use crate::simcpu::{GateId, Op, Program, Sim, TaskCtx};
 use std::cell::RefCell;

@@ -99,7 +99,7 @@ impl RealEngine {
 
         // 1. tokenize (real BPE, parallel pool) — timed per request
         let tok_start = Instant::now();
-        let encoded = self.tokenizer.encode_batch(prompts.clone());
+        let encoded = self.tokenizer.encode_batch_refs(&prompts);
         let tokenize_wall = tok_start.elapsed().as_secs_f64();
         let mut token_lists: Vec<Vec<TokenId>> = Vec::with_capacity(n);
         for ids in encoded {
@@ -189,8 +189,7 @@ impl RealEngine {
                     } else {
                         0.0
                     };
-                    let enc = crate::tokenizer::Encoder::new(self.tokenizer.vocab());
-                    let text = enc.decode(&lane.generated);
+                    let text = crate::tokenizer::decode(self.tokenizer.vocab(), &lane.generated);
                     outcomes[req] = Some(RealOutcome {
                         id: req,
                         prompt_chars: prompts[req].len(),

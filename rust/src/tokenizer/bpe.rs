@@ -5,123 +5,273 @@
 //! run the greedy lowest-rank merge loop over the word's byte symbols.
 //! Because base tokens cover all 256 bytes, any input round-trips
 //! exactly (byte fallback), which the property tests verify.
+//!
+//! The merge loop is the HF-style fast path: a doubly-linked symbol
+//! list over a reusable scratch array plus a min-heap of candidate
+//! merges keyed by `(rank, position)` with lazy invalidation —
+//! O(n log n) per word instead of the naive rescan-all-pairs loop's
+//! O(n² · lookup). All per-word state (symbol list, heap) lives in a
+//! thread-local `MergeScratch` that grows to the largest word seen
+//! and is then reused forever, so the `*_into` entry points are
+//! allocation-free after warmup (pinned by `tests/test_tokenizer_alloc`).
+//! The naive loop is retained as `merge_word_reference` (test-only) and
+//! the differential tests below pin byte-identical output on random and
+//! adversarial inputs, the same pattern as the simcpu event-core
+//! reference queue.
 
 use super::vocab::{TokenId, Vocab};
 use rustc_hash::FxHashMap;
+use std::cell::RefCell;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
 
-/// Pre-tokenizer: split text into words, each carrying its leading
-/// whitespace (GPT-2-style "Ġword" behavior, expressed directly as
-/// bytes). Contiguous punctuation and digit runs split off on their own,
+#[derive(PartialEq, Clone, Copy)]
+enum Class {
+    Alpha,
+    Digit,
+    Space,
+    Punct,
+}
+
+fn classify(b: u8) -> Class {
+    if b.is_ascii_alphabetic() || b >= 0x80 {
+        Class::Alpha
+    } else if b.is_ascii_digit() {
+        Class::Digit
+    } else if b == b' ' || b == b'\t' || b == b'\n' || b == b'\r' {
+        Class::Space
+    } else {
+        Class::Punct
+    }
+}
+
+/// Lazy pre-tokenizer: yields words without building a `Vec` (the form
+/// the encode hot paths use). Each word carries its leading whitespace
+/// (GPT-2-style "Ġword" behavior, expressed directly as bytes), and
+/// contiguous punctuation and digit runs split off on their own,
 /// matching how real BPE pre-tokenizers keep categories separate.
-pub fn pre_tokenize(text: &str) -> Vec<&[u8]> {
-    let bytes = text.as_bytes();
-    let mut words = Vec::new();
-    let mut start = 0;
-    let mut i = 0;
+pub struct WordIter<'t> {
+    bytes: &'t [u8],
+    i: usize,
+}
 
-    #[derive(PartialEq, Clone, Copy)]
-    enum Class {
-        Alpha,
-        Digit,
-        Space,
-        Punct,
-    }
-    fn classify(b: u8) -> Class {
-        if b.is_ascii_alphabetic() || b >= 0x80 {
-            Class::Alpha
-        } else if b.is_ascii_digit() {
-            Class::Digit
-        } else if b == b' ' || b == b'\t' || b == b'\n' || b == b'\r' {
-            Class::Space
-        } else {
-            Class::Punct
+impl<'t> Iterator for WordIter<'t> {
+    type Item = &'t [u8];
+
+    fn next(&mut self) -> Option<&'t [u8]> {
+        let bytes = self.bytes;
+        if self.i >= bytes.len() {
+            return None;
         }
-    }
-
-    while i < bytes.len() {
         // A word = optional single leading space + run of one class.
-        let word_start = i;
+        let word_start = self.i;
+        let mut i = self.i;
         if bytes[i] == b' ' && i + 1 < bytes.len() && classify(bytes[i + 1]) != Class::Space {
             i += 1;
-        }
-        if i >= bytes.len() {
-            words.push(&bytes[word_start..]);
-            break;
         }
         let class = classify(bytes[i]);
         i += 1;
         while i < bytes.len() && classify(bytes[i]) == class && bytes[i] != b' ' {
             i += 1;
         }
-        words.push(&bytes[word_start..i]);
-        start = i;
+        self.i = i;
+        Some(&bytes[word_start..i])
     }
-    let _ = start;
-    words
 }
 
-/// BPE encoder with a word cache.
-pub struct Encoder<'v> {
-    vocab: &'v Vocab,
-    cache: FxHashMap<Vec<u8>, Vec<TokenId>>,
-    cache_hits: u64,
-    cache_misses: u64,
+/// Iterate the pre-tokenizer's words lazily.
+pub fn words(text: &str) -> WordIter<'_> {
+    WordIter {
+        bytes: text.as_bytes(),
+        i: 0,
+    }
 }
 
-impl<'v> Encoder<'v> {
-    pub fn new(vocab: &'v Vocab) -> Encoder<'v> {
-        Encoder {
-            vocab,
-            cache: FxHashMap::default(),
-            cache_hits: 0,
-            cache_misses: 0,
+/// Pre-tokenizer: split text into words (materialized form of
+/// [`words`], kept for callers that index the result).
+pub fn pre_tokenize(text: &str) -> Vec<&[u8]> {
+    words(text).collect()
+}
+
+// ---------------------------------------------------------------------
+// Heap-merge core
+// ---------------------------------------------------------------------
+
+/// Sentinel for "no neighbor" in the linked symbol list.
+const LINK_NONE: u32 = u32::MAX;
+/// Id written into consumed right-hand symbols so stale heap entries
+/// pointing at them can never validate (no real token has this id).
+const SYM_DEAD: TokenId = TokenId::MAX;
+
+#[derive(Clone, Copy)]
+struct Sym {
+    id: TokenId,
+    prev: u32,
+    next: u32,
+}
+
+/// A candidate merge in the heap. `left`/`right` snapshot the pair's
+/// token ids at push time: the entry is valid iff the symbols at
+/// `pos`/`pos.next` still hold exactly those ids (lazy invalidation —
+/// nothing is removed from the heap when a neighboring merge lands).
+#[derive(Clone, Copy)]
+struct Cand {
+    rank: u32,
+    pos: u32,
+    left: TokenId,
+    right: TokenId,
+    new_id: TokenId,
+}
+
+#[inline]
+fn cand_key(c: &Cand) -> u64 {
+    // Lexicographic (rank, pos): lowest rank first, leftmost position
+    // on ties — exactly the pair the naive loop's linear scan picks.
+    ((c.rank as u64) << 32) | c.pos as u64
+}
+
+/// Ordering is *reversed* on the key so std's max-[`BinaryHeap`] pops
+/// the smallest `(rank, pos)` first. The snapshot fields don't
+/// participate: entries with equal keys describe the same pair at the
+/// same slot, so they really are equal.
+impl PartialEq for Cand {
+    fn eq(&self, other: &Cand) -> bool {
+        cand_key(self) == cand_key(other)
+    }
+}
+
+impl Eq for Cand {}
+
+impl PartialOrd for Cand {
+    fn partial_cmp(&self, other: &Cand) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Cand {
+    fn cmp(&self, other: &Cand) -> Ordering {
+        cand_key(other).cmp(&cand_key(self))
+    }
+}
+
+/// Reusable per-thread scratch for the heap-merge loop: the symbol
+/// array and the candidate heap (the same lazy-deletion
+/// [`BinaryHeap`] pattern the trainer uses). Both retain capacity
+/// across words (`BinaryHeap::clear` keeps its buffer).
+struct MergeScratch {
+    syms: Vec<Sym>,
+    heap: BinaryHeap<Cand>,
+}
+
+impl MergeScratch {
+    fn new() -> MergeScratch {
+        MergeScratch {
+            syms: Vec::new(),
+            heap: BinaryHeap::new(),
         }
     }
+}
 
-    pub fn vocab(&self) -> &Vocab {
-        self.vocab
+thread_local! {
+    static SCRATCH: RefCell<MergeScratch> = RefCell::new(MergeScratch::new());
+}
+
+#[inline]
+fn try_push(vocab: &Vocab, heap: &mut BinaryHeap<Cand>, pos: u32, left: TokenId, right: TokenId) {
+    if let Some((rank, new_id)) = vocab.merge_lookup(left, right) {
+        heap.push(Cand {
+            rank,
+            pos,
+            left,
+            right,
+            new_id,
+        });
     }
+}
 
-    pub fn cache_stats(&self) -> (u64, u64) {
-        (self.cache_hits, self.cache_misses)
+/// The greedy BPE merge loop for a single word, appending tokens to
+/// `out`. Symbols live in a doubly-linked list over `scratch.syms`
+/// (a merge collapses the pair into the left slot, so slot indices stay
+/// monotone along the list); candidates pop from a min-heap in
+/// `(rank, pos)` order with stale entries skipped on pop. Equivalent to
+/// repeatedly applying the lowest-rank, leftmost applicable merge.
+fn merge_word_into(vocab: &Vocab, word: &[u8], scratch: &mut MergeScratch, out: &mut Vec<TokenId>) {
+    if word.len() < 2 {
+        out.extend(word.iter().map(|&b| b as TokenId));
+        return;
     }
-
-    /// Encode a full text.
-    pub fn encode(&mut self, text: &str) -> Vec<TokenId> {
-        let mut out = Vec::with_capacity(text.len() / 3);
-        for word in pre_tokenize(text) {
-            if let Some(ids) = self.cache.get(word) {
-                self.cache_hits += 1;
-                out.extend_from_slice(ids);
-            } else {
-                self.cache_misses += 1;
-                let ids = merge_word(self.vocab, word);
-                out.extend_from_slice(&ids);
-                // bound the cache to avoid unbounded growth on adversarial
-                // input; real tokenizers do the same
-                if self.cache.len() < 65_536 {
-                    self.cache.insert(word.to_vec(), ids);
-                }
-            }
+    let MergeScratch { syms, heap } = scratch;
+    syms.clear();
+    heap.clear();
+    let n = word.len();
+    for (i, &b) in word.iter().enumerate() {
+        syms.push(Sym {
+            id: b as TokenId,
+            prev: if i == 0 { LINK_NONE } else { (i - 1) as u32 },
+            next: if i + 1 == n { LINK_NONE } else { (i + 1) as u32 },
+        });
+    }
+    for i in 0..n - 1 {
+        try_push(vocab, heap, i as u32, syms[i].id, syms[i + 1].id);
+    }
+    while let Some(c) = heap.pop() {
+        let p = c.pos as usize;
+        if syms[p].id != c.left {
+            continue; // left side changed since push
         }
-        out
-    }
-
-    /// Decode token ids back into text (exact byte round-trip; invalid
-    /// UTF-8 from truncated sequences is replaced, as in production
-    /// detokenizers).
-    pub fn decode(&self, ids: &[TokenId]) -> String {
-        let mut bytes = Vec::with_capacity(ids.len() * 3);
-        for &id in ids {
-            bytes.extend_from_slice(self.vocab.token_bytes(id));
+        let nx = syms[p].next;
+        if nx == LINK_NONE {
+            continue; // pair dissolved (left symbol is now the tail)
         }
-        String::from_utf8_lossy(&bytes).into_owned()
+        let nxi = nx as usize;
+        if syms[nxi].id != c.right {
+            continue; // right side changed since push
+        }
+        // Apply: the left slot absorbs the pair, the right slot dies.
+        syms[p].id = c.new_id;
+        let nn = syms[nxi].next;
+        syms[nxi].id = SYM_DEAD;
+        syms[nxi].prev = LINK_NONE;
+        syms[nxi].next = LINK_NONE;
+        syms[p].next = nn;
+        if nn != LINK_NONE {
+            syms[nn as usize].prev = c.pos;
+        }
+        // New candidate pairs around the merged symbol.
+        let pv = syms[p].prev;
+        if pv != LINK_NONE {
+            try_push(vocab, heap, pv, syms[pv as usize].id, c.new_id);
+        }
+        if nn != LINK_NONE {
+            try_push(vocab, heap, c.pos, c.new_id, syms[nn as usize].id);
+        }
+    }
+    // Emit survivors. Slot 0 is always the head: a merge keeps the left
+    // slot, so the first symbol is never consumed as a right-hand side.
+    let mut i = 0u32;
+    loop {
+        let s = syms[i as usize];
+        debug_assert_ne!(s.id, SYM_DEAD);
+        out.push(s.id);
+        if s.next == LINK_NONE {
+            break;
+        }
+        i = s.next;
     }
 }
 
 /// The greedy BPE merge loop for a single word: repeatedly apply the
 /// lowest-rank applicable merge until none applies.
 pub fn merge_word(vocab: &Vocab, word: &[u8]) -> Vec<TokenId> {
+    let mut out = Vec::with_capacity(word.len());
+    SCRATCH.with(|s| merge_word_into(vocab, word, &mut s.borrow_mut(), &mut out));
+    out
+}
+
+/// Retained naive merge loop (O(n²·lookup) per word): the differential
+/// oracle the heap-merge fast path is pinned against.
+#[cfg(test)]
+pub(crate) fn merge_word_reference(vocab: &Vocab, word: &[u8]) -> Vec<TokenId> {
     let mut symbols: Vec<TokenId> = word.iter().map(|&b| b as TokenId).collect();
     if symbols.len() < 2 {
         return symbols;
@@ -150,13 +300,115 @@ pub fn merge_word(vocab: &Vocab, word: &[u8]) -> Vec<TokenId> {
     symbols
 }
 
+// ---------------------------------------------------------------------
+// Encoder
+// ---------------------------------------------------------------------
+
+/// Word-cache size bound, to avoid unbounded growth on adversarial
+/// input; real tokenizers do the same.
+const WORD_CACHE_CAP: usize = 65_536;
+
+/// BPE encoder with a word cache. Cached token sequences are interned
+/// into one shared arena (`(offset, len)` spans) instead of a
+/// `Vec<TokenId>` per entry, so a warm cache is a single allocation-
+/// stable block and hits are a bounds-checked slice copy.
+pub struct Encoder<'v> {
+    vocab: &'v Vocab,
+    cache: FxHashMap<Box<[u8]>, (u32, u32)>,
+    arena: Vec<TokenId>,
+    cache_hits: u64,
+    cache_misses: u64,
+}
+
+impl<'v> Encoder<'v> {
+    pub fn new(vocab: &'v Vocab) -> Encoder<'v> {
+        Encoder {
+            vocab,
+            cache: FxHashMap::default(),
+            arena: Vec::new(),
+            cache_hits: 0,
+            cache_misses: 0,
+        }
+    }
+
+    pub fn vocab(&self) -> &Vocab {
+        self.vocab
+    }
+
+    pub fn cache_stats(&self) -> (u64, u64) {
+        (self.cache_hits, self.cache_misses)
+    }
+
+    /// Encode a full text.
+    pub fn encode(&mut self, text: &str) -> Vec<TokenId> {
+        let mut out = Vec::with_capacity(text.len() / 3);
+        self.encode_into(text, &mut out);
+        out
+    }
+
+    /// Encode a full text, appending token ids to `out`. With a warm
+    /// word cache this performs **zero** allocations: hits copy arena
+    /// spans, misses reuse the thread-local merge scratch (only cache
+    /// *insertions* and `out` growth ever touch the allocator).
+    pub fn encode_into(&mut self, text: &str, out: &mut Vec<TokenId>) {
+        let vocab = self.vocab;
+        SCRATCH.with(|s| {
+            let mut scratch = s.borrow_mut();
+            for word in words(text) {
+                if let Some(&(off, len)) = self.cache.get(word) {
+                    self.cache_hits += 1;
+                    out.extend_from_slice(&self.arena[off as usize..(off + len) as usize]);
+                } else {
+                    self.cache_misses += 1;
+                    let start = out.len();
+                    merge_word_into(vocab, word, &mut scratch, out);
+                    let n = out.len() - start;
+                    if self.cache.len() < WORD_CACHE_CAP
+                        && self.arena.len() + n <= u32::MAX as usize
+                    {
+                        let off = self.arena.len() as u32;
+                        self.arena.extend_from_slice(&out[start..]);
+                        self.cache.insert(word.into(), (off, n as u32));
+                    }
+                }
+            }
+        });
+    }
+
+    /// Decode token ids back into text (exact byte round-trip; invalid
+    /// UTF-8 from truncated sequences is replaced, as in production
+    /// detokenizers).
+    pub fn decode(&self, ids: &[TokenId]) -> String {
+        decode(self.vocab, ids)
+    }
+}
+
+/// Decode token ids against a vocabulary (the [`Encoder::decode`] body,
+/// usable without constructing an encoder).
+pub fn decode(vocab: &Vocab, ids: &[TokenId]) -> String {
+    let mut bytes = Vec::with_capacity(ids.len() * 3);
+    for &id in ids {
+        bytes.extend_from_slice(vocab.token_bytes(id));
+    }
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
 /// Convenience: one-shot encode without an explicit encoder (no cache).
 pub fn encode_uncached(vocab: &Vocab, text: &str) -> Vec<TokenId> {
     let mut out = Vec::with_capacity(text.len() / 3);
-    for word in pre_tokenize(text) {
-        out.extend_from_slice(&merge_word(vocab, word));
-    }
+    encode_uncached_into(vocab, text, &mut out);
     out
+}
+
+/// One-shot encode appending to `out`; allocation-free once the
+/// thread-local merge scratch and `out`'s capacity have warmed up.
+pub fn encode_uncached_into(vocab: &Vocab, text: &str, out: &mut Vec<TokenId>) {
+    SCRATCH.with(|s| {
+        let mut scratch = s.borrow_mut();
+        for word in words(text) {
+            merge_word_into(vocab, word, &mut scratch, out);
+        }
+    });
 }
 
 #[cfg(test)]
@@ -273,5 +525,158 @@ mod tests {
         assert_eq!(enc.encode(text), encode_uncached(&v, text));
         // second pass (cache warm) still identical
         assert_eq!(enc.encode(text), encode_uncached(&v, text));
+    }
+
+    #[test]
+    fn encode_into_appends() {
+        let v = tiny_vocab();
+        let mut enc = Encoder::new(&v);
+        let mut out = vec![999];
+        enc.encode_into("the", &mut out);
+        assert_eq!(out, vec![999, 257]);
+        let mut out2 = Vec::new();
+        encode_uncached_into(&v, "the cat", &mut out2);
+        assert_eq!(out2, encode_uncached(&v, "the cat"));
+    }
+
+    #[test]
+    fn words_iterator_pins_edge_cases() {
+        // pre_tokenize is defined as words().collect(), so pin the
+        // iterator itself against explicit expected word lists — the
+        // paths a rewrite is most likely to break.
+        let cases: &[(&str, &[&str])] = &[
+            ("", &[]),
+            (" ", &[" "]),                      // trailing lone space
+            ("  ", &[" ", " "]),                // space run splits singly
+            ("a", &["a"]),
+            ("a ", &["a", " "]),
+            (" a", &[" a"]),                    // leading space joins word
+            ("ab12", &["ab", "12"]),            // class change splits
+            ("a\n\nb", &["a", "\n\n", "b"]),    // newline run is one word
+            ("a\t b", &["a", "\t", " b"]),      // tab run stops at space
+            ("the cat sat", &["the", " cat", " sat"]),
+            ("x !? 9", &["x", " !?", " 9"]),
+        ];
+        for (text, expected) in cases {
+            let got: Vec<&str> = words(text)
+                .map(|w| std::str::from_utf8(w).unwrap())
+                .collect();
+            assert_eq!(&got, expected, "{text:?}");
+        }
+    }
+}
+
+/// Differential tests: the heap-merge fast path against the retained
+/// naive reference, on random and adversarial byte strings — the same
+/// harness pattern as the simcpu event-core reference queue.
+#[cfg(test)]
+mod difftests {
+    use super::*;
+    use crate::tokenizer::corpus::Lexicon;
+    use crate::tokenizer::train::train;
+    use crate::tokenizer::vocab::Merge;
+    use crate::util::rng::Rng;
+
+    fn trained_vocab() -> Vocab {
+        let lex = Lexicon::generate(0x5E, 400);
+        let mut rng = Rng::new(0x5F);
+        let corpus = lex.sample_corpus(&mut rng, 8, 2_048);
+        train(&corpus, 600)
+    }
+
+    /// Overlapping repeated-char and punctuation merges: the worst case
+    /// for lazy heap invalidation (every merge invalidates neighbors
+    /// that are themselves heap candidates).
+    fn adversarial_vocab() -> Vocab {
+        let mut v = Vocab::bytes_only();
+        let a = b'a' as TokenId;
+        let aa = v.push_merge(Merge { left: a, right: a });
+        let aaa = v.push_merge(Merge { left: aa, right: a });
+        v.push_merge(Merge { left: aa, right: aa });
+        v.push_merge(Merge { left: a, right: aaa });
+        let sp_a = v.push_merge(Merge {
+            left: b' ' as TokenId,
+            right: a,
+        });
+        v.push_merge(Merge {
+            left: sp_a,
+            right: aa,
+        });
+        let ex = v.push_merge(Merge {
+            left: b'!' as TokenId,
+            right: b'!' as TokenId,
+        });
+        let exq = v.push_merge(Merge {
+            left: ex,
+            right: b'?' as TokenId,
+        });
+        v.push_merge(Merge {
+            left: exq,
+            right: ex,
+        });
+        v
+    }
+
+    fn assert_word_identical(v: &Vocab, word: &[u8]) {
+        assert_eq!(
+            merge_word(v, word),
+            merge_word_reference(v, word),
+            "word {word:?}"
+        );
+    }
+
+    #[test]
+    fn matches_reference_on_repeated_and_punct_words() {
+        for v in [adversarial_vocab(), trained_vocab()] {
+            for n in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 16, 17, 63, 64, 301] {
+                assert_word_identical(&v, &vec![b'a'; n]);
+                assert_word_identical(&v, &vec![b'!'; n]);
+            }
+            assert_word_identical(&v, b" aaaaaaa");
+            assert_word_identical(&v, b"!!!???!!!");
+            assert_word_identical(&v, b"!?!?!?!");
+            assert_word_identical(&v, b"aaabaaabaaa");
+            assert_word_identical(&v, "日本語テキスト".as_bytes());
+        }
+    }
+
+    #[test]
+    fn matches_reference_on_random_byte_strings() {
+        let vocabs = [trained_vocab(), adversarial_vocab()];
+        let mut rng = Rng::new(0xD1FF);
+        for case in 0..600u64 {
+            let v = &vocabs[(case % 2) as usize];
+            let len = (rng.below(48) + 1) as usize;
+            let word: Vec<u8> = (0..len)
+                .map(|_| match rng.below(4) {
+                    // heavy repeats, a few punct, and raw bytes
+                    0 => b'a' + rng.below(3) as u8,
+                    1 => b'a',
+                    2 => b"!?.,"[rng.below(4) as usize],
+                    _ => rng.below(256) as u8,
+                })
+                .collect();
+            assert_word_identical(v, &word);
+        }
+    }
+
+    #[test]
+    fn full_encode_matches_word_by_word_reference() {
+        let v = trained_vocab();
+        let lex = Lexicon::generate(0x60, 300);
+        let mut rng = Rng::new(0x61);
+        let mut texts: Vec<String> = (0..6).map(|_| lex.sample_text(&mut rng, 1_500)).collect();
+        texts.push("aaaa aaaa!!! ??? 123 aaaaaaaaaaaa".into());
+        texts.push(String::new());
+        for text in &texts {
+            let mut slow = Vec::new();
+            for w in pre_tokenize(text) {
+                slow.extend(merge_word_reference(&v, w));
+            }
+            assert_eq!(encode_uncached(&v, text), slow, "uncached: {text:?}");
+            let mut enc = Encoder::new(&v);
+            assert_eq!(enc.encode(text), slow, "cold cache: {text:?}");
+            assert_eq!(enc.encode(text), slow, "warm cache: {text:?}");
+        }
     }
 }

@@ -4,7 +4,7 @@
 //! a real, CPU-intensive, multithreaded subword tokenizer on the request
 //! critical path. This module is a from-scratch implementation with the
 //! same structure as HuggingFace's Rust tokenizers: byte-level BPE with
-//! learned merges ([`train`]), a cached greedy encoder ([`bpe`]), a
+//! learned merges ([`mod@train`]), a cached greedy encoder ([`bpe`]), a
 //! worker-pool batch front-end ([`parallel`]), and a synthetic corpus
 //! generator ([`corpus`]) standing in for natural-language prompts.
 //!
@@ -13,6 +13,13 @@
 //!   requests.
 //! * Track S (simulation): its measured per-token cost calibrates the
 //!   `tokenize_s_per_token` constant in [`crate::config::SystemSpec`].
+//!
+//! The encode/train hot paths run the heap-merge fast algorithms
+//! (linked symbol list + lazy candidate heap per word; lazy max-heap
+//! pair selection in the trainer) with naive reference implementations
+//! retained for the differential tests — see [`bpe`] and [`mod@train`]
+//! for the details, and ARCHITECTURE.md's "tokenizer hot path" section
+//! for the scratch/arena lifetime story.
 
 pub mod bpe;
 pub mod corpus;
@@ -20,7 +27,7 @@ pub mod parallel;
 pub mod train;
 pub mod vocab;
 
-pub use bpe::{encode_uncached, Encoder};
+pub use bpe::{decode, encode_uncached, encode_uncached_into, words, Encoder};
 pub use corpus::Lexicon;
 pub use parallel::BatchTokenizer;
 pub use train::train;

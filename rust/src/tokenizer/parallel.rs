@@ -6,8 +6,15 @@
 //! Also provides the *calibration* hook: measuring real wall-clock
 //! throughput of this encoder gives the `tokenize_s_per_token` constant
 //! the simulator uses.
+//!
+//! Dispatch is borrowed end-to-end: [`BatchTokenizer::encode_long`]
+//! fans `&str` chunks of the caller's document across the pool via
+//! [`ThreadPool::scoped_map`] (no per-chunk `String` copies), each
+//! worker encodes into its own output buffer through the scratch-based
+//! `encode_uncached_into` path, and the chunks concatenate into one
+//! pre-sized result.
 
-use super::bpe::encode_uncached;
+use super::bpe::{encode_uncached, encode_uncached_into};
 use super::vocab::{TokenId, Vocab};
 use crate::util::pool::ThreadPool;
 use std::sync::Arc;
@@ -41,32 +48,56 @@ impl BatchTokenizer {
         encode_uncached(&self.vocab, text)
     }
 
-    /// Encode a batch across the pool, preserving order. For long inputs
-    /// each text additionally splits into chunks so a single huge prompt
-    /// parallelizes (mirroring how serving stacks shard tokenization).
+    /// Encode one text on the calling thread, appending to `out`
+    /// (allocation-free once scratch and `out` capacity are warm).
+    pub fn encode_one_into(&self, text: &str, out: &mut Vec<TokenId>) {
+        encode_uncached_into(&self.vocab, text, out);
+    }
+
+    /// Encode a batch across the pool, preserving order. Texts are
+    /// dispatched by reference — nothing is copied to the workers.
     pub fn encode_batch(&self, texts: Vec<String>) -> Vec<Vec<TokenId>> {
-        let vocab = Arc::clone(&self.vocab);
-        self.pool.parallel_map(texts, move |text| {
-            encode_uncached(&vocab, &text)
+        self.encode_batch_refs(&texts)
+    }
+
+    /// [`encode_batch`](Self::encode_batch) without taking ownership of
+    /// the texts (the serving front-end keeps the prompts for later
+    /// reporting; cloning a whole batch just to tokenize it was pure
+    /// overhead).
+    pub fn encode_batch_refs(&self, texts: &[String]) -> Vec<Vec<TokenId>> {
+        let vocab: &Vocab = &self.vocab;
+        let items: Vec<&str> = texts.iter().map(String::as_str).collect();
+        self.pool.scoped_map(items, move |text: &str| {
+            let mut out = Vec::with_capacity(text.len() / 3);
+            encode_uncached_into(vocab, text, &mut out);
+            out
         })
     }
 
     /// Encode one very long text by splitting at word boundaries into
     /// ~`chunk_bytes` chunks processed in parallel. Chunk boundaries are
     /// placed at spaces so merges never straddle a split (identical
-    /// output to single-threaded encoding).
+    /// output to single-threaded encoding). Chunks are borrowed slices
+    /// of `text` all the way into the workers; each worker fills its own
+    /// output buffer and the buffers concatenate in chunk order.
     pub fn encode_long(&self, text: &str, chunk_bytes: usize) -> Vec<TokenId> {
         assert!(chunk_bytes > 0);
         if text.len() <= chunk_bytes {
             return self.encode_one(text);
         }
         let chunks = split_at_spaces(text, chunk_bytes);
-        let vocab = Arc::clone(&self.vocab);
-        let owned: Vec<String> = chunks.into_iter().map(|s| s.to_string()).collect();
-        let parts = self
-            .pool
-            .parallel_map(owned, move |chunk| encode_uncached(&vocab, &chunk));
-        parts.into_iter().flatten().collect()
+        let vocab: &Vocab = &self.vocab;
+        let parts: Vec<Vec<TokenId>> = self.pool.scoped_map(chunks, move |chunk: &str| {
+            let mut out = Vec::with_capacity(chunk.len() / 3);
+            encode_uncached_into(vocab, chunk, &mut out);
+            out
+        });
+        let total: usize = parts.iter().map(Vec::len).sum();
+        let mut out = Vec::with_capacity(total);
+        for part in &parts {
+            out.extend_from_slice(part);
+        }
+        out
     }
 }
 
@@ -115,7 +146,10 @@ impl Calibration {
 }
 
 /// Measure single-core encode throughput of this machine's real BPE
-/// implementation on a synthetic corpus.
+/// implementation on a synthetic corpus. This is the number that feeds
+/// `tokenize_s_per_token` — after encoder changes (e.g. the heap-merge
+/// fast path), rerun `cpuslow calibrate` before trusting simulated
+/// tokenization costs.
 pub fn calibrate(vocab: &Vocab, total_bytes: usize) -> Calibration {
     let lex = super::corpus::Lexicon::generate(0xCAFE, 1_000);
     let mut rng = crate::util::rng::Rng::new(0xD00D);
@@ -155,6 +189,8 @@ mod tests {
         for (text, ids) in texts.iter().zip(&batch) {
             assert_eq!(ids, &tok.encode_one(text));
         }
+        // borrowed-dispatch variant is byte-identical
+        assert_eq!(tok.encode_batch_refs(&texts), batch);
     }
 
     #[test]
@@ -167,6 +203,21 @@ mod tests {
         let whole = tok.encode_one(&text);
         let chunked = tok.encode_long(&text, 1_024);
         assert_eq!(whole, chunked);
+    }
+
+    #[test]
+    fn encode_one_into_matches_encode_one() {
+        let vocab = test_vocab();
+        let tok = BatchTokenizer::new(vocab, 2);
+        let lex = Lexicon::generate(9, 200);
+        let mut rng = Rng::new(10);
+        let text = lex.sample_text(&mut rng, 2_000);
+        let mut out = Vec::new();
+        tok.encode_one_into(&text, &mut out);
+        assert_eq!(out, tok.encode_one(&text));
+        // appends on reuse
+        tok.encode_one_into(&text, &mut out);
+        assert_eq!(out.len(), 2 * tok.encode_one(&text).len());
     }
 
     #[test]

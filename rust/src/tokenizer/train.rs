@@ -4,10 +4,23 @@
 //! word-frequency table and an inverted index from pair → words, so each
 //! merge only touches affected words. Deterministic: ties broken by
 //! smallest pair ids.
+//!
+//! Pair *selection* runs on a max-heap of `(count, Reverse(pair))`
+//! entries under lazy deletion instead of a full scan of `pair_counts`
+//! per merge (which made training O(#pairs × n_merges)): count
+//! increases push a fresh entry eagerly; decreases are repaired when a
+//! stale entry is popped (re-push with the settled count). Word
+//! rewrites are in-place (`apply_merge_in_place`) and pair
+//! enumeration is a lazy iterator (`pairs_of`), so a merge step
+//! allocates nothing beyond map/heap growth. The naive trainer is
+//! retained as `train_reference` (test-only) and a differential test
+//! pins an identical learned merge table.
 
-use super::bpe::pre_tokenize;
+use super::bpe::words;
 use super::vocab::{Merge, TokenId, Vocab};
 use rustc_hash::{FxHashMap, FxHashSet};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
 /// Train a vocabulary with up to `n_merges` merges from corpus texts.
 /// Stops early when no pair occurs at least `min_count` (=2) times.
@@ -15,14 +28,19 @@ pub fn train<S: AsRef<str>>(corpus: &[S], n_merges: usize) -> Vocab {
     // 1. word frequency table
     let mut word_freq: FxHashMap<Vec<u8>, u64> = FxHashMap::default();
     for text in corpus {
-        for word in pre_tokenize(text.as_ref()) {
-            *word_freq.entry(word.to_vec()).or_insert(0) += 1;
+        for word in words(text.as_ref()) {
+            // get_mut-first so repeated words don't allocate a key Vec
+            if let Some(c) = word_freq.get_mut(word) {
+                *c += 1;
+            } else {
+                word_freq.insert(word.to_vec(), 1);
+            }
         }
     }
     // Deterministic word order (HashMap iteration varies between runs).
     let mut entries: Vec<(Vec<u8>, u64)> = word_freq.into_iter().collect();
     entries.sort_unstable();
-    let mut words: Vec<(Vec<TokenId>, u64)> = entries
+    let mut words_tbl: Vec<(Vec<TokenId>, u64)> = entries
         .into_iter()
         .map(|(bytes, freq)| (bytes.iter().map(|&b| b as TokenId).collect(), freq))
         .collect();
@@ -30,21 +48,48 @@ pub fn train<S: AsRef<str>>(corpus: &[S], n_merges: usize) -> Vocab {
     // 2. initial pair statistics
     let mut pair_counts: FxHashMap<(TokenId, TokenId), i64> = FxHashMap::default();
     let mut pair_words: FxHashMap<(TokenId, TokenId), FxHashSet<usize>> = FxHashMap::default();
-    for (wi, (symbols, freq)) in words.iter().enumerate() {
+    for (wi, (symbols, freq)) in words_tbl.iter().enumerate() {
         for pair in pairs_of(symbols) {
             *pair_counts.entry(pair).or_insert(0) += *freq as i64;
             pair_words.entry(pair).or_default().insert(wi);
         }
     }
 
+    // Max-heap over (count, smallest-pair-on-ties). Entries are lazy:
+    // the authoritative count lives in `pair_counts`, and an entry is
+    // acted on only if its count still matches.
+    let mut heap: BinaryHeap<(i64, Reverse<(TokenId, TokenId)>)> = pair_counts
+        .iter()
+        .map(|(&pair, &count)| (count, Reverse(pair)))
+        .collect();
+    // Pairs whose count grew during the current merge step (deduped
+    // before pushing repair entries).
+    let mut touched: Vec<(TokenId, TokenId)> = Vec::new();
+
     let mut vocab = Vocab::bytes_only();
     for _ in 0..n_merges {
-        // 3. pick the most frequent pair (deterministic tie-break)
-        let best = pair_counts
-            .iter()
-            .filter(|(_, &c)| c >= 2)
-            .max_by_key(|(&pair, &count)| (count, std::cmp::Reverse(pair)));
-        let Some((&pair, _)) = best else { break };
+        // 3. pop the most frequent pair (deterministic tie-break),
+        // discarding or repairing stale entries along the way
+        let mut chosen = None;
+        while let Some((count, Reverse(pair))) = heap.pop() {
+            match pair_counts.get(&pair) {
+                Some(&cur) if cur == count => {
+                    if count >= 2 {
+                        chosen = Some(pair);
+                        break;
+                    }
+                    // below threshold: drop; a future increment re-pushes
+                }
+                Some(&cur) => {
+                    // count changed since push: re-push the settled value
+                    if cur >= 2 {
+                        heap.push((cur, Reverse(pair)));
+                    }
+                }
+                None => {} // pair merged away entirely
+            }
+        }
+        let Some(pair) = chosen else { break };
 
         let new_id = vocab.push_merge(Merge {
             left: pair.0,
@@ -61,18 +106,146 @@ pub fn train<S: AsRef<str>>(corpus: &[S], n_merges: usize) -> Vocab {
             })
             .unwrap_or_default();
         pair_counts.remove(&pair);
+        touched.clear();
 
         for wi in affected {
-            let freq = words[wi].1;
-            let old_symbols = words[wi].0.clone();
+            let freq = words_tbl[wi].1 as i64;
+            if !contains_pair(&words_tbl[wi].0, pair) {
+                continue;
+            }
+            // remove old contributions (word still in its old form)
+            for p in pairs_of(&words_tbl[wi].0) {
+                if p == pair {
+                    continue; // already removed wholesale
+                }
+                if let Some(c) = pair_counts.get_mut(&p) {
+                    *c -= freq;
+                    if *c <= 0 {
+                        pair_counts.remove(&p);
+                        pair_words.remove(&p);
+                        continue;
+                    }
+                }
+                if let Some(ws) = pair_words.get_mut(&p) {
+                    ws.remove(&wi);
+                }
+            }
+            apply_merge_in_place(&mut words_tbl[wi].0, pair, new_id);
+            // add new contributions
+            for p in pairs_of(&words_tbl[wi].0) {
+                *pair_counts.entry(p).or_insert(0) += freq;
+                pair_words.entry(p).or_default().insert(wi);
+                touched.push(p);
+            }
+        }
+        // One heap entry per grown pair, carrying its settled count.
+        // (Shrunk pairs are repaired lazily at pop time.)
+        touched.sort_unstable();
+        touched.dedup();
+        for &p in &touched {
+            if let Some(&c) = pair_counts.get(&p) {
+                if c >= 2 {
+                    heap.push((c, Reverse(p)));
+                }
+            }
+        }
+    }
+    vocab
+}
+
+/// Adjacent symbol pairs of a word, lazily.
+fn pairs_of(symbols: &[TokenId]) -> impl Iterator<Item = (TokenId, TokenId)> + '_ {
+    symbols.windows(2).map(|w| (w[0], w[1]))
+}
+
+fn contains_pair(symbols: &[TokenId], pair: (TokenId, TokenId)) -> bool {
+    pairs_of(symbols).any(|p| p == pair)
+}
+
+/// Greedy left-to-right replacement of `pair` with `new_id`, in place
+/// (two-pointer compaction; the write cursor never passes the read
+/// cursor, so no scratch copy is needed).
+fn apply_merge_in_place(symbols: &mut Vec<TokenId>, pair: (TokenId, TokenId), new_id: TokenId) {
+    let n = symbols.len();
+    let mut w = 0;
+    let mut r = 0;
+    while r < n {
+        if r + 1 < n && symbols[r] == pair.0 && symbols[r + 1] == pair.1 {
+            symbols[w] = new_id;
+            r += 2;
+        } else {
+            symbols[w] = symbols[r];
+            r += 1;
+        }
+        w += 1;
+    }
+    symbols.truncate(w);
+}
+
+/// Retained naive trainer (full `pair_counts` scan per merge,
+/// allocating rewrites): the differential oracle for [`train`].
+#[cfg(test)]
+pub(crate) fn train_reference<S: AsRef<str>>(corpus: &[S], n_merges: usize) -> Vocab {
+    fn apply_merge(symbols: &[TokenId], pair: (TokenId, TokenId), new_id: TokenId) -> Vec<TokenId> {
+        let mut out = symbols.to_vec();
+        apply_merge_in_place(&mut out, pair, new_id);
+        out
+    }
+    let mut word_freq: FxHashMap<Vec<u8>, u64> = FxHashMap::default();
+    for text in corpus {
+        for word in words(text.as_ref()) {
+            *word_freq.entry(word.to_vec()).or_insert(0) += 1;
+        }
+    }
+    let mut entries: Vec<(Vec<u8>, u64)> = word_freq.into_iter().collect();
+    entries.sort_unstable();
+    let mut words_tbl: Vec<(Vec<TokenId>, u64)> = entries
+        .into_iter()
+        .map(|(bytes, freq)| (bytes.iter().map(|&b| b as TokenId).collect(), freq))
+        .collect();
+
+    let mut pair_counts: FxHashMap<(TokenId, TokenId), i64> = FxHashMap::default();
+    let mut pair_words: FxHashMap<(TokenId, TokenId), FxHashSet<usize>> = FxHashMap::default();
+    for (wi, (symbols, freq)) in words_tbl.iter().enumerate() {
+        for pair in pairs_of(symbols) {
+            *pair_counts.entry(pair).or_insert(0) += *freq as i64;
+            pair_words.entry(pair).or_default().insert(wi);
+        }
+    }
+
+    let mut vocab = Vocab::bytes_only();
+    for _ in 0..n_merges {
+        let best = pair_counts
+            .iter()
+            .filter(|(_, &c)| c >= 2)
+            .max_by_key(|(&pair, &count)| (count, std::cmp::Reverse(pair)));
+        let Some((&pair, _)) = best else { break };
+
+        let new_id = vocab.push_merge(Merge {
+            left: pair.0,
+            right: pair.1,
+        });
+
+        let affected: Vec<usize> = pair_words
+            .remove(&pair)
+            .map(|s| {
+                let mut v: Vec<usize> = s.into_iter().collect();
+                v.sort_unstable();
+                v
+            })
+            .unwrap_or_default();
+        pair_counts.remove(&pair);
+
+        for wi in affected {
+            let freq = words_tbl[wi].1;
+            let old_symbols = words_tbl[wi].0.clone();
             let new_symbols = apply_merge(&old_symbols, pair, new_id);
             if new_symbols == old_symbols {
                 continue;
             }
-            // remove old contributions
             for p in pairs_of(&old_symbols) {
                 if p == pair {
-                    continue; // already removed wholesale
+                    continue;
                 }
                 if let Some(c) = pair_counts.get_mut(&p) {
                     *c -= freq as i64;
@@ -86,34 +259,14 @@ pub fn train<S: AsRef<str>>(corpus: &[S], n_merges: usize) -> Vocab {
                     ws.remove(&wi);
                 }
             }
-            // add new contributions
             for p in pairs_of(&new_symbols) {
                 *pair_counts.entry(p).or_insert(0) += freq as i64;
                 pair_words.entry(p).or_default().insert(wi);
             }
-            words[wi].0 = new_symbols;
+            words_tbl[wi].0 = new_symbols;
         }
     }
     vocab
-}
-
-fn pairs_of(symbols: &[TokenId]) -> Vec<(TokenId, TokenId)> {
-    symbols.windows(2).map(|w| (w[0], w[1])).collect()
-}
-
-fn apply_merge(symbols: &[TokenId], pair: (TokenId, TokenId), new_id: TokenId) -> Vec<TokenId> {
-    let mut out = Vec::with_capacity(symbols.len());
-    let mut i = 0;
-    while i < symbols.len() {
-        if i + 1 < symbols.len() && symbols[i] == pair.0 && symbols[i + 1] == pair.1 {
-            out.push(new_id);
-            i += 2;
-        } else {
-            out.push(symbols[i]);
-            i += 1;
-        }
-    }
-    out
 }
 
 #[cfg(test)]
@@ -179,10 +332,12 @@ mod tests {
     #[test]
     fn apply_merge_handles_overlaps() {
         // "aaa" with merge (a,a): greedy left-to-right → [aa, a]
-        let out = apply_merge(&[97, 97, 97], (97, 97), 256);
-        assert_eq!(out, vec![256, 97]);
-        let out = apply_merge(&[97, 97, 97, 97], (97, 97), 256);
-        assert_eq!(out, vec![256, 256]);
+        let mut v = vec![97, 97, 97];
+        apply_merge_in_place(&mut v, (97, 97), 256);
+        assert_eq!(v, vec![256, 97]);
+        let mut v = vec![97, 97, 97, 97];
+        apply_merge_in_place(&mut v, (97, 97), 256);
+        assert_eq!(v, vec![256, 256]);
     }
 
     #[test]
@@ -196,5 +351,44 @@ mod tests {
         let enc = Encoder::new(&vocab);
         assert_eq!(enc.decode(&ids), text);
         assert!(ids.len() < text.len());
+    }
+
+    #[test]
+    fn heap_trainer_matches_reference_merge_table() {
+        use crate::tokenizer::corpus::Lexicon;
+        use crate::util::rng::Rng;
+        // bench-shaped corpus: Zipf lexicon text
+        let lex = Lexicon::generate(0xB, 300);
+        let mut rng = Rng::new(0xC);
+        let corpus = lex.sample_corpus(&mut rng, 8, 1_024);
+        for n in [0usize, 1, 10, 150] {
+            assert_eq!(
+                train(&corpus, n).save_text(),
+                train_reference(&corpus, n).save_text(),
+                "n_merges={n}"
+            );
+        }
+        // adversarial: repeated chars, punct runs, overlapping patterns
+        let adv = [
+            "aaaa aaaa aaaaaaaa aa aaa",
+            "!!!! ???? !?!? !!!! !?",
+            "ababab ababab abab ba",
+            "zzzz  zzzz\nzzzz\tzz 1212 1212",
+        ];
+        for n in [5usize, 60] {
+            assert_eq!(
+                train(&adv, n).save_text(),
+                train_reference(&adv, n).save_text(),
+                "adversarial n_merges={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn heap_trainer_matches_reference_on_tiny_corpus() {
+        assert_eq!(
+            train(CORPUS, 100).save_text(),
+            train_reference(CORPUS, 100).save_text()
+        );
     }
 }

@@ -1,4 +1,10 @@
 //! Byte-level BPE vocabulary: 256 base byte tokens plus learned merges.
+//!
+//! Storage is hot-path-oriented: token byte strings are interned into
+//! one contiguous arena (`token_bytes` is a span lookup, not a per-token
+//! `Vec`), and the merge table is keyed by the pair packed into a single
+//! `u64` so the encoder's innermost operation — `merge_lookup` — hashes
+//! one machine word.
 
 use rustc_hash::FxHashMap;
 
@@ -11,20 +17,29 @@ pub struct Merge {
     pub right: TokenId,
 }
 
+#[inline]
+fn pair_key(left: TokenId, right: TokenId) -> u64 {
+    ((left as u64) << 32) | right as u64
+}
+
 #[derive(Debug, Clone)]
 pub struct Vocab {
-    /// Token id → byte sequence. Ids 0..256 are the single bytes.
-    tokens: Vec<Vec<u8>>,
-    /// Merge rule → (rank, produced token id). Lower rank = applied first.
-    merge_ranks: FxHashMap<Merge, (u32, TokenId)>,
+    /// Concatenated byte strings of every token (interned arena).
+    bytes: Vec<u8>,
+    /// Token id → (offset, len) span into `bytes`. Ids 0..256 are the
+    /// single bytes.
+    spans: Vec<(u32, u32)>,
+    /// Packed merge pair → (rank, produced token id). Lower rank =
+    /// applied first.
+    merge_ranks: FxHashMap<u64, (u32, TokenId)>,
 }
 
 impl Vocab {
     /// Byte-only vocabulary (no merges).
     pub fn bytes_only() -> Vocab {
-        let tokens = (0u16..256).map(|b| vec![b as u8]).collect();
         Vocab {
-            tokens,
+            bytes: (0u16..256).map(|b| b as u8).collect(),
+            spans: (0u32..256).map(|b| (b, 1)).collect(),
             merge_ranks: FxHashMap::default(),
         }
     }
@@ -40,32 +55,39 @@ impl Vocab {
     }
 
     pub fn push_merge(&mut self, merge: Merge) -> TokenId {
-        assert!((merge.left as usize) < self.tokens.len());
-        assert!((merge.right as usize) < self.tokens.len());
-        let mut bytes = self.tokens[merge.left as usize].clone();
-        bytes.extend_from_slice(&self.tokens[merge.right as usize]);
-        let id = self.tokens.len() as TokenId;
-        self.tokens.push(bytes);
+        assert!((merge.left as usize) < self.spans.len());
+        assert!((merge.right as usize) < self.spans.len());
+        let (lo, ll) = self.spans[merge.left as usize];
+        let (ro, rl) = self.spans[merge.right as usize];
+        let off = self.bytes.len();
+        self.bytes.extend_from_within(lo as usize..(lo + ll) as usize);
+        self.bytes.extend_from_within(ro as usize..(ro + rl) as usize);
+        let id = self.spans.len() as TokenId;
+        self.spans.push((off as u32, ll + rl));
         let rank = self.merge_ranks.len() as u32;
-        self.merge_ranks.insert(merge, (rank, id));
+        self.merge_ranks
+            .insert(pair_key(merge.left, merge.right), (rank, id));
         id
     }
 
     pub fn size(&self) -> usize {
-        self.tokens.len()
+        self.spans.len()
     }
 
     pub fn n_merges(&self) -> usize {
         self.merge_ranks.len()
     }
 
+    #[inline]
     pub fn token_bytes(&self, id: TokenId) -> &[u8] {
-        &self.tokens[id as usize]
+        let (off, len) = self.spans[id as usize];
+        &self.bytes[off as usize..(off + len) as usize]
     }
 
     /// Rank and produced id for a candidate merge, if it exists.
+    #[inline]
     pub fn merge_lookup(&self, left: TokenId, right: TokenId) -> Option<(u32, TokenId)> {
-        self.merge_ranks.get(&Merge { left, right }).copied()
+        self.merge_ranks.get(&pair_key(left, right)).copied()
     }
 
     /// Ordered merge list (rank order) — the serializable model.
@@ -73,7 +95,15 @@ impl Vocab {
         let mut out: Vec<(u32, Merge)> = self
             .merge_ranks
             .iter()
-            .map(|(m, (rank, _))| (*rank, *m))
+            .map(|(&key, &(rank, _))| {
+                (
+                    rank,
+                    Merge {
+                        left: (key >> 32) as TokenId,
+                        right: key as TokenId,
+                    },
+                )
+            })
             .collect();
         out.sort_unstable_by_key(|(rank, _)| *rank);
         out.into_iter().map(|(_, m)| m).collect()
@@ -176,5 +206,17 @@ mod tests {
     fn load_rejects_bad_references() {
         assert!(Vocab::load_text("999 1000\n").is_err());
         assert!(Vocab::load_text("garbage\n").is_err());
+    }
+
+    #[test]
+    fn merges_reconstructs_pairs_from_packed_keys() {
+        let mut v = Vocab::bytes_only();
+        v.push_merge(Merge { left: 44, right: 7 });
+        let big = v.push_merge(Merge { left: 256, right: 256 });
+        v.push_merge(Merge { left: big, right: 1 });
+        let ms = v.merges();
+        assert_eq!(ms.len(), 3);
+        assert_eq!(ms[1], Merge { left: 256, right: 256 });
+        assert_eq!(ms[2], Merge { left: big, right: 1 });
     }
 }

@@ -7,7 +7,10 @@
 //! exposes queue-depth metrics so the real-execution track can report
 //! host-side backlog. `parallel_map` balances skewed batches by having
 //! workers pull small index chunks from a shared atomic cursor while
-//! writing results by input index (output order never changes).
+//! writing results by input index (output order never changes);
+//! `scoped_map` is the same engine for borrowed items (scoped, like
+//! crossbeam's scope), so callers can fan out `&str` slices of a
+//! document they still own without copying.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -15,6 +18,32 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Reports a [`ThreadPool::scoped_map`] job as finished on drop —
+/// including during a panic unwind — so the caller never deadlocks
+/// waiting on a job whose closure died. The guard *owns* the job's
+/// borrowing state (`payload`) and releases it before touching the
+/// counter: once the caller observes `done == n_jobs`, no worker holds
+/// any lifetime-erased data, on the normal and panic paths alike.
+struct DoneGuard<P> {
+    payload: Option<P>,
+    done: Arc<(Mutex<usize>, Condvar)>,
+}
+
+impl<P> Drop for DoneGuard<P> {
+    fn drop(&mut self) {
+        // Order matters: drop the borrowing payload first, then report.
+        drop(self.payload.take());
+        let (lock, cv) = &*self.done;
+        // Robust against poisoning: the counter increment cannot panic,
+        // and a double panic in a Drop would abort the process.
+        let mut n = lock
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        *n += 1;
+        cv.notify_all();
+    }
+}
 
 struct Shared {
     queue: Mutex<VecDeque<Job>>,
@@ -75,9 +104,13 @@ impl ThreadPool {
     }
 
     pub fn execute<F: FnOnce() + Send + 'static>(&self, job: F) {
+        self.execute_boxed(Box::new(job));
+    }
+
+    fn execute_boxed(&self, job: Job) {
         {
             let mut q = self.shared.queue.lock().unwrap();
-            q.push_back(Box::new(job));
+            q.push_back(job);
         }
         self.shared.queued.fetch_add(1, Ordering::Relaxed);
         self.shared.available.notify_one();
@@ -100,6 +133,34 @@ impl ThreadPool {
         R: Send + 'static,
         F: Fn(T) -> R + Send + Sync + 'static,
     {
+        self.scoped_map(items, f)
+    }
+
+    /// [`parallel_map`](Self::parallel_map) for *borrowed* data: items,
+    /// results, and the closure may reference the caller's stack (e.g.
+    /// `&str` chunks of a document the caller still owns), like a
+    /// `std::thread::scope` over pool workers. This is what lets the
+    /// tokenizer fan a long text out across the pool without copying
+    /// every chunk into an owned `String` first.
+    ///
+    /// # Soundness
+    /// Jobs are handed to `'static` worker threads, so the borrowed
+    /// lifetime is erased (`transmute` below, the same erasure crossbeam's
+    /// scope performs). Soundness rests on this function not returning
+    /// until every job has reported: each job claims cursor chunks until
+    /// the cursor is exhausted, **drops its borrowing captures**, and
+    /// only then increments `done`; we block on `done == n_jobs` before
+    /// touching the results. A panicking closure still reports — a drop
+    /// guard increments `done` during unwind — so the caller wakes,
+    /// finds the panicked item's result slot empty, and propagates a
+    /// panic of its own instead of deadlocking (`worker_loop` catches
+    /// the unwind, so the pool keeps its worker, too).
+    pub fn scoped_map<'env, T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'env,
+        R: Send + 'env,
+        F: Fn(T) -> R + Send + Sync + 'env,
+    {
         let n = items.len();
         if n == 0 {
             return Vec::new();
@@ -121,7 +182,16 @@ impl ThreadPool {
             let results = Arc::clone(&results);
             let cursor = Arc::clone(&cursor);
             let done = Arc::clone(&done);
-            self.execute(move || {
+            let job: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+                // The guard owns every borrowing capture and reports on
+                // drop: a panic in `f` unwinds through it, which first
+                // releases the erased-lifetime Arcs and then wakes the
+                // caller (which propagates the failure itself).
+                let guard = DoneGuard {
+                    payload: Some((f, items, results)),
+                    done,
+                };
+                let (f, items, results) = guard.payload.as_ref().expect("payload set above");
                 loop {
                     let start = cursor.fetch_add(chunk, Ordering::Relaxed);
                     if start >= n {
@@ -134,10 +204,17 @@ impl ThreadPool {
                         *results[i].lock().unwrap() = Some(r);
                     }
                 }
-                let (lock, cv) = &*done;
-                *lock.lock().unwrap() += 1;
-                cv.notify_all();
+                drop(guard); // releases the payload, then reports done
             });
+            // SAFETY: see the doc comment — this function blocks until
+            // every job completes, so the erased borrows outlive the jobs.
+            let job: Job = unsafe {
+                std::mem::transmute::<
+                    Box<dyn FnOnce() + Send + 'env>,
+                    Box<dyn FnOnce() + Send + 'static>,
+                >(job)
+            };
+            self.execute_boxed(job);
         }
         // Every chunk is claimed by exactly one job, and jobs only exit
         // once the cursor is exhausted — so all items are done when all
@@ -152,7 +229,12 @@ impl ThreadPool {
         // hold its clone for an instant after signaling completion.
         results
             .iter()
-            .map(|slot| slot.lock().unwrap().take().expect("result present"))
+            .map(|slot| {
+                slot.lock()
+                    .unwrap()
+                    .take()
+                    .expect("result missing — a mapped closure panicked")
+            })
             .collect()
     }
 
@@ -202,7 +284,10 @@ fn worker_loop(shared: Arc<Shared>) {
         };
         shared.queued.fetch_sub(1, Ordering::Relaxed);
         shared.active.fetch_add(1, Ordering::Relaxed);
-        job();
+        // A panicking job must not kill the worker: the default hook has
+        // already printed the panic, `scoped_map`'s DoneGuard has
+        // reported the job, and the pool keeps its capacity.
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
         shared.active.fetch_sub(1, Ordering::Relaxed);
     }
 }
@@ -276,6 +361,33 @@ mod tests {
         for (i, v) in out.iter().enumerate() {
             assert_eq!(*v, i as u64 + 7);
         }
+    }
+
+    #[test]
+    fn panicking_job_propagates_instead_of_hanging() {
+        let pool = ThreadPool::new(2);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.parallel_map((0..10u64).collect(), |x| {
+                assert!(x != 5, "boom");
+                x
+            })
+        }));
+        assert!(result.is_err(), "panic in a mapped closure must propagate");
+        // the worker survives the panic; the pool is still usable
+        let out = pool.parallel_map((0..10u64).collect(), |x| x + 1);
+        assert_eq!(out, (1..=10).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn scoped_map_borrows_caller_data() {
+        let pool = ThreadPool::new(4);
+        let text: String = "alpha beta gamma delta epsilon".into();
+        let chunks: Vec<&str> = text.split(' ').collect();
+        let lens = pool.scoped_map(chunks.clone(), |c: &str| c.len());
+        assert_eq!(lens, chunks.iter().map(|c| c.len()).collect::<Vec<_>>());
+        // results may borrow too
+        let firsts: Vec<&str> = pool.scoped_map(chunks.clone(), |c: &str| &c[..1]);
+        assert_eq!(firsts, vec!["a", "b", "g", "d", "e"]);
     }
 
     #[test]
