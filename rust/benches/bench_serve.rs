@@ -57,6 +57,11 @@ fn main() {
     cell(&mut suite, "bursty", 1.0, 8.0, "bursty 8s (small)");
     cell(&mut suite, "heavy-tail", 1.0, 8.0, "heavy-tail 8s (small)");
 
+    // Resilience cell: flash-crowd arms admission control, shedding,
+    // the deadline watchdog, and client-side retry — the full
+    // resilience layer on the hot path, including never-fit rejections.
+    cell(&mut suite, "flash-crowd", 1.0, 8.0, "flash-crowd 8s (resilience)");
+
     // Large cells: ~10× the offered request volume, same shapes.
     cell(&mut suite, "steady", 5.0, 16.0, "steady x5 16s (large)");
     cell(&mut suite, "bursty", 5.0, 16.0, "bursty x5 16s (large)");

@@ -10,7 +10,7 @@ pub mod system;
 pub mod toml;
 
 pub use model::ModelSpec;
-pub use serve::{ServeConfig, WorkloadConfig};
+pub use serve::{ResilienceConfig, ServeConfig, WorkloadConfig, MAX_RETRY_ATTEMPTS};
 pub use system::{Interconnect, SystemSpec};
 
 use anyhow::{bail, Result};
@@ -111,6 +111,13 @@ impl RunConfig {
     /// scenario = "bursty"     # catalog name; see `cpuslow scenarios`
     /// duration_s = 60.0
     /// rate_scale = 1.5
+    /// [resilience]
+    /// admission_max_queue = 512   # 0 = off
+    /// shed_slo_factor = 1.0       # 0.0 = off
+    /// watchdog_slo_factor = 2.0   # 0.0 = off
+    /// retry_max_attempts = 3      # 1 = no retry
+    /// retry_base_s = 0.5
+    /// retry_cap_s = 4.0
     /// ```
     pub fn from_toml_str(text: &str) -> Result<RunConfig> {
         let doc = toml::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
@@ -143,6 +150,16 @@ impl RunConfig {
             doc.int_or("serve", "max_output_tokens", s.max_output_tokens as i64) as usize;
         s.control_plane_weight =
             doc.int_or("serve", "control_plane_weight", s.control_plane_weight as i64) as u32;
+        let r = &mut s.resilience;
+        r.admission_max_queue =
+            doc.int_or("resilience", "admission_max_queue", r.admission_max_queue as i64) as usize;
+        r.shed_slo_factor = doc.float_or("resilience", "shed_slo_factor", r.shed_slo_factor);
+        r.watchdog_slo_factor =
+            doc.float_or("resilience", "watchdog_slo_factor", r.watchdog_slo_factor);
+        r.retry_max_attempts =
+            doc.int_or("resilience", "retry_max_attempts", r.retry_max_attempts as i64) as u32;
+        r.retry_base_s = doc.float_or("resilience", "retry_base_s", r.retry_base_s);
+        r.retry_cap_s = doc.float_or("resilience", "retry_cap_s", r.retry_cap_s);
         let w = &mut cfg.workload;
         w.scenario = doc.str_or("workload", "scenario", "");
         w.rate_scale = doc.float_or("workload", "rate_scale", w.rate_scale);
@@ -244,6 +261,30 @@ control_plane_weight = 4
         // absent section keeps defaults
         let cfg = RunConfig::from_toml_str("[run]\ngpus = 4\n").unwrap();
         assert_eq!(cfg.workload, WorkloadConfig::default());
+    }
+
+    #[test]
+    fn toml_resilience_section() {
+        let cfg = RunConfig::from_toml_str(
+            "[resilience]\nadmission_max_queue = 512\nshed_slo_factor = 1.0\n\
+             watchdog_slo_factor = 2.0\nretry_max_attempts = 3\nretry_base_s = 0.25\n\
+             retry_cap_s = 4.0\n",
+        )
+        .unwrap();
+        let r = &cfg.serve.resilience;
+        assert_eq!(r.admission_max_queue, 512);
+        assert_eq!(r.shed_slo_factor, 1.0);
+        assert_eq!(r.watchdog_slo_factor, 2.0);
+        assert_eq!(r.retry_max_attempts, 3);
+        assert_eq!(r.retry_base_s, 0.25);
+        assert_eq!(r.retry_cap_s, 4.0);
+        assert!(r.any_active());
+        // absent section keeps the all-off defaults
+        let cfg = RunConfig::from_toml_str("[run]\ngpus = 4\n").unwrap();
+        assert_eq!(cfg.serve.resilience, ResilienceConfig::default());
+        // invalid values are rejected at validate time
+        assert!(RunConfig::from_toml_str("[resilience]\nretry_max_attempts = 0\n").is_err());
+        assert!(RunConfig::from_toml_str("[resilience]\nretry_max_attempts = 99\n").is_err());
     }
 
     #[test]

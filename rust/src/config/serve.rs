@@ -45,6 +45,89 @@ impl WorkloadConfig {
     }
 }
 
+/// Hard cap on configurable retry attempts: with exponential backoff a
+/// deeper retry chain only postpones the terminal outcome past any
+/// realistic observation horizon, and an absurd setting (`u32::MAX`)
+/// would turn every shed request into an unbounded arrival storm.
+pub const MAX_RETRY_ATTEMPTS: u32 = 16;
+
+/// Resilience knobs: admission control, load shedding, the deadline
+/// watchdog, and client-side retry. The default turns every gate off so
+/// existing runs stay byte-identical; scenarios opt in per catalog
+/// entry (`Scenario::resilience`).
+///
+/// Each class's deadline is its TTFT SLO (installed by the scenario
+/// drivers through `ServingSim::set_class_deadlines`); requests without
+/// a per-class deadline fall back to [`ServeConfig::timeout_s`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResilienceConfig {
+    /// Queue-depth admission gate: shed arrivals while more than this
+    /// many requests sit in the scheduler's waiting queue. 0 = off.
+    pub admission_max_queue: usize,
+    /// Estimated-TTFT shedding gate: shed an arrival whose projected
+    /// first token (queue drain at the observed step time) would land
+    /// past `factor ×` its class deadline. 0.0 = off.
+    pub shed_slo_factor: f64,
+    /// Deadline watchdog: abort in-flight requests older than `factor ×`
+    /// their class deadline and reclaim their KV pages. 0.0 = off.
+    pub watchdog_slo_factor: f64,
+    /// Total delivery attempts per logical request (1 = no retry).
+    /// Shed and aborted requests re-enter the arrival stream with
+    /// exponential backoff; rejected requests never retry (a request
+    /// that cannot fit in KV today cannot fit tomorrow either).
+    pub retry_max_attempts: u32,
+    /// Base backoff before the first retry (seconds); doubles per
+    /// attempt with deterministic jitter in [0.5, 1.0).
+    pub retry_base_s: f64,
+    /// Ceiling on the un-jittered backoff (seconds).
+    pub retry_cap_s: f64,
+}
+
+impl Default for ResilienceConfig {
+    fn default() -> Self {
+        Self {
+            admission_max_queue: 0,
+            shed_slo_factor: 0.0,
+            watchdog_slo_factor: 0.0,
+            retry_max_attempts: 1,
+            retry_base_s: 0.5,
+            retry_cap_s: 8.0,
+        }
+    }
+}
+
+impl ResilienceConfig {
+    /// Is any gate (shedding, watchdog, or retry) active?
+    pub fn any_active(&self) -> bool {
+        self.admission_max_queue > 0
+            || self.shed_slo_factor > 0.0
+            || self.watchdog_slo_factor > 0.0
+            || self.retry_max_attempts > 1
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !(self.shed_slo_factor >= 0.0 && self.shed_slo_factor.is_finite()) {
+            bail!("resilience.shed_slo_factor must be ≥ 0 and finite");
+        }
+        if !(self.watchdog_slo_factor >= 0.0 && self.watchdog_slo_factor.is_finite()) {
+            bail!("resilience.watchdog_slo_factor must be ≥ 0 and finite");
+        }
+        if self.retry_max_attempts == 0 {
+            bail!("resilience.retry_max_attempts must be ≥ 1 (1 = no retry)");
+        }
+        if self.retry_max_attempts > MAX_RETRY_ATTEMPTS {
+            bail!("resilience.retry_max_attempts must be ≤ {MAX_RETRY_ATTEMPTS}");
+        }
+        if !(self.retry_base_s > 0.0 && self.retry_base_s.is_finite()) {
+            bail!("resilience.retry_base_s must be positive and finite");
+        }
+        if !(self.retry_cap_s > 0.0 && self.retry_cap_s.is_finite()) {
+            bail!("resilience.retry_cap_s must be positive and finite");
+        }
+        Ok(())
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
     /// Max requests resident in a decode batch (continuous batching cap).
@@ -83,6 +166,9 @@ pub struct ServeConfig {
     /// equally", §VI-A); >1 models the nice/cgroup prioritization the
     /// paper proposes evaluating as future work.
     pub control_plane_weight: u32,
+    /// Resilience layer: admission control, shedding, watchdog, retry.
+    /// All gates default off (legacy behavior).
+    pub resilience: ResilienceConfig,
 }
 
 impl Default for ServeConfig {
@@ -99,6 +185,7 @@ impl Default for ServeConfig {
             timeout_s: 200.0,
             max_output_tokens: 32,
             control_plane_weight: 1,
+            resilience: ResilienceConfig::default(),
         }
     }
 }
@@ -123,6 +210,7 @@ impl ServeConfig {
         if self.control_plane_weight == 0 {
             bail!("control_plane_weight must be ≥ 1");
         }
+        self.resilience.validate()?;
         Ok(())
     }
 
@@ -163,6 +251,59 @@ mod tests {
     fn kv_capacity() {
         let cfg = ServeConfig::default();
         assert_eq!(cfg.kv_capacity_tokens(), 16 * 32_768);
+    }
+
+    #[test]
+    fn resilience_defaults_off_and_valid() {
+        let r = ResilienceConfig::default();
+        r.validate().unwrap();
+        assert!(!r.any_active());
+    }
+
+    #[test]
+    fn resilience_rejects_bad_values() {
+        let bad = ResilienceConfig {
+            shed_slo_factor: -1.0,
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+        let bad = ResilienceConfig {
+            watchdog_slo_factor: f64::NAN,
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+        let bad = ResilienceConfig {
+            retry_max_attempts: 0,
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+        let bad = ResilienceConfig {
+            retry_max_attempts: MAX_RETRY_ATTEMPTS + 1,
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+        let bad = ResilienceConfig {
+            retry_base_s: 0.0,
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+        let bad = ResilienceConfig {
+            retry_cap_s: f64::INFINITY,
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn serve_validate_covers_resilience() {
+        let cfg = ServeConfig {
+            resilience: ResilienceConfig {
+                retry_max_attempts: 0,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

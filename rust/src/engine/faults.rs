@@ -1,0 +1,356 @@
+//! Deterministic fault injection for the serving engine.
+//!
+//! A [`FaultSpec`] is a declarative description of a component fault
+//! carried by a workload scenario (and serialized into dumped traces);
+//! [`FaultPlan`] compiles a list of specs against a run seed into the
+//! form the engine consults on its hot paths. Every stochastic decision
+//! is a *pure hash* of `(plan seed, window index, stable event key)` —
+//! never a draw from a mutable RNG — so outcomes are independent of the
+//! order in which simulation actors happen to ask, and fault-injected
+//! runs stay byte-identical across `--jobs` and replayable from a
+//! dumped trace + seed (the same discipline as
+//! `scenario::class_streams`).
+
+use crate::simcpu::{Op, Program, TaskCtx};
+use crate::util::json::Json;
+use crate::util::rng::SplitMix64;
+
+/// Declarative component fault, active over a wall-clock window of the
+/// run. Serialized with scenario traces so faulted runs replay exactly.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultSpec {
+    /// Tokenizer-pool worker stall: within the window, each tokenize
+    /// job independently stalls for `stall_ns` extra CPU time with
+    /// probability `prob` (a page fault / GC pause / noisy-neighbor
+    /// stand-in on the CPU side, §II-A ①).
+    TokenizerStall {
+        start_s: f64,
+        end_s: f64,
+        prob: f64,
+        stall_ns: u64,
+    },
+    /// Transient core loss: `cores` CPU-hogging tasks occupy the run
+    /// queue for the window, then exit (replica failure / co-located
+    /// job burst). Recovery is implicit at `end_s`.
+    CoreLoss {
+        start_s: f64,
+        end_s: f64,
+        cores: usize,
+    },
+    /// Kernel-launch latency spike: within the window, each per-step
+    /// launch submission independently costs `spike_ns` extra CPU time
+    /// with probability `prob` (driver contention, §II-A ③).
+    LaunchSpike {
+        start_s: f64,
+        end_s: f64,
+        prob: f64,
+        spike_ns: u64,
+    },
+}
+
+impl FaultSpec {
+    /// Short human label for catalog listings.
+    pub fn label(&self) -> String {
+        match self {
+            FaultSpec::TokenizerStall { start_s, end_s, prob, stall_ns } => format!(
+                "tok-stall {start_s}-{end_s}s p={prob} +{:.0}ms",
+                *stall_ns as f64 / 1e6
+            ),
+            FaultSpec::CoreLoss { start_s, end_s, cores } => {
+                format!("core-loss {start_s}-{end_s}s -{cores} cores")
+            }
+            FaultSpec::LaunchSpike { start_s, end_s, prob, spike_ns } => format!(
+                "launch-spike {start_s}-{end_s}s p={prob} +{:.0}us",
+                *spike_ns as f64 / 1e3
+            ),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        match self {
+            FaultSpec::TokenizerStall { start_s, end_s, prob, stall_ns } => {
+                j.set("kind", "tokenizer_stall")
+                    .set("start_s", *start_s)
+                    .set("end_s", *end_s)
+                    .set("prob", *prob)
+                    .set("stall_ns", *stall_ns);
+            }
+            FaultSpec::CoreLoss { start_s, end_s, cores } => {
+                j.set("kind", "core_loss")
+                    .set("start_s", *start_s)
+                    .set("end_s", *end_s)
+                    .set("cores", *cores);
+            }
+            FaultSpec::LaunchSpike { start_s, end_s, prob, spike_ns } => {
+                j.set("kind", "launch_spike")
+                    .set("start_s", *start_s)
+                    .set("end_s", *end_s)
+                    .set("prob", *prob)
+                    .set("spike_ns", *spike_ns);
+            }
+        }
+        j
+    }
+
+    pub fn from_json(v: &Json) -> Option<FaultSpec> {
+        let kind = v.get("kind")?.as_str()?;
+        let f = |k: &str| v.get(k).and_then(|x| x.as_f64());
+        let start_s = f("start_s")?;
+        let end_s = f("end_s")?;
+        match kind {
+            "tokenizer_stall" => Some(FaultSpec::TokenizerStall {
+                start_s,
+                end_s,
+                prob: f("prob")?,
+                stall_ns: f("stall_ns")? as u64,
+            }),
+            "core_loss" => Some(FaultSpec::CoreLoss {
+                start_s,
+                end_s,
+                cores: f("cores")? as usize,
+            }),
+            "launch_spike" => Some(FaultSpec::LaunchSpike {
+                start_s,
+                end_s,
+                prob: f("prob")?,
+                spike_ns: f("spike_ns")? as u64,
+            }),
+            _ => None,
+        }
+    }
+}
+
+/// A probabilistic fault window compiled from one spec.
+#[derive(Debug, Clone, Copy)]
+struct Window {
+    start_ns: u64,
+    end_ns: u64,
+    prob: f64,
+    extra_ns: u64,
+}
+
+impl Window {
+    fn active(&self, now_ns: u64) -> bool {
+        now_ns >= self.start_ns && now_ns < self.end_ns
+    }
+}
+
+/// Domain-separation salts so the tokenizer and launch fault streams
+/// never collide even for identical (window, key) pairs.
+const TOK_SALT: u64 = 0xF417_70CC_0001_A001;
+const LAUNCH_SALT: u64 = 0xF417_70CC_0002_B002;
+
+/// Compiled fault schedule the engine consults at event time. Built
+/// once per run from `(run seed, &[FaultSpec])`; empty by default.
+/// Core-loss windows are not kept here — they become spawned
+/// [`CoreHog`] tasks at install time.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    seed: u64,
+    tokenizer: Vec<Window>,
+    launch: Vec<Window>,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64, specs: &[FaultSpec]) -> FaultPlan {
+        let mut plan = FaultPlan { seed, ..Default::default() };
+        for spec in specs {
+            match *spec {
+                FaultSpec::TokenizerStall { start_s, end_s, prob, stall_ns } => {
+                    plan.tokenizer.push(Window {
+                        start_ns: (start_s.max(0.0) * 1e9) as u64,
+                        end_ns: (end_s.max(0.0) * 1e9) as u64,
+                        prob,
+                        extra_ns: stall_ns,
+                    });
+                }
+                FaultSpec::LaunchSpike { start_s, end_s, prob, spike_ns } => {
+                    plan.launch.push(Window {
+                        start_ns: (start_s.max(0.0) * 1e9) as u64,
+                        end_ns: (end_s.max(0.0) * 1e9) as u64,
+                        prob,
+                        extra_ns: spike_ns,
+                    });
+                }
+                FaultSpec::CoreLoss { .. } => {}
+            }
+        }
+        plan
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokenizer.is_empty() && self.launch.is_empty()
+    }
+
+    /// Pure hash draw: does window `idx` (salted into `stream`) fire
+    /// for the stable event `key`? `prob >= 1.0` always fires (every
+    /// u64 draw is `< u64::MAX as f64` after rounding up).
+    fn fires(&self, stream: u64, idx: usize, prob: f64, key: u64) -> bool {
+        if prob <= 0.0 {
+            return false;
+        }
+        let salt = SplitMix64::new(stream ^ (idx as u64)).next_u64();
+        let draw = SplitMix64::new(self.seed ^ salt ^ key).next_u64();
+        (draw as f64) < prob * (u64::MAX as f64)
+    }
+
+    /// Extra tokenize CPU time for the job a worker is about to run.
+    /// Keyed by `(worker id, per-worker job ordinal)` — stable under
+    /// any interleaving of the pool's workers.
+    pub fn tokenizer_stall_ns(&self, now_ns: u64, worker_id: u64, ordinal: u64) -> u64 {
+        let mut extra = 0u64;
+        for (i, w) in self.tokenizer.iter().enumerate() {
+            if w.active(now_ns) {
+                let key = SplitMix64::new(worker_id.wrapping_mul(0x1_0000_0001).wrapping_add(ordinal))
+                    .next_u64();
+                if self.fires(TOK_SALT, i, w.prob, key) {
+                    extra += w.extra_ns;
+                }
+            }
+        }
+        extra
+    }
+
+    /// Extra launch-submission CPU time for `(step_seq, worker rank)`.
+    pub fn launch_spike_ns(&self, now_ns: u64, step_seq: u64, rank: u64) -> u64 {
+        let mut extra = 0u64;
+        for (i, w) in self.launch.iter().enumerate() {
+            if w.active(now_ns) {
+                let key = SplitMix64::new(step_seq.wrapping_mul(0x1_0000_0001).wrapping_add(rank))
+                    .next_u64();
+                if self.fires(LAUNCH_SALT, i, w.prob, key) {
+                    extra += w.extra_ns;
+                }
+            }
+        }
+        extra
+    }
+}
+
+/// A CPU-hogging task realizing one core of a [`FaultSpec::CoreLoss`]
+/// window: sleeps until the window opens, burns CPU in 1 ms compute
+/// slices (so the CFS-style scheduler keeps it preemptible and fair),
+/// and exits when the window closes — implicit recovery.
+pub struct CoreHog {
+    start_ns: u64,
+    end_ns: u64,
+}
+
+impl CoreHog {
+    pub fn new(start_ns: u64, end_ns: u64) -> CoreHog {
+        CoreHog { start_ns, end_ns }
+    }
+}
+
+impl Program for CoreHog {
+    fn step(&mut self, ctx: &mut TaskCtx) -> Op {
+        let now = ctx.now_ns();
+        if now < self.start_ns {
+            Op::Sleep { ns: self.start_ns - now }
+        } else if now >= self.end_ns {
+            Op::Done
+        } else {
+            Op::Compute { ns: 1_000_000.min(self.end_ns - now) }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stall_spec() -> FaultSpec {
+        FaultSpec::TokenizerStall {
+            start_s: 1.0,
+            end_s: 2.0,
+            prob: 0.5,
+            stall_ns: 7_000,
+        }
+    }
+
+    #[test]
+    fn spec_json_roundtrip() {
+        let specs = [
+            stall_spec(),
+            FaultSpec::CoreLoss { start_s: 3.0, end_s: 9.0, cores: 4 },
+            FaultSpec::LaunchSpike {
+                start_s: 0.5,
+                end_s: 4.5,
+                prob: 0.25,
+                spike_ns: 50_000,
+            },
+        ];
+        for s in &specs {
+            let back = FaultSpec::from_json(&s.to_json()).expect("parse own dump");
+            assert_eq!(&back, s);
+            assert!(!s.label().is_empty());
+        }
+        let mut unknown = Json::obj();
+        unknown.set("kind", "gremlin");
+        assert!(FaultSpec::from_json(&unknown).is_none());
+    }
+
+    #[test]
+    fn draws_are_pure_functions_of_key() {
+        let plan = FaultPlan::new(42, &[stall_spec()]);
+        let t = 1_500_000_000; // inside the window
+        for worker in 0..4u64 {
+            for ord in 0..64u64 {
+                let a = plan.tokenizer_stall_ns(t, worker, ord);
+                let b = plan.tokenizer_stall_ns(t, worker, ord);
+                assert_eq!(a, b, "draw must not depend on call order");
+            }
+        }
+        // outside the window: never fires
+        assert_eq!(plan.tokenizer_stall_ns(500_000_000, 0, 0), 0);
+        assert_eq!(plan.tokenizer_stall_ns(2_000_000_000, 0, 0), 0);
+    }
+
+    #[test]
+    fn probability_extremes() {
+        let always = FaultPlan::new(
+            7,
+            &[FaultSpec::LaunchSpike { start_s: 0.0, end_s: 10.0, prob: 1.0, spike_ns: 11 }],
+        );
+        let never = FaultPlan::new(
+            7,
+            &[FaultSpec::LaunchSpike { start_s: 0.0, end_s: 10.0, prob: 0.0, spike_ns: 11 }],
+        );
+        for step in 0..128u64 {
+            assert_eq!(always.launch_spike_ns(1, step, 0), 11);
+            assert_eq!(never.launch_spike_ns(1, step, 0), 0);
+        }
+    }
+
+    #[test]
+    fn hit_rate_tracks_probability() {
+        let plan = FaultPlan::new(3, &[stall_spec()]);
+        let hits = (0..4_000u64)
+            .filter(|&k| plan.tokenizer_stall_ns(1_200_000_000, k % 8, k / 8) > 0)
+            .count();
+        let rate = hits as f64 / 4_000.0;
+        assert!((rate - 0.5).abs() < 0.05, "hit rate {rate}");
+    }
+
+    #[test]
+    fn seeds_decorrelate_plans() {
+        let a = FaultPlan::new(1, &[stall_spec()]);
+        let b = FaultPlan::new(2, &[stall_spec()]);
+        let diverge = (0..256u64)
+            .any(|k| a.tokenizer_stall_ns(1_200_000_000, 0, k) != b.tokenizer_stall_ns(1_200_000_000, 0, k));
+        assert!(diverge, "different seeds must reroll the fault stream");
+    }
+
+    #[test]
+    fn empty_plan_is_inert() {
+        let plan = FaultPlan::default();
+        assert!(plan.is_empty());
+        assert_eq!(plan.tokenizer_stall_ns(0, 0, 0), 0);
+        assert_eq!(plan.launch_spike_ns(0, 0, 0), 0);
+        // CoreLoss-only specs compile to an empty plan (hogs are spawned
+        // separately at install time).
+        let plan = FaultPlan::new(9, &[FaultSpec::CoreLoss { start_s: 0.0, end_s: 1.0, cores: 2 }]);
+        assert!(plan.is_empty());
+    }
+}

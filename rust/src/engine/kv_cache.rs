@@ -52,6 +52,14 @@ impl KvCache {
         self.pages_for_tokens(tokens) <= self.free_pages
     }
 
+    /// Could a request with `tokens` total length *ever* be admitted,
+    /// even into a completely empty cache? `false` marks the permanent
+    /// condition the admission path turns into a `Rejected` outcome
+    /// instead of letting the FCFS queue wedge behind it.
+    pub fn can_ever_fit(&self, tokens: u64) -> bool {
+        self.pages_for_tokens(tokens) <= self.total_pages
+    }
+
     /// Reserve pages so the request can hold `tokens` tokens. Grows the
     /// existing reservation; no-op if already large enough. Returns false
     /// (and changes nothing) on insufficient memory.
@@ -134,6 +142,15 @@ mod tests {
         kv.grow_to(1, 64);
         assert!(kv.can_fit(64));
         assert!(!kv.can_fit(65 + 16));
+    }
+
+    #[test]
+    fn can_ever_fit_ignores_occupancy() {
+        let mut kv = KvCache::new(16, 8); // 128 tokens total
+        kv.grow_to(1, 128);
+        assert_eq!(kv.free_pages(), 0);
+        assert!(kv.can_ever_fit(128), "full cache could still fit it later");
+        assert!(!kv.can_ever_fit(129), "never fits even when empty");
     }
 
     #[test]

@@ -28,6 +28,7 @@
 //! [`ServingSim::gpu_idle_share`] summarizes the starvation signal the
 //! serve-sweep grids report per cell.
 
+pub mod faults;
 pub mod kv_cache;
 pub mod prefix_cache;
 pub mod request;
@@ -35,20 +36,28 @@ pub mod scheduler;
 pub mod slab;
 pub mod tokenizer_pool;
 
+pub use faults::{CoreHog, FaultPlan, FaultSpec};
 pub use kv_cache::KvCache;
 pub use prefix_cache::PrefixCache;
-pub use request::{Outcome, ReqClass, ReqPhase, Request, RequestId};
+pub use request::{Outcome, OutcomeStatus, ReqClass, ReqPhase, Request, RequestId};
 pub use scheduler::{complete_step, schedule, schedule_into, SchedState, StepPlan};
 pub use slab::RequestSlab;
 pub use tokenizer_pool::{chunk_cost_iter, chunk_costs, ChunkCosts, TokJob, TokenizerPool};
 
-use crate::config::RunConfig;
+use crate::config::{ResilienceConfig, RunConfig, ServeConfig};
 use crate::gpu::{self, timing, FleetRef, Kernel, KernelKind};
 use crate::ipc::{SimChannel, SimShmBroadcast};
 use crate::simcpu::{GateId, Op, Program, SharedCall, Sim, SimParams, TaskCtx};
+use crate::util::rng::SplitMix64;
 use rustc_hash::FxHashMap;
 use std::cell::{Cell, RefCell};
 use std::rc::Rc;
+
+/// Domain-separation salts deriving the retry-jitter and fault streams
+/// from the run seed — independent of each other and of the workload's
+/// `scenario::class_streams` derivations.
+const RETRY_STREAM_SALT: u64 = 0x9E7A_11ED_5EED_0001;
+const FAULT_STREAM_SALT: u64 = 0x9E7A_11ED_5EED_0002;
 
 /// Host-side CPU cost constants for the engine control plane.
 #[derive(Debug, Clone)]
@@ -107,6 +116,34 @@ pub struct EngineShared {
     /// their Outcomes parked in `outbox` for the driver to drain.
     harvest: bool,
     outbox: Vec<Outcome>,
+    /// Per-class (tag-indexed) deadlines for the shed/watchdog gates,
+    /// installed by [`ServingSim::set_class_deadlines`]; tags beyond the
+    /// vector fall back to `serve.timeout_s`.
+    deadlines_ns: Vec<u64>,
+    /// Seed deriving the retry-jitter stream (and, salted, the fault
+    /// stream) — set from the scenario seed by the drivers.
+    run_seed: u64,
+    /// Parked retries keyed by *origin* id: a shed/aborted request whose
+    /// next delivery attempt is waiting out its backoff. Drained by
+    /// `fire_retry`; stragglers surface as terminal outcomes at the
+    /// streaming horizon.
+    retry_tickets: FxHashMap<RequestId, RetryTicket>,
+}
+
+/// Everything needed to re-deliver a logical request after backoff.
+#[derive(Debug, Clone, Copy)]
+struct RetryTicket {
+    class: ReqClass,
+    /// Original arrival (client-perceived latency spans all attempts).
+    arrival_ns: u64,
+    prompt_tokens: u64,
+    max_new_tokens: u64,
+    content_seed: u64,
+    tag: u32,
+    /// Attempts already delivered (the parked attempt's index).
+    attempt: u32,
+    /// Why the last attempt failed (Shed or Aborted).
+    status: OutcomeStatus,
 }
 
 pub type SharedRef = Rc<RefCell<EngineShared>>;
@@ -122,6 +159,9 @@ struct Env {
     /// Signaled once per worker per completed step.
     step_done: GateId,
     pool: TokenizerPool,
+    /// The run's compiled fault schedule (shared with the tokenizer
+    /// pool; empty unless [`ServingSim::install_faults`] ran).
+    faults: Rc<RefCell<FaultPlan>>,
 }
 
 /// One arrival for the submission API and the streaming driver.
@@ -196,6 +236,9 @@ impl ServingSim {
             next_id: 0,
             harvest: false,
             outbox: Vec::new(),
+            deadlines_ns: Vec::new(),
+            run_seed: 0,
+            retry_tickets: FxHashMap::default(),
         }));
         // API-server tokenizer executor: vLLM's AsyncLLM hands each
         // request's encode to a ThreadPoolExecutor with
@@ -208,6 +251,7 @@ impl ServingSim {
             cfg.serve.tokenizer_threads
         };
         let pool = TokenizerPool::spawn(&mut sim, tok_workers);
+        let faults = Rc::clone(&pool.faults);
         let env = Env {
             cfg: Rc::new(cfg),
             costs: Rc::new(costs),
@@ -217,6 +261,7 @@ impl ServingSim {
             fleet,
             step_done,
             pool,
+            faults,
         };
         // EngineCore task. With control_plane_weight > 1 the engine and
         // workers run at CFS priority (the §VI mitigation).
@@ -233,6 +278,44 @@ impl ServingSim {
 
     pub fn config(&self) -> &RunConfig {
         &self.env.cfg
+    }
+
+    /// Install per-class deadlines (seconds, indexed by request `tag`)
+    /// for the shedding and watchdog gates. Tags beyond the slice fall
+    /// back to `serve.timeout_s`. The scenario drivers pass each class's
+    /// TTFT SLO here.
+    pub fn set_class_deadlines(&mut self, slos_s: &[f64]) {
+        let shared = &mut *self.env.shared.borrow_mut();
+        shared.deadlines_ns.clear();
+        shared
+            .deadlines_ns
+            .extend(slos_s.iter().map(|s| (s * 1e9) as u64));
+    }
+
+    /// Seed the retry-jitter and fault streams. Call before
+    /// [`Self::install_faults`] so the fault plan derives from this
+    /// seed; the scenario drivers pass the trace seed, which is what
+    /// makes a faulted run replayable from a dumped trace.
+    pub fn set_run_seed(&mut self, seed: u64) {
+        self.env.shared.borrow_mut().run_seed = seed;
+    }
+
+    /// Compile and install a fault schedule: probabilistic windows go
+    /// into the shared [`FaultPlan`] consulted by the tokenizer pool and
+    /// GPU workers; each [`FaultSpec::CoreLoss`] window spawns that many
+    /// [`CoreHog`] tasks which occupy cores for the window and exit.
+    pub fn install_faults(&mut self, specs: &[FaultSpec]) {
+        let seed = self.env.shared.borrow().run_seed ^ FAULT_STREAM_SALT;
+        *self.env.faults.borrow_mut() = FaultPlan::new(seed, specs);
+        for spec in specs {
+            if let FaultSpec::CoreLoss { start_s, end_s, cores } = *spec {
+                let start_ns = (start_s.max(0.0) * 1e9) as u64;
+                let end_ns = (end_s.max(0.0) * 1e9) as u64;
+                for _ in 0..cores {
+                    self.sim.spawn("fault_hog", CoreHog::new(start_ns, end_ns));
+                }
+            }
+        }
     }
 
     /// Submit a request arriving at `at_ns` with the given prompt length.
@@ -390,6 +473,25 @@ impl ServingSim {
             let shared = &mut *self.env.shared.borrow_mut();
             scratch.extend(shared.sched.requests.values().map(Outcome::from_request));
             scratch.extend(shared.pending.values().map(Outcome::from_request));
+            // Retries still waiting out their backoff at the horizon:
+            // surface the last attempt's terminal status under the
+            // origin id (exactly one outcome per logical request).
+            for (&origin, t) in shared.retry_tickets.iter() {
+                scratch.push(Outcome {
+                    id: origin,
+                    class: t.class,
+                    tag: t.tag,
+                    arrival_ns: t.arrival_ns,
+                    prompt_tokens: t.prompt_tokens,
+                    tokenize_latency_ns: None,
+                    ttft_ns: None,
+                    e2e_ns: None,
+                    generated_tokens: 0,
+                    status: t.status,
+                    retries: t.attempt - 1,
+                });
+            }
+            shared.retry_tickets.clear();
             shared.harvest = false;
             debug_assert!(shared.outbox.is_empty());
         }
@@ -485,11 +587,29 @@ impl ServingSim {
 /// executor job (HTTP parse + encode + channel send) to the tokenizer
 /// pool; its completion pushes the tokenized request to the EngineCore.
 fn deliver_arrival(sim: &mut Sim, env: &Env, a: StreamArrival, id: RequestId) {
+    deliver_attempt(sim, env, a, id, id, 0, None);
+}
+
+/// [`deliver_arrival`] generalized over retry attempts: a re-delivery
+/// keeps its logical request's `origin` id and original arrival time so
+/// client-perceived latency spans every attempt.
+fn deliver_attempt(
+    sim: &mut Sim,
+    env: &Env,
+    a: StreamArrival,
+    id: RequestId,
+    origin: RequestId,
+    attempt: u32,
+    arrival_override: Option<u64>,
+) {
     let s_per_token = env.cfg.system.tokenize_s_per_token / env.cfg.system.cpu_single_core_scale;
     let tokenize_ns = (a.prompt_tokens as f64 * s_per_token * 1e9) as u64;
-    let mut request = Request::new(id, a.class, sim.now_ns(), a.prompt_tokens, a.max_new_tokens);
+    let arrival_ns = arrival_override.unwrap_or_else(|| sim.now_ns());
+    let mut request = Request::new(id, a.class, arrival_ns, a.prompt_tokens, a.max_new_tokens);
     request.content_seed = a.content_seed;
     request.tag = a.tag;
+    request.origin = origin;
+    request.attempt = attempt;
     env.shared.borrow_mut().pending.insert(request.clone());
     let cost_ns = env.costs.http_ns + tokenize_ns + env.channel.send_cost_ns;
     let envc = env.clone();
@@ -579,6 +699,207 @@ fn drain_outbox(env: &Env, scratch: &mut Vec<Outcome>, on_outcome: &mut impl FnM
 }
 
 // ---------------------------------------------------------------------
+// Resilience: shedding, deadline watchdog, client-side retry
+// ---------------------------------------------------------------------
+
+/// Deadline for a request tag: its class SLO if installed, else the
+/// run-wide client timeout.
+fn class_deadline_ns(serve: &ServeConfig, shared: &EngineShared, tag: u32) -> u64 {
+    shared
+        .deadlines_ns
+        .get(tag as usize)
+        .copied()
+        .unwrap_or_else(|| (serve.timeout_s * 1e9) as u64)
+}
+
+/// Admission-control gate, evaluated as a tokenized request leaves the
+/// channel: drop it if the queue is over depth, its deadline budget has
+/// already elapsed, or the estimated time to drain the prefill backlog
+/// ahead of it overruns that budget. All gates default off.
+fn should_shed(serve: &ServeConfig, shared: &EngineShared, r: &Request, now: u64) -> bool {
+    let res = &serve.resilience;
+    if res.admission_max_queue > 0 && shared.sched.n_waiting() >= res.admission_max_queue {
+        return true;
+    }
+    if res.shed_slo_factor > 0.0 {
+        let deadline = class_deadline_ns(serve, shared, r.tag);
+        let budget_end = r
+            .arrival_ns
+            .saturating_add((res.shed_slo_factor * deadline as f64) as u64);
+        if now >= budget_end {
+            return true;
+        }
+        // Estimated TTFT: steps needed to chew through the queued
+        // prefill tokens ahead of this request, at the run's observed
+        // mean step time. Zero until the first step completes — the
+        // gate only engages once the estimator has data.
+        let step_ns = if shared.steps_completed > 0 {
+            shared.gpu_step_ns / shared.steps_completed
+        } else {
+            0
+        };
+        let chunk = serve.prefill_chunk_tokens as u64;
+        let backlog = shared.sched.waiting_prefill_tokens + r.prompt_tokens;
+        let steps_needed = (backlog + chunk - 1) / chunk;
+        if now.saturating_add(steps_needed.saturating_mul(step_ns)) > budget_end {
+            return true;
+        }
+    }
+    false
+}
+
+/// Backoff before retry `attempt + 1` of the logical request `origin`:
+/// exponential in the attempt index, clamped to `retry_cap_s`, scaled by
+/// a deterministic jitter in [0.5, 1.0] drawn from a per-origin stream
+/// (keyed like `scenario::class_streams` — by arrival-order identity,
+/// never completion order — so replays are byte-identical).
+fn retry_backoff_ns(res: &ResilienceConfig, run_seed: u64, origin: RequestId, attempt: u32) -> u64 {
+    let origin_h = SplitMix64::new(origin).next_u64();
+    let mut sm = SplitMix64::new(run_seed ^ RETRY_STREAM_SALT ^ origin_h);
+    let mut j = 0u64;
+    for _ in 0..=attempt {
+        j = sm.next_u64();
+    }
+    let jitter = 0.5 + 0.5 * (j >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+    let cap = res.retry_cap_s.max(res.retry_base_s);
+    let raw = res.retry_base_s * 2f64.powi(attempt.min(32) as i32);
+    // ≥ 1 ns, mirroring the arrival-gap clamp: a zero-delay callback at
+    // `now` would re-enter the current event batch.
+    ((raw.min(cap) * jitter * 1e9) as u64).max(1)
+}
+
+/// Terminal-failure resolution for a request the engine gave up on
+/// (shed or aborted; rejected requests land here too but never retry).
+/// Either parks a retry ticket and schedules its re-delivery, or emits
+/// the terminal outcome (outbox when harvesting, slab otherwise).
+fn resolve_failed(
+    ctx: &mut TaskCtx,
+    serve: &ServeConfig,
+    retry_call: &SharedCall,
+    shared: &mut EngineShared,
+    mut r: Request,
+    status: OutcomeStatus,
+) {
+    r.phase = ReqPhase::Finished;
+    r.status = Some(status);
+    let res = &serve.resilience;
+    let retryable = matches!(status, OutcomeStatus::Shed | OutcomeStatus::Aborted);
+    let attempts_made = r.attempt + 1;
+    if retryable && attempts_made < res.retry_max_attempts {
+        let origin = r.origin;
+        shared.retry_tickets.insert(
+            origin,
+            RetryTicket {
+                class: r.class,
+                arrival_ns: r.arrival_ns,
+                prompt_tokens: r.prompt_tokens,
+                max_new_tokens: r.max_new_tokens,
+                content_seed: r.content_seed,
+                tag: r.tag,
+                attempt: attempts_made,
+                status,
+            },
+        );
+        let backoff = retry_backoff_ns(res, shared.run_seed, origin, r.attempt);
+        ctx.call_at_shared(
+            ctx.now_ns().saturating_add(backoff),
+            Rc::clone(retry_call),
+            origin,
+        );
+    } else if shared.harvest {
+        shared.outbox.push(Outcome::from_request(&r));
+    } else {
+        shared.sched.requests.insert(r);
+    }
+}
+
+/// Timer callback re-delivering a parked retry: mint a fresh engine id
+/// (retries re-enter the arrival stream like any other request) but keep
+/// the origin's identity, attempt count, and original arrival time.
+fn fire_retry(sim: &mut Sim, env: &Env, origin: RequestId) {
+    let (ticket, id) = {
+        let shared = &mut *env.shared.borrow_mut();
+        let Some(t) = shared.retry_tickets.remove(&origin) else {
+            return;
+        };
+        let id = shared.next_id;
+        shared.next_id += 1;
+        (t, id)
+    };
+    let a = StreamArrival {
+        at_ns: ticket.arrival_ns,
+        class: ticket.class,
+        prompt_tokens: ticket.prompt_tokens,
+        max_new_tokens: ticket.max_new_tokens,
+        content_seed: ticket.content_seed,
+        tag: ticket.tag,
+    };
+    deliver_attempt(sim, env, a, id, origin, ticket.attempt, Some(ticket.arrival_ns));
+}
+
+/// Deadline watchdog, run at the top of each scheduling pass (no plan is
+/// in flight then, so evicting running requests cannot strand a step):
+/// abort every queued or running request whose age exceeds
+/// `watchdog_slo_factor ×` its class deadline and reclaim its KV pages.
+fn run_watchdog(
+    ctx: &mut TaskCtx,
+    serve: &ServeConfig,
+    retry_call: &SharedCall,
+    shared: &mut EngineShared,
+    scratch: &mut Vec<RequestId>,
+    now: u64,
+) {
+    let factor = serve.resilience.watchdog_slo_factor;
+    scratch.clear();
+    {
+        let sched = &shared.sched;
+        for &id in sched.waiting.iter().chain(sched.running.iter()) {
+            if let Some(r) = sched.requests.get(id) {
+                let deadline = shared
+                    .deadlines_ns
+                    .get(r.tag as usize)
+                    .copied()
+                    .unwrap_or_else(|| (serve.timeout_s * 1e9) as u64);
+                let limit = r.arrival_ns.saturating_add((factor * deadline as f64) as u64);
+                if now > limit {
+                    scratch.push(id);
+                }
+            }
+        }
+    }
+    if scratch.is_empty() {
+        return;
+    }
+    for &id in scratch.iter() {
+        if let Some(r) = shared.sched.requests.get_mut(id) {
+            if r.phase == ReqPhase::Waiting {
+                shared.sched.waiting_prefill_tokens -= r.prompt_tokens;
+            }
+            r.status = Some(OutcomeStatus::Aborted);
+            r.phase = ReqPhase::Finished;
+            shared.kv.release(id);
+        }
+    }
+    {
+        let sched = &mut shared.sched;
+        let requests = &sched.requests;
+        sched
+            .waiting
+            .retain(|&id| requests.get(id).map_or(true, |r| r.status != Some(OutcomeStatus::Aborted)));
+        let requests = &sched.requests;
+        sched
+            .running
+            .retain(|&id| requests.get(id).map_or(true, |r| r.status != Some(OutcomeStatus::Aborted)));
+    }
+    for i in 0..scratch.len() {
+        let id = scratch[i];
+        if let Some(r) = shared.sched.requests.remove(id) {
+            resolve_failed(ctx, serve, retry_call, shared, r, OutcomeStatus::Aborted);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
 // EngineCore / GPU-worker state machines
 // ---------------------------------------------------------------------
 
@@ -618,11 +939,26 @@ struct EngineCore {
     poll_rank: usize,
     /// Copy of the finished-id slice for harvest eviction.
     finish_scratch: Vec<RequestId>,
+    /// Reusable id buffer for the deadline watchdog.
+    abort_scratch: Vec<RequestId>,
+    /// Virtual time the in-flight step's Schedule pass ended, so
+    /// Complete can accumulate `gpu_step_ns` (the shed gate's step-time
+    /// estimator input).
+    step_started_ns: u64,
+    /// Shared timer callback re-delivering parked retries. Lives on the
+    /// EngineCore (not `EngineShared`): the closure captures an `Env`
+    /// clone that holds `shared`, so parking it inside `EngineShared`
+    /// would create an Rc cycle and leak the whole engine.
+    retry_call: SharedCall,
     state: EcState,
 }
 
 impl EngineCore {
     fn new(env: Env) -> EngineCore {
+        let retry_call: SharedCall = {
+            let envc = env.clone();
+            Rc::new(move |sim: &mut Sim, origin: u64| fire_retry(sim, &envc, origin))
+        };
         EngineCore {
             env,
             step_seq: 0,
@@ -630,6 +966,9 @@ impl EngineCore {
             batch: 0,
             poll_rank: 0,
             finish_scratch: Vec::new(),
+            abort_scratch: Vec::new(),
+            step_started_ns: 0,
+            retry_call,
             state: EcState::Schedule,
         }
     }
@@ -640,24 +979,66 @@ impl Program for EngineCore {
         loop {
             match self.state {
                 EcState::Schedule => {
+                    let serve = &self.env.cfg.serve;
+                    let now = ctx.now_ns();
                     let has_work = {
                         let shared = &mut *self.env.shared.borrow_mut();
+                        // Deadline watchdog first: no plan is in flight
+                        // here, so aborting running requests is safe.
+                        if serve.resilience.watchdog_slo_factor > 0.0 {
+                            run_watchdog(
+                                ctx,
+                                serve,
+                                &self.retry_call,
+                                shared,
+                                &mut self.abort_scratch,
+                                now,
+                            );
+                        }
                         // Drain newly tokenized requests from the
-                        // API-server channel into the scheduler.
+                        // API-server channel into the scheduler, passing
+                        // each through the load-shedding gate.
                         while let Some(req) = self.env.channel.try_recv() {
                             shared.pending.remove(req.id);
-                            shared.sched.enqueue(req);
                             self.received += 1;
+                            if should_shed(serve, shared, &req, now) {
+                                resolve_failed(
+                                    ctx,
+                                    serve,
+                                    &self.retry_call,
+                                    shared,
+                                    req,
+                                    OutcomeStatus::Shed,
+                                );
+                            } else {
+                                shared.sched.enqueue(req);
+                            }
                         }
                         let mut plan = shared.plan_pool.pop().unwrap_or_default();
                         let has_work = scheduler::schedule_into(
                             &mut shared.sched,
                             &mut shared.kv,
                             shared.prefix.as_mut(),
-                            &self.env.cfg.serve,
-                            ctx.now_ns(),
+                            serve,
+                            now,
                             &mut plan,
                         );
+                        // Requests refused at admission (can never fit in
+                        // KV) resolve as Rejected, in FCFS order.
+                        for i in 0..shared.sched.rejected_scratch.len() {
+                            let id = shared.sched.rejected_scratch[i];
+                            if let Some(r) = shared.sched.requests.remove(id) {
+                                resolve_failed(
+                                    ctx,
+                                    serve,
+                                    &self.retry_call,
+                                    shared,
+                                    r,
+                                    OutcomeStatus::Rejected,
+                                );
+                            }
+                        }
+                        shared.sched.rejected_scratch.clear();
                         if has_work {
                             plan.seq = self.step_seq;
                             plan.collective_id = self.env.fleet.borrow_mut().new_collective();
@@ -675,6 +1056,7 @@ impl Program for EngineCore {
                             target: self.received + 1,
                         };
                     }
+                    self.step_started_ns = now;
                     self.poll_rank = 0;
                     self.state = EcState::PublishPoll;
                     return Op::Compute {
@@ -743,6 +1125,7 @@ impl Program for EngineCore {
                         }
                     }
                     shared.steps_completed += 1;
+                    shared.gpu_step_ns += now - self.step_started_ns;
                     shared.plan_pool.push(plan);
                     self.step_seq += 1;
                     self.state = EcState::Schedule;
@@ -886,9 +1269,21 @@ impl Program for GpuWorker {
                         collective_id,
                     });
                     self.state = GwState::Launch;
+                    // Injected kernel-launch latency spike, if a fault
+                    // window is active for this (step, rank).
+                    let spike = {
+                        let faults = self.env.faults.borrow();
+                        if faults.is_empty() {
+                            0
+                        } else {
+                            faults.launch_spike_ns(ctx.now_ns(), self.step_seq, self.rank as u64)
+                        }
+                    };
                     // CPU: issue the kernel launches (delayed under
                     // contention → GPU idles → §V-A).
-                    return Op::Compute { ns: launch_cpu };
+                    return Op::Compute {
+                        ns: launch_cpu + spike,
+                    };
                 }
                 GwState::Launch => {
                     let t = ctx.now_ns();
@@ -1110,5 +1505,78 @@ mod tests {
         let shared = sim.env.shared.borrow();
         assert_eq!(shared.sched.requests.len(), 0);
         assert_eq!(shared.pending.len(), 0);
+    }
+
+    #[test]
+    fn watchdog_aborts_past_deadline_requests() {
+        let mut cfg = small_cfg(4, 5);
+        cfg.serve.timeout_s = 2.0;
+        cfg.serve.resilience.watchdog_slo_factor = 1.0;
+        let mut s = ServingSim::new(cfg);
+        for i in 0..12u64 {
+            s.submit_at(i * 50_000_000, ReqClass::Normal, 100_000, 8);
+        }
+        s.run_secs(60.0);
+        let outcomes = s.outcomes();
+        assert_eq!(outcomes.len(), 12);
+        let aborted = outcomes
+            .iter()
+            .filter(|o| o.status == OutcomeStatus::Aborted)
+            .count();
+        assert!(aborted > 0, "watchdog aborted none of 12 starved requests");
+        // Aborted requests' KV pages were reclaimed: with everything
+        // terminal, the cache must be fully free again.
+        let shared = s.env.shared.borrow();
+        assert!(shared.sched.requests.values().all(|r| r.is_done()));
+        assert_eq!(shared.kv.free_pages(), shared.kv.total_pages());
+    }
+
+    #[test]
+    fn admission_queue_gate_sheds() {
+        let mut cfg = small_cfg(4, 8);
+        cfg.serve.resilience.admission_max_queue = 2;
+        let mut s = ServingSim::new(cfg);
+        for i in 0..12u64 {
+            s.submit_at(i * 1_000_000, ReqClass::Normal, 20_000, 8);
+        }
+        s.run_secs(120.0);
+        let outcomes = s.outcomes();
+        assert_eq!(outcomes.len(), 12);
+        let shed = outcomes
+            .iter()
+            .filter(|o| o.status == OutcomeStatus::Shed)
+            .count();
+        let completed = outcomes
+            .iter()
+            .filter(|o| o.status == OutcomeStatus::Completed)
+            .count();
+        assert!(shed > 0, "queue-depth gate never fired");
+        assert!(completed > 0, "gate shed everything");
+    }
+
+    #[test]
+    fn shed_requests_retry_and_eventually_complete() {
+        let mut cfg = small_cfg(4, 8);
+        cfg.serve.resilience.admission_max_queue = 2;
+        cfg.serve.resilience.retry_max_attempts = 4;
+        cfg.serve.resilience.retry_base_s = 0.5;
+        cfg.serve.resilience.retry_cap_s = 2.0;
+        let mut s = ServingSim::new(cfg);
+        for i in 0..12u64 {
+            s.submit_at(i * 1_000_000, ReqClass::Normal, 20_000, 8);
+        }
+        s.run_secs(240.0);
+        let outcomes = s.outcomes();
+        assert_eq!(outcomes.len(), 12, "one terminal outcome per logical request");
+        assert!(
+            outcomes.iter().any(|o| o.retries > 0),
+            "no request ever retried"
+        );
+        assert!(
+            outcomes
+                .iter()
+                .any(|o| o.retries > 0 && o.status == OutcomeStatus::Completed),
+            "no retried request completed"
+        );
     }
 }

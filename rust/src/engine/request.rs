@@ -24,6 +24,40 @@ impl ReqClass {
     }
 }
 
+/// Terminal status of a request's lifecycle — every request ends in
+/// exactly one of these, and the resilience layer reports them in
+/// per-class columns (shed/abort/reject rates).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OutcomeStatus {
+    /// Generated every requested token.
+    Completed,
+    /// Dropped by admission-control load shedding: the queue-depth or
+    /// estimated-TTFT gate decided the request could not meet its SLO.
+    Shed,
+    /// Refused at admission because it can *never* fit in the KV cache
+    /// (prompt + output exceed total pages) — a permanent condition, so
+    /// rejected requests are not retried.
+    Rejected,
+    /// Still unfinished when the observation horizon closed (the
+    /// client-side timeout of §IV-B).
+    TimedOut,
+    /// Aborted in flight by the deadline watchdog; its KV pages were
+    /// reclaimed into the free pool.
+    Aborted,
+}
+
+impl OutcomeStatus {
+    pub fn name(&self) -> &'static str {
+        match self {
+            OutcomeStatus::Completed => "completed",
+            OutcomeStatus::Shed => "shed",
+            OutcomeStatus::Rejected => "rejected",
+            OutcomeStatus::TimedOut => "timed-out",
+            OutcomeStatus::Aborted => "aborted",
+        }
+    }
+}
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ReqPhase {
     /// Waiting for tokenization to finish.
@@ -40,6 +74,11 @@ pub enum ReqPhase {
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: RequestId,
+    /// Id of the first delivery attempt of this logical request. Equal
+    /// to `id` for attempt 0; retries get fresh ids but keep the origin,
+    /// which keys their backoff-jitter stream (arrival-order-assigned,
+    /// never completion-order — the determinism invariant).
+    pub origin: RequestId,
     pub class: ReqClass,
     pub arrival_ns: u64,
     /// Prompt length in tokens (known after tokenization; the workload
@@ -60,6 +99,12 @@ pub struct Request {
     pub tag: u32,
 
     pub phase: ReqPhase,
+    /// Terminal status once decided; `None` while in flight.
+    /// [`Outcome::from_request`] maps `None` to `Completed`/`TimedOut`
+    /// from the phase, so only the resilience paths set it explicitly.
+    pub status: Option<OutcomeStatus>,
+    /// Delivery attempt index for client-side retry (0 = first).
+    pub attempt: u32,
     /// Prefill progress: prompt tokens processed so far.
     pub prefilled_tokens: u64,
     /// Tokens that hit the prefix cache (skip prefill compute).
@@ -83,6 +128,7 @@ impl Request {
     ) -> Request {
         Request {
             id,
+            origin: id,
             class,
             arrival_ns,
             prompt_tokens,
@@ -90,6 +136,8 @@ impl Request {
             content_seed: id, // unique content by default
             tag: 0,
             phase: ReqPhase::Tokenizing,
+            status: None,
+            attempt: 0,
             prefilled_tokens: 0,
             cached_tokens: 0,
             generated_tokens: 0,
@@ -130,6 +178,12 @@ pub struct Outcome {
     pub ttft_ns: Option<u64>,
     pub e2e_ns: Option<u64>,
     pub generated_tokens: u64,
+    /// How the request's lifecycle ended.
+    pub status: OutcomeStatus,
+    /// Retry deliveries this logical request consumed (0 = first
+    /// attempt sufficed). Latencies are measured from the *original*
+    /// arrival, so retried requests carry their full client-side wait.
+    pub retries: u32,
 }
 
 impl Outcome {
@@ -144,6 +198,14 @@ impl Outcome {
             ttft_ns: r.first_token_at.map(|t| t - r.arrival_ns),
             e2e_ns: r.finished_at.map(|t| t - r.arrival_ns),
             generated_tokens: r.generated_tokens,
+            status: r.status.unwrap_or(if r.is_done() {
+                OutcomeStatus::Completed
+            } else {
+                // Alive past the observation horizon — the client-side
+                // timeout of §IV-B, not an engine-side decision.
+                OutcomeStatus::TimedOut
+            }),
+            retries: r.attempt,
         }
     }
 
@@ -198,5 +260,36 @@ mod tests {
         let o = Outcome::from_request(&r);
         assert!(o.timed_out(200.0));
         assert_eq!(o.ttft_ns, None);
+        assert_eq!(o.status, OutcomeStatus::TimedOut);
+        assert_eq!(o.retries, 0);
+    }
+
+    #[test]
+    fn status_mapping_from_phase_and_explicit_status() {
+        let mut r = Request::new(4, ReqClass::Normal, 0, 100, 16);
+        assert_eq!(r.origin, 4, "origin defaults to own id");
+        // explicit terminal status wins
+        r.status = Some(OutcomeStatus::Shed);
+        r.attempt = 2;
+        let o = Outcome::from_request(&r);
+        assert_eq!(o.status, OutcomeStatus::Shed);
+        assert_eq!(o.retries, 2);
+        // finished without explicit status maps to Completed
+        let mut r = Request::new(5, ReqClass::Normal, 0, 100, 16);
+        r.phase = ReqPhase::Finished;
+        assert_eq!(Outcome::from_request(&r).status, OutcomeStatus::Completed);
+    }
+
+    #[test]
+    fn status_names_are_stable() {
+        for (s, n) in [
+            (OutcomeStatus::Completed, "completed"),
+            (OutcomeStatus::Shed, "shed"),
+            (OutcomeStatus::Rejected, "rejected"),
+            (OutcomeStatus::TimedOut, "timed-out"),
+            (OutcomeStatus::Aborted, "aborted"),
+        ] {
+            assert_eq!(s.name(), n);
+        }
     }
 }

@@ -12,7 +12,7 @@
 
 use super::kv_cache::KvCache;
 use super::prefix_cache::PrefixCache;
-use super::request::{ReqPhase, Request, RequestId};
+use super::request::{OutcomeStatus, ReqPhase, Request, RequestId};
 use super::slab::RequestSlab;
 use crate::config::ServeConfig;
 use std::collections::VecDeque;
@@ -65,6 +65,14 @@ pub struct SchedState {
     /// Reusable buffers [`complete_step`] returns slices of.
     first_scratch: Vec<RequestId>,
     finished_scratch: Vec<RequestId>,
+    /// Prompt tokens still queued for prefill across `waiting` — the
+    /// load-shedding gate's estimate of the prefill backlog, maintained
+    /// incrementally so the gate never walks the queue.
+    pub(crate) waiting_prefill_tokens: u64,
+    /// Requests refused at admission because they can never fit in KV
+    /// ([`OutcomeStatus::Rejected`]); the engine drains this after every
+    /// scheduling pass. Reused across steps — no steady-state allocs.
+    pub(crate) rejected_scratch: Vec<RequestId>,
 }
 
 impl SchedState {
@@ -76,6 +84,7 @@ impl SchedState {
     pub fn enqueue(&mut self, mut request: Request) {
         request.phase = ReqPhase::Waiting;
         self.waiting.push_back(request.id);
+        self.waiting_prefill_tokens += request.prompt_tokens;
         self.requests.insert(request);
     }
 
@@ -158,10 +167,22 @@ pub fn schedule_into(
             None => 0,
         };
         let new_tokens = r.prompt_tokens - cached + r.max_new_tokens;
+        if !kv.can_ever_fit(new_tokens) {
+            // Permanently oversized: even an empty cache could not hold
+            // it. Reject instead of wedging the FCFS queue forever, and
+            // keep admitting — the request behind it is not at fault.
+            r.phase = ReqPhase::Finished;
+            r.status = Some(OutcomeStatus::Rejected);
+            state.waiting.pop_front();
+            state.waiting_prefill_tokens -= r.prompt_tokens;
+            state.rejected_scratch.push(id);
+            continue;
+        }
         if !kv.grow_to(id, new_tokens) {
             break; // KV full: head-of-line blocking, queue grows
         }
         state.waiting.pop_front();
+        state.waiting_prefill_tokens -= r.prompt_tokens;
         r.phase = ReqPhase::Prefill;
         r.admitted_at = Some(now_ns);
         r.cached_tokens = cached;
@@ -220,6 +241,7 @@ pub fn complete_step<'a>(
             first_tokens.push(id);
             if r.generated_tokens >= r.max_new_tokens {
                 r.phase = ReqPhase::Finished;
+                r.status = Some(OutcomeStatus::Completed);
                 r.finished_at = Some(now_ns);
                 finished.push(id);
             } else {
@@ -233,6 +255,7 @@ pub fn complete_step<'a>(
         r.generated_tokens += 1;
         if r.generated_tokens >= r.max_new_tokens {
             r.phase = ReqPhase::Finished;
+            r.status = Some(OutcomeStatus::Completed);
             r.finished_at = Some(now_ns);
             finished.push(id);
         }
@@ -349,6 +372,52 @@ mod tests {
         let plan = schedule(&mut state, &mut kv, None, &cfg, 0).unwrap();
         assert_eq!(plan.prefill.len(), 1);
         assert_eq!(state.n_waiting(), 2, "head-of-line blocking");
+    }
+
+    #[test]
+    fn never_fit_request_is_rejected_not_wedged() {
+        let mut state = SchedState::new();
+        let mut kv = KvCache::new(16, 10); // 160 tokens total, ever
+        let cfg = cfg();
+        state.enqueue(req(1, 500, 4)); // 504 tokens: can never fit
+        state.enqueue(req(2, 8, 2)); // small, behind the poison pill
+        let plan = schedule(&mut state, &mut kv, None, &cfg, 0).unwrap();
+        // The oversized head is rejected and the small request admits in
+        // the same pass — no head-of-line wedge.
+        assert_eq!(state.rejected_scratch, vec![1]);
+        assert_eq!(state.get(1).unwrap().status, Some(OutcomeStatus::Rejected));
+        assert!(state.get(1).unwrap().is_done());
+        assert_eq!(plan.prefill.len(), 1);
+        assert_eq!(plan.prefill[0].0, 2);
+        assert_eq!(state.n_waiting(), 0);
+        assert_eq!(state.waiting_prefill_tokens, 0);
+        assert!(kv.check_conservation());
+    }
+
+    #[test]
+    fn waiting_prefill_tokens_tracks_queue() {
+        let (mut state, mut kv) = setup();
+        let cfg = cfg();
+        state.enqueue(req(1, 250, 4));
+        state.enqueue(req(2, 70, 4));
+        assert_eq!(state.waiting_prefill_tokens, 320);
+        let plan = schedule(&mut state, &mut kv, None, &cfg, 0).unwrap();
+        // budget 100: r1 admitted (100-token chunk), r2 still waiting
+        assert_eq!(plan.prefill.len(), 1);
+        assert_eq!(state.waiting_prefill_tokens, 70);
+        complete_step(&mut state, &mut kv, &plan, 1);
+        schedule(&mut state, &mut kv, None, &cfg, 2).unwrap();
+        assert_eq!(state.waiting_prefill_tokens, 0);
+    }
+
+    #[test]
+    fn completed_requests_carry_status() {
+        let (mut state, mut kv) = setup();
+        let cfg = cfg();
+        state.enqueue(req(1, 50, 1));
+        let plan = schedule(&mut state, &mut kv, None, &cfg, 0).unwrap();
+        complete_step(&mut state, &mut kv, &plan, 1);
+        assert_eq!(state.get(1).unwrap().status, Some(OutcomeStatus::Completed));
     }
 
     #[test]

@@ -20,6 +20,7 @@
 //! simulated tokenization costs shift accordingly (the modeled
 //! Python-stack overhead factor in `SystemSpec` is documented there).
 
+use super::faults::FaultPlan;
 use crate::simcpu::{GateId, Op, Program, Sim, TaskCtx};
 use std::cell::RefCell;
 use std::collections::VecDeque;
@@ -45,6 +46,10 @@ pub struct TokenizerPool {
     /// Counts jobs ever pushed (block target for workers).
     job_gate: GateId,
     pub n_threads: usize,
+    /// Fault schedule consulted per job (empty by default — a borrow +
+    /// `is_empty` check on the hot path, no draws). The engine installs
+    /// the run's plan into this shared cell at fault-injection setup.
+    pub(crate) faults: Rc<RefCell<FaultPlan>>,
 }
 
 impl TokenizerPool {
@@ -59,12 +64,14 @@ impl TokenizerPool {
             shared,
             job_gate,
             n_threads,
+            faults: Rc::new(RefCell::new(FaultPlan::default())),
         };
-        for _ in 0..n_threads {
+        for worker_id in 0..n_threads {
             sim.spawn(
                 "tokenizer",
                 TokWorker {
                     pool: pool.clone(),
+                    worker_id: worker_id as u64,
                     consumed: 0,
                     running: None,
                     state: TwState::Wait,
@@ -105,6 +112,8 @@ enum TwState {
 /// One tokenizer worker: wait → pop → burn cost → completion → repeat.
 struct TokWorker {
     pool: TokenizerPool,
+    /// Stable index within the pool — the fault stream's worker key.
+    worker_id: u64,
     consumed: u64,
     running: Option<Box<dyn FnOnce(&mut TaskCtx)>>,
     state: TwState,
@@ -128,9 +137,25 @@ impl Program for TokWorker {
                         // spurious wake (sibling raced us); wait further
                         None => self.state = TwState::Wait,
                         Some(job) => {
+                            // Fault injection: a stalled worker burns the
+                            // stall as extra CPU on this job. The draw is a
+                            // pure hash of (worker, job ordinal), so the
+                            // decision is identical however the pool's
+                            // workers happen to interleave.
+                            let faults = self.pool.faults.borrow();
+                            let stall = if faults.is_empty() {
+                                0
+                            } else {
+                                faults.tokenizer_stall_ns(
+                                    ctx.now_ns(),
+                                    self.worker_id,
+                                    self.consumed,
+                                )
+                            };
+                            drop(faults);
                             self.running = Some(job.on_done);
                             self.state = TwState::Finish;
-                            return Op::Compute { ns: job.cost_ns };
+                            return Op::Compute { ns: job.cost_ns + stall };
                         }
                     }
                 }
@@ -285,6 +310,36 @@ mod tests {
             t > 2_000_000,
             "engine work delayed by tokenizer contention: {t}"
         );
+    }
+
+    #[test]
+    fn installed_fault_plan_stalls_jobs() {
+        use crate::engine::faults::{FaultPlan, FaultSpec};
+        let mut sim = sim(4);
+        let pool = TokenizerPool::spawn(&mut sim, 1);
+        *pool.faults.borrow_mut() = FaultPlan::new(
+            1,
+            &[FaultSpec::TokenizerStall {
+                start_s: 0.0,
+                end_s: 10.0,
+                prob: 1.0,
+                stall_ns: 9_000_000,
+            }],
+        );
+        let done = Rc::new(RefCell::new(0u64));
+        {
+            let done = Rc::clone(&done);
+            pool.submit_external(
+                &mut sim,
+                TokJob {
+                    cost_ns: 1_000_000,
+                    on_done: Box::new(move |ctx| *done.borrow_mut() = ctx.now_ns()),
+                },
+            );
+        }
+        sim.run_until(1_000_000_000);
+        let t = *done.borrow();
+        assert!(t >= 10_000_000, "stall added to job cost: {t}");
     }
 
     #[test]

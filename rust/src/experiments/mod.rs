@@ -192,6 +192,10 @@ fn serve_scenario(cfg: RunConfig, name: &str, args: &Args) {
         "SLO (s)",
         "requests",
         "timeouts",
+        "shed",
+        "rejected",
+        "aborted",
+        "retries/req",
         "TTFT p50 (s)",
         "TTFT p99 (s)",
     ])
@@ -203,15 +207,22 @@ fn serve_scenario(cfg: RunConfig, name: &str, args: &Args) {
             format!("{:.0}", c.slo_ttft_s),
             c.issued.to_string(),
             c.timeouts.to_string(),
+            c.shed.to_string(),
+            c.rejected.to_string(),
+            c.aborted.to_string(),
+            format!("{:.2}", c.retries_per_request()),
             secs_label(c.ttft_p50_s),
             secs_label(c.ttft_p99_s),
         ]);
     }
     print!("{}", t.render());
     println!(
-        "total: {} requests, timeout rate {}, GPU idle {}, engine steps {}",
+        "total: {} requests, timeout rate {}, shed rate {}, abort rate {}, \
+         GPU idle {}, engine steps {}",
         report.issued,
         percent_label(report.timeout_rate()),
+        percent_label(report.shed_rate()),
+        percent_label(report.abort_rate()),
         percent_label(report.gpu_idle_share),
         report.steps_completed
     );

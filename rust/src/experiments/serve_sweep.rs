@@ -10,6 +10,7 @@
 
 use super::out_dir;
 use crate::config::{ModelSpec, RunConfig, ServeConfig, SystemSpec, WorkloadConfig};
+use crate::engine::FaultSpec;
 use crate::report::{self, percent_label, secs_label, Table};
 use crate::sweep::{seeded_cells, SeededCell, Sweep};
 use crate::util::cli::Args;
@@ -36,6 +37,10 @@ pub struct CellResult {
     pub cores: usize,
     pub issued: usize,
     pub timeouts: usize,
+    pub shed: usize,
+    pub rejected: usize,
+    pub aborted: usize,
+    pub retries: usize,
     pub ttft_p50_s: Option<f64>,
     pub ttft_p99_s: Option<f64>,
     pub gpu_idle_share: f64,
@@ -44,6 +49,18 @@ pub struct CellResult {
 impl CellResult {
     pub fn timeout_rate(&self) -> f64 {
         timeout_fraction(self.timeouts, self.issued)
+    }
+
+    pub fn shed_rate(&self) -> f64 {
+        timeout_fraction(self.shed, self.issued)
+    }
+
+    pub fn abort_rate(&self) -> f64 {
+        timeout_fraction(self.aborted, self.issued)
+    }
+
+    pub fn retries_per_request(&self) -> f64 {
+        timeout_fraction(self.retries, self.issued)
     }
 }
 
@@ -92,6 +109,10 @@ pub fn run_cell(cell: SeededCell<CellSpec>) -> CellResult {
         cores: spec.cores,
         issued: report.issued,
         timeouts: report.timeouts,
+        shed: report.shed,
+        rejected: report.rejected,
+        aborted: report.aborted,
+        retries: report.retries,
         ttft_p50_s: report.ttft_p50_s,
         ttft_p99_s: report.ttft_p99_s,
         gpu_idle_share: report.gpu_idle_share,
@@ -107,6 +128,9 @@ pub fn render_cells(title: &str, cells: &[CellResult]) -> Table {
         "TTFT p50 (s)",
         "TTFT p99 (s)",
         "timeout rate",
+        "shed rate",
+        "abort rate",
+        "retries/req",
         "GPU idle",
     ])
     .with_title(title.to_string())
@@ -120,6 +144,9 @@ pub fn render_cells(title: &str, cells: &[CellResult]) -> Table {
             secs_label(c.ttft_p50_s),
             secs_label(c.ttft_p99_s),
             percent_label(c.timeout_rate()),
+            percent_label(c.shed_rate()),
+            percent_label(c.abort_rate()),
+            format!("{:.2}", c.retries_per_request()),
             percent_label(c.gpu_idle_share),
         ]);
     }
@@ -138,6 +165,13 @@ pub fn cells_to_json(cells: &[CellResult]) -> Json {
                     .set("issued", c.issued)
                     .set("timeouts", c.timeouts)
                     .set("timeout_rate", c.timeout_rate())
+                    .set("shed", c.shed)
+                    .set("rejected", c.rejected)
+                    .set("aborted", c.aborted)
+                    .set("retries", c.retries)
+                    .set("shed_rate", c.shed_rate())
+                    .set("abort_rate", c.abort_rate())
+                    .set("retries_per_request", c.retries_per_request())
                     .set(
                         "ttft_p50_s",
                         c.ttft_p50_s.map(Json::Num).unwrap_or(Json::Null),
@@ -243,14 +277,30 @@ pub fn run(args: &Args) {
 /// `cpuslow scenarios` — print the catalog as a table (the README's
 /// scenario-catalog table regenerates from this).
 pub fn print_catalog() {
-    let mut t = Table::new(&["name", "class", "arrivals", "prompt/output", "SLO (s)", "probes"])
-        .with_title("Workload scenario catalog")
-        .align(0, crate::report::table::Align::Left)
-        .align(1, crate::report::table::Align::Left)
-        .align(2, crate::report::table::Align::Left)
-        .align(3, crate::report::table::Align::Left)
-        .align(5, crate::report::table::Align::Left);
+    let mut t = Table::new(&[
+        "name",
+        "class",
+        "arrivals",
+        "prompt/output",
+        "SLO (s)",
+        "resilience / faults",
+        "probes",
+    ])
+    .with_title("Workload scenario catalog")
+    .align(0, crate::report::table::Align::Left)
+    .align(1, crate::report::table::Align::Left)
+    .align(2, crate::report::table::Align::Left)
+    .align(3, crate::report::table::Align::Left)
+    .align(5, crate::report::table::Align::Left)
+    .align(6, crate::report::table::Align::Left);
     for s in Scenario::catalog() {
+        // The per-scenario resilience/fault column: armed gates first,
+        // then each injected fault's human label.
+        let mut extras: Vec<String> = Vec::new();
+        if s.resilience.is_some() {
+            extras.push("resilience".to_string());
+        }
+        extras.extend(s.faults.iter().map(FaultSpec::label));
         for (i, c) in s.classes.iter().enumerate() {
             t.row(vec![
                 if i == 0 { s.name.clone() } else { String::new() },
@@ -258,6 +308,7 @@ pub fn print_catalog() {
                 c.arrivals.label(),
                 c.lengths.label(),
                 format!("{:.0}", c.slo_ttft_s),
+                if i == 0 { extras.join("; ") } else { String::new() },
                 if i == 0 {
                     s.paper_section.clone()
                 } else {

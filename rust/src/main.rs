@@ -14,8 +14,8 @@ fn main() {
             ("systems", "print the Table I system matrix"),
             ("experiment <id>", "regenerate a paper figure (fig3 fig4 fig5 fig7 fig8 fig9 fig10 fig11 fig12 fig13 cost ablations headline)"),
             ("serve", "run the simulated serving stack once and report outcomes"),
-            ("serve-sweep", "scenario × cores × TP grid: TTFT p50/p99, timeout rate, GPU idle"),
-            ("scenarios", "print the workload scenario catalog"),
+            ("serve-sweep", "scenario × cores × TP grid: TTFT p50/p99, timeout/shed/abort rates, GPU idle"),
+            ("scenarios", "print the workload scenario catalog (incl. resilience gates and injected faults)"),
             ("calibrate", "measure real Rust-BPE tokenizer throughput on this host"),
             ("bench-check <current.json>...", "compare BENCH_*.json files against committed baselines; exits 1 on regression"),
             ("list", "list available experiments"),

@@ -31,8 +31,8 @@
 //! the paper's own attacker/victim flood as a trace-driven scenario.
 
 use super::{ArrivalProcess, LengthMix};
-use crate::config::{RunConfig, WorkloadConfig};
-use crate::engine::{Outcome, ReqClass, ServingSim, StreamArrival};
+use crate::config::{ResilienceConfig, RunConfig, WorkloadConfig};
+use crate::engine::{FaultSpec, Outcome, OutcomeStatus, ReqClass, ServingSim, StreamArrival};
 use crate::util::json::Json;
 use crate::util::rng::{Rng, SplitMix64};
 use crate::util::stats::{Percentiles, QuantileSketch};
@@ -236,6 +236,12 @@ pub struct Scenario {
     /// Arrivals are generated for `t in [0, duration_s)`.
     pub duration_s: f64,
     pub classes: Vec<ClassSpec>,
+    /// Resilience knobs this scenario turns on (admission control,
+    /// shedding, watchdog, retry); `None` = engine defaults (all off).
+    pub resilience: Option<ResilienceConfig>,
+    /// Declarative fault schedule injected into the run, driven by a
+    /// dedicated RNG stream derived from the trace seed.
+    pub faults: Vec<FaultSpec>,
 }
 
 /// Derive the deterministic sub-streams of class `idx` from the
@@ -272,6 +278,8 @@ impl Scenario {
                     slo_ttft_s: 30.0,
                     shared_prompt: false,
                 }],
+                resilience: None,
+                faults: vec![],
             },
             Scenario {
                 name: "bursty".into(),
@@ -297,6 +305,8 @@ impl Scenario {
                     slo_ttft_s: 30.0,
                     shared_prompt: false,
                 }],
+                resilience: None,
+                faults: vec![],
             },
             Scenario {
                 name: "heavy-tail".into(),
@@ -320,6 +330,8 @@ impl Scenario {
                     slo_ttft_s: 60.0,
                     shared_prompt: false,
                 }],
+                resilience: None,
+                faults: vec![],
             },
             Scenario {
                 name: "multi-tenant".into(),
@@ -356,6 +368,8 @@ impl Scenario {
                         shared_prompt: false,
                     },
                 ],
+                resilience: None,
+                faults: vec![],
             },
             Scenario {
                 name: "attack".into(),
@@ -391,6 +405,140 @@ impl Scenario {
                         shared_prompt: false,
                     },
                 ],
+                resilience: None,
+                faults: vec![],
+            },
+            Scenario {
+                name: "flash-crowd".into(),
+                description: "MMPP flash crowd + oversized spam, with shedding, \
+                              watchdog, and retry armed"
+                    .into(),
+                paper_section: "§V under overload (resilience layer)".into(),
+                duration_s: 30.0,
+                classes: vec![
+                    ClassSpec {
+                        name: "crowd".into(),
+                        arrivals: ArrivalSpec::Mmpp {
+                            rps_quiet: 2.0,
+                            rps_burst: 16.0,
+                            mean_quiet_s: 6.0,
+                            mean_burst_s: 4.0,
+                        },
+                        lengths: LengthSpec {
+                            prompt: LenDist::Fixed { tokens: 40_000 },
+                            output: LenDist::Fixed { tokens: 32 },
+                        },
+                        slo_ttft_s: 12.0,
+                        shared_prompt: true,
+                    },
+                    ClassSpec {
+                        name: "bulk".into(),
+                        arrivals: ArrivalSpec::Poisson { rps: 1.0 },
+                        lengths: LengthSpec {
+                            prompt: LenDist::Lognormal {
+                                mean: 8_000.0,
+                                sigma: 0.6,
+                                min: 1_000,
+                            },
+                            output: LenDist::Fixed { tokens: 64 },
+                        },
+                        slo_ttft_s: 10.0,
+                        shared_prompt: false,
+                    },
+                    // Prompts beyond the default 524 288-token KV
+                    // capacity: admission rejects them outright
+                    // (OutcomeStatus::Rejected) instead of wedging FCFS.
+                    ClassSpec {
+                        name: "oversized".into(),
+                        arrivals: ArrivalSpec::Periodic { rps: 0.1 },
+                        lengths: LengthSpec {
+                            prompt: LenDist::Fixed { tokens: 600_000 },
+                            output: LenDist::Fixed { tokens: 8 },
+                        },
+                        slo_ttft_s: 30.0,
+                        shared_prompt: false,
+                    },
+                ],
+                resilience: Some(ResilienceConfig {
+                    admission_max_queue: 512,
+                    shed_slo_factor: 1.0,
+                    watchdog_slo_factor: 2.0,
+                    retry_max_attempts: 3,
+                    retry_base_s: 0.5,
+                    retry_cap_s: 4.0,
+                }),
+                faults: vec![],
+            },
+            Scenario {
+                name: "replica-failure".into(),
+                description: "steady traffic through a transient loss of 4 cores, \
+                              watchdog + retry recover the backlog"
+                    .into(),
+                paper_section: "§VI fault tolerance (core loss)".into(),
+                duration_s: 30.0,
+                classes: vec![ClassSpec {
+                    name: "chat".into(),
+                    arrivals: ArrivalSpec::Poisson { rps: 4.0 },
+                    lengths: LengthSpec {
+                        prompt: LenDist::Lognormal {
+                            mean: 2_000.0,
+                            sigma: 0.8,
+                            min: 64,
+                        },
+                        output: LenDist::Fixed { tokens: 32 },
+                    },
+                    slo_ttft_s: 30.0,
+                    shared_prompt: false,
+                }],
+                resilience: Some(ResilienceConfig {
+                    admission_max_queue: 0,
+                    shed_slo_factor: 0.0,
+                    watchdog_slo_factor: 2.0,
+                    retry_max_attempts: 3,
+                    retry_base_s: 0.5,
+                    retry_cap_s: 4.0,
+                }),
+                faults: vec![FaultSpec::CoreLoss {
+                    start_s: 3.0,
+                    end_s: 9.0,
+                    cores: 4,
+                }],
+            },
+            Scenario {
+                name: "degraded-tokenizer".into(),
+                description: "tokenizer workers stall probabilistically for 10 s; \
+                              shedding keeps the queue bounded"
+                    .into(),
+                paper_section: "§II-A ① tokenizer-pool degradation".into(),
+                duration_s: 30.0,
+                classes: vec![ClassSpec {
+                    name: "chat".into(),
+                    arrivals: ArrivalSpec::Poisson { rps: 6.0 },
+                    lengths: LengthSpec {
+                        prompt: LenDist::Lognormal {
+                            mean: 1_500.0,
+                            sigma: 0.8,
+                            min: 64,
+                        },
+                        output: LenDist::Fixed { tokens: 32 },
+                    },
+                    slo_ttft_s: 15.0,
+                    shared_prompt: false,
+                }],
+                resilience: Some(ResilienceConfig {
+                    admission_max_queue: 256,
+                    shed_slo_factor: 1.0,
+                    watchdog_slo_factor: 0.0,
+                    retry_max_attempts: 2,
+                    retry_base_s: 0.5,
+                    retry_cap_s: 4.0,
+                }),
+                faults: vec![FaultSpec::TokenizerStall {
+                    start_s: 2.0,
+                    end_s: 12.0,
+                    prob: 0.6,
+                    stall_ns: 400_000_000,
+                }],
             },
         ]
     }
@@ -525,6 +673,8 @@ impl Scenario {
                 })
                 .collect(),
             requests,
+            resilience: self.resilience.clone(),
+            faults: self.faults.clone(),
         }
     }
 }
@@ -613,6 +763,12 @@ pub struct Trace {
     pub seed: u64,
     pub classes: Vec<TraceClass>,
     pub requests: Vec<TraceReq>,
+    /// Resilience knobs the scenario armed; replays apply them over the
+    /// run config's own (`None` = keep the config's).
+    pub resilience: Option<ResilienceConfig>,
+    /// Fault schedule, replayed from the trace seed — a dumped trace
+    /// plus its seed reproduces the faulted run byte-identically.
+    pub faults: Vec<FaultSpec>,
 }
 
 impl Trace {
@@ -650,6 +806,16 @@ impl Trace {
                     .collect(),
             ),
         );
+        // Omit-when-absent keeps pre-resilience trace dumps byte-stable.
+        if let Some(res) = &self.resilience {
+            j.set("resilience", resilience_to_json(res));
+        }
+        if !self.faults.is_empty() {
+            j.set(
+                "faults",
+                Json::Arr(self.faults.iter().map(FaultSpec::to_json).collect()),
+            );
+        }
         j
     }
 
@@ -705,13 +871,54 @@ impl Trace {
                 content_seed: num("content_seed")?,
             });
         }
+        let resilience = match j.get("resilience") {
+            Some(rj) => Some(resilience_from_json(rj)?),
+            None => None,
+        };
+        let mut faults = Vec::new();
+        if let Some(fj) = j.get("faults").and_then(Json::as_arr) {
+            for f in fj {
+                faults.push(
+                    FaultSpec::from_json(f).ok_or_else(|| anyhow!("trace: bad fault spec"))?,
+                );
+            }
+        }
         Ok(Trace {
             scenario,
             seed,
             classes,
             requests,
+            resilience,
+            faults,
         })
     }
+}
+
+fn resilience_to_json(r: &ResilienceConfig) -> Json {
+    let mut j = Json::obj();
+    j.set("admission_max_queue", r.admission_max_queue)
+        .set("shed_slo_factor", r.shed_slo_factor)
+        .set("watchdog_slo_factor", r.watchdog_slo_factor)
+        .set("retry_max_attempts", r.retry_max_attempts)
+        .set("retry_base_s", r.retry_base_s)
+        .set("retry_cap_s", r.retry_cap_s);
+    j
+}
+
+fn resilience_from_json(j: &Json) -> Result<ResilienceConfig> {
+    let num = |key: &str| -> Result<f64> {
+        j.get(key)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("resilience: missing '{key}'"))
+    };
+    Ok(ResilienceConfig {
+        admission_max_queue: num("admission_max_queue")? as usize,
+        shed_slo_factor: num("shed_slo_factor")?,
+        watchdog_slo_factor: num("watchdog_slo_factor")?,
+        retry_max_attempts: num("retry_max_attempts")? as u32,
+        retry_base_s: num("retry_base_s")?,
+        retry_cap_s: num("retry_cap_s")?,
+    })
 }
 
 // ---------------------------------------------------------------------------
@@ -756,8 +963,17 @@ pub struct ClassReport {
     pub slo_ttft_s: f64,
     pub issued: usize,
     /// Requests whose TTFT missed the class SLO (or never produced a
-    /// first token inside the measurement horizon).
+    /// first token inside the measurement horizon). Status-agnostic:
+    /// shed/rejected/aborted requests count here too (no first token).
     pub timeouts: usize,
+    /// Terminal [`OutcomeStatus::Shed`] requests (load shedding).
+    pub shed: usize,
+    /// Terminal [`OutcomeStatus::Rejected`] requests (can never fit KV).
+    pub rejected: usize,
+    /// Terminal [`OutcomeStatus::Aborted`] requests (deadline watchdog).
+    pub aborted: usize,
+    /// Total retry deliveries consumed across the class's requests.
+    pub retries: usize,
     /// TTFT percentiles over on-time requests; None when every request
     /// of the class timed out (or none were issued).
     pub ttft_p50_s: Option<f64>,
@@ -767,6 +983,18 @@ pub struct ClassReport {
 impl ClassReport {
     pub fn timeout_rate(&self) -> f64 {
         timeout_fraction(self.timeouts, self.issued)
+    }
+
+    pub fn shed_rate(&self) -> f64 {
+        timeout_fraction(self.shed, self.issued)
+    }
+
+    pub fn abort_rate(&self) -> f64 {
+        timeout_fraction(self.aborted, self.issued)
+    }
+
+    pub fn retries_per_request(&self) -> f64 {
+        timeout_fraction(self.retries, self.issued)
     }
 }
 
@@ -779,6 +1007,10 @@ pub struct ScenarioReport {
     pub per_class: Vec<ClassReport>,
     pub issued: usize,
     pub timeouts: usize,
+    pub shed: usize,
+    pub rejected: usize,
+    pub aborted: usize,
+    pub retries: usize,
     pub ttft_p50_s: Option<f64>,
     pub ttft_p99_s: Option<f64>,
     /// 1 − mean GPU utilization over the run (fleet average).
@@ -789,6 +1021,18 @@ pub struct ScenarioReport {
 impl ScenarioReport {
     pub fn timeout_rate(&self) -> f64 {
         timeout_fraction(self.timeouts, self.issued)
+    }
+
+    pub fn shed_rate(&self) -> f64 {
+        timeout_fraction(self.shed, self.issued)
+    }
+
+    pub fn abort_rate(&self) -> f64 {
+        timeout_fraction(self.aborted, self.issued)
+    }
+
+    pub fn retries_per_request(&self) -> f64 {
+        timeout_fraction(self.retries, self.issued)
     }
 }
 
@@ -829,6 +1073,8 @@ fn drive_report<I>(
     scenario: &str,
     classes: &[TraceClass],
     arrivals: I,
+    seed: u64,
+    faults: &[FaultSpec],
     mut agg: TtftAgg,
 ) -> ScenarioReport
 where
@@ -836,12 +1082,29 @@ where
 {
     let max_slo_s = classes.iter().fold(0.0_f64, |a, c| a.max(c.slo_ttft_s));
     let slos: Vec<f64> = classes.iter().map(|c| c.slo_ttft_s).collect();
-    let mut issued = vec![0usize; classes.len()];
-    let mut timeouts = vec![0usize; classes.len()];
+    let n = classes.len();
+    let mut issued = vec![0usize; n];
+    let mut timeouts = vec![0usize; n];
+    let mut shed = vec![0usize; n];
+    let mut rejected = vec![0usize; n];
+    let mut aborted = vec![0usize; n];
+    let mut retries = vec![0usize; n];
     let mut sim = ServingSim::new(cfg);
+    sim.set_class_deadlines(&slos);
+    sim.set_run_seed(seed);
+    if !faults.is_empty() {
+        sim.install_faults(faults);
+    }
     sim.run_streaming(arrivals, max_slo_s + 1.0, |o: Outcome| {
         let k = o.tag as usize;
         issued[k] += 1;
+        match o.status {
+            OutcomeStatus::Shed => shed[k] += 1,
+            OutcomeStatus::Rejected => rejected[k] += 1,
+            OutcomeStatus::Aborted => aborted[k] += 1,
+            OutcomeStatus::Completed | OutcomeStatus::TimedOut => {}
+        }
+        retries[k] += o.retries as usize;
         match o.ttft_secs() {
             Some(t) if t <= slos[k] => match &mut agg {
                 TtftAgg::Exact { per_class } => per_class[k].push(t),
@@ -862,6 +1125,10 @@ where
             slo_ttft_s: c.slo_ttft_s,
             issued: issued[k],
             timeouts: timeouts[k],
+            shed: shed[k],
+            rejected: rejected[k],
+            aborted: aborted[k],
+            retries: retries[k],
             ttft_p50_s: None,
             ttft_p99_s: None,
         })
@@ -895,6 +1162,10 @@ where
         scenario: scenario.to_string(),
         issued: issued.iter().sum(),
         timeouts: timeouts.iter().sum(),
+        shed: shed.iter().sum(),
+        rejected: rejected.iter().sum(),
+        aborted: aborted.iter().sum(),
+        retries: retries.iter().sum(),
         per_class,
         ttft_p50_s,
         ttft_p99_s,
@@ -915,14 +1186,21 @@ fn trace_req_arrival(r: &TraceReq) -> StreamArrival {
 }
 
 /// Drive a materialized trace through a fresh [`ServingSim`] and
-/// summarize outcomes with exact percentiles.
-pub fn run_trace(cfg: RunConfig, trace: &Trace) -> ScenarioReport {
+/// summarize outcomes with exact percentiles. Trace-borne resilience
+/// knobs override the config's; the trace seed drives the retry-jitter
+/// and fault streams, so a dumped trace replays faulted runs exactly.
+pub fn run_trace(mut cfg: RunConfig, trace: &Trace) -> ScenarioReport {
+    if let Some(res) = &trace.resilience {
+        cfg.serve.resilience = res.clone();
+    }
     let arrivals: Vec<StreamArrival> = trace.requests.iter().map(trace_req_arrival).collect();
     drive_report(
         cfg,
         &trace.scenario,
         &trace.classes,
         arrivals.into_iter(),
+        trace.seed,
+        &trace.faults,
         TtftAgg::Exact {
             per_class: vec![Vec::new(); trace.classes.len()],
         },
@@ -947,7 +1225,10 @@ pub fn run_scenario(cfg: RunConfig, scenario: &Scenario, seed: u64) -> ScenarioR
 /// samples — per class for the class rows, across *all* classes for
 /// the pooled row — and stays within
 /// [`QuantileSketch::relative_error_bound`] beyond.
-pub fn run_stream(cfg: RunConfig, scenario: &Scenario, seed: u64) -> ScenarioReport {
+pub fn run_stream(mut cfg: RunConfig, scenario: &Scenario, seed: u64) -> ScenarioReport {
+    if let Some(res) = &scenario.resilience {
+        cfg.serve.resilience = res.clone();
+    }
     let classes: Vec<TraceClass> = scenario
         .classes
         .iter()
@@ -957,12 +1238,16 @@ pub fn run_stream(cfg: RunConfig, scenario: &Scenario, seed: u64) -> ScenarioRep
         })
         .collect();
     let n = classes.len();
+    // Mask like `generate` so the retry/fault streams match `run_trace`.
+    let seed = seed & TRACE_SEED_MASK;
     let arrivals = scenario.stream(seed).map(|r| trace_req_arrival(&r));
     drive_report(
         cfg,
         &scenario.name,
         &classes,
         arrivals,
+        seed,
+        &scenario.faults,
         TtftAgg::Sketch {
             per_class: (0..n).map(|_| QuantileSketch::new()).collect(),
             pooled: QuantileSketch::new(),
@@ -990,6 +1275,8 @@ mod tests {
                 slo_ttft_s: 30.0,
                 shared_prompt: false,
             }],
+            resilience: None,
+            faults: vec![],
         }
     }
 
@@ -1283,6 +1570,8 @@ mod tests {
                 slo_ttft_s: 1.0,
             }],
             requests: Vec::new(),
+            resilience: None,
+            faults: Vec::new(),
         };
         let cfg = RunConfig::new(
             crate::config::SystemSpec::h100(),

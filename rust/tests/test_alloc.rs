@@ -25,7 +25,16 @@ fn steady_state_engine_stepping_allocates_nothing() {
     // pure engine/worker/device stepping. After warmup, the step path
     // (scheduler slab walk, pooled plan, shm ring gates, shared launch
     // and completion callbacks, collective churn) must not allocate.
-    let mut sim = ServingSim::with_options(cfg(2, 8), EngineCosts::default(), false);
+    // Resilience armed but non-firing: the admission gate, shed
+    // estimator, and deadline watchdog all run every scheduling pass yet
+    // never trip (queue depth 4 ≪ 10k; 50× SLO budgets dwarf the
+    // window). Their bookkeeping must ride the same zero-alloc path.
+    let mut config = cfg(2, 8);
+    config.serve.resilience.admission_max_queue = 10_000;
+    config.serve.resilience.shed_slo_factor = 50.0;
+    config.serve.resilience.watchdog_slo_factor = 50.0;
+    config.serve.resilience.retry_max_attempts = 3;
+    let mut sim = ServingSim::with_options(config, EngineCosts::default(), false);
     for i in 0..4u64 {
         // (512 + 100k) tokens ≈ 6.3k KV pages each — all four fit; the
         // 100k-token outputs keep them decoding far past the window.

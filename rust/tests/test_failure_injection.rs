@@ -2,7 +2,7 @@
 //! degenerate configs — the system must degrade predictably, not wedge.
 
 use cpuslow::config::{ModelSpec, RunConfig, ServeConfig, SystemSpec};
-use cpuslow::engine::{ReqClass, ServingSim};
+use cpuslow::engine::{OutcomeStatus, ReqClass, ServingSim};
 
 fn base_cfg(cores: usize) -> RunConfig {
     RunConfig::new(SystemSpec::h100(), ModelSpec::llama31_8b(), 4, cores)
@@ -31,6 +31,10 @@ fn kv_exhaustion_queues_rather_than_crashing() {
 
 #[test]
 fn request_too_large_for_kv_starves_but_system_survives() {
+    // A request whose prompt exceeds *total* KV capacity can never be
+    // admitted. Admission control detects the permanent condition and
+    // rejects it instead of letting FCFS head-of-line blocking wedge the
+    // queue forever — the small request behind it must still complete.
     let mut cfg = base_cfg(16);
     cfg.serve.kv_pages_per_gpu = 100; // 1600 tokens total
     cfg.serve.prefix_caching = false;
@@ -39,11 +43,14 @@ fn request_too_large_for_kv_starves_but_system_survives() {
     let small = sim.submit_at(1_000_000, ReqClass::Normal, 500, 4);
     sim.run_secs(120.0);
     let o_huge = sim.outcome(huge).unwrap();
+    assert_eq!(o_huge.status, OutcomeStatus::Rejected, "never-fit is rejected");
     assert!(o_huge.ttft_ns.is_none(), "oversized request cannot start");
-    // FCFS head-of-line blocking: the small request is stuck behind it —
-    // the pathological-but-correct vLLM behavior.
     let o_small = sim.outcome(small).unwrap();
-    assert!(o_small.tokenize_latency_ns.is_some(), "still tokenized");
+    assert!(
+        o_small.e2e_ns.is_some(),
+        "small request behind a rejected never-fit must complete"
+    );
+    assert_eq!(o_small.status, OutcomeStatus::Completed);
 }
 
 #[test]

@@ -35,6 +35,8 @@ fn single_class_scenario(
             slo_ttft_s,
             shared_prompt,
         }],
+        resilience: None,
+        faults: vec![],
     }
 }
 
