@@ -6,7 +6,7 @@
 //! bench-check` gates the `per_sec` fields against
 //! `BENCH_serve.baseline.json`.
 
-use cpuslow::config::{ModelSpec, RunConfig, SystemSpec};
+use cpuslow::config::{ModelSpec, RouterPolicy, RunConfig, SystemSpec};
 use cpuslow::testkit::alloc::{self, CountingAlloc};
 use cpuslow::util::bench::{bench_n, black_box, BenchSuite};
 use cpuslow::workload::scenario::{run_stream, Scenario};
@@ -19,19 +19,26 @@ fn cfg() -> RunConfig {
 }
 
 /// Bench one scenario cell end to end through the streaming driver.
-fn cell(suite: &mut BenchSuite, name: &str, rate_scale: f64, duration_s: f64, label: &str) {
+fn cell(
+    suite: &mut BenchSuite,
+    config: &RunConfig,
+    name: &str,
+    rate_scale: f64,
+    duration_s: f64,
+    label: &str,
+) {
     const RUNS: u64 = 3;
     let scenario = Scenario::by_name(name)
         .unwrap()
         .scaled(rate_scale)
         .with_duration(duration_s);
     // One priming run pins the deterministic request count.
-    let issued = run_stream(cfg(), &scenario, 0).issued;
+    let issued = run_stream(config.clone(), &scenario, 0).issued;
     alloc::reset_peak_live();
     let live_floor = alloc::live_bytes();
     let before = alloc::counters();
     let r = bench_n(label, RUNS as usize, || {
-        black_box(run_stream(cfg(), &scenario, 0).issued);
+        black_box(run_stream(config.clone(), &scenario, 0).issued);
     });
     let after = alloc::counters();
     r.report();
@@ -52,20 +59,32 @@ fn main() {
     println!("== serving engine benches ==");
     let mut suite = BenchSuite::new("serve");
 
+    let base = cfg();
+
     // Small cells: catalog defaults compressed into an 8 s window.
-    cell(&mut suite, "steady", 1.0, 8.0, "steady 8s (small)");
-    cell(&mut suite, "bursty", 1.0, 8.0, "bursty 8s (small)");
-    cell(&mut suite, "heavy-tail", 1.0, 8.0, "heavy-tail 8s (small)");
+    cell(&mut suite, &base, "steady", 1.0, 8.0, "steady 8s (small)");
+    cell(&mut suite, &base, "bursty", 1.0, 8.0, "bursty 8s (small)");
+    cell(&mut suite, &base, "heavy-tail", 1.0, 8.0, "heavy-tail 8s (small)");
 
     // Resilience cell: flash-crowd arms admission control, shedding,
     // the deadline watchdog, and client-side retry — the full
     // resilience layer on the hot path, including never-fit rejections.
-    cell(&mut suite, "flash-crowd", 1.0, 8.0, "flash-crowd 8s (resilience)");
+    cell(&mut suite, &base, "flash-crowd", 1.0, 8.0, "flash-crowd 8s (resilience)");
+
+    // Fleet cell: the steady workload spread across four replicas
+    // behind the least-loaded router, health probes and failure-aware
+    // transitions armed — routing/probe overhead on a healthy fleet
+    // under steady load, no faults firing.
+    let mut fleet = cfg();
+    fleet.serve.fleet.replicas = 4;
+    fleet.serve.fleet.router = RouterPolicy::LeastLoaded;
+    fleet.serve.fleet.failure_aware = true;
+    cell(&mut suite, &fleet, "steady", 1.0, 8.0, "steady 8s fleet x4");
 
     // Large cells: ~10× the offered request volume, same shapes.
-    cell(&mut suite, "steady", 5.0, 16.0, "steady x5 16s (large)");
-    cell(&mut suite, "bursty", 5.0, 16.0, "bursty x5 16s (large)");
-    cell(&mut suite, "heavy-tail", 5.0, 16.0, "heavy-tail x5 16s (large)");
+    cell(&mut suite, &base, "steady", 5.0, 16.0, "steady x5 16s (large)");
+    cell(&mut suite, &base, "bursty", 5.0, 16.0, "bursty x5 16s (large)");
+    cell(&mut suite, &base, "heavy-tail", 5.0, 16.0, "heavy-tail x5 16s (large)");
 
     match suite.write(".") {
         Ok(path) => println!("bench data → {}", path.display()),

@@ -10,7 +10,9 @@ pub mod system;
 pub mod toml;
 
 pub use model::ModelSpec;
-pub use serve::{ResilienceConfig, ServeConfig, WorkloadConfig, MAX_RETRY_ATTEMPTS};
+pub use serve::{
+    FleetConfig, ResilienceConfig, RouterPolicy, ServeConfig, WorkloadConfig, MAX_RETRY_ATTEMPTS,
+};
 pub use system::{Interconnect, SystemSpec};
 
 use anyhow::{bail, Result};
@@ -118,6 +120,12 @@ impl RunConfig {
     /// retry_max_attempts = 3      # 1 = no retry
     /// retry_base_s = 0.5
     /// retry_cap_s = 4.0
+    /// [fleet]
+    /// replicas = 4                # 1 = fleet layer off
+    /// router = "least-loaded"     # round-robin | least-loaded | prefix-affinity
+    /// failure_aware = true
+    /// hedge_delay_s = 0.0         # 0 = hedging off
+    /// autoscale = false
     /// ```
     pub fn from_toml_str(text: &str) -> Result<RunConfig> {
         let doc = toml::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
@@ -160,6 +168,32 @@ impl RunConfig {
             doc.int_or("resilience", "retry_max_attempts", r.retry_max_attempts as i64) as u32;
         r.retry_base_s = doc.float_or("resilience", "retry_base_s", r.retry_base_s);
         r.retry_cap_s = doc.float_or("resilience", "retry_cap_s", r.retry_cap_s);
+        let fl = &mut s.fleet;
+        fl.replicas = doc.int_or("fleet", "replicas", fl.replicas as i64) as usize;
+        let router_name = doc.str_or("fleet", "router", fl.router.name());
+        fl.router = serve::RouterPolicy::by_name(&router_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown fleet router '{router_name}'"))?;
+        fl.failure_aware = doc.bool_or("fleet", "failure_aware", fl.failure_aware);
+        fl.hedge_delay_s = doc.float_or("fleet", "hedge_delay_s", fl.hedge_delay_s);
+        fl.failover_max_attempts =
+            doc.int_or("fleet", "failover_max_attempts", fl.failover_max_attempts as i64) as u32;
+        fl.probe_interval_s = doc.float_or("fleet", "probe_interval_s", fl.probe_interval_s);
+        fl.probe_idle_bad_share =
+            doc.float_or("fleet", "probe_idle_bad_share", fl.probe_idle_bad_share);
+        fl.probe_shed_bad = doc.int_or("fleet", "probe_shed_bad", fl.probe_shed_bad as i64) as u32;
+        fl.down_after = doc.int_or("fleet", "down_after", fl.down_after as i64) as u32;
+        fl.recover_after = doc.int_or("fleet", "recover_after", fl.recover_after as i64) as u32;
+        fl.drain_ramp_windows =
+            doc.int_or("fleet", "drain_ramp_windows", fl.drain_ramp_windows as i64) as u32;
+        fl.autoscale = doc.bool_or("fleet", "autoscale", fl.autoscale);
+        fl.min_cores_per_replica =
+            doc.int_or("fleet", "min_cores_per_replica", fl.min_cores_per_replica as i64) as usize;
+        fl.max_cores_per_replica =
+            doc.int_or("fleet", "max_cores_per_replica", fl.max_cores_per_replica as i64) as usize;
+        fl.autoscale_idle_lo = doc.float_or("fleet", "autoscale_idle_lo", fl.autoscale_idle_lo);
+        fl.autoscale_idle_hi = doc.float_or("fleet", "autoscale_idle_hi", fl.autoscale_idle_hi);
+        fl.autoscale_every =
+            doc.int_or("fleet", "autoscale_every", fl.autoscale_every as i64) as u32;
         let w = &mut cfg.workload;
         w.scenario = doc.str_or("workload", "scenario", "");
         w.rate_scale = doc.float_or("workload", "rate_scale", w.rate_scale);
@@ -285,6 +319,29 @@ control_plane_weight = 4
         // invalid values are rejected at validate time
         assert!(RunConfig::from_toml_str("[resilience]\nretry_max_attempts = 0\n").is_err());
         assert!(RunConfig::from_toml_str("[resilience]\nretry_max_attempts = 99\n").is_err());
+    }
+
+    #[test]
+    fn toml_fleet_section() {
+        let cfg = RunConfig::from_toml_str(
+            "[fleet]\nreplicas = 4\nrouter = \"least-loaded\"\nfailure_aware = true\n\
+             hedge_delay_s = 0.5\nautoscale = true\nmax_cores_per_replica = 8\n",
+        )
+        .unwrap();
+        let f = &cfg.serve.fleet;
+        assert_eq!(f.replicas, 4);
+        assert_eq!(f.router, RouterPolicy::LeastLoaded);
+        assert!(f.failure_aware);
+        assert_eq!(f.hedge_delay_s, 0.5);
+        assert!(f.autoscale);
+        assert_eq!(f.max_cores_per_replica, 8);
+        assert!(f.enabled());
+        // absent section keeps the single-replica default
+        let cfg = RunConfig::from_toml_str("[run]\ngpus = 4\n").unwrap();
+        assert_eq!(cfg.serve.fleet, FleetConfig::default());
+        // invalid values are rejected
+        assert!(RunConfig::from_toml_str("[fleet]\nrouter = \"random\"\n").is_err());
+        assert!(RunConfig::from_toml_str("[fleet]\nreplicas = 0\n").is_err());
     }
 
     #[test]

@@ -128,6 +128,181 @@ impl ResilienceConfig {
     }
 }
 
+/// Fleet router policy: how the router picks a replica for each
+/// arrival. Every policy is a pure function of (request identity,
+/// router state at the decision window) — never completion order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RouterPolicy {
+    /// Rotate through eligible replicas in index order.
+    #[default]
+    RoundRobin,
+    /// Pick the eligible replica with the fewest outstanding prompt
+    /// tokens (router-side count; ties break to the lowest index).
+    LeastLoaded,
+    /// Rendezvous-hash the prompt's content seed over the eligible
+    /// replicas, so repeated prompts land on the replica that holds
+    /// their warm prefix-cache blocks.
+    PrefixAffinity,
+}
+
+impl RouterPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RouterPolicy::RoundRobin => "round-robin",
+            RouterPolicy::LeastLoaded => "least-loaded",
+            RouterPolicy::PrefixAffinity => "prefix-affinity",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<RouterPolicy> {
+        match name {
+            "round-robin" => Some(RouterPolicy::RoundRobin),
+            "least-loaded" => Some(RouterPolicy::LeastLoaded),
+            "prefix-affinity" => Some(RouterPolicy::PrefixAffinity),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [RouterPolicy; 3] {
+        [
+            RouterPolicy::RoundRobin,
+            RouterPolicy::LeastLoaded,
+            RouterPolicy::PrefixAffinity,
+        ]
+    }
+}
+
+/// Replicated-serving (fleet) knobs: replica count, router policy,
+/// health probing, failover, hedging, and the reactive core autoscaler.
+/// The default (`replicas = 1`) disables the whole layer, so existing
+/// single-engine runs stay byte-identical.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetConfig {
+    /// Data-parallel serving replicas behind the router. 1 = no fleet
+    /// (plain `ServingSim`); each replica gets its own engine, GPU set,
+    /// and tokenizer pool on the shared CPU substrate.
+    pub replicas: usize,
+    /// Replica-selection policy for new arrivals.
+    pub router: RouterPolicy,
+    /// Route around unhealthy replicas and re-dispatch requests that
+    /// failed on them (their failures count as retries on the logical
+    /// request). Off = the router keeps dispatching blindly.
+    pub failure_aware: bool,
+    /// Hedge delay (seconds): a request with no terminal outcome this
+    /// long after dispatch is duplicated to a second replica; first
+    /// completion wins and the loser is cancelled. 0 = hedging off.
+    pub hedge_delay_s: f64,
+    /// Max dispatch attempts per logical request across replicas
+    /// (initial dispatch + failovers).
+    pub failover_max_attempts: u32,
+    /// Health-probe window (seconds): per window the router scores each
+    /// replica's step progress, GPU idle share, and shed count.
+    pub probe_interval_s: f64,
+    /// A probe window is "bad" if the replica's windowed GPU idle share
+    /// is at or above this while work is in flight.
+    pub probe_idle_bad_share: f64,
+    /// ... or if it shed at least this many requests in the window.
+    pub probe_shed_bad: u32,
+    /// Consecutive bad windows before a Degraded replica goes Down.
+    pub down_after: u32,
+    /// Consecutive good windows before a Down replica begins recovery.
+    pub recover_after: u32,
+    /// Recovery ramp length (windows): a recovering replica admits a
+    /// deterministically-hashed fraction of arrivals that rises to full
+    /// over this many windows (graceful drain in reverse).
+    pub drain_ramp_windows: u32,
+    /// Reactive core autoscaler: grow/shrink each replica's core
+    /// allocation from its windowed GPU idle share.
+    pub autoscale: bool,
+    /// Autoscaler floor (cores per replica).
+    pub min_cores_per_replica: usize,
+    /// Autoscaler ceiling (cores per replica); 0 = the run's
+    /// `cpu_cores` (no headroom beyond the static allocation).
+    pub max_cores_per_replica: usize,
+    /// Idle-share band: below `lo` the replica is CPU-rich (revoke a
+    /// core), above `hi` it is CPU-starved (grant one).
+    pub autoscale_idle_lo: f64,
+    pub autoscale_idle_hi: f64,
+    /// Autoscaler cadence: act every this many probe windows.
+    pub autoscale_every: u32,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        Self {
+            replicas: 1,
+            router: RouterPolicy::RoundRobin,
+            failure_aware: false,
+            hedge_delay_s: 0.0,
+            failover_max_attempts: 4,
+            probe_interval_s: 0.25,
+            probe_idle_bad_share: 0.95,
+            probe_shed_bad: 3,
+            down_after: 2,
+            recover_after: 4,
+            drain_ramp_windows: 4,
+            autoscale: false,
+            min_cores_per_replica: 2,
+            max_cores_per_replica: 0,
+            autoscale_idle_lo: 0.15,
+            autoscale_idle_hi: 0.60,
+            autoscale_every: 2,
+        }
+    }
+}
+
+impl FleetConfig {
+    /// Is the fleet layer on (more than one replica)?
+    pub fn enabled(&self) -> bool {
+        self.replicas > 1
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.replicas == 0 {
+            bail!("fleet.replicas must be ≥ 1");
+        }
+        if self.replicas > 64 {
+            bail!("fleet.replicas must be ≤ 64");
+        }
+        if !(self.hedge_delay_s >= 0.0 && self.hedge_delay_s.is_finite()) {
+            bail!("fleet.hedge_delay_s must be ≥ 0 and finite");
+        }
+        if self.failover_max_attempts == 0 {
+            bail!("fleet.failover_max_attempts must be ≥ 1");
+        }
+        if !(self.probe_interval_s > 0.0 && self.probe_interval_s.is_finite()) {
+            bail!("fleet.probe_interval_s must be positive and finite");
+        }
+        if !(0.0..=1.0).contains(&self.probe_idle_bad_share) {
+            bail!("fleet.probe_idle_bad_share must be in [0,1]");
+        }
+        if self.down_after == 0 || self.recover_after == 0 {
+            bail!("fleet.down_after and fleet.recover_after must be ≥ 1");
+        }
+        if self.drain_ramp_windows == 0 {
+            bail!("fleet.drain_ramp_windows must be ≥ 1");
+        }
+        if self.min_cores_per_replica == 0 {
+            bail!("fleet.min_cores_per_replica must be ≥ 1");
+        }
+        if self.max_cores_per_replica != 0
+            && self.max_cores_per_replica < self.min_cores_per_replica
+        {
+            bail!("fleet.max_cores_per_replica must be 0 (auto) or ≥ min_cores_per_replica");
+        }
+        if !(0.0..=1.0).contains(&self.autoscale_idle_lo)
+            || !(0.0..=1.0).contains(&self.autoscale_idle_hi)
+            || self.autoscale_idle_lo >= self.autoscale_idle_hi
+        {
+            bail!("fleet.autoscale_idle band must satisfy 0 ≤ lo < hi ≤ 1");
+        }
+        if self.autoscale_every == 0 {
+            bail!("fleet.autoscale_every must be ≥ 1");
+        }
+        Ok(())
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
     /// Max requests resident in a decode batch (continuous batching cap).
@@ -169,6 +344,9 @@ pub struct ServeConfig {
     /// Resilience layer: admission control, shedding, watchdog, retry.
     /// All gates default off (legacy behavior).
     pub resilience: ResilienceConfig,
+    /// Fleet layer: replicated serving behind a deterministic router.
+    /// Defaults to one replica (layer off).
+    pub fleet: FleetConfig,
 }
 
 impl Default for ServeConfig {
@@ -186,6 +364,7 @@ impl Default for ServeConfig {
             max_output_tokens: 32,
             control_plane_weight: 1,
             resilience: ResilienceConfig::default(),
+            fleet: FleetConfig::default(),
         }
     }
 }
@@ -211,6 +390,7 @@ impl ServeConfig {
             bail!("control_plane_weight must be ≥ 1");
         }
         self.resilience.validate()?;
+        self.fleet.validate()?;
         Ok(())
     }
 
@@ -301,6 +481,60 @@ mod tests {
                 retry_max_attempts: 0,
                 ..Default::default()
             },
+            ..Default::default()
+        };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn fleet_defaults_off_and_valid() {
+        let f = FleetConfig::default();
+        f.validate().unwrap();
+        assert!(!f.enabled());
+        assert_eq!(f.router, RouterPolicy::RoundRobin);
+    }
+
+    #[test]
+    fn fleet_rejects_bad_values() {
+        for f in [
+            FleetConfig { replicas: 0, ..Default::default() },
+            FleetConfig { replicas: 65, ..Default::default() },
+            FleetConfig { hedge_delay_s: -1.0, ..Default::default() },
+            FleetConfig { failover_max_attempts: 0, ..Default::default() },
+            FleetConfig { probe_interval_s: 0.0, ..Default::default() },
+            FleetConfig { probe_idle_bad_share: 1.5, ..Default::default() },
+            FleetConfig { down_after: 0, ..Default::default() },
+            FleetConfig { recover_after: 0, ..Default::default() },
+            FleetConfig { drain_ramp_windows: 0, ..Default::default() },
+            FleetConfig { min_cores_per_replica: 0, ..Default::default() },
+            FleetConfig {
+                min_cores_per_replica: 8,
+                max_cores_per_replica: 4,
+                ..Default::default()
+            },
+            FleetConfig {
+                autoscale_idle_lo: 0.7,
+                autoscale_idle_hi: 0.6,
+                ..Default::default()
+            },
+            FleetConfig { autoscale_every: 0, ..Default::default() },
+        ] {
+            assert!(f.validate().is_err(), "{f:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn router_policy_names_roundtrip() {
+        for p in RouterPolicy::all() {
+            assert_eq!(RouterPolicy::by_name(p.name()), Some(p));
+        }
+        assert_eq!(RouterPolicy::by_name("random"), None);
+    }
+
+    #[test]
+    fn serve_validate_covers_fleet() {
+        let cfg = ServeConfig {
+            fleet: FleetConfig { replicas: 0, ..Default::default() },
             ..Default::default()
         };
         assert!(cfg.validate().is_err());

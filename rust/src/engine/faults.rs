@@ -10,6 +10,14 @@
 //! runs stay byte-identical across `--jobs` and replayable from a
 //! dumped trace + seed (the same discipline as
 //! `scenario::class_streams`).
+//!
+//! Every spec carries an optional *replica scope*: `replica: None`
+//! applies fleet-wide (and to the single engine of a non-fleet run),
+//! `replica: Some(r)` applies only to replica `r`. A replica-scoped
+//! [`FaultSpec::CoreLoss`] compiles into an *engine-stall window* in
+//! that replica's plan — the replica's EngineCore sleeps through the
+//! window, modeling the replica process losing its cores — while an
+//! unscoped core loss still spawns fleet-wide [`CoreHog`] tasks.
 
 use crate::simcpu::{Op, Program, TaskCtx};
 use crate::util::json::Json;
@@ -28,14 +36,22 @@ pub enum FaultSpec {
         end_s: f64,
         prob: f64,
         stall_ns: u64,
+        /// Fleet scope: `None` = every replica, `Some(r)` = replica `r`.
+        replica: Option<usize>,
     },
-    /// Transient core loss: `cores` CPU-hogging tasks occupy the run
-    /// queue for the window, then exit (replica failure / co-located
-    /// job burst). Recovery is implicit at `end_s`.
+    /// Transient core loss. Unscoped (`replica: None`): `cores`
+    /// CPU-hogging tasks occupy the run queue for the window, then exit
+    /// (co-located job burst). Scoped (`replica: Some(r)`): replica
+    /// `r`'s engine loop is descheduled for the whole window — the
+    /// replica-failure fault a fleet routes around. Recovery is
+    /// implicit at `end_s`.
     CoreLoss {
         start_s: f64,
         end_s: f64,
         cores: usize,
+        /// Fleet scope: `None` = shared-substrate hogs, `Some(r)` =
+        /// stall replica `r`'s engine.
+        replica: Option<usize>,
     },
     /// Kernel-launch latency spike: within the window, each per-step
     /// launch submission independently costs `spike_ns` extra CPU time
@@ -45,23 +61,49 @@ pub enum FaultSpec {
         end_s: f64,
         prob: f64,
         spike_ns: u64,
+        /// Fleet scope: `None` = every replica, `Some(r)` = replica `r`.
+        replica: Option<usize>,
     },
 }
 
 impl FaultSpec {
+    /// The spec's replica scope (`None` = applies everywhere).
+    pub fn replica(&self) -> Option<usize> {
+        match *self {
+            FaultSpec::TokenizerStall { replica, .. }
+            | FaultSpec::CoreLoss { replica, .. }
+            | FaultSpec::LaunchSpike { replica, .. } => replica,
+        }
+    }
+
+    /// Does this spec apply to replica `r` of a fleet (or the single
+    /// engine of a non-fleet run, which is replica 0)?
+    pub fn applies_to(&self, r: usize) -> bool {
+        self.replica().map_or(true, |scope| scope == r)
+    }
+
+    fn scope_label(&self) -> String {
+        match self.replica() {
+            Some(r) => format!(" @replica{r}"),
+            None => String::new(),
+        }
+    }
+
     /// Short human label for catalog listings.
     pub fn label(&self) -> String {
         match self {
-            FaultSpec::TokenizerStall { start_s, end_s, prob, stall_ns } => format!(
-                "tok-stall {start_s}-{end_s}s p={prob} +{:.0}ms",
-                *stall_ns as f64 / 1e6
+            FaultSpec::TokenizerStall { start_s, end_s, prob, stall_ns, .. } => format!(
+                "tok-stall {start_s}-{end_s}s p={prob} +{:.0}ms{}",
+                *stall_ns as f64 / 1e6,
+                self.scope_label()
             ),
-            FaultSpec::CoreLoss { start_s, end_s, cores } => {
-                format!("core-loss {start_s}-{end_s}s -{cores} cores")
+            FaultSpec::CoreLoss { start_s, end_s, cores, .. } => {
+                format!("core-loss {start_s}-{end_s}s -{cores} cores{}", self.scope_label())
             }
-            FaultSpec::LaunchSpike { start_s, end_s, prob, spike_ns } => format!(
-                "launch-spike {start_s}-{end_s}s p={prob} +{:.0}us",
-                *spike_ns as f64 / 1e3
+            FaultSpec::LaunchSpike { start_s, end_s, prob, spike_ns, .. } => format!(
+                "launch-spike {start_s}-{end_s}s p={prob} +{:.0}us{}",
+                *spike_ns as f64 / 1e3,
+                self.scope_label()
             ),
         }
     }
@@ -69,26 +111,30 @@ impl FaultSpec {
     pub fn to_json(&self) -> Json {
         let mut j = Json::obj();
         match self {
-            FaultSpec::TokenizerStall { start_s, end_s, prob, stall_ns } => {
+            FaultSpec::TokenizerStall { start_s, end_s, prob, stall_ns, .. } => {
                 j.set("kind", "tokenizer_stall")
                     .set("start_s", *start_s)
                     .set("end_s", *end_s)
                     .set("prob", *prob)
                     .set("stall_ns", *stall_ns);
             }
-            FaultSpec::CoreLoss { start_s, end_s, cores } => {
+            FaultSpec::CoreLoss { start_s, end_s, cores, .. } => {
                 j.set("kind", "core_loss")
                     .set("start_s", *start_s)
                     .set("end_s", *end_s)
                     .set("cores", *cores);
             }
-            FaultSpec::LaunchSpike { start_s, end_s, prob, spike_ns } => {
+            FaultSpec::LaunchSpike { start_s, end_s, prob, spike_ns, .. } => {
                 j.set("kind", "launch_spike")
                     .set("start_s", *start_s)
                     .set("end_s", *end_s)
                     .set("prob", *prob)
                     .set("spike_ns", *spike_ns);
             }
+        }
+        // Omit-when-unscoped keeps pre-fleet trace dumps byte-stable.
+        if let Some(r) = self.replica() {
+            j.set("replica", r);
         }
         j
     }
@@ -98,23 +144,27 @@ impl FaultSpec {
         let f = |k: &str| v.get(k).and_then(|x| x.as_f64());
         let start_s = f("start_s")?;
         let end_s = f("end_s")?;
+        let replica = f("replica").map(|x| x as usize);
         match kind {
             "tokenizer_stall" => Some(FaultSpec::TokenizerStall {
                 start_s,
                 end_s,
                 prob: f("prob")?,
                 stall_ns: f("stall_ns")? as u64,
+                replica,
             }),
             "core_loss" => Some(FaultSpec::CoreLoss {
                 start_s,
                 end_s,
                 cores: f("cores")? as usize,
+                replica,
             }),
             "launch_spike" => Some(FaultSpec::LaunchSpike {
                 start_s,
                 end_s,
                 prob: f("prob")?,
                 spike_ns: f("spike_ns")? as u64,
+                replica,
             }),
             _ => None,
         }
@@ -142,22 +192,34 @@ const TOK_SALT: u64 = 0xF417_70CC_0001_A001;
 const LAUNCH_SALT: u64 = 0xF417_70CC_0002_B002;
 
 /// Compiled fault schedule the engine consults at event time. Built
-/// once per run from `(run seed, &[FaultSpec])`; empty by default.
-/// Core-loss windows are not kept here — they become spawned
-/// [`CoreHog`] tasks at install time.
+/// once per run from `(run seed, &[FaultSpec], replica index)`; empty
+/// by default. *Unscoped* core-loss windows are not kept here — they
+/// become spawned [`CoreHog`] tasks at install time; *replica-scoped*
+/// core losses compile into engine-stall windows instead.
 #[derive(Debug, Clone, Default)]
 pub struct FaultPlan {
     seed: u64,
     tokenizer: Vec<Window>,
     launch: Vec<Window>,
+    stall: Vec<Window>,
 }
 
 impl FaultPlan {
+    /// Single-engine compilation: the lone engine is replica 0.
     pub fn new(seed: u64, specs: &[FaultSpec]) -> FaultPlan {
+        FaultPlan::new_for_replica(seed, specs, 0)
+    }
+
+    /// Compile the specs that apply to replica `replica`. Specs scoped
+    /// to other replicas are dropped; unscoped specs always apply.
+    pub fn new_for_replica(seed: u64, specs: &[FaultSpec], replica: usize) -> FaultPlan {
         let mut plan = FaultPlan { seed, ..Default::default() };
         for spec in specs {
+            if !spec.applies_to(replica) {
+                continue;
+            }
             match *spec {
-                FaultSpec::TokenizerStall { start_s, end_s, prob, stall_ns } => {
+                FaultSpec::TokenizerStall { start_s, end_s, prob, stall_ns, .. } => {
                     plan.tokenizer.push(Window {
                         start_ns: (start_s.max(0.0) * 1e9) as u64,
                         end_ns: (end_s.max(0.0) * 1e9) as u64,
@@ -165,7 +227,7 @@ impl FaultPlan {
                         extra_ns: stall_ns,
                     });
                 }
-                FaultSpec::LaunchSpike { start_s, end_s, prob, spike_ns } => {
+                FaultSpec::LaunchSpike { start_s, end_s, prob, spike_ns, .. } => {
                     plan.launch.push(Window {
                         start_ns: (start_s.max(0.0) * 1e9) as u64,
                         end_ns: (end_s.max(0.0) * 1e9) as u64,
@@ -173,14 +235,37 @@ impl FaultPlan {
                         extra_ns: spike_ns,
                     });
                 }
-                FaultSpec::CoreLoss { .. } => {}
+                // A core loss scoped to *this* replica stalls its
+                // engine loop; unscoped core losses become shared
+                // CoreHog tasks at install time, not plan windows.
+                FaultSpec::CoreLoss { start_s, end_s, replica: Some(_), .. } => {
+                    plan.stall.push(Window {
+                        start_ns: (start_s.max(0.0) * 1e9) as u64,
+                        end_ns: (end_s.max(0.0) * 1e9) as u64,
+                        prob: 1.0,
+                        extra_ns: 0,
+                    });
+                }
+                FaultSpec::CoreLoss { replica: None, .. } => {}
             }
         }
         plan
     }
 
     pub fn is_empty(&self) -> bool {
-        self.tokenizer.is_empty() && self.launch.is_empty()
+        self.tokenizer.is_empty() && self.launch.is_empty() && self.stall.is_empty()
+    }
+
+    /// If an engine-stall window is open at `now_ns`, the virtual time
+    /// the engine loop must sleep until (the latest active window end).
+    pub fn engine_stall_until(&self, now_ns: u64) -> Option<u64> {
+        let mut until = None;
+        for w in &self.stall {
+            if w.active(now_ns) {
+                until = Some(until.map_or(w.end_ns, |u: u64| u.max(w.end_ns)));
+            }
+        }
+        until
     }
 
     /// Pure hash draw: does window `idx` (salted into `stream`) fire
@@ -228,10 +313,11 @@ impl FaultPlan {
     }
 }
 
-/// A CPU-hogging task realizing one core of a [`FaultSpec::CoreLoss`]
-/// window: sleeps until the window opens, burns CPU in 1 ms compute
-/// slices (so the CFS-style scheduler keeps it preemptible and fair),
-/// and exits when the window closes — implicit recovery.
+/// A CPU-hogging task realizing one core of an *unscoped*
+/// [`FaultSpec::CoreLoss`] window: sleeps until the window opens, burns
+/// CPU in 1 ms compute slices (so the CFS-style scheduler keeps it
+/// preemptible and fair), and exits when the window closes — implicit
+/// recovery.
 pub struct CoreHog {
     start_ns: u64,
     end_ns: u64,
@@ -266,6 +352,7 @@ mod tests {
             end_s: 2.0,
             prob: 0.5,
             stall_ns: 7_000,
+            replica: None,
         }
     }
 
@@ -273,12 +360,14 @@ mod tests {
     fn spec_json_roundtrip() {
         let specs = [
             stall_spec(),
-            FaultSpec::CoreLoss { start_s: 3.0, end_s: 9.0, cores: 4 },
+            FaultSpec::CoreLoss { start_s: 3.0, end_s: 9.0, cores: 4, replica: None },
+            FaultSpec::CoreLoss { start_s: 3.0, end_s: 9.0, cores: 4, replica: Some(0) },
             FaultSpec::LaunchSpike {
                 start_s: 0.5,
                 end_s: 4.5,
                 prob: 0.25,
                 spike_ns: 50_000,
+                replica: Some(2),
             },
         ];
         for s in &specs {
@@ -286,6 +375,9 @@ mod tests {
             assert_eq!(&back, s);
             assert!(!s.label().is_empty());
         }
+        // Unscoped dumps omit the replica key (pre-fleet byte stability).
+        assert!(specs[0].to_json().get("replica").is_none());
+        assert!(specs[2].to_json().get("replica").is_some());
         let mut unknown = Json::obj();
         unknown.set("kind", "gremlin");
         assert!(FaultSpec::from_json(&unknown).is_none());
@@ -311,11 +403,23 @@ mod tests {
     fn probability_extremes() {
         let always = FaultPlan::new(
             7,
-            &[FaultSpec::LaunchSpike { start_s: 0.0, end_s: 10.0, prob: 1.0, spike_ns: 11 }],
+            &[FaultSpec::LaunchSpike {
+                start_s: 0.0,
+                end_s: 10.0,
+                prob: 1.0,
+                spike_ns: 11,
+                replica: None,
+            }],
         );
         let never = FaultPlan::new(
             7,
-            &[FaultSpec::LaunchSpike { start_s: 0.0, end_s: 10.0, prob: 0.0, spike_ns: 11 }],
+            &[FaultSpec::LaunchSpike {
+                start_s: 0.0,
+                end_s: 10.0,
+                prob: 0.0,
+                spike_ns: 11,
+                replica: None,
+            }],
         );
         for step in 0..128u64 {
             assert_eq!(always.launch_spike_ns(1, step, 0), 11);
@@ -348,9 +452,47 @@ mod tests {
         assert!(plan.is_empty());
         assert_eq!(plan.tokenizer_stall_ns(0, 0, 0), 0);
         assert_eq!(plan.launch_spike_ns(0, 0, 0), 0);
-        // CoreLoss-only specs compile to an empty plan (hogs are spawned
-        // separately at install time).
-        let plan = FaultPlan::new(9, &[FaultSpec::CoreLoss { start_s: 0.0, end_s: 1.0, cores: 2 }]);
+        // Unscoped CoreLoss specs compile to an empty plan (hogs are
+        // spawned separately at install time).
+        let plan = FaultPlan::new(
+            9,
+            &[FaultSpec::CoreLoss { start_s: 0.0, end_s: 1.0, cores: 2, replica: None }],
+        );
         assert!(plan.is_empty());
+        assert_eq!(plan.engine_stall_until(500_000_000), None);
+    }
+
+    #[test]
+    fn replica_scoped_core_loss_stalls_only_its_replica() {
+        let specs = [FaultSpec::CoreLoss { start_s: 1.0, end_s: 2.0, cores: 4, replica: Some(1) }];
+        let r0 = FaultPlan::new_for_replica(9, &specs, 0);
+        let r1 = FaultPlan::new_for_replica(9, &specs, 1);
+        assert!(r0.is_empty(), "replica 0 must not see replica 1's core loss");
+        assert!(!r1.is_empty());
+        assert_eq!(r1.engine_stall_until(500_000_000), None, "before the window");
+        assert_eq!(r1.engine_stall_until(1_500_000_000), Some(2_000_000_000));
+        assert_eq!(r1.engine_stall_until(2_000_000_000), None, "after the window");
+        // The single-engine path treats the lone engine as replica 0.
+        let single = FaultPlan::new(9, &specs);
+        assert!(single.is_empty());
+        let scoped0 =
+            [FaultSpec::CoreLoss { start_s: 1.0, end_s: 2.0, cores: 4, replica: Some(0) }];
+        assert_eq!(FaultPlan::new(9, &scoped0).engine_stall_until(1_200_000_000), Some(2_000_000_000));
+    }
+
+    #[test]
+    fn scoped_probabilistic_faults_filter_by_replica() {
+        let specs = [FaultSpec::TokenizerStall {
+            start_s: 1.0,
+            end_s: 2.0,
+            prob: 1.0,
+            stall_ns: 7_000,
+            replica: Some(2),
+        }];
+        assert_eq!(FaultPlan::new_for_replica(4, &specs, 0).tokenizer_stall_ns(1_500_000_000, 0, 0), 0);
+        assert_eq!(
+            FaultPlan::new_for_replica(4, &specs, 2).tokenizer_stall_ns(1_500_000_000, 0, 0),
+            7_000
+        );
     }
 }

@@ -49,7 +49,7 @@ use crate::gpu::{self, timing, FleetRef, Kernel, KernelKind};
 use crate::ipc::{SimChannel, SimShmBroadcast};
 use crate::simcpu::{GateId, Op, Program, SharedCall, Sim, SimParams, TaskCtx};
 use crate::util::rng::SplitMix64;
-use rustc_hash::FxHashMap;
+use rustc_hash::{FxHashMap, FxHashSet};
 use std::cell::{Cell, RefCell};
 use std::rc::Rc;
 
@@ -57,7 +57,7 @@ use std::rc::Rc;
 /// from the run seed — independent of each other and of the workload's
 /// `scenario::class_streams` derivations.
 const RETRY_STREAM_SALT: u64 = 0x9E7A_11ED_5EED_0001;
-const FAULT_STREAM_SALT: u64 = 0x9E7A_11ED_5EED_0002;
+pub(crate) const FAULT_STREAM_SALT: u64 = 0x9E7A_11ED_5EED_0002;
 
 /// Host-side CPU cost constants for the engine control plane.
 #[derive(Debug, Clone)]
@@ -111,28 +111,33 @@ pub struct EngineShared {
     /// drains the channel.
     pub pending: RequestSlab,
     /// Next request id (dense: both slabs index by it).
-    next_id: RequestId,
+    pub(crate) next_id: RequestId,
     /// Streaming mode: finished requests are evicted from the slab and
     /// their Outcomes parked in `outbox` for the driver to drain.
-    harvest: bool,
-    outbox: Vec<Outcome>,
+    pub(crate) harvest: bool,
+    pub(crate) outbox: Vec<Outcome>,
     /// Per-class (tag-indexed) deadlines for the shed/watchdog gates,
     /// installed by [`ServingSim::set_class_deadlines`]; tags beyond the
     /// vector fall back to `serve.timeout_s`.
-    deadlines_ns: Vec<u64>,
+    pub(crate) deadlines_ns: Vec<u64>,
     /// Seed deriving the retry-jitter stream (and, salted, the fault
     /// stream) — set from the scenario seed by the drivers.
-    run_seed: u64,
+    pub(crate) run_seed: u64,
     /// Parked retries keyed by *origin* id: a shed/aborted request whose
     /// next delivery attempt is waiting out its backoff. Drained by
     /// `fire_retry`; stragglers surface as terminal outcomes at the
     /// streaming horizon.
-    retry_tickets: FxHashMap<RequestId, RetryTicket>,
+    pub(crate) retry_tickets: FxHashMap<RequestId, RetryTicket>,
+    /// Origins the fleet router cancelled (hedge loser or Down-replica
+    /// eviction). The EngineCore sweeps matching requests out of its
+    /// queues silently — their terminal outcome is owned by the router,
+    /// never this replica. Empty (and untouched) outside fleet runs.
+    pub(crate) cancelled: FxHashSet<RequestId>,
 }
 
 /// Everything needed to re-deliver a logical request after backoff.
 #[derive(Debug, Clone, Copy)]
-struct RetryTicket {
+pub(crate) struct RetryTicket {
     class: ReqClass,
     /// Original arrival (client-perceived latency spans all attempts).
     arrival_ns: u64,
@@ -148,20 +153,25 @@ struct RetryTicket {
 
 pub type SharedRef = Rc<RefCell<EngineShared>>;
 
+/// One replica's handles: config, shared engine state, IPC endpoints,
+/// device fleet, tokenizer pool, and fault plan. Cloned freely (all Rc);
+/// the fleet layer keeps one per replica to submit, cancel, and probe.
 #[derive(Clone)]
-struct Env {
-    cfg: Rc<RunConfig>,
-    costs: Rc<EngineCosts>,
-    shared: SharedRef,
-    channel: SimChannel<Request>,
-    shm: SimShmBroadcast,
-    fleet: FleetRef,
+pub(crate) struct Env {
+    pub(crate) cfg: Rc<RunConfig>,
+    pub(crate) costs: Rc<EngineCosts>,
+    pub(crate) shared: SharedRef,
+    pub(crate) channel: SimChannel<Request>,
+    pub(crate) shm: SimShmBroadcast,
+    /// This replica's GPU devices (`gpu::Fleet` is the *device* fleet —
+    /// distinct from the replica fleet in [`crate::fleet`]).
+    pub(crate) gpus: FleetRef,
     /// Signaled once per worker per completed step.
-    step_done: GateId,
-    pool: TokenizerPool,
+    pub(crate) step_done: GateId,
+    pub(crate) pool: TokenizerPool,
     /// The run's compiled fault schedule (shared with the tokenizer
     /// pool; empty unless [`ServingSim::install_faults`] ran).
-    faults: Rc<RefCell<FaultPlan>>,
+    pub(crate) faults: Rc<RefCell<FaultPlan>>,
 }
 
 /// One arrival for the submission API and the streaming driver.
@@ -214,65 +224,7 @@ impl ServingSim {
             trace_bucket_ns: tracing.then_some(100_000_000), // 100 ms buckets
         };
         let mut sim = Sim::new(params);
-        let fleet = gpu::Fleet::new(cfg.n_gpus, tracing.then_some(0.1));
-        let channel = SimChannel::new(&mut sim);
-        let shm = SimShmBroadcast::new(&mut sim, 8, cfg.n_gpus);
-        let step_done = sim.new_gate();
-        let shared: SharedRef = Rc::new(RefCell::new(EngineShared {
-            sched: SchedState::new(),
-            kv: KvCache::new(
-                cfg.serve.kv_page_tokens,
-                cfg.serve.kv_pages_per_gpu, // per-GPU pages; TP shards heads, not pages
-            ),
-            prefix: cfg
-                .serve
-                .prefix_caching
-                .then(|| PrefixCache::new(cfg.serve.kv_page_tokens as u64, 262_144)),
-            plans: FxHashMap::default(),
-            plan_pool: Vec::new(),
-            steps_completed: 0,
-            gpu_step_ns: 0,
-            pending: RequestSlab::new(),
-            next_id: 0,
-            harvest: false,
-            outbox: Vec::new(),
-            deadlines_ns: Vec::new(),
-            run_seed: 0,
-            retry_tickets: FxHashMap::default(),
-        }));
-        // API-server tokenizer executor: vLLM's AsyncLLM hands each
-        // request's encode to a ThreadPoolExecutor with
-        // max_workers = min(32, cores + 4) (CPython default). Jobs are
-        // FIFO: under a tokenization flood, a new request's encode waits
-        // behind *every* queued encode — the victim-timeout mechanism.
-        let tok_workers = if cfg.serve.tokenizer_threads == 0 {
-            (cfg.cpu_cores + 4).min(32)
-        } else {
-            cfg.serve.tokenizer_threads
-        };
-        let pool = TokenizerPool::spawn(&mut sim, tok_workers);
-        let faults = Rc::clone(&pool.faults);
-        let env = Env {
-            cfg: Rc::new(cfg),
-            costs: Rc::new(costs),
-            shared,
-            channel,
-            shm,
-            fleet,
-            step_done,
-            pool,
-            faults,
-        };
-        // EngineCore task. With control_plane_weight > 1 the engine and
-        // workers run at CFS priority (the §VI mitigation).
-        let cp_weight = env.cfg.serve.control_plane_weight;
-        sim.spawn_weighted("engine_core", cp_weight, EngineCore::new(env.clone()));
-        // GPU worker tasks (one per rank)
-        for rank in 0..env.cfg.n_gpus {
-            let worker = GpuWorker::new(env.clone(), rank, &mut sim);
-            sim.spawn_weighted("gpu_worker", cp_weight, worker);
-        }
-
+        let env = spawn_replica(&mut sim, Rc::new(cfg), Rc::new(costs), tracing);
         ServingSim { sim, env }
     }
 
@@ -302,13 +254,23 @@ impl ServingSim {
 
     /// Compile and install a fault schedule: probabilistic windows go
     /// into the shared [`FaultPlan`] consulted by the tokenizer pool and
-    /// GPU workers; each [`FaultSpec::CoreLoss`] window spawns that many
-    /// [`CoreHog`] tasks which occupy cores for the window and exit.
+    /// GPU workers; each *unscoped* [`FaultSpec::CoreLoss`] window
+    /// spawns that many [`CoreHog`] tasks which occupy cores for the
+    /// window and exit. A replica-scoped CoreLoss instead compiles into
+    /// an engine-stall window (`FaultPlan::engine_stall_until`) that
+    /// deschedules this replica's control plane for the window — on a
+    /// single `ServingSim`, `replica: Some(0)` stalls the only engine.
     pub fn install_faults(&mut self, specs: &[FaultSpec]) {
         let seed = self.env.shared.borrow().run_seed ^ FAULT_STREAM_SALT;
         *self.env.faults.borrow_mut() = FaultPlan::new(seed, specs);
         for spec in specs {
-            if let FaultSpec::CoreLoss { start_s, end_s, cores } = *spec {
+            if let FaultSpec::CoreLoss {
+                start_s,
+                end_s,
+                cores,
+                replica: None,
+            } = *spec
+            {
                 let start_ns = (start_s.max(0.0) * 1e9) as u64;
                 let end_ns = (end_s.max(0.0) * 1e9) as u64;
                 for _ in 0..cores {
@@ -471,27 +433,7 @@ impl ServingSim {
         // outcome retention so the sim remains usable afterwards.
         {
             let shared = &mut *self.env.shared.borrow_mut();
-            scratch.extend(shared.sched.requests.values().map(Outcome::from_request));
-            scratch.extend(shared.pending.values().map(Outcome::from_request));
-            // Retries still waiting out their backoff at the horizon:
-            // surface the last attempt's terminal status under the
-            // origin id (exactly one outcome per logical request).
-            for (&origin, t) in shared.retry_tickets.iter() {
-                scratch.push(Outcome {
-                    id: origin,
-                    class: t.class,
-                    tag: t.tag,
-                    arrival_ns: t.arrival_ns,
-                    prompt_tokens: t.prompt_tokens,
-                    tokenize_latency_ns: None,
-                    ttft_ns: None,
-                    e2e_ns: None,
-                    generated_tokens: 0,
-                    status: t.status,
-                    retries: t.attempt - 1,
-                });
-            }
-            shared.retry_tickets.clear();
+            harvest_leftovers(shared, &mut scratch);
             shared.harvest = false;
             debug_assert!(shared.outbox.is_empty());
         }
@@ -557,8 +499,8 @@ impl ServingSim {
 
     /// Mean GPU utilization trace across ranks — Figure 11.
     pub fn gpu_utilization(&mut self) -> Vec<f64> {
-        self.env.fleet.borrow_mut().flush(self.sim.now_ns());
-        self.env.fleet.borrow().fleet_utilization()
+        self.env.gpus.borrow_mut().flush(self.sim.now_ns());
+        self.env.gpus.borrow().fleet_utilization()
     }
 
     /// Share of the run the GPU fleet sat idle: 1 − mean utilization
@@ -577,6 +519,141 @@ impl ServingSim {
     pub fn sim_stats(&self) -> &crate::simcpu::SimStats {
         self.sim.stats()
     }
+}
+
+// ---------------------------------------------------------------------
+// Replica construction (shared by ServingSim and the fleet layer)
+// ---------------------------------------------------------------------
+
+/// Spawn one full serving replica — tokenizer pool, EngineCore, and GPU
+/// workers — onto `sim`, returning its [`Env`] handle bundle. A
+/// [`ServingSim`] is exactly one replica on a private substrate; the
+/// fleet layer ([`crate::fleet`]) spawns N of these onto one shared
+/// substrate so their control planes contend for the same cores.
+pub(crate) fn spawn_replica(
+    sim: &mut Sim,
+    cfg: Rc<RunConfig>,
+    costs: Rc<EngineCosts>,
+    tracing: bool,
+) -> Env {
+    let gpus = gpu::Fleet::new(cfg.n_gpus, tracing.then_some(0.1));
+    let channel = SimChannel::new(sim);
+    let shm = SimShmBroadcast::new(sim, 8, cfg.n_gpus);
+    let step_done = sim.new_gate();
+    let shared: SharedRef = Rc::new(RefCell::new(EngineShared {
+        sched: SchedState::new(),
+        kv: KvCache::new(
+            cfg.serve.kv_page_tokens,
+            cfg.serve.kv_pages_per_gpu, // per-GPU pages; TP shards heads, not pages
+        ),
+        prefix: cfg
+            .serve
+            .prefix_caching
+            .then(|| PrefixCache::new(cfg.serve.kv_page_tokens as u64, 262_144)),
+        plans: FxHashMap::default(),
+        plan_pool: Vec::new(),
+        steps_completed: 0,
+        gpu_step_ns: 0,
+        pending: RequestSlab::new(),
+        next_id: 0,
+        harvest: false,
+        outbox: Vec::new(),
+        deadlines_ns: Vec::new(),
+        run_seed: 0,
+        retry_tickets: FxHashMap::default(),
+        cancelled: FxHashSet::default(),
+    }));
+    // API-server tokenizer executor: vLLM's AsyncLLM hands each
+    // request's encode to a ThreadPoolExecutor with
+    // max_workers = min(32, cores + 4) (CPython default). Jobs are
+    // FIFO: under a tokenization flood, a new request's encode waits
+    // behind *every* queued encode — the victim-timeout mechanism.
+    let tok_workers = if cfg.serve.tokenizer_threads == 0 {
+        (cfg.cpu_cores + 4).min(32)
+    } else {
+        cfg.serve.tokenizer_threads
+    };
+    let pool = TokenizerPool::spawn(sim, tok_workers);
+    let faults = Rc::clone(&pool.faults);
+    let env = Env {
+        cfg,
+        costs,
+        shared,
+        channel,
+        shm,
+        gpus,
+        step_done,
+        pool,
+        faults,
+    };
+    // EngineCore task. With control_plane_weight > 1 the engine and
+    // workers run at CFS priority (the §VI mitigation).
+    let cp_weight = env.cfg.serve.control_plane_weight;
+    sim.spawn_weighted("engine_core", cp_weight, EngineCore::new(env.clone()));
+    // GPU worker tasks (one per rank)
+    for rank in 0..env.cfg.n_gpus {
+        let worker = GpuWorker::new(env.clone(), rank, sim);
+        sim.spawn_weighted("gpu_worker", cp_weight, worker);
+    }
+    env
+}
+
+/// Mint a fresh local id and deliver one fleet-routed arrival to this
+/// replica. The request's *local* origin is its own id (the replica's
+/// retry machinery keys off it); the fleet layer maps local origins
+/// back to fleet-level origins when it drains the outbox. The original
+/// fleet arrival time is kept so TTFT spans failovers and hedges.
+pub(crate) fn fleet_submit(sim: &mut Sim, env: &Env, a: StreamArrival) -> RequestId {
+    let id = {
+        let shared = &mut *env.shared.borrow_mut();
+        let id = shared.next_id;
+        shared.next_id += 1;
+        id
+    };
+    deliver_attempt(sim, env, a, id, id, 0, Some(a.at_ns));
+    id
+}
+
+/// Cancel a logical request on this replica (hedge loser, or eviction
+/// from a Down replica). If a retry ticket is parked, removing it is the
+/// whole cancellation — the pending `fire_retry` timer finds no ticket
+/// and no-ops. Otherwise the origin is marked and the EngineCore sweeps
+/// it out of its queues (silently: the router owns the terminal
+/// outcome) at its next scheduling pass; outcomes that race past the
+/// sweep are dropped by the router's translation-map miss.
+pub(crate) fn cancel_origin(env: &Env, origin: RequestId) {
+    let shared = &mut *env.shared.borrow_mut();
+    if shared.retry_tickets.remove(&origin).is_some() {
+        return;
+    }
+    shared.cancelled.insert(origin);
+}
+
+/// Emit partial outcomes for everything still unfinished at a streaming
+/// horizon — scheduler-resident requests, pre-scheduler pending ones,
+/// and retries still waiting out their backoff (surfaced as the last
+/// attempt's terminal status under the origin id, preserving
+/// exactly-one-outcome-per-logical-request).
+pub(crate) fn harvest_leftovers(shared: &mut EngineShared, scratch: &mut Vec<Outcome>) {
+    scratch.extend(shared.sched.requests.values().map(Outcome::from_request));
+    scratch.extend(shared.pending.values().map(Outcome::from_request));
+    for (&origin, t) in shared.retry_tickets.iter() {
+        scratch.push(Outcome {
+            id: origin,
+            origin,
+            class: t.class,
+            tag: t.tag,
+            arrival_ns: t.arrival_ns,
+            prompt_tokens: t.prompt_tokens,
+            tokenize_latency_ns: None,
+            ttft_ns: None,
+            e2e_ns: None,
+            generated_tokens: 0,
+            status: t.status,
+            retries: t.attempt - 1,
+        });
+    }
+    shared.retry_tickets.clear();
 }
 
 // ---------------------------------------------------------------------
@@ -780,6 +857,12 @@ fn resolve_failed(
     mut r: Request,
     status: OutcomeStatus,
 ) {
+    // Router-cancelled origin failing locally: drop silently — the
+    // fleet router owns (and has already emitted or re-dispatched) the
+    // logical request's terminal outcome.
+    if !shared.cancelled.is_empty() && shared.cancelled.remove(&r.origin) {
+        return;
+    }
     r.phase = ReqPhase::Finished;
     r.status = Some(status);
     let res = &serve.resilience;
@@ -899,6 +982,56 @@ fn run_watchdog(
     }
 }
 
+/// Sweep router-cancelled origins out of the scheduler queues (run at
+/// the top of each scheduling pass, like the watchdog, so no plan is in
+/// flight). Cancelled requests vanish without an outcome — the fleet
+/// router owns the logical request's terminal status — and their KV
+/// pages return to the free pool. Mirrors `run_watchdog`'s
+/// mark/retain/remove shape so the scheduler's invariants hold.
+fn run_cancel_sweep(shared: &mut EngineShared, scratch: &mut Vec<RequestId>) {
+    scratch.clear();
+    {
+        let sched = &shared.sched;
+        for &id in sched.waiting.iter().chain(sched.running.iter()) {
+            if let Some(r) = sched.requests.get(id) {
+                if shared.cancelled.contains(&r.origin) {
+                    scratch.push(id);
+                }
+            }
+        }
+    }
+    if scratch.is_empty() {
+        return;
+    }
+    for &id in scratch.iter() {
+        if let Some(r) = shared.sched.requests.get_mut(id) {
+            if r.phase == ReqPhase::Waiting {
+                shared.sched.waiting_prefill_tokens -= r.prompt_tokens;
+            }
+            r.status = Some(OutcomeStatus::Aborted);
+            r.phase = ReqPhase::Finished;
+            shared.kv.release(id);
+        }
+    }
+    {
+        let sched = &mut shared.sched;
+        let requests = &sched.requests;
+        sched
+            .waiting
+            .retain(|&id| requests.get(id).map_or(true, |r| r.status != Some(OutcomeStatus::Aborted)));
+        let requests = &sched.requests;
+        sched
+            .running
+            .retain(|&id| requests.get(id).map_or(true, |r| r.status != Some(OutcomeStatus::Aborted)));
+    }
+    for i in 0..scratch.len() {
+        let id = scratch[i];
+        if let Some(r) = shared.sched.requests.remove(id) {
+            shared.cancelled.remove(&r.origin);
+        }
+    }
+}
+
 // ---------------------------------------------------------------------
 // EngineCore / GPU-worker state machines
 // ---------------------------------------------------------------------
@@ -981,10 +1114,24 @@ impl Program for EngineCore {
                 EcState::Schedule => {
                     let serve = &self.env.cfg.serve;
                     let now = ctx.now_ns();
+                    // Replica-scoped CoreLoss: the whole engine process
+                    // is descheduled for the window (requests pile up in
+                    // the channel; health probes see a stalled replica).
+                    {
+                        let faults = self.env.faults.borrow();
+                        if !faults.is_empty() {
+                            if let Some(until) = faults.engine_stall_until(now) {
+                                return Op::Sleep { ns: until - now };
+                            }
+                        }
+                    }
                     let has_work = {
                         let shared = &mut *self.env.shared.borrow_mut();
-                        // Deadline watchdog first: no plan is in flight
-                        // here, so aborting running requests is safe.
+                        // Router cancellations first (no plan in flight
+                        // here), then the deadline watchdog.
+                        if !shared.cancelled.is_empty() {
+                            run_cancel_sweep(shared, &mut self.abort_scratch);
+                        }
                         if serve.resilience.watchdog_slo_factor > 0.0 {
                             run_watchdog(
                                 ctx,
@@ -1001,6 +1148,11 @@ impl Program for EngineCore {
                         while let Some(req) = self.env.channel.try_recv() {
                             shared.pending.remove(req.id);
                             self.received += 1;
+                            if !shared.cancelled.is_empty()
+                                && shared.cancelled.remove(&req.origin)
+                            {
+                                continue; // cancelled before admission
+                            }
                             if should_shed(serve, shared, &req, now) {
                                 resolve_failed(
                                     ctx,
@@ -1041,7 +1193,7 @@ impl Program for EngineCore {
                         shared.sched.rejected_scratch.clear();
                         if has_work {
                             plan.seq = self.step_seq;
-                            plan.collective_id = self.env.fleet.borrow_mut().new_collective();
+                            plan.collective_id = self.env.gpus.borrow_mut().new_collective();
                             self.batch = plan.batch_size();
                             shared.plans.insert(self.step_seq, plan);
                         } else {
@@ -1118,8 +1270,15 @@ impl Program for EngineCore {
                     if harvesting {
                         // Streaming: finished requests leave the slab now;
                         // their outcomes park in the outbox for the driver.
+                        // A request cancelled mid-step (it finished before
+                        // the sweep could catch it) is dropped here.
                         for &id in &self.finish_scratch {
                             if let Some(r) = shared.sched.requests.remove(id) {
+                                if !shared.cancelled.is_empty()
+                                    && shared.cancelled.remove(&r.origin)
+                                {
+                                    continue;
+                                }
                                 shared.outbox.push(Outcome::from_request(&r));
                             }
                         }
@@ -1180,7 +1339,7 @@ impl GpuWorker {
         let kdone = sim.new_gate();
         let launch = Rc::new(Cell::new(LaunchParams::default()));
         let launch_call: SharedCall = {
-            let fleet = Rc::clone(&env.fleet);
+            let fleet = Rc::clone(&env.gpus);
             let cell = Rc::clone(&launch);
             let n_gpus = env.cfg.n_gpus;
             Rc::new(move |sim: &mut Sim, _arg: u64| {
@@ -1241,6 +1400,19 @@ impl Program for GpuWorker {
         loop {
             match self.state {
                 GwState::PollPlan => {
+                    // Replica-scoped CoreLoss deschedules the worker
+                    // processes along with the engine (they share the
+                    // replica's core allocation).
+                    {
+                        let faults = self.env.faults.borrow();
+                        if !faults.is_empty() {
+                            if let Some(until) = faults.engine_stall_until(ctx.now_ns()) {
+                                return Op::Sleep {
+                                    ns: until - ctx.now_ns(),
+                                };
+                            }
+                        }
+                    }
                     self.state = GwState::Read;
                     return Op::BusyPoll {
                         gate: self.env.shm.writer_gate,

@@ -168,6 +168,11 @@ impl Request {
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Outcome {
     pub id: RequestId,
+    /// Origin id of the logical request (equal to `id` unless the
+    /// outcome came from a retry delivery). The fleet router keys
+    /// failover and hedging decisions by this — one logical request
+    /// keeps one origin across replicas.
+    pub origin: RequestId,
     pub class: ReqClass,
     /// Caller tag copied from the request (workload class index).
     pub tag: u32,
@@ -190,6 +195,7 @@ impl Outcome {
     pub fn from_request(r: &Request) -> Outcome {
         Outcome {
             id: r.id,
+            origin: r.origin,
             class: r.class,
             tag: r.tag,
             arrival_ns: r.arrival_ns,

@@ -123,11 +123,12 @@ pub fn print_systems() {
 /// names one), the request stream comes from the scenario catalog and
 /// the report is per-class; otherwise a plain uniform stream runs.
 pub fn serve_once(args: &Args) {
+    use crate::config::RouterPolicy;
     use crate::engine::{ReqClass, ServingSim};
     let n_requests = args.usize_or("requests", 8);
     let seq_len = args.u64_or("seq-len", 8_000);
     let rps = args.f64_or("rps", 4.0);
-    let cfg = if let Some(path) = args.get("config") {
+    let mut cfg = if let Some(path) = args.get("config") {
         RunConfig::from_toml_file(std::path::Path::new(path)).expect("config file")
     } else {
         let system =
@@ -137,6 +138,20 @@ pub fn serve_once(args: &Args) {
         let cores = args.usize_or("cores-single", 16);
         RunConfig::new(system, model, n_gpus, cores)
     };
+    // Fleet topology overrides: `--replicas N` and `--router POLICY`
+    // beat both the config file's `[fleet]` block and the scenario's
+    // own topology (see `effective_fleet`).
+    if let Some(n) = args.get("replicas") {
+        cfg.serve.fleet.replicas = n.parse().expect("--replicas takes a count");
+    }
+    if let Some(name) = args.get("router") {
+        cfg.serve.fleet.router = RouterPolicy::by_name(name).unwrap_or_else(|| {
+            panic!(
+                "unknown router '{name}' — choose from: {}",
+                RouterPolicy::all().map(|p| p.name()).join(", ")
+            )
+        });
+    }
     let scenario_name = args
         .get("scenario")
         .map(str::to_string)
@@ -145,17 +160,38 @@ pub fn serve_once(args: &Args) {
         serve_scenario(cfg, &name, args);
         return;
     }
-    let mut sim = ServingSim::new(cfg);
     let interval = (1e9 / rps) as u64;
-    let ids: Vec<_> = (0..n_requests)
-        .map(|i| sim.submit_at(i as u64 * interval, ReqClass::Normal, seq_len, 32))
-        .collect();
-    sim.run_secs(args.f64_or("horizon", 300.0));
+    // The uniform stream honors `--replicas` too: route it through the
+    // fleet so a quick `serve --replicas 4` shows the router at work.
+    let (outcomes, steps) = if cfg.serve.fleet.enabled() {
+        let mut sim = crate::fleet::FleetSim::new(cfg);
+        for i in 0..n_requests {
+            sim.submit_request(crate::engine::StreamArrival {
+                at_ns: i as u64 * interval,
+                class: ReqClass::Normal,
+                prompt_tokens: seq_len,
+                max_new_tokens: 32,
+                content_seed: i as u64,
+                tag: 0,
+            });
+        }
+        sim.run_secs(args.f64_or("horizon", 300.0));
+        let mut outcomes = sim.drain_outcomes();
+        outcomes.sort_by_key(|o| o.origin);
+        (outcomes, sim.steps_completed())
+    } else {
+        let mut sim = ServingSim::new(cfg);
+        let ids: Vec<_> = (0..n_requests)
+            .map(|i| sim.submit_at(i as u64 * interval, ReqClass::Normal, seq_len, 32))
+            .collect();
+        sim.run_secs(args.f64_or("horizon", 300.0));
+        let outcomes = ids.into_iter().map(|id| sim.outcome(id).unwrap()).collect();
+        (outcomes, sim.steps_completed())
+    };
     let mut t = Table::new(&["req", "prompt", "tokenize (s)", "TTFT (s)", "e2e (s)", "tokens"]);
-    for id in ids {
-        let o = sim.outcome(id).unwrap();
+    for o in &outcomes {
         t.row(vec![
-            o.id.to_string(),
+            o.origin.to_string(),
             o.prompt_tokens.to_string(),
             o.tokenize_latency_ns
                 .map(|n| format!("{:.3}", n as f64 / 1e9))
@@ -168,7 +204,7 @@ pub fn serve_once(args: &Args) {
         ]);
     }
     print!("{}", t.render());
-    println!("engine steps: {}", sim.steps_completed());
+    println!("engine steps: {steps}");
 }
 
 /// Scenario-driven `cpuslow serve`: generate the named catalog scenario
@@ -217,14 +253,19 @@ fn serve_scenario(cfg: RunConfig, name: &str, args: &Args) {
     }
     print!("{}", t.render());
     println!(
-        "total: {} requests, timeout rate {}, shed rate {}, abort rate {}, \
-         GPU idle {}, engine steps {}",
+        "total: {} requests on {} replica{}, timeout rate {}, shed rate {}, \
+         abort rate {}, retries/req {:.2}, GPU idle {}, engine steps {}, \
+         {:.1} CPU core-s",
         report.issued,
+        report.replicas,
+        if report.replicas == 1 { "" } else { "s" },
         percent_label(report.timeout_rate()),
         percent_label(report.shed_rate()),
         percent_label(report.abort_rate()),
+        report.retries_per_request(),
         percent_label(report.gpu_idle_share),
-        report.steps_completed
+        report.steps_completed,
+        report.cpu_core_seconds
     );
 }
 

@@ -1,24 +1,31 @@
 //! `cpuslow serve-sweep` — the scenario-diverse serving grid.
 //!
-//! Fans a (scenario × CPU-cores × TP-degree) grid across the sweep
-//! executor and reports, per cell, the serving metrics the paper's
-//! headline table tracks: on-time TTFT p50/p99, the timeout rate, and
-//! the GPU-idle share that signals CPU starvation (§V-A). Cells are
-//! pure functions of their spec plus a per-index seed from
-//! `sweep::seeded_cells`, so output is byte-identical for every
-//! `--jobs` value and every worker schedule.
+//! Fans a (scenario × replicas × router × CPU-cores × TP-degree) grid
+//! across the sweep executor and reports, per cell, the serving metrics
+//! the paper's headline table tracks: on-time TTFT p50/p99, the timeout
+//! rate, the GPU-idle share that signals CPU starvation (§V-A), and —
+//! closing the loop with `cost/` — dollars per SLO-met request at AWS
+//! p5.48xlarge rates, so over-replicating and under-provisioning both
+//! show up as cost, not just latency. Cells are pure functions of their
+//! spec plus a per-index seed from `sweep::seeded_cells`, so output is
+//! byte-identical for every `--jobs` value and every worker schedule.
 
 use super::out_dir;
-use crate::config::{ModelSpec, RunConfig, ServeConfig, SystemSpec, WorkloadConfig};
+use crate::config::{
+    ModelSpec, RouterPolicy, RunConfig, ServeConfig, SystemSpec, WorkloadConfig,
+};
+use crate::cost::{aws_gpu_instances, per_gpu_usd, VCPU_USD_PER_HOUR_MID};
 use crate::engine::FaultSpec;
 use crate::report::{self, percent_label, secs_label, Table};
 use crate::sweep::{seeded_cells, SeededCell, Sweep};
 use crate::util::cli::Args;
 use crate::util::json::Json;
-use crate::workload::scenario::{resolve_cli_scenario, run_scenario, timeout_fraction, Scenario};
+use crate::workload::scenario::{
+    effective_fleet, resolve_cli_scenario, run_scenario, timeout_fraction, Scenario,
+};
 
 /// Inputs of one grid cell (self-contained: the cell builds its own
-/// `ServingSim` and trace from this spec plus its sweep seed).
+/// serving stack and trace from this spec plus its sweep seed).
 #[derive(Debug, Clone)]
 pub struct CellSpec {
     pub scenario: Scenario,
@@ -35,6 +42,11 @@ pub struct CellResult {
     pub scenario: String,
     pub n_gpus: usize,
     pub cores: usize,
+    /// Replicas that actually served the cell (scenario topology when
+    /// the grid left `--replicas` at 1).
+    pub replicas: usize,
+    /// Effective router ("-" on a single engine).
+    pub router: String,
     pub issued: usize,
     pub timeouts: usize,
     pub shed: usize,
@@ -44,6 +56,9 @@ pub struct CellResult {
     pub ttft_p50_s: Option<f64>,
     pub ttft_p99_s: Option<f64>,
     pub gpu_idle_share: f64,
+    /// Run cost at p5.48xlarge rates: GPU-hours across all replicas
+    /// plus metered CPU core-hours (the autoscaler's grant integral).
+    pub cost_usd: f64,
 }
 
 impl CellResult {
@@ -62,11 +77,27 @@ impl CellResult {
     pub fn retries_per_request(&self) -> f64 {
         timeout_fraction(self.retries, self.issued)
     }
+
+    /// Requests that produced a first token within their class SLO.
+    pub fn slo_met(&self) -> usize {
+        self.issued.saturating_sub(self.timeouts)
+    }
+
+    /// The sweep's cost axis: dollars per SLO-met request (clamped to
+    /// "per request" when a cell meets none, so the column stays finite
+    /// and a total failure reads as the full run cost).
+    pub fn cost_per_slo_met(&self) -> f64 {
+        self.cost_usd / self.slo_met().max(1) as f64
+    }
 }
 
 /// Build the flat cell list in render order: scenario outer, then TP
-/// degree, then cores. `cores_override` (from `--cores`) replaces the
-/// per-GPU-count paper levels.
+/// degree, then cores, then replicas, then router. `cores_override`
+/// (from `--cores`) replaces the per-GPU-count paper levels. A
+/// `replicas` value of 1 keeps the scenario's own topology (single
+/// engine for classic scenarios, the catalog fleet for fleet ones) and
+/// collapses the router axis, since no routing happens that the cell
+/// spec controls.
 pub fn grid(
     scenarios: &[Scenario],
     system: &SystemSpec,
@@ -74,7 +105,12 @@ pub fn grid(
     serve: &ServeConfig,
     gpus_list: &[usize],
     cores_override: Option<&[usize]>,
+    replicas_list: &[usize],
+    routers: &[RouterPolicy],
 ) -> Vec<CellSpec> {
+    let default_router = [serve.fleet.router];
+    let routers: &[RouterPolicy] = if routers.is_empty() { &default_router } else { routers };
+    let replicas_list: &[usize] = if replicas_list.is_empty() { &[1] } else { replicas_list };
     let mut cells = Vec::new();
     for scenario in scenarios {
         for &n_gpus in gpus_list {
@@ -83,14 +119,25 @@ pub fn grid(
                 None => RunConfig::paper_core_levels(n_gpus),
             };
             for &cores in &core_levels {
-                cells.push(CellSpec {
-                    scenario: scenario.clone(),
-                    system: system.clone(),
-                    model: model.clone(),
-                    serve: serve.clone(),
-                    n_gpus,
-                    cores,
-                });
+                for &replicas in replicas_list {
+                    let router_levels: &[RouterPolicy] =
+                        if replicas > 1 { routers } else { &routers[..1] };
+                    for &router in router_levels {
+                        let mut serve = serve.clone();
+                        if replicas > 1 {
+                            serve.fleet.replicas = replicas;
+                            serve.fleet.router = router;
+                        }
+                        cells.push(CellSpec {
+                            scenario: scenario.clone(),
+                            system: system.clone(),
+                            model: model.clone(),
+                            serve,
+                            n_gpus,
+                            cores,
+                        });
+                    }
+                }
             }
         }
     }
@@ -102,11 +149,24 @@ pub fn run_cell(cell: SeededCell<CellSpec>) -> CellResult {
     let spec = cell.input;
     let mut cfg = RunConfig::new(spec.system, spec.model, spec.n_gpus, spec.cores);
     cfg.serve = spec.serve;
+    let fleet = effective_fleet(&cfg, spec.scenario.fleet.as_ref());
+    let router = fleet.as_ref().map_or("-".to_string(), |f| f.router.name().to_string());
     let report = run_scenario(cfg, &spec.scenario, cell.seed);
+    // Paper's cost frame (§VII): H100s priced per-GPU off p5.48xlarge,
+    // CPU metered per core-hour at the mid vCPU rate.
+    let inst = aws_gpu_instances()
+        .into_iter()
+        .find(|i| i.name == "p5.48xlarge")
+        .expect("p5.48xlarge in the instance catalog");
+    let wall_h = report.wall_secs / 3600.0;
+    let cost_usd = wall_h * (report.replicas * spec.n_gpus) as f64 * per_gpu_usd(&inst)
+        + report.cpu_core_seconds / 3600.0 * VCPU_USD_PER_HOUR_MID;
     CellResult {
         scenario: spec.scenario.name,
         n_gpus: spec.n_gpus,
         cores: spec.cores,
+        replicas: report.replicas,
+        router,
         issued: report.issued,
         timeouts: report.timeouts,
         shed: report.shed,
@@ -116,6 +176,7 @@ pub fn run_cell(cell: SeededCell<CellSpec>) -> CellResult {
         ttft_p50_s: report.ttft_p50_s,
         ttft_p99_s: report.ttft_p99_s,
         gpu_idle_share: report.gpu_idle_share,
+        cost_usd,
     }
 }
 
@@ -124,6 +185,8 @@ pub fn render_cells(title: &str, cells: &[CellResult]) -> Table {
         "scenario",
         "GPUs",
         "cores",
+        "reps",
+        "router",
         "requests",
         "TTFT p50 (s)",
         "TTFT p99 (s)",
@@ -132,14 +195,18 @@ pub fn render_cells(title: &str, cells: &[CellResult]) -> Table {
         "abort rate",
         "retries/req",
         "GPU idle",
+        "$/SLO-met",
     ])
     .with_title(title.to_string())
-    .align(0, crate::report::table::Align::Left);
+    .align(0, crate::report::table::Align::Left)
+    .align(4, crate::report::table::Align::Left);
     for c in cells {
         t.row(vec![
             c.scenario.clone(),
             c.n_gpus.to_string(),
             c.cores.to_string(),
+            c.replicas.to_string(),
+            c.router.clone(),
             c.issued.to_string(),
             secs_label(c.ttft_p50_s),
             secs_label(c.ttft_p99_s),
@@ -148,6 +215,7 @@ pub fn render_cells(title: &str, cells: &[CellResult]) -> Table {
             percent_label(c.abort_rate()),
             format!("{:.2}", c.retries_per_request()),
             percent_label(c.gpu_idle_share),
+            format!("{:.4}", c.cost_per_slo_met()),
         ]);
     }
     t
@@ -162,6 +230,8 @@ pub fn cells_to_json(cells: &[CellResult]) -> Json {
                 j.set("scenario", c.scenario.as_str())
                     .set("gpus", c.n_gpus)
                     .set("cores", c.cores)
+                    .set("replicas", c.replicas)
+                    .set("router", c.router.as_str())
                     .set("issued", c.issued)
                     .set("timeouts", c.timeouts)
                     .set("timeout_rate", c.timeout_rate())
@@ -180,7 +250,9 @@ pub fn cells_to_json(cells: &[CellResult]) -> Json {
                         "ttft_p99_s",
                         c.ttft_p99_s.map(Json::Num).unwrap_or(Json::Null),
                     )
-                    .set("gpu_idle_share", c.gpu_idle_share);
+                    .set("gpu_idle_share", c.gpu_idle_share)
+                    .set("cost_usd", c.cost_usd)
+                    .set("cost_per_slo_met", c.cost_per_slo_met());
                 j
             })
             .collect(),
@@ -247,6 +319,29 @@ pub fn run(args: &Args) {
     let cores_override: Option<Vec<usize>> = args
         .u64_list("cores")
         .map(|v| v.into_iter().map(|c| c as usize).collect());
+    // Fleet axes: `--replicas 1,4` and `--routers a,b` fan out over
+    // topologies; the defaults inherit whatever the config's `[fleet]`
+    // block (or the scenario itself) asks for.
+    let replicas_list: Vec<usize> = args
+        .u64_list("replicas")
+        .map(|v| v.into_iter().map(|r| (r as usize).max(1)).collect())
+        .unwrap_or_else(|| vec![serve.fleet.replicas.max(1)]);
+    let routers: Vec<RouterPolicy> = args
+        .str_list("routers")
+        .map(|names| {
+            names
+                .iter()
+                .map(|n| {
+                    RouterPolicy::by_name(n).unwrap_or_else(|| {
+                        panic!(
+                            "unknown router '{n}' — choose from: {}",
+                            RouterPolicy::all().map(|p| p.name()).join(", ")
+                        )
+                    })
+                })
+                .collect()
+        })
+        .unwrap_or_else(|| vec![serve.fleet.router]);
     let specs = grid(
         &scenarios,
         &system,
@@ -254,13 +349,18 @@ pub fn run(args: &Args) {
         &serve,
         &gpus_list,
         cores_override.as_deref(),
+        &replicas_list,
+        &routers,
     );
     let base_seed = args.u64_or("seed", config_file.as_ref().map_or(0, |c| c.seed));
     let seeded = seeded_cells(base_seed, specs);
     let results = Sweep::from_args("serve-sweep", args).run(seeded, run_cell);
 
     let t = render_cells(
-        &format!("Serving sweep: scenario × cores × TP ({})", system.name),
+        &format!(
+            "Serving sweep: scenario × cores × TP × replicas × router ({})",
+            system.name
+        ),
         &results,
     );
     print!("{}", t.render());
@@ -294,9 +394,19 @@ pub fn print_catalog() {
     .align(5, crate::report::table::Align::Left)
     .align(6, crate::report::table::Align::Left);
     for s in Scenario::catalog() {
-        // The per-scenario resilience/fault column: armed gates first,
-        // then each injected fault's human label.
+        // The per-scenario resilience/fault column: fleet topology
+        // first, then armed gates, then each injected fault's label.
         let mut extras: Vec<String> = Vec::new();
+        if let Some(f) = &s.fleet {
+            let mut label = format!("fleet {}x {}", f.replicas, f.router.name());
+            if f.failure_aware {
+                label.push_str(" +failover");
+            }
+            if f.autoscale {
+                label.push_str(" +autoscale");
+            }
+            extras.push(label);
+        }
         if s.resilience.is_some() {
             extras.push("resilience".to_string());
         }

@@ -1,0 +1,224 @@
+//! Reactive per-replica core autoscaling.
+//!
+//! The substrate is sized for every replica's *maximum* grant; what a
+//! replica has not been granted is burned by [`CoreLimiter`] tasks —
+//! heavyweight compute loops whose CFS weight crowds engine threads off
+//! exactly that many cores. (Weight-based crowding stands in for core
+//! pinning, which the simulated scheduler does not model; the effect on
+//! the replica's control plane is the same: fewer effective cores.)
+//! Granting a core deactivates one limiter; revoking re-activates it.
+//!
+//! Decisions run every `autoscale_every` probe windows and are pure
+//! functions of `(window, that window's stats)`: grow by one core when
+//! the replica's GPUs idled at least `autoscale_idle_hi` *with load
+//! waiting* (idle-under-load is the paper's CPU-starvation signature),
+//! shrink by one when idle fell below `autoscale_idle_lo` (CPU-rich)
+//! or when the replica idles with *nothing* in flight (no demand).
+//! Every change is appended to the grant log, so tests can pin the
+//! full decision sequence byte-for-byte.
+
+use super::{FleetShared, Replica};
+use crate::simcpu::{Op, Program, TaskCtx};
+use std::cell::Cell;
+use std::rc::Rc;
+
+/// CFS weight of a limiter task — heavy enough to own a core outright
+/// against weight-1 engine threads.
+pub(crate) const CORE_LIMITER_WEIGHT: u32 = 64;
+
+const LIMITER_BURN_NS: u64 = 1_000_000;
+const LIMITER_NAP_NS: u64 = 8_000_000;
+
+/// One autoscaler decision: `replica` now holds `cores`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GrantEvent {
+    /// Probe window the decision was taken in.
+    pub window: u64,
+    pub replica: usize,
+    /// The new grant (after the change).
+    pub cores: usize,
+}
+
+/// Burns one core while its flag is set; naps (cheaply, off-core) while
+/// the core is granted to the replica. Toggling the flag is the whole
+/// grant/revoke mechanism — no task spawning mid-run, so the zero-alloc
+/// steady state survives autoscaling being armed.
+pub(crate) struct CoreLimiter {
+    active: Rc<Cell<bool>>,
+}
+
+impl CoreLimiter {
+    pub(crate) fn new(active: Rc<Cell<bool>>) -> CoreLimiter {
+        CoreLimiter { active }
+    }
+}
+
+impl Program for CoreLimiter {
+    fn step(&mut self, _ctx: &mut TaskCtx) -> Op {
+        if self.active.get() {
+            Op::Compute { ns: LIMITER_BURN_NS }
+        } else {
+            Op::Sleep { ns: LIMITER_NAP_NS }
+        }
+    }
+}
+
+/// Run one autoscaling round if this window is due. Called by the
+/// prober with fresh per-window stats already in place.
+pub(crate) fn maybe_autoscale(fs: &FleetShared, now: u64) {
+    if !fs.fleet.autoscale {
+        return;
+    }
+    let ctl = &mut *fs.ctl.borrow_mut();
+    if ctl.window % fs.fleet.autoscale_every.max(1) as u64 != 0 {
+        return;
+    }
+    let window = ctl.window;
+    let mut total = ctl.total_granted;
+    let mut changed = false;
+    for (r, rep) in ctl.replicas.iter_mut().enumerate() {
+        let old = rep.cores_granted;
+        let idle = rep.last_idle_share;
+        let mut target = old;
+        if idle >= fs.fleet.autoscale_idle_hi && rep.inflight > 0 && old < fs.max_cores {
+            // GPUs starving while work waits: the CPU side is the
+            // bottleneck — grant a core.
+            target = old + 1;
+        } else if (idle < fs.fleet.autoscale_idle_lo
+            || (rep.inflight == 0 && idle >= fs.fleet.autoscale_idle_hi))
+            && old > fs.min_cores
+        {
+            // CPU-rich under load, or idle with no demand: shrink.
+            target = old - 1;
+        }
+        if target != old {
+            apply_grant(rep, target, fs.max_cores);
+            total = total + target - old;
+            ctl.grant_log.push(GrantEvent { window, replica: r, cores: target });
+            changed = true;
+        }
+    }
+    if changed {
+        // Close the core·ns integral at the old level before moving on.
+        ctl.core_ns += now.saturating_sub(ctl.last_grant_change_ns)
+            * ctl.total_granted as u64;
+        ctl.last_grant_change_ns = now;
+        ctl.total_granted = total;
+    }
+}
+
+/// Flip limiter flags until exactly `max_cores - target` of them burn.
+pub(crate) fn apply_grant(rep: &mut Replica, target: usize, max_cores: usize) {
+    while rep.cores_granted < target {
+        let active = max_cores - rep.cores_granted;
+        if active == 0 {
+            break;
+        }
+        rep.limiters[active - 1].set(false);
+        rep.cores_granted += 1;
+    }
+    while rep.cores_granted > target {
+        let active = max_cores - rep.cores_granted;
+        if active >= rep.limiters.len() {
+            break;
+        }
+        rep.limiters[active].set(true);
+        rep.cores_granted -= 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::HealthState;
+    use rustc_hash::FxHashMap;
+
+    fn rep(max: usize, granted: usize) -> Replica {
+        let limiters: Vec<Rc<Cell<bool>>> =
+            (0..max).map(|j| Rc::new(Cell::new(j < max - granted))).collect();
+        Replica {
+            translate: FxHashMap::default(),
+            outstanding_tokens: 0,
+            inflight: 0,
+            health: HealthState::Healthy,
+            bad_streak: 0,
+            good_streak: 0,
+            ramp_start_window: 0,
+            last_steps: 0,
+            last_busy_ns: 0,
+            last_idle_share: 0.0,
+            win_sheds: 0,
+            cores_granted: granted,
+            limiters,
+        }
+    }
+
+    fn burning(r: &Replica) -> usize {
+        r.limiters.iter().filter(|l| l.get()).count()
+    }
+
+    #[test]
+    fn grants_flip_limiters_one_at_a_time() {
+        let mut r = rep(8, 4);
+        assert_eq!(burning(&r), 4);
+        apply_grant(&mut r, 6, 8);
+        assert_eq!(r.cores_granted, 6);
+        assert_eq!(burning(&r), 2);
+        apply_grant(&mut r, 1, 8);
+        assert_eq!(r.cores_granted, 1);
+        assert_eq!(burning(&r), 7);
+        // Clamped at the ends.
+        apply_grant(&mut r, 0, 8);
+        assert_eq!(r.cores_granted, 0);
+        apply_grant(&mut r, 12, 8);
+        assert_eq!(r.cores_granted, 8);
+        assert_eq!(burning(&r), 0);
+    }
+
+    #[test]
+    fn active_limiter_crowds_a_light_task_off_the_core() {
+        use crate::simcpu::{Sim, SimParams};
+        // One core, one burning limiter, one weight-1 worker: the
+        // worker's 10 ms of compute takes far longer than 10 ms of
+        // virtual time because the limiter owns ~weight/(weight+1) of
+        // the core.
+        let run = |limiter_on: bool| -> u64 {
+            let mut sim = Sim::new(SimParams {
+                cores: 1,
+                context_switch_ns: 1_000,
+                timeslice_ns: 1_000_000,
+                poll_quantum_ns: 1_000,
+                trace_bucket_ns: None,
+            });
+            if limiter_on {
+                let flag = Rc::new(Cell::new(true));
+                sim.spawn_weighted(
+                    "core_limiter",
+                    CORE_LIMITER_WEIGHT,
+                    CoreLimiter::new(flag),
+                );
+            }
+            let done = Rc::new(Cell::new(0u64));
+            let done2 = Rc::clone(&done);
+            let mut left = 10u32;
+            sim.spawn("worker", move |ctx: &mut crate::simcpu::TaskCtx| {
+                if left > 0 {
+                    left -= 1;
+                    Op::Compute { ns: 1_000_000 }
+                } else {
+                    done2.set(ctx.now_ns());
+                    Op::Done
+                }
+            });
+            sim.run_until(10_000_000_000);
+            done.get()
+        };
+        let alone = run(false);
+        let crowded = run(true);
+        assert!(alone > 0 && crowded > 0, "worker must finish in both runs");
+        assert!(
+            crowded > alone * 10,
+            "limiter must crowd the worker: alone={alone} crowded={crowded}"
+        );
+    }
+}

@@ -1,0 +1,314 @@
+//! Per-replica health tracking: probe windows, a hysteresis state
+//! machine, and ramped re-admission after recovery.
+//!
+//! Every probe window (`probe_interval_s`, four router ticks) the
+//! prober scores each replica from three signals it can read without
+//! allocating: engine steps completed this window (a stalled control
+//! plane makes zero forward progress), the replica's GPU idle share
+//! over the window (CPU starvation shows up as idle GPUs, the paper's
+//! core signal), and sheds observed this window. A replica is *bad*
+//! this window if it made no steps while loaded, its GPUs sat idle
+//! beyond `probe_idle_bad_share` while loaded, or it shed at least
+//! `probe_shed_bad` requests.
+//!
+//! The state machine needs `down_after` consecutive bad windows to
+//! declare Down and `recover_after` consecutive good ones to begin
+//! Recovering — single-window blips change nothing. Recovery re-admits
+//! traffic along a ramp: over `drain_ramp_windows` windows the admit
+//! probability climbs from `1/ramp` to 1, each admit decision a pure
+//! hash of `(seed, origin, window)` so replays agree. The same
+//! machinery runs the *drain* direction — a Down replica admits
+//! nothing, and eviction (in [`super::evict_replica`]) clears what it
+//! was holding.
+
+use super::{autoscale, FleetShared, Replica, PROBE_TICKS};
+use crate::config::FleetConfig;
+use crate::simcpu::Sim;
+use crate::util::rng::SplitMix64;
+
+/// Health of one replica, as scored by the prober. Transitions are
+/// driven only when `failure_aware` is on; otherwise every replica
+/// stays `Healthy` and the router never reacts (the baseline fleets
+/// stay pure).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthState {
+    Healthy,
+    /// One-or-more bad windows, not yet `down_after` in a row.
+    Degraded,
+    /// Not routable; in-flight requests were evicted and failed over.
+    Down,
+    /// Good again, re-admitting along the drain ramp.
+    Recovering,
+}
+
+impl HealthState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            HealthState::Healthy => "healthy",
+            HealthState::Degraded => "degraded",
+            HealthState::Down => "down",
+            HealthState::Recovering => "recovering",
+        }
+    }
+}
+
+/// Close one probe window: score every replica, run transitions, evict
+/// replicas that just went Down, then let the autoscaler act on the
+/// fresh window stats.
+pub(crate) fn probe(sim: &mut Sim, fs: &FleetShared, now: u64) {
+    let probe_ns = fs.tick_ns * PROBE_TICKS;
+    {
+        let ctl = &mut *fs.ctl.borrow_mut();
+        ctl.window += 1;
+        let window = ctl.window;
+        ctl.down_scratch.clear();
+        for (r, env) in fs.envs.iter().enumerate() {
+            let steps = env.shared.borrow().steps_completed;
+            let busy: u64 = {
+                let mut g = env.gpus.borrow_mut();
+                g.flush(now);
+                (0..env.cfg.n_gpus).map(|rank| g.busy_ns(rank)).sum()
+            };
+            let rep = &mut ctl.replicas[r];
+            let steps_delta = steps.saturating_sub(rep.last_steps);
+            let busy_delta = busy.saturating_sub(rep.last_busy_ns);
+            rep.last_steps = steps;
+            rep.last_busy_ns = busy;
+            let denom = probe_ns.saturating_mul(env.cfg.n_gpus as u64);
+            let idle = if denom > 0 {
+                (1.0 - busy_delta as f64 / denom as f64).clamp(0.0, 1.0)
+            } else {
+                1.0
+            };
+            rep.last_idle_share = idle;
+            let loaded = rep.inflight > 0;
+            let bad = (steps_delta == 0 && loaded)
+                || (idle >= fs.fleet.probe_idle_bad_share && loaded)
+                || rep.win_sheds >= fs.fleet.probe_shed_bad;
+            rep.win_sheds = 0;
+            if fs.fleet.failure_aware && transition(rep, bad, window, &fs.fleet) {
+                ctl.down_scratch.push(r);
+            }
+        }
+    }
+    // Evict outside the ctl borrow: eviction re-routes through the
+    // router and cancels deliveries inside the engines.
+    let n_down = fs.ctl.borrow().down_scratch.len();
+    for i in 0..n_down {
+        let r = fs.ctl.borrow().down_scratch[i];
+        super::evict_replica(sim, fs, r);
+    }
+    autoscale::maybe_autoscale(fs, now);
+}
+
+/// Advance one replica's health machine by one window verdict.
+/// Returns `true` exactly when the replica *enters* Down.
+fn transition(rep: &mut Replica, bad: bool, window: u64, fleet: &FleetConfig) -> bool {
+    match rep.health {
+        HealthState::Healthy => {
+            if bad {
+                rep.health = HealthState::Degraded;
+                rep.bad_streak = 1;
+            }
+            false
+        }
+        HealthState::Degraded => {
+            if bad {
+                rep.bad_streak += 1;
+                if rep.bad_streak >= fleet.down_after {
+                    rep.health = HealthState::Down;
+                    rep.good_streak = 0;
+                    return true;
+                }
+            } else {
+                rep.health = HealthState::Healthy;
+                rep.bad_streak = 0;
+            }
+            false
+        }
+        HealthState::Down => {
+            if bad {
+                rep.good_streak = 0;
+            } else {
+                rep.good_streak += 1;
+                if rep.good_streak >= fleet.recover_after {
+                    rep.health = HealthState::Recovering;
+                    rep.ramp_start_window = window;
+                    rep.bad_streak = 0;
+                }
+            }
+            false
+        }
+        HealthState::Recovering => {
+            if bad {
+                // Relapse: straight back down, no re-eviction needed —
+                // the ramp admitted only a fraction of traffic.
+                rep.health = HealthState::Down;
+                rep.good_streak = 0;
+            } else if window.saturating_sub(rep.ramp_start_window)
+                >= fleet.drain_ramp_windows as u64
+            {
+                rep.health = HealthState::Healthy;
+                rep.bad_streak = 0;
+            }
+            false
+        }
+    }
+}
+
+/// May the router place `origin` on this replica right now? Pure in
+/// `(seed, origin, window)` — the same request asks the same answer on
+/// every run and every replay.
+pub(crate) fn admits(
+    rep: &Replica,
+    fleet: &FleetConfig,
+    seed: u64,
+    origin: u64,
+    window: u64,
+) -> bool {
+    if !fleet.failure_aware {
+        return true;
+    }
+    match rep.health {
+        HealthState::Healthy | HealthState::Degraded => true,
+        HealthState::Down => false,
+        HealthState::Recovering => {
+            let ramp = fleet.drain_ramp_windows.max(1) as u64;
+            let progressed = window.saturating_sub(rep.ramp_start_window) + 1;
+            if progressed >= ramp {
+                return true;
+            }
+            let frac = progressed as f64 / ramp as f64;
+            let draw = SplitMix64::new(
+                seed ^ super::FLEET_STREAM_SALT
+                    ^ origin.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                    ^ window,
+            )
+            .next_u64();
+            (draw as f64) < frac * (u64::MAX as f64)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use rustc_hash::FxHashMap;
+
+    fn rep() -> Replica {
+        Replica {
+            translate: FxHashMap::default(),
+            outstanding_tokens: 0,
+            inflight: 0,
+            health: HealthState::Healthy,
+            bad_streak: 0,
+            good_streak: 0,
+            ramp_start_window: 0,
+            last_steps: 0,
+            last_busy_ns: 0,
+            last_idle_share: 0.0,
+            win_sheds: 0,
+            cores_granted: 4,
+            limiters: Vec::new(),
+        }
+    }
+
+    fn fleet() -> FleetConfig {
+        FleetConfig { failure_aware: true, ..FleetConfig::default() }
+    }
+
+    #[test]
+    fn hysteresis_requires_consecutive_bad_windows() {
+        let f = fleet(); // down_after = 2
+        let mut r = rep();
+        assert!(!transition(&mut r, true, 1, &f));
+        assert_eq!(r.health, HealthState::Degraded);
+        // A good window resets the streak.
+        assert!(!transition(&mut r, false, 2, &f));
+        assert_eq!(r.health, HealthState::Healthy);
+        // Two bad in a row → Down, signalled exactly once.
+        assert!(!transition(&mut r, true, 3, &f));
+        assert!(transition(&mut r, true, 4, &f));
+        assert_eq!(r.health, HealthState::Down);
+        assert!(!transition(&mut r, true, 5, &f), "entering Down signals only once");
+    }
+
+    #[test]
+    fn recovery_ramps_then_heals() {
+        let f = fleet(); // recover_after = 4, drain_ramp_windows = 4
+        let mut r = rep();
+        r.health = HealthState::Down;
+        for w in 1..=3 {
+            transition(&mut r, false, w, &f);
+            assert_eq!(r.health, HealthState::Down, "window {w}");
+        }
+        transition(&mut r, false, 4, &f);
+        assert_eq!(r.health, HealthState::Recovering);
+        assert_eq!(r.ramp_start_window, 4);
+        // Relapse during the ramp goes straight back down.
+        let mut relapse = r.clone_for_test();
+        transition(&mut relapse, true, 5, &f);
+        assert_eq!(relapse.health, HealthState::Down);
+        // Clean ramp heals after drain_ramp_windows windows.
+        for w in 5..8 {
+            transition(&mut r, false, w, &f);
+            assert_eq!(r.health, HealthState::Recovering, "window {w}");
+        }
+        transition(&mut r, false, 8, &f);
+        assert_eq!(r.health, HealthState::Healthy);
+    }
+
+    #[test]
+    fn admits_is_deterministic_and_ramped() {
+        let f = fleet();
+        let mut r = rep();
+        r.health = HealthState::Down;
+        assert!(!admits(&r, &f, 1, 0, 10));
+        r.health = HealthState::Recovering;
+        r.ramp_start_window = 10;
+        // Same (seed, origin, window) → same verdict, always.
+        for origin in 0..64u64 {
+            assert_eq!(admits(&r, &f, 1, origin, 11), admits(&r, &f, 1, origin, 11));
+        }
+        // Early ramp admits some but not all; ramp end admits all.
+        let early: usize = (0..256u64).filter(|&o| admits(&r, &f, 1, o, 11)).count();
+        assert!(early > 0 && early < 256, "partial admission early in ramp: {early}");
+        assert!((0..256u64).all(|o| admits(&r, &f, 1, o, 14)), "full admission at ramp end");
+        // failure_aware off → always admit, whatever the state.
+        let off = FleetConfig::default();
+        r.health = HealthState::Down;
+        assert!(admits(&r, &off, 1, 0, 11));
+    }
+
+    #[test]
+    fn state_names_are_stable() {
+        for (s, n) in [
+            (HealthState::Healthy, "healthy"),
+            (HealthState::Degraded, "degraded"),
+            (HealthState::Down, "down"),
+            (HealthState::Recovering, "recovering"),
+        ] {
+            assert_eq!(s.name(), n);
+        }
+    }
+
+    impl Replica {
+        fn clone_for_test(&self) -> Replica {
+            Replica {
+                translate: FxHashMap::default(),
+                outstanding_tokens: self.outstanding_tokens,
+                inflight: self.inflight,
+                health: self.health,
+                bad_streak: self.bad_streak,
+                good_streak: self.good_streak,
+                ramp_start_window: self.ramp_start_window,
+                last_steps: self.last_steps,
+                last_busy_ns: self.last_busy_ns,
+                last_idle_share: self.last_idle_share,
+                win_sheds: self.win_sheds,
+                cores_granted: self.cores_granted,
+                limiters: self.limiters.clone(),
+            }
+        }
+    }
+}

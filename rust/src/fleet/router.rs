@@ -1,0 +1,214 @@
+//! Deterministic replica selection.
+//!
+//! Three policies, all pure functions of router state — never of
+//! completion order:
+//!
+//! * **round-robin** — a cursor that advances only on successful
+//!   placement, skipping ineligible replicas;
+//! * **least-loaded** — fewest outstanding prompt tokens (fleet view),
+//!   replica index as the tie-break;
+//! * **prefix-affinity** — rendezvous (highest-random-weight) hashing
+//!   of the request's `content_seed`, so same-content sessions land on
+//!   the same replica (prefix-cache hits) yet re-rank deterministically
+//!   when that replica is ineligible — no reshuffle of other sessions.
+//!
+//! Health gating is two-pass: first restrict to replicas
+//! [`health::admits`] accepts; if none qualify and the caller *must*
+//! place (primary dispatch), fall back to ignoring health entirely.
+//! Hedge launches pass `require_eligible = true` instead — a hedge onto
+//! a sick replica is worse than no hedge.
+
+use super::{health, FleetCtl, FLEET_STREAM_SALT};
+use crate::config::{FleetConfig, RouterPolicy};
+use crate::util::rng::SplitMix64;
+
+/// Salt for rendezvous draws (distinct from the seed-stream salt so the
+/// affinity hash never correlates with replica RNG streams).
+const RENDEZVOUS_SALT: u64 = 0x9E7A_11ED_5EED_0004;
+
+/// Pick a replica for `origin`. `exclude` bars one replica (the failed
+/// or already-primary one); `require_eligible` makes the pick optional
+/// rather than forced. Advances the round-robin cursor on success.
+pub(crate) fn pick(
+    ctl: &mut FleetCtl,
+    fleet: &FleetConfig,
+    origin: u64,
+    content_seed: u64,
+    exclude: Option<usize>,
+    require_eligible: bool,
+) -> Option<usize> {
+    let n = ctl.replicas.len();
+    if n == 0 {
+        return None;
+    }
+    if let Some(r) = pick_among(ctl, fleet, origin, content_seed, exclude, true) {
+        if fleet.router == RouterPolicy::RoundRobin {
+            ctl.rr_cursor = (r + 1) % n;
+        }
+        return Some(r);
+    }
+    if require_eligible {
+        return None;
+    }
+    // Forced placement: ignore health, and as a last resort send the
+    // request back where it came from rather than dropping it.
+    match pick_among(ctl, fleet, origin, content_seed, exclude, false) {
+        Some(r) => {
+            if fleet.router == RouterPolicy::RoundRobin {
+                ctl.rr_cursor = (r + 1) % n;
+            }
+            Some(r)
+        }
+        None => exclude,
+    }
+}
+
+fn pick_among(
+    ctl: &FleetCtl,
+    fleet: &FleetConfig,
+    origin: u64,
+    content_seed: u64,
+    exclude: Option<usize>,
+    check_health: bool,
+) -> Option<usize> {
+    let n = ctl.replicas.len();
+    let ok = |r: usize| {
+        Some(r) != exclude
+            && (!check_health
+                || health::admits(&ctl.replicas[r], fleet, ctl.seed, origin, ctl.window))
+    };
+    match fleet.router {
+        RouterPolicy::RoundRobin => {
+            (0..n).map(|i| (ctl.rr_cursor + i) % n).find(|&r| ok(r))
+        }
+        RouterPolicy::LeastLoaded => (0..n)
+            .filter(|&r| ok(r))
+            .min_by_key(|&r| (ctl.replicas[r].outstanding_tokens, r)),
+        RouterPolicy::PrefixAffinity => (0..n)
+            .filter(|&r| ok(r))
+            .max_by_key(|&r| rendezvous_weight(ctl.seed, content_seed, r)),
+    }
+}
+
+/// Highest-random-weight score of `(content, replica)` — each replica
+/// gets an independent hash per content seed, and the eligible maximum
+/// wins. Removing a replica only moves *its* sessions.
+fn rendezvous_weight(fleet_seed: u64, content_seed: u64, r: usize) -> u64 {
+    let rep = SplitMix64::new(fleet_seed ^ FLEET_STREAM_SALT ^ r as u64).next_u64();
+    SplitMix64::new(content_seed ^ RENDEZVOUS_SALT ^ rep).next_u64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::Outcome;
+    use rustc_hash::FxHashMap;
+    use std::cell::Cell;
+    use std::rc::Rc;
+
+    fn ctl(n: usize) -> FleetCtl {
+        FleetCtl {
+            seed: 42,
+            next_origin: 0,
+            origins: FxHashMap::default(),
+            replicas: (0..n)
+                .map(|_| super::super::Replica {
+                    translate: FxHashMap::default(),
+                    outstanding_tokens: 0,
+                    inflight: 0,
+                    health: health::HealthState::Healthy,
+                    bad_streak: 0,
+                    good_streak: 0,
+                    ramp_start_window: 0,
+                    last_steps: 0,
+                    last_busy_ns: 0,
+                    last_idle_share: 0.0,
+                    win_sheds: 0,
+                    cores_granted: 4,
+                    limiters: Vec::<Rc<Cell<bool>>>::new(),
+                })
+                .collect(),
+            outbox: Vec::<Outcome>::new(),
+            rr_cursor: 0,
+            tick: 0,
+            window: 0,
+            grant_log: Vec::new(),
+            total_granted: 4 * n,
+            core_ns: 0,
+            last_grant_change_ns: 0,
+            submitted: 0,
+            last_arrival_ns: 0,
+            drain_scratch: Vec::new(),
+            evict_scratch: Vec::new(),
+            hedge_scratch: Vec::new(),
+            down_scratch: Vec::new(),
+        }
+    }
+
+    fn fleet(router: RouterPolicy, failure_aware: bool) -> FleetConfig {
+        FleetConfig { replicas: 4, router, failure_aware, ..FleetConfig::default() }
+    }
+
+    #[test]
+    fn round_robin_cycles_and_skips_excluded() {
+        let mut c = ctl(3);
+        let f = fleet(RouterPolicy::RoundRobin, false);
+        let seq: Vec<usize> =
+            (0..6).map(|i| pick(&mut c, &f, i, 0, None, false).unwrap()).collect();
+        assert_eq!(seq, vec![0, 1, 2, 0, 1, 2]);
+        c.rr_cursor = 0;
+        assert_eq!(pick(&mut c, &f, 9, 0, Some(0), false), Some(1));
+    }
+
+    #[test]
+    fn least_loaded_prefers_fewest_outstanding_tokens() {
+        let mut c = ctl(3);
+        let f = fleet(RouterPolicy::LeastLoaded, false);
+        c.replicas[0].outstanding_tokens = 500;
+        c.replicas[1].outstanding_tokens = 100;
+        c.replicas[2].outstanding_tokens = 300;
+        assert_eq!(pick(&mut c, &f, 0, 0, None, false), Some(1));
+        assert_eq!(pick(&mut c, &f, 1, 0, Some(1), false), Some(2));
+        // Tie breaks toward the lower index.
+        c.replicas[2].outstanding_tokens = 500;
+        assert_eq!(pick(&mut c, &f, 2, 0, Some(1), false), Some(0));
+    }
+
+    #[test]
+    fn rendezvous_moves_only_the_evicted_sessions() {
+        let c = ctl(4);
+        let f = fleet(RouterPolicy::PrefixAffinity, true);
+        // Stable mapping for 64 sessions with all replicas healthy.
+        let home: Vec<usize> = (0..64u64)
+            .map(|s| pick_among(&c, &f, 0, s, None, true).unwrap())
+            .collect();
+        // Take one replica down: its sessions move, everyone else stays.
+        let mut c2 = ctl(4);
+        let down = home[0];
+        c2.replicas[down].health = health::HealthState::Down;
+        for (s, &h) in home.iter().enumerate() {
+            let now = pick_among(&c2, &f, 0, s as u64, None, true).unwrap();
+            if h == down {
+                assert_ne!(now, down, "session {s} must leave the down replica");
+            } else {
+                assert_eq!(now, h, "session {s} must not move");
+            }
+        }
+    }
+
+    #[test]
+    fn forced_pick_falls_back_past_health_then_to_exclude() {
+        let mut c = ctl(2);
+        let f = fleet(RouterPolicy::RoundRobin, true);
+        c.replicas[0].health = health::HealthState::Down;
+        c.replicas[1].health = health::HealthState::Down;
+        // Optional pick (hedge): nothing eligible → None.
+        assert_eq!(pick(&mut c, &f, 0, 0, Some(0), true), None);
+        // Forced pick ignores health.
+        assert_eq!(pick(&mut c, &f, 0, 0, Some(0), false), Some(1));
+        // One replica, excluded, forced: back where it came from.
+        let mut c1 = ctl(1);
+        c1.replicas[0].health = health::HealthState::Down;
+        assert_eq!(pick(&mut c1, &f, 0, 0, Some(0), false), Some(0));
+    }
+}

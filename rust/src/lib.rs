@@ -23,6 +23,7 @@ pub mod config;
 pub mod cost;
 pub mod engine;
 pub mod experiments;
+pub mod fleet;
 pub mod gpu;
 pub mod ipc;
 pub mod simcpu;

@@ -13,8 +13,8 @@ fn main() {
         commands: vec![
             ("systems", "print the Table I system matrix"),
             ("experiment <id>", "regenerate a paper figure (fig3 fig4 fig5 fig7 fig8 fig9 fig10 fig11 fig12 fig13 cost ablations headline)"),
-            ("serve", "run the simulated serving stack once and report outcomes"),
-            ("serve-sweep", "scenario × cores × TP grid: TTFT p50/p99, timeout/shed/abort rates, GPU idle"),
+            ("serve", "run the simulated serving stack once (single engine or replicated fleet) and report outcomes"),
+            ("serve-sweep", "scenario × replicas × router × cores × TP grid: TTFT p50/p99, timeout/shed/abort rates, GPU idle, $/SLO-met"),
             ("scenarios", "print the workload scenario catalog (incl. resilience gates and injected faults)"),
             ("calibrate", "measure real Rust-BPE tokenizer throughput on this host"),
             ("bench-check <current.json>...", "compare BENCH_*.json files against committed baselines; exits 1 on regression"),
@@ -33,6 +33,8 @@ fn main() {
             ("--config PATH", "serve / serve-sweep: run TOML (system, serve, workload tables)"),
             ("--scenario NAME", "serve: drive a catalog scenario instead of a uniform stream"),
             ("--streaming", "serve: lazy arrival generation + bounded-memory TTFT sketches (million-request runs)"),
+            ("--replicas N", "serve: data-parallel replica count (serve-sweep: comma list, e.g. 1,4)"),
+            ("--router P", "serve: routing policy round-robin | least-loaded | prefix-affinity (serve-sweep: --routers list)"),
             ("--scenarios LIST", "serve-sweep: catalog subset, e.g. steady,bursty"),
             ("--rate-scale F", "scenario runs: multiply every class arrival rate by F"),
             ("--duration S", "scenario runs: override the generation window (seconds)"),

@@ -31,8 +31,9 @@
 //! the paper's own attacker/victim flood as a trace-driven scenario.
 
 use super::{ArrivalProcess, LengthMix};
-use crate::config::{ResilienceConfig, RunConfig, WorkloadConfig};
+use crate::config::{FleetConfig, ResilienceConfig, RouterPolicy, RunConfig, WorkloadConfig};
 use crate::engine::{FaultSpec, Outcome, OutcomeStatus, ReqClass, ServingSim, StreamArrival};
+use crate::fleet::FleetSim;
 use crate::util::json::Json;
 use crate::util::rng::{Rng, SplitMix64};
 use crate::util::stats::{Percentiles, QuantileSketch};
@@ -242,6 +243,11 @@ pub struct Scenario {
     /// Declarative fault schedule injected into the run, driven by a
     /// dedicated RNG stream derived from the trace seed.
     pub faults: Vec<FaultSpec>,
+    /// Replicated-serving topology this scenario wants (replica count,
+    /// router policy, failover/autoscaler knobs). `None` = single
+    /// engine. An explicit multi-replica fleet on the run config
+    /// (`--replicas`) overrides this.
+    pub fleet: Option<FleetConfig>,
 }
 
 /// Derive the deterministic sub-streams of class `idx` from the
@@ -280,6 +286,7 @@ impl Scenario {
                 }],
                 resilience: None,
                 faults: vec![],
+                fleet: None,
             },
             Scenario {
                 name: "bursty".into(),
@@ -307,6 +314,7 @@ impl Scenario {
                 }],
                 resilience: None,
                 faults: vec![],
+                fleet: None,
             },
             Scenario {
                 name: "heavy-tail".into(),
@@ -332,6 +340,7 @@ impl Scenario {
                 }],
                 resilience: None,
                 faults: vec![],
+                fleet: None,
             },
             Scenario {
                 name: "multi-tenant".into(),
@@ -370,6 +379,7 @@ impl Scenario {
                 ],
                 resilience: None,
                 faults: vec![],
+                fleet: None,
             },
             Scenario {
                 name: "attack".into(),
@@ -407,6 +417,7 @@ impl Scenario {
                 ],
                 resilience: None,
                 faults: vec![],
+                fleet: None,
             },
             Scenario {
                 name: "flash-crowd".into(),
@@ -468,11 +479,12 @@ impl Scenario {
                     retry_cap_s: 4.0,
                 }),
                 faults: vec![],
+                fleet: None,
             },
             Scenario {
                 name: "replica-failure".into(),
-                description: "steady traffic through a transient loss of 4 cores, \
-                              watchdog + retry recover the backlog"
+                description: "steady traffic through a core-loss fault pinned to \
+                              replica 0, watchdog + retry recover the backlog"
                     .into(),
                 paper_section: "§VI fault tolerance (core loss)".into(),
                 duration_s: 30.0,
@@ -498,11 +510,17 @@ impl Scenario {
                     retry_base_s: 0.5,
                     retry_cap_s: 4.0,
                 }),
+                // Scoped to replica 0: on a single engine that stalls
+                // the (only) control plane for the window; in a fleet
+                // it degrades exactly one replica — the failure the
+                // failover catalog entry routes around.
                 faults: vec![FaultSpec::CoreLoss {
                     start_s: 3.0,
                     end_s: 9.0,
                     cores: 4,
+                    replica: Some(0),
                 }],
+                fleet: None,
             },
             Scenario {
                 name: "degraded-tokenizer".into(),
@@ -538,7 +556,156 @@ impl Scenario {
                     end_s: 12.0,
                     prob: 0.6,
                     stall_ns: 400_000_000,
+                    replica: None,
                 }],
+                fleet: None,
+            },
+            Scenario {
+                name: "replica-failure-with-failover".into(),
+                description: "4-replica fleet loses replica 0 for 6 s; health \
+                              probes mark it Down, in-flight requests fail over, \
+                              recovery re-admits along the drain ramp"
+                    .into(),
+                paper_section: "§VI fault tolerance (fleet failover)".into(),
+                duration_s: 12.0,
+                classes: vec![ClassSpec {
+                    name: "chat".into(),
+                    arrivals: ArrivalSpec::Poisson { rps: 8.0 },
+                    lengths: LengthSpec {
+                        prompt: LenDist::Lognormal {
+                            mean: 2_000.0,
+                            sigma: 0.8,
+                            min: 64,
+                        },
+                        output: LenDist::Fixed { tokens: 32 },
+                    },
+                    slo_ttft_s: 15.0,
+                    shared_prompt: false,
+                }],
+                resilience: Some(ResilienceConfig {
+                    admission_max_queue: 0,
+                    shed_slo_factor: 0.0,
+                    watchdog_slo_factor: 2.0,
+                    retry_max_attempts: 3,
+                    retry_base_s: 0.5,
+                    retry_cap_s: 4.0,
+                }),
+                faults: vec![FaultSpec::CoreLoss {
+                    start_s: 3.0,
+                    end_s: 9.0,
+                    cores: 4,
+                    replica: Some(0),
+                }],
+                fleet: Some(FleetConfig {
+                    replicas: 4,
+                    router: RouterPolicy::LeastLoaded,
+                    failure_aware: true,
+                    // Slow re-admission: replica 0 must string together
+                    // 8 good windows (2 s) after the fault clears before
+                    // the drain ramp starts letting traffic back.
+                    recover_after: 8,
+                    ..FleetConfig::default()
+                }),
+            },
+            Scenario {
+                name: "diurnal".into(),
+                description: "slow day/night load swings; the reactive autoscaler \
+                              grows and shrinks each replica's core grant"
+                    .into(),
+                paper_section: "§V CPU provisioning vs. load (autoscaler)".into(),
+                duration_s: 24.0,
+                classes: vec![ClassSpec {
+                    name: "diurnal".into(),
+                    arrivals: ArrivalSpec::Mmpp {
+                        rps_quiet: 0.5,
+                        rps_burst: 10.0,
+                        mean_quiet_s: 8.0,
+                        mean_burst_s: 8.0,
+                    },
+                    lengths: LengthSpec {
+                        prompt: LenDist::Lognormal {
+                            mean: 2_000.0,
+                            sigma: 0.8,
+                            min: 64,
+                        },
+                        output: LenDist::Fixed { tokens: 32 },
+                    },
+                    slo_ttft_s: 20.0,
+                    shared_prompt: false,
+                }],
+                resilience: None,
+                faults: vec![],
+                fleet: Some(FleetConfig {
+                    replicas: 2,
+                    router: RouterPolicy::LeastLoaded,
+                    autoscale: true,
+                    min_cores_per_replica: 2,
+                    max_cores_per_replica: 12,
+                    autoscale_every: 2,
+                    ..FleetConfig::default()
+                }),
+            },
+            Scenario {
+                name: "shared-prefix-flood".into(),
+                description: "three shared-prompt session floods + mixed traffic; \
+                              prefix-affinity routing keeps each session's warm \
+                              KV blocks on one replica"
+                    .into(),
+                paper_section: "§III prefix caching × fleet routing".into(),
+                duration_s: 15.0,
+                classes: vec![
+                    ClassSpec {
+                        name: "session-a".into(),
+                        arrivals: ArrivalSpec::Poisson { rps: 3.0 },
+                        lengths: LengthSpec {
+                            prompt: LenDist::Fixed { tokens: 30_000 },
+                            output: LenDist::Fixed { tokens: 16 },
+                        },
+                        slo_ttft_s: 20.0,
+                        shared_prompt: true,
+                    },
+                    ClassSpec {
+                        name: "session-b".into(),
+                        arrivals: ArrivalSpec::Poisson { rps: 3.0 },
+                        lengths: LengthSpec {
+                            prompt: LenDist::Fixed { tokens: 30_000 },
+                            output: LenDist::Fixed { tokens: 16 },
+                        },
+                        slo_ttft_s: 20.0,
+                        shared_prompt: true,
+                    },
+                    ClassSpec {
+                        name: "session-c".into(),
+                        arrivals: ArrivalSpec::Poisson { rps: 3.0 },
+                        lengths: LengthSpec {
+                            prompt: LenDist::Fixed { tokens: 30_000 },
+                            output: LenDist::Fixed { tokens: 16 },
+                        },
+                        slo_ttft_s: 20.0,
+                        shared_prompt: true,
+                    },
+                    ClassSpec {
+                        name: "mixed".into(),
+                        arrivals: ArrivalSpec::Poisson { rps: 2.0 },
+                        lengths: LengthSpec {
+                            prompt: LenDist::Lognormal {
+                                mean: 1_500.0,
+                                sigma: 0.8,
+                                min: 64,
+                            },
+                            output: LenDist::Fixed { tokens: 32 },
+                        },
+                        slo_ttft_s: 20.0,
+                        shared_prompt: false,
+                    },
+                ],
+                resilience: None,
+                faults: vec![],
+                fleet: Some(FleetConfig {
+                    replicas: 4,
+                    router: RouterPolicy::PrefixAffinity,
+                    ..FleetConfig::default()
+                }),
             },
         ]
     }
@@ -675,6 +842,7 @@ impl Scenario {
             requests,
             resilience: self.resilience.clone(),
             faults: self.faults.clone(),
+            fleet: self.fleet.clone(),
         }
     }
 }
@@ -769,6 +937,10 @@ pub struct Trace {
     /// Fault schedule, replayed from the trace seed — a dumped trace
     /// plus its seed reproduces the faulted run byte-identically.
     pub faults: Vec<FaultSpec>,
+    /// Fleet topology the scenario armed (replica count, router,
+    /// failover/autoscaler knobs); replays rebuild the same fleet, so
+    /// failover and hedging decisions reproduce from the dump.
+    pub fleet: Option<FleetConfig>,
 }
 
 impl Trace {
@@ -815,6 +987,9 @@ impl Trace {
                 "faults",
                 Json::Arr(self.faults.iter().map(FaultSpec::to_json).collect()),
             );
+        }
+        if let Some(fleet) = &self.fleet {
+            j.set("fleet", fleet_to_json(fleet));
         }
         j
     }
@@ -883,6 +1058,10 @@ impl Trace {
                 );
             }
         }
+        let fleet = match j.get("fleet") {
+            Some(fj) => Some(fleet_from_json(fj)?),
+            None => None,
+        };
         Ok(Trace {
             scenario,
             seed,
@@ -890,6 +1069,7 @@ impl Trace {
             requests,
             resilience,
             faults,
+            fleet,
         })
     }
 }
@@ -918,6 +1098,62 @@ fn resilience_from_json(j: &Json) -> Result<ResilienceConfig> {
         retry_max_attempts: num("retry_max_attempts")? as u32,
         retry_base_s: num("retry_base_s")?,
         retry_cap_s: num("retry_cap_s")?,
+    })
+}
+
+fn fleet_to_json(f: &FleetConfig) -> Json {
+    let mut j = Json::obj();
+    j.set("replicas", f.replicas)
+        .set("router", f.router.name())
+        .set("failure_aware", f.failure_aware)
+        .set("hedge_delay_s", f.hedge_delay_s)
+        .set("failover_max_attempts", f.failover_max_attempts)
+        .set("probe_interval_s", f.probe_interval_s)
+        .set("probe_idle_bad_share", f.probe_idle_bad_share)
+        .set("probe_shed_bad", f.probe_shed_bad)
+        .set("down_after", f.down_after)
+        .set("recover_after", f.recover_after)
+        .set("drain_ramp_windows", f.drain_ramp_windows)
+        .set("autoscale", f.autoscale)
+        .set("min_cores_per_replica", f.min_cores_per_replica)
+        .set("max_cores_per_replica", f.max_cores_per_replica)
+        .set("autoscale_idle_lo", f.autoscale_idle_lo)
+        .set("autoscale_idle_hi", f.autoscale_idle_hi)
+        .set("autoscale_every", f.autoscale_every);
+    j
+}
+
+/// Missing keys fall back to [`FleetConfig::default`] so older dumps
+/// (and hand-trimmed ones) still load.
+fn fleet_from_json(j: &Json) -> Result<FleetConfig> {
+    let d = FleetConfig::default();
+    let num = |key: &str, dv: f64| j.get(key).and_then(Json::as_f64).unwrap_or(dv);
+    let flag = |key: &str, dv: bool| j.get(key).and_then(Json::as_bool).unwrap_or(dv);
+    let router = match j.get("router").and_then(Json::as_str) {
+        Some(name) => RouterPolicy::by_name(name)
+            .ok_or_else(|| anyhow!("fleet: unknown router '{name}'"))?,
+        None => d.router,
+    };
+    Ok(FleetConfig {
+        replicas: num("replicas", d.replicas as f64) as usize,
+        router,
+        failure_aware: flag("failure_aware", d.failure_aware),
+        hedge_delay_s: num("hedge_delay_s", d.hedge_delay_s),
+        failover_max_attempts: num("failover_max_attempts", d.failover_max_attempts as f64) as u32,
+        probe_interval_s: num("probe_interval_s", d.probe_interval_s),
+        probe_idle_bad_share: num("probe_idle_bad_share", d.probe_idle_bad_share),
+        probe_shed_bad: num("probe_shed_bad", d.probe_shed_bad as f64) as u32,
+        down_after: num("down_after", d.down_after as f64) as u32,
+        recover_after: num("recover_after", d.recover_after as f64) as u32,
+        drain_ramp_windows: num("drain_ramp_windows", d.drain_ramp_windows as f64) as u32,
+        autoscale: flag("autoscale", d.autoscale),
+        min_cores_per_replica: num("min_cores_per_replica", d.min_cores_per_replica as f64)
+            as usize,
+        max_cores_per_replica: num("max_cores_per_replica", d.max_cores_per_replica as f64)
+            as usize,
+        autoscale_idle_lo: num("autoscale_idle_lo", d.autoscale_idle_lo),
+        autoscale_idle_hi: num("autoscale_idle_hi", d.autoscale_idle_hi),
+        autoscale_every: num("autoscale_every", d.autoscale_every as f64) as u32,
     })
 }
 
@@ -1016,6 +1252,14 @@ pub struct ScenarioReport {
     /// 1 − mean GPU utilization over the run (fleet average).
     pub gpu_idle_share: f64,
     pub steps_completed: u64,
+    /// Serving replicas that handled the run (1 = single engine).
+    pub replicas: usize,
+    /// Virtual wall-clock the run covered (arrivals + drain window).
+    pub wall_secs: f64,
+    /// CPU core·seconds consumed: `replicas × cores × wall` for a
+    /// static allocation, or the autoscaler's grant integral. Feeds
+    /// cost-per-SLO-met in the serve sweep.
+    pub cpu_core_seconds: f64,
 }
 
 impl ScenarioReport {
@@ -1057,17 +1301,126 @@ enum TtftAgg {
     Sketch { per_class: Vec<QuantileSketch>, pooled: QuantileSketch },
 }
 
-/// Drive time-ordered arrivals through a fresh [`ServingSim`] via its
-/// streaming loop and summarize outcomes per class. Both the
-/// materialized ([`run_trace`]) and the lazy ([`run_stream`]) paths run
-/// *this exact* driver — the only difference is where arrivals come
-/// from and how on-time TTFTs are aggregated — which is what makes
-/// their per-request outcomes byte-identical.
+/// The serving-stack surface the scenario driver needs, implemented by
+/// both the single-engine [`ServingSim`] and the replicated
+/// [`crate::fleet::FleetSim`] — [`drive_report`] is written against
+/// this, so traces and streams drive either stack through the exact
+/// same loop.
+pub(crate) trait ServeStack {
+    fn set_class_deadlines(&mut self, slos_s: &[f64]);
+    fn set_run_seed(&mut self, seed: u64);
+    fn install_faults(&mut self, specs: &[FaultSpec]);
+    fn run_streaming_dyn(
+        &mut self,
+        arrivals: Box<dyn Iterator<Item = StreamArrival>>,
+        drain_slack_secs: f64,
+        on_outcome: &mut dyn FnMut(Outcome),
+    );
+    fn gpu_idle_share(&mut self) -> f64;
+    fn steps_completed(&self) -> u64;
+    fn now_ns(&self) -> u64;
+    /// CPU core·seconds consumed over `wall_ns` of virtual time.
+    fn core_seconds(&self, wall_ns: u64) -> f64;
+    fn replica_count(&self) -> usize;
+}
+
+impl ServeStack for ServingSim {
+    fn set_class_deadlines(&mut self, slos_s: &[f64]) {
+        ServingSim::set_class_deadlines(self, slos_s);
+    }
+    fn set_run_seed(&mut self, seed: u64) {
+        ServingSim::set_run_seed(self, seed);
+    }
+    fn install_faults(&mut self, specs: &[FaultSpec]) {
+        ServingSim::install_faults(self, specs);
+    }
+    fn run_streaming_dyn(
+        &mut self,
+        arrivals: Box<dyn Iterator<Item = StreamArrival>>,
+        drain_slack_secs: f64,
+        on_outcome: &mut dyn FnMut(Outcome),
+    ) {
+        ServingSim::run_streaming(self, arrivals, drain_slack_secs, on_outcome);
+    }
+    fn gpu_idle_share(&mut self) -> f64 {
+        ServingSim::gpu_idle_share(self)
+    }
+    fn steps_completed(&self) -> u64 {
+        ServingSim::steps_completed(self)
+    }
+    fn now_ns(&self) -> u64 {
+        self.sim.now_ns()
+    }
+    fn core_seconds(&self, wall_ns: u64) -> f64 {
+        self.config().cpu_cores as f64 * wall_ns as f64 / 1e9
+    }
+    fn replica_count(&self) -> usize {
+        1
+    }
+}
+
+impl ServeStack for FleetSim {
+    fn set_class_deadlines(&mut self, slos_s: &[f64]) {
+        FleetSim::set_class_deadlines(self, slos_s);
+    }
+    fn set_run_seed(&mut self, seed: u64) {
+        FleetSim::set_run_seed(self, seed);
+    }
+    fn install_faults(&mut self, specs: &[FaultSpec]) {
+        FleetSim::install_faults(self, specs);
+    }
+    fn run_streaming_dyn(
+        &mut self,
+        arrivals: Box<dyn Iterator<Item = StreamArrival>>,
+        drain_slack_secs: f64,
+        on_outcome: &mut dyn FnMut(Outcome),
+    ) {
+        FleetSim::run_streaming(self, arrivals, drain_slack_secs, on_outcome);
+    }
+    fn gpu_idle_share(&mut self) -> f64 {
+        FleetSim::gpu_idle_share(self)
+    }
+    fn steps_completed(&self) -> u64 {
+        FleetSim::steps_completed(self)
+    }
+    fn now_ns(&self) -> u64 {
+        self.sim.now_ns()
+    }
+    fn core_seconds(&self, wall_ns: u64) -> f64 {
+        FleetSim::core_seconds(self, wall_ns)
+    }
+    fn replica_count(&self) -> usize {
+        FleetSim::replica_count(self)
+    }
+}
+
+/// Fleet-topology precedence for a run: an explicit multi-replica
+/// config on the run (`--replicas`/`[fleet]`) wins over the scenario's
+/// own; a `replicas = 1` fleet anywhere means "single engine".
+pub(crate) fn effective_fleet(
+    cfg: &RunConfig,
+    scenario_fleet: Option<&FleetConfig>,
+) -> Option<FleetConfig> {
+    if cfg.serve.fleet.enabled() {
+        Some(cfg.serve.fleet.clone())
+    } else {
+        scenario_fleet.filter(|f| f.enabled()).cloned()
+    }
+}
+
+/// Drive time-ordered arrivals through a fresh serving stack — a
+/// single [`ServingSim`], or a [`FleetSim`] when `fleet` asks for
+/// replicas — via its streaming loop and summarize outcomes per class.
+/// Both the materialized ([`run_trace`]) and the lazy ([`run_stream`])
+/// paths run *this exact* driver — the only difference is where
+/// arrivals come from and how on-time TTFTs are aggregated — which is
+/// what makes their per-request outcomes byte-identical.
 ///
 /// The sim runs until the last arrival plus the largest class SLO (plus
 /// one second of slack), so every request gets its full SLO window. A
 /// request counts as timed out when it produces no first token within
 /// its class SLO, measured from arrival (tokenization included, §IV-B).
+#[allow(clippy::too_many_arguments)]
 fn drive_report<I>(
     cfg: RunConfig,
     scenario: &str,
@@ -1075,6 +1428,7 @@ fn drive_report<I>(
     arrivals: I,
     seed: u64,
     faults: &[FaultSpec],
+    fleet: Option<FleetConfig>,
     mut agg: TtftAgg,
 ) -> ScenarioReport
 where
@@ -1089,13 +1443,20 @@ where
     let mut rejected = vec![0usize; n];
     let mut aborted = vec![0usize; n];
     let mut retries = vec![0usize; n];
-    let mut sim = ServingSim::new(cfg);
+    let mut sim: Box<dyn ServeStack> = match fleet {
+        Some(f) => {
+            let mut cfg = cfg;
+            cfg.serve.fleet = f;
+            Box::new(FleetSim::new(cfg))
+        }
+        None => Box::new(ServingSim::new(cfg)),
+    };
     sim.set_class_deadlines(&slos);
     sim.set_run_seed(seed);
     if !faults.is_empty() {
         sim.install_faults(faults);
     }
-    sim.run_streaming(arrivals, max_slo_s + 1.0, |o: Outcome| {
+    sim.run_streaming_dyn(Box::new(arrivals), max_slo_s + 1.0, &mut |o: Outcome| {
         let k = o.tag as usize;
         issued[k] += 1;
         match o.status {
@@ -1158,6 +1519,7 @@ where
             }
         }
     };
+    let wall_ns = sim.now_ns();
     ScenarioReport {
         scenario: scenario.to_string(),
         issued: issued.iter().sum(),
@@ -1171,6 +1533,9 @@ where
         ttft_p99_s,
         gpu_idle_share: sim.gpu_idle_share(),
         steps_completed: sim.steps_completed(),
+        replicas: sim.replica_count(),
+        wall_secs: wall_ns as f64 / 1e9,
+        cpu_core_seconds: sim.core_seconds(wall_ns),
     }
 }
 
@@ -1194,6 +1559,7 @@ pub fn run_trace(mut cfg: RunConfig, trace: &Trace) -> ScenarioReport {
         cfg.serve.resilience = res.clone();
     }
     let arrivals: Vec<StreamArrival> = trace.requests.iter().map(trace_req_arrival).collect();
+    let fleet = effective_fleet(&cfg, trace.fleet.as_ref());
     drive_report(
         cfg,
         &trace.scenario,
@@ -1201,6 +1567,7 @@ pub fn run_trace(mut cfg: RunConfig, trace: &Trace) -> ScenarioReport {
         arrivals.into_iter(),
         trace.seed,
         &trace.faults,
+        fleet,
         TtftAgg::Exact {
             per_class: vec![Vec::new(); trace.classes.len()],
         },
@@ -1241,6 +1608,7 @@ pub fn run_stream(mut cfg: RunConfig, scenario: &Scenario, seed: u64) -> Scenari
     // Mask like `generate` so the retry/fault streams match `run_trace`.
     let seed = seed & TRACE_SEED_MASK;
     let arrivals = scenario.stream(seed).map(|r| trace_req_arrival(&r));
+    let fleet = effective_fleet(&cfg, scenario.fleet.as_ref());
     drive_report(
         cfg,
         &scenario.name,
@@ -1248,6 +1616,7 @@ pub fn run_stream(mut cfg: RunConfig, scenario: &Scenario, seed: u64) -> Scenari
         arrivals,
         seed,
         &scenario.faults,
+        fleet,
         TtftAgg::Sketch {
             per_class: (0..n).map(|_| QuantileSketch::new()).collect(),
             pooled: QuantileSketch::new(),
@@ -1277,6 +1646,7 @@ mod tests {
             }],
             resilience: None,
             faults: vec![],
+            fleet: None,
         }
     }
 
@@ -1572,6 +1942,7 @@ mod tests {
             requests: Vec::new(),
             resilience: None,
             faults: Vec::new(),
+            fleet: None,
         };
         let cfg = RunConfig::new(
             crate::config::SystemSpec::h100(),
@@ -1584,5 +1955,47 @@ mod tests {
         assert_eq!(report.timeouts, 0);
         assert_eq!(report.timeout_rate(), 0.0);
         assert!(report.ttft_p50_s.is_none());
+        assert_eq!(report.replicas, 1);
+    }
+
+    #[test]
+    fn fleet_scenarios_round_trip_through_trace_json() {
+        // Every fleet-bearing catalog entry must survive
+        // generate → to_json → from_json with its topology intact —
+        // that's what makes a dumped fleet trace replayable.
+        let mut saw_fleet = false;
+        for scenario in Scenario::catalog() {
+            let trace = scenario.generate(11);
+            assert_eq!(trace.fleet, scenario.fleet, "{}", scenario.name);
+            let dumped = trace.to_json().to_string_pretty();
+            let parsed = crate::util::json::parse(&dumped).unwrap();
+            let back = Trace::from_json(&parsed).unwrap();
+            assert_eq!(back.fleet, trace.fleet, "{}", scenario.name);
+            saw_fleet |= trace.fleet.is_some();
+        }
+        assert!(saw_fleet, "catalog must ship at least one fleet scenario");
+    }
+
+    #[test]
+    fn replica_faults_are_pinned_to_replica_zero() {
+        // Both replica-failure flavors model "one machine dies", so
+        // their CoreLoss must be scoped — an unscoped CoreLoss would
+        // brown-out the whole fleet substrate instead.
+        for name in ["replica-failure", "replica-failure-with-failover"] {
+            let s = Scenario::by_name(name).unwrap();
+            let pinned = s.faults.iter().any(|f| {
+                matches!(f, FaultSpec::CoreLoss { replica: Some(0), .. })
+            });
+            assert!(pinned, "{name} must pin its CoreLoss to replica 0");
+        }
+    }
+
+    #[test]
+    fn fleet_catalog_entries_request_multiple_replicas() {
+        for name in ["replica-failure-with-failover", "diurnal", "shared-prefix-flood"] {
+            let s = Scenario::by_name(name).unwrap();
+            let f = s.fleet.as_ref().unwrap_or_else(|| panic!("{name} missing fleet"));
+            assert!(f.enabled(), "{name} must ask for >1 replica");
+        }
     }
 }

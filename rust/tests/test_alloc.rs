@@ -9,6 +9,7 @@
 
 use cpuslow::config::{ModelSpec, RunConfig, SystemSpec};
 use cpuslow::engine::{EngineCosts, ReqClass, ServingSim, StreamArrival};
+use cpuslow::fleet::FleetSim;
 use cpuslow::testkit::alloc::{self, CountingAlloc};
 
 #[global_allocator]
@@ -53,6 +54,51 @@ fn steady_state_engine_stepping_allocates_nothing() {
         after.allocs - before.allocs,
         0,
         "steady-state stepping allocated ({} allocs / {} bytes over {steps} steps)",
+        after.allocs - before.allocs,
+        after.alloc_bytes - before.alloc_bytes,
+    );
+}
+
+#[test]
+fn fleet_steady_state_with_router_probes_and_autoscaler_allocates_nothing() {
+    // Two full replicas on one substrate, router tick and health probes
+    // firing every window, failure-aware transitions armed, and the
+    // autoscaler armed but pinned (min == max == the static grant, so
+    // no decision can ever fire and no limiter tasks exist). A resident
+    // decode batch on each replica runs the measurement window: the
+    // router tick (outbox drain, hedge scan, probe, autoscale check)
+    // rides recycled scratch buffers and a recycled shared call, so the
+    // fleet layer must add zero allocations to the engine steady state.
+    let mut config = cfg(2, 8);
+    config.serve.fleet.replicas = 2;
+    config.serve.fleet.failure_aware = true;
+    config.serve.fleet.autoscale = true;
+    config.serve.fleet.min_cores_per_replica = 8;
+    config.serve.fleet.max_cores_per_replica = 8;
+    let mut sim = FleetSim::with_costs(config, EngineCosts::default());
+    for i in 0..8u64 {
+        // Round-robin spreads these 4-and-4; the 100k-token outputs
+        // keep both replicas decoding far past the window.
+        sim.submit_request(StreamArrival {
+            at_ns: i * 1_000_000,
+            class: ReqClass::Normal,
+            prompt_tokens: 512,
+            max_new_tokens: 100_000,
+            content_seed: i,
+            tag: 0,
+        });
+    }
+    sim.run_secs(5.0);
+    let steps_before = sim.steps_completed();
+    let before = alloc::counters();
+    sim.run_secs(13.0);
+    let after = alloc::counters();
+    let steps = sim.steps_completed() - steps_before;
+    assert!(steps > 100, "decode steps in the window: {steps}");
+    assert_eq!(
+        after.allocs - before.allocs,
+        0,
+        "fleet steady-state stepping allocated ({} allocs / {} bytes over {steps} steps)",
         after.allocs - before.allocs,
         after.alloc_bytes - before.alloc_bytes,
     );

@@ -1,0 +1,241 @@
+//! Fleet-layer acceptance tests: replicated serving behind the
+//! deterministic router — failover beats blind routing and fat single
+//! engines under a replica-scoped fault, sweeps stay byte-identical
+//! across `--jobs`, failover retries replay from a dumped trace, the
+//! diurnal autoscaler's grant log is a pure function of its windows,
+//! and hedged requests never break exactly-one-outcome-per-request.
+
+use cpuslow::config::{FleetConfig, ModelSpec, RouterPolicy, RunConfig, ServeConfig, SystemSpec};
+use cpuslow::engine::{FaultSpec, Outcome, ReqClass, StreamArrival};
+use cpuslow::experiments::serve_sweep;
+use cpuslow::fleet::FleetSim;
+use cpuslow::sweep::{seeded_cells, Sweep};
+use cpuslow::workload::scenario::{run_trace, Scenario, ScenarioReport, Trace};
+
+fn cfg(n_gpus: usize, cores: usize) -> RunConfig {
+    RunConfig::new(SystemSpec::h100(), ModelSpec::llama31_8b(), n_gpus, cores)
+}
+
+/// Acceptance criterion: on the replica-failure workload, a
+/// failure-aware fleet must strictly beat (a) the same fleet routing
+/// blindly and (b) a single replica holding the fleet's entire core
+/// budget — the fault stalls 1/4 of a fleet but 100% of a single
+/// engine, and only failure-aware routing moves work off the corpse.
+#[test]
+fn failure_aware_fleet_beats_blind_fleet_and_fat_single() {
+    let scenario = Scenario::by_name("replica-failure-with-failover").unwrap();
+    let mut trace = scenario.generate(5);
+    assert!(trace.fleet.is_some(), "scenario must carry its fleet topology");
+    // Tighten the SLO so the six-second stall cannot hide inside it.
+    trace.classes[0].slo_ttft_s = 3.0;
+    let cores = 8;
+
+    let aware = run_trace(cfg(2, cores), &trace);
+
+    let mut blind_trace = trace.clone();
+    blind_trace.fleet = Some(FleetConfig {
+        replicas: 4,
+        router: RouterPolicy::RoundRobin,
+        failure_aware: false,
+        ..FleetConfig::default()
+    });
+    let blind = run_trace(cfg(2, cores), &blind_trace);
+
+    let mut single_trace = trace.clone();
+    single_trace.fleet = None;
+    let single = run_trace(cfg(2, 4 * cores), &single_trace);
+
+    assert_eq!(aware.replicas, 4);
+    assert_eq!(blind.replicas, 4);
+    assert_eq!(single.replicas, 1);
+    assert_eq!(aware.issued, blind.issued);
+    assert_eq!(aware.issued, single.issued);
+    assert!(aware.issued > 0);
+
+    let bad = |r: &ScenarioReport| r.timeouts + r.shed;
+    assert!(
+        bad(&single) > 0,
+        "the fault must hurt the single engine (timeouts+shed {})",
+        bad(&single)
+    );
+    assert!(
+        bad(&aware) < bad(&blind),
+        "failure-aware ({}) must beat blind round-robin ({})",
+        bad(&aware),
+        bad(&blind)
+    );
+    assert!(
+        bad(&aware) < bad(&single),
+        "failure-aware fleet ({}) must beat a 4x-core single replica ({})",
+        bad(&aware),
+        bad(&single)
+    );
+}
+
+/// Failover retries are keyed by fleet origin id, so a dumped trace
+/// replays the faulted fleet run exactly — same outcomes, same retry
+/// ledger, same step count.
+#[test]
+fn failover_retries_reproduce_from_dumped_trace() {
+    let scenario = Scenario::by_name("replica-failure-with-failover").unwrap();
+    let trace = scenario.generate(2);
+    let a = run_trace(cfg(2, 8), &trace);
+    assert_eq!(a.replicas, 4);
+    assert!(a.issued > 0);
+    assert!(
+        a.retries > 0,
+        "the downed replica must force at least one failover re-dispatch"
+    );
+
+    let dump = trace.to_json().to_string_pretty();
+    let parsed = cpuslow::util::json::parse(&dump).unwrap();
+    let replay = Trace::from_json(&parsed).unwrap();
+    assert_eq!(replay, trace, "fleet topology survives the dump");
+
+    let b = run_trace(cfg(2, 8), &replay);
+    assert_eq!(a.issued, b.issued);
+    assert_eq!(a.timeouts, b.timeouts);
+    assert_eq!(a.shed, b.shed);
+    assert_eq!(a.rejected, b.rejected);
+    assert_eq!(a.aborted, b.aborted);
+    assert_eq!(a.retries, b.retries);
+    assert_eq!(a.ttft_p50_s, b.ttft_p50_s);
+    assert_eq!(a.ttft_p99_s, b.ttft_p99_s);
+    assert_eq!(a.steps_completed, b.steps_completed);
+}
+
+fn fleet_sweep_output(jobs: usize) -> String {
+    let scenarios = vec![
+        Scenario::by_name("replica-failure-with-failover").unwrap().with_duration(6.0),
+    ];
+    let specs = serve_sweep::grid(
+        &scenarios,
+        &SystemSpec::h100(),
+        &ModelSpec::llama31_8b(),
+        &ServeConfig::default(),
+        &[2],
+        Some(&[6]),
+        &[1, 4],
+        &[RouterPolicy::RoundRobin, RouterPolicy::LeastLoaded],
+    );
+    let cells = seeded_cells(0, specs);
+    let results = Sweep::new("fleet-test", jobs)
+        .quiet(true)
+        .run(cells, serve_sweep::run_cell);
+    let table = serve_sweep::render_cells("fleet determinism", &results).render();
+    let json = serve_sweep::cells_to_json(&results).to_string_pretty();
+    table + &json
+}
+
+/// Acceptance criterion: the fleet sweep — router decisions, health
+/// probes, failover, the $/SLO-met cost column — is byte-identical
+/// across `--jobs` values, because every router decision keys off
+/// `(seed, origin id, window)` and never off worker schedule.
+#[test]
+fn fleet_sweep_jobs_byte_identical() {
+    let serial = fleet_sweep_output(1);
+    let parallel = fleet_sweep_output(3);
+    assert!(serial.contains("router"), "sweep table carries the router column");
+    assert!(serial.contains("$/SLO-met"), "sweep table carries the cost column");
+    assert_eq!(serial, parallel);
+}
+
+/// The diurnal autoscaler converges reproducibly: its grant log is a
+/// pure function of (window, stats), stays inside the configured core
+/// band, and actually moves when the offered load swings.
+#[test]
+fn diurnal_autoscaler_grant_log_is_deterministic_and_bounded() {
+    let scenario = Scenario::by_name("diurnal").unwrap().with_duration(16.0);
+    let fleet = scenario.fleet.clone().expect("diurnal ships a fleet config");
+    assert!(fleet.autoscale);
+    let trace = scenario.generate(4);
+    assert!(!trace.requests.is_empty());
+
+    let run = || {
+        let mut config = cfg(2, 4);
+        config.serve.fleet = fleet.clone();
+        let mut sim = FleetSim::new(config);
+        sim.set_class_deadlines(&[20.0]);
+        sim.set_run_seed(trace.seed);
+        let arrivals: Vec<StreamArrival> = trace
+            .requests
+            .iter()
+            .map(|r| StreamArrival {
+                at_ns: r.at_ns,
+                class: ReqClass::Normal,
+                prompt_tokens: r.prompt_tokens,
+                max_new_tokens: r.output_tokens,
+                content_seed: r.content_seed,
+                tag: r.class_idx as u32,
+            })
+            .collect();
+        let mut outcomes = 0u64;
+        sim.run_streaming(arrivals.into_iter(), 4.0, |_o| outcomes += 1);
+        let wall_ns = sim.sim.now_ns();
+        (sim.grant_log(), outcomes, sim.core_seconds(wall_ns))
+    };
+
+    let (log_a, n_a, core_s_a) = run();
+    let (log_b, n_b, core_s_b) = run();
+    assert_eq!(log_a, log_b, "grant decisions must be window-pure");
+    assert_eq!(n_a, n_b);
+    assert!(n_a > 0);
+    assert!(!log_a.is_empty(), "the diurnal swing must move the autoscaler");
+    for e in &log_a {
+        assert!(
+            e.cores >= fleet.min_cores_per_replica && e.cores <= fleet.max_cores_per_replica,
+            "grant {e:?} outside [{}, {}]",
+            fleet.min_cores_per_replica,
+            fleet.max_cores_per_replica
+        );
+    }
+    assert!(core_s_a > 0.0);
+    assert!((core_s_a - core_s_b).abs() < 1e-9, "cost integral must replay");
+}
+
+/// Hedging preserves the exactly-one-terminal-outcome contract: with a
+/// stalled replica forcing hedges (and the health prober racing it with
+/// evictions), every logical request still reports exactly once, under
+/// its fleet origin id, and the whole run replays byte-identically.
+#[test]
+fn hedged_requests_still_emit_exactly_one_outcome_each() {
+    let n: u64 = 12;
+    let run = || -> Vec<Outcome> {
+        let mut config = cfg(2, 6);
+        config.serve.fleet.replicas = 2;
+        config.serve.fleet.failure_aware = true;
+        config.serve.fleet.hedge_delay_s = 0.5;
+        let mut sim = FleetSim::new(config);
+        sim.set_class_deadlines(&[30.0]);
+        sim.install_faults(&[FaultSpec::CoreLoss {
+            start_s: 0.5,
+            end_s: 4.0,
+            cores: 6,
+            replica: Some(0),
+        }]);
+        let arrivals = (0..n).map(|i| StreamArrival {
+            at_ns: i * 250_000_000,
+            class: ReqClass::Normal,
+            prompt_tokens: 1_500,
+            max_new_tokens: 16,
+            content_seed: i,
+            tag: 0,
+        });
+        let mut out = Vec::new();
+        sim.run_streaming(arrivals, 30.0, |o| out.push(o));
+        out
+    };
+    let a = run();
+    assert_eq!(a.len() as u64, n, "exactly one terminal outcome per request");
+    let mut origins: Vec<u64> = a.iter().map(|o| o.origin).collect();
+    origins.sort_unstable();
+    origins.dedup();
+    assert_eq!(origins.len() as u64, n, "fleet origin ids are unique");
+    let extra_deliveries: u32 = a.iter().map(|o| o.retries).sum();
+    assert!(
+        extra_deliveries > 0,
+        "the stalled replica must force at least one hedge or failover"
+    );
+    let b = run();
+    assert_eq!(a, b, "hedged runs replay byte-identically");
+}

@@ -119,6 +119,8 @@ fn sweep_output(jobs: usize) -> String {
         &ServeConfig::default(),
         &[4],
         Some(&[5, 16]),
+        &[1],
+        &[],
     );
     let cells = seeded_cells(0, specs);
     let results = Sweep::new("test", jobs)
