@@ -81,6 +81,15 @@ fn main() {
     fleet.serve.fleet.failure_aware = true;
     cell(&mut suite, &fleet, "steady", 1.0, 8.0, "steady 8s fleet x4");
 
+    // Profiled cell: the steady small cell with attribution profiling
+    // armed. Profiling is observation-only and allocation-free in
+    // steady state, so this cell's per_sec should track the unprofiled
+    // steady cell; a widening gap flags overhead creeping into the
+    // record/charge hot paths.
+    let mut profiled = cfg();
+    profiled.serve.profile = true;
+    cell(&mut suite, &profiled, "steady", 1.0, 8.0, "steady 8s profiled");
+
     // Large cells: ~10× the offered request volume, same shapes.
     cell(&mut suite, &base, "steady", 5.0, 16.0, "steady x5 16s (large)");
     cell(&mut suite, &base, "bursty", 5.0, 16.0, "bursty x5 16s (large)");

@@ -17,6 +17,51 @@ pub use system::{Interconnect, SystemSpec};
 
 use anyhow::{bail, Result};
 
+/// Causal what-if cost multipliers (`cpuslow whatif`, COZ-style causal
+/// profiling): each factor virtually scales one component's simulated
+/// cost. The default of 1.0 is an *exact* no-op — the engine applies
+/// each factor as `(cost as f64 * factor) as u64`, and IEEE 754
+/// guarantees `x * 1.0 == x` — so baseline runs are byte-identical to
+/// runs that never consult the scales at all.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostScales {
+    /// Tokenization CPU cost per request.
+    pub tokenize: f64,
+    /// CPU-side kernel-launch cost per step.
+    pub launch: f64,
+    /// Collective-communication (allreduce) cost per step.
+    pub comm: f64,
+    /// GPU compute cost per step.
+    pub compute: f64,
+}
+
+impl Default for CostScales {
+    fn default() -> Self {
+        CostScales {
+            tokenize: 1.0,
+            launch: 1.0,
+            comm: 1.0,
+            compute: 1.0,
+        }
+    }
+}
+
+impl CostScales {
+    pub fn validate(&self) -> Result<()> {
+        for (name, v) in [
+            ("tokenize", self.tokenize),
+            ("launch", self.launch),
+            ("comm", self.comm),
+            ("compute", self.compute),
+        ] {
+            if !v.is_finite() || v <= 0.0 {
+                bail!("scales.{name} must be finite and > 0 (got {v})");
+            }
+        }
+        Ok(())
+    }
+}
+
 /// A fully-resolved experiment configuration: which machine, which model,
 /// how many GPUs, how many CPU cores, and the serving parameters.
 #[derive(Debug, Clone)]
@@ -28,6 +73,8 @@ pub struct RunConfig {
     pub serve: ServeConfig,
     pub workload: WorkloadConfig,
     pub seed: u64,
+    /// What-if cost multipliers; all 1.0 (exact no-op) by default.
+    pub scales: CostScales,
 }
 
 impl RunConfig {
@@ -40,6 +87,7 @@ impl RunConfig {
             serve: ServeConfig::default(),
             workload: WorkloadConfig::default(),
             seed: 0,
+            scales: CostScales::default(),
         }
     }
 
@@ -79,6 +127,7 @@ impl RunConfig {
         }
         self.serve.validate()?;
         self.workload.validate()?;
+        self.scales.validate()?;
         Ok(())
     }
 
@@ -109,6 +158,12 @@ impl RunConfig {
     /// timeout_s = 200.0
     /// max_output_tokens = 32
     /// control_plane_weight = 1
+    /// profile = false          # arm the attribution profiler
+    /// [scales]                 # causal what-if cost multipliers (1.0 = exact no-op)
+    /// tokenize = 1.0
+    /// launch = 1.0
+    /// comm = 1.0
+    /// compute = 1.0
     /// [workload]
     /// scenario = "bursty"     # catalog name; see `cpuslow scenarios`
     /// duration_s = 60.0
@@ -158,6 +213,7 @@ impl RunConfig {
             doc.int_or("serve", "max_output_tokens", s.max_output_tokens as i64) as usize;
         s.control_plane_weight =
             doc.int_or("serve", "control_plane_weight", s.control_plane_weight as i64) as u32;
+        s.profile = doc.bool_or("serve", "profile", s.profile);
         let r = &mut s.resilience;
         r.admission_max_queue =
             doc.int_or("resilience", "admission_max_queue", r.admission_max_queue as i64) as usize;
@@ -194,6 +250,11 @@ impl RunConfig {
         fl.autoscale_idle_hi = doc.float_or("fleet", "autoscale_idle_hi", fl.autoscale_idle_hi);
         fl.autoscale_every =
             doc.int_or("fleet", "autoscale_every", fl.autoscale_every as i64) as u32;
+        let sc = &mut cfg.scales;
+        sc.tokenize = doc.float_or("scales", "tokenize", sc.tokenize);
+        sc.launch = doc.float_or("scales", "launch", sc.launch);
+        sc.comm = doc.float_or("scales", "comm", sc.comm);
+        sc.compute = doc.float_or("scales", "compute", sc.compute);
         let w = &mut cfg.workload;
         w.scenario = doc.str_or("workload", "scenario", "");
         w.rate_scale = doc.float_or("workload", "rate_scale", w.rate_scale);
@@ -342,6 +403,26 @@ control_plane_weight = 4
         // invalid values are rejected
         assert!(RunConfig::from_toml_str("[fleet]\nrouter = \"random\"\n").is_err());
         assert!(RunConfig::from_toml_str("[fleet]\nreplicas = 0\n").is_err());
+    }
+
+    #[test]
+    fn toml_scales_and_profile() {
+        let cfg = RunConfig::from_toml_str(
+            "[serve]\nprofile = true\n[scales]\ntokenize = 0.5\ncomm = 1.5\n",
+        )
+        .unwrap();
+        assert!(cfg.serve.profile);
+        assert_eq!(cfg.scales.tokenize, 0.5);
+        assert_eq!(cfg.scales.launch, 1.0);
+        assert_eq!(cfg.scales.comm, 1.5);
+        assert_eq!(cfg.scales.compute, 1.0);
+        // absent sections keep the exact-no-op defaults
+        let cfg = RunConfig::from_toml_str("[run]\ngpus = 4\n").unwrap();
+        assert!(!cfg.serve.profile);
+        assert_eq!(cfg.scales, CostScales::default());
+        // non-positive scales are rejected
+        assert!(RunConfig::from_toml_str("[scales]\nlaunch = 0.0\n").is_err());
+        assert!(RunConfig::from_toml_str("[scales]\ncompute = -1.0\n").is_err());
     }
 
     #[test]

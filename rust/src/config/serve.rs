@@ -347,6 +347,12 @@ pub struct ServeConfig {
     /// Fleet layer: replicated serving behind a deterministic router.
     /// Defaults to one replica (layer off).
     pub fleet: FleetConfig,
+    /// Arm the always-on attribution profiler (`profile::Profiler`):
+    /// ring-buffer span tracing plus per-request phase timelines.
+    /// Observation-only — outcomes are byte-identical either way (the
+    /// differential tests pin this) — but reports then carry a
+    /// `ProfileReport`. Default off.
+    pub profile: bool,
 }
 
 impl Default for ServeConfig {
@@ -365,6 +371,7 @@ impl Default for ServeConfig {
             control_plane_weight: 1,
             resilience: ResilienceConfig::default(),
             fleet: FleetConfig::default(),
+            profile: false,
         }
     }
 }

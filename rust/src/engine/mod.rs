@@ -47,6 +47,7 @@ pub use tokenizer_pool::{chunk_cost_iter, chunk_costs, ChunkCosts, TokJob, Token
 use crate::config::{ResilienceConfig, RunConfig, ServeConfig};
 use crate::gpu::{self, timing, FleetRef, Kernel, KernelKind};
 use crate::ipc::{SimChannel, SimShmBroadcast};
+use crate::profile::{GpuSlice, ProfRef, ProfileReport, Profiler, SpanKind};
 use crate::simcpu::{GateId, Op, Program, SharedCall, Sim, SimParams, TaskCtx};
 use crate::util::rng::SplitMix64;
 use rustc_hash::{FxHashMap, FxHashSet};
@@ -172,6 +173,11 @@ pub(crate) struct Env {
     /// The run's compiled fault schedule (shared with the tokenizer
     /// pool; empty unless [`ServingSim::install_faults`] ran).
     pub(crate) faults: Rc<RefCell<FaultPlan>>,
+    /// Attribution profiler, armed by `serve.profile`. Observation-only:
+    /// hooks record into it but never read it back, so an armed run's
+    /// event sequence — and Outcomes — match an unarmed one exactly.
+    /// Fleet runs share one profiler across every replica.
+    pub(crate) prof: Option<ProfRef>,
 }
 
 /// One arrival for the submission API and the streaming driver.
@@ -224,7 +230,17 @@ impl ServingSim {
             trace_bucket_ns: tracing.then_some(100_000_000), // 100 ms buckets
         };
         let mut sim = Sim::new(params);
-        let env = spawn_replica(&mut sim, Rc::new(cfg), Rc::new(costs), tracing);
+        let prof = cfg
+            .serve
+            .profile
+            .then(|| Rc::new(RefCell::new(Profiler::new())));
+        if let Some(p) = &prof {
+            let pc = Rc::clone(p);
+            sim.set_dispatch_probe(move |now, _class, waited| {
+                pc.borrow_mut().ring.record(SpanKind::Dispatch, now, waited);
+            });
+        }
+        let env = spawn_replica(&mut sim, Rc::new(cfg), Rc::new(costs), tracing, prof);
         ServingSim { sim, env }
     }
 
@@ -519,6 +535,125 @@ impl ServingSim {
     pub fn sim_stats(&self) -> &crate::simcpu::SimStats {
         self.sim.stats()
     }
+
+    /// Build the attribution report, or `None` when `serve.profile` is
+    /// off. Finalizes lazily on first call: attempts still in flight at
+    /// the horizon are recorded with their partial phase spans (the tail
+    /// lands in the phase they were in), then the profiler is sealed so
+    /// repeated calls return the same report.
+    pub fn profile_report(&mut self) -> Option<ProfileReport> {
+        let prof = self.env.prof.clone()?;
+        let now = self.sim.now_ns();
+        if !prof.borrow().finalized() {
+            record_leftover_attempts(&prof, &self.env, now);
+            prof.borrow_mut().mark_finalized();
+        }
+        let mut report = prof.borrow().build_report();
+        report.elapsed_ns = now;
+        push_gpu_slices(&mut report, 0, &self.env, now);
+        report.cpu_by_class = cpu_by_class(self.sim.stats());
+        Some(report)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Profiling assembly (shared by ServingSim and the fleet layer)
+// ---------------------------------------------------------------------
+
+/// Record every attempt still in flight in one replica's slabs at the
+/// horizon. Finished attempts were recorded at their terminal hooks
+/// (step completion or `resolve_failed`) and are skipped here, so each
+/// attempt lands in the profiler exactly once.
+pub(crate) fn record_leftover_attempts(prof: &ProfRef, env: &Env, now: u64) {
+    let shared = env.shared.borrow();
+    let mut p = prof.borrow_mut();
+    for r in shared.sched.requests.values() {
+        if !r.is_done() {
+            p.finish_request(r, now);
+        }
+    }
+    for r in shared.pending.values() {
+        if !r.is_done() {
+            p.finish_request(r, now);
+        }
+    }
+}
+
+/// Append one [`GpuSlice`] per rank of a replica's device fleet; idle is
+/// the residual so busy + sync + idle == elapsed exactly.
+pub(crate) fn push_gpu_slices(report: &mut ProfileReport, replica: u32, env: &Env, now: u64) {
+    let mut fleet = env.gpus.borrow_mut();
+    fleet.flush(now);
+    for rank in 0..env.cfg.n_gpus {
+        let busy = fleet.busy_ns(rank);
+        let sync = fleet.sync_wait_ns(rank);
+        report.gpus.push(GpuSlice {
+            replica,
+            rank: rank as u32,
+            busy_ns: busy,
+            sync_ns: sync,
+            idle_ns: now.saturating_sub(busy + sync),
+            elapsed_ns: now,
+        });
+    }
+}
+
+/// Per-class CPU core-seconds from the substrate, sorted by class name
+/// so the report is deterministic regardless of hash-map order.
+pub(crate) fn cpu_by_class(stats: &crate::simcpu::SimStats) -> Vec<(String, f64)> {
+    let mut v: Vec<(String, f64)> = stats
+        .class_cpu_ns
+        .iter()
+        .map(|(&class, &ns)| (class.to_string(), ns as f64 / 1e9))
+        .collect();
+    v.sort_by(|a, b| a.0.cmp(&b.0));
+    v
+}
+
+/// Scale a duration by a what-if cost factor. `s == 1.0` is an exact
+/// no-op — no u64→f64 round-trip — so unscaled runs stay byte-identical
+/// to builds without the what-if machinery.
+#[inline]
+pub(crate) fn scale_ns(ns: u64, s: f64) -> u64 {
+    if s == 1.0 {
+        ns
+    } else {
+        (ns as f64 * s) as u64
+    }
+}
+
+/// Cap-charge one step's per-rank durations against a request's elapsed
+/// window since its last charge: launch, then compute, then comm, each
+/// takes at most what remains of the window, and the residual is idle
+/// (stall — the request sat in the batch while the step dragged). The
+/// charges therefore sum exactly to the window, which is what makes the
+/// per-request conservation invariant hold by construction.
+fn charge_step(
+    requests: &mut RequestSlab,
+    id: RequestId,
+    now: u64,
+    launch: u64,
+    comp: u64,
+    comm: u64,
+) {
+    let Some(r) = requests.get_mut(id) else { return };
+    let mark = if r.phase_mark == 0 {
+        r.admitted_at.unwrap_or(now)
+    } else {
+        r.phase_mark
+    };
+    let mut rem = now.saturating_sub(mark);
+    let c = launch.min(rem);
+    r.ph_launch_ns += c;
+    rem -= c;
+    let c = comp.min(rem);
+    r.ph_compute_ns += c;
+    rem -= c;
+    let c = comm.min(rem);
+    r.ph_comm_ns += c;
+    rem -= c;
+    r.ph_idle_ns += rem;
+    r.phase_mark = now;
 }
 
 // ---------------------------------------------------------------------
@@ -535,6 +670,7 @@ pub(crate) fn spawn_replica(
     cfg: Rc<RunConfig>,
     costs: Rc<EngineCosts>,
     tracing: bool,
+    prof: Option<ProfRef>,
 ) -> Env {
     let gpus = gpu::Fleet::new(cfg.n_gpus, tracing.then_some(0.1));
     let channel = SimChannel::new(sim);
@@ -585,6 +721,7 @@ pub(crate) fn spawn_replica(
         step_done,
         pool,
         faults,
+        prof,
     };
     // EngineCore task. With control_plane_weight > 1 the engine and
     // workers run at CFS priority (the §VI mitigation).
@@ -680,7 +817,10 @@ fn deliver_attempt(
     arrival_override: Option<u64>,
 ) {
     let s_per_token = env.cfg.system.tokenize_s_per_token / env.cfg.system.cpu_single_core_scale;
-    let tokenize_ns = (a.prompt_tokens as f64 * s_per_token * 1e9) as u64;
+    let tokenize_ns = scale_ns(
+        (a.prompt_tokens as f64 * s_per_token * 1e9) as u64,
+        env.cfg.scales.tokenize,
+    );
     let arrival_ns = arrival_override.unwrap_or_else(|| sim.now_ns());
     let mut request = Request::new(id, a.class, arrival_ns, a.prompt_tokens, a.max_new_tokens);
     request.content_seed = a.content_seed;
@@ -696,7 +836,18 @@ fn deliver_attempt(
             cost_ns,
             on_done: Box::new(move |ctx| {
                 let mut r = request;
-                r.tokenized_at = Some(ctx.now_ns());
+                let now = ctx.now_ns();
+                r.tokenized_at = Some(now);
+                if let Some(prof) = &envc.prof {
+                    // Arrival → tokenized, i.e. the client-visible
+                    // tokenizer-stage latency including queueing behind
+                    // the executor backlog (retries include backoff).
+                    prof.borrow_mut().ring.record(
+                        SpanKind::Tokenize,
+                        now,
+                        now.saturating_sub(r.arrival_ns),
+                    );
+                }
                 envc.shared.borrow_mut().pending.insert(r.clone());
                 envc.channel.push_external(r);
                 ctx.signal(envc.channel.sent_gate(), 1);
@@ -853,6 +1004,7 @@ fn resolve_failed(
     ctx: &mut TaskCtx,
     serve: &ServeConfig,
     retry_call: &SharedCall,
+    prof: Option<&ProfRef>,
     shared: &mut EngineShared,
     mut r: Request,
     status: OutcomeStatus,
@@ -862,6 +1014,12 @@ fn resolve_failed(
     // logical request's terminal outcome.
     if !shared.cancelled.is_empty() && shared.cancelled.remove(&r.origin) {
         return;
+    }
+    // Every failed delivery attempt ends here exactly once (a parked
+    // retry is a *new* attempt with a fresh id), so this is the one
+    // terminal record site for shed/rejected/aborted attempts.
+    if let Some(p) = prof {
+        p.borrow_mut().finish_request(&r, ctx.now_ns());
     }
     r.phase = ReqPhase::Finished;
     r.status = Some(status);
@@ -928,6 +1086,7 @@ fn run_watchdog(
     ctx: &mut TaskCtx,
     serve: &ServeConfig,
     retry_call: &SharedCall,
+    prof: Option<&ProfRef>,
     shared: &mut EngineShared,
     scratch: &mut Vec<RequestId>,
     now: u64,
@@ -977,7 +1136,7 @@ fn run_watchdog(
     for i in 0..scratch.len() {
         let id = scratch[i];
         if let Some(r) = shared.sched.requests.remove(id) {
-            resolve_failed(ctx, serve, retry_call, shared, r, OutcomeStatus::Aborted);
+            resolve_failed(ctx, serve, retry_call, prof, shared, r, OutcomeStatus::Aborted);
         }
     }
 }
@@ -1137,6 +1296,7 @@ impl Program for EngineCore {
                                 ctx,
                                 serve,
                                 &self.retry_call,
+                                self.env.prof.as_ref(),
                                 shared,
                                 &mut self.abort_scratch,
                                 now,
@@ -1158,6 +1318,7 @@ impl Program for EngineCore {
                                     ctx,
                                     serve,
                                     &self.retry_call,
+                                    self.env.prof.as_ref(),
                                     shared,
                                     req,
                                     OutcomeStatus::Shed,
@@ -1184,6 +1345,7 @@ impl Program for EngineCore {
                                     ctx,
                                     serve,
                                     &self.retry_call,
+                                    self.env.prof.as_ref(),
                                     shared,
                                     r,
                                     OutcomeStatus::Rejected,
@@ -1262,9 +1424,36 @@ impl Program for EngineCore {
                             &plan,
                             now,
                         );
-                        if harvesting {
-                            self.finish_scratch.clear();
-                            self.finish_scratch.extend_from_slice(finished);
+                        self.finish_scratch.clear();
+                        self.finish_scratch.extend_from_slice(finished);
+                    }
+                    // Attribution: cap-charge the step's launch/compute/
+                    // comm durations to every batched request, then
+                    // record finished ones before harvest evicts them.
+                    // Observation-only — nothing below feeds back into
+                    // scheduling, so armed and unarmed runs stay
+                    // event-identical.
+                    if let Some(prof) = &self.env.prof {
+                        let (launch, comp, comm, _) = step_durations(&self.env.cfg, &plan);
+                        for &(id, _, _) in &plan.prefill {
+                            charge_step(&mut shared.sched.requests, id, now, launch, comp, comm);
+                        }
+                        for &id in &plan.decode {
+                            charge_step(&mut shared.sched.requests, id, now, launch, comp, comm);
+                        }
+                        let mut p = prof.borrow_mut();
+                        p.ring
+                            .record(SpanKind::Step, now, now - self.step_started_ns);
+                        for &id in &self.finish_scratch {
+                            if let Some(r) = shared.sched.requests.get(id) {
+                                // Router-cancelled attempts are dropped
+                                // without an outcome; skip them here too.
+                                if shared.cancelled.is_empty()
+                                    || !shared.cancelled.contains(&r.origin)
+                                {
+                                    p.finish_request(r, now);
+                                }
+                            }
                         }
                     }
                     if harvesting {
@@ -1451,6 +1640,13 @@ impl Program for GpuWorker {
                             faults.launch_spike_ns(ctx.now_ns(), self.step_seq, self.rank as u64)
                         }
                     };
+                    if let Some(prof) = &self.env.prof {
+                        prof.borrow_mut().ring.record(
+                            SpanKind::Launch,
+                            ctx.now_ns(),
+                            launch_cpu + spike,
+                        );
+                    }
                     // CPU: issue the kernel launches (delayed under
                     // contention → GPU idles → §V-A).
                     return Op::Compute {
@@ -1512,7 +1708,13 @@ fn step_durations(cfg: &RunConfig, plan: &StepPlan) -> (u64, u64, u64, u64) {
     let comm = 2 * model.n_layers as u64 * timing::allreduce_ns(sys, n, per_layer_bytes);
     let launch_cpu =
         (timing::launch_cpu_ns(sys, launches) as f64 / sys.cpu_single_core_scale) as u64;
-    (launch_cpu, comp, comm, plan.collective_id)
+    // What-if cost scales (1.0 = exact no-op; see `scale_ns`).
+    (
+        scale_ns(launch_cpu, cfg.scales.launch),
+        scale_ns(comp, cfg.scales.compute),
+        scale_ns(comm, cfg.scales.comm),
+        plan.collective_id,
+    )
 }
 
 #[cfg(test)]

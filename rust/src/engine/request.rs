@@ -116,6 +116,28 @@ pub struct Request {
     pub admitted_at: Option<u64>,
     pub first_token_at: Option<u64>,
     pub finished_at: Option<u64>,
+
+    // --- phase attribution (profile::phases_of) ---
+    //
+    // In-batch time is charged incrementally at each step completion:
+    // the step's launch/compute/comm durations cap-charge against the
+    // elapsed window since `phase_mark`, and the residual is idle
+    // (stall). Charges therefore sum exactly to [admitted, phase_mark]
+    // — the conservation invariant tests/test_profile.rs enforces.
+    // Pure bookkeeping fields: never read by the engine's scheduling
+    // decisions and deliberately absent from `Outcome`, so profiling
+    // cannot perturb results.
+    /// Virtual time in-batch charges are complete up to (0 = none yet;
+    /// admission time is the implicit start).
+    pub phase_mark: u64,
+    /// Attributed CPU-side kernel-launch time (ns).
+    pub ph_launch_ns: u64,
+    /// Attributed GPU compute time (ns).
+    pub ph_compute_ns: u64,
+    /// Attributed collective-communication time (ns).
+    pub ph_comm_ns: u64,
+    /// Attributed in-batch stall time (ns).
+    pub ph_idle_ns: u64,
 }
 
 impl Request {
@@ -145,6 +167,11 @@ impl Request {
             admitted_at: None,
             first_token_at: None,
             finished_at: None,
+            phase_mark: 0,
+            ph_launch_ns: 0,
+            ph_compute_ns: 0,
+            ph_comm_ns: 0,
+            ph_idle_ns: 0,
         }
     }
 

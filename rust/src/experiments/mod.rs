@@ -152,6 +152,9 @@ pub fn serve_once(args: &Args) {
             )
         });
     }
+    // `--profile` arms attribution profiling on top of whatever the
+    // config file says; it never turns an armed config off.
+    cfg.serve.profile = cfg.serve.profile || args.flag("profile");
     let scenario_name = args
         .get("scenario")
         .map(str::to_string)
@@ -267,6 +270,27 @@ fn serve_scenario(cfg: RunConfig, name: &str, args: &Args) {
         report.steps_completed,
         report.cpu_core_seconds
     );
+    // Ride-along attribution table when profiling is armed (`--profile`
+    // or `serve.profile = true`). The serving report above is
+    // byte-identical either way; only these extra lines appear.
+    if let Some(p) = &report.profile {
+        let shares = p.phase_shares();
+        let mut t = Table::new(&["phase", "total (s)", "share", "p99 (s)"])
+            .with_title(format!(
+                "Phase attribution ({} terminal attempts)",
+                p.requests
+            ))
+            .align(0, crate::report::table::Align::Left);
+        for k in 0..crate::profile::N_PHASES {
+            t.row(vec![
+                crate::profile::PHASE_NAMES[k].to_string(),
+                format!("{:.3}", p.phase_total_s[k]),
+                percent_label(shares[k]),
+                format!("{:.4}", p.phase_p99_s[k]),
+            ]);
+        }
+        print!("{}", t.render());
+    }
 }
 
 /// `cpuslow calibrate` — real tokenizer throughput on this host.

@@ -59,6 +59,9 @@ pub struct CellResult {
     /// Run cost at p5.48xlarge rates: GPU-hours across all replicas
     /// plus metered CPU core-hours (the autoscaler's grant integral).
     pub cost_usd: f64,
+    /// Per-phase attribution shares when the sweep ran with
+    /// `--profile`; `None` on unprofiled cells.
+    pub phase_shares: Option<[f64; crate::profile::N_PHASES]>,
 }
 
 impl CellResult {
@@ -177,6 +180,7 @@ pub fn run_cell(cell: SeededCell<CellSpec>) -> CellResult {
         ttft_p99_s: report.ttft_p99_s,
         gpu_idle_share: report.gpu_idle_share,
         cost_usd,
+        phase_shares: report.profile.as_ref().map(|p| p.phase_shares()),
     }
 }
 
@@ -219,6 +223,32 @@ pub fn render_cells(title: &str, cells: &[CellResult]) -> Table {
         ]);
     }
     t
+}
+
+/// Companion table for `--profile` sweeps: one row per profiled cell
+/// with the per-phase attribution shares. `None` when no cell carried
+/// profile data (the sweep ran unprofiled).
+pub fn render_phase_shares(cells: &[CellResult]) -> Option<Table> {
+    if cells.iter().all(|c| c.phase_shares.is_none()) {
+        return None;
+    }
+    let mut header: Vec<&str> = vec!["scenario", "GPUs", "cores", "reps"];
+    header.extend(crate::profile::PHASE_NAMES);
+    let mut t = Table::new(&header)
+        .with_title("Phase attribution shares (profiled cells)".to_string())
+        .align(0, crate::report::table::Align::Left);
+    for c in cells {
+        let Some(shares) = c.phase_shares else { continue };
+        let mut row = vec![
+            c.scenario.clone(),
+            c.n_gpus.to_string(),
+            c.cores.to_string(),
+            c.replicas.to_string(),
+        ];
+        row.extend(shares.iter().map(|s| percent_label(*s)));
+        t.row(row);
+    }
+    Some(t)
 }
 
 pub fn cells_to_json(cells: &[CellResult]) -> Json {
@@ -306,10 +336,14 @@ pub fn run(args: &Args) {
             .map(|c| c.model.clone())
             .unwrap_or_else(ModelSpec::llama31_8b),
     };
-    let serve = config_file
+    let mut serve = config_file
         .as_ref()
         .map(|c| c.serve.clone())
         .unwrap_or_default();
+    // `--profile` arms per-cell attribution; the serving columns stay
+    // byte-identical (profiling is observation-only) and a second
+    // phase-share table rides along below the main one.
+    serve.profile = serve.profile || args.flag("profile");
     let scenarios = resolve_scenarios(args, &workload, quick);
     let gpus_list: Vec<usize> = args
         .u64_list("gpus")
@@ -364,6 +398,9 @@ pub fn run(args: &Args) {
         &results,
     );
     print!("{}", t.render());
+    if let Some(pt) = render_phase_shares(&results) {
+        print!("{}", pt.render());
+    }
     let dir = out_dir(args);
     let json_path =
         report::write_json(&dir, "serve_sweep", &cells_to_json(&results)).expect("write json");

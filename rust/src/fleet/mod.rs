@@ -44,6 +44,7 @@ use crate::engine::{
     self, CoreHog, EngineCosts, FaultPlan, FaultSpec, Outcome, OutcomeStatus, RequestId,
     StreamArrival, StreamStats,
 };
+use crate::profile::{ProfRef, ProfileReport, Profiler, SpanKind};
 use crate::simcpu::{SharedCall, Sim, SimParams};
 use crate::util::rng::SplitMix64;
 use rustc_hash::FxHashMap;
@@ -159,6 +160,9 @@ pub(crate) struct FleetShared {
     pub(crate) max_cores: usize,
     pub(crate) min_cores: usize,
     pub(crate) ctl: RefCell<FleetCtl>,
+    /// One shared attribution profiler for the whole fleet (every
+    /// replica's hooks fold into it); `None` unless `serve.profile`.
+    pub(crate) prof: Option<ProfRef>,
     tick_call: RefCell<Option<SharedCall>>,
 }
 
@@ -206,6 +210,16 @@ impl FleetSim {
             trace_bucket_ns: None,
         };
         let mut sim = Sim::new(params);
+        let prof = cfg
+            .serve
+            .profile
+            .then(|| Rc::new(RefCell::new(Profiler::new())));
+        if let Some(p) = &prof {
+            let pc = Rc::clone(p);
+            sim.set_dispatch_probe(move |now, _class, waited| {
+                pc.borrow_mut().ring.record(SpanKind::Dispatch, now, waited);
+            });
+        }
         let costs = Rc::new(costs);
         // Each replica sees a single-replica config with its per-replica
         // core count (sizes its tokenizer pool like a standalone engine).
@@ -217,7 +231,13 @@ impl FleetSim {
         let mut envs = Vec::with_capacity(n_replicas);
         let mut reps = Vec::with_capacity(n_replicas);
         for r in 0..n_replicas {
-            let env = engine::spawn_replica(&mut sim, Rc::clone(&rep_cfg), Rc::clone(&costs), false);
+            let env = engine::spawn_replica(
+                &mut sim,
+                Rc::clone(&rep_cfg),
+                Rc::clone(&costs),
+                false,
+                prof.clone(),
+            );
             env.shared.borrow_mut().run_seed = replica_seed(cfg.seed, r);
             let mut limiters = Vec::new();
             if fleet.autoscale {
@@ -275,6 +295,7 @@ impl FleetSim {
                 hedge_scratch: Vec::new(),
                 down_scratch: Vec::new(),
             }),
+            prof,
             tick_call: RefCell::new(None),
         });
         let weak = Rc::downgrade(&fs);
@@ -551,6 +572,28 @@ impl FleetSim {
         StreamStats { submitted: ctl.submitted, last_arrival_ns: ctl.last_arrival_ns }
     }
 
+    /// Build the fleet-wide attribution report, or `None` when
+    /// `serve.profile` is off. All replicas fold into one profiler;
+    /// per-GPU slices carry their replica index. Finalizes lazily on
+    /// first call, like [`engine::ServingSim::profile_report`].
+    pub fn profile_report(&mut self) -> Option<ProfileReport> {
+        let prof = self.fs.prof.clone()?;
+        let now = self.sim.now_ns();
+        if !prof.borrow().finalized() {
+            for env in &self.fs.envs {
+                engine::record_leftover_attempts(&prof, env, now);
+            }
+            prof.borrow_mut().mark_finalized();
+        }
+        let mut report = prof.borrow().build_report();
+        report.elapsed_ns = now;
+        for (r, env) in self.fs.envs.iter().enumerate() {
+            engine::push_gpu_slices(&mut report, r as u32, env, now);
+        }
+        report.cpu_by_class = engine::cpu_by_class(self.sim.stats());
+        Some(report)
+    }
+
     fn drain_fleet_outbox(&mut self, scratch: &mut Vec<Outcome>, on_outcome: &mut impl FnMut(Outcome)) {
         {
             let ctl = &mut *self.fs.ctl.borrow_mut();
@@ -654,6 +697,15 @@ fn dispatch(sim: &mut Sim, fs: &FleetShared, fo: u64, r: usize, arm: Arm) {
     };
     let local = engine::fleet_submit(sim, &fs.envs[r], arrival);
     let now = sim.now_ns();
+    if let Some(prof) = &fs.prof {
+        // Routing delay: arrival → this delivery's dispatch (covers
+        // failover waits and hedge timers, zero for a fresh arrival).
+        prof.borrow_mut().ring.record(
+            SpanKind::Route,
+            now,
+            now.saturating_sub(arrival.at_ns),
+        );
+    }
     let ctl = &mut *fs.ctl.borrow_mut();
     let rep = &mut ctl.replicas[r];
     rep.translate.insert(local, fo);

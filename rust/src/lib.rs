@@ -26,6 +26,7 @@ pub mod experiments;
 pub mod fleet;
 pub mod gpu;
 pub mod ipc;
+pub mod profile;
 pub mod simcpu;
 pub mod tokenizer;
 pub mod workload;

@@ -16,6 +16,8 @@ fn main() {
             ("serve", "run the simulated serving stack once (single engine or replicated fleet) and report outcomes"),
             ("serve-sweep", "scenario × replicas × router × cores × TP grid: TTFT p50/p99, timeout/shed/abort rates, GPU idle, $/SLO-met"),
             ("scenarios", "print the workload scenario catalog (incl. resilience gates and injected faults)"),
+            ("diagnose", "run one scenario with attribution profiling and print the bottleneck breakdown + suggestions"),
+            ("whatif", "COZ-style causal profiling: scale component costs ±delta, report d(TTFT p99)/d(component)"),
             ("calibrate", "measure real Rust-BPE tokenizer throughput on this host"),
             ("bench-check <current.json>...", "compare BENCH_*.json files against committed baselines; exits 1 on regression"),
             ("list", "list available experiments"),
@@ -38,6 +40,9 @@ fn main() {
             ("--scenarios LIST", "serve-sweep: catalog subset, e.g. steady,bursty"),
             ("--rate-scale F", "scenario runs: multiply every class arrival rate by F"),
             ("--duration S", "scenario runs: override the generation window (seconds)"),
+            ("--profile", "serve / serve-sweep: arm attribution profiling (phase tables ride along; outcomes unchanged)"),
+            ("--components LIST", "whatif: components to scale, from tokenize,launch,comm,compute (default tokenize,launch,comm)"),
+            ("--delta F", "whatif: cost-scale perturbation, fraction in (0,1) (default 0.25)"),
             ("--baseline PATH", "bench-check: baseline JSON (default: <current>.baseline.json)"),
             ("--max-regression F", "bench-check: allowed per_sec drop as a fraction (default 0.20)"),
         ],
@@ -52,6 +57,8 @@ fn main() {
         Some("serve") => cpuslow::experiments::serve_once(&args),
         Some("serve-sweep") => cpuslow::experiments::serve_sweep::run(&args),
         Some("scenarios") => cpuslow::experiments::serve_sweep::print_catalog(),
+        Some("diagnose") => cpuslow::profile::diagnose::run(&args),
+        Some("whatif") => cpuslow::profile::whatif::run(&args),
         Some("calibrate") => cpuslow::experiments::calibrate_cmd(&args),
         Some("bench-check") => bench_check(&args),
         _ => print!("{}", usage.render()),

@@ -1,0 +1,173 @@
+//! `cpuslow diagnose` — an InferScope-style "where does the time
+//! actually go" breakdown with rule-based suggestions.
+//!
+//! Runs one catalog scenario with profiling forced on and renders the
+//! per-phase attribution, per-GPU on-/off-GPU split, CPU time by task
+//! class, and trace-ring counters, then applies deterministic
+//! threshold rules to say *why* the run was slow ("GPU idle 42%;
+//! tokenization dominates; add cores"). `render` is a pure function of
+//! the report, so the golden-output test and the CLI share one code
+//! path and reruns are byte-identical.
+
+use super::{ProfileReport, SpanKind, N_PHASES, PHASE_NAMES, PH_IDLE};
+use crate::config::RunConfig;
+use crate::report::{percent_label, Table};
+use crate::util::cli::Args;
+use crate::workload::scenario::{resolve_cli_scenario, run_scenario, ScenarioReport};
+
+/// CLI entry point: resolve config + scenario, run with profiling
+/// forced on, print the diagnosis.
+pub fn run(args: &Args) {
+    let mut cfg = if let Some(path) = args.get("config") {
+        RunConfig::from_toml_file(std::path::Path::new(path)).expect("config file")
+    } else {
+        crate::experiments::resolve_config(args, "h100", 4)
+    };
+    cfg.serve.profile = true;
+    let name = args
+        .get("scenario")
+        .map(str::to_string)
+        .or_else(|| (!cfg.workload.scenario.is_empty()).then(|| cfg.workload.scenario.clone()))
+        .unwrap_or_else(|| "steady".to_string());
+    let scenario = resolve_cli_scenario(&name, &cfg.workload, args, args.flag("quick"));
+    let seed = args.u64_or("seed", cfg.seed);
+    let report = run_scenario(cfg, &scenario, seed);
+    print!("{}", render(&report, seed));
+}
+
+/// Render the full diagnosis. Pure: same report → same bytes.
+pub fn render(report: &ScenarioReport, seed: u64) -> String {
+    let mut out = String::new();
+    let Some(p) = &report.profile else {
+        return format!(
+            "scenario '{}': no profile data (run with profiling enabled)\n",
+            report.scenario
+        );
+    };
+    out.push_str(&format!(
+        "Diagnosis: scenario '{}' (seed {seed}) — {} requests on {} replica{}, \
+         wall {:.1} s, GPU idle {}\n",
+        report.scenario,
+        report.issued,
+        report.replicas,
+        if report.replicas == 1 { "" } else { "s" },
+        report.wall_secs,
+        percent_label(report.gpu_idle_share),
+    ));
+
+    // Per-request phase attribution: where attributed request time went.
+    let shares = p.phase_shares();
+    let mut t = Table::new(&["phase", "total (s)", "share", "p50 (s)", "p99 (s)"])
+        .with_title(format!(
+            "Per-request phase attribution ({} terminal attempts)",
+            p.requests
+        ))
+        .align(0, crate::report::table::Align::Left);
+    for k in 0..N_PHASES {
+        t.row(vec![
+            PHASE_NAMES[k].to_string(),
+            format!("{:.3}", p.phase_total_s[k]),
+            percent_label(shares[k]),
+            format!("{:.4}", p.phase_p50_s[k]),
+            format!("{:.4}", p.phase_p99_s[k]),
+        ]);
+    }
+    out.push_str(&t.render());
+
+    // Per-GPU on-/off-GPU split (busy + sync + idle == elapsed).
+    let mut t = Table::new(&["replica", "rank", "busy", "collective sync", "idle"])
+        .with_title("Per-GPU attribution".to_string());
+    for g in &p.gpus {
+        let e = g.elapsed_ns.max(1) as f64;
+        t.row(vec![
+            g.replica.to_string(),
+            g.rank.to_string(),
+            percent_label(g.busy_ns as f64 / e),
+            percent_label(g.sync_ns as f64 / e),
+            percent_label(g.idle_ns as f64 / e),
+        ]);
+    }
+    out.push_str(&t.render());
+
+    // CPU core-seconds by simcpu task class.
+    let mut t = Table::new(&["task class", "CPU core-s"])
+        .with_title("CPU time by task class".to_string())
+        .align(0, crate::report::table::Align::Left);
+    for (class, secs) in &p.cpu_by_class {
+        t.row(vec![class.clone(), format!("{secs:.2}")]);
+    }
+    out.push_str(&t.render());
+
+    let c = p.ring.counts;
+    out.push_str(&format!(
+        "trace ring: {} dispatch, {} tokenize, {} step, {} launch, {} route spans \
+         (capacity {}, {} evicted after sketch-fold)\n",
+        c[SpanKind::Dispatch as usize],
+        c[SpanKind::Tokenize as usize],
+        c[SpanKind::Step as usize],
+        c[SpanKind::Launch as usize],
+        c[SpanKind::Route as usize],
+        p.ring.capacity,
+        p.ring.evicted,
+    ));
+    for s in suggestions(report, p) {
+        out.push_str(&format!("suggestion: {s}\n"));
+    }
+    out
+}
+
+/// Deterministic rule-based suggestions (fixed thresholds, no
+/// randomness — the golden test pins these lines).
+pub fn suggestions(report: &ScenarioReport, p: &ProfileReport) -> Vec<String> {
+    let shares = p.phase_shares();
+    let mut out = Vec::new();
+    // Dominant off-GPU phase drives the headline advice. `max_by` takes
+    // the last maximum, so ties resolve by fixed phase order.
+    let (top, top_share) = shares
+        .iter()
+        .copied()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(&b.1).expect("shares are finite"))
+        .expect("N_PHASES > 0");
+    if report.gpu_idle_share > 0.30 {
+        out.push(format!(
+            "GPU idle {} — devices are starved for work; the bottleneck is off-GPU",
+            percent_label(report.gpu_idle_share)
+        ));
+    }
+    let advice = match PHASE_NAMES[top] {
+        "tokenize" => {
+            "tokenization dominates; add CPU cores or move tokenization off \
+             the critical path (serve.tokenizer_threads)"
+        }
+        "queue" => {
+            "admission queue dominates; add replicas or arm admission \
+             control / load shedding (resilience)"
+        }
+        "launch" => {
+            "kernel-launch CPU cost dominates; enable CUDA graphs \
+             (serve.cuda_graphs) or add CPU cores"
+        }
+        "compute" => "GPU compute dominates; the CPU side is adequately provisioned",
+        "comm" => "collectives dominate; use a faster interconnect or a smaller TP degree",
+        _ => {
+            "in-batch stall dominates; control-plane contention — add CPU \
+             cores or raise serve.control_plane_weight"
+        }
+    };
+    out.push(format!(
+        "{} {} of attributed time: {advice}",
+        PHASE_NAMES[top],
+        percent_label(top_share)
+    ));
+    // Secondary: large in-batch stall alongside a different dominant
+    // phase still deserves a callout.
+    if top != PH_IDLE && shares[PH_IDLE] > 0.30 {
+        out.push(format!(
+            "in-batch stall is also high ({}); check CPU core count vs \
+             control-plane load",
+            percent_label(shares[PH_IDLE])
+        ));
+    }
+    out
+}

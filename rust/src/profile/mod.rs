@@ -1,0 +1,336 @@
+//! Always-on bottleneck attribution + causal what-if profiling.
+//!
+//! The deterministic simulator can do exactly what sampling profilers
+//! (gPerf, InferScope) approximate: account for *every* nanosecond of
+//! every request's life, and attribute GPU idleness to its CPU-side
+//! cause. Three pieces:
+//!
+//! - [`ring`] — the pooled ring-buffer trace substrate every layer
+//!   records spans into (allocation-free, sketch-folding).
+//! - [`Profiler`] — per-request phase timelines. Each terminal attempt
+//!   is partitioned into six disjoint phases (tokenize / queue / launch
+//!   / compute / comm / idle) that cover `[arrival, terminal]` exactly:
+//!   the conservation invariant `tests/test_profile.rs` enforces.
+//! - [`diagnose`] / [`whatif`] — the CLI surfaces: an InferScope-style
+//!   breakdown with rule-based suggestions, and COZ-style causal
+//!   profiling (scale one component's cost by ±δ, rerun
+//!   deterministically, report d(TTFT p99)/d(component)).
+//!
+//! Everything here is observation-only: hooks read state that already
+//! exists and never post events, signal gates, or branch the
+//! simulation, so runs with profiling on and off are byte-identical
+//! (the differential tests pin this).
+
+pub mod diagnose;
+pub mod ring;
+pub mod whatif;
+
+pub use ring::{SpanKind, SpanRec, TraceRing, N_KINDS};
+
+use crate::engine::Request;
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Shared handle the engine/fleet layers thread through their hooks.
+pub type ProfRef = Rc<RefCell<Profiler>>;
+
+/// Number of per-request phases ([`PHASE_NAMES`]).
+pub const N_PHASES: usize = 6;
+
+/// Phase order used everywhere (tables, shares, `ReqPhases::phase_ns`):
+/// tokenize, queue, launch, compute, comm, idle.
+pub const PHASE_NAMES: [&str; N_PHASES] =
+    ["tokenize", "queue", "launch", "compute", "comm", "idle"];
+
+pub const PH_TOKENIZE: usize = 0;
+pub const PH_QUEUE: usize = 1;
+pub const PH_LAUNCH: usize = 2;
+pub const PH_COMPUTE: usize = 3;
+pub const PH_COMM: usize = 4;
+pub const PH_IDLE: usize = 5;
+
+/// One terminal attempt's complete phase partition. By construction
+/// `phase_ns` sums exactly to `wall_ns()` — no gaps, no overlaps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReqPhases {
+    pub id: u64,
+    pub origin: u64,
+    pub tag: u32,
+    pub arrival_ns: u64,
+    pub end_ns: u64,
+    pub phase_ns: [u64; N_PHASES],
+}
+
+impl ReqPhases {
+    /// Arrival → terminal wall time of the attempt.
+    pub fn wall_ns(&self) -> u64 {
+        self.end_ns - self.arrival_ns
+    }
+
+    pub fn sum_ns(&self) -> u64 {
+        self.phase_ns.iter().sum()
+    }
+}
+
+/// Partition a request's life `[arrival, end_ns]` into the six phases.
+///
+/// tokenize and queue come from the lifecycle timestamps; launch,
+/// compute, and comm were charged incrementally at each step completion
+/// (see `engine`'s `charge_step`); whatever in-batch time those charges
+/// did not cover — including the tail after the last completed step —
+/// is idle (stall: the request was admitted but the step pipeline was
+/// doing something else, e.g. control-plane scheduling or sampling).
+pub fn phases_of(r: &Request, end_ns: u64) -> ReqPhases {
+    let arrival = r.arrival_ns;
+    let end = end_ns.max(arrival);
+    let tok = r.tokenized_at.unwrap_or(end).clamp(arrival, end);
+    let adm = r.admitted_at.unwrap_or(end).clamp(tok, end);
+    let mut phase_ns = [0u64; N_PHASES];
+    phase_ns[PH_TOKENIZE] = tok - arrival;
+    phase_ns[PH_QUEUE] = adm - tok;
+    phase_ns[PH_LAUNCH] = r.ph_launch_ns;
+    phase_ns[PH_COMPUTE] = r.ph_compute_ns;
+    phase_ns[PH_COMM] = r.ph_comm_ns;
+    phase_ns[PH_IDLE] = r.ph_idle_ns;
+    // Charges cover [adm, phase_mark]; the tail up to the terminal is
+    // uncovered in-batch time → idle.
+    let mark = if r.phase_mark == 0 {
+        adm
+    } else {
+        r.phase_mark.clamp(adm, end)
+    };
+    phase_ns[PH_IDLE] += end - mark;
+    ReqPhases {
+        id: r.id,
+        origin: r.origin,
+        tag: r.tag,
+        arrival_ns: arrival,
+        end_ns: end,
+        phase_ns,
+    }
+}
+
+/// Retained per-request records cap; aggregates keep folding past it
+/// (`dropped_records` counts the overflow — no silent truncation).
+pub const RETAIN_CAP: usize = 1 << 16;
+
+use crate::util::stats::QuantileSketch;
+
+/// The per-run profiler: one shared instance per simulation substrate
+/// (a fleet's replicas all fold into the same one).
+#[derive(Debug)]
+pub struct Profiler {
+    /// The event-span substrate every layer records into.
+    pub ring: TraceRing,
+    phase_sketch_s: [QuantileSketch; N_PHASES],
+    phase_total_ns: [u64; N_PHASES],
+    requests: u64,
+    per_request: Vec<ReqPhases>,
+    dropped: u64,
+    finalized: bool,
+}
+
+impl Default for Profiler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Profiler {
+    pub fn new() -> Profiler {
+        Profiler {
+            ring: TraceRing::with_capacity(TraceRing::DEFAULT_CAPACITY),
+            phase_sketch_s: std::array::from_fn(|_| QuantileSketch::new()),
+            phase_total_ns: [0; N_PHASES],
+            requests: 0,
+            per_request: Vec::with_capacity(RETAIN_CAP),
+            dropped: 0,
+            finalized: false,
+        }
+    }
+
+    /// Fold one terminal attempt. Called at the attempt's terminal
+    /// event (finish, shed, reject, abort) or — for requests still in
+    /// flight at the horizon — from `finalize`-time sweeps.
+    pub fn finish_request(&mut self, r: &Request, end_ns: u64) {
+        let p = phases_of(r, end_ns);
+        self.requests += 1;
+        for k in 0..N_PHASES {
+            self.phase_total_ns[k] += p.phase_ns[k];
+            self.phase_sketch_s[k].add(p.phase_ns[k] as f64 / 1e9);
+        }
+        if self.per_request.len() < RETAIN_CAP {
+            self.per_request.push(p);
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    /// Horizon sweeps run once; the flag keeps `profile_report` callers
+    /// from double-counting leftovers.
+    pub fn finalized(&self) -> bool {
+        self.finalized
+    }
+
+    pub fn mark_finalized(&mut self) {
+        self.finalized = true;
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.requests
+    }
+
+    /// Assemble the phase side of a report; the owning sim fills in GPU
+    /// attribution, elapsed time, and CPU class totals.
+    pub fn build_report(&self) -> ProfileReport {
+        let mut phase_total_s = [0f64; N_PHASES];
+        let mut phase_p50_s = [0f64; N_PHASES];
+        let mut phase_p99_s = [0f64; N_PHASES];
+        for k in 0..N_PHASES {
+            phase_total_s[k] = self.phase_total_ns[k] as f64 / 1e9;
+            if !self.phase_sketch_s[k].is_empty() {
+                phase_p50_s[k] = self.phase_sketch_s[k].quantile(50.0);
+                phase_p99_s[k] = self.phase_sketch_s[k].quantile(99.0);
+            }
+        }
+        ProfileReport {
+            requests: self.requests,
+            phase_total_s,
+            phase_p50_s,
+            phase_p99_s,
+            per_request: self.per_request.clone(),
+            dropped_records: self.dropped,
+            gpus: Vec::new(),
+            elapsed_ns: 0,
+            ring: RingStats {
+                counts: self.ring.counts(),
+                evicted: self.ring.evicted(),
+                capacity: self.ring.capacity(),
+            },
+            cpu_by_class: Vec::new(),
+        }
+    }
+}
+
+/// On-/off-GPU attribution for one device. `idle_ns` is the residual,
+/// so `busy + sync + idle == elapsed` per device by construction — the
+/// per-GPU conservation law.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GpuSlice {
+    pub replica: u32,
+    pub rank: u32,
+    /// Executing kernels.
+    pub busy_ns: u64,
+    /// Stalled inside a collective waiting for peers (stragglers).
+    pub sync_ns: u64,
+    /// Neither: starved for work by the CPU side.
+    pub idle_ns: u64,
+    pub elapsed_ns: u64,
+}
+
+/// Trace-ring health counters surfaced in the report.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RingStats {
+    pub counts: [u64; N_KINDS],
+    pub evicted: u64,
+    pub capacity: usize,
+}
+
+/// Everything `cpuslow diagnose` renders and `ScenarioReport.profile`
+/// carries. Pure data, cheap to clone.
+#[derive(Debug, Clone)]
+pub struct ProfileReport {
+    /// Terminal attempts folded into the phase aggregates.
+    pub requests: u64,
+    pub phase_total_s: [f64; N_PHASES],
+    pub phase_p50_s: [f64; N_PHASES],
+    pub phase_p99_s: [f64; N_PHASES],
+    /// Per-attempt records (first [`RETAIN_CAP`], then counted in
+    /// `dropped_records` while aggregates keep folding).
+    pub per_request: Vec<ReqPhases>,
+    pub dropped_records: u64,
+    pub gpus: Vec<GpuSlice>,
+    pub elapsed_ns: u64,
+    pub ring: RingStats,
+    /// CPU core-seconds by simcpu task class, sorted by class name.
+    pub cpu_by_class: Vec<(String, f64)>,
+}
+
+impl ProfileReport {
+    /// Share of total attributed request time spent in each phase.
+    pub fn phase_shares(&self) -> [f64; N_PHASES] {
+        let total: f64 = self.phase_total_s.iter().sum();
+        if total <= 0.0 {
+            return [0.0; N_PHASES];
+        }
+        std::array::from_fn(|k| self.phase_total_s[k] / total)
+    }
+
+    /// Fleet-wide GPU idle share (idle over elapsed, all devices).
+    pub fn gpu_idle_share(&self) -> f64 {
+        let elapsed: u64 = self.gpus.iter().map(|g| g.elapsed_ns).sum();
+        if elapsed == 0 {
+            return 0.0;
+        }
+        let idle: u64 = self.gpus.iter().map(|g| g.idle_ns).sum();
+        idle as f64 / elapsed as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::ReqClass;
+
+    #[test]
+    fn phases_conserve_for_unadmitted_request() {
+        // Arrived, tokenized, never admitted: tokenize + queue cover
+        // the whole life.
+        let mut r = Request::new(1, ReqClass::Normal, 1_000, 100, 16);
+        r.tokenized_at = Some(5_000);
+        let p = phases_of(&r, 20_000);
+        assert_eq!(p.wall_ns(), 19_000);
+        assert_eq!(p.sum_ns(), 19_000);
+        assert_eq!(p.phase_ns[PH_TOKENIZE], 4_000);
+        assert_eq!(p.phase_ns[PH_QUEUE], 15_000);
+    }
+
+    #[test]
+    fn phases_conserve_with_step_charges_and_tail() {
+        let mut r = Request::new(2, ReqClass::Normal, 0, 100, 16);
+        r.tokenized_at = Some(1_000);
+        r.admitted_at = Some(3_000);
+        // Two completed steps charged [3_000, 9_000]; aborted at 10_000.
+        r.ph_launch_ns = 1_000;
+        r.ph_compute_ns = 3_500;
+        r.ph_comm_ns = 500;
+        r.ph_idle_ns = 1_000;
+        r.phase_mark = 9_000;
+        let p = phases_of(&r, 10_000);
+        assert_eq!(p.wall_ns(), 10_000);
+        assert_eq!(p.sum_ns(), 10_000, "tail after last step lands in idle");
+        assert_eq!(p.phase_ns[PH_IDLE], 2_000);
+    }
+
+    #[test]
+    fn mid_tokenize_request_is_all_tokenize() {
+        let r = Request::new(3, ReqClass::Normal, 500, 100, 16);
+        let p = phases_of(&r, 4_500);
+        assert_eq!(p.sum_ns(), p.wall_ns());
+        assert_eq!(p.phase_ns[PH_TOKENIZE], 4_000);
+    }
+
+    #[test]
+    fn profiler_retention_cap_counts_drops() {
+        let mut prof = Profiler::new();
+        let mut r = Request::new(4, ReqClass::Normal, 0, 10, 1);
+        r.tokenized_at = Some(10);
+        prof.finish_request(&r, 100);
+        assert_eq!(prof.requests(), 1);
+        let rep = prof.build_report();
+        assert_eq!(rep.per_request.len(), 1);
+        assert_eq!(rep.dropped_records, 0);
+        let shares = rep.phase_shares();
+        assert!((shares.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+}

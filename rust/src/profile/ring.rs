@@ -1,0 +1,196 @@
+//! Pooled ring-buffer trace substrate.
+//!
+//! Every instrumentation point in the stack (simcpu dispatch, tokenizer
+//! completions, engine steps, GPU kernel launches, fleet routing) folds
+//! its span into this structure. Two properties make it safe to leave
+//! armed on the hot path:
+//!
+//! 1. **Fixed capacity, pre-allocated.** The record buffer and every
+//!    per-kind [`QuantileSketch`] are sized at construction; recording a
+//!    span never allocates, which is what lets `tests/test_alloc.rs`
+//!    keep its zero-allocation steady-state invariant with profiling
+//!    armed.
+//! 2. **Sketch-fold at insert.** A span's duration is folded into its
+//!    kind's quantile sketch the moment it is recorded, so the
+//!    aggregate view is always complete even after the raw record is
+//!    overwritten. The ring itself retains only the most recent
+//!    `capacity` raw records — a bounded inspection window, not the
+//!    source of truth.
+
+use crate::util::stats::QuantileSketch;
+
+/// Number of span kinds ([`SpanKind::ALL`]).
+pub const N_KINDS: usize = 5;
+
+/// What a trace span measures. One kind per instrumentation layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum SpanKind {
+    /// simcpu scheduler dispatch: how long a task sat runnable before a
+    /// core picked it up (CPU contention, the paper's root cause).
+    Dispatch = 0,
+    /// Tokenizer-pool completion: arrival → tokenized, including queue
+    /// time behind other tokenize jobs.
+    Tokenize = 1,
+    /// One engine step, completion to completion (schedule + publish +
+    /// GPU execution + sample).
+    Step = 2,
+    /// CPU-side kernel-launch cost charged by a GPU worker for one step
+    /// (including any injected launch-spike fault).
+    Launch = 3,
+    /// Fleet router dispatch: origin arrival → delivery to a replica.
+    Route = 4,
+}
+
+impl SpanKind {
+    pub const ALL: [SpanKind; N_KINDS] = [
+        SpanKind::Dispatch,
+        SpanKind::Tokenize,
+        SpanKind::Step,
+        SpanKind::Launch,
+        SpanKind::Route,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Dispatch => "dispatch",
+            SpanKind::Tokenize => "tokenize",
+            SpanKind::Step => "step",
+            SpanKind::Launch => "launch",
+            SpanKind::Route => "route",
+        }
+    }
+}
+
+/// One raw trace record (POD; the ring overwrites these in place).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SpanRec {
+    /// Virtual timestamp the span ended at.
+    pub t_ns: u64,
+    pub dur_ns: u64,
+    /// `SpanKind` discriminant (kept as a byte so the record stays POD).
+    pub kind: u8,
+}
+
+/// Fixed-capacity trace ring with per-kind streaming sketches.
+#[derive(Debug)]
+pub struct TraceRing {
+    buf: Vec<SpanRec>,
+    head: usize,
+    len: usize,
+    evicted: u64,
+    counts: [u64; N_KINDS],
+    /// Span durations in seconds, folded at insert time.
+    sketches: [QuantileSketch; N_KINDS],
+}
+
+impl TraceRing {
+    pub const DEFAULT_CAPACITY: usize = 4096;
+
+    pub fn with_capacity(capacity: usize) -> TraceRing {
+        assert!(capacity > 0, "trace ring needs capacity ≥ 1");
+        TraceRing {
+            buf: vec![SpanRec::default(); capacity],
+            head: 0,
+            len: 0,
+            evicted: 0,
+            counts: [0; N_KINDS],
+            sketches: std::array::from_fn(|_| QuantileSketch::new()),
+        }
+    }
+
+    /// Record one span. Allocation-free: folds into the kind's sketch
+    /// and overwrites the oldest raw record once the ring is full.
+    #[inline]
+    pub fn record(&mut self, kind: SpanKind, t_ns: u64, dur_ns: u64) {
+        let k = kind as usize;
+        self.counts[k] += 1;
+        self.sketches[k].add(dur_ns as f64 / 1e9);
+        self.buf[self.head] = SpanRec {
+            t_ns,
+            dur_ns,
+            kind: kind as u8,
+        };
+        self.head = (self.head + 1) % self.buf.len();
+        if self.len == self.buf.len() {
+            self.evicted += 1;
+        } else {
+            self.len += 1;
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Raw records currently retained (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Records overwritten after the ring filled — wraparound proof for
+    /// the allocation tests (fold-on-evict, never grow).
+    pub fn evicted(&self) -> u64 {
+        self.evicted
+    }
+
+    /// Total spans ever recorded for `kind` (survives eviction).
+    pub fn count(&self, kind: SpanKind) -> u64 {
+        self.counts[kind as usize]
+    }
+
+    pub fn counts(&self) -> [u64; N_KINDS] {
+        self.counts
+    }
+
+    /// Quantile (`q` in [0, 100]) of all spans ever recorded for
+    /// `kind`, in seconds. NaN when none were.
+    pub fn quantile_s(&self, kind: SpanKind, q: f64) -> f64 {
+        self.sketches[kind as usize].quantile(q)
+    }
+
+    /// Iterate the retained window oldest → newest.
+    pub fn iter_recent(&self) -> impl Iterator<Item = &SpanRec> {
+        let start = (self.head + self.buf.len() - self.len) % self.buf.len();
+        (0..self.len).map(move |i| &self.buf[(start + i) % self.buf.len()])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wraparound_folds_instead_of_growing() {
+        let mut ring = TraceRing::with_capacity(8);
+        for i in 0..20u64 {
+            ring.record(SpanKind::Dispatch, i * 10, i);
+        }
+        assert_eq!(ring.capacity(), 8);
+        assert_eq!(ring.len(), 8);
+        assert_eq!(ring.evicted(), 12);
+        assert_eq!(ring.count(SpanKind::Dispatch), 20);
+        // Sketch saw every span, not just the retained window.
+        let p100 = ring.quantile_s(SpanKind::Dispatch, 100.0);
+        assert!((p100 - 19e-9).abs() < 1e-15, "p100 {p100}");
+        // The window holds the 8 newest records in order.
+        let kept: Vec<u64> = ring.iter_recent().map(|r| r.dur_ns).collect();
+        assert_eq!(kept, (12..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn counts_are_per_kind() {
+        let mut ring = TraceRing::with_capacity(4);
+        ring.record(SpanKind::Step, 0, 5);
+        ring.record(SpanKind::Step, 1, 6);
+        ring.record(SpanKind::Launch, 2, 7);
+        assert_eq!(ring.count(SpanKind::Step), 2);
+        assert_eq!(ring.count(SpanKind::Launch), 1);
+        assert_eq!(ring.count(SpanKind::Route), 0);
+        assert!(ring.quantile_s(SpanKind::Route, 50.0).is_nan());
+    }
+}

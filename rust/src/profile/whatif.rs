@@ -1,0 +1,218 @@
+//! `cpuslow whatif` — COZ-style causal profiling.
+//!
+//! Instead of asking "where did the time go?" (that's `diagnose`),
+//! whatif asks "what would happen if component X were p% faster?" —
+//! the question that actually ranks optimization work. Because the
+//! simulator is deterministic, we can answer it exactly: virtually
+//! scale one component's cost by ±δ via [`crate::config::CostScales`],
+//! rerun the *same* scenario trace at the *same* seed, and report the
+//! central-difference derivative d(TTFT p99)/d(component cost).
+//!
+//! Every cell is a pure function of (config, scenario, seed, component,
+//! factor), and the sweep executor returns results in input order, so
+//! output is byte-identical for every `--jobs` value and across reruns
+//! — pinned by the differential tests in `tests/test_profile.rs`.
+
+use crate::config::RunConfig;
+use crate::report::{secs_label, Table};
+use crate::sweep::Sweep;
+use crate::util::cli::Args;
+use crate::workload::scenario::{resolve_cli_scenario, run_scenario, Scenario};
+
+/// Components whose cost can be virtually scaled, in render order.
+pub const COMPONENTS: [&str; 4] = ["tokenize", "launch", "comm", "compute"];
+
+/// Set one component's cost multiplier on a config.
+pub fn apply_scale(cfg: &mut RunConfig, component: &str, factor: f64) {
+    match component {
+        "tokenize" => cfg.scales.tokenize = factor,
+        "launch" => cfg.scales.launch = factor,
+        "comm" => cfg.scales.comm = factor,
+        "compute" => cfg.scales.compute = factor,
+        other => panic!(
+            "unknown whatif component '{other}' — choose from: {}",
+            COMPONENTS.join(", ")
+        ),
+    }
+}
+
+/// One (scenario × component) causal row: TTFT p99 at cost × (1−δ),
+/// × 1, and × (1+δ), plus the central-difference derivative.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WhatifRow {
+    pub scenario: String,
+    pub component: &'static str,
+    pub delta: f64,
+    pub p99_minus_s: Option<f64>,
+    pub p99_base_s: Option<f64>,
+    pub p99_plus_s: Option<f64>,
+}
+
+impl WhatifRow {
+    /// d(TTFT p99)/d(cost scale) in seconds per unit scale factor
+    /// (i.e. the p99 change a +100% cost increase extrapolates to).
+    pub fn derivative_s(&self) -> Option<f64> {
+        match (self.p99_minus_s, self.p99_plus_s) {
+            (Some(lo), Some(hi)) => Some((hi - lo) / (2.0 * self.delta)),
+            _ => None,
+        }
+    }
+}
+
+/// One sweep cell: a full scenario run at one cost factor.
+/// `component == COMPONENTS.len()` marks the unscaled baseline.
+#[derive(Debug, Clone)]
+struct Cell {
+    cfg: RunConfig,
+    scenario: Scenario,
+    seed: u64,
+    component: usize,
+    factor: f64,
+}
+
+fn run_cell(cell: Cell) -> Option<f64> {
+    let mut cfg = cell.cfg;
+    // p99 is all a cell reports; skip per-request retention.
+    cfg.serve.profile = false;
+    if cell.component < COMPONENTS.len() {
+        apply_scale(&mut cfg, COMPONENTS[cell.component], cell.factor);
+    }
+    run_scenario(cfg, &cell.scenario, cell.seed).ttft_p99_s
+}
+
+/// Run the causal grid: every scenario × component at factors 1−δ and
+/// 1+δ, plus one baseline per scenario. All cells share `seed`, so ±δ
+/// runs replay the identical request trace and the derivative isolates
+/// the component's causal effect.
+pub fn compute(
+    cfg: &RunConfig,
+    scenarios: &[Scenario],
+    components: &[&'static str],
+    delta: f64,
+    seed: u64,
+    sweep: &Sweep,
+) -> Vec<WhatifRow> {
+    assert!(delta > 0.0 && delta < 1.0, "--delta must be in (0, 1)");
+    let mut cells = Vec::new();
+    for scenario in scenarios {
+        cells.push(Cell {
+            cfg: cfg.clone(),
+            scenario: scenario.clone(),
+            seed,
+            component: COMPONENTS.len(),
+            factor: 1.0,
+        });
+        for comp in components {
+            let ci = COMPONENTS
+                .iter()
+                .position(|c| c == comp)
+                .unwrap_or_else(|| panic!("unknown component '{comp}'"));
+            for factor in [1.0 - delta, 1.0 + delta] {
+                cells.push(Cell {
+                    cfg: cfg.clone(),
+                    scenario: scenario.clone(),
+                    seed,
+                    component: ci,
+                    factor,
+                });
+            }
+        }
+    }
+    let results = sweep.run(cells, run_cell);
+    // Stitch input-order results back into rows: per scenario, one
+    // baseline then (minus, plus) per component.
+    let mut rows = Vec::new();
+    let mut it = results.into_iter();
+    for scenario in scenarios {
+        let base = it.next().expect("baseline cell");
+        for comp in components {
+            let minus = it.next().expect("minus cell");
+            let plus = it.next().expect("plus cell");
+            let ci = COMPONENTS
+                .iter()
+                .position(|c| c == comp)
+                .expect("component validated above");
+            rows.push(WhatifRow {
+                scenario: scenario.name.clone(),
+                component: COMPONENTS[ci],
+                delta,
+                p99_minus_s: minus,
+                p99_base_s: base,
+                p99_plus_s: plus,
+            });
+        }
+    }
+    rows
+}
+
+/// Render the causal table. Pure: same rows → same bytes.
+pub fn render(rows: &[WhatifRow], delta: f64) -> String {
+    let lo = format!("p99 @ -{:.0}%", delta * 100.0);
+    let hi = format!("p99 @ +{:.0}%", delta * 100.0);
+    let mut t = Table::new(&[
+        "scenario",
+        "component",
+        lo.as_str(),
+        "p99 @ base",
+        hi.as_str(),
+        "d(p99)/d(cost) (s)",
+    ])
+    .with_title(format!(
+        "Causal what-if: TTFT p99 vs component cost (δ = {:.0}%)",
+        delta * 100.0
+    ))
+    .align(0, crate::report::table::Align::Left)
+    .align(1, crate::report::table::Align::Left);
+    for r in rows {
+        t.row(vec![
+            r.scenario.clone(),
+            r.component.to_string(),
+            secs_label(r.p99_minus_s),
+            secs_label(r.p99_base_s),
+            secs_label(r.p99_plus_s),
+            r.derivative_s()
+                .map(|d| format!("{d:+.4}"))
+                .unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    t.render()
+}
+
+/// CLI entry point.
+pub fn run(args: &Args) {
+    let cfg = if let Some(path) = args.get("config") {
+        RunConfig::from_toml_file(std::path::Path::new(path)).expect("config file")
+    } else {
+        crate::experiments::resolve_config(args, "h100", 4)
+    };
+    let names = args
+        .str_list("scenarios")
+        .unwrap_or_else(|| vec!["steady".into(), "degraded-tokenizer".into(), "heavy-tail".into()]);
+    let scenarios: Vec<Scenario> = names
+        .iter()
+        .map(|n| resolve_cli_scenario(n, &cfg.workload, args, args.flag("quick")))
+        .collect();
+    let components: Vec<&'static str> = match args.str_list("components") {
+        Some(list) => list
+            .iter()
+            .map(|n| {
+                COMPONENTS
+                    .iter()
+                    .find(|&&c| c == n.as_str())
+                    .copied()
+                    .unwrap_or_else(|| {
+                        panic!(
+                            "unknown component '{n}' — choose from: {}",
+                            COMPONENTS.join(", ")
+                        )
+                    })
+            })
+            .collect(),
+        None => vec!["tokenize", "launch", "comm"],
+    };
+    let delta = args.f64_or("delta", 0.25);
+    let seed = args.u64_or("seed", cfg.seed);
+    let sweep = Sweep::from_args("whatif", args);
+    let rows = compute(&cfg, &scenarios, &components, delta, seed, &sweep);
+    print!("{}", render(&rows, delta));
+}

@@ -648,7 +648,15 @@ pub struct Sim {
     /// Processed-event log for differential tests (None = disabled).
     trace: Option<Vec<TraceEvent>>,
     min_vruntime: u64,
+    /// Observation-only dispatch hook: (now_ns, task class, run-queue
+    /// wait ns) on every task dispatch. Must not re-enter the sim —
+    /// the profiler folds the span into its ring and returns. Costs one
+    /// branch per dispatch when unset.
+    dispatch_probe: Option<DispatchProbe>,
 }
+
+/// See [`Sim::set_dispatch_probe`].
+pub type DispatchProbe = std::rc::Rc<std::cell::RefCell<dyn FnMut(u64, &'static str, u64)>>;
 
 impl Sim {
     pub fn new(params: SimParams) -> Sim {
@@ -689,7 +697,16 @@ impl Sim {
             util_trace,
             trace: None,
             min_vruntime: 0,
+            dispatch_probe: None,
         }
+    }
+
+    /// Install the profiler's dispatch hook. Observation-only by
+    /// contract: the callback sees (now_ns, class, waited_ns) and must
+    /// not mutate simulation state, so arming it cannot perturb the
+    /// deterministic (t, seq) event order.
+    pub fn set_dispatch_probe(&mut self, probe: impl FnMut(u64, &'static str, u64) + 'static) {
+        self.dispatch_probe = Some(std::rc::Rc::new(std::cell::RefCell::new(probe)));
     }
 
     /// Record every processed event as a (time, kind, a, b) tuple. Used
@@ -920,6 +937,10 @@ impl Sim {
         // account run-queue waiting
         let waited = self.now_ns - self.tasks[task].runnable_since;
         self.tasks[task].wait_ns += waited;
+        if let Some(probe) = &self.dispatch_probe {
+            let probe = std::rc::Rc::clone(probe);
+            (probe.borrow_mut())(self.now_ns, self.tasks[task].class, waited);
+        }
         self.tasks[task].state = TaskState::Running { core: core_id };
         self.core_set_busy(core_id);
         let needs_switch =

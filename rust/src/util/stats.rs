@@ -414,7 +414,10 @@ impl QuantileSketch {
         QuantileSketch {
             bins: vec![0; Self::NUM_BINS],
             count: 0,
-            exact: Vec::new(),
+            // Preallocated to the cap: `add` must never allocate, so a
+            // sketch armed inside the profiler's ring buffer keeps the
+            // zero-alloc steady-state invariant (`tests/test_alloc.rs`).
+            exact: Vec::with_capacity(Self::EXACT_CAP),
         }
     }
 

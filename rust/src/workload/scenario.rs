@@ -1260,6 +1260,12 @@ pub struct ScenarioReport {
     /// static allocation, or the autoscaler's grant integral. Feeds
     /// cost-per-SLO-met in the serve sweep.
     pub cpu_core_seconds: f64,
+    /// Attribution report when `serve.profile` was armed ([`crate::profile`]):
+    /// per-phase totals/percentiles, per-GPU busy/sync/idle slices, and
+    /// trace-ring counters. `None` on unprofiled runs; everything else
+    /// in this report is byte-identical either way (the differential
+    /// tests pin this).
+    pub profile: Option<crate::profile::ProfileReport>,
 }
 
 impl ScenarioReport {
@@ -1322,6 +1328,8 @@ pub(crate) trait ServeStack {
     /// CPU core·seconds consumed over `wall_ns` of virtual time.
     fn core_seconds(&self, wall_ns: u64) -> f64;
     fn replica_count(&self) -> usize;
+    /// Attribution report; `None` unless `serve.profile` armed it.
+    fn profile_report(&mut self) -> Option<crate::profile::ProfileReport>;
 }
 
 impl ServeStack for ServingSim {
@@ -1357,6 +1365,9 @@ impl ServeStack for ServingSim {
     fn replica_count(&self) -> usize {
         1
     }
+    fn profile_report(&mut self) -> Option<crate::profile::ProfileReport> {
+        ServingSim::profile_report(self)
+    }
 }
 
 impl ServeStack for FleetSim {
@@ -1391,6 +1402,9 @@ impl ServeStack for FleetSim {
     }
     fn replica_count(&self) -> usize {
         FleetSim::replica_count(self)
+    }
+    fn profile_report(&mut self) -> Option<crate::profile::ProfileReport> {
+        FleetSim::profile_report(self)
     }
 }
 
@@ -1536,6 +1550,7 @@ where
         replicas: sim.replica_count(),
         wall_secs: wall_ns as f64 / 1e9,
         cpu_core_seconds: sim.core_seconds(wall_ns),
+        profile: sim.profile_report(),
     }
 }
 

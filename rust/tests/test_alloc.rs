@@ -105,6 +105,48 @@ fn fleet_steady_state_with_router_probes_and_autoscaler_allocates_nothing() {
 }
 
 #[test]
+fn profiled_steady_state_stepping_allocates_nothing() {
+    // The same resident-batch steady state as above, but with the
+    // attribution profiler armed: every simcpu dispatch, engine step,
+    // and GPU launch records into the trace ring, which wraps and
+    // sketch-folds evictions throughout the window. Profiling must be
+    // free — the ring is preallocated, the fold sketches preallocate
+    // their bins and exact buffers, and per-step phase charging only
+    // mutates slab fields — so the armed run must match the unarmed
+    // one's zero-allocation invariant exactly.
+    let mut config = cfg(2, 8);
+    config.serve.profile = true;
+    let mut sim = ServingSim::with_options(config, EngineCosts::default(), false);
+    for i in 0..4u64 {
+        sim.submit_at(i * 1_000_000, ReqClass::Normal, 512, 100_000);
+    }
+    sim.run_secs(5.0);
+    let steps_before = sim.steps_completed();
+    let before = alloc::counters();
+    sim.run_secs(13.0);
+    let after = alloc::counters();
+    let steps = sim.steps_completed() - steps_before;
+    assert!(steps > 100, "decode steps in the window: {steps}");
+    assert_eq!(
+        after.allocs - before.allocs,
+        0,
+        "profiled steady-state stepping allocated ({} allocs / {} bytes over {steps} steps)",
+        after.allocs - before.allocs,
+        after.alloc_bytes - before.alloc_bytes,
+    );
+    // The window must actually have exercised ring wraparound: a 4096
+    // record ring against >100 steps' worth of dispatch + step + launch
+    // spans has long since started evicting into the fold sketches.
+    let report = sim.profile_report().expect("profiling was armed");
+    assert!(
+        report.ring.evicted > 0,
+        "ring never wrapped: {} records, capacity {}",
+        report.ring.counts.iter().sum::<u64>(),
+        report.ring.capacity
+    );
+}
+
+#[test]
 fn streaming_memory_roughly_constant_in_request_count() {
     // 10× the request volume through the streaming driver must not grow
     // peak live memory proportionally: finished requests are harvested

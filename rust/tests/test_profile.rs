@@ -1,0 +1,276 @@
+//! Acceptance tests for the attribution profiler (`src/profile/`):
+//! conservation (phase spans partition wall time exactly; per-GPU
+//! busy + sync + idle partitions elapsed), invisibility (profiling on
+//! vs off leaves every outcome and report field byte-identical), causal
+//! sanity (cheaper tokenization strictly improves TTFT p99 where
+//! tokenization is the bottleneck; a ±0% scale is an exact no-op), and
+//! determinism (the whatif grid and the diagnose rendering are
+//! byte-identical across `--jobs` values and across reruns).
+
+use cpuslow::config::{ModelSpec, RunConfig, SystemSpec};
+use cpuslow::engine::{Outcome, ReqClass, ServingSim, StreamArrival};
+use cpuslow::profile::{diagnose, whatif, N_PHASES};
+use cpuslow::sweep::Sweep;
+use cpuslow::workload::scenario::{run_scenario, Scenario, ScenarioReport};
+
+fn cfg(cores: usize) -> RunConfig {
+    RunConfig::new(SystemSpec::h100(), ModelSpec::llama31_8b(), 4, cores)
+}
+
+fn profiled_cfg(cores: usize) -> RunConfig {
+    let mut c = cfg(cores);
+    c.serve.profile = true;
+    c
+}
+
+/// Tentpole invariant #1: attribution loses nothing and invents
+/// nothing. For every catalog scenario — single-engine, fleet,
+/// fault-injected — every terminal attempt's six phase spans sum to
+/// exactly its wall time, and every GPU's busy + collective-sync +
+/// idle slices sum to exactly the elapsed virtual clock.
+#[test]
+fn phase_spans_and_gpu_slices_conserve_time_across_catalog() {
+    for scenario in Scenario::catalog() {
+        let scenario = scenario.with_duration(6.0);
+        let report = run_scenario(profiled_cfg(8), &scenario, 11);
+        let p = report
+            .profile
+            .as_ref()
+            .unwrap_or_else(|| panic!("{}: profile armed but absent", scenario.name));
+        assert_eq!(p.dropped_records, 0, "{}", scenario.name);
+        assert_eq!(
+            p.per_request.len() as u64,
+            p.requests,
+            "{}: retained rows vs attempt count",
+            scenario.name
+        );
+        if report.issued > 0 {
+            assert!(p.requests > 0, "{}: no attempts recorded", scenario.name);
+        }
+        for rp in &p.per_request {
+            assert!(rp.end_ns >= rp.arrival_ns, "{}", scenario.name);
+            assert_eq!(
+                rp.sum_ns(),
+                rp.wall_ns(),
+                "{}: request {} phases {:?} sum {} != wall {}",
+                scenario.name,
+                rp.id,
+                rp.phase_ns,
+                rp.sum_ns(),
+                rp.wall_ns()
+            );
+        }
+        assert!(!p.gpus.is_empty(), "{}", scenario.name);
+        for g in &p.gpus {
+            assert_eq!(
+                g.busy_ns + g.sync_ns + g.idle_ns,
+                g.elapsed_ns,
+                "{}: replica {} rank {} busy {} + sync {} + idle {} != elapsed {}",
+                scenario.name,
+                g.replica,
+                g.rank,
+                g.busy_ns,
+                g.sync_ns,
+                g.idle_ns,
+                g.elapsed_ns
+            );
+            assert!(g.elapsed_ns > 0, "{}", scenario.name);
+        }
+        // The report's totals are consistent with its own rows.
+        let shares = p.phase_shares();
+        let share_sum: f64 = shares.iter().sum();
+        assert!(
+            p.requests == 0 || (share_sum - 1.0).abs() < 1e-9,
+            "{}: phase shares sum to {share_sum}",
+            scenario.name
+        );
+        assert_eq!(shares.len(), N_PHASES);
+    }
+}
+
+fn outcomes_with_profile(profile: bool, scenario: &Scenario, seed: u64) -> Vec<Outcome> {
+    let mut config = cfg(8);
+    config.serve.profile = profile;
+    let mut sim = ServingSim::new(config);
+    let mut out = Vec::new();
+    let arrivals: Vec<StreamArrival> = scenario
+        .generate(seed)
+        .requests
+        .iter()
+        .map(|r| StreamArrival {
+            at_ns: r.at_ns,
+            class: ReqClass::Normal,
+            prompt_tokens: r.prompt_tokens,
+            max_new_tokens: r.output_tokens,
+            content_seed: r.content_seed,
+            tag: r.class_idx as u32,
+        })
+        .collect();
+    sim.run_streaming(arrivals.into_iter(), 20.0, |o| out.push(o));
+    out.sort_by_key(|o| o.id);
+    out
+}
+
+fn assert_reports_identical(a: &ScenarioReport, b: &ScenarioReport, label: &str) {
+    assert_eq!(a.issued, b.issued, "{label}");
+    assert_eq!(a.timeouts, b.timeouts, "{label}");
+    assert_eq!(a.shed, b.shed, "{label}");
+    assert_eq!(a.rejected, b.rejected, "{label}");
+    assert_eq!(a.aborted, b.aborted, "{label}");
+    assert_eq!(a.retries, b.retries, "{label}");
+    assert_eq!(a.steps_completed, b.steps_completed, "{label}");
+    assert_eq!(a.replicas, b.replicas, "{label}");
+    assert_eq!(
+        a.ttft_p50_s.map(f64::to_bits),
+        b.ttft_p50_s.map(f64::to_bits),
+        "{label}"
+    );
+    assert_eq!(
+        a.ttft_p99_s.map(f64::to_bits),
+        b.ttft_p99_s.map(f64::to_bits),
+        "{label}"
+    );
+    assert_eq!(
+        a.gpu_idle_share.to_bits(),
+        b.gpu_idle_share.to_bits(),
+        "{label}"
+    );
+    assert_eq!(a.wall_secs.to_bits(), b.wall_secs.to_bits(), "{label}");
+    assert_eq!(
+        a.cpu_core_seconds.to_bits(),
+        b.cpu_core_seconds.to_bits(),
+        "{label}"
+    );
+}
+
+/// Tentpole invariant #2: profiling is free and invisible. Arming
+/// `serve.profile` must not move a single timestamp — every
+/// per-request Outcome and every report field is byte-identical with
+/// profiling on and off, on both the single-engine and fleet paths.
+#[test]
+fn profiling_on_vs_off_is_byte_identical() {
+    for name in ["steady", "multi-tenant", "attack"] {
+        let scenario = Scenario::by_name(name).unwrap().with_duration(6.0);
+        let off = outcomes_with_profile(false, &scenario, 3);
+        let on = outcomes_with_profile(true, &scenario, 3);
+        assert!(!off.is_empty(), "{name}");
+        assert_eq!(off, on, "{name}: outcomes diverged under profiling");
+    }
+    // Fleet path (failover + retries active), via the scenario driver.
+    for name in ["degraded-tokenizer", "replica-failure-with-failover"] {
+        let scenario = Scenario::by_name(name).unwrap().with_duration(6.0);
+        let off = run_scenario(cfg(8), &scenario, 5);
+        let on = run_scenario(profiled_cfg(8), &scenario, 5);
+        assert!(off.profile.is_none(), "{name}");
+        assert!(on.profile.is_some(), "{name}");
+        assert_reports_identical(&off, &on, name);
+    }
+}
+
+/// Causal sanity on the scenario whose paper section *is* tokenization
+/// share of TTFT: halving the tokenize cost on heavy-tail (Zipf
+/// prompts up to 114k tokens) at a starved core count must strictly
+/// improve TTFT p99, and setting every scale to exactly 1.0 must be a
+/// bit-exact no-op versus a config that never touched the scales.
+#[test]
+fn tokenize_half_cost_strictly_improves_heavy_tail_p99() {
+    let scenario = Scenario::by_name("heavy-tail").unwrap().with_duration(10.0);
+    let base = run_scenario(cfg(5), &scenario, 7);
+    let mut faster = cfg(5);
+    faster.scales.tokenize = 0.5;
+    let fast = run_scenario(faster, &scenario, 7);
+    assert_eq!(base.issued, fast.issued);
+    assert_eq!(base.timeouts, 0, "run must stay uncensored");
+    assert_eq!(fast.timeouts, 0, "run must stay uncensored");
+    let (b, f) = (
+        base.ttft_p99_s.expect("on-time requests"),
+        fast.ttft_p99_s.expect("on-time requests"),
+    );
+    assert!(
+        f < b,
+        "halving tokenize cost did not improve p99: {b:.4} -> {f:.4}"
+    );
+
+    // ±0%: explicitly writing 1.0 into every scale is indistinguishable
+    // from never touching them (`scale_ns` short-circuits at 1.0).
+    let mut unit = cfg(5);
+    unit.scales.tokenize = 1.0;
+    unit.scales.launch = 1.0;
+    unit.scales.comm = 1.0;
+    unit.scales.compute = 1.0;
+    let unit_report = run_scenario(unit, &scenario, 7);
+    assert_reports_identical(&base, &unit_report, "unit scales");
+}
+
+/// The whatif causal grid is a pure function of (config, scenarios,
+/// components, delta, seed): byte-identical across `--jobs 1` and
+/// `--jobs 3`, and across reruns.
+#[test]
+fn whatif_grid_byte_identical_across_jobs_and_reruns() {
+    let config = cfg(8);
+    let scenarios: Vec<Scenario> = ["steady", "heavy-tail"]
+        .iter()
+        .map(|n| Scenario::by_name(n).unwrap().with_duration(5.0))
+        .collect();
+    let components = ["tokenize", "launch", "comm"];
+    let grid = |jobs: usize| {
+        let sweep = Sweep::new("test-whatif", jobs).quiet(true);
+        let rows = whatif::compute(&config, &scenarios, &components, 0.25, 2, &sweep);
+        whatif::render(&rows, 0.25)
+    };
+    let serial = grid(1);
+    let threaded = grid(3);
+    let rerun = grid(1);
+    assert!(serial.contains("tokenize"));
+    assert!(serial.contains("heavy-tail"));
+    assert_eq!(serial, threaded, "whatif output depends on --jobs");
+    assert_eq!(serial, rerun, "whatif output differs across reruns");
+    // Every (scenario × component) row reports a finite derivative on
+    // these uncensored short runs.
+    let sweep = Sweep::new("test-whatif", 1).quiet(true);
+    let rows = whatif::compute(&config, &scenarios, &components, 0.25, 2, &sweep);
+    assert_eq!(rows.len(), scenarios.len() * components.len());
+    for r in &rows {
+        let d = r
+            .derivative_s()
+            .unwrap_or_else(|| panic!("{}/{}: no derivative", r.scenario, r.component));
+        assert!(d.is_finite(), "{}/{}", r.scenario, r.component);
+    }
+}
+
+/// Golden-output pin for `cpuslow diagnose` on the starved-5-core
+/// steady scenario. The rendering is a pure function of the report, so
+/// two renders of two identical runs must match byte-for-byte; the
+/// committed golden file (when captured) pins the exact bytes across
+/// refactors. An empty golden file skips only the byte-compare and
+/// prints the current rendering so it can be committed.
+#[test]
+fn diagnose_starved_steady_golden() {
+    let golden = include_str!("golden/diagnose_steady_5core.golden.txt");
+    let scenario = Scenario::by_name("steady").unwrap().with_duration(6.0);
+    let render_once = || {
+        let report = run_scenario(profiled_cfg(5), &scenario, 0);
+        diagnose::render(&report, 0)
+    };
+    let a = render_once();
+    let b = render_once();
+    assert_eq!(a, b, "diagnose rendering differs across reruns");
+    assert!(a.starts_with("Diagnosis: scenario 'steady'"), "{a}");
+    for needle in [
+        "Per-request phase attribution",
+        "Per-GPU attribution",
+        "CPU time by task class",
+        "trace ring:",
+        "suggestion:",
+    ] {
+        assert!(a.contains(needle), "missing '{needle}' in:\n{a}");
+    }
+    if golden.trim().is_empty() {
+        eprintln!(
+            "golden file empty — commit the following to \
+             tests/golden/diagnose_steady_5core.golden.txt:\n{a}"
+        );
+    } else {
+        assert_eq!(a, golden, "diagnose output drifted from the golden file");
+    }
+}
