@@ -11,7 +11,8 @@ pub mod toml;
 
 pub use model::ModelSpec;
 pub use serve::{
-    FleetConfig, ResilienceConfig, RouterPolicy, ServeConfig, WorkloadConfig, MAX_RETRY_ATTEMPTS,
+    FleetConfig, PoolConfig, ResilienceConfig, RouterPolicy, ServeConfig, WorkloadConfig,
+    MAX_RETRY_ATTEMPTS,
 };
 pub use system::{Interconnect, SystemSpec};
 
@@ -181,6 +182,13 @@ impl RunConfig {
     /// failure_aware = true
     /// hedge_delay_s = 0.0         # 0 = hedging off
     /// autoscale = false
+    /// [fleet.pools]               # disaggregated prefill/decode pools
+    /// prefill = 1                 # 0 = pools off (colocated fleet)
+    /// decode = 3                  # prefill + decode must equal replicas
+    /// transfer_gb_per_s = 25.0    # KV handoff copy bandwidth
+    /// transfer_base_s = 0.0005    # per-transfer setup cost
+    /// transfer_max_attempts = 3   # 1 = no transfer retry
+    /// max_inflight_per_decode = 8 # backpressure gate
     /// ```
     pub fn from_toml_str(text: &str) -> Result<RunConfig> {
         let doc = toml::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
@@ -250,6 +258,18 @@ impl RunConfig {
         fl.autoscale_idle_hi = doc.float_or("fleet", "autoscale_idle_hi", fl.autoscale_idle_hi);
         fl.autoscale_every =
             doc.int_or("fleet", "autoscale_every", fl.autoscale_every as i64) as u32;
+        let pl = &mut fl.pools;
+        pl.prefill = doc.int_or("fleet.pools", "prefill", pl.prefill as i64) as usize;
+        pl.decode = doc.int_or("fleet.pools", "decode", pl.decode as i64) as usize;
+        pl.transfer_gb_per_s =
+            doc.float_or("fleet.pools", "transfer_gb_per_s", pl.transfer_gb_per_s);
+        pl.transfer_base_s = doc.float_or("fleet.pools", "transfer_base_s", pl.transfer_base_s);
+        pl.transfer_max_attempts = doc
+            .int_or("fleet.pools", "transfer_max_attempts", pl.transfer_max_attempts as i64)
+            as u32;
+        pl.max_inflight_per_decode = doc
+            .int_or("fleet.pools", "max_inflight_per_decode", pl.max_inflight_per_decode as i64)
+            as usize;
         let sc = &mut cfg.scales;
         sc.tokenize = doc.float_or("scales", "tokenize", sc.tokenize);
         sc.launch = doc.float_or("scales", "launch", sc.launch);
@@ -403,6 +423,33 @@ control_plane_weight = 4
         // invalid values are rejected
         assert!(RunConfig::from_toml_str("[fleet]\nrouter = \"random\"\n").is_err());
         assert!(RunConfig::from_toml_str("[fleet]\nreplicas = 0\n").is_err());
+    }
+
+    #[test]
+    fn toml_fleet_pools_section() {
+        let cfg = RunConfig::from_toml_str(
+            "[fleet]\nreplicas = 4\n[fleet.pools]\nprefill = 1\ndecode = 3\n\
+             transfer_gb_per_s = 50.0\ntransfer_max_attempts = 2\n",
+        )
+        .unwrap();
+        let p = &cfg.serve.fleet.pools;
+        assert!(p.enabled());
+        assert_eq!((p.prefill, p.decode), (1, 3));
+        assert_eq!(p.transfer_gb_per_s, 50.0);
+        assert_eq!(p.transfer_max_attempts, 2);
+        // untouched knobs keep their defaults
+        assert_eq!(p.max_inflight_per_decode, 8);
+        // absent subsection keeps pools off
+        let cfg = RunConfig::from_toml_str("[fleet]\nreplicas = 4\n").unwrap();
+        assert!(!cfg.serve.fleet.pools.enabled());
+        // partition mismatch and pools-without-fleet are rejected
+        assert!(RunConfig::from_toml_str(
+            "[fleet]\nreplicas = 4\n[fleet.pools]\nprefill = 2\ndecode = 3\n"
+        )
+        .is_err());
+        assert!(
+            RunConfig::from_toml_str("[fleet.pools]\nprefill = 1\ndecode = 1\n").is_err()
+        );
     }
 
     #[test]

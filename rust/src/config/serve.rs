@@ -172,6 +172,101 @@ impl RouterPolicy {
     }
 }
 
+/// Disaggregated prefill/decode pool knobs (the Mooncake/DistServe
+/// shape). Off by default (`prefill = decode = 0`), so the colocated
+/// fleet path stays byte-identical. When enabled, replicas
+/// `[0, prefill)` form the prefill pool and `[prefill, prefill+decode)`
+/// the decode pool, and every request's KV state is handed off between
+/// them as an explicit copy task on the shared CPU substrate — where it
+/// contends with tokenization and can stall, fail, or back up.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PoolConfig {
+    /// Replicas in the prefill pool. 0 = disaggregation off.
+    pub prefill: usize,
+    /// Replicas in the decode pool. 0 = disaggregation off.
+    /// When both are nonzero they must sum to `fleet.replicas`.
+    pub decode: usize,
+    /// KV handoff bandwidth (GB/s) for the prefill→decode copy; the
+    /// per-transfer cost is `transfer_base_s + kv_bytes / bandwidth`.
+    pub transfer_gb_per_s: f64,
+    /// Fixed per-transfer setup cost (seconds): connection + descriptor
+    /// exchange before bytes move.
+    pub transfer_base_s: f64,
+    /// Total handoff attempts per request (1 = no transfer retry).
+    /// A transfer that exhausts its budget falls back to re-prefilling
+    /// in the decode pool.
+    pub transfer_max_attempts: u32,
+    /// Backpressure gate: defer prefill dispatch while the decode pool
+    /// holds at least this many in-flight requests plus active
+    /// transfers per decode replica.
+    pub max_inflight_per_decode: usize,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        Self {
+            prefill: 0,
+            decode: 0,
+            transfer_gb_per_s: 25.0,
+            transfer_base_s: 0.000_5,
+            transfer_max_attempts: 3,
+            max_inflight_per_decode: 8,
+        }
+    }
+}
+
+impl PoolConfig {
+    /// Is the disaggregated-pool layer on (both pools populated)?
+    pub fn enabled(&self) -> bool {
+        self.prefill > 0 && self.decode > 0
+    }
+
+    /// Parse the `--pools prefill=N,decode=M` CLI syntax.
+    pub fn parse_cli(spec: &str) -> Result<(usize, usize)> {
+        let (mut prefill, mut decode) = (None, None);
+        for part in spec.split(',').filter(|s| !s.is_empty()) {
+            let Some((key, value)) = part.split_once('=') else {
+                bail!("--pools expects prefill=N,decode=M, got '{part}'");
+            };
+            let n: usize = value
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--pools: bad count '{value}'"))?;
+            match key.trim() {
+                "prefill" => prefill = Some(n),
+                "decode" => decode = Some(n),
+                other => bail!("--pools: unknown pool '{other}' (prefill/decode)"),
+            }
+        }
+        match (prefill, decode) {
+            (Some(p), Some(d)) => Ok((p, d)),
+            _ => bail!("--pools must set both prefill= and decode="),
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if (self.prefill == 0) != (self.decode == 0) {
+            bail!("fleet.pools: prefill and decode must both be 0 (off) or both ≥ 1");
+        }
+        if !(self.transfer_gb_per_s > 0.0 && self.transfer_gb_per_s.is_finite()) {
+            bail!("fleet.pools.transfer_gb_per_s must be positive and finite");
+        }
+        if !(self.transfer_base_s >= 0.0 && self.transfer_base_s.is_finite()) {
+            bail!("fleet.pools.transfer_base_s must be ≥ 0 and finite");
+        }
+        if self.transfer_max_attempts == 0 {
+            bail!("fleet.pools.transfer_max_attempts must be ≥ 1 (1 = no retry)");
+        }
+        if self.transfer_max_attempts > MAX_RETRY_ATTEMPTS {
+            bail!("fleet.pools.transfer_max_attempts must be ≤ {MAX_RETRY_ATTEMPTS}");
+        }
+        if self.max_inflight_per_decode == 0 {
+            bail!("fleet.pools.max_inflight_per_decode must be ≥ 1");
+        }
+        Ok(())
+    }
+}
+
 /// Replicated-serving (fleet) knobs: replica count, router policy,
 /// health probing, failover, hedging, and the reactive core autoscaler.
 /// The default (`replicas = 1`) disables the whole layer, so existing
@@ -225,6 +320,9 @@ pub struct FleetConfig {
     pub autoscale_idle_hi: f64,
     /// Autoscaler cadence: act every this many probe windows.
     pub autoscale_every: u32,
+    /// Disaggregated prefill/decode pools with an explicit KV handoff.
+    /// Defaults to off (colocated fleet).
+    pub pools: PoolConfig,
 }
 
 impl Default for FleetConfig {
@@ -247,6 +345,7 @@ impl Default for FleetConfig {
             autoscale_idle_lo: 0.15,
             autoscale_idle_hi: 0.60,
             autoscale_every: 2,
+            pools: PoolConfig::default(),
         }
     }
 }
@@ -298,6 +397,20 @@ impl FleetConfig {
         }
         if self.autoscale_every == 0 {
             bail!("fleet.autoscale_every must be ≥ 1");
+        }
+        self.pools.validate()?;
+        if self.pools.enabled() {
+            if !self.enabled() {
+                bail!("fleet.pools requires fleet.replicas > 1");
+            }
+            if self.pools.prefill + self.pools.decode != self.replicas {
+                bail!(
+                    "fleet.pools: prefill ({}) + decode ({}) must equal fleet.replicas ({})",
+                    self.pools.prefill,
+                    self.pools.decode,
+                    self.replicas
+                );
+            }
         }
         Ok(())
     }
@@ -528,6 +641,74 @@ mod tests {
         ] {
             assert!(f.validate().is_err(), "{f:?} should be rejected");
         }
+    }
+
+    #[test]
+    fn pools_default_off_and_valid() {
+        let p = PoolConfig::default();
+        p.validate().unwrap();
+        assert!(!p.enabled());
+        // A fleet with pools disabled validates regardless of replicas.
+        FleetConfig { replicas: 4, ..Default::default() }.validate().unwrap();
+    }
+
+    #[test]
+    fn pools_partition_must_match_replicas() {
+        let ok = FleetConfig {
+            replicas: 4,
+            pools: PoolConfig { prefill: 1, decode: 3, ..Default::default() },
+            ..Default::default()
+        };
+        ok.validate().unwrap();
+        assert!(ok.pools.enabled());
+        for f in [
+            // partition doesn't sum to replicas
+            FleetConfig {
+                replicas: 4,
+                pools: PoolConfig { prefill: 2, decode: 3, ..Default::default() },
+                ..Default::default()
+            },
+            // pools on a single-replica fleet
+            FleetConfig {
+                replicas: 1,
+                pools: PoolConfig { prefill: 1, decode: 1, ..Default::default() },
+                ..Default::default()
+            },
+            // half-enabled
+            FleetConfig {
+                replicas: 4,
+                pools: PoolConfig { prefill: 4, decode: 0, ..Default::default() },
+                ..Default::default()
+            },
+        ] {
+            assert!(f.validate().is_err(), "{f:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn pools_reject_bad_knobs() {
+        for p in [
+            PoolConfig { transfer_gb_per_s: 0.0, ..Default::default() },
+            PoolConfig { transfer_base_s: -1.0, ..Default::default() },
+            PoolConfig { transfer_max_attempts: 0, ..Default::default() },
+            PoolConfig {
+                transfer_max_attempts: MAX_RETRY_ATTEMPTS + 1,
+                ..Default::default()
+            },
+            PoolConfig { max_inflight_per_decode: 0, ..Default::default() },
+        ] {
+            assert!(p.validate().is_err(), "{p:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn pools_cli_syntax() {
+        assert_eq!(PoolConfig::parse_cli("prefill=2,decode=6").unwrap(), (2, 6));
+        assert_eq!(PoolConfig::parse_cli("decode=1,prefill=3").unwrap(), (3, 1));
+        assert!(PoolConfig::parse_cli("prefill=2").is_err());
+        assert!(PoolConfig::parse_cli("prefill=x,decode=1").is_err());
+        assert!(PoolConfig::parse_cli("warm=1,decode=1").is_err());
+        assert!(PoolConfig::parse_cli("").is_err());
     }
 
     #[test]

@@ -64,6 +64,32 @@ pub enum FaultSpec {
         /// Fleet scope: `None` = every replica, `Some(r)` = replica `r`.
         replica: Option<usize>,
     },
+    /// Disaggregated-pool KV-handoff stall: within the window, each
+    /// prefill→decode transfer independently costs `stall_ns` extra
+    /// copy time with probability `prob` (NIC queueing / page-pinning
+    /// contention on the CPU-driven copy path). Scope selects the
+    /// *source prefill replica*.
+    TransferStall {
+        start_s: f64,
+        end_s: f64,
+        prob: f64,
+        stall_ns: u64,
+        /// Fleet scope: `None` = every prefill replica, `Some(r)` =
+        /// transfers originating from replica `r`.
+        replica: Option<usize>,
+    },
+    /// Disaggregated-pool KV-handoff loss: within the window, each
+    /// transfer attempt independently fails outright with probability
+    /// `prob` and must be retried (or re-prefilled once the retry
+    /// budget is exhausted). Scope selects the source prefill replica.
+    TransferLoss {
+        start_s: f64,
+        end_s: f64,
+        prob: f64,
+        /// Fleet scope: `None` = every prefill replica, `Some(r)` =
+        /// transfers originating from replica `r`.
+        replica: Option<usize>,
+    },
 }
 
 impl FaultSpec {
@@ -72,7 +98,9 @@ impl FaultSpec {
         match *self {
             FaultSpec::TokenizerStall { replica, .. }
             | FaultSpec::CoreLoss { replica, .. }
-            | FaultSpec::LaunchSpike { replica, .. } => replica,
+            | FaultSpec::LaunchSpike { replica, .. }
+            | FaultSpec::TransferStall { replica, .. }
+            | FaultSpec::TransferLoss { replica, .. } => replica,
         }
     }
 
@@ -105,6 +133,14 @@ impl FaultSpec {
                 *spike_ns as f64 / 1e3,
                 self.scope_label()
             ),
+            FaultSpec::TransferStall { start_s, end_s, prob, stall_ns, .. } => format!(
+                "xfer-stall {start_s}-{end_s}s p={prob} +{:.0}ms{}",
+                *stall_ns as f64 / 1e6,
+                self.scope_label()
+            ),
+            FaultSpec::TransferLoss { start_s, end_s, prob, .. } => {
+                format!("xfer-loss {start_s}-{end_s}s p={prob}{}", self.scope_label())
+            }
         }
     }
 
@@ -130,6 +166,19 @@ impl FaultSpec {
                     .set("end_s", *end_s)
                     .set("prob", *prob)
                     .set("spike_ns", *spike_ns);
+            }
+            FaultSpec::TransferStall { start_s, end_s, prob, stall_ns, .. } => {
+                j.set("kind", "transfer_stall")
+                    .set("start_s", *start_s)
+                    .set("end_s", *end_s)
+                    .set("prob", *prob)
+                    .set("stall_ns", *stall_ns);
+            }
+            FaultSpec::TransferLoss { start_s, end_s, prob, .. } => {
+                j.set("kind", "transfer_loss")
+                    .set("start_s", *start_s)
+                    .set("end_s", *end_s)
+                    .set("prob", *prob);
             }
         }
         // Omit-when-unscoped keeps pre-fleet trace dumps byte-stable.
@@ -166,6 +215,19 @@ impl FaultSpec {
                 spike_ns: f("spike_ns")? as u64,
                 replica,
             }),
+            "transfer_stall" => Some(FaultSpec::TransferStall {
+                start_s,
+                end_s,
+                prob: f("prob")?,
+                stall_ns: f("stall_ns")? as u64,
+                replica,
+            }),
+            "transfer_loss" => Some(FaultSpec::TransferLoss {
+                start_s,
+                end_s,
+                prob: f("prob")?,
+                replica,
+            }),
             _ => None,
         }
     }
@@ -186,10 +248,12 @@ impl Window {
     }
 }
 
-/// Domain-separation salts so the tokenizer and launch fault streams
-/// never collide even for identical (window, key) pairs.
+/// Domain-separation salts so the tokenizer, launch, and KV-transfer
+/// fault streams never collide even for identical (window, key) pairs.
 const TOK_SALT: u64 = 0xF417_70CC_0001_A001;
 const LAUNCH_SALT: u64 = 0xF417_70CC_0002_B002;
+const TRANSFER_SALT: u64 = 0xF417_70CC_0003_C003;
+const LOSS_SALT: u64 = 0xF417_70CC_0004_D004;
 
 /// Compiled fault schedule the engine consults at event time. Built
 /// once per run from `(run seed, &[FaultSpec], replica index)`; empty
@@ -202,6 +266,8 @@ pub struct FaultPlan {
     tokenizer: Vec<Window>,
     launch: Vec<Window>,
     stall: Vec<Window>,
+    transfer_stall: Vec<Window>,
+    transfer_loss: Vec<Window>,
 }
 
 impl FaultPlan {
@@ -247,13 +313,33 @@ impl FaultPlan {
                     });
                 }
                 FaultSpec::CoreLoss { replica: None, .. } => {}
+                FaultSpec::TransferStall { start_s, end_s, prob, stall_ns, .. } => {
+                    plan.transfer_stall.push(Window {
+                        start_ns: (start_s.max(0.0) * 1e9) as u64,
+                        end_ns: (end_s.max(0.0) * 1e9) as u64,
+                        prob,
+                        extra_ns: stall_ns,
+                    });
+                }
+                FaultSpec::TransferLoss { start_s, end_s, prob, .. } => {
+                    plan.transfer_loss.push(Window {
+                        start_ns: (start_s.max(0.0) * 1e9) as u64,
+                        end_ns: (end_s.max(0.0) * 1e9) as u64,
+                        prob,
+                        extra_ns: 0,
+                    });
+                }
             }
         }
         plan
     }
 
     pub fn is_empty(&self) -> bool {
-        self.tokenizer.is_empty() && self.launch.is_empty() && self.stall.is_empty()
+        self.tokenizer.is_empty()
+            && self.launch.is_empty()
+            && self.stall.is_empty()
+            && self.transfer_stall.is_empty()
+            && self.transfer_loss.is_empty()
     }
 
     /// If an engine-stall window is open at `now_ns`, the virtual time
@@ -295,6 +381,37 @@ impl FaultPlan {
             }
         }
         extra
+    }
+
+    /// Extra KV-handoff copy time for transfer attempt `attempt` of
+    /// fleet origin `origin` starting at `now_ns`. Keyed by
+    /// `(origin, attempt)` — stable under any transfer completion
+    /// order, so faulted disagg runs replay byte-identically.
+    pub fn transfer_stall_ns(&self, now_ns: u64, origin: u64, attempt: u64) -> u64 {
+        let mut extra = 0u64;
+        for (i, w) in self.transfer_stall.iter().enumerate() {
+            if w.active(now_ns) {
+                let key = SplitMix64::new(origin.wrapping_mul(0x1_0000_0001).wrapping_add(attempt))
+                    .next_u64();
+                if self.fires(TRANSFER_SALT, i, w.prob, key) {
+                    extra += w.extra_ns;
+                }
+            }
+        }
+        extra
+    }
+
+    /// Does transfer attempt `attempt` of origin `origin`, *completing*
+    /// at `now_ns`, fail outright? Same pure-hash discipline as every
+    /// other fault stream.
+    pub fn transfer_lost(&self, now_ns: u64, origin: u64, attempt: u64) -> bool {
+        self.transfer_loss.iter().enumerate().any(|(i, w)| {
+            w.active(now_ns) && {
+                let key = SplitMix64::new(origin.wrapping_mul(0x1_0000_0001).wrapping_add(attempt))
+                    .next_u64();
+                self.fires(LOSS_SALT, i, w.prob, key)
+            }
+        })
     }
 
     /// Extra launch-submission CPU time for `(step_seq, worker rank)`.
@@ -478,6 +595,59 @@ mod tests {
         let scoped0 =
             [FaultSpec::CoreLoss { start_s: 1.0, end_s: 2.0, cores: 4, replica: Some(0) }];
         assert_eq!(FaultPlan::new(9, &scoped0).engine_stall_until(1_200_000_000), Some(2_000_000_000));
+    }
+
+    #[test]
+    fn transfer_faults_roundtrip_and_draw_purely() {
+        let specs = [
+            FaultSpec::TransferStall {
+                start_s: 1.0,
+                end_s: 3.0,
+                prob: 0.5,
+                stall_ns: 2_000_000,
+                replica: Some(0),
+            },
+            FaultSpec::TransferLoss { start_s: 1.0, end_s: 3.0, prob: 1.0, replica: None },
+        ];
+        for s in &specs {
+            let back = FaultSpec::from_json(&s.to_json()).expect("parse own dump");
+            assert_eq!(&back, s);
+            assert!(!s.label().is_empty());
+        }
+        let plan = FaultPlan::new_for_replica(11, &specs, 0);
+        assert!(!plan.is_empty());
+        // Pure in (origin, attempt): same key, same draw, any order.
+        for origin in 0..8u64 {
+            for attempt in 0..4u64 {
+                let a = plan.transfer_stall_ns(2_000_000_000, origin, attempt);
+                let b = plan.transfer_stall_ns(2_000_000_000, origin, attempt);
+                assert_eq!(a, b);
+                assert!(plan.transfer_lost(2_000_000_000, origin, attempt), "p=1 fires");
+            }
+        }
+        // Outside the window: inert.
+        assert_eq!(plan.transfer_stall_ns(500_000_000, 0, 0), 0);
+        assert!(!plan.transfer_lost(3_000_000_000, 0, 0));
+        // Replica scope filters by source prefill replica.
+        let other = FaultPlan::new_for_replica(11, &specs[..1], 1);
+        assert!(other.is_empty());
+        // Stall and loss streams are domain-separated: with identical
+        // windows and p=0.5, the fire sets must differ somewhere.
+        let both = [
+            FaultSpec::TransferStall {
+                start_s: 0.0,
+                end_s: 10.0,
+                prob: 0.5,
+                stall_ns: 1,
+                replica: None,
+            },
+            FaultSpec::TransferLoss { start_s: 0.0, end_s: 10.0, prob: 0.5, replica: None },
+        ];
+        let plan = FaultPlan::new(5, &both);
+        let diverge = (0..256u64).any(|k| {
+            (plan.transfer_stall_ns(1, k, 0) > 0) != plan.transfer_lost(1, k, 0)
+        });
+        assert!(diverge, "stall and loss streams must not be correlated");
     }
 
     #[test]

@@ -536,6 +536,12 @@ impl ServingSim {
         self.sim.stats()
     }
 
+    /// KV pages currently allocated to resident requests. Zero after a
+    /// fully drained run — the testkit's leak assertion pins this.
+    pub fn kv_pages_in_use(&self) -> usize {
+        self.env.shared.borrow().kv.used_pages()
+    }
+
     /// Build the attribution report, or `None` when `serve.profile` is
     /// off. Finalizes lazily on first call: attempts still in flight at
     /// the horizon are recorded with their partial phase spans (the tail
@@ -751,6 +757,52 @@ pub(crate) fn fleet_submit(sim: &mut Sim, env: &Env, a: StreamArrival) -> Reques
     id
 }
 
+/// Deliver a decode-pool attempt whose prompt KV arrived via a
+/// disaggregated handoff: the prompt is already tokenized (the prefill
+/// replica paid the encode), so delivery pays only HTTP ingest + the
+/// channel send. The request carries `kv_received` (the scheduler
+/// recomputes just the last prompt token instead of a full prefill) and
+/// `ph_handoff_ns` (the transfer span, recharged from tokenize into the
+/// comm phase by attribution). `a.at_ns` must be the origin's original
+/// arrival so client-perceived latency spans prefill + handoff + decode.
+pub(crate) fn fleet_submit_prefilled(
+    sim: &mut Sim,
+    env: &Env,
+    a: StreamArrival,
+    handoff_ns: u64,
+) -> RequestId {
+    let id = {
+        let shared = &mut *env.shared.borrow_mut();
+        let id = shared.next_id;
+        shared.next_id += 1;
+        id
+    };
+    let mut request = Request::new(id, a.class, a.at_ns, a.prompt_tokens, a.max_new_tokens);
+    request.content_seed = a.content_seed;
+    request.tag = a.tag;
+    request.origin = id;
+    request.kv_received = true;
+    request.ph_handoff_ns = handoff_ns;
+    env.shared.borrow_mut().pending.insert(request.clone());
+    let cost_ns = env.costs.http_ns + env.channel.send_cost_ns;
+    let envc = env.clone();
+    env.pool.submit_external(
+        sim,
+        TokJob {
+            cost_ns,
+            on_done: Box::new(move |ctx| {
+                let mut r = request;
+                let now = ctx.now_ns();
+                r.tokenized_at = Some(now);
+                envc.shared.borrow_mut().pending.insert(r.clone());
+                envc.channel.push_external(r);
+                ctx.signal(envc.channel.sent_gate(), 1);
+            }),
+        },
+    );
+    id
+}
+
 /// Cancel a logical request on this replica (hedge loser, or eviction
 /// from a Down replica). If a retry ticket is parked, removing it is the
 /// whole cancellation — the pending `fire_retry` timer finds no ticket
@@ -772,6 +824,16 @@ pub(crate) fn cancel_origin(env: &Env, origin: RequestId) {
 /// attempt's terminal status under the origin id, preserving
 /// exactly-one-outcome-per-logical-request).
 pub(crate) fn harvest_leftovers(shared: &mut EngineShared, scratch: &mut Vec<Outcome>) {
+    // Horizon KV reclaim: requests cut off mid-flight surrender their
+    // pages so the no-leak invariant (`kv_pages_in_use == 0` after a
+    // drained run) holds even for censored requests.
+    {
+        let sched = &shared.sched;
+        let kv = &mut shared.kv;
+        for r in sched.requests.values() {
+            kv.release(r.id);
+        }
+    }
     scratch.extend(shared.sched.requests.values().map(Outcome::from_request));
     scratch.extend(shared.pending.values().map(Outcome::from_request));
     for (&origin, t) in shared.retry_tickets.iter() {
@@ -981,7 +1043,12 @@ fn should_shed(serve: &ServeConfig, shared: &EngineShared, r: &Request, now: u64
 /// a deterministic jitter in [0.5, 1.0] drawn from a per-origin stream
 /// (keyed like `scenario::class_streams` — by arrival-order identity,
 /// never completion order — so replays are byte-identical).
-fn retry_backoff_ns(res: &ResilienceConfig, run_seed: u64, origin: RequestId, attempt: u32) -> u64 {
+pub(crate) fn retry_backoff_ns(
+    res: &ResilienceConfig,
+    run_seed: u64,
+    origin: RequestId,
+    attempt: u32,
+) -> u64 {
     let origin_h = SplitMix64::new(origin).next_u64();
     let mut sm = SplitMix64::new(run_seed ^ RETRY_STREAM_SALT ^ origin_h);
     let mut j = 0u64;

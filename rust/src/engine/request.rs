@@ -138,6 +138,17 @@ pub struct Request {
     pub ph_comm_ns: u64,
     /// Attributed in-batch stall time (ns).
     pub ph_idle_ns: u64,
+
+    // --- disaggregated-pool handoff (fleet::pools) ---
+    /// The request arrived with its prompt KV already transferred from
+    /// a prefill-pool replica: admission charges at most one prompt
+    /// token of prefill compute (logit recompute), not the full prompt.
+    pub kv_received: bool,
+    /// Wall time the prefill→decode KV handoff occupied before this
+    /// delivery (ns). Pure bookkeeping for phase attribution: the span
+    /// is re-charged from the tokenize phase into comm, keeping the
+    /// conservation sum exact. 0 on every colocated path.
+    pub ph_handoff_ns: u64,
 }
 
 impl Request {
@@ -172,6 +183,8 @@ impl Request {
             ph_compute_ns: 0,
             ph_comm_ns: 0,
             ph_idle_ns: 0,
+            kv_received: false,
+            ph_handoff_ns: 0,
         }
     }
 

@@ -156,15 +156,22 @@ pub fn schedule_into(
         let r = state.requests.get_mut(id).expect("waiting request present");
         // Prefix-cache probe first: cached blocks are shared
         // (ref-counted in vLLM), so they don't count against this
-        // request's new-page reservation.
-        let cached = match prefix.as_deref_mut() {
-            Some(pc) => {
-                let c = pc.lookup_and_insert(r.content_seed, r.prompt_tokens);
-                // never skip the *entire* prompt (the last token must be
-                // computed to produce logits), mirroring vLLM
-                c.min(r.prompt_tokens.saturating_sub(1))
+        // request's new-page reservation. A disaggregated handoff
+        // (`kv_received`) supersedes the probe: the prompt KV arrived
+        // from the prefill pool, so only the last prompt token is
+        // recomputed to regenerate logits before decode.
+        let cached = if r.kv_received {
+            r.prompt_tokens.saturating_sub(1)
+        } else {
+            match prefix.as_deref_mut() {
+                Some(pc) => {
+                    let c = pc.lookup_and_insert(r.content_seed, r.prompt_tokens);
+                    // never skip the *entire* prompt (the last token must be
+                    // computed to produce logits), mirroring vLLM
+                    c.min(r.prompt_tokens.saturating_sub(1))
+                }
+                None => 0,
             }
-            None => 0,
         };
         let new_tokens = r.prompt_tokens - cached + r.max_new_tokens;
         if !kv.can_ever_fit(new_tokens) {
@@ -438,6 +445,22 @@ mod tests {
         let (_, chunk, _) = plan2.prefill[0];
         assert!(chunk < 96, "cached prefix skipped, chunk={chunk}");
         assert!(chunk >= 1, "last token always computed");
+    }
+
+    #[test]
+    fn kv_received_request_recomputes_only_last_prompt_token() {
+        let (mut state, mut kv) = setup();
+        let cfg = cfg();
+        let mut r = req(1, 96, 3);
+        r.kv_received = true;
+        state.enqueue(r);
+        let plan = schedule(&mut state, &mut kv, None, &cfg, 0).unwrap();
+        // One-token prefill chunk: logit recompute, not the full prompt.
+        assert_eq!(plan.prefill, vec![(1, 1, 96)]);
+        let (first, _) = complete_step(&mut state, &mut kv, &plan, 1);
+        assert_eq!(first.to_vec(), vec![1], "first token on the recompute step");
+        assert_eq!(state.get(1).unwrap().phase, ReqPhase::Decode);
+        assert_eq!(state.get(1).unwrap().cached_tokens, 95);
     }
 
     #[test]

@@ -152,6 +152,16 @@ pub fn serve_once(args: &Args) {
             )
         });
     }
+    // `--pools prefill=N,decode=M` splits the fleet into disaggregated
+    // prefill/decode pools with an explicit KV handoff between them.
+    // The partition must sum to the replica count.
+    if let Some(spec) = args.get("pools") {
+        let (p, d) = crate::config::PoolConfig::parse_cli(spec)
+            .unwrap_or_else(|e| panic!("{e}"));
+        cfg.serve.fleet.pools.prefill = p;
+        cfg.serve.fleet.pools.decode = d;
+        cfg.serve.fleet.validate().unwrap_or_else(|e| panic!("{e}"));
+    }
     // `--profile` arms attribution profiling on top of whatever the
     // config file says; it never turns an armed config off.
     cfg.serve.profile = cfg.serve.profile || args.flag("profile");
@@ -166,7 +176,7 @@ pub fn serve_once(args: &Args) {
     let interval = (1e9 / rps) as u64;
     // The uniform stream honors `--replicas` too: route it through the
     // fleet so a quick `serve --replicas 4` shows the router at work.
-    let (outcomes, steps) = if cfg.serve.fleet.enabled() {
+    let (outcomes, steps, pools) = if cfg.serve.fleet.enabled() {
         let mut sim = crate::fleet::FleetSim::new(cfg);
         for i in 0..n_requests {
             sim.submit_request(crate::engine::StreamArrival {
@@ -181,7 +191,7 @@ pub fn serve_once(args: &Args) {
         sim.run_secs(args.f64_or("horizon", 300.0));
         let mut outcomes = sim.drain_outcomes();
         outcomes.sort_by_key(|o| o.origin);
-        (outcomes, sim.steps_completed())
+        (outcomes, sim.steps_completed(), sim.pool_summary())
     } else {
         let mut sim = ServingSim::new(cfg);
         let ids: Vec<_> = (0..n_requests)
@@ -189,7 +199,7 @@ pub fn serve_once(args: &Args) {
             .collect();
         sim.run_secs(args.f64_or("horizon", 300.0));
         let outcomes = ids.into_iter().map(|id| sim.outcome(id).unwrap()).collect();
-        (outcomes, sim.steps_completed())
+        (outcomes, sim.steps_completed(), None)
     };
     let mut t = Table::new(&["req", "prompt", "tokenize (s)", "TTFT (s)", "e2e (s)", "tokens"]);
     for o in &outcomes {
@@ -208,6 +218,29 @@ pub fn serve_once(args: &Args) {
     }
     print!("{}", t.render());
     println!("engine steps: {steps}");
+    if let Some(p) = pools {
+        println!("{}", pool_summary_line(&p));
+    }
+}
+
+/// One-line disaggregation summary shared by the uniform-stream and
+/// scenario `serve` outputs.
+fn pool_summary_line(p: &crate::fleet::PoolSummary) -> String {
+    format!(
+        "pools: {} prefill / {} decode replicas, {} handoffs ({} completed, \
+         {} retries, {} failed), {} re-prefills, {} backpressure deferrals, \
+         {} colocated fallbacks over {} degraded windows",
+        p.prefill_replicas,
+        p.decode_replicas,
+        p.handoffs_started,
+        p.handoffs_completed,
+        p.transfer_retries,
+        p.transfer_failures,
+        p.reprefills,
+        p.backpressure_deferrals,
+        p.colocated_fallbacks,
+        p.colocated_windows
+    )
 }
 
 /// Scenario-driven `cpuslow serve`: generate the named catalog scenario
@@ -270,6 +303,9 @@ fn serve_scenario(cfg: RunConfig, name: &str, args: &Args) {
         report.steps_completed,
         report.cpu_core_seconds
     );
+    if let Some(p) = &report.pools {
+        println!("{}", pool_summary_line(p));
+    }
     // Ride-along attribution table when profiling is armed (`--profile`
     // or `serve.profile = true`). The serving report above is
     // byte-identical either way; only these extra lines appear.

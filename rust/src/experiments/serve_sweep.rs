@@ -283,6 +283,15 @@ pub fn cells_to_json(cells: &[CellResult]) -> Json {
                     .set("gpu_idle_share", c.gpu_idle_share)
                     .set("cost_usd", c.cost_usd)
                     .set("cost_per_slo_met", c.cost_per_slo_met());
+                // Omit-when-absent keeps unprofiled sweep dumps (and the
+                // main columns above) byte-identical with `--profile` off.
+                if let Some(shares) = &c.phase_shares {
+                    let mut pj = Json::obj();
+                    for (k, s) in shares.iter().enumerate() {
+                        pj.set(crate::profile::PHASE_NAMES[k], *s);
+                    }
+                    j.set("phase_shares", pj);
+                }
                 j
             })
             .collect(),
@@ -421,6 +430,7 @@ pub fn print_catalog() {
         "prompt/output",
         "SLO (s)",
         "resilience / faults",
+        "pools",
         "probes",
     ])
     .with_title("Workload scenario catalog")
@@ -429,7 +439,8 @@ pub fn print_catalog() {
     .align(2, crate::report::table::Align::Left)
     .align(3, crate::report::table::Align::Left)
     .align(5, crate::report::table::Align::Left)
-    .align(6, crate::report::table::Align::Left);
+    .align(6, crate::report::table::Align::Left)
+    .align(7, crate::report::table::Align::Left);
     for s in Scenario::catalog() {
         // The per-scenario resilience/fault column: fleet topology
         // first, then armed gates, then each injected fault's label.
@@ -448,6 +459,13 @@ pub fn print_catalog() {
             extras.push("resilience".to_string());
         }
         extras.extend(s.faults.iter().map(FaultSpec::label));
+        // Disaggregated prefill/decode partition, "-" for colocated.
+        let pools = s
+            .fleet
+            .as_ref()
+            .filter(|f| f.pools.enabled())
+            .map(|f| format!("{}p/{}d", f.pools.prefill, f.pools.decode))
+            .unwrap_or_else(|| "-".to_string());
         for (i, c) in s.classes.iter().enumerate() {
             t.row(vec![
                 if i == 0 { s.name.clone() } else { String::new() },
@@ -456,6 +474,7 @@ pub fn print_catalog() {
                 c.lengths.label(),
                 format!("{:.0}", c.slo_ttft_s),
                 if i == 0 { extras.join("; ") } else { String::new() },
+                if i == 0 { pools.clone() } else { String::new() },
                 if i == 0 {
                     s.paper_section.clone()
                 } else {

@@ -34,10 +34,12 @@
 
 mod autoscale;
 mod health;
+mod pools;
 mod router;
 
 pub use autoscale::GrantEvent;
 pub use health::HealthState;
+pub use pools::PoolSummary;
 
 use crate::config::{FleetConfig, RunConfig};
 use crate::engine::{
@@ -67,7 +69,7 @@ pub(crate) fn replica_seed(fleet_seed: u64, replica: usize) -> u64 {
 
 /// Delivery slot of a dispatched request copy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum Arm {
+pub(crate) enum Arm {
     Primary,
     Hedge,
 }
@@ -88,6 +90,15 @@ pub(crate) struct OriginState {
     pub(crate) retries_accum: u32,
     /// When the primary was (re-)dispatched — the hedge timer base.
     pub(crate) dispatched_ns: u64,
+    /// Disaggregation lifecycle stage (always `Colocated` with pools
+    /// off — the decode-delivery exception to the retry ledger and the
+    /// pool-ranged router picks key off this).
+    pub(crate) stage: pools::Stage,
+    /// Tokenizer-stage latency measured by the prefill leg; the decode
+    /// leg's terminal outcome reports this (its own tokenize span would
+    /// mislabel prefill + handoff wall time as tokenization). Cleared
+    /// on re-prefill, which genuinely re-tokenizes.
+    pub(crate) prefill_tok_ns: Option<u64>,
 }
 
 /// Router-side bookkeeping for one replica.
@@ -142,6 +153,8 @@ pub(crate) struct FleetCtl {
     pub(crate) last_grant_change_ns: u64,
     pub(crate) submitted: u64,
     pub(crate) last_arrival_ns: u64,
+    /// Disaggregated-pool state (default: inert, pools off).
+    pub(crate) pools: pools::PoolCtl,
     // Recycled scratch buffers (steady-state ticks allocate nothing).
     drain_scratch: Vec<Outcome>,
     evict_scratch: Vec<u64>,
@@ -164,6 +177,22 @@ pub(crate) struct FleetShared {
     /// replica's hooks fold into it); `None` unless `serve.profile`.
     pub(crate) prof: Option<ProfRef>,
     tick_call: RefCell<Option<SharedCall>>,
+    /// Disaggregation timer targets (deferred dispatch, transfer retry,
+    /// transfer completion), installed like `tick_call` — each holds the
+    /// shared state only weakly through the closure's upgrade.
+    pub(crate) pool_calls: RefCell<Option<PoolCalls>>,
+}
+
+/// The three shared-callback targets the disaggregation layer schedules
+/// against; the `u64` argument is always the fleet origin id.
+#[derive(Clone)]
+pub(crate) struct PoolCalls {
+    /// Backpressure-deferred primary dispatch (re-enters routing).
+    pub(crate) defer: SharedCall,
+    /// Transfer retry after deterministic backoff.
+    pub(crate) xfer_start: SharedCall,
+    /// Transfer attempt's copy task finished.
+    pub(crate) xfer_done: SharedCall,
 }
 
 /// N serving replicas on one shared substrate behind the router task.
@@ -290,6 +319,7 @@ impl FleetSim {
                 last_grant_change_ns: 0,
                 submitted: 0,
                 last_arrival_ns: 0,
+                pools: pools::PoolCtl::default(),
                 drain_scratch: Vec::new(),
                 evict_scratch: Vec::new(),
                 hedge_scratch: Vec::new(),
@@ -297,6 +327,7 @@ impl FleetSim {
             }),
             prof,
             tick_call: RefCell::new(None),
+            pool_calls: RefCell::new(None),
         });
         let weak = Rc::downgrade(&fs);
         let call: SharedCall = Rc::new(move |sim: &mut Sim, _arg: u64| {
@@ -305,6 +336,19 @@ impl FleetSim {
             }
         });
         *fs.tick_call.borrow_mut() = Some(call);
+        let mk = |f: fn(&mut Sim, &FleetShared, u64)| -> SharedCall {
+            let weak = Rc::downgrade(&fs);
+            Rc::new(move |sim: &mut Sim, fo: u64| {
+                if let Some(fs) = weak.upgrade() {
+                    f(sim, &fs, fo);
+                }
+            })
+        };
+        *fs.pool_calls.borrow_mut() = Some(PoolCalls {
+            defer: mk(|sim, fs, fo| pools::route_disagg(sim, fs, fo)),
+            xfer_start: mk(|sim, fs, fo| pools::retry_transfer(sim, fs, fo)),
+            xfer_done: mk(|sim, fs, fo| pools::transfer_done(sim, fs, fo)),
+        });
         FleetSim { sim, fs, armed: false }
     }
 
@@ -340,6 +384,27 @@ impl FleetSim {
     /// entry per grant change, in decision order.
     pub fn grant_log(&self) -> Vec<GrantEvent> {
         self.fs.ctl.borrow().grant_log.clone()
+    }
+
+    /// Disaggregation counters, or `None` when `[fleet.pools]` is off.
+    pub fn pool_summary(&self) -> Option<PoolSummary> {
+        let pl = &self.fs.fleet.pools;
+        pl.enabled().then(|| {
+            let mut s = self.fs.ctl.borrow().pools.stats;
+            s.prefill_replicas = pl.prefill;
+            s.decode_replicas = pl.decode;
+            s
+        })
+    }
+
+    /// KV pages currently allocated across every replica. Zero after a
+    /// fully drained run — the testkit's leak assertion pins this.
+    pub fn kv_pages_in_use(&self) -> usize {
+        self.fs
+            .envs
+            .iter()
+            .map(|e| e.shared.borrow().kv.used_pages())
+            .sum()
     }
 
     /// Engine steps completed across all replicas.
@@ -547,8 +612,10 @@ impl FleetSim {
             }
         }
         {
-            // Defensive: origins with no live delivery anywhere (should
-            // not happen) surface as client-side timeouts.
+            // Origins with no live delivery at the horizon surface as
+            // client-side timeouts: a KV transfer still in flight, a
+            // backpressure-deferred dispatch that never placed, or
+            // (defensively) a ledger entry with no delivery record.
             let ctl = &mut *self.fs.ctl.borrow_mut();
             if !ctl.origins.is_empty() {
                 let mut rest: Vec<u64> = ctl.origins.keys().copied().collect();
@@ -558,6 +625,7 @@ impl FleetSim {
                     finale.push(timeout_outcome(fo, &st));
                 }
             }
+            ctl.pools.transfers.clear();
             for rep in ctl.replicas.iter_mut() {
                 rep.translate.clear();
                 rep.inflight = 0;
@@ -665,6 +733,8 @@ fn register_origin(fs: &FleetShared, a: StreamArrival) -> u64 {
             attempts: 0,
             retries_accum: 0,
             dispatched_ns: a.at_ns,
+            stage: pools::Stage::Colocated,
+            prefill_tok_ns: None,
         },
     );
     ctl.submitted += 1;
@@ -675,6 +745,10 @@ fn register_origin(fs: &FleetShared, a: StreamArrival) -> u64 {
 }
 
 fn route_and_dispatch(sim: &mut Sim, fs: &FleetShared, fo: u64) {
+    if fs.fleet.pools.enabled() {
+        pools::route_disagg(sim, fs, fo);
+        return;
+    }
     let pick = {
         let ctl = &mut *fs.ctl.borrow_mut();
         let Some(st) = ctl.origins.get(&fo) else { return };
@@ -687,11 +761,19 @@ fn route_and_dispatch(sim: &mut Sim, fs: &FleetShared, fo: u64) {
 }
 
 /// Deliver one copy of `fo` to replica `r` and record the arm.
-fn dispatch(sim: &mut Sim, fs: &FleetShared, fo: u64, r: usize, arm: Arm) {
+pub(crate) fn dispatch(sim: &mut Sim, fs: &FleetShared, fo: u64, r: usize, arm: Arm) {
     let arrival = {
         let ctl = fs.ctl.borrow();
         match ctl.origins.get(&fo) {
-            Some(st) => st.arrival,
+            Some(st) => {
+                let mut a = st.arrival;
+                // A prefill-leg delivery stops after the first token —
+                // the decode pool streams the rest post-handoff.
+                if st.stage == pools::Stage::Prefill {
+                    a.max_new_tokens = 1;
+                }
+                a
+            }
             None => return,
         }
     };
@@ -726,6 +808,38 @@ fn dispatch(sim: &mut Sim, fs: &FleetShared, fo: u64, r: usize, arm: Arm) {
     }
 }
 
+/// Deliver the decode leg of a completed KV handoff to decode replica
+/// `r`. Unlike [`dispatch`] this delivery is the request's *normal*
+/// second leg — it counts as an attempt (failover budget) but never as
+/// a retry on the fleet ledger — and the engine skips tokenization
+/// (`kv_received`: the prompt's KV just arrived over the wire).
+pub(crate) fn dispatch_decode(sim: &mut Sim, fs: &FleetShared, fo: u64, r: usize, handoff_ns: u64) {
+    let arrival = {
+        let ctl = fs.ctl.borrow();
+        match ctl.origins.get(&fo) {
+            Some(st) => st.arrival,
+            None => return,
+        }
+    };
+    let local = engine::fleet_submit_prefilled(sim, &fs.envs[r], arrival, handoff_ns);
+    let now = sim.now_ns();
+    if let Some(prof) = &fs.prof {
+        // The handoff span: prefill completion → decode delivery,
+        // transfer retries and backoff included.
+        prof.borrow_mut().ring.record(SpanKind::Handoff, now, handoff_ns);
+    }
+    let ctl = &mut *fs.ctl.borrow_mut();
+    let rep = &mut ctl.replicas[r];
+    rep.translate.insert(local, fo);
+    rep.inflight += 1;
+    rep.outstanding_tokens += arrival.prompt_tokens;
+    let Some(st) = ctl.origins.get_mut(&fo) else { return };
+    st.attempts += 1;
+    st.stage = pools::Stage::Decode;
+    st.primary = Some((r, local));
+    st.dispatched_ns = now;
+}
+
 /// One router tick: drain → hedge → (every fourth tick) probe; then
 /// reschedule. Fires at fixed multiples of `tick_ns`, so every decision
 /// window closes at the same virtual time on every run.
@@ -740,6 +854,7 @@ fn fleet_tick(sim: &mut Sim, fs: &FleetShared) {
     };
     if probe_due {
         health::probe(sim, fs, now);
+        pools::refresh_mode(fs);
     }
     let call = fs.tick_call.borrow().clone().expect("tick call installed");
     sim.call_at_shared(now + fs.tick_ns, call, 0);
@@ -767,6 +882,9 @@ enum Action {
     None,
     CancelTwin { replica: usize, local: RequestId, prompt: u64 },
     Redispatch { exclude: usize },
+    /// Disaggregation: the prefill leg completed on `src`; begin the
+    /// KV handoff toward the decode pool.
+    StartTransfer { src: usize },
 }
 
 fn process_outcome(sim: &mut Sim, fs: &FleetShared, r: usize, o: Outcome, horizon: bool) {
@@ -802,7 +920,19 @@ fn process_outcome(sim: &mut Sim, fs: &FleetShared, r: usize, o: Outcome, horizo
             && !horizon
             && fs.fleet.failure_aware
             && st.attempts < fs.fleet.failover_max_attempts;
-        if !terminal_ok && (twin.is_some() || fail_over) {
+        if fs.fleet.pools.enabled()
+            && !horizon
+            && st.stage == pools::Stage::Prefill
+            && o.status == OutcomeStatus::Completed
+        {
+            // Prefill leg done: the logical request enters its KV
+            // handoff instead of terminating — the decode leg (or the
+            // horizon) owns the terminal outcome from here.
+            st.retries_accum += o.retries;
+            st.prefill_tok_ns = o.tokenize_latency_ns;
+            st.stage = pools::Stage::Transfer;
+            (fo, Action::StartTransfer { src: r })
+        } else if !terminal_ok && (twin.is_some() || fail_over) {
             st.retries_accum += o.retries;
             let action = if fail_over { Action::Redispatch { exclude: r } } else { Action::None };
             (fo, action)
@@ -813,6 +943,13 @@ fn process_outcome(sim: &mut Sim, fs: &FleetShared, r: usize, o: Outcome, horizo
             out.id = fo;
             out.origin = fo;
             out.retries = retries;
+            // Disaggregated decode leg: report the *prefill* leg's
+            // tokenizer latency — the decode delivery never tokenizes,
+            // and its own span would mislabel prefill + handoff wall
+            // time as tokenization.
+            if st.stage == pools::Stage::Decode && st.prefill_tok_ns.is_some() {
+                out.tokenize_latency_ns = st.prefill_tok_ns;
+            }
             ctl.outbox.push(out);
             ctl.origins.remove(&fo);
             let action = match twin {
@@ -829,6 +966,7 @@ fn process_outcome(sim: &mut Sim, fs: &FleetShared, r: usize, o: Outcome, horizo
         Action::None => {}
         Action::CancelTwin { replica, local, prompt } => cancel_arm(fs, replica, local, prompt),
         Action::Redispatch { exclude } => redispatch(sim, fs, fo, Some(exclude)),
+        Action::StartTransfer { src } => pools::begin_handoff(sim, fs, fo, src),
     }
 }
 
@@ -845,11 +983,17 @@ fn cancel_arm(fs: &FleetShared, replica: usize, local: RequestId, prompt: u64) {
 fn redispatch(sim: &mut Sim, fs: &FleetShared, fo: u64, exclude: Option<usize>) {
     let pick = {
         let ctl = &mut *fs.ctl.borrow_mut();
-        let content_seed = match ctl.origins.get(&fo) {
-            Some(st) => st.arrival.content_seed,
+        let n = ctl.replicas.len();
+        let (content_seed, stage) = match ctl.origins.get(&fo) {
+            Some(st) => (st.arrival.content_seed, st.stage),
             None => return,
         };
-        router::pick(ctl, &fs.fleet, fo, content_seed, exclude, false)
+        // Failover stays inside the failed leg's pool: a prefill
+        // attempt retries on another prefill replica, a decode attempt
+        // re-prefills on another decode replica. Full range with pools
+        // off, so the colocated path is unchanged.
+        let (lo, hi) = pools::stage_range(&fs.fleet.pools, stage, n);
+        router::pick_in(ctl, &fs.fleet, fo, content_seed, exclude, false, lo, hi)
     };
     if let Some(r2) = pick {
         dispatch(sim, fs, fo, r2, Arm::Primary);
@@ -869,7 +1013,11 @@ fn maybe_hedge(sim: &mut Sim, fs: &FleetShared, now: u64) {
         hedge_scratch.clear();
         for (&fo, st) in origins.iter() {
             let Some((pr, _)) = st.primary else { continue };
-            if st.hedge.is_some()
+            // Disagg-staged origins never hedge: a duplicate prefill
+            // would race its twin into the handoff ledger, and a
+            // duplicate decode would double-consume the transferred KV.
+            if st.stage != pools::Stage::Colocated
+                || st.hedge.is_some()
                 || st.attempts >= fs.fleet.failover_max_attempts
                 || now < st.dispatched_ns.saturating_add(fs.hedge_ns)
                 || replicas[pr].health == HealthState::Down
@@ -1109,6 +1257,38 @@ mod tests {
         let f = FleetSim::new(fleet_cfg(2, 8));
         let secs = f.core_seconds(10_000_000_000);
         assert!((secs - 160.0).abs() < 1e-6, "2 replicas × 8 cores × 10 s = {secs}");
+    }
+
+    #[test]
+    fn disagg_pools_complete_requests_via_handoff() {
+        let mut cfg = fleet_cfg(2, 8);
+        cfg.serve.fleet.pools.prefill = 1;
+        cfg.serve.fleet.pools.decode = 1;
+        let mut f = FleetSim::new(cfg);
+        let mut ids = Vec::new();
+        for i in 0..4u64 {
+            ids.push(f.submit_request(arrival(i * 50_000_000, 400, 10 + i)));
+        }
+        f.run_secs(30.0);
+        let outs = f.drain_outcomes();
+        assert_eq!(outs.len(), 4, "every request resolves: {outs:?}");
+        assert!(
+            outs.iter().all(|o| o.status == OutcomeStatus::Completed),
+            "disagg lifecycle completes: {outs:?}"
+        );
+        // Full token budget arrives despite the prefill leg's 1-token clamp.
+        assert!(outs.iter().all(|o| o.generated_tokens == 8), "{outs:?}");
+        let s = f.pool_summary().expect("pools armed");
+        assert_eq!(s.handoffs_started, 4);
+        assert_eq!(s.handoffs_completed, 4);
+        assert_eq!((s.prefill_replicas, s.decode_replicas), (1, 1));
+        for r in 0..2 {
+            assert!(
+                f.fs.envs[r].shared.borrow().steps_completed > 0,
+                "replica {r} (one pool each) never stepped"
+            );
+        }
+        assert_eq!(f.kv_pages_in_use(), 0, "KV pages all freed after drain");
     }
 
     #[test]

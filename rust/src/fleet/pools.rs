@@ -1,0 +1,412 @@
+//! Disaggregated prefill/decode pools with failure-aware KV handoff.
+//!
+//! When `[fleet.pools]` is armed, the fleet's replicas split into two
+//! contiguous pools — replicas `[0, prefill)` run prompt prefill,
+//! replicas `[prefill, prefill + decode)` run token decode — and each
+//! logical request becomes a three-leg lifecycle:
+//!
+//! 1. **Prefill leg.** The router dispatches the arrival into the
+//!    prefill pool with `max_new_tokens` clamped to 1: the prefill
+//!    replica tokenizes, prefills, and emits the first token.
+//! 2. **KV handoff.** The prompt's KV pages travel to the decode pool
+//!    as an explicit *copy task* on the source replica's tokenizer
+//!    executor — the same simulated CPU pool tokenization contends for,
+//!    so a handoff-heavy fleet starves its own encodes exactly the way
+//!    the paper's CPU-contention story predicts. Cost =
+//!    `transfer_base_s + prompt_tokens × kv_bytes_per_token /
+//!    transfer_gb_per_s`. The handoff is a first-class failure domain:
+//!    [`FaultSpec::TransferStall`] stretches an attempt,
+//!    [`FaultSpec::TransferLoss`] kills it, both by the same pure-hash
+//!    fires-or-not rule as every other fault stream. Lost attempts
+//!    retry with the engine's deterministic per-origin backoff up to
+//!    `transfer_max_attempts`; an exhausted budget falls back to
+//!    **re-prefill in the decode pool** (counted as a retry on the
+//!    fleet ledger — the prefill work is genuinely redone).
+//! 3. **Decode leg.** A completed handoff delivers a `kv_received`
+//!    request to a decode replica: the scheduler recomputes only the
+//!    last prompt token and streams decode from there. Decode delivery
+//!    is the request's normal second leg, *not* a retry.
+//!
+//! **Backpressure.** While the decode pool is saturated (live decode
+//! deliveries + in-flight transfers ≥ `max_inflight_per_decode ×`
+//! decode replicas), new disagg dispatches defer by one router tick —
+//! prefill throttles instead of piling KV onto a full decode pool.
+//!
+//! **Colocated fallback.** Pool health generalizes the per-replica
+//! hysteresis machine: a pool is Down when *every* member replica's
+//! [`HealthState`] is Down (each member individually filtered through
+//! `down_after`/`recover_after` streaks). While either pool is Down the
+//! fleet serves new origins colocated — any replica runs both phases —
+//! and flips back the probe window the pool recovers.
+//!
+//! **Determinism.** Every decision here is pure in `(fleet seed,
+//! origin, probe window, attempt)`: pool membership is a fixed index
+//! split, transfer faults are pure hashes, retry backoff reuses the
+//! engine's per-origin jitter stream, and deferred dispatches fire at
+//! fixed tick multiples. Disagg runs are byte-identical across
+//! `--jobs` and replayable from dumped traces. With pools disabled
+//! every hook below is dead code on the dispatch path, so colocated
+//! fleets stay byte-identical to builds without this module.
+
+use super::{health::HealthState, router, Arm, FleetShared};
+use crate::config::PoolConfig;
+use crate::engine::{self, TokJob};
+use crate::profile::SpanKind;
+use crate::simcpu::Sim;
+use rustc_hash::FxHashMap;
+
+/// Lifecycle stage of a logical request under disaggregation. Origins
+/// in a pools-disabled fleet stay `Colocated` forever.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Stage {
+    /// Single delivery runs prefill + decode on one replica (pools off,
+    /// colocated fallback, or a ≤1-token request with nothing to hand
+    /// off).
+    Colocated,
+    /// Prefill leg live in the prefill pool (`max_new` clamped to 1).
+    Prefill,
+    /// KV handoff in flight: no live delivery; [`PoolCtl::transfers`]
+    /// owns the origin until the copy lands or exhausts its budget.
+    Transfer,
+    /// Decode leg live in the decode pool (prefilled delivery, or a
+    /// full re-prefill after transfer/decode failure).
+    Decode,
+}
+
+/// One in-flight KV handoff (keyed by fleet origin).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct Transfer {
+    /// Source prefill replica — scopes transfer faults and carries the
+    /// copy task on its tokenizer executor.
+    pub(crate) src: usize,
+    /// Attempts launched so far (1-based once the first starts).
+    pub(crate) attempt: u32,
+    /// When the handoff began (prefill completion) — the Handoff span
+    /// and `ph_handoff_ns` measure from here, retries included.
+    pub(crate) started_ns: u64,
+    /// When the current attempt launched — anchors its fault windows.
+    pub(crate) launched_ns: u64,
+}
+
+/// Aggregate disaggregation counters for reports and tests.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolSummary {
+    pub prefill_replicas: usize,
+    pub decode_replicas: usize,
+    /// Logical requests that entered a KV handoff.
+    pub handoffs_started: u64,
+    /// Handoffs that delivered their KV to a decode replica.
+    pub handoffs_completed: u64,
+    /// Transfer attempts relaunched after a TransferLoss strike.
+    pub transfer_retries: u64,
+    /// Handoffs that exhausted `transfer_max_attempts`.
+    pub transfer_failures: u64,
+    /// Full re-prefill dispatches into the decode pool (failed transfer
+    /// or no eligible decode replica at handoff completion).
+    pub reprefills: u64,
+    /// New-origin dispatches deferred by decode-pool saturation.
+    pub backpressure_deferrals: u64,
+    /// New origins served colocated while a pool was Down.
+    pub colocated_fallbacks: u64,
+    /// Probe windows the fleet spent in colocated-fallback mode.
+    pub colocated_windows: u64,
+}
+
+/// Disaggregation state inside [`super::FleetCtl`]. `Default` keeps
+/// every `FleetCtl` construction site (tests included) a one-liner and
+/// is the entire cost of the feature when pools are off.
+#[derive(Debug, Default)]
+pub(crate) struct PoolCtl {
+    /// Either pool is Down → new origins dispatch colocated.
+    pub(crate) colocated_mode: bool,
+    pub(crate) transfers: FxHashMap<u64, Transfer>,
+    pub(crate) stats: PoolSummary,
+}
+
+/// Replica index range `[lo, hi)` of the prefill pool.
+pub(crate) fn prefill_range(pl: &PoolConfig) -> (usize, usize) {
+    (0, pl.prefill)
+}
+
+/// Replica index range `[lo, hi)` of the decode pool.
+pub(crate) fn decode_range(pl: &PoolConfig) -> (usize, usize) {
+    (pl.prefill, pl.prefill + pl.decode)
+}
+
+/// Router pick range for a stage (full fleet for colocated work; a
+/// transfer has no live delivery, so its range is moot but total).
+pub(crate) fn stage_range(pl: &PoolConfig, stage: Stage, n: usize) -> (usize, usize) {
+    if !pl.enabled() {
+        return (0, n);
+    }
+    match stage {
+        Stage::Colocated | Stage::Transfer => (0, n),
+        Stage::Prefill => prefill_range(pl),
+        Stage::Decode => decode_range(pl),
+    }
+}
+
+/// CPU-side KV copy cost for one prompt: fixed setup plus bytes over
+/// the interconnect, grounded in the model's actual per-token KV
+/// footprint (`2 × layers × kv_heads × head_dim × dtype_bytes`).
+pub(crate) fn transfer_cost_ns(
+    pl: &PoolConfig,
+    model: &crate::config::ModelSpec,
+    prompt_tokens: u64,
+) -> u64 {
+    let bytes = prompt_tokens as f64 * model.kv_bytes_per_token() as f64;
+    let wire_s = bytes / (pl.transfer_gb_per_s * 1e9);
+    ((pl.transfer_base_s + wire_s) * 1e9) as u64
+}
+
+/// Is the decode pool saturated? Live deliveries on decode replicas
+/// plus in-flight transfers (KV already committed to arrive) against
+/// the configured per-replica ceiling.
+pub(crate) fn decode_saturated(ctl: &super::FleetCtl, pl: &PoolConfig) -> bool {
+    let (lo, hi) = decode_range(pl);
+    let inflight: u64 = ctl.replicas[lo..hi].iter().map(|r| r.inflight).sum();
+    let cap = (pl.max_inflight_per_decode * (hi - lo)) as u64;
+    inflight + ctl.pools.transfers.len() as u64 >= cap
+}
+
+/// Close of a probe window: derive pool health from the member
+/// replicas' (individually hysteresis-filtered) states and flip
+/// colocated-fallback mode when a whole pool is Down.
+pub(crate) fn refresh_mode(fs: &FleetShared) {
+    let pl = &fs.fleet.pools;
+    if !pl.enabled() {
+        return;
+    }
+    let ctl = &mut *fs.ctl.borrow_mut();
+    let all_down = |(lo, hi): (usize, usize)| {
+        ctl.replicas[lo..hi].iter().all(|r| r.health == HealthState::Down)
+    };
+    let down = all_down(prefill_range(pl)) || all_down(decode_range(pl));
+    ctl.pools.colocated_mode = down;
+    if down {
+        ctl.pools.stats.colocated_windows += 1;
+    }
+}
+
+/// Primary dispatch of a new (or deferred) origin in a pools-enabled
+/// fleet: decide its stage, apply backpressure, and place it.
+pub(crate) fn route_disagg(sim: &mut Sim, fs: &FleetShared, fo: u64) {
+    let pl = &fs.fleet.pools;
+    let pick = {
+        let ctl = &mut *fs.ctl.borrow_mut();
+        let Some(st) = ctl.origins.get(&fo) else { return };
+        let content_seed = st.arrival.content_seed;
+        let disagg = !ctl.pools.colocated_mode && st.arrival.max_new_tokens > 1;
+        if disagg && decode_saturated(ctl, pl) {
+            // Decode pool full: throttle prefill by one router tick
+            // rather than piling KV onto a saturated pool.
+            ctl.pools.stats.backpressure_deferrals += 1;
+            let defer = fs.pool_calls.borrow().as_ref().expect("pool calls installed").defer.clone();
+            sim.call_at_shared(sim.now_ns() + fs.tick_ns, defer, fo);
+            return;
+        }
+        let stage = if disagg {
+            Stage::Prefill
+        } else {
+            if ctl.pools.colocated_mode && st.arrival.max_new_tokens > 1 {
+                ctl.pools.stats.colocated_fallbacks += 1;
+            }
+            Stage::Colocated
+        };
+        let n = ctl.replicas.len();
+        let Some(st) = ctl.origins.get_mut(&fo) else { return };
+        st.stage = stage;
+        let (lo, hi) = stage_range(pl, stage, n);
+        router::pick_in(ctl, &fs.fleet, fo, content_seed, None, false, lo, hi)
+    };
+    if let Some(r) = pick {
+        super::dispatch(sim, fs, fo, r, Arm::Primary);
+    }
+}
+
+/// Begin the KV handoff for `fo` whose prefill leg just completed on
+/// replica `src`.
+pub(crate) fn begin_handoff(sim: &mut Sim, fs: &FleetShared, fo: u64, src: usize) {
+    let now = sim.now_ns();
+    {
+        let ctl = &mut *fs.ctl.borrow_mut();
+        ctl.pools.transfers.insert(
+            fo,
+            Transfer { src, attempt: 0, started_ns: now, launched_ns: now },
+        );
+        ctl.pools.stats.handoffs_started += 1;
+    }
+    launch_attempt(sim, fs, fo);
+}
+
+/// Shared-call target for a transfer retry after backoff: the entry
+/// still being present is the liveness check (a cleared ledger — e.g.
+/// the streaming horizon — silently cancels the retry).
+pub(crate) fn retry_transfer(sim: &mut Sim, fs: &FleetShared, fo: u64) {
+    launch_attempt(sim, fs, fo);
+}
+
+/// Launch one transfer attempt: pay the copy cost (plus any
+/// deterministic stall strike) as a task on the source replica's
+/// tokenizer executor, then hand completion back to the router via the
+/// shared `xfer_done` call.
+fn launch_attempt(sim: &mut Sim, fs: &FleetShared, fo: u64) {
+    let now = sim.now_ns();
+    let (src, cost_ns) = {
+        let ctl = &mut *fs.ctl.borrow_mut();
+        let prompt = match ctl.origins.get(&fo) {
+            Some(st) => st.arrival.prompt_tokens,
+            None => {
+                ctl.pools.transfers.remove(&fo);
+                return;
+            }
+        };
+        let Some(t) = ctl.pools.transfers.get_mut(&fo) else { return };
+        t.attempt += 1;
+        t.launched_ns = now;
+        let base = transfer_cost_ns(&fs.fleet.pools, &fs.envs[t.src].cfg.model, prompt);
+        let stall = fs.envs[t.src]
+            .faults
+            .borrow()
+            .transfer_stall_ns(now, fo, t.attempt as u64);
+        (t.src, base.saturating_add(stall))
+    };
+    let done = fs.pool_calls.borrow().as_ref().expect("pool calls installed").xfer_done.clone();
+    fs.envs[src].pool.submit_external(
+        sim,
+        TokJob {
+            cost_ns,
+            // +1 ns: completion re-enters the router in its own event
+            // batch, mirroring the retry-backoff clamp.
+            on_done: Box::new(move |ctx| {
+                let at = ctx.now_ns() + 1;
+                ctx.call_at_shared(at, done.clone(), fo);
+            }),
+        },
+    );
+}
+
+/// A transfer attempt's copy task finished: decide lost-vs-landed by
+/// the pure-hash loss rule, then retry, fall back to re-prefill, or
+/// deliver the decode leg.
+pub(crate) fn transfer_done(sim: &mut Sim, fs: &FleetShared, fo: u64) {
+    let pl = &fs.fleet.pools;
+    let now = sim.now_ns();
+    enum Next {
+        Retry { backoff: u64 },
+        Reprefill,
+        Deliver { dst: usize, handoff_ns: u64 },
+    }
+    let next = {
+        let ctl = &mut *fs.ctl.borrow_mut();
+        let Some(t) = ctl.pools.transfers.get(&fo).copied() else { return };
+        if ctl.origins.get(&fo).is_none() {
+            ctl.pools.transfers.remove(&fo);
+            return;
+        }
+        let lost = fs.envs[t.src]
+            .faults
+            .borrow()
+            .transfer_lost(t.launched_ns, fo, t.attempt as u64);
+        if lost {
+            if t.attempt < pl.transfer_max_attempts {
+                ctl.pools.stats.transfer_retries += 1;
+                let res = &fs.envs[0].cfg.serve.resilience;
+                Next::Retry { backoff: engine::retry_backoff_ns(res, ctl.seed, fo, t.attempt) }
+            } else {
+                ctl.pools.stats.transfer_failures += 1;
+                Next::Reprefill
+            }
+        } else {
+            ctl.pools.stats.handoffs_completed += 1;
+            let (lo, hi) = decode_range(pl);
+            let content_seed = ctl.origins[&fo].arrival.content_seed;
+            match router::pick_in(ctl, &fs.fleet, fo, content_seed, None, true, lo, hi) {
+                Some(dst) => Next::Deliver { dst, handoff_ns: now - t.started_ns },
+                // No eligible decode replica (pool sick): the KV has
+                // nowhere to land — redo the work where capacity is.
+                None => Next::Reprefill,
+            }
+        }
+    };
+    match next {
+        Next::Retry { backoff } => {
+            let start = fs.pool_calls.borrow().as_ref().expect("pool calls installed").xfer_start.clone();
+            sim.call_at_shared(now + backoff, start, fo);
+        }
+        Next::Reprefill => {
+            let pick = {
+                let ctl = &mut *fs.ctl.borrow_mut();
+                ctl.pools.transfers.remove(&fo);
+                ctl.pools.stats.reprefills += 1;
+                let n = ctl.replicas.len();
+                let Some(st) = ctl.origins.get_mut(&fo) else { return };
+                // The decode pool re-runs the whole prompt; the stored
+                // prefill tokenize span no longer describes the final
+                // attempt.
+                st.stage = Stage::Decode;
+                st.prefill_tok_ns = None;
+                let content_seed = st.arrival.content_seed;
+                let (lo, hi) = stage_range(pl, Stage::Decode, n);
+                router::pick_in(ctl, &fs.fleet, fo, content_seed, None, false, lo, hi)
+            };
+            if let Some(r) = pick {
+                // Counts as a retry on the fleet ledger (attempts > 0).
+                super::dispatch(sim, fs, fo, r, Arm::Primary);
+            }
+        }
+        Next::Deliver { dst, handoff_ns } => {
+            {
+                let ctl = &mut *fs.ctl.borrow_mut();
+                ctl.pools.transfers.remove(&fo);
+            }
+            super::dispatch_decode(sim, fs, fo, dst, handoff_ns);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelSpec;
+
+    fn pools(prefill: usize, decode: usize) -> PoolConfig {
+        PoolConfig { prefill, decode, ..PoolConfig::default() }
+    }
+
+    #[test]
+    fn ranges_partition_the_fleet() {
+        let pl = pools(2, 3);
+        assert_eq!(prefill_range(&pl), (0, 2));
+        assert_eq!(decode_range(&pl), (2, 5));
+        assert_eq!(stage_range(&pl, Stage::Prefill, 5), (0, 2));
+        assert_eq!(stage_range(&pl, Stage::Decode, 5), (2, 5));
+        assert_eq!(stage_range(&pl, Stage::Colocated, 5), (0, 5));
+        // Pools off → every stage sees the whole fleet.
+        let off = PoolConfig::default();
+        assert_eq!(stage_range(&off, Stage::Prefill, 4), (0, 4));
+    }
+
+    #[test]
+    fn transfer_cost_scales_with_prompt_and_model() {
+        let pl = pools(1, 1);
+        let m = ModelSpec::llama31_8b();
+        let short = transfer_cost_ns(&pl, &m, 100);
+        let long = transfer_cost_ns(&pl, &m, 1000);
+        assert!(long > short, "more KV takes longer: {short} vs {long}");
+        // base_s alone bounds the zero-token cost.
+        let base = transfer_cost_ns(&pl, &m, 0);
+        assert_eq!(base, (pl.transfer_base_s * 1e9) as u64);
+        // Bandwidth matters: 10× the wire speed, under 10× the time.
+        let fast = PoolConfig { transfer_gb_per_s: pl.transfer_gb_per_s * 10.0, ..pl };
+        assert!(transfer_cost_ns(&fast, &m, 1000) < long);
+    }
+
+    #[test]
+    fn pool_summary_defaults_to_zero() {
+        let s = PoolSummary::default();
+        assert_eq!(s, PoolSummary { ..Default::default() });
+        assert_eq!(s.handoffs_started, 0);
+        assert_eq!(s.reprefills, 0);
+    }
+}

@@ -38,12 +38,31 @@ pub(crate) fn pick(
     require_eligible: bool,
 ) -> Option<usize> {
     let n = ctl.replicas.len();
+    pick_in(ctl, fleet, origin, content_seed, exclude, require_eligible, 0, n)
+}
+
+/// [`pick`] restricted to the replica range `[lo, hi)` — the
+/// disaggregated pools route prefill and decode legs through their own
+/// sub-fleets. `pick` is exactly `pick_in(.., 0, n)`, so colocated
+/// routing shares this one code path byte-for-byte.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn pick_in(
+    ctl: &mut FleetCtl,
+    fleet: &FleetConfig,
+    origin: u64,
+    content_seed: u64,
+    exclude: Option<usize>,
+    require_eligible: bool,
+    lo: usize,
+    hi: usize,
+) -> Option<usize> {
+    let n = hi.saturating_sub(lo);
     if n == 0 {
         return None;
     }
-    if let Some(r) = pick_among(ctl, fleet, origin, content_seed, exclude, true) {
+    if let Some(r) = pick_among(ctl, fleet, origin, content_seed, exclude, true, lo, hi) {
         if fleet.router == RouterPolicy::RoundRobin {
-            ctl.rr_cursor = (r + 1) % n;
+            ctl.rr_cursor = (r + 1) % hi.max(1);
         }
         return Some(r);
     }
@@ -52,10 +71,10 @@ pub(crate) fn pick(
     }
     // Forced placement: ignore health, and as a last resort send the
     // request back where it came from rather than dropping it.
-    match pick_among(ctl, fleet, origin, content_seed, exclude, false) {
+    match pick_among(ctl, fleet, origin, content_seed, exclude, false, lo, hi) {
         Some(r) => {
             if fleet.router == RouterPolicy::RoundRobin {
-                ctl.rr_cursor = (r + 1) % n;
+                ctl.rr_cursor = (r + 1) % hi.max(1);
             }
             Some(r)
         }
@@ -63,6 +82,7 @@ pub(crate) fn pick(
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn pick_among(
     ctl: &FleetCtl,
     fleet: &FleetConfig,
@@ -70,8 +90,10 @@ fn pick_among(
     content_seed: u64,
     exclude: Option<usize>,
     check_health: bool,
+    lo: usize,
+    hi: usize,
 ) -> Option<usize> {
-    let n = ctl.replicas.len();
+    let n = hi - lo;
     let ok = |r: usize| {
         Some(r) != exclude
             && (!check_health
@@ -79,12 +101,15 @@ fn pick_among(
     };
     match fleet.router {
         RouterPolicy::RoundRobin => {
-            (0..n).map(|i| (ctl.rr_cursor + i) % n).find(|&r| ok(r))
+            // The cursor is fleet-global; fold it into the range so a
+            // full-range pick (`lo = 0, hi = len`) behaves exactly as
+            // it always has.
+            (0..n).map(|i| lo + (ctl.rr_cursor + i) % n).find(|&r| ok(r))
         }
-        RouterPolicy::LeastLoaded => (0..n)
+        RouterPolicy::LeastLoaded => (lo..hi)
             .filter(|&r| ok(r))
             .min_by_key(|&r| (ctl.replicas[r].outstanding_tokens, r)),
-        RouterPolicy::PrefixAffinity => (0..n)
+        RouterPolicy::PrefixAffinity => (lo..hi)
             .filter(|&r| ok(r))
             .max_by_key(|&r| rendezvous_weight(ctl.seed, content_seed, r)),
     }
@@ -138,6 +163,7 @@ mod tests {
             last_grant_change_ns: 0,
             submitted: 0,
             last_arrival_ns: 0,
+            pools: super::super::pools::PoolCtl::default(),
             drain_scratch: Vec::new(),
             evict_scratch: Vec::new(),
             hedge_scratch: Vec::new(),
@@ -180,20 +206,43 @@ mod tests {
         let f = fleet(RouterPolicy::PrefixAffinity, true);
         // Stable mapping for 64 sessions with all replicas healthy.
         let home: Vec<usize> = (0..64u64)
-            .map(|s| pick_among(&c, &f, 0, s, None, true).unwrap())
+            .map(|s| pick_among(&c, &f, 0, s, None, true, 0, 4).unwrap())
             .collect();
         // Take one replica down: its sessions move, everyone else stays.
         let mut c2 = ctl(4);
         let down = home[0];
         c2.replicas[down].health = health::HealthState::Down;
         for (s, &h) in home.iter().enumerate() {
-            let now = pick_among(&c2, &f, 0, s as u64, None, true).unwrap();
+            let now = pick_among(&c2, &f, 0, s as u64, None, true, 0, 4).unwrap();
             if h == down {
                 assert_ne!(now, down, "session {s} must leave the down replica");
             } else {
                 assert_eq!(now, h, "session {s} must not move");
             }
         }
+    }
+
+    #[test]
+    fn pick_in_respects_pool_ranges() {
+        let mut c = ctl(4);
+        let f = fleet(RouterPolicy::RoundRobin, false);
+        for i in 0..8 {
+            let r = pick_in(&mut c, &f, i, 0, None, false, 0, 2).unwrap();
+            assert!(r < 2, "prefill-range pick escaped: {r}");
+        }
+        for i in 0..8 {
+            let r = pick_in(&mut c, &f, i, 0, None, false, 2, 4).unwrap();
+            assert!((2..4).contains(&r), "decode-range pick escaped: {r}");
+        }
+        // Least-loaded inside a range ignores loads outside it.
+        let mut c = ctl(4);
+        let f = fleet(RouterPolicy::LeastLoaded, false);
+        c.replicas[0].outstanding_tokens = 0;
+        c.replicas[2].outstanding_tokens = 300;
+        c.replicas[3].outstanding_tokens = 100;
+        assert_eq!(pick_in(&mut c, &f, 0, 0, None, false, 2, 4), Some(3));
+        // An empty range places nothing, even forced.
+        assert_eq!(pick_in(&mut c, &f, 0, 0, None, false, 2, 2), None);
     }
 
     #[test]

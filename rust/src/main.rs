@@ -37,10 +37,12 @@ fn main() {
             ("--streaming", "serve: lazy arrival generation + bounded-memory TTFT sketches (million-request runs)"),
             ("--replicas N", "serve: data-parallel replica count (serve-sweep: comma list, e.g. 1,4)"),
             ("--router P", "serve: routing policy round-robin | least-loaded | prefix-affinity (serve-sweep: --routers list)"),
+            ("--pools P=N,D=M", "serve: disaggregate the fleet into prefill=N,decode=M pools with explicit KV handoff (N+M must equal --replicas)"),
             ("--scenarios LIST", "serve-sweep: catalog subset, e.g. steady,bursty"),
             ("--rate-scale F", "scenario runs: multiply every class arrival rate by F"),
             ("--duration S", "scenario runs: override the generation window (seconds)"),
             ("--profile", "serve / serve-sweep: arm attribution profiling (phase tables ride along; outcomes unchanged)"),
+            ("--rank-whatif", "diagnose: rank component suggestions by the measured d(TTFT p99)/d(cost) derivative"),
             ("--components LIST", "whatif: components to scale, from tokenize,launch,comm,compute (default tokenize,launch,comm)"),
             ("--delta F", "whatif: cost-scale perturbation, fraction in (0,1) (default 0.25)"),
             ("--baseline PATH", "bench-check: baseline JSON (default: <current>.baseline.json)"),

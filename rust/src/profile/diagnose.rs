@@ -8,10 +8,18 @@
 //! tokenization dominates; add cores"). `render` is a pure function of
 //! the report, so the golden-output test and the CLI share one code
 //! path and reruns are byte-identical.
+//!
+//! With `--rank-whatif`, the causal grid from [`super::whatif`] runs
+//! alongside and the component suggestion lines are ordered by the
+//! measured d(TTFT p99)/d(cost) derivative instead of fixed rule order
+//! — attribution says where time went, the derivative says what moving
+//! it would actually buy.
 
+use super::whatif::{self, WhatifRow};
 use super::{ProfileReport, SpanKind, N_PHASES, PHASE_NAMES, PH_IDLE};
 use crate::config::RunConfig;
 use crate::report::{percent_label, Table};
+use crate::sweep::Sweep;
 use crate::util::cli::Args;
 use crate::workload::scenario::{resolve_cli_scenario, run_scenario, ScenarioReport};
 
@@ -31,12 +39,39 @@ pub fn run(args: &Args) {
         .unwrap_or_else(|| "steady".to_string());
     let scenario = resolve_cli_scenario(&name, &cfg.workload, args, args.flag("quick"));
     let seed = args.u64_or("seed", cfg.seed);
+    // `--rank-whatif`: run the causal grid on the same (config,
+    // scenario, seed) so suggestion order reflects measured derivatives.
+    let whatif_rows = args.flag("rank-whatif").then(|| {
+        let delta = args.f64_or("delta", 0.25);
+        let sweep = Sweep::from_args("diagnose-whatif", args);
+        whatif::compute(
+            &cfg,
+            std::slice::from_ref(&scenario),
+            &whatif::COMPONENTS,
+            delta,
+            seed,
+            &sweep,
+        )
+    });
     let report = run_scenario(cfg, &scenario, seed);
-    print!("{}", render(&report, seed));
+    print!("{}", render_with_whatif(&report, seed, whatif_rows.as_deref()));
 }
 
 /// Render the full diagnosis. Pure: same report → same bytes.
+/// Suggestion lines keep the fixed rule order (the golden file pins
+/// these bytes); see [`render_with_whatif`] for derivative ranking.
 pub fn render(report: &ScenarioReport, seed: u64) -> String {
+    render_with_whatif(report, seed, None)
+}
+
+/// [`render`] with optional causal rows: when `whatif_rows` is present,
+/// component suggestions are ranked by derivative magnitude. Pure
+/// either way: same (report, rows) → same bytes.
+pub fn render_with_whatif(
+    report: &ScenarioReport,
+    seed: u64,
+    whatif_rows: Option<&[WhatifRow]>,
+) -> String {
     let mut out = String::new();
     let Some(p) = &report.profile else {
         return format!(
@@ -100,18 +135,96 @@ pub fn render(report: &ScenarioReport, seed: u64) -> String {
 
     let c = p.ring.counts;
     out.push_str(&format!(
-        "trace ring: {} dispatch, {} tokenize, {} step, {} launch, {} route spans \
-         (capacity {}, {} evicted after sketch-fold)\n",
+        "trace ring: {} dispatch, {} tokenize, {} step, {} launch, {} route, \
+         {} handoff spans (capacity {}, {} evicted after sketch-fold)\n",
         c[SpanKind::Dispatch as usize],
         c[SpanKind::Tokenize as usize],
         c[SpanKind::Step as usize],
         c[SpanKind::Launch as usize],
         c[SpanKind::Route as usize],
+        c[SpanKind::Handoff as usize],
         p.ring.capacity,
         p.ring.evicted,
     ));
-    for s in suggestions(report, p) {
+    let lines = match whatif_rows {
+        Some(rows) => suggestions_ranked(report, p, rows),
+        None => suggestions(report, p),
+    };
+    for s in lines {
         out.push_str(&format!("suggestion: {s}\n"));
+    }
+    out
+}
+
+/// The per-component advice text shared by the fixed-order and
+/// derivative-ranked suggestion paths.
+fn component_advice(component: &str) -> &'static str {
+    match component {
+        "tokenize" => {
+            "tokenization dominates; add CPU cores or move tokenization off \
+             the critical path (serve.tokenizer_threads)"
+        }
+        "launch" => {
+            "kernel-launch CPU cost dominates; enable CUDA graphs \
+             (serve.cuda_graphs) or add CPU cores"
+        }
+        "compute" => "GPU compute dominates; the CPU side is adequately provisioned",
+        "comm" => "collectives dominate; use a faster interconnect or a smaller TP degree",
+        _ => {
+            "in-batch stall dominates; control-plane contention — add CPU \
+             cores or raise serve.control_plane_weight"
+        }
+    }
+}
+
+/// Suggestions ranked by the causal what-if derivative: one line per
+/// component, largest |d(p99)/d(cost)| first (sign shown; ties and the
+/// no-derivative case fall back to fixed component order, so output
+/// stays deterministic). The GPU-idle headline keeps its place.
+pub fn suggestions_ranked(
+    report: &ScenarioReport,
+    p: &ProfileReport,
+    rows: &[WhatifRow],
+) -> Vec<String> {
+    let mut out = Vec::new();
+    if report.gpu_idle_share > 0.30 {
+        out.push(format!(
+            "GPU idle {} — devices are starved for work; the bottleneck is off-GPU",
+            percent_label(report.gpu_idle_share)
+        ));
+    }
+    // (component, derivative, original index) — sort by |d| descending,
+    // then input order for a deterministic tie-break.
+    let mut ranked: Vec<(usize, &WhatifRow, f64)> = rows
+        .iter()
+        .enumerate()
+        .filter_map(|(i, r)| r.derivative_s().map(|d| (i, r, d)))
+        .collect();
+    ranked.sort_by(|a, b| {
+        b.2.abs()
+            .partial_cmp(&a.2.abs())
+            .expect("derivatives are finite")
+            .then(a.0.cmp(&b.0))
+    });
+    for (_, row, d) in &ranked {
+        out.push(format!(
+            "d(p99)/d({}) = {:+.4} s/unit: {}",
+            row.component,
+            d,
+            component_advice(row.component)
+        ));
+    }
+    if ranked.is_empty() {
+        // No derivative available (censored run) — fixed rule order.
+        return suggestions(report, p);
+    }
+    let shares = p.phase_shares();
+    if shares[PH_IDLE] > 0.30 {
+        out.push(format!(
+            "in-batch stall is also high ({}); check CPU core count vs \
+             control-plane load",
+            percent_label(shares[PH_IDLE])
+        ));
     }
     out
 }

@@ -88,9 +88,16 @@ pub fn phases_of(r: &Request, end_ns: u64) -> ReqPhases {
     let mut phase_ns = [0u64; N_PHASES];
     phase_ns[PH_TOKENIZE] = tok - arrival;
     phase_ns[PH_QUEUE] = adm - tok;
+    // Disaggregated handoff: the KV copy occupied `ph_handoff_ns` of
+    // the pre-tokenize window on this (decode-stage) attempt. Re-charge
+    // it from tokenize into comm — a pure reallocation inside the same
+    // covered window, so the conservation sum is untouched, and
+    // `ph_handoff_ns == 0` (every colocated path) changes nothing.
+    let handoff = r.ph_handoff_ns.min(phase_ns[PH_TOKENIZE]);
+    phase_ns[PH_TOKENIZE] -= handoff;
     phase_ns[PH_LAUNCH] = r.ph_launch_ns;
     phase_ns[PH_COMPUTE] = r.ph_compute_ns;
-    phase_ns[PH_COMM] = r.ph_comm_ns;
+    phase_ns[PH_COMM] = r.ph_comm_ns + handoff;
     phase_ns[PH_IDLE] = r.ph_idle_ns;
     // Charges cover [adm, phase_mark]; the tail up to the terminal is
     // uncovered in-batch time → idle.
@@ -318,6 +325,24 @@ mod tests {
         let p = phases_of(&r, 4_500);
         assert_eq!(p.sum_ns(), p.wall_ns());
         assert_eq!(p.phase_ns[PH_TOKENIZE], 4_000);
+    }
+
+    #[test]
+    fn handoff_recharges_tokenize_into_comm_conserving_sum() {
+        let mut r = Request::new(5, ReqClass::Normal, 1_000, 100, 16);
+        r.tokenized_at = Some(9_000); // 8_000 ns pre-admission window
+        r.admitted_at = Some(9_500);
+        r.ph_handoff_ns = 3_000;
+        let p = phases_of(&r, 12_000);
+        assert_eq!(p.sum_ns(), p.wall_ns(), "reallocation keeps conservation");
+        assert_eq!(p.phase_ns[PH_TOKENIZE], 5_000);
+        assert_eq!(p.phase_ns[PH_COMM], 3_000);
+        // A handoff span longer than the window saturates, never wraps.
+        r.ph_handoff_ns = 1 << 40;
+        let p = phases_of(&r, 12_000);
+        assert_eq!(p.sum_ns(), p.wall_ns());
+        assert_eq!(p.phase_ns[PH_TOKENIZE], 0);
+        assert_eq!(p.phase_ns[PH_COMM], 8_000);
     }
 
     #[test]

@@ -20,7 +20,7 @@
 use crate::util::stats::QuantileSketch;
 
 /// Number of span kinds ([`SpanKind::ALL`]).
-pub const N_KINDS: usize = 5;
+pub const N_KINDS: usize = 6;
 
 /// What a trace span measures. One kind per instrumentation layer.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -40,6 +40,9 @@ pub enum SpanKind {
     Launch = 3,
     /// Fleet router dispatch: origin arrival → delivery to a replica.
     Route = 4,
+    /// Disaggregated-pool KV handoff: prefill completion → decode-pool
+    /// delivery (the CPU-driven copy, including transfer retries).
+    Handoff = 5,
 }
 
 impl SpanKind {
@@ -49,6 +52,7 @@ impl SpanKind {
         SpanKind::Step,
         SpanKind::Launch,
         SpanKind::Route,
+        SpanKind::Handoff,
     ];
 
     pub fn name(self) -> &'static str {
@@ -58,6 +62,7 @@ impl SpanKind {
             SpanKind::Step => "step",
             SpanKind::Launch => "launch",
             SpanKind::Route => "route",
+            SpanKind::Handoff => "handoff",
         }
     }
 }

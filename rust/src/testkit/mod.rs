@@ -92,6 +92,23 @@ where
 }
 
 // ---------------------------------------------------------------------
+// Serving-stack invariants
+// ---------------------------------------------------------------------
+
+/// Assert the run leaked no KV pages: after horizon cleanup every page
+/// allocated on behalf of a request — including those mid-handoff or
+/// re-prefilled in the disaggregated pools — must have been released.
+/// Pass the scenario driver's report; the counter is captured after the
+/// stack's own harvest finished.
+pub fn assert_no_kv_leak(report: &crate::workload::scenario::ScenarioReport) {
+    assert_eq!(
+        report.kv_pages_at_horizon, 0,
+        "scenario '{}' leaked {} KV pages at horizon",
+        report.scenario, report.kv_pages_at_horizon
+    );
+}
+
+// ---------------------------------------------------------------------
 // Generators
 // ---------------------------------------------------------------------
 

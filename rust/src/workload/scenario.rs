@@ -31,9 +31,11 @@
 //! the paper's own attacker/victim flood as a trace-driven scenario.
 
 use super::{ArrivalProcess, LengthMix};
-use crate::config::{FleetConfig, ResilienceConfig, RouterPolicy, RunConfig, WorkloadConfig};
+use crate::config::{
+    FleetConfig, PoolConfig, ResilienceConfig, RouterPolicy, RunConfig, WorkloadConfig,
+};
 use crate::engine::{FaultSpec, Outcome, OutcomeStatus, ReqClass, ServingSim, StreamArrival};
-use crate::fleet::FleetSim;
+use crate::fleet::{FleetSim, PoolSummary};
 use crate::util::json::Json;
 use crate::util::rng::{Rng, SplitMix64};
 use crate::util::stats::{Percentiles, QuantileSketch};
@@ -707,6 +709,148 @@ impl Scenario {
                     ..FleetConfig::default()
                 }),
             },
+            Scenario {
+                name: "disagg-steady".into(),
+                description: "steady chat through disaggregated prefill/decode \
+                              pools; every request pays an explicit KV handoff"
+                    .into(),
+                paper_section: "§V disaggregated serving baseline".into(),
+                duration_s: 20.0,
+                classes: vec![ClassSpec {
+                    name: "chat".into(),
+                    arrivals: ArrivalSpec::Poisson { rps: 4.0 },
+                    lengths: LengthSpec {
+                        prompt: LenDist::Lognormal {
+                            mean: 2_000.0,
+                            sigma: 0.8,
+                            min: 64,
+                        },
+                        output: LenDist::Fixed { tokens: 32 },
+                    },
+                    slo_ttft_s: 30.0,
+                    shared_prompt: false,
+                }],
+                resilience: None,
+                faults: vec![],
+                fleet: Some(FleetConfig {
+                    replicas: 3,
+                    router: RouterPolicy::LeastLoaded,
+                    pools: PoolConfig {
+                        prefill: 1,
+                        decode: 2,
+                        ..PoolConfig::default()
+                    },
+                    ..FleetConfig::default()
+                }),
+            },
+            Scenario {
+                name: "disagg-transfer-faults".into(),
+                description: "disaggregated pools under KV-handoff stalls and \
+                              losses; bounded transfer retries, then re-prefill \
+                              in the decode pool"
+                    .into(),
+                paper_section: "§VI fault tolerance (KV handoff)".into(),
+                duration_s: 20.0,
+                classes: vec![ClassSpec {
+                    name: "chat".into(),
+                    arrivals: ArrivalSpec::Poisson { rps: 4.0 },
+                    lengths: LengthSpec {
+                        prompt: LenDist::Lognormal {
+                            mean: 2_000.0,
+                            sigma: 0.8,
+                            min: 64,
+                        },
+                        output: LenDist::Fixed { tokens: 32 },
+                    },
+                    slo_ttft_s: 30.0,
+                    shared_prompt: false,
+                }],
+                resilience: Some(ResilienceConfig {
+                    admission_max_queue: 0,
+                    shed_slo_factor: 0.0,
+                    watchdog_slo_factor: 2.0,
+                    retry_max_attempts: 3,
+                    retry_base_s: 0.25,
+                    retry_cap_s: 2.0,
+                }),
+                faults: vec![
+                    FaultSpec::TransferStall {
+                        start_s: 2.0,
+                        end_s: 14.0,
+                        prob: 0.4,
+                        stall_ns: 150_000_000,
+                        replica: None,
+                    },
+                    FaultSpec::TransferLoss {
+                        start_s: 4.0,
+                        end_s: 12.0,
+                        prob: 0.5,
+                        replica: None,
+                    },
+                ],
+                fleet: Some(FleetConfig {
+                    replicas: 3,
+                    router: RouterPolicy::LeastLoaded,
+                    pools: PoolConfig {
+                        prefill: 1,
+                        decode: 2,
+                        transfer_max_attempts: 2,
+                        ..PoolConfig::default()
+                    },
+                    ..FleetConfig::default()
+                }),
+            },
+            Scenario {
+                name: "disagg-decode-pool-loss".into(),
+                description: "the only decode replica browns out mid-run; probes \
+                              mark the pool Down and the fleet degrades to \
+                              colocated serving until it recovers"
+                    .into(),
+                paper_section: "§VI fault tolerance (pool loss → colocated fallback)".into(),
+                duration_s: 20.0,
+                classes: vec![ClassSpec {
+                    name: "chat".into(),
+                    arrivals: ArrivalSpec::Poisson { rps: 4.0 },
+                    lengths: LengthSpec {
+                        prompt: LenDist::Lognormal {
+                            mean: 2_000.0,
+                            sigma: 0.8,
+                            min: 64,
+                        },
+                        output: LenDist::Fixed { tokens: 32 },
+                    },
+                    slo_ttft_s: 30.0,
+                    shared_prompt: false,
+                }],
+                resilience: Some(ResilienceConfig {
+                    admission_max_queue: 0,
+                    shed_slo_factor: 0.0,
+                    watchdog_slo_factor: 2.0,
+                    retry_max_attempts: 3,
+                    retry_base_s: 0.25,
+                    retry_cap_s: 2.0,
+                }),
+                // Replica 1 is the decode pool's only member: losing its
+                // cores drives the pool Down and exercises the graceful
+                // degradation path end to end.
+                faults: vec![FaultSpec::CoreLoss {
+                    start_s: 4.0,
+                    end_s: 10.0,
+                    cores: 4,
+                    replica: Some(1),
+                }],
+                fleet: Some(FleetConfig {
+                    replicas: 2,
+                    router: RouterPolicy::LeastLoaded,
+                    failure_aware: true,
+                    pools: PoolConfig {
+                        prefill: 1,
+                        decode: 1,
+                        ..PoolConfig::default()
+                    },
+                    ..FleetConfig::default()
+                }),
+            },
         ]
     }
 
@@ -1120,6 +1264,17 @@ fn fleet_to_json(f: &FleetConfig) -> Json {
         .set("autoscale_idle_lo", f.autoscale_idle_lo)
         .set("autoscale_idle_hi", f.autoscale_idle_hi)
         .set("autoscale_every", f.autoscale_every);
+    // Omit-when-default keeps pre-disaggregation fleet dumps byte-stable.
+    if f.pools != PoolConfig::default() {
+        let mut pj = Json::obj();
+        pj.set("prefill", f.pools.prefill)
+            .set("decode", f.pools.decode)
+            .set("transfer_gb_per_s", f.pools.transfer_gb_per_s)
+            .set("transfer_base_s", f.pools.transfer_base_s)
+            .set("transfer_max_attempts", f.pools.transfer_max_attempts)
+            .set("max_inflight_per_decode", f.pools.max_inflight_per_decode);
+        j.set("pools", pj);
+    }
     j
 }
 
@@ -1154,6 +1309,27 @@ fn fleet_from_json(j: &Json) -> Result<FleetConfig> {
         autoscale_idle_lo: num("autoscale_idle_lo", d.autoscale_idle_lo),
         autoscale_idle_hi: num("autoscale_idle_hi", d.autoscale_idle_hi),
         autoscale_every: num("autoscale_every", d.autoscale_every as f64) as u32,
+        pools: match j.get("pools") {
+            Some(pj) => {
+                let dp = PoolConfig::default();
+                let pnum = |key: &str, dv: f64| pj.get(key).and_then(Json::as_f64).unwrap_or(dv);
+                PoolConfig {
+                    prefill: pnum("prefill", dp.prefill as f64) as usize,
+                    decode: pnum("decode", dp.decode as f64) as usize,
+                    transfer_gb_per_s: pnum("transfer_gb_per_s", dp.transfer_gb_per_s),
+                    transfer_base_s: pnum("transfer_base_s", dp.transfer_base_s),
+                    transfer_max_attempts: pnum(
+                        "transfer_max_attempts",
+                        dp.transfer_max_attempts as f64,
+                    ) as u32,
+                    max_inflight_per_decode: pnum(
+                        "max_inflight_per_decode",
+                        dp.max_inflight_per_decode as f64,
+                    ) as usize,
+                }
+            }
+            None => d.pools,
+        },
     })
 }
 
@@ -1266,6 +1442,14 @@ pub struct ScenarioReport {
     /// in this report is byte-identical either way (the differential
     /// tests pin this).
     pub profile: Option<crate::profile::ProfileReport>,
+    /// Disaggregated-pool counters (handoffs, transfer retries/failures,
+    /// re-prefills, backpressure, colocated fallback windows); `None`
+    /// unless the run served through `fleet.pools`.
+    pub pools: Option<PoolSummary>,
+    /// KV pages still allocated across the stack when the run's horizon
+    /// cleanup finished — 0 unless something leaked (the testkit leak
+    /// assertion pins this).
+    pub kv_pages_at_horizon: usize,
 }
 
 impl ScenarioReport {
@@ -1330,6 +1514,13 @@ pub(crate) trait ServeStack {
     fn replica_count(&self) -> usize;
     /// Attribution report; `None` unless `serve.profile` armed it.
     fn profile_report(&mut self) -> Option<crate::profile::ProfileReport>;
+    /// Disaggregated-pool counters; `None` unless `fleet.pools` served
+    /// the run (the single engine never has pools).
+    fn pool_summary(&self) -> Option<PoolSummary> {
+        None
+    }
+    /// KV pages still allocated after horizon cleanup (leak probe).
+    fn kv_pages_in_use(&self) -> usize;
 }
 
 impl ServeStack for ServingSim {
@@ -1368,6 +1559,9 @@ impl ServeStack for ServingSim {
     fn profile_report(&mut self) -> Option<crate::profile::ProfileReport> {
         ServingSim::profile_report(self)
     }
+    fn kv_pages_in_use(&self) -> usize {
+        ServingSim::kv_pages_in_use(self)
+    }
 }
 
 impl ServeStack for FleetSim {
@@ -1405,6 +1599,12 @@ impl ServeStack for FleetSim {
     }
     fn profile_report(&mut self) -> Option<crate::profile::ProfileReport> {
         FleetSim::profile_report(self)
+    }
+    fn pool_summary(&self) -> Option<PoolSummary> {
+        FleetSim::pool_summary(self)
+    }
+    fn kv_pages_in_use(&self) -> usize {
+        FleetSim::kv_pages_in_use(self)
     }
 }
 
@@ -1551,6 +1751,8 @@ where
         wall_secs: wall_ns as f64 / 1e9,
         cpu_core_seconds: sim.core_seconds(wall_ns),
         profile: sim.profile_report(),
+        pools: sim.pool_summary(),
+        kv_pages_at_horizon: sim.kv_pages_in_use(),
     }
 }
 
@@ -2007,10 +2209,49 @@ mod tests {
 
     #[test]
     fn fleet_catalog_entries_request_multiple_replicas() {
-        for name in ["replica-failure-with-failover", "diurnal", "shared-prefix-flood"] {
+        for name in [
+            "replica-failure-with-failover",
+            "diurnal",
+            "shared-prefix-flood",
+            "disagg-steady",
+            "disagg-transfer-faults",
+            "disagg-decode-pool-loss",
+        ] {
             let s = Scenario::by_name(name).unwrap();
             let f = s.fleet.as_ref().unwrap_or_else(|| panic!("{name} missing fleet"));
             assert!(f.enabled(), "{name} must ask for >1 replica");
         }
+    }
+
+    #[test]
+    fn disagg_catalog_entries_partition_replicas() {
+        for name in ["disagg-steady", "disagg-transfer-faults", "disagg-decode-pool-loss"] {
+            let s = Scenario::by_name(name).unwrap();
+            let f = s.fleet.as_ref().unwrap_or_else(|| panic!("{name} missing fleet"));
+            f.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(f.pools.enabled(), "{name} must arm pools");
+            assert_eq!(f.pools.prefill + f.pools.decode, f.replicas, "{name}");
+        }
+        // The transfer-fault scenario arms both handoff fault kinds.
+        let s = Scenario::by_name("disagg-transfer-faults").unwrap();
+        assert!(s.faults.iter().any(|f| matches!(f, FaultSpec::TransferStall { .. })));
+        assert!(s.faults.iter().any(|f| matches!(f, FaultSpec::TransferLoss { .. })));
+        // Pool-loss pins its CoreLoss to the decode pool's only member
+        // (replica 1 of a prefill=1/decode=1 partition).
+        let s = Scenario::by_name("disagg-decode-pool-loss").unwrap();
+        assert!(s
+            .faults
+            .iter()
+            .any(|f| matches!(f, FaultSpec::CoreLoss { replica: Some(1), .. })));
+    }
+
+    #[test]
+    fn default_pools_are_omitted_from_fleet_dumps() {
+        // Pre-disaggregation fleet dumps must stay byte-stable: the
+        // pools key appears only when the scenario arms pools.
+        let colocated = Scenario::by_name("diurnal").unwrap().generate(3);
+        assert!(!colocated.to_json().to_string_pretty().contains("\"pools\""));
+        let disagg = Scenario::by_name("disagg-steady").unwrap().generate(3);
+        assert!(disagg.to_json().to_string_pretty().contains("\"pools\""));
     }
 }

@@ -1,0 +1,201 @@
+//! Disaggregated prefill/decode pool acceptance tests: a pools-disabled
+//! fleet is byte-identical to the colocated path no matter what the
+//! transfer knobs say, transfer loss always resolves to exactly one
+//! terminal outcome per request (re-prefill fallback), decode-pool loss
+//! degrades gracefully to colocated serving, disagg sweeps stay
+//! byte-identical across `--jobs`, and dumped disagg traces replay
+//! exactly (pools topology included).
+
+use cpuslow::config::{FleetConfig, ModelSpec, PoolConfig, RouterPolicy, RunConfig, ServeConfig,
+                      SystemSpec};
+use cpuslow::engine::{FaultSpec, OutcomeStatus, ReqClass, StreamArrival};
+use cpuslow::experiments::serve_sweep;
+use cpuslow::fleet::FleetSim;
+use cpuslow::sweep::{seeded_cells, Sweep};
+use cpuslow::testkit::assert_no_kv_leak;
+use cpuslow::workload::scenario::{run_trace, Scenario, ScenarioReport, Trace};
+
+fn cfg(n_gpus: usize, cores: usize) -> RunConfig {
+    RunConfig::new(SystemSpec::h100(), ModelSpec::llama31_8b(), n_gpus, cores)
+}
+
+fn assert_reports_equal(a: &ScenarioReport, b: &ScenarioReport, what: &str) {
+    assert_eq!(a.issued, b.issued, "{what}: issued");
+    assert_eq!(a.timeouts, b.timeouts, "{what}: timeouts");
+    assert_eq!(a.shed, b.shed, "{what}: shed");
+    assert_eq!(a.rejected, b.rejected, "{what}: rejected");
+    assert_eq!(a.aborted, b.aborted, "{what}: aborted");
+    assert_eq!(a.retries, b.retries, "{what}: retries");
+    assert_eq!(a.ttft_p50_s, b.ttft_p50_s, "{what}: p50");
+    assert_eq!(a.ttft_p99_s, b.ttft_p99_s, "{what}: p99");
+    assert_eq!(a.steps_completed, b.steps_completed, "{what}: steps");
+    assert_eq!(a.pools, b.pools, "{what}: pool counters");
+}
+
+/// Acceptance criterion: with pools disabled the colocated fleet path
+/// is untouched — even exotic transfer knobs on a disabled `[fleet.pools]`
+/// block must not perturb a single outcome, step, or retry.
+#[test]
+fn disabled_pools_leave_the_colocated_fleet_byte_identical() {
+    let trace = Scenario::by_name("replica-failure-with-failover")
+        .unwrap()
+        .with_duration(6.0)
+        .generate(4);
+    let base = run_trace(cfg(2, 8), &trace);
+    assert!(base.issued > 0);
+    assert!(base.pools.is_none(), "colocated fleet reports no pool summary");
+
+    let mut knobs_trace = trace.clone();
+    let mut fleet = knobs_trace.fleet.take().unwrap();
+    // Disabled partition (0/0) with deliberately hostile knob values.
+    fleet.pools = PoolConfig {
+        prefill: 0,
+        decode: 0,
+        transfer_gb_per_s: 0.001,
+        transfer_base_s: 5.0,
+        transfer_max_attempts: 1,
+        max_inflight_per_decode: 1,
+    };
+    knobs_trace.fleet = Some(fleet);
+    let with_knobs = run_trace(cfg(2, 8), &knobs_trace);
+    assert_reports_equal(&base, &with_knobs, "disabled pools");
+}
+
+/// Acceptance criterion: with TransferLoss at p=1.0 every handoff
+/// exhausts its retry budget and falls back to re-prefilling in the
+/// decode pool — yet every request still ends in exactly one terminal
+/// Completed outcome with its full token budget, and no KV page leaks.
+#[test]
+fn transfer_loss_resolves_every_request_via_reprefill() {
+    let mut run_cfg = cfg(2, 9);
+    run_cfg.serve.fleet = FleetConfig {
+        replicas: 3,
+        router: RouterPolicy::LeastLoaded,
+        pools: PoolConfig {
+            prefill: 1,
+            decode: 2,
+            transfer_max_attempts: 2,
+            ..PoolConfig::default()
+        },
+        ..FleetConfig::default()
+    };
+    let mut sim = FleetSim::new(run_cfg);
+    sim.set_run_seed(11);
+    sim.install_faults(&[FaultSpec::TransferLoss {
+        start_s: 0.0,
+        end_s: 600.0,
+        prob: 1.0,
+        replica: None,
+    }]);
+    let n = 6u64;
+    for i in 0..n {
+        sim.submit_request(StreamArrival {
+            at_ns: i * 250_000_000,
+            class: ReqClass::Normal,
+            prompt_tokens: 400,
+            max_new_tokens: 8,
+            content_seed: i,
+            tag: 0,
+        });
+    }
+    sim.run_secs(120.0);
+    let outcomes = sim.drain_outcomes();
+    assert_eq!(outcomes.len(), n as usize, "exactly one outcome per request");
+    let mut origins: Vec<u64> = outcomes.iter().map(|o| o.origin).collect();
+    origins.sort_unstable();
+    origins.dedup();
+    assert_eq!(origins.len(), n as usize, "origins are unique");
+    for o in &outcomes {
+        assert_eq!(o.status, OutcomeStatus::Completed, "origin {}", o.origin);
+        assert_eq!(o.generated_tokens, 8, "origin {}", o.origin);
+        assert!(o.retries >= 1, "re-prefill must count as a retry ({})", o.origin);
+    }
+    let s = sim.pool_summary().expect("pools are armed");
+    assert_eq!(s.prefill_replicas, 1);
+    assert_eq!(s.decode_replicas, 2);
+    assert_eq!(s.handoffs_started, n, "every request attempts a handoff");
+    assert_eq!(s.handoffs_completed, 0, "p=1.0 loss lets none land");
+    assert_eq!(s.transfer_retries, n, "one in-budget retry per request");
+    assert_eq!(s.transfer_failures, n, "then the budget is exhausted");
+    assert_eq!(s.reprefills, n, "every request falls back to re-prefill");
+    assert_eq!(sim.kv_pages_in_use(), 0, "no KV page leaks at horizon");
+}
+
+/// Losing the decode pool's only replica mid-run trips colocated
+/// fallback: probes mark the pool Down, new arrivals serve colocated,
+/// and the run still drains without leaking KV pages.
+#[test]
+fn decode_pool_loss_degrades_to_colocated_serving() {
+    let trace = Scenario::by_name("disagg-decode-pool-loss").unwrap().generate(3);
+    let report = run_trace(cfg(2, 8), &trace);
+    assert!(report.issued > 0);
+    let pools = report.pools.expect("scenario arms pools");
+    assert!(
+        pools.colocated_windows > 0,
+        "decode-pool brown-out must trip colocated mode: {pools:?}"
+    );
+    assert!(
+        pools.colocated_fallbacks > 0,
+        "arrivals during the outage must serve colocated: {pools:?}"
+    );
+    assert!(pools.handoffs_completed > 0, "healthy phases still hand off");
+    assert_no_kv_leak(&report);
+}
+
+fn disagg_sweep_output(jobs: usize) -> String {
+    let scenarios = vec![
+        Scenario::by_name("disagg-steady").unwrap().with_duration(6.0),
+        Scenario::by_name("disagg-transfer-faults").unwrap().with_duration(6.0),
+    ];
+    let specs = serve_sweep::grid(
+        &scenarios,
+        &SystemSpec::h100(),
+        &ModelSpec::llama31_8b(),
+        &ServeConfig::default(),
+        &[2],
+        Some(&[6]),
+        &[1],
+        &[],
+    );
+    let cells = seeded_cells(0, specs);
+    let results = Sweep::new("test", jobs)
+        .quiet(true)
+        .run(cells, serve_sweep::run_cell);
+    serve_sweep::render_cells("disagg determinism", &results).render()
+        + &serve_sweep::cells_to_json(&results).to_string_pretty()
+}
+
+/// Acceptance criterion: handoff scheduling, transfer fault draws, and
+/// backpressure deferrals are all pure functions of (seed, origin,
+/// attempt) — so a disagg sweep's bytes cannot depend on `--jobs`.
+#[test]
+fn disagg_sweep_jobs_byte_identical() {
+    let serial = disagg_sweep_output(1);
+    let parallel = disagg_sweep_output(3);
+    assert!(serial.contains("disagg-steady"));
+    assert_eq!(serial, parallel);
+}
+
+/// A dumped disagg trace carries its pools topology and replays
+/// byte-identically — outcomes, retry ledger, pool counters and all.
+#[test]
+fn disagg_trace_replays_byte_identically() {
+    let trace = Scenario::by_name("disagg-transfer-faults")
+        .unwrap()
+        .with_duration(8.0)
+        .generate(6);
+    let a = run_trace(cfg(2, 8), &trace);
+    assert!(a.issued > 0);
+    let pools = a.pools.expect("pools armed");
+    assert!(pools.handoffs_started > 0, "handoffs happen: {pools:?}");
+
+    let dump = trace.to_json().to_string_pretty();
+    assert!(dump.contains("\"pools\""), "dump carries the pool partition");
+    let parsed = cpuslow::util::json::parse(&dump).unwrap();
+    let replay = Trace::from_json(&parsed).unwrap();
+    assert_eq!(replay, trace, "pools topology survives the dump");
+
+    let b = run_trace(cfg(2, 8), &replay);
+    assert_reports_equal(&a, &b, "disagg replay");
+    assert_no_kv_leak(&a);
+}

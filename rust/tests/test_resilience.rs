@@ -142,3 +142,18 @@ fn faulted_sweep_jobs_byte_identical() {
     assert!(serial.contains("shed rate"), "sweep table carries shed column");
     assert_eq!(serial, parallel);
 }
+
+/// KV-page conservation across the whole catalog: after horizon cleanup
+/// every page — including pages held by requests that were shed,
+/// aborted, failed over, or caught mid-handoff in the disaggregated
+/// scenarios — must be back in the free pool.
+#[test]
+fn no_catalog_scenario_leaks_kv_pages() {
+    for scenario in Scenario::catalog() {
+        let name = scenario.name.clone();
+        let trace = scenario.with_duration(6.0).generate(9);
+        let report = run_trace(cfg(8), &trace);
+        assert!(report.issued > 0, "{name} issued nothing");
+        cpuslow::testkit::assert_no_kv_leak(&report);
+    }
+}
