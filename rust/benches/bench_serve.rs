@@ -71,6 +71,19 @@ fn main() {
     // resilience layer on the hot path, including never-fit rejections.
     cell(&mut suite, &base, "flash-crowd", 1.0, 8.0, "flash-crowd 8s (resilience)");
 
+    // Priority cell: the overload-survival scenario with the full
+    // ladder armed (priority admission + recompute preemption, priority
+    // tokenizer queue, brownout) — the preempt/re-admit and
+    // probe-window machinery on the hot path under KV pressure.
+    cell(
+        &mut suite,
+        &base,
+        "priority-flash-crowd",
+        1.0,
+        8.0,
+        "priority-flash-crowd 8s (priority)",
+    );
+
     // Fleet cell: the steady workload spread across four replicas
     // behind the least-loaded router, health probes and failure-aware
     // transitions armed — routing/probe overhead on a healthy fleet

@@ -11,8 +11,8 @@ pub mod toml;
 
 pub use model::ModelSpec;
 pub use serve::{
-    FleetConfig, PoolConfig, ResilienceConfig, RouterPolicy, ServeConfig, WorkloadConfig,
-    MAX_RETRY_ATTEMPTS,
+    FleetConfig, PoolConfig, PriorityConfig, ResilienceConfig, RouterPolicy, ServeConfig,
+    WorkloadConfig, MAX_RETRY_ATTEMPTS,
 };
 pub use system::{Interconnect, SystemSpec};
 
@@ -176,6 +176,15 @@ impl RunConfig {
     /// retry_max_attempts = 3      # 1 = no retry
     /// retry_base_s = 0.5
     /// retry_cap_s = 4.0
+    /// [priority]
+    /// scheduling = true           # priority admission + KV-pressure preemption
+    /// tokenizer = true            # priority tokenize-job queue
+    /// brownout = true             # graceful-degradation ladder
+    /// brownout_window_s = 0.25
+    /// brownout_down_after = 2
+    /// brownout_up_after = 2
+    /// brownout_slo_factor = 0.5
+    /// brownout_output_cap = 8
     /// [fleet]
     /// replicas = 4                # 1 = fleet layer off
     /// router = "least-loaded"     # round-robin | least-loaded | prefix-affinity
@@ -232,6 +241,20 @@ impl RunConfig {
             doc.int_or("resilience", "retry_max_attempts", r.retry_max_attempts as i64) as u32;
         r.retry_base_s = doc.float_or("resilience", "retry_base_s", r.retry_base_s);
         r.retry_cap_s = doc.float_or("resilience", "retry_cap_s", r.retry_cap_s);
+        let p = &mut s.priority;
+        p.scheduling = doc.bool_or("priority", "scheduling", p.scheduling);
+        p.tokenizer = doc.bool_or("priority", "tokenizer", p.tokenizer);
+        p.brownout = doc.bool_or("priority", "brownout", p.brownout);
+        p.brownout_window_s =
+            doc.float_or("priority", "brownout_window_s", p.brownout_window_s);
+        p.brownout_down_after =
+            doc.int_or("priority", "brownout_down_after", p.brownout_down_after as i64) as u32;
+        p.brownout_up_after =
+            doc.int_or("priority", "brownout_up_after", p.brownout_up_after as i64) as u32;
+        p.brownout_slo_factor =
+            doc.float_or("priority", "brownout_slo_factor", p.brownout_slo_factor);
+        p.brownout_output_cap =
+            doc.int_or("priority", "brownout_output_cap", p.brownout_output_cap as i64) as u64;
         let fl = &mut s.fleet;
         fl.replicas = doc.int_or("fleet", "replicas", fl.replicas as i64) as usize;
         let router_name = doc.str_or("fleet", "router", fl.router.name());
@@ -400,6 +423,29 @@ control_plane_weight = 4
         // invalid values are rejected at validate time
         assert!(RunConfig::from_toml_str("[resilience]\nretry_max_attempts = 0\n").is_err());
         assert!(RunConfig::from_toml_str("[resilience]\nretry_max_attempts = 99\n").is_err());
+    }
+
+    #[test]
+    fn toml_priority_section() {
+        let cfg = RunConfig::from_toml_str(
+            "[priority]\nscheduling = true\ntokenizer = true\nbrownout = true\n\
+             brownout_window_s = 0.5\nbrownout_output_cap = 4\n",
+        )
+        .unwrap();
+        let p = &cfg.serve.priority;
+        assert!(p.scheduling && p.tokenizer && p.brownout);
+        assert!(p.any_active());
+        assert_eq!(p.brownout_window_s, 0.5);
+        assert_eq!(p.brownout_output_cap, 4);
+        // untouched knobs keep their defaults
+        assert_eq!(p.brownout_down_after, PriorityConfig::default().brownout_down_after);
+        // absent section keeps the all-off defaults
+        let cfg = RunConfig::from_toml_str("[run]\ngpus = 4\n").unwrap();
+        assert_eq!(cfg.serve.priority, PriorityConfig::default());
+        assert!(!cfg.serve.priority.any_active());
+        // invalid values are rejected at validate time
+        assert!(RunConfig::from_toml_str("[priority]\nbrownout_window_s = 0.0\n").is_err());
+        assert!(RunConfig::from_toml_str("[priority]\nbrownout_output_cap = 0\n").is_err());
     }
 
     #[test]

@@ -128,6 +128,96 @@ impl ResilienceConfig {
     }
 }
 
+/// Priority / graceful-degradation knobs: class-priority scheduling
+/// with KV-pressure recompute preemption, a priority tokenizer job
+/// queue, and the brownout degradation ladder. Every gate defaults off
+/// so existing runs stay byte-identical; scenarios opt in per catalog
+/// entry (`Scenario::priority`).
+///
+/// Class priorities come from the workload (`ClassSpec::priority`,
+/// installed through `ServingSim::set_class_priorities`); higher values
+/// win. Requests without a class priority run at 0.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PriorityConfig {
+    /// Priority-aware admission — waiting requests are admitted by
+    /// (priority desc, arrival seq asc) instead of pure FCFS — plus
+    /// KV-pressure preemption: when a higher-priority candidate cannot
+    /// grow its KV reservation, the lowest-priority running request is
+    /// evicted (recompute preemption) and re-queued. Off = FCFS.
+    pub scheduling: bool,
+    /// Priority job queue in the tokenizer pool: workers pop the
+    /// highest-priority queued tokenize job (FIFO within a priority)
+    /// so chat jobs jump batch backlog. Off = pure FIFO.
+    pub tokenizer: bool,
+    /// Brownout degradation ladder: a per-probe-window state machine
+    /// (Normal → CapBatchOutput → ShedBatchAtAdmission → PauseBatch)
+    /// driven by the estimated-TTFT headroom of the highest-priority
+    /// class; each level degrades lower-priority traffic harder.
+    pub brownout: bool,
+    /// Brownout probe window (seconds).
+    pub brownout_window_s: f64,
+    /// Consecutive bad windows before stepping one level down the
+    /// ladder (hysteresis, like the fleet health machine).
+    pub brownout_down_after: u32,
+    /// Consecutive good windows before stepping one level back up.
+    pub brownout_up_after: u32,
+    /// A window is "bad" when the projected first-token latency of a
+    /// fresh top-priority arrival (queue drain at the observed step
+    /// time) exceeds `factor ×` the top-priority class deadline.
+    pub brownout_slo_factor: f64,
+    /// Output-token cap applied to lower-priority requests admitted at
+    /// CapBatchOutput or deeper.
+    pub brownout_output_cap: u64,
+}
+
+impl Default for PriorityConfig {
+    fn default() -> Self {
+        Self {
+            scheduling: false,
+            tokenizer: false,
+            brownout: false,
+            brownout_window_s: 0.25,
+            brownout_down_after: 2,
+            brownout_up_after: 2,
+            brownout_slo_factor: 0.5,
+            brownout_output_cap: 8,
+        }
+    }
+}
+
+impl PriorityConfig {
+    /// Is any priority gate (scheduling, tokenizer queue, brownout) on?
+    pub fn any_active(&self) -> bool {
+        self.scheduling || self.tokenizer || self.brownout
+    }
+
+    /// Arm every gate (the `--priority` CLI override).
+    pub fn armed() -> Self {
+        Self {
+            scheduling: true,
+            tokenizer: true,
+            brownout: true,
+            ..Self::default()
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !(self.brownout_window_s > 0.0 && self.brownout_window_s.is_finite()) {
+            bail!("priority.brownout_window_s must be positive and finite");
+        }
+        if self.brownout_down_after == 0 || self.brownout_up_after == 0 {
+            bail!("priority.brownout_down_after and brownout_up_after must be ≥ 1");
+        }
+        if !(self.brownout_slo_factor > 0.0 && self.brownout_slo_factor.is_finite()) {
+            bail!("priority.brownout_slo_factor must be positive and finite");
+        }
+        if self.brownout_output_cap == 0 {
+            bail!("priority.brownout_output_cap must be ≥ 1");
+        }
+        Ok(())
+    }
+}
+
 /// Fleet router policy: how the router picks a replica for each
 /// arrival. Every policy is a pure function of (request identity,
 /// router state at the decision window) — never completion order.
@@ -460,6 +550,10 @@ pub struct ServeConfig {
     /// Fleet layer: replicated serving behind a deterministic router.
     /// Defaults to one replica (layer off).
     pub fleet: FleetConfig,
+    /// Priority layer: class-priority scheduling + preemption,
+    /// priority tokenize queue, and the brownout ladder. All gates
+    /// default off (legacy FCFS behavior).
+    pub priority: PriorityConfig,
     /// Arm the always-on attribution profiler (`profile::Profiler`):
     /// ring-buffer span tracing plus per-request phase timelines.
     /// Observation-only — outcomes are byte-identical either way (the
@@ -484,6 +578,7 @@ impl Default for ServeConfig {
             control_plane_weight: 1,
             resilience: ResilienceConfig::default(),
             fleet: FleetConfig::default(),
+            priority: PriorityConfig::default(),
             profile: false,
         }
     }
@@ -511,6 +606,7 @@ impl ServeConfig {
         }
         self.resilience.validate()?;
         self.fleet.validate()?;
+        self.priority.validate()?;
         Ok(())
     }
 
@@ -601,6 +697,39 @@ mod tests {
                 retry_max_attempts: 0,
                 ..Default::default()
             },
+            ..Default::default()
+        };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn priority_defaults_off_and_valid() {
+        let p = PriorityConfig::default();
+        p.validate().unwrap();
+        assert!(!p.any_active());
+        let armed = PriorityConfig::armed();
+        armed.validate().unwrap();
+        assert!(armed.scheduling && armed.tokenizer && armed.brownout);
+    }
+
+    #[test]
+    fn priority_rejects_bad_values() {
+        for p in [
+            PriorityConfig { brownout_window_s: 0.0, ..Default::default() },
+            PriorityConfig { brownout_window_s: f64::NAN, ..Default::default() },
+            PriorityConfig { brownout_down_after: 0, ..Default::default() },
+            PriorityConfig { brownout_up_after: 0, ..Default::default() },
+            PriorityConfig { brownout_slo_factor: 0.0, ..Default::default() },
+            PriorityConfig { brownout_output_cap: 0, ..Default::default() },
+        ] {
+            assert!(p.validate().is_err(), "{p:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn serve_validate_covers_priority() {
+        let cfg = ServeConfig {
+            priority: PriorityConfig { brownout_output_cap: 0, ..Default::default() },
             ..Default::default()
         };
         assert!(cfg.validate().is_err());

@@ -86,6 +86,18 @@ impl KvCache {
         }
     }
 
+    /// Evict a request under KV pressure (vLLM-style recompute
+    /// preemption): its pages return to the free pool and the caller
+    /// re-queues the request to re-prefill from scratch. Returns the
+    /// number of pages freed (0 if the request held none — eviction of
+    /// an unknown id is a no-op, like [`release`](Self::release)).
+    pub fn evict(&mut self, id: RequestId) -> usize {
+        let pages = self.per_request.remove(&id).unwrap_or(0);
+        self.free_pages += pages;
+        debug_assert!(self.free_pages <= self.total_pages);
+        pages
+    }
+
     pub fn pages_of(&self, id: RequestId) -> usize {
         *self.per_request.get(&id).unwrap_or(&0)
     }
@@ -151,6 +163,27 @@ mod tests {
         assert_eq!(kv.free_pages(), 0);
         assert!(kv.can_ever_fit(128), "full cache could still fit it later");
         assert!(!kv.can_ever_fit(129), "never fits even when empty");
+    }
+
+    #[test]
+    fn evict_returns_pages_and_conserves() {
+        let mut kv = KvCache::new(16, 10);
+        assert!(kv.grow_to(1, 96)); // 6 pages
+        assert!(kv.grow_to(2, 32)); // 2 pages
+        assert_eq!(kv.free_pages(), 2);
+        assert_eq!(kv.evict(1), 6);
+        assert_eq!(kv.free_pages(), 8);
+        assert_eq!(kv.pages_of(1), 0);
+        assert!(kv.check_conservation());
+        // evicting an unknown / already-evicted id is a no-op
+        assert_eq!(kv.evict(1), 0);
+        assert_eq!(kv.evict(99), 0);
+        assert_eq!(kv.free_pages(), 8);
+        assert!(kv.check_conservation());
+        // freed pages are immediately reusable
+        assert!(kv.grow_to(3, 128)); // 8 pages
+        assert_eq!(kv.free_pages(), 0);
+        assert!(kv.check_conservation());
     }
 
     #[test]

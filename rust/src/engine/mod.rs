@@ -134,6 +134,23 @@ pub struct EngineShared {
     /// queues silently — their terminal outcome is owned by the router,
     /// never this replica. Empty (and untouched) outside fleet runs.
     pub(crate) cancelled: FxHashSet<RequestId>,
+    /// Per-class (tag-indexed) scheduling priorities, installed by
+    /// [`ServingSim::set_class_priorities`]; tags beyond the vector
+    /// default to 0. All-zero is exactly FCFS.
+    pub(crate) class_priorities: Vec<u8>,
+    /// Highest installed class priority — the brownout ladder's
+    /// protected class (0 when no priorities are installed).
+    pub(crate) top_priority: u8,
+    /// Brownout degradation ladder (`priority.brownout`): current level
+    /// (0 Normal, 1 CapBatchOutput, 2 ShedBatchAtAdmission,
+    /// 3 PauseBatch), hysteresis streaks, the last evaluated
+    /// probe-window index, and the degraded-window counter surfaced by
+    /// [`ServingSim::brownout_windows`].
+    pub(crate) brownout_level: u8,
+    pub(crate) brownout_bad: u32,
+    pub(crate) brownout_good: u32,
+    pub(crate) brownout_last_window: u64,
+    pub(crate) brownout_windows: u64,
 }
 
 /// Everything needed to re-deliver a logical request after backoff.
@@ -258,6 +275,24 @@ impl ServingSim {
         shared
             .deadlines_ns
             .extend(slos_s.iter().map(|s| (s * 1e9) as u64));
+    }
+
+    /// Install per-class scheduling priorities (indexed by request
+    /// `tag`, like [`Self::set_class_deadlines`]). Tags beyond the
+    /// slice default to priority 0; higher wins. Only consulted when a
+    /// `serve.priority` gate is on — with all priorities equal the
+    /// armed scheduler is still exactly FCFS.
+    pub fn set_class_priorities(&mut self, prios: &[u8]) {
+        let shared = &mut *self.env.shared.borrow_mut();
+        shared.class_priorities.clear();
+        shared.class_priorities.extend_from_slice(prios);
+        shared.top_priority = prios.iter().copied().max().unwrap_or(0);
+    }
+
+    /// Probe windows the brownout ladder spent degraded (level ≥ 1).
+    /// Always 0 when `serve.priority.brownout` is off.
+    pub fn brownout_windows(&self) -> u64 {
+        self.env.shared.borrow().brownout_windows
     }
 
     /// Seed the retry-jitter and fault streams. Call before
@@ -704,6 +739,13 @@ pub(crate) fn spawn_replica(
         run_seed: 0,
         retry_tickets: FxHashMap::default(),
         cancelled: FxHashSet::default(),
+        class_priorities: Vec::new(),
+        top_priority: 0,
+        brownout_level: 0,
+        brownout_bad: 0,
+        brownout_good: 0,
+        brownout_last_window: 0,
+        brownout_windows: 0,
     }));
     // API-server tokenizer executor: vLLM's AsyncLLM hands each
     // request's encode to a ThreadPoolExecutor with
@@ -716,6 +758,9 @@ pub(crate) fn spawn_replica(
         cfg.serve.tokenizer_threads
     };
     let pool = TokenizerPool::spawn(sim, tok_workers);
+    // Arm the pool's priority queue iff the gate is on (off keeps the
+    // byte-identical FIFO pop path).
+    pool.set_priority(cfg.serve.priority.tokenizer);
     let faults = Rc::clone(&pool.faults);
     let env = Env {
         cfg,
@@ -783,13 +828,22 @@ pub(crate) fn fleet_submit_prefilled(
     request.origin = id;
     request.kv_received = true;
     request.ph_handoff_ns = handoff_ns;
+    request.priority = env
+        .shared
+        .borrow()
+        .class_priorities
+        .get(a.tag as usize)
+        .copied()
+        .unwrap_or(0);
     env.shared.borrow_mut().pending.insert(request.clone());
     let cost_ns = env.costs.http_ns + env.channel.send_cost_ns;
+    let priority = request.priority;
     let envc = env.clone();
     env.pool.submit_external(
         sim,
         TokJob {
             cost_ns,
+            priority,
             on_done: Box::new(move |ctx| {
                 let mut r = request;
                 let now = ctx.now_ns();
@@ -850,6 +904,7 @@ pub(crate) fn harvest_leftovers(shared: &mut EngineShared, scratch: &mut Vec<Out
             generated_tokens: 0,
             status: t.status,
             retries: t.attempt - 1,
+            preemptions: 0,
         });
     }
     shared.retry_tickets.clear();
@@ -889,13 +944,24 @@ fn deliver_attempt(
     request.tag = a.tag;
     request.origin = origin;
     request.attempt = attempt;
+    // Stamped at delivery so retries keep their class priority and the
+    // tokenizer pool can reorder its backlog when armed.
+    request.priority = env
+        .shared
+        .borrow()
+        .class_priorities
+        .get(a.tag as usize)
+        .copied()
+        .unwrap_or(0);
     env.shared.borrow_mut().pending.insert(request.clone());
     let cost_ns = env.costs.http_ns + tokenize_ns + env.channel.send_cost_ns;
+    let priority = request.priority;
     let envc = env.clone();
     env.pool.submit_external(
         sim,
         TokJob {
             cost_ns,
+            priority,
             on_done: Box::new(move |ctx| {
                 let mut r = request;
                 let now = ctx.now_ns();
@@ -1000,6 +1066,71 @@ fn class_deadline_ns(serve: &ServeConfig, shared: &EngineShared, tag: u32) -> u6
         .get(tag as usize)
         .copied()
         .unwrap_or_else(|| (serve.timeout_s * 1e9) as u64)
+}
+
+/// One brownout-ladder evaluation, at most once per probe window
+/// (window index = `now / brownout_window_s`; window 0 is never
+/// evaluated — the step-time estimator has no data yet and the ladder
+/// starts at Normal anyway). Ladder: 0 Normal → 1 CapBatchOutput →
+/// 2 ShedBatchAtAdmission → 3 PauseBatch. A window is *bad* when the
+/// projected TTFT of a fresh top-priority arrival — prefill backlog
+/// over the observed mean step time, the [`should_shed`] estimator —
+/// overruns `brownout_slo_factor` × the tightest protected-class
+/// deadline. Hysteresis mirrors the fleet health machine
+/// (`fleet::health::transition`): `brownout_down_after` consecutive bad
+/// windows degrade one level, `brownout_up_after` consecutive good
+/// windows recover one.
+fn brownout_tick(serve: &ServeConfig, shared: &mut EngineShared, now: u64) {
+    let p = &serve.priority;
+    let window_ns = ((p.brownout_window_s * 1e9) as u64).max(1);
+    let window = now / window_ns;
+    if window <= shared.brownout_last_window {
+        return;
+    }
+    shared.brownout_last_window = window;
+    let step_ns = if shared.steps_completed > 0 {
+        shared.gpu_step_ns / shared.steps_completed
+    } else {
+        0
+    };
+    let chunk = serve.prefill_chunk_tokens as u64;
+    let backlog = shared.sched.waiting_prefill_tokens;
+    let steps_needed = (backlog + chunk - 1) / chunk;
+    let projected = steps_needed.saturating_mul(step_ns);
+    // Tightest deadline among the protected (top-priority) classes.
+    let mut deadline = u64::MAX;
+    for (tag, &prio) in shared.class_priorities.iter().enumerate() {
+        if prio == shared.top_priority {
+            deadline = deadline.min(
+                shared
+                    .deadlines_ns
+                    .get(tag)
+                    .copied()
+                    .unwrap_or_else(|| (serve.timeout_s * 1e9) as u64),
+            );
+        }
+    }
+    if deadline == u64::MAX {
+        deadline = (serve.timeout_s * 1e9) as u64;
+    }
+    if projected as f64 > p.brownout_slo_factor * deadline as f64 {
+        shared.brownout_good = 0;
+        shared.brownout_bad += 1;
+        if shared.brownout_bad >= p.brownout_down_after && shared.brownout_level < 3 {
+            shared.brownout_bad = 0;
+            shared.brownout_level += 1;
+        }
+    } else {
+        shared.brownout_bad = 0;
+        shared.brownout_good += 1;
+        if shared.brownout_good >= p.brownout_up_after && shared.brownout_level > 0 {
+            shared.brownout_good = 0;
+            shared.brownout_level -= 1;
+        }
+    }
+    if shared.brownout_level > 0 {
+        shared.brownout_windows += 1;
+    }
 }
 
 /// Admission-control gate, evaluated as a tokenized request leaves the
@@ -1353,6 +1484,19 @@ impl Program for EngineCore {
                     }
                     let has_work = {
                         let shared = &mut *self.env.shared.borrow_mut();
+                        // Brownout ladder: at most one evaluation per
+                        // probe window. The level drives this pass's
+                        // output cap / admission shed (channel drain
+                        // below) and the scheduler's pause bar.
+                        if serve.priority.brownout {
+                            brownout_tick(serve, shared, now);
+                        }
+                        shared.sched.pause_below =
+                            if serve.priority.brownout && shared.brownout_level >= 3 {
+                                Some(shared.top_priority)
+                            } else {
+                                None
+                            };
                         // Router cancellations first (no plan in flight
                         // here), then the deadline watchdog.
                         if !shared.cancelled.is_empty() {
@@ -1372,13 +1516,38 @@ impl Program for EngineCore {
                         // Drain newly tokenized requests from the
                         // API-server channel into the scheduler, passing
                         // each through the load-shedding gate.
-                        while let Some(req) = self.env.channel.try_recv() {
+                        while let Some(mut req) = self.env.channel.try_recv() {
                             shared.pending.remove(req.id);
                             self.received += 1;
                             if !shared.cancelled.is_empty()
                                 && shared.cancelled.remove(&req.origin)
                             {
                                 continue; // cancelled before admission
+                            }
+                            // Brownout actions hit only classes below
+                            // the protected (top) priority.
+                            if serve.priority.brownout
+                                && shared.brownout_level >= 1
+                                && req.priority < shared.top_priority
+                            {
+                                if shared.brownout_level >= 2 {
+                                    // ShedBatchAtAdmission (and above)
+                                    resolve_failed(
+                                        ctx,
+                                        serve,
+                                        &self.retry_call,
+                                        self.env.prof.as_ref(),
+                                        shared,
+                                        req,
+                                        OutcomeStatus::Shed,
+                                    );
+                                    continue;
+                                }
+                                // CapBatchOutput: clamp generation so
+                                // degraded requests release KV sooner.
+                                req.max_new_tokens = req
+                                    .max_new_tokens
+                                    .min(serve.priority.brownout_output_cap);
                             }
                             if should_shed(serve, shared, &req, now) {
                                 resolve_failed(
@@ -1420,6 +1589,32 @@ impl Program for EngineCore {
                             }
                         }
                         shared.sched.rejected_scratch.clear();
+                        // Preemptions this pass: record one Preempt span
+                        // per victim — duration is the uncharged
+                        // in-batch residency, i.e. the work recompute
+                        // discards. Observation-only (ring record), so
+                        // outcomes match an unprofiled run.
+                        if !shared.sched.preempted_scratch.is_empty() {
+                            if let Some(prof) = &self.env.prof {
+                                let mut p = prof.borrow_mut();
+                                for i in 0..shared.sched.preempted_scratch.len() {
+                                    let id = shared.sched.preempted_scratch[i];
+                                    if let Some(r) = shared.sched.requests.get(id) {
+                                        let mark = if r.phase_mark == 0 {
+                                            r.admitted_at.unwrap_or(now)
+                                        } else {
+                                            r.phase_mark
+                                        };
+                                        p.ring.record(
+                                            SpanKind::Preempt,
+                                            now,
+                                            now.saturating_sub(mark),
+                                        );
+                                    }
+                                }
+                            }
+                            shared.sched.preempted_scratch.clear();
+                        }
                         if has_work {
                             plan.seq = self.step_seq;
                             plan.collective_id = self.env.gpus.borrow_mut().new_collective();

@@ -97,6 +97,10 @@ pub struct Request {
     /// drivers store the workload class index here so streaming runs can
     /// aggregate per class without a side table).
     pub tag: u32,
+    /// Scheduling priority (higher = more urgent). 0 for every request
+    /// unless priority scheduling is armed; ties fall back to arrival
+    /// order so the all-zero case is exactly FCFS.
+    pub priority: u8,
 
     pub phase: ReqPhase,
     /// Terminal status once decided; `None` while in flight.
@@ -105,6 +109,12 @@ pub struct Request {
     pub status: Option<OutcomeStatus>,
     /// Delivery attempt index for client-side retry (0 = first).
     pub attempt: u32,
+    /// Times this delivery was preempted under KV pressure (recompute
+    /// preemption: pages evicted, request re-queued with identity
+    /// preserved). Counted on the Outcome, not as retries — the request
+    /// never leaves the engine, so the invariant of exactly one terminal
+    /// Outcome per origin is unaffected.
+    pub preemptions: u32,
     /// Prefill progress: prompt tokens processed so far.
     pub prefilled_tokens: u64,
     /// Tokens that hit the prefix cache (skip prefill compute).
@@ -168,9 +178,11 @@ impl Request {
             max_new_tokens,
             content_seed: id, // unique content by default
             tag: 0,
+            priority: 0,
             phase: ReqPhase::Tokenizing,
             status: None,
             attempt: 0,
+            preemptions: 0,
             prefilled_tokens: 0,
             cached_tokens: 0,
             generated_tokens: 0,
@@ -229,6 +241,10 @@ pub struct Outcome {
     /// attempt sufficed). Latencies are measured from the *original*
     /// arrival, so retried requests carry their full client-side wait.
     pub retries: u32,
+    /// KV-pressure recompute preemptions this delivery suffered while
+    /// in-engine (distinct from retries: the request never went back to
+    /// the client, it only lost its pages and re-queued).
+    pub preemptions: u32,
 }
 
 impl Outcome {
@@ -252,6 +268,7 @@ impl Outcome {
                 OutcomeStatus::TimedOut
             }),
             retries: r.attempt,
+            preemptions: r.preemptions,
         }
     }
 
@@ -320,10 +337,23 @@ mod tests {
         let o = Outcome::from_request(&r);
         assert_eq!(o.status, OutcomeStatus::Shed);
         assert_eq!(o.retries, 2);
+        assert_eq!(o.preemptions, 0);
         // finished without explicit status maps to Completed
         let mut r = Request::new(5, ReqClass::Normal, 0, 100, 16);
         r.phase = ReqPhase::Finished;
         assert_eq!(Outcome::from_request(&r).status, OutcomeStatus::Completed);
+    }
+
+    #[test]
+    fn preemptions_carry_into_outcome_separately_from_retries() {
+        let mut r = Request::new(6, ReqClass::Normal, 0, 100, 16);
+        r.preemptions = 3;
+        r.attempt = 1;
+        r.phase = ReqPhase::Finished;
+        let o = Outcome::from_request(&r);
+        assert_eq!(o.preemptions, 3);
+        assert_eq!(o.retries, 1);
+        assert_eq!(o.status, OutcomeStatus::Completed);
     }
 
     #[test]

@@ -73,6 +73,16 @@ pub struct SchedState {
     /// ([`OutcomeStatus::Rejected`]); the engine drains this after every
     /// scheduling pass. Reused across steps — no steady-state allocs.
     pub(crate) rejected_scratch: Vec<RequestId>,
+    /// Requests evicted from the running batch this pass (recompute
+    /// preemption under KV pressure); the engine drains this after every
+    /// scheduling pass for profiling spans. Reused across steps.
+    pub(crate) preempted_scratch: Vec<RequestId>,
+    /// Brownout PauseBatch bar: requests with `priority <` this are
+    /// ineligible for admission while set (they stay waiting; the
+    /// deadline watchdog / horizon still gives each one a terminal
+    /// Outcome, so nothing is starved forever). `None` = no pause, the
+    /// only state any code reaches with the brownout gate off.
+    pub(crate) pause_below: Option<u8>,
 }
 
 impl SchedState {
@@ -146,13 +156,41 @@ pub fn schedule_into(
         }
     }
 
-    // 3. admit waiting requests FCFS while there is batch, KV, and
-    //    budget headroom.
+    // 3. admit waiting requests in (priority, arrival-seq) order while
+    //    there is batch, KV, and budget headroom. With the priority gate
+    //    off and no pause bar, the candidate is always the queue front
+    //    and the pass is exactly the original FCFS loop.
     let mut prefix = prefix;
-    while let Some(&id) = state.waiting.front() {
+    let prio_on = cfg.priority.scheduling;
+    let preempt_mark = state.preempted_scratch.len();
+    loop {
         if plan.batch_size() >= cfg.max_batch_size || budget == 0 {
             break;
         }
+        // Candidate selection: highest-priority eligible waiting request,
+        // earliest-queued among ties (scan order makes the tie-break
+        // stable); FCFS front when the gate is off. The brownout pause
+        // bar (level 3) makes below-bar requests ineligible either way.
+        let mut pos: Option<usize> = None;
+        let mut best_p = 0u8;
+        for (i, &wid) in state.waiting.iter().enumerate() {
+            let p = state.requests.get(wid).expect("waiting request present").priority;
+            if state.pause_below.is_some_and(|bar| p < bar) {
+                continue;
+            }
+            if pos.is_none() {
+                pos = Some(i);
+                best_p = p;
+                if !prio_on {
+                    break;
+                }
+            } else if prio_on && p > best_p {
+                pos = Some(i);
+                best_p = p;
+            }
+        }
+        let Some(pos) = pos else { break };
+        let id = state.waiting[pos];
         let r = state.requests.get_mut(id).expect("waiting request present");
         // Prefix-cache probe first: cached blocks are shared
         // (ref-counted in vLLM), so they don't count against this
@@ -174,24 +212,35 @@ pub fn schedule_into(
             }
         };
         let new_tokens = r.prompt_tokens - cached + r.max_new_tokens;
+        let prompt_tokens = r.prompt_tokens;
+        let cand_prio = r.priority;
         if !kv.can_ever_fit(new_tokens) {
             // Permanently oversized: even an empty cache could not hold
             // it. Reject instead of wedging the FCFS queue forever, and
             // keep admitting — the request behind it is not at fault.
             r.phase = ReqPhase::Finished;
             r.status = Some(OutcomeStatus::Rejected);
-            state.waiting.pop_front();
-            state.waiting_prefill_tokens -= r.prompt_tokens;
+            state.waiting.remove(pos);
+            state.waiting_prefill_tokens -= prompt_tokens;
             state.rejected_scratch.push(id);
             continue;
         }
-        if !kv.grow_to(id, new_tokens) {
+        if !kv.grow_to(id, new_tokens)
+            && !(prio_on && preempt_until_fit(state, kv, plan, cand_prio, id, new_tokens))
+        {
             break; // KV full: head-of-line blocking, queue grows
         }
-        state.waiting.pop_front();
-        state.waiting_prefill_tokens -= r.prompt_tokens;
+        state.waiting.remove(pos);
+        state.waiting_prefill_tokens -= prompt_tokens;
+        let r = state.requests.get_mut(id).expect("waiting request present");
         r.phase = ReqPhase::Prefill;
-        r.admitted_at = Some(now_ns);
+        // Preempted requests keep their first admission time: the phase
+        // attribution's charge windows stay contiguous from it, so the
+        // six-phase conservation sum is exact (the preempted wait lands
+        // in the in-batch idle residual).
+        if r.admitted_at.is_none() {
+            r.admitted_at = Some(now_ns);
+        }
         r.cached_tokens = cached;
         r.prefilled_tokens = cached;
         let chunk = r.prefill_remaining().min(budget);
@@ -201,7 +250,101 @@ pub fn schedule_into(
         state.running.push(id);
     }
 
+    // Preemption removed decode/prefill entries from this step's plan;
+    // the decode mean context must match the surviving set exactly (the
+    // timing model reads it). The budget the victims' planned tokens
+    // consumed is deliberately not returned — simpler and deterministic.
+    if state.preempted_scratch.len() > preempt_mark {
+        plan.decode_mean_ctx = if plan.decode.is_empty() {
+            0
+        } else {
+            let ctx: u64 = plan
+                .decode
+                .iter()
+                .map(|&d| state.requests.get(d).expect("decode request present").context_len())
+                .sum();
+            ctx / plan.decode.len() as u64
+        };
+    }
+
     !plan.is_empty()
+}
+
+/// Recompute preemption under KV pressure (the vLLM recompute policy):
+/// evict the lowest-priority running request — latest-admitted among
+/// ties — whose priority is strictly below `cand_prio`, un-plan any work
+/// it had this step, and re-queue it to re-prefill from scratch. Repeats
+/// until the candidate's reservation fits. Returns false (evicting
+/// nothing) when the eligible victims' pages plus the free pool still
+/// could not satisfy the reservation.
+///
+/// Victims keep their identity: same `Request`, same origin, `preemptions`
+/// incremented — the exactly-one-terminal-Outcome invariant is untouched
+/// because the request never leaves the engine. `first_token_at` is kept
+/// (the client already streamed the first token); generation restarts
+/// from scratch, which is the recompute cost the paper's memory-pressure
+/// pathology pays.
+fn preempt_until_fit(
+    state: &mut SchedState,
+    kv: &mut KvCache,
+    plan: &mut StepPlan,
+    cand_prio: u8,
+    id: RequestId,
+    new_tokens: u64,
+) -> bool {
+    // Feasibility precheck so we never evict without eventually fitting.
+    let needed = kv.pages_for_tokens(new_tokens);
+    let mut avail = kv.free_pages();
+    for &vid in &state.running {
+        let v = state.requests.get(vid).expect("running request present");
+        if v.priority < cand_prio {
+            avail += kv.pages_of(vid);
+        }
+    }
+    if avail < needed {
+        return false;
+    }
+    loop {
+        if kv.grow_to(id, new_tokens) {
+            return true;
+        }
+        let mut victim: Option<(usize, u8)> = None;
+        for (i, &vid) in state.running.iter().enumerate() {
+            let p = state.requests.get(vid).expect("running request present").priority;
+            if p >= cand_prio {
+                continue;
+            }
+            // `<=` keeps scanning forward through ties: the *latest*
+            // admitted equal-priority request is evicted first (LIFO, so
+            // the longest-running low-priority work survives longest).
+            let better = match victim {
+                None => true,
+                Some((_, bp)) => p <= bp,
+            };
+            if better {
+                victim = Some((i, p));
+            }
+        }
+        let Some((vi, _)) = victim else {
+            // Unreachable given the precheck, but never loop blind.
+            return false;
+        };
+        let vid = state.running.remove(vi);
+        kv.evict(vid);
+        if let Some(dp) = plan.decode.iter().position(|&x| x == vid) {
+            plan.decode.remove(dp);
+        }
+        plan.prefill.retain(|&(x, _, _)| x != vid);
+        let v = state.requests.get_mut(vid).expect("victim present");
+        v.phase = ReqPhase::Waiting;
+        v.prefilled_tokens = 0;
+        v.cached_tokens = 0;
+        v.generated_tokens = 0;
+        v.preemptions += 1;
+        state.waiting.push_back(vid);
+        state.waiting_prefill_tokens += v.prompt_tokens;
+        state.preempted_scratch.push(vid);
+    }
 }
 
 /// Allocating convenience wrapper over [`schedule_into`] (tests and
@@ -242,10 +385,15 @@ pub fn complete_step<'a>(
         r.prefilled_tokens += chunk;
         debug_assert!(r.prefilled_tokens <= r.prompt_tokens);
         if r.prefilled_tokens == r.prompt_tokens {
-            // prompt fully processed: this step produced the first token
+            // prompt fully processed: this step produced the first token.
+            // A preempted request re-prefilling keeps its original
+            // first-token time (the client streamed it already) and is
+            // not re-announced.
             r.generated_tokens = 1;
-            r.first_token_at = Some(now_ns);
-            first_tokens.push(id);
+            if r.first_token_at.is_none() {
+                r.first_token_at = Some(now_ns);
+                first_tokens.push(id);
+            }
             if r.generated_tokens >= r.max_new_tokens {
                 r.phase = ReqPhase::Finished;
                 r.status = Some(OutcomeStatus::Completed);
@@ -461,6 +609,169 @@ mod tests {
         assert_eq!(first.to_vec(), vec![1], "first token on the recompute step");
         assert_eq!(state.get(1).unwrap().phase, ReqPhase::Decode);
         assert_eq!(state.get(1).unwrap().cached_tokens, 95);
+    }
+
+    fn prio_cfg() -> ServeConfig {
+        let mut c = cfg();
+        c.priority.scheduling = true;
+        c
+    }
+
+    fn preq(id: u64, prompt: u64, out: u64, prio: u8) -> Request {
+        let mut r = req(id, prompt, out);
+        r.priority = prio;
+        r
+    }
+
+    #[test]
+    fn priority_admission_orders_by_priority_then_arrival() {
+        let (mut state, mut kv) = setup();
+        let cfg = prio_cfg();
+        state.enqueue(preq(1, 10, 2, 0));
+        state.enqueue(preq(2, 10, 2, 2));
+        state.enqueue(preq(3, 10, 2, 2));
+        state.enqueue(preq(4, 10, 2, 1));
+        let plan = schedule(&mut state, &mut kv, None, &cfg, 0).unwrap();
+        let order: Vec<u64> = plan.prefill.iter().map(|&(id, _, _)| id).collect();
+        // highest priority first, arrival order among ties, batch cap 4
+        assert_eq!(order, vec![2, 3, 4, 1]);
+    }
+
+    #[test]
+    fn all_equal_priorities_match_fcfs_exactly() {
+        let cfg_off = cfg();
+        let cfg_on = prio_cfg();
+        let mk = || {
+            let (mut state, kv) = setup();
+            for id in 1..=6 {
+                state.enqueue(req(id, 30, 3));
+            }
+            (state, kv)
+        };
+        let (mut sa, mut ka) = mk();
+        let (mut sb, mut kb) = mk();
+        let pa = schedule(&mut sa, &mut ka, None, &cfg_off, 0).unwrap();
+        let pb = schedule(&mut sb, &mut kb, None, &cfg_on, 0).unwrap();
+        assert_eq!(pa.prefill, pb.prefill);
+        assert_eq!(pa.decode, pb.decode);
+    }
+
+    #[test]
+    fn kv_pressure_preempts_lowest_priority_running() {
+        let mut state = SchedState::new();
+        let mut kv = KvCache::new(16, 10); // 160 tokens total
+        let cfg = prio_cfg();
+        // Low-priority hog fills the cache and reaches decode.
+        state.enqueue(preq(1, 100, 4, 0)); // 104 tokens → 7 pages
+        let plan = schedule(&mut state, &mut kv, None, &cfg, 0).unwrap();
+        assert_eq!(plan.prefill.len(), 1);
+        complete_step(&mut state, &mut kv, &plan, 1);
+        // High-priority arrival that no longer fits → preempts the hog.
+        state.enqueue(preq(2, 100, 4, 2)); // needs 7 pages, only 3 free
+        let plan = schedule(&mut state, &mut kv, None, &cfg, 10).unwrap();
+        assert_eq!(plan.prefill.len(), 1);
+        assert_eq!(plan.prefill[0].0, 2);
+        assert_eq!(state.preempted_scratch, vec![1]);
+        let v = state.get(1).unwrap();
+        assert_eq!(v.phase, ReqPhase::Waiting);
+        assert_eq!(v.preemptions, 1);
+        assert_eq!(v.prefilled_tokens, 0, "recompute from scratch");
+        assert_eq!(kv.pages_of(1), 0);
+        assert!(kv.check_conservation());
+        assert_eq!(state.waiting_prefill_tokens, 100, "victim re-queued");
+        assert!(state.waiting.contains(&1));
+    }
+
+    #[test]
+    fn preemption_never_evicts_equal_or_higher_priority() {
+        let mut state = SchedState::new();
+        let mut kv = KvCache::new(16, 10);
+        let cfg = prio_cfg();
+        state.enqueue(preq(1, 100, 4, 2)); // same priority as the arrival
+        let plan = schedule(&mut state, &mut kv, None, &cfg, 0).unwrap();
+        complete_step(&mut state, &mut kv, &plan, 1); // hog → decode
+        state.enqueue(preq(2, 100, 4, 2));
+        let plan = schedule(&mut state, &mut kv, None, &cfg, 10).unwrap();
+        // No eligible victim (priority must be *strictly* lower):
+        // head-of-line blocking, exactly like FCFS — and the running
+        // request keeps decoding undisturbed.
+        assert!(state.preempted_scratch.is_empty());
+        assert_eq!(state.n_waiting(), 1);
+        assert_eq!(plan.decode, vec![1]);
+        assert!(plan.prefill.is_empty());
+        assert!(kv.check_conservation());
+    }
+
+    #[test]
+    fn preempted_victim_removed_from_this_steps_plan() {
+        let mut state = SchedState::new();
+        let mut kv = KvCache::new(16, 10);
+        let cfg = prio_cfg();
+        // Hog reaches decode phase first.
+        state.enqueue(preq(1, 100, 4, 0));
+        let plan = schedule(&mut state, &mut kv, None, &cfg, 0).unwrap();
+        complete_step(&mut state, &mut kv, &plan, 1); // full prefill → decode
+        assert_eq!(state.get(1).unwrap().phase, ReqPhase::Decode);
+        state.enqueue(preq(2, 100, 4, 2));
+        let plan = schedule(&mut state, &mut kv, None, &cfg, 10).unwrap();
+        // The hog was planned for a decode token, then evicted: its
+        // entry must be gone and the mean context must match the
+        // surviving (empty) decode set.
+        assert!(plan.decode.is_empty());
+        assert_eq!(plan.decode_mean_ctx, 0);
+        assert_eq!(plan.prefill.len(), 1);
+        assert_eq!(plan.prefill[0].0, 2);
+        assert_eq!(state.get(1).unwrap().generated_tokens, 0, "recompute");
+        assert!(kv.check_conservation());
+    }
+
+    #[test]
+    fn preempted_request_finishes_with_one_outcome_identity() {
+        let mut state = SchedState::new();
+        let mut kv = KvCache::new(16, 10);
+        let cfg = prio_cfg();
+        state.enqueue(preq(1, 100, 2, 0));
+        let plan = schedule(&mut state, &mut kv, None, &cfg, 0).unwrap();
+        complete_step(&mut state, &mut kv, &plan, 1);
+        let first_tok = state.get(1).unwrap().first_token_at;
+        assert!(first_tok.is_some());
+        // Preempt it, then let both run to completion.
+        state.enqueue(preq(2, 100, 2, 2));
+        let mut plan = StepPlan::default();
+        let mut t = 10u64;
+        while schedule_into(&mut state, &mut kv, None, &cfg, t, &mut plan) {
+            complete_step(&mut state, &mut kv, &plan, t + 1);
+            t += 2;
+            assert!(t < 1_000, "livelock");
+        }
+        let v = state.get(1).unwrap();
+        assert!(v.is_done());
+        assert_eq!(v.status, Some(OutcomeStatus::Completed));
+        assert_eq!(v.preemptions, 1);
+        assert_eq!(v.origin, 1, "identity preserved across preemption");
+        assert_eq!(
+            v.first_token_at, first_tok,
+            "TTFT pinned to the first delivery, not the recompute"
+        );
+        assert!(state.get(2).unwrap().is_done());
+        assert_eq!(kv.free_pages(), 10, "all pages returned");
+        assert!(kv.check_conservation());
+    }
+
+    #[test]
+    fn pause_bar_skips_low_priority_waiting() {
+        let (mut state, mut kv) = setup();
+        let cfg = prio_cfg();
+        state.enqueue(preq(1, 10, 2, 0)); // below the bar: must stay queued
+        state.enqueue(preq(2, 10, 2, 2));
+        state.pause_below = Some(1);
+        let plan = schedule(&mut state, &mut kv, None, &cfg, 0).unwrap();
+        assert_eq!(plan.prefill.len(), 1);
+        assert_eq!(plan.prefill[0].0, 2);
+        assert_eq!(state.n_waiting(), 1, "paused request still waiting");
+        state.pause_below = None;
+        let plan = schedule(&mut state, &mut kv, None, &cfg, 5).unwrap();
+        assert_eq!(plan.prefill[0].0, 1, "admitted once the bar lifts");
     }
 
     #[test]

@@ -22,7 +22,7 @@
 
 use super::faults::FaultPlan;
 use crate::simcpu::{GateId, Op, Program, Sim, TaskCtx};
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::collections::VecDeque;
 use std::rc::Rc;
 
@@ -30,6 +30,10 @@ use std::rc::Rc;
 pub struct TokJob {
     /// CPU nanoseconds this chunk costs.
     pub cost_ns: u64,
+    /// Pop priority (higher first) when the pool's priority queue is
+    /// armed ([`TokenizerPool::set_priority`]); ignored — strict FIFO —
+    /// otherwise. Chat tokenize jobs use this to jump batch backlog.
+    pub priority: u8,
     /// Called (once) when the chunk completes; receives the ctx so it
     /// can signal gates / send messages.
     pub on_done: Box<dyn FnOnce(&mut TaskCtx)>,
@@ -37,6 +41,10 @@ pub struct TokJob {
 
 struct PoolShared {
     jobs: RefCell<VecDeque<TokJob>>,
+    /// Priority pop armed (`cfg.priority.tokenizer`). Off by default;
+    /// with it off — or with all queued priorities equal — pops are
+    /// exactly `pop_front`, so the disabled path is byte-identical.
+    priority: Cell<bool>,
 }
 
 /// Handle for submitting tokenization work.
@@ -58,6 +66,7 @@ impl TokenizerPool {
         assert!(n_threads > 0);
         let shared = Rc::new(PoolShared {
             jobs: RefCell::new(VecDeque::new()),
+            priority: Cell::new(false),
         });
         let job_gate = sim.new_gate();
         let pool = TokenizerPool {
@@ -84,6 +93,31 @@ impl TokenizerPool {
     /// Number of jobs queued but not yet picked up.
     pub fn backlog(&self) -> usize {
         self.shared.jobs.borrow().len()
+    }
+
+    /// Arm (or disarm) the priority job queue: workers pop the
+    /// highest-priority queued job instead of the oldest. FIFO within a
+    /// priority class.
+    pub fn set_priority(&self, on: bool) {
+        self.shared.priority.set(on);
+    }
+
+    /// Pop the next job per the queue discipline: strict FIFO, or —
+    /// with priority armed — the first occurrence of the maximum queued
+    /// priority (which degenerates to the front when all are equal).
+    fn pop_job(&self) -> Option<TokJob> {
+        let mut jobs = self.shared.jobs.borrow_mut();
+        if !self.shared.priority.get() {
+            return jobs.pop_front();
+        }
+        let mut best: Option<(usize, u8)> = None;
+        for (i, j) in jobs.iter().enumerate() {
+            match best {
+                Some((_, bp)) if j.priority <= bp => {}
+                _ => best = Some((i, j.priority)),
+            }
+        }
+        best.and_then(|(i, _)| jobs.remove(i))
     }
 
     /// Submit a job from inside a task (API-server intake).
@@ -132,7 +166,7 @@ impl Program for TokWorker {
                 }
                 TwState::Pop => {
                     self.consumed += 1;
-                    let job = self.pool.shared.jobs.borrow_mut().pop_front();
+                    let job = self.pool.pop_job();
                     match job {
                         // spurious wake (sibling raced us); wait further
                         None => self.state = TwState::Wait,
@@ -245,6 +279,7 @@ mod tests {
                 &mut sim,
                 TokJob {
                     cost_ns: 1_000_000,
+                    priority: 0,
                     on_done: Box::new(move |ctx| {
                         done.borrow_mut().push((i, ctx.now_ns()));
                     }),
@@ -269,6 +304,7 @@ mod tests {
                 &mut sim,
                 TokJob {
                     cost_ns: 2_000_000,
+                    priority: 0,
                     on_done: Box::new(move |ctx| done.borrow_mut().push(ctx.now_ns())),
                 },
             );
@@ -290,6 +326,7 @@ mod tests {
                 &mut sim,
                 TokJob {
                     cost_ns: 50_000_000,
+                    priority: 0,
                     on_done: Box::new(|_| {}),
                 },
             );
@@ -333,6 +370,7 @@ mod tests {
                 &mut sim,
                 TokJob {
                     cost_ns: 1_000_000,
+                    priority: 0,
                     on_done: Box::new(move |ctx| *done.borrow_mut() = ctx.now_ns()),
                 },
             );
@@ -340,6 +378,55 @@ mod tests {
         sim.run_until(1_000_000_000);
         let t = *done.borrow();
         assert!(t >= 10_000_000, "stall added to job cost: {t}");
+    }
+
+    #[test]
+    fn priority_jobs_jump_backlog_fifo_within_class() {
+        // Single thread, three jobs queued up front: two batch (prio 0)
+        // then one chat (prio 2). With priority armed the chat job runs
+        // first despite arriving last; disarmed stays FIFO.
+        let order = |armed: bool| {
+            let mut sim = sim(4);
+            let pool = TokenizerPool::spawn(&mut sim, 1);
+            pool.set_priority(armed);
+            let done: Rc<RefCell<Vec<u8>>> = Rc::new(RefCell::new(Vec::new()));
+            for &(prio, label) in &[(0u8, 0u8), (0, 1), (2, 2)] {
+                let done = Rc::clone(&done);
+                pool.submit_external(
+                    &mut sim,
+                    TokJob {
+                        cost_ns: 1_000_000,
+                        priority: prio,
+                        on_done: Box::new(move |_| done.borrow_mut().push(label)),
+                    },
+                );
+            }
+            sim.run_until(1_000_000_000);
+            done.borrow().clone()
+        };
+        assert_eq!(order(false), vec![0, 1, 2], "FIFO when disarmed");
+        assert_eq!(order(true), vec![2, 0, 1], "chat jumps batch backlog");
+    }
+
+    #[test]
+    fn equal_priorities_stay_fifo_when_armed() {
+        let mut sim = sim(4);
+        let pool = TokenizerPool::spawn(&mut sim, 1);
+        pool.set_priority(true);
+        let done: Rc<RefCell<Vec<u8>>> = Rc::new(RefCell::new(Vec::new()));
+        for label in 0..4u8 {
+            let done = Rc::clone(&done);
+            pool.submit_external(
+                &mut sim,
+                TokJob {
+                    cost_ns: 1_000_000,
+                    priority: 1,
+                    on_done: Box::new(move |_| done.borrow_mut().push(label)),
+                },
+            );
+        }
+        sim.run_until(1_000_000_000);
+        assert_eq!(*done.borrow(), vec![0, 1, 2, 3]);
     }
 
     #[test]
@@ -389,6 +476,7 @@ mod tests {
                     &mut sim,
                     TokJob {
                         cost_ns: 5_000_000,
+                        priority: 0,
                         on_done: Box::new(move |ctx| {
                             *remaining.borrow_mut() -= 1;
                             if *remaining.borrow() == 0 {

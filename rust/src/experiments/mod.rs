@@ -165,6 +165,12 @@ pub fn serve_once(args: &Args) {
     // `--profile` arms attribution profiling on top of whatever the
     // config file says; it never turns an armed config off.
     cfg.serve.profile = cfg.serve.profile || args.flag("profile");
+    // `--priority` arms the full ladder (priority scheduling +
+    // tokenizer queue + brownout); a scenario with its own `[priority]`
+    // table still wins (same precedence as resilience).
+    if args.flag("priority") {
+        cfg.serve.priority = crate::config::PriorityConfig::armed();
+    }
     let scenario_name = args
         .get("scenario")
         .map(str::to_string)
@@ -305,6 +311,17 @@ fn serve_scenario(cfg: RunConfig, name: &str, args: &Args) {
     );
     if let Some(p) = &report.pools {
         println!("{}", pool_summary_line(p));
+    }
+    // Overload-survival counters. Omit-when-zero keeps every
+    // priority-off scenario's output byte-identical.
+    if report.preemptions > 0 || report.brownout_windows > 0 {
+        println!(
+            "priority: {} preemption{}, {} brownout window{}",
+            report.preemptions,
+            if report.preemptions == 1 { "" } else { "s" },
+            report.brownout_windows,
+            if report.brownout_windows == 1 { "" } else { "s" }
+        );
     }
     // Ride-along attribution table when profiling is armed (`--profile`
     // or `serve.profile = true`). The serving report above is

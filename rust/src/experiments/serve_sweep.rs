@@ -53,6 +53,12 @@ pub struct CellResult {
     pub rejected: usize,
     pub aborted: usize,
     pub retries: usize,
+    /// KV-pressure recompute preemptions across the cell's requests
+    /// (0 unless the scenario arms `priority.scheduling`).
+    pub preemptions: usize,
+    /// Probe windows the brownout ladder spent degraded (0 unless the
+    /// scenario arms `priority.brownout`).
+    pub brownout_windows: u64,
     pub ttft_p50_s: Option<f64>,
     pub ttft_p99_s: Option<f64>,
     pub gpu_idle_share: f64,
@@ -176,6 +182,8 @@ pub fn run_cell(cell: SeededCell<CellSpec>) -> CellResult {
         rejected: report.rejected,
         aborted: report.aborted,
         retries: report.retries,
+        preemptions: report.preemptions,
+        brownout_windows: report.brownout_windows,
         ttft_p50_s: report.ttft_p50_s,
         ttft_p99_s: report.ttft_p99_s,
         gpu_idle_share: report.gpu_idle_share,
@@ -198,6 +206,8 @@ pub fn render_cells(title: &str, cells: &[CellResult]) -> Table {
         "shed rate",
         "abort rate",
         "retries/req",
+        "preempts",
+        "brownout",
         "GPU idle",
         "$/SLO-met",
     ])
@@ -218,6 +228,8 @@ pub fn render_cells(title: &str, cells: &[CellResult]) -> Table {
             percent_label(c.shed_rate()),
             percent_label(c.abort_rate()),
             format!("{:.2}", c.retries_per_request()),
+            c.preemptions.to_string(),
+            c.brownout_windows.to_string(),
             percent_label(c.gpu_idle_share),
             format!("{:.4}", c.cost_per_slo_met()),
         ]);
@@ -269,6 +281,8 @@ pub fn cells_to_json(cells: &[CellResult]) -> Json {
                     .set("rejected", c.rejected)
                     .set("aborted", c.aborted)
                     .set("retries", c.retries)
+                    .set("preemptions", c.preemptions)
+                    .set("brownout_windows", c.brownout_windows)
                     .set("shed_rate", c.shed_rate())
                     .set("abort_rate", c.abort_rate())
                     .set("retries_per_request", c.retries_per_request())
@@ -353,6 +367,12 @@ pub fn run(args: &Args) {
     // byte-identical (profiling is observation-only) and a second
     // phase-share table rides along below the main one.
     serve.profile = serve.profile || args.flag("profile");
+    // `--priority` arms the full ladder (scheduling + tokenizer queue
+    // + brownout) on every cell; a scenario that carries its own
+    // `[priority]` table still wins (same precedence as resilience).
+    if args.flag("priority") {
+        serve.priority = crate::config::PriorityConfig::armed();
+    }
     let scenarios = resolve_scenarios(args, &workload, quick);
     let gpus_list: Vec<usize> = args
         .u64_list("gpus")
@@ -429,6 +449,7 @@ pub fn print_catalog() {
         "arrivals",
         "prompt/output",
         "SLO (s)",
+        "prio",
         "resilience / faults",
         "pools",
         "probes",
@@ -438,9 +459,9 @@ pub fn print_catalog() {
     .align(1, crate::report::table::Align::Left)
     .align(2, crate::report::table::Align::Left)
     .align(3, crate::report::table::Align::Left)
-    .align(5, crate::report::table::Align::Left)
     .align(6, crate::report::table::Align::Left)
-    .align(7, crate::report::table::Align::Left);
+    .align(7, crate::report::table::Align::Left)
+    .align(8, crate::report::table::Align::Left);
     for s in Scenario::catalog() {
         // The per-scenario resilience/fault column: fleet topology
         // first, then armed gates, then each injected fault's label.
@@ -458,6 +479,19 @@ pub fn print_catalog() {
         if s.resilience.is_some() {
             extras.push("resilience".to_string());
         }
+        if let Some(p) = &s.priority {
+            let mut gates: Vec<&str> = Vec::new();
+            if p.scheduling {
+                gates.push("sched");
+            }
+            if p.tokenizer {
+                gates.push("tok");
+            }
+            if p.brownout {
+                gates.push("brownout");
+            }
+            extras.push(format!("priority({})", gates.join("+")));
+        }
         extras.extend(s.faults.iter().map(FaultSpec::label));
         // Disaggregated prefill/decode partition, "-" for colocated.
         let pools = s
@@ -473,6 +507,7 @@ pub fn print_catalog() {
                 c.arrivals.label(),
                 c.lengths.label(),
                 format!("{:.0}", c.slo_ttft_s),
+                c.priority.to_string(),
                 if i == 0 { extras.join("; ") } else { String::new() },
                 if i == 0 { pools.clone() } else { String::new() },
                 if i == 0 {

@@ -455,6 +455,27 @@ impl FleetSim {
         }
     }
 
+    /// Install per-class scheduling priorities on every replica (same
+    /// tag indexing as [`engine::ServingSim::set_class_priorities`]).
+    pub fn set_class_priorities(&mut self, prios: &[u8]) {
+        for env in &self.fs.envs {
+            let shared = &mut *env.shared.borrow_mut();
+            shared.class_priorities.clear();
+            shared.class_priorities.extend_from_slice(prios);
+            shared.top_priority = prios.iter().copied().max().unwrap_or(0);
+        }
+    }
+
+    /// Probe windows any replica's brownout ladder spent degraded
+    /// (level ≥ 1), summed over replicas. 0 when brownout is off.
+    pub fn brownout_windows(&self) -> u64 {
+        self.fs
+            .envs
+            .iter()
+            .map(|env| env.shared.borrow().brownout_windows)
+            .sum()
+    }
+
     /// Seed the fleet's decision streams and every replica's
     /// retry/fault streams (replica seeds derive via `replica_seed`).
     /// Call before [`Self::install_faults`].
@@ -1103,6 +1124,7 @@ fn evict_origin_arm(sim: &mut Sim, fs: &FleetShared, fo: u64, r: usize) {
                 generated_tokens: 0,
                 status: OutcomeStatus::Aborted,
                 retries: st.retries_accum,
+                preemptions: 0,
             })
         };
         let rep = &mut ctl.replicas[r];
@@ -1139,6 +1161,7 @@ fn timeout_outcome(fo: u64, st: &OriginState) -> Outcome {
         generated_tokens: 0,
         status: OutcomeStatus::TimedOut,
         retries: st.retries_accum,
+        preemptions: 0,
     }
 }
 

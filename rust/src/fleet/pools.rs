@@ -276,6 +276,9 @@ fn launch_attempt(sim: &mut Sim, fs: &FleetShared, fo: u64) {
         sim,
         TokJob {
             cost_ns,
+            // KV-copy tasks are control-plane work, not a request's
+            // encode: they never jump a priority-armed backlog.
+            priority: 0,
             // +1 ns: completion re-enters the router in its own event
             // batch, mirroring the retry-backoff clamp.
             on_done: Box::new(move |ctx| {

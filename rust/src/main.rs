@@ -42,6 +42,7 @@ fn main() {
             ("--rate-scale F", "scenario runs: multiply every class arrival rate by F"),
             ("--duration S", "scenario runs: override the generation window (seconds)"),
             ("--profile", "serve / serve-sweep: arm attribution profiling (phase tables ride along; outcomes unchanged)"),
+            ("--priority", "serve / serve-sweep: arm the priority ladder (preemptive scheduling, tokenizer queue, brownout); scenario [priority] tables win"),
             ("--rank-whatif", "diagnose: rank component suggestions by the measured d(TTFT p99)/d(cost) derivative"),
             ("--components LIST", "whatif: components to scale, from tokenize,launch,comm,compute (default tokenize,launch,comm)"),
             ("--delta F", "whatif: cost-scale perturbation, fraction in (0,1) (default 0.25)"),

@@ -136,13 +136,14 @@ pub fn render_with_whatif(
     let c = p.ring.counts;
     out.push_str(&format!(
         "trace ring: {} dispatch, {} tokenize, {} step, {} launch, {} route, \
-         {} handoff spans (capacity {}, {} evicted after sketch-fold)\n",
+         {} handoff, {} preempt spans (capacity {}, {} evicted after sketch-fold)\n",
         c[SpanKind::Dispatch as usize],
         c[SpanKind::Tokenize as usize],
         c[SpanKind::Step as usize],
         c[SpanKind::Launch as usize],
         c[SpanKind::Route as usize],
         c[SpanKind::Handoff as usize],
+        c[SpanKind::Preempt as usize],
         p.ring.capacity,
         p.ring.evicted,
     ));

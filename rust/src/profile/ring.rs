@@ -20,7 +20,7 @@
 use crate::util::stats::QuantileSketch;
 
 /// Number of span kinds ([`SpanKind::ALL`]).
-pub const N_KINDS: usize = 6;
+pub const N_KINDS: usize = 7;
 
 /// What a trace span measures. One kind per instrumentation layer.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -43,6 +43,12 @@ pub enum SpanKind {
     /// Disaggregated-pool KV handoff: prefill completion → decode-pool
     /// delivery (the CPU-driven copy, including transfer retries).
     Handoff = 5,
+    /// Priority preemption: a running request evicted from the KV cache
+    /// to make room for a higher-priority admission. Duration is the
+    /// victim's uncharged in-batch residency — the work the recompute
+    /// discards — so phase attribution stays conserved (the discarded
+    /// time re-lands in in-batch idle when the victim re-runs).
+    Preempt = 6,
 }
 
 impl SpanKind {
@@ -53,6 +59,7 @@ impl SpanKind {
         SpanKind::Launch,
         SpanKind::Route,
         SpanKind::Handoff,
+        SpanKind::Preempt,
     ];
 
     pub fn name(self) -> &'static str {
@@ -63,6 +70,7 @@ impl SpanKind {
             SpanKind::Launch => "launch",
             SpanKind::Route => "route",
             SpanKind::Handoff => "handoff",
+            SpanKind::Preempt => "preempt",
         }
     }
 }

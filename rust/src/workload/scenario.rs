@@ -32,7 +32,8 @@
 
 use super::{ArrivalProcess, LengthMix};
 use crate::config::{
-    FleetConfig, PoolConfig, ResilienceConfig, RouterPolicy, RunConfig, WorkloadConfig,
+    FleetConfig, PoolConfig, PriorityConfig, ResilienceConfig, RouterPolicy, RunConfig,
+    WorkloadConfig,
 };
 use crate::engine::{FaultSpec, Outcome, OutcomeStatus, ReqClass, ServingSim, StreamArrival};
 use crate::fleet::{FleetSim, PoolSummary};
@@ -227,6 +228,10 @@ pub struct ClassSpec {
     /// recurring cost is CPU-side tokenization — the paper's attacker
     /// construction (§IV-B).
     pub shared_prompt: bool,
+    /// Scheduling priority (higher wins); only consulted when the
+    /// scenario arms a `Scenario::priority` gate. All-zero (the
+    /// default) is exactly FCFS even when armed.
+    pub priority: u8,
 }
 
 /// A named, seedable workload: classes + duration + provenance notes.
@@ -250,6 +255,10 @@ pub struct Scenario {
     /// engine. An explicit multi-replica fleet on the run config
     /// (`--replicas`) overrides this.
     pub fleet: Option<FleetConfig>,
+    /// Priority / brownout gates this scenario arms (class-priority
+    /// admission with recompute preemption, priority tokenizer queue,
+    /// brownout ladder); `None` = engine defaults (all off).
+    pub priority: Option<PriorityConfig>,
 }
 
 /// Derive the deterministic sub-streams of class `idx` from the
@@ -285,10 +294,12 @@ impl Scenario {
                     },
                     slo_ttft_s: 30.0,
                     shared_prompt: false,
+                    priority: 0,
                 }],
                 resilience: None,
                 faults: vec![],
                 fleet: None,
+                priority: None,
             },
             Scenario {
                 name: "bursty".into(),
@@ -313,10 +324,12 @@ impl Scenario {
                     },
                     slo_ttft_s: 30.0,
                     shared_prompt: false,
+                    priority: 0,
                 }],
                 resilience: None,
                 faults: vec![],
                 fleet: None,
+                priority: None,
             },
             Scenario {
                 name: "heavy-tail".into(),
@@ -339,10 +352,12 @@ impl Scenario {
                     },
                     slo_ttft_s: 60.0,
                     shared_prompt: false,
+                    priority: 0,
                 }],
                 resilience: None,
                 faults: vec![],
                 fleet: None,
+                priority: None,
             },
             Scenario {
                 name: "multi-tenant".into(),
@@ -363,6 +378,7 @@ impl Scenario {
                         },
                         slo_ttft_s: 15.0,
                         shared_prompt: false,
+                        priority: 0,
                     },
                     ClassSpec {
                         name: "batch-summarize".into(),
@@ -377,11 +393,13 @@ impl Scenario {
                         },
                         slo_ttft_s: 90.0,
                         shared_prompt: false,
+                        priority: 0,
                     },
                 ],
                 resilience: None,
                 faults: vec![],
                 fleet: None,
+                priority: None,
             },
             Scenario {
                 name: "attack".into(),
@@ -398,6 +416,7 @@ impl Scenario {
                         },
                         slo_ttft_s: 60.0,
                         shared_prompt: true,
+                        priority: 0,
                     },
                     ClassSpec {
                         name: "victim".into(),
@@ -415,11 +434,13 @@ impl Scenario {
                         },
                         slo_ttft_s: 60.0,
                         shared_prompt: false,
+                        priority: 0,
                     },
                 ],
                 resilience: None,
                 faults: vec![],
                 fleet: None,
+                priority: None,
             },
             Scenario {
                 name: "flash-crowd".into(),
@@ -443,6 +464,7 @@ impl Scenario {
                         },
                         slo_ttft_s: 12.0,
                         shared_prompt: true,
+                        priority: 0,
                     },
                     ClassSpec {
                         name: "bulk".into(),
@@ -457,6 +479,7 @@ impl Scenario {
                         },
                         slo_ttft_s: 10.0,
                         shared_prompt: false,
+                        priority: 0,
                     },
                     // Prompts beyond the default 524 288-token KV
                     // capacity: admission rejects them outright
@@ -470,6 +493,7 @@ impl Scenario {
                         },
                         slo_ttft_s: 30.0,
                         shared_prompt: false,
+                        priority: 0,
                     },
                 ],
                 resilience: Some(ResilienceConfig {
@@ -482,6 +506,7 @@ impl Scenario {
                 }),
                 faults: vec![],
                 fleet: None,
+                priority: None,
             },
             Scenario {
                 name: "replica-failure".into(),
@@ -503,6 +528,7 @@ impl Scenario {
                     },
                     slo_ttft_s: 30.0,
                     shared_prompt: false,
+                    priority: 0,
                 }],
                 resilience: Some(ResilienceConfig {
                     admission_max_queue: 0,
@@ -523,6 +549,7 @@ impl Scenario {
                     replica: Some(0),
                 }],
                 fleet: None,
+                priority: None,
             },
             Scenario {
                 name: "degraded-tokenizer".into(),
@@ -544,6 +571,7 @@ impl Scenario {
                     },
                     slo_ttft_s: 15.0,
                     shared_prompt: false,
+                    priority: 0,
                 }],
                 resilience: Some(ResilienceConfig {
                     admission_max_queue: 256,
@@ -561,6 +589,7 @@ impl Scenario {
                     replica: None,
                 }],
                 fleet: None,
+                priority: None,
             },
             Scenario {
                 name: "replica-failure-with-failover".into(),
@@ -583,6 +612,7 @@ impl Scenario {
                     },
                     slo_ttft_s: 15.0,
                     shared_prompt: false,
+                    priority: 0,
                 }],
                 resilience: Some(ResilienceConfig {
                     admission_max_queue: 0,
@@ -608,6 +638,7 @@ impl Scenario {
                     recover_after: 8,
                     ..FleetConfig::default()
                 }),
+                priority: None,
             },
             Scenario {
                 name: "diurnal".into(),
@@ -634,6 +665,7 @@ impl Scenario {
                     },
                     slo_ttft_s: 20.0,
                     shared_prompt: false,
+                    priority: 0,
                 }],
                 resilience: None,
                 faults: vec![],
@@ -646,6 +678,7 @@ impl Scenario {
                     autoscale_every: 2,
                     ..FleetConfig::default()
                 }),
+                priority: None,
             },
             Scenario {
                 name: "shared-prefix-flood".into(),
@@ -665,6 +698,7 @@ impl Scenario {
                         },
                         slo_ttft_s: 20.0,
                         shared_prompt: true,
+                        priority: 0,
                     },
                     ClassSpec {
                         name: "session-b".into(),
@@ -675,6 +709,7 @@ impl Scenario {
                         },
                         slo_ttft_s: 20.0,
                         shared_prompt: true,
+                        priority: 0,
                     },
                     ClassSpec {
                         name: "session-c".into(),
@@ -685,6 +720,7 @@ impl Scenario {
                         },
                         slo_ttft_s: 20.0,
                         shared_prompt: true,
+                        priority: 0,
                     },
                     ClassSpec {
                         name: "mixed".into(),
@@ -699,6 +735,7 @@ impl Scenario {
                         },
                         slo_ttft_s: 20.0,
                         shared_prompt: false,
+                        priority: 0,
                     },
                 ],
                 resilience: None,
@@ -708,6 +745,7 @@ impl Scenario {
                     router: RouterPolicy::PrefixAffinity,
                     ..FleetConfig::default()
                 }),
+                priority: None,
             },
             Scenario {
                 name: "disagg-steady".into(),
@@ -729,6 +767,7 @@ impl Scenario {
                     },
                     slo_ttft_s: 30.0,
                     shared_prompt: false,
+                    priority: 0,
                 }],
                 resilience: None,
                 faults: vec![],
@@ -742,6 +781,7 @@ impl Scenario {
                     },
                     ..FleetConfig::default()
                 }),
+                priority: None,
             },
             Scenario {
                 name: "disagg-transfer-faults".into(),
@@ -764,6 +804,7 @@ impl Scenario {
                     },
                     slo_ttft_s: 30.0,
                     shared_prompt: false,
+                    priority: 0,
                 }],
                 resilience: Some(ResilienceConfig {
                     admission_max_queue: 0,
@@ -799,6 +840,7 @@ impl Scenario {
                     },
                     ..FleetConfig::default()
                 }),
+                priority: None,
             },
             Scenario {
                 name: "disagg-decode-pool-loss".into(),
@@ -821,6 +863,7 @@ impl Scenario {
                     },
                     slo_ttft_s: 30.0,
                     shared_prompt: false,
+                    priority: 0,
                 }],
                 resilience: Some(ResilienceConfig {
                     admission_max_queue: 0,
@@ -849,6 +892,108 @@ impl Scenario {
                         ..PoolConfig::default()
                     },
                     ..FleetConfig::default()
+                }),
+                priority: None,
+            },
+            Scenario {
+                name: "priority-flash-crowd".into(),
+                description: "latency-critical chat rides out a low-priority bulk \
+                              flash crowd: priority admission, recompute \
+                              preemption, and the brownout ladder protect chat's \
+                              TTFT while batch degrades gracefully"
+                    .into(),
+                paper_section: "§V overload survival (priority + brownout)".into(),
+                duration_s: 30.0,
+                classes: vec![
+                    ClassSpec {
+                        name: "chat".into(),
+                        arrivals: ArrivalSpec::Poisson { rps: 6.0 },
+                        lengths: LengthSpec {
+                            prompt: LenDist::Lognormal {
+                                mean: 1_200.0,
+                                sigma: 0.8,
+                                min: 64,
+                            },
+                            output: LenDist::Fixed { tokens: 48 },
+                        },
+                        slo_ttft_s: 15.0,
+                        shared_prompt: false,
+                        priority: 2,
+                    },
+                    ClassSpec {
+                        name: "bulk".into(),
+                        arrivals: ArrivalSpec::Mmpp {
+                            rps_quiet: 1.0,
+                            rps_burst: 12.0,
+                            mean_quiet_s: 6.0,
+                            mean_burst_s: 6.0,
+                        },
+                        lengths: LengthSpec {
+                            prompt: LenDist::Lognormal {
+                                mean: 20_000.0,
+                                sigma: 0.6,
+                                min: 2_000,
+                            },
+                            output: LenDist::Fixed { tokens: 64 },
+                        },
+                        slo_ttft_s: 60.0,
+                        shared_prompt: false,
+                        priority: 0,
+                    },
+                ],
+                resilience: None,
+                faults: vec![],
+                fleet: None,
+                priority: Some(PriorityConfig::armed()),
+            },
+            Scenario {
+                name: "kv-thrash".into(),
+                description: "huge low-priority prompts churn the KV cache; \
+                              priority admission preempts them (vLLM-style \
+                              recompute) so short chat requests keep getting \
+                              pages"
+                    .into(),
+                paper_section: "§IV-B KV pressure (recompute preemption)".into(),
+                duration_s: 30.0,
+                classes: vec![
+                    ClassSpec {
+                        name: "chat".into(),
+                        arrivals: ArrivalSpec::Poisson { rps: 2.0 },
+                        lengths: LengthSpec {
+                            prompt: LenDist::Fixed { tokens: 4_096 },
+                            output: LenDist::Fixed { tokens: 16 },
+                        },
+                        slo_ttft_s: 20.0,
+                        shared_prompt: false,
+                        priority: 2,
+                    },
+                    // Prompts up to 114k tokens against the default
+                    // 524 288-token KV capacity: a handful of hogs in
+                    // the batch exhaust pages, so chat admissions only
+                    // proceed by evicting one.
+                    ClassSpec {
+                        name: "hog".into(),
+                        arrivals: ArrivalSpec::Poisson { rps: 1.5 },
+                        lengths: LengthSpec {
+                            prompt: LenDist::Zipf {
+                                buckets: vec![32_768, 65_536, 114_688],
+                                s: 0.7,
+                            },
+                            output: LenDist::Fixed { tokens: 32 },
+                        },
+                        slo_ttft_s: 90.0,
+                        shared_prompt: false,
+                        priority: 0,
+                    },
+                ],
+                resilience: None,
+                faults: vec![],
+                fleet: None,
+                // Scheduling (preemption) only: no brownout, no
+                // tokenizer reordering — isolates the KV-pressure path.
+                priority: Some(PriorityConfig {
+                    scheduling: true,
+                    ..PriorityConfig::default()
                 }),
             },
         ]
@@ -981,12 +1126,14 @@ impl Scenario {
                 .map(|c| TraceClass {
                     name: c.name.clone(),
                     slo_ttft_s: c.slo_ttft_s,
+                    priority: c.priority,
                 })
                 .collect(),
             requests,
             resilience: self.resilience.clone(),
             faults: self.faults.clone(),
             fleet: self.fleet.clone(),
+            priority: self.priority.clone(),
         }
     }
 }
@@ -1062,6 +1209,9 @@ pub struct TraceReq {
 pub struct TraceClass {
     pub name: String,
     pub slo_ttft_s: f64,
+    /// Scheduling priority (0 = default FCFS tier; omitted from JSON
+    /// dumps when 0 so pre-priority dumps stay byte-stable).
+    pub priority: u8,
 }
 
 /// A fully-expanded workload: what `Scenario::generate` emits and what
@@ -1085,6 +1235,9 @@ pub struct Trace {
     /// failover/autoscaler knobs); replays rebuild the same fleet, so
     /// failover and hedging decisions reproduce from the dump.
     pub fleet: Option<FleetConfig>,
+    /// Priority / brownout gates the scenario armed; replays arm the
+    /// same gates, so preemption and brownout decisions reproduce.
+    pub priority: Option<PriorityConfig>,
 }
 
 impl Trace {
@@ -1100,6 +1253,10 @@ impl Trace {
                     .map(|c| {
                         let mut cj = Json::obj();
                         cj.set("name", c.name.as_str()).set("slo_ttft_s", c.slo_ttft_s);
+                        // Omit-when-0 keeps pre-priority dumps byte-stable.
+                        if c.priority != 0 {
+                            cj.set("priority", c.priority as u64);
+                        }
                         cj
                     })
                     .collect(),
@@ -1135,6 +1292,9 @@ impl Trace {
         if let Some(fleet) = &self.fleet {
             j.set("fleet", fleet_to_json(fleet));
         }
+        if let Some(p) = &self.priority {
+            j.set("priority", priority_to_json(p));
+        }
         j
     }
 
@@ -1164,6 +1324,7 @@ impl Trace {
                     .get("slo_ttft_s")
                     .and_then(Json::as_f64)
                     .ok_or_else(|| anyhow!("trace class: missing 'slo_ttft_s'"))?,
+                priority: cj.get("priority").and_then(Json::as_f64).unwrap_or(0.0) as u8,
             });
         }
         let requests_j = j
@@ -1206,6 +1367,10 @@ impl Trace {
             Some(fj) => Some(fleet_from_json(fj)?),
             None => None,
         };
+        let priority = match j.get("priority") {
+            Some(pj) => Some(priority_from_json(pj)?),
+            None => None,
+        };
         Ok(Trace {
             scenario,
             seed,
@@ -1214,6 +1379,7 @@ impl Trace {
             resilience,
             faults,
             fleet,
+            priority,
         })
     }
 }
@@ -1242,6 +1408,37 @@ fn resilience_from_json(j: &Json) -> Result<ResilienceConfig> {
         retry_max_attempts: num("retry_max_attempts")? as u32,
         retry_base_s: num("retry_base_s")?,
         retry_cap_s: num("retry_cap_s")?,
+    })
+}
+
+fn priority_to_json(p: &PriorityConfig) -> Json {
+    let mut j = Json::obj();
+    j.set("scheduling", p.scheduling)
+        .set("tokenizer", p.tokenizer)
+        .set("brownout", p.brownout)
+        .set("brownout_window_s", p.brownout_window_s)
+        .set("brownout_down_after", p.brownout_down_after)
+        .set("brownout_up_after", p.brownout_up_after)
+        .set("brownout_slo_factor", p.brownout_slo_factor)
+        .set("brownout_output_cap", p.brownout_output_cap);
+    j
+}
+
+/// Missing keys fall back to [`PriorityConfig::default`] so
+/// hand-trimmed dumps still load.
+fn priority_from_json(j: &Json) -> Result<PriorityConfig> {
+    let d = PriorityConfig::default();
+    let num = |key: &str, dv: f64| j.get(key).and_then(Json::as_f64).unwrap_or(dv);
+    let flag = |key: &str, dv: bool| j.get(key).and_then(Json::as_bool).unwrap_or(dv);
+    Ok(PriorityConfig {
+        scheduling: flag("scheduling", d.scheduling),
+        tokenizer: flag("tokenizer", d.tokenizer),
+        brownout: flag("brownout", d.brownout),
+        brownout_window_s: num("brownout_window_s", d.brownout_window_s),
+        brownout_down_after: num("brownout_down_after", d.brownout_down_after as f64) as u32,
+        brownout_up_after: num("brownout_up_after", d.brownout_up_after as f64) as u32,
+        brownout_slo_factor: num("brownout_slo_factor", d.brownout_slo_factor),
+        brownout_output_cap: num("brownout_output_cap", d.brownout_output_cap as f64) as u64,
     })
 }
 
@@ -1386,6 +1583,11 @@ pub struct ClassReport {
     pub aborted: usize,
     /// Total retry deliveries consumed across the class's requests.
     pub retries: usize,
+    /// Total KV-pressure preemptions (recompute evictions) suffered by
+    /// the class's requests. Preempted requests keep their identity —
+    /// a preemption is never an extra delivery, so this is disjoint
+    /// from `retries`.
+    pub preemptions: usize,
     /// TTFT percentiles over on-time requests; None when every request
     /// of the class timed out (or none were issued).
     pub ttft_p50_s: Option<f64>,
@@ -1423,6 +1625,12 @@ pub struct ScenarioReport {
     pub rejected: usize,
     pub aborted: usize,
     pub retries: usize,
+    /// Total KV-pressure preemptions across all classes (0 unless the
+    /// scenario armed `priority.scheduling`).
+    pub preemptions: usize,
+    /// Probe windows the brownout ladder spent degraded, summed over
+    /// replicas (0 unless the scenario armed `priority.brownout`).
+    pub brownout_windows: u64,
     pub ttft_p50_s: Option<f64>,
     pub ttft_p99_s: Option<f64>,
     /// 1 − mean GPU utilization over the run (fleet average).
@@ -1498,6 +1706,11 @@ enum TtftAgg {
 /// same loop.
 pub(crate) trait ServeStack {
     fn set_class_deadlines(&mut self, slos_s: &[f64]);
+    fn set_class_priorities(&mut self, prios: &[u8]);
+    /// Brownout-degraded probe windows; 0 unless the ladder armed.
+    fn brownout_windows(&self) -> u64 {
+        0
+    }
     fn set_run_seed(&mut self, seed: u64);
     fn install_faults(&mut self, specs: &[FaultSpec]);
     fn run_streaming_dyn(
@@ -1526,6 +1739,12 @@ pub(crate) trait ServeStack {
 impl ServeStack for ServingSim {
     fn set_class_deadlines(&mut self, slos_s: &[f64]) {
         ServingSim::set_class_deadlines(self, slos_s);
+    }
+    fn set_class_priorities(&mut self, prios: &[u8]) {
+        ServingSim::set_class_priorities(self, prios);
+    }
+    fn brownout_windows(&self) -> u64 {
+        ServingSim::brownout_windows(self)
     }
     fn set_run_seed(&mut self, seed: u64) {
         ServingSim::set_run_seed(self, seed);
@@ -1567,6 +1786,12 @@ impl ServeStack for ServingSim {
 impl ServeStack for FleetSim {
     fn set_class_deadlines(&mut self, slos_s: &[f64]) {
         FleetSim::set_class_deadlines(self, slos_s);
+    }
+    fn set_class_priorities(&mut self, prios: &[u8]) {
+        FleetSim::set_class_priorities(self, prios);
+    }
+    fn brownout_windows(&self) -> u64 {
+        FleetSim::brownout_windows(self)
     }
     fn set_run_seed(&mut self, seed: u64) {
         FleetSim::set_run_seed(self, seed);
@@ -1657,6 +1882,7 @@ where
     let mut rejected = vec![0usize; n];
     let mut aborted = vec![0usize; n];
     let mut retries = vec![0usize; n];
+    let mut preemptions = vec![0usize; n];
     let mut sim: Box<dyn ServeStack> = match fleet {
         Some(f) => {
             let mut cfg = cfg;
@@ -1666,6 +1892,8 @@ where
         None => Box::new(ServingSim::new(cfg)),
     };
     sim.set_class_deadlines(&slos);
+    let prios: Vec<u8> = classes.iter().map(|c| c.priority).collect();
+    sim.set_class_priorities(&prios);
     sim.set_run_seed(seed);
     if !faults.is_empty() {
         sim.install_faults(faults);
@@ -1680,6 +1908,7 @@ where
             OutcomeStatus::Completed | OutcomeStatus::TimedOut => {}
         }
         retries[k] += o.retries as usize;
+        preemptions[k] += o.preemptions as usize;
         match o.ttft_secs() {
             Some(t) if t <= slos[k] => match &mut agg {
                 TtftAgg::Exact { per_class } => per_class[k].push(t),
@@ -1704,6 +1933,7 @@ where
             rejected: rejected[k],
             aborted: aborted[k],
             retries: retries[k],
+            preemptions: preemptions[k],
             ttft_p50_s: None,
             ttft_p99_s: None,
         })
@@ -1742,6 +1972,8 @@ where
         rejected: rejected.iter().sum(),
         aborted: aborted.iter().sum(),
         retries: retries.iter().sum(),
+        preemptions: preemptions.iter().sum(),
+        brownout_windows: sim.brownout_windows(),
         per_class,
         ttft_p50_s,
         ttft_p99_s,
@@ -1774,6 +2006,9 @@ fn trace_req_arrival(r: &TraceReq) -> StreamArrival {
 pub fn run_trace(mut cfg: RunConfig, trace: &Trace) -> ScenarioReport {
     if let Some(res) = &trace.resilience {
         cfg.serve.resilience = res.clone();
+    }
+    if let Some(p) = &trace.priority {
+        cfg.serve.priority = p.clone();
     }
     let arrivals: Vec<StreamArrival> = trace.requests.iter().map(trace_req_arrival).collect();
     let fleet = effective_fleet(&cfg, trace.fleet.as_ref());
@@ -1813,12 +2048,16 @@ pub fn run_stream(mut cfg: RunConfig, scenario: &Scenario, seed: u64) -> Scenari
     if let Some(res) = &scenario.resilience {
         cfg.serve.resilience = res.clone();
     }
+    if let Some(p) = &scenario.priority {
+        cfg.serve.priority = p.clone();
+    }
     let classes: Vec<TraceClass> = scenario
         .classes
         .iter()
         .map(|c| TraceClass {
             name: c.name.clone(),
             slo_ttft_s: c.slo_ttft_s,
+            priority: c.priority,
         })
         .collect();
     let n = classes.len();
@@ -1860,10 +2099,12 @@ mod tests {
                 },
                 slo_ttft_s: 30.0,
                 shared_prompt: false,
+                priority: 0,
             }],
             resilience: None,
             faults: vec![],
             fleet: None,
+            priority: None,
         }
     }
 
@@ -2155,11 +2396,13 @@ mod tests {
             classes: vec![TraceClass {
                 name: "none".into(),
                 slo_ttft_s: 1.0,
+                priority: 0,
             }],
             requests: Vec::new(),
             resilience: None,
             faults: Vec::new(),
             fleet: None,
+            priority: None,
         };
         let cfg = RunConfig::new(
             crate::config::SystemSpec::h100(),
@@ -2253,5 +2496,50 @@ mod tests {
         assert!(!colocated.to_json().to_string_pretty().contains("\"pools\""));
         let disagg = Scenario::by_name("disagg-steady").unwrap().generate(3);
         assert!(disagg.to_json().to_string_pretty().contains("\"pools\""));
+    }
+
+    #[test]
+    fn priority_is_omitted_from_dumps_unless_armed() {
+        // Pre-priority dumps must stay byte-stable: neither the
+        // trace-level `priority` table nor the class-level `priority`
+        // field appears unless the scenario arms priority.
+        let plain = Scenario::by_name("steady").unwrap().generate(3);
+        assert!(!plain.to_json().to_string_pretty().contains("\"priority\""));
+        let armed = Scenario::by_name("priority-flash-crowd").unwrap().generate(3);
+        let dumped = armed.to_json().to_string_pretty();
+        assert!(dumped.contains("\"priority\""));
+        // And the armed dump round-trips with gates and class
+        // priorities intact — that's what makes it replayable.
+        let parsed = crate::util::json::parse(&dumped).unwrap();
+        let back = Trace::from_json(&parsed).unwrap();
+        assert_eq!(back.priority, armed.priority);
+        assert_eq!(
+            back.classes.iter().map(|c| c.priority).collect::<Vec<_>>(),
+            armed.classes.iter().map(|c| c.priority).collect::<Vec<_>>(),
+        );
+    }
+
+    #[test]
+    fn priority_catalog_entries_are_armed_and_tiered() {
+        // Both overload-survival entries must carry two distinct
+        // priority tiers (otherwise preemption has no victim class)
+        // and an active gate set.
+        for name in ["priority-flash-crowd", "kv-thrash"] {
+            let s = Scenario::by_name(name).unwrap();
+            let p = s.priority.as_ref().unwrap_or_else(|| panic!("{name} missing priority"));
+            assert!(p.any_active(), "{name} must arm at least one gate");
+            assert!(p.scheduling, "{name} must arm preemptive scheduling");
+            p.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+            let mut tiers: Vec<u8> = s.classes.iter().map(|c| c.priority).collect();
+            tiers.sort_unstable();
+            tiers.dedup();
+            assert!(tiers.len() >= 2, "{name} needs two priority tiers");
+        }
+        // flash-crowd arms the full ladder; kv-thrash is preemption-only
+        // so its report isolates eviction effects from brownout effects.
+        let full = Scenario::by_name("priority-flash-crowd").unwrap();
+        assert!(full.priority.as_ref().unwrap().brownout);
+        let thrash = Scenario::by_name("kv-thrash").unwrap();
+        assert!(!thrash.priority.as_ref().unwrap().brownout);
     }
 }

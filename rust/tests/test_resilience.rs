@@ -149,6 +149,16 @@ fn faulted_sweep_jobs_byte_identical() {
 /// scenarios — must be back in the free pool.
 #[test]
 fn no_catalog_scenario_leaks_kv_pages() {
+    // The loop walks the whole catalog, so it must include the
+    // overload-survival entries — they are the only ones that exercise
+    // the recompute-preemption (KvCache::evict) cleanup path.
+    let names: Vec<String> = Scenario::catalog().into_iter().map(|s| s.name).collect();
+    for required in ["priority-flash-crowd", "kv-thrash"] {
+        assert!(
+            names.iter().any(|n| n == required),
+            "catalog must carry {required} so the leak sweep covers preemption"
+        );
+    }
     for scenario in Scenario::catalog() {
         let name = scenario.name.clone();
         let trace = scenario.with_duration(6.0).generate(9);
